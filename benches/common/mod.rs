@@ -1,0 +1,47 @@
+//! Shared helpers for the table/figure bench binaries (criterion is
+//! unavailable offline; each bench is a plain binary with harness = false
+//! that times its workload and prints the paper-shaped table).
+
+#![allow(dead_code)]
+
+use perq::prelude::*;
+
+pub struct BenchCtx {
+    pub ctx: RepoContext,
+    pub engine: Engine,
+}
+
+impl BenchCtx {
+    pub fn new() -> anyhow::Result<BenchCtx> {
+        let ctx = RepoContext::discover()?;
+        let engine = Engine::new(&ctx)?;
+        Ok(BenchCtx { ctx, engine })
+    }
+
+    pub fn bundle(&self, model: &str) -> anyhow::Result<ModelBundle> {
+        ModelBundle::load_with_engine(&self.ctx, &self.engine, model)
+    }
+
+    /// Run one pipeline config with bench-sized budgets and return ppl.
+    pub fn run(&self, bundle: &ModelBundle, mut spec: PipelineSpec) -> anyhow::Result<PipelineReport> {
+        spec.eval_tokens = spec.eval_tokens.min(2048);
+        spec.calib_seqs = spec.calib_seqs.min(4);
+        Pipeline::new(spec).run_with_engine(bundle, &self.engine)
+    }
+}
+
+/// Skip-or-run guard: benches print a notice and exit 0 when artifacts are
+/// missing so `cargo bench` works on a fresh checkout.
+pub fn ctx_or_skip() -> Option<BenchCtx> {
+    match BenchCtx::new() {
+        Ok(c) => Some(c),
+        Err(e) => {
+            println!("SKIP: artifacts not available ({e}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+pub fn elapsed_note(t0: std::time::Instant) {
+    println!("\n[bench wall time: {:.1}s]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,62 @@
+//! Figure 4: the normalized Prop 3.2 bound max_j δ_j‖X_j‖∞/‖X‖∞ vs block
+//! size, against the sufficient threshold 1/√b (green) and the lower bound
+//! 1/b (black), over all down-projection layers. Expected shape: empirical
+//! values sit between 1/b and 1/√b for practical block sizes.
+
+mod common;
+
+use perq::calib::capture;
+use perq::model::transform;
+use perq::prelude::*;
+use perq::stats;
+use perq::util::bench::print_table;
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    let Some(bc) = common::ctx_or_skip() else { return Ok(()) };
+    for model in ["llama_tiny", "qwen_tiny"] {
+        let bundle = bc.bundle(model)?;
+        let cfg = bundle.cfg.clone();
+        let mut ws = bundle.weights.clone();
+        transform::fold_norms(&mut ws, &cfg);
+        let seqs = capture::calibration_batches(&cfg, Source::Wiki, 8, 4);
+        let caps = capture::run_capture(&bc.engine, model, &cfg, &ws, &seqs)?;
+
+        let mut rows = Vec::new();
+        let mut b = 16usize;
+        while b <= cfg.d_ffn {
+            if cfg.d_ffn % b == 0 {
+                // pool over all layers (the paper pools all down projections)
+                let mut vals = Vec::new();
+                for l in 0..cfg.n_layers {
+                    let down = &caps.down_in[l];
+                    for r in 0..down.rows.min(512) {
+                        vals.push(stats::normalized_bound(down.row(r), b));
+                    }
+                }
+                let mean = vals.iter().sum::<f64>() / vals.len() as f64;
+                let var = vals.iter().map(|v| (v - mean).powi(2)).sum::<f64>()
+                    / vals.len() as f64;
+                let in_regime = mean < 1.0 / (b as f64).sqrt();
+                rows.push((
+                    format!("b={b}"),
+                    vec![
+                        format!("{mean:.4}"),
+                        format!("{:.4}", var.sqrt()),
+                        format!("{:.4}", 1.0 / (b as f64).sqrt()),
+                        format!("{:.4}", 1.0 / b as f64),
+                        if in_regime { "yes".into() } else { "no".into() },
+                    ],
+                ));
+            }
+            b *= 2;
+        }
+        print_table(
+            &format!("Figure 4 — {model}, all down projections"),
+            &["mean", "std", "1/sqrt(b)", "1/b", "suppress?"],
+            &rows,
+        );
+    }
+    common::elapsed_note(t0);
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! §Perf micro-benchmarks on the L3 hot paths (EXPERIMENTS.md §Perf):
+//! FWHT throughput, the non-pow-2 fast transform vs dense, MassDiff
+//! calibration cost at the paper's real dimensions (the "< 2 minutes for
+//! Llama3 8B" claim), GPTQ/Qronos solver speed, and Gram accumulation.
+
+mod common;
+
+use perq::data::rng::Rng;
+use perq::hadamard::BlockRotator;
+use perq::permute::massdiff_perm;
+use perq::quant::{Format, WeightCodec};
+use perq::rounding::Rounding;
+use perq::tensor::linalg::SymMat;
+use perq::tensor::Mat;
+use perq::util::bench::time;
+
+fn rand_mat(r: usize, c: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_fn(r, c, |_, _| rng.next_normal() as f32)
+}
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    println!("=== L3 hot paths ===\n");
+
+    // FWHT throughput (target: >= ~1 GB/s/core at d=1024)
+    for d in [256usize, 1024, 8192] {
+        let mut m = rand_mat(1024, d, 1);
+        let rot = BlockRotator::hadamard(d.min(1024))?;
+        let t = time("fwht", 3, 300, || rot.apply_mat(&mut m));
+        let gbs = (1024.0 * d as f64 * 4.0) / t.mean_ns;
+        println!("fwht d={d:<6} block={:<5} {:8.2} ms/1024toks  {gbs:5.2} GB/s", d.min(1024), t.mean_ms());
+    }
+
+    // non-pow-2 fast transform vs dense matmul
+    for d in [448usize, 14336] {
+        let rot = BlockRotator::hadamard(d)?;
+        let mut m = rand_mat(64, d, 2);
+        let t_fast = time("np2", 3, 200, || rot.apply_mat(&mut m));
+        println!("nonpow2 d={d:<6} fast {:9.3} ms/64toks", t_fast.mean_ms());
+    }
+
+    // MassDiff at the paper's dimensions — the "< 2 min for Llama3 8B" claim
+    for d in [1024usize, 8192, 14336] {
+        let mut rng = Rng::new(3);
+        let mass: Vec<f64> = (0..d).map(|_| rng.next_f64() + 0.01).collect();
+        let t = time("massdiff", 5, 200, || massdiff_perm(&mass, 32));
+        println!("massdiff d={d:<6} b=32: {:9.3} ms/layer (paper: < 2 min total for Llama3 8B)", t.mean_ms());
+    }
+
+    // rounding solvers at the wd-site size of llama_tiny (1024 x 256)
+    let w = rand_mat(1024, 256, 4);
+    let x = rand_mat(512, 1024, 5);
+    let mut gram = SymMat::zeros(1024);
+    let t_gram = time("gram", 1, 500, || {
+        gram = SymMat::zeros(1024);
+        gram.accumulate_gram(&x.data, 512);
+    });
+    println!("\ngram 512x1024:      {:9.1} ms", t_gram.mean_ms());
+    let codec = WeightCodec::fit(Format::Int4, &w);
+    let t_fit = time("fit", 1, 500, || WeightCodec::fit(Format::Int4, &w));
+    println!("codec fit 1024x256: {:9.1} ms", t_fit.mean_ms());
+    let t_rtn = time("rtn", 1, 300, || codec.quantize_mat(&w));
+    println!("rtn 1024x256:       {:9.1} ms", t_rtn.mean_ms());
+    let t_gptq = time("gptq", 1, 800, || Rounding::Gptq.round(&w, &codec, Some(&gram)));
+    println!("gptq 1024x256:      {:9.1} ms", t_gptq.mean_ms());
+    let t_q = time("qronos", 1, 800, || Rounding::Qronos.round(&w, &codec, Some(&gram)));
+    println!("qronos 1024x256:    {:9.1} ms", t_q.mean_ms());
+
+    // end-to-end pipeline stage timings on the real model (if artifacts exist)
+    if let Some(bc) = common::ctx_or_skip() {
+        let bundle = bc.bundle("llama_np2")?;
+        let t = std::time::Instant::now();
+        let rep = bc.run(&bundle, perq::coordinator::presets::perq_star(32, Format::Int4))?;
+        println!(
+            "\npipeline llama_np2 PeRQ* end-to-end: {:.2} s (ppl {:.3}; includes one-time XLA compile)",
+            t.elapsed().as_secs_f64(),
+            rep.perplexity
+        );
+        let t = std::time::Instant::now();
+        let rep2 = bc.run(&bundle, perq::coordinator::presets::perq_star(32, Format::Int4))?;
+        println!(
+            "pipeline llama_np2 PeRQ* warm:       {:.2} s (ppl {:.3}; compile amortized)",
+            t.elapsed().as_secs_f64(),
+            rep2.perplexity
+        );
+    }
+    common::elapsed_note(t0);
+    Ok(())
+}

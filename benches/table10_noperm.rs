@@ -1,0 +1,53 @@
+//! Table 10: isolating MassDiff via "No Permute" baselines — PeRQ* vs
+//! MR-Qronos (= PeRQ* with P3 = I) and PeRQ† vs SpinQuant (= PeRQ† with
+//! P3 = I), with the zero-shot probe suite as the downstream-accuracy
+//! analog. Expected shape: both PeRQ arms beat their ablations on every
+//! metric, with the largest gaps on the hard probes.
+
+mod common;
+
+use perq::coordinator::presets;
+use perq::prelude::*;
+use perq::util::bench::{fmt_ppl, print_table};
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    let Some(bc) = common::ctx_or_skip() else { return Ok(()) };
+    let bundle = bc.bundle("llama_np2")?;
+    let (fp, fz) = baseline_eval(&bundle, &bc.engine, 2048, Some(1024))?;
+    let mut rows = vec![(
+        "BF16".to_string(),
+        vec![fmt_ppl(fp.perplexity), format!("{:.1}", fz.as_ref().unwrap().average())],
+    )];
+    let arms: Vec<(&str, PipelineSpec)> = vec![
+        ("MR-Qronos (P=I)", {
+            let mut s = presets::perq_star(32, Format::Int4);
+            s.permutation = PermKind::Identity;
+            s
+        }),
+        ("SpinQuant (P=I)", {
+            let mut s = presets::perq_dagger(32, Format::Int4);
+            s.permutation = PermKind::Identity;
+            s
+        }),
+        ("PeRQ*", presets::perq_star(32, Format::Int4)),
+        ("PeRQ+", presets::perq_dagger(32, Format::Int4)),
+    ];
+    for (name, mut spec) in arms {
+        spec.run_zeroshot = true;
+        spec.zeroshot_tokens = 1024;
+        let rep = bc.run(&bundle, spec)?;
+        let z = rep.zeroshot.as_ref().unwrap();
+        println!("  {name:<16} ppl {:.3}  0-shot avg {:.1}%  tasks {:?}",
+                 rep.perplexity, z.average(),
+                 z.accuracies.iter().map(|a| (a * 100.0).round()).collect::<Vec<_>>());
+        rows.push((name.to_string(), vec![
+            fmt_ppl(rep.perplexity),
+            format!("{:.1}", z.average()),
+        ]));
+    }
+    print_table("Table 10 — No-Permute ablation (llama_np2, INT4, b=32)",
+                &["ppl", "0-shot"], &rows);
+    common::elapsed_note(t0);
+    Ok(())
+}

@@ -1,0 +1,35 @@
+//! Table 11: merged (Fig 7) vs fully-online (Fig 9) quantization graph
+//! architectures for MR-GPTQ and PeRQ*, INT4 and MXFP4, b = 32.
+//! Expected shape: merged and online are close; PeRQ* leads in both.
+
+mod common;
+
+use perq::coordinator::presets;
+use perq::prelude::*;
+use perq::util::bench::{fmt_ppl, print_table};
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    let Some(bc) = common::ctx_or_skip() else { return Ok(()) };
+    let bundle = bc.bundle("llama_np2")?;
+    let mut rows = Vec::new();
+    for fmt in [Format::Int4, Format::Mxfp4] {
+        for (name, base) in [
+            ("MR-GPTQ", presets::mr(32, Rounding::Gptq, fmt)),
+            ("PeRQ*", presets::perq_star(32, fmt)),
+        ] {
+            let mut cells = Vec::new();
+            for (glabel, online) in [("merged", false), ("online", true)] {
+                let spec = if online { presets::online(base.clone()) } else { base.clone() };
+                let rep = bc.run(&bundle, spec)?;
+                println!("  {} {name:<10} {glabel:<7} ppl {:.3}", fmt.name(), rep.perplexity);
+                cells.push(fmt_ppl(rep.perplexity));
+            }
+            rows.push((format!("{} / {name}", fmt.name()), cells));
+        }
+    }
+    print_table("Table 11 — graph architecture (llama_np2, b=32)",
+                &["merged", "online"], &rows);
+    common::elapsed_note(t0);
+    Ok(())
+}

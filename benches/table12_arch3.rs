@@ -1,0 +1,38 @@
+//! Table 12: a third architecture (the SmolLM3 analog — our qwen_tiny has
+//! a different depth/width/FFN ratio and a 12-point Hadamard base) under
+//! the same INT4 configuration as Table 2. Expected shape: same method
+//! ordering as the main results — PeRQ is not architecture-specific.
+
+mod common;
+
+use perq::coordinator::presets;
+use perq::prelude::*;
+use perq::util::bench::{fmt_ppl, print_table};
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    let Some(bc) = common::ctx_or_skip() else { return Ok(()) };
+    let bundle = bc.bundle("qwen_tiny")?;
+    let (fp, fz) = baseline_eval(&bundle, &bc.engine, 2048, Some(1024))?;
+    let mut rows = vec![(
+        "BF16".to_string(),
+        vec![fmt_ppl(fp.perplexity), format!("{:.1}", fz.unwrap().average())],
+    )];
+    for (name, mut spec) in [
+        ("MR-GPTQ", presets::mr(32, Rounding::Gptq, Format::Int4)),
+        ("MR-Qronos", presets::mr(32, Rounding::Qronos, Format::Int4)),
+        ("PeRQ*", presets::perq_star(32, Format::Int4)),
+        ("PeRQ+", presets::perq_dagger(32, Format::Int4)),
+    ] {
+        spec.run_zeroshot = true;
+        spec.zeroshot_tokens = 1024;
+        let rep = bc.run(&bundle, spec)?;
+        let z = rep.zeroshot.as_ref().unwrap().average();
+        println!("  {name:<10} ppl {:.3}  0-shot {z:.1}%", rep.perplexity);
+        rows.push((name.to_string(), vec![fmt_ppl(rep.perplexity), format!("{z:.1}")]));
+    }
+    print_table("Table 12 — third architecture (qwen_tiny, INT4, b=32)",
+                &["ppl", "0-shot"], &rows);
+    common::elapsed_note(t0);
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Table 1: WikiText2-analog perplexity of block rotations with and
+//! without PeRQ across block sizes (INT4 W4A4, Qronos rounding).
+//! Expected shape: No-Permute degrades as b shrinks; PeRQ* improves every
+//! column and closes the gap to full-vector rotations at larger b.
+
+mod common;
+
+use perq::coordinator::presets;
+use perq::prelude::*;
+use perq::util::bench::{fmt_ppl, print_table};
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    let Some(bc) = common::ctx_or_skip() else { return Ok(()) };
+    let bundle = bc.bundle("llama_tiny")?;
+    let blocks: Vec<usize> = bundle
+        .cfg
+        .block_sizes
+        .iter()
+        .cloned()
+        .filter(|&b| b > 1)
+        .collect();
+
+    let (fp, _) = baseline_eval(&bundle, &bc.engine, 2048, None)?;
+    println!("llama_tiny BF16-analog ppl: {:.3}", fp.perplexity);
+
+    let mut np_row = Vec::new();
+    let mut pq_row = Vec::new();
+    for &b in &blocks {
+        let r_np = bc.run(&bundle, presets::no_permute(b, Format::Int4))?;
+        let r_pq = bc.run(&bundle, presets::perq_star(b, Format::Int4))?;
+        println!("  b={b:<5} no-permute {:>8.3}  PeRQ* {:>8.3}", r_np.perplexity, r_pq.perplexity);
+        np_row.push(fmt_ppl(r_np.perplexity));
+        pq_row.push(fmt_ppl(r_pq.perplexity));
+    }
+    let header: Vec<String> = blocks.iter().map(|b| format!("{b}")).collect();
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    print_table(
+        "Table 1 — llama_tiny INT4, Qronos (last col = full-vector)",
+        &header_refs,
+        &[
+            ("No Permute".to_string(), np_row),
+            ("PeRQ*".to_string(), pq_row),
+        ],
+    );
+    common::elapsed_note(t0);
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Table 2: perplexity across data formats × pipeline compositions,
+//! b = 32 everywhere, on the Llama and Qwen analogs. Expected shape:
+//! MR-* baselines degrade hard at INT4, improve at MXFP4 (group scaling
+//! mitigates outliers); PeRQ*/† lead everywhere.
+
+mod common;
+
+use perq::coordinator::presets;
+use perq::prelude::*;
+use perq::util::bench::{fmt_ppl, print_table};
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    let Some(bc) = common::ctx_or_skip() else { return Ok(()) };
+    for model in ["llama_np2", "qwen_tiny"] {
+        let bundle = bc.bundle(model)?;
+        let (fp, _) = baseline_eval(&bundle, &bc.engine, 2048, None)?;
+        let mut rows = vec![("BF16".to_string(), vec![fmt_ppl(fp.perplexity); 3])];
+        for (name, _) in presets::table2_methods(Format::Int4) {
+            let mut cells = Vec::new();
+            for fmt in [Format::Int4, Format::Fp4, Format::Mxfp4] {
+                let spec = presets::table2_methods(fmt)
+                    .into_iter()
+                    .find(|(n, _)| *n == name)
+                    .unwrap()
+                    .1;
+                let rep = bc.run(&bundle, spec)?;
+                println!("  {model} {name:<14} {:<6} ppl {:.3}", fmt.name(), rep.perplexity);
+                cells.push(fmt_ppl(rep.perplexity));
+            }
+            rows.push((name.to_string(), cells));
+        }
+        print_table(
+            &format!("Table 2 — {model}, b=32"),
+            &["INT4", "FP4", "MXFP4"],
+            &rows,
+        );
+    }
+    common::elapsed_note(t0);
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Table 3: minimum compute ops for full-vector vs block Hadamard
+//! rotations at the paper's exact model dimensions. Analytic — the
+//! numbers reproduce the paper digit-for-digit (asserted in unit tests);
+//! this bench also times the *actual* rust transforms at those dims.
+
+mod common;
+
+use perq::hadamard::{opcount, BlockRotator};
+use perq::tensor::Mat;
+use perq::util::bench::{fmt_count, print_table, time};
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    let rows: Vec<(String, Vec<String>)> = opcount::table3()
+        .into_iter()
+        .map(|r| {
+            let pct = |ops: usize| {
+                format!("{} ({:.0}%)", fmt_count(ops), 100.0 * ops as f64 / r.full as f64)
+            };
+            (
+                format!("{} {} d={} (k=2^{},t={})", r.model, r.size, r.d,
+                        r.k.trailing_zeros(), r.t),
+                vec![pct(r.b32), pct(r.b128), pct(r.b512), fmt_count(r.full)],
+            )
+        })
+        .collect();
+    print_table("Table 3 — rotation op counts (analytic, exact)",
+                &["b=32", "b=128", "b=512", "Full"], &rows);
+
+    // measured wall-clock of the real transforms at the same dims
+    println!("\nmeasured rust transform, 256 tokens:");
+    for r in opcount::table3() {
+        let mut cells = Vec::new();
+        for b in [32usize, 128, 512, r.d] {
+            let rot = BlockRotator::hadamard(b)?;
+            let mut m = Mat::from_fn(256, r.d, |i, j| ((i + j) as f32 * 0.01).sin());
+            let t = time("", 3, 120, || rot.apply_mat(&mut m));
+            cells.push(format!("{:.2}ms", t.mean_ms()));
+        }
+        println!(
+            "  d={:<6} b32 {:>9}  b128 {:>9}  b512 {:>9}  full {:>9}",
+            r.d, cells[0], cells[1], cells[2], cells[3]
+        );
+    }
+    common::elapsed_note(t0);
+    Ok(())
+}

@@ -1,0 +1,44 @@
+//! Table 5: isolating MassDiff with RTN rounding — block rotations with
+//! and without MassDiff across block sizes, no error correction at all.
+//! Expected shape: biggest MassDiff gains at small b (the paper reports
+//! orders of magnitude there).
+
+mod common;
+
+use perq::coordinator::presets;
+use perq::prelude::*;
+use perq::util::bench::{fmt_ppl, print_table};
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    let Some(bc) = common::ctx_or_skip() else { return Ok(()) };
+    let bundle = bc.bundle("llama_tiny")?;
+    let blocks = [16usize, 32, 64, 256, 1024];
+
+    let mut np_row = Vec::new();
+    let mut md_row = Vec::new();
+    for &b in &blocks {
+        let mut np = presets::no_permute(b, Format::Int4);
+        np.rounding = Rounding::Rtn;
+        let mut md = presets::perq_star(b, Format::Int4);
+        md.rounding = Rounding::Rtn;
+        let r_np = bc.run(&bundle, np)?;
+        let r_md = bc.run(&bundle, md)?;
+        println!("  b={b:<5} no-permute {:>8.3}  massdiff {:>8.3}",
+                 r_np.perplexity, r_md.perplexity);
+        np_row.push(fmt_ppl(r_np.perplexity));
+        md_row.push(fmt_ppl(r_md.perplexity));
+    }
+    let header: Vec<String> = blocks.iter().map(|b| b.to_string()).collect();
+    let hrefs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    print_table(
+        "Table 5 — llama_tiny INT4, RTN only (last col = full-vector)",
+        &hrefs,
+        &[
+            ("No Permute".to_string(), np_row),
+            ("MassDiff".to_string(), md_row),
+        ],
+    );
+    common::elapsed_note(t0);
+    Ok(())
+}

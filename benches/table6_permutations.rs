@@ -1,0 +1,40 @@
+//! Table 6: permutation strategies under a fixed PeRQ pipeline (b=32,
+//! Qronos, INT4): None / Random / Absmax / ZigZag / MassDiff.
+//! Expected shape: MassDiff ≥ ZigZag > Absmax > Random ≈ None.
+
+mod common;
+
+use perq::coordinator::presets;
+use perq::prelude::*;
+use perq::util::bench::{fmt_ppl, print_table};
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    let Some(bc) = common::ctx_or_skip() else { return Ok(()) };
+    let kinds = [
+        ("No Permute", PermKind::Identity),
+        ("Random", PermKind::Random),
+        ("Absmax", PermKind::Absmax),
+        ("ZigZag", PermKind::ZigZag),
+        ("MassDiff", PermKind::MassDiff),
+    ];
+    let mut rows = Vec::new();
+    for model in ["llama_np2", "qwen_tiny"] {
+        let bundle = bc.bundle(model)?;
+        for (name, kind) in kinds {
+            let mut spec = presets::perq_star(32, Format::Int4);
+            spec.permutation = kind;
+            let rep = bc.run(&bundle, spec)?;
+            println!("  {model} {name:<12} ppl {:.3} (balance {:.2}x)",
+                     rep.perplexity, rep.mass_balance);
+            rows.push((
+                format!("{model} / {name}"),
+                vec![fmt_ppl(rep.perplexity), format!("{:.2}x", rep.mass_balance)],
+            ));
+        }
+    }
+    print_table("Table 6 — permutation methods (INT4, b=32, Qronos)",
+                &["ppl", "balance"], &rows);
+    common::elapsed_note(t0);
+    Ok(())
+}

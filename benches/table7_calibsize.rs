@@ -1,0 +1,39 @@
+//! Table 7: permutation-calibration data size — MassDiff vs ZigZag vs
+//! No-Permute at small blocks, calibrated with 1 sequence vs the full
+//! capture set. Expected shape: MassDiff matches or beats ZigZag at every
+//! size; both beat No-Permute; more data sharpens MassDiff.
+
+mod common;
+
+use perq::coordinator::presets;
+use perq::prelude::*;
+use perq::util::bench::{fmt_ppl, print_table};
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    let Some(bc) = common::ctx_or_skip() else { return Ok(()) };
+    let bundle = bc.bundle("llama_np2")?;
+    let mut rows = Vec::new();
+    for (label, kind) in [
+        ("No Permute", PermKind::Identity),
+        ("ZigZag", PermKind::ZigZag),
+        ("MassDiff", PermKind::MassDiff),
+    ] {
+        for (calib_label, n_seqs) in [("1 seq", 1usize), ("4 seqs", 4)] {
+            let mut cells = Vec::new();
+            for b in [16usize, 32, 64] {
+                let mut spec = presets::perq_star(b, Format::Int4);
+                spec.permutation = kind;
+                spec.perm_calib_seqs = n_seqs;
+                let rep = bc.run(&bundle, spec)?;
+                println!("  {label:<12} {calib_label:<7} b={b:<4} ppl {:.3}", rep.perplexity);
+                cells.push(fmt_ppl(rep.perplexity));
+            }
+            rows.push((format!("{label} ({calib_label})"), cells));
+        }
+    }
+    print_table("Table 7 — llama_np2 calibration size (INT4, Qronos)",
+                &["b=16", "b=32", "b=64"], &rows);
+    common::elapsed_note(t0);
+    Ok(())
+}

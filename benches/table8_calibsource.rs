@@ -1,0 +1,39 @@
+//! Table 8: calibration-source sensitivity — PeRQ* with and without
+//! MassDiff, calibrated on each of the three corpus sources, always
+//! evaluated on the wiki test split. Expected shape: MassDiff improves
+//! over No-Permute under every source; cross-source variation is modest.
+
+mod common;
+
+use perq::coordinator::presets;
+use perq::prelude::*;
+use perq::util::bench::{fmt_ppl, print_table};
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    let Some(bc) = common::ctx_or_skip() else { return Ok(()) };
+    let bundle = bc.bundle("llama_np2")?;
+    let mut rows = Vec::new();
+    for source in [Source::C4, Source::Fineweb, Source::Wiki] {
+        for (label, kind) in [("No Permute", PermKind::Identity),
+                              ("MassDiff", PermKind::MassDiff)] {
+            let mut spec = presets::perq_star(32, Format::Int4);
+            spec.permutation = kind;
+            spec.calib_source = source;
+            spec.run_zeroshot = true;
+            spec.zeroshot_tokens = 1024;
+            let rep = bc.run(&bundle, spec)?;
+            let z = rep.zeroshot.as_ref().map(|z| z.average()).unwrap_or(0.0);
+            println!("  calib={:<8} {label:<12} ppl {:.3}  0-shot {:.1}%",
+                     source.name(), rep.perplexity, z);
+            rows.push((
+                format!("{} / {label}", source.name()),
+                vec![fmt_ppl(rep.perplexity), format!("{z:.1}")],
+            ));
+        }
+    }
+    print_table("Table 8 — calibration source (llama_np2, INT4, b=32)",
+                &["wiki ppl", "0-shot"], &rows);
+    common::elapsed_note(t0);
+    Ok(())
+}

@@ -1,0 +1,38 @@
+//! Table 9: Stage-1 (MassDiff+QuaRot vs MassDiff+Spin) × Stage-2
+//! (RTN / GPTQ / Qronos) composition grid, INT4, b = 32.
+//! Expected shape: Qronos ≥ GPTQ under QuaRot; RTN best under learned
+//! rotations (PeRQ† = Spin+RTN).
+
+mod common;
+
+use perq::coordinator::spec::RotationSpec;
+use perq::prelude::*;
+use perq::util::bench::{fmt_ppl, print_table};
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    let Some(bc) = common::ctx_or_skip() else { return Ok(()) };
+    let mut rows = Vec::new();
+    for model in ["llama_np2", "qwen_tiny"] {
+        let bundle = bc.bundle(model)?;
+        for (s1, rot) in [("MassDiff+QuaRot", RotationSpec::quarot(32)),
+                          ("MassDiff+Spin", RotationSpec::spin(32))] {
+            let mut cells = Vec::new();
+            for rounding in [Rounding::Rtn, Rounding::Gptq, Rounding::Qronos] {
+                let mut spec = PipelineSpec::default();
+                spec.permutation = PermKind::MassDiff;
+                spec.rotation = rot;
+                spec.rounding = rounding;
+                spec.format = Format::Int4;
+                let rep = bc.run(&bundle, spec)?;
+                println!("  {model} {s1:<17} {:<7} ppl {:.3}", rounding.name(), rep.perplexity);
+                cells.push(fmt_ppl(rep.perplexity));
+            }
+            rows.push((format!("{model} / {s1}"), cells));
+        }
+    }
+    print_table("Table 9 — pipeline composition (INT4, b=32)",
+                &["RTN", "GPTQ", "Qronos"], &rows);
+    common::elapsed_note(t0);
+    Ok(())
+}

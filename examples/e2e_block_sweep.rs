@@ -1,0 +1,73 @@
+//! End-to-end driver (DESIGN.md §headline): run the full PeRQ system —
+//! calibration capture through PJRT artifacts, MassDiff permutation
+//! calibration, offline rotation/permutation merging, Qronos rounding,
+//! and perplexity evaluation on the held-out synthetic corpus — across
+//! every exported block size, with and without permutations.
+//!
+//! This regenerates the *shape* of the paper's Table 1 on the substitute
+//! model and reports the headline metric: the fraction of the full-vector
+//! rotation gap that permutations recover at each block size.
+//!
+//!     cargo run --release --example e2e_block_sweep [model] [eval_tokens]
+
+use perq::prelude::*;
+use perq::util::bench::{fmt_ppl, print_table};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(|s| s.as_str()).unwrap_or("llama_tiny");
+    let eval_tokens: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(8192);
+
+    let ctx = RepoContext::discover()?;
+    let engine = Engine::new(&ctx)?;
+    let bundle = ModelBundle::load_with_engine(&ctx, &engine, model)?;
+    let blocks = bundle.cfg.block_sizes.clone();
+    let full = *blocks.iter().max().unwrap();
+
+    let (fp, _) = baseline_eval(&bundle, &engine, eval_tokens, None)?;
+    println!("{model}: BF16-analog ppl {:.3} | blocks {blocks:?}", fp.perplexity);
+
+    let mut rows = Vec::new();
+    let mut np_ppl = Vec::new();
+    let mut pq_ppl = Vec::new();
+    for &b in &blocks {
+        if b == 1 {
+            continue; // b=1 is the no-rotation arm, not part of Table 1
+        }
+        let mut spec_np = presets::no_permute(b, Format::Int4);
+        spec_np.eval_tokens = eval_tokens;
+        let r_np = Pipeline::new(spec_np).run_with_engine(&bundle, &engine)?;
+        let mut spec_pq = presets::perq_star(b, Format::Int4);
+        spec_pq.eval_tokens = eval_tokens;
+        let r_pq = Pipeline::new(spec_pq).run_with_engine(&bundle, &engine)?;
+        println!(
+            "  b={b:<5} no-permute {:>7.3}   PeRQ* {:>7.3}   (mass balance {:.2}x -> {:.2}x)",
+            r_np.perplexity, r_pq.perplexity, r_np.mass_balance, r_pq.mass_balance
+        );
+        np_ppl.push(r_np.perplexity);
+        pq_ppl.push(r_pq.perplexity);
+        rows.push((
+            format!("b={b}"),
+            vec![fmt_ppl(r_np.perplexity), fmt_ppl(r_pq.perplexity)],
+        ));
+    }
+    print_table(
+        &format!("Table 1 shape — {model} INT4 W4A4 (Qronos)"),
+        &["No Permute", "PeRQ*"],
+        &rows,
+    );
+
+    // headline: recovery of the full-vector gap at the smallest block
+    let full_np = *np_ppl.last().unwrap(); // largest block ≈ full-vector
+    let small_np = np_ppl[0];
+    let small_pq = pq_ppl[0];
+    let recovery = 100.0 * (small_np - small_pq) / (small_np - full_np).max(1e-9);
+    println!(
+        "\nheadline: at the smallest block, PeRQ recovers {recovery:.0}% of the \
+         full-vector rotation gap (paper reports up to 90% for Llama3 1B b=16; \
+         full-vector ppl here {:.3}, fp {:.3})",
+        full_np, fp.perplexity
+    );
+    let _ = full;
+    Ok(())
+}

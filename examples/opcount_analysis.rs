@@ -1,0 +1,73 @@
+//! Rotation compute analysis (the paper's Appendix A): the analytic op
+//! model behind Tables 3-4 (exact reproduction), the *measured* op count of
+//! our generalized non-power-of-2 fast transform, and wall-clock timings of
+//! the rust transform implementations.
+//!
+//!     cargo run --release --example opcount_analysis
+
+use perq::hadamard::nonpow2::NonPow2Plan;
+use perq::hadamard::{opcount, BlockRotator};
+use perq::tensor::Mat;
+use perq::util::bench::{fmt_count, print_table, time};
+
+fn main() -> anyhow::Result<()> {
+    // Tables 3 and 4 — analytic, matches the paper digit-for-digit.
+    let rows3: Vec<(String, Vec<String>)> = opcount::table3()
+        .into_iter()
+        .map(|r| {
+            (
+                format!("{} {} d={}", r.model, r.size, r.d),
+                vec![
+                    fmt_count(r.b32),
+                    fmt_count(r.b128),
+                    fmt_count(r.b512),
+                    fmt_count(r.full),
+                ],
+            )
+        })
+        .collect();
+    print_table("Table 3 (analytic)", &["b=32", "b=128", "b=512", "Full"], &rows3);
+
+    let rows4: Vec<(String, Vec<String>)> = opcount::table4()
+        .into_iter()
+        .map(|r| {
+            (
+                r.model.to_string(),
+                vec![
+                    fmt_count(r.matmul),
+                    fmt_count(r.butterfly_matmul),
+                    fmt_count(r.ours),
+                ],
+            )
+        })
+        .collect();
+    print_table("Table 4 (analytic)", &["Matmul", "Bfly+MM", "Ours"], &rows4);
+
+    // Measured ops of the generalized implementation vs the paper model.
+    println!("\nmeasured non-pow-2 plan ops vs model d(k'+t+2):");
+    for d in [448usize, 1792, 3072, 6144, 14336] {
+        if let Ok(plan) = NonPow2Plan::new(d) {
+            let model = opcount::ours_ops(d);
+            let meas = plan.measured_ops();
+            println!(
+                "  d={d:<6} model {:<9} measured {:<9} ratio {:.2}",
+                fmt_count(model),
+                fmt_count(meas),
+                meas as f64 / model as f64
+            );
+        }
+    }
+
+    // Wall-clock of the actual rust transforms (per 4096-token batch).
+    println!("\nwall-clock, 4096 tokens/batch:");
+    for (d, b) in [(1024usize, 32usize), (1024, 1024), (448, 448), (14336, 14336)] {
+        let rot = BlockRotator::hadamard(b)?;
+        let mut m = Mat::from_fn(4096, d, |i, j| ((i * 31 + j) as f32 * 0.01).sin());
+        let t = time(&format!("d={d} b={b}"), 3, 300, || {
+            rot.apply_mat(&mut m);
+        });
+        let gbps = (4096.0 * d as f64 * 4.0) / (t.mean_ns) ; // bytes/ns = GB/s
+        println!("  d={d:<6} b={b:<6} {:8.2} ms/batch  ({gbps:.2} GB/s)", t.mean_ms());
+    }
+    Ok(())
+}

@@ -1,0 +1,115 @@
+//! Outlier-suppression analysis on real model activations (Figures 1/3/4):
+//! per-token mass concentration δ, the Prop 3.2 normalized bound across
+//! block sizes, empirical suppression ratios, and the Gaussian/Laplacian
+//! distribution-fit comparison. Writes CSVs next to the binary for
+//! plotting and prints summaries.
+//!
+//!     cargo run --release --example outlier_analysis [model]
+
+use perq::calib::capture;
+use perq::hadamard::BlockRotator;
+use perq::model::transform;
+use perq::prelude::*;
+use perq::stats::{self, distfit};
+use perq::tensor::Mat;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(|s| s.as_str()).unwrap_or("llama_tiny");
+    let ctx = RepoContext::discover()?;
+    let engine = Engine::new(&ctx)?;
+    let bundle = ModelBundle::load_with_engine(&ctx, &engine, model)?;
+    let cfg = bundle.cfg.clone();
+
+    let mut ws = bundle.weights.clone();
+    transform::fold_norms(&mut ws, &cfg);
+    let seqs = capture::calibration_batches(&cfg, Source::Wiki, 8, 42);
+    let caps = capture::run_capture(&engine, model, &cfg, &ws, &seqs)?;
+    let layer = cfg.n_layers.saturating_sub(1).min(2); // "third down projection layer"
+    let down = &caps.down_in[layer];
+    println!("{model}: {} tokens at down-proj layer {layer} (d_ffn {})",
+             down.rows, cfg.d_ffn);
+
+    // --- Fig 1: activation range under rotation structures -----------------
+    let range = |m: &Mat| -> f64 {
+        m.data.iter().fold(0.0f64, |a, &v| a.max(v.abs() as f64))
+    };
+    println!("\nFig 1 — max |activation| by rotation structure:");
+    println!("  original      {:8.3}", range(down));
+    for b in [32usize, 128, cfg.d_ffn] {
+        if cfg.d_ffn % b != 0 {
+            continue;
+        }
+        let rot = BlockRotator::hadamard(b)?;
+        let mut r = down.clone();
+        rot.apply_mat(&mut r);
+        let label = if b == cfg.d_ffn { "full".to_string() } else { format!("b={b}") };
+        println!("  {label:<12} {:8.3}", range(&r));
+    }
+
+    // --- Fig 3: delta vs suppression ratio + distribution fits -------------
+    let full_rot = BlockRotator::hadamard(cfg.d_ffn)?;
+    let n_tokens = down.rows.min(1024);
+    let mut csv = String::from("delta,suppression,delta_gauss,delta_laplace\n");
+    let mut below_thresh = 0usize;
+    let mut suppressed = 0usize;
+    let mut rng = perq::data::rng::Rng::new(0xF16_3);
+    for r in 0..n_tokens {
+        let row = down.row(r);
+        let d = stats::delta(row);
+        let mut rot = Mat::from_vec(1, row.len(), row.to_vec());
+        full_rot.apply_mat(&mut rot);
+        let ratio = stats::suppression_ratio(row, &rot.data);
+        if d < 1.0 / (row.len() as f64).sqrt() {
+            below_thresh += 1;
+        }
+        if ratio < 1.0 {
+            suppressed += 1;
+        }
+        let (gm, gs) = distfit::fit_gaussian(row);
+        let g = distfit::sample_gaussian(gm, gs, row.len(), &mut rng);
+        let (lm, lsc) = distfit::fit_laplacian(row);
+        let l = distfit::sample_laplacian(lm, lsc, row.len(), &mut rng);
+        csv.push_str(&format!(
+            "{d:.6},{ratio:.6},{:.6},{:.6}\n",
+            stats::delta(&g),
+            stats::delta(&l)
+        ));
+    }
+    std::fs::write("outlier_fig3.csv", &csv)?;
+    println!(
+        "\nFig 3 — of {n_tokens} tokens: {below_thresh} below the 1/sqrt(d) sufficient \
+         threshold, {suppressed} actually suppressed (paper: suppression is \
+         consistent even above the threshold). CSV -> outlier_fig3.csv"
+    );
+
+    // --- Fig 4: normalized bound vs block size -----------------------------
+    println!("\nFig 4 — mean normalized bound max_j delta_j|X_j|inf/|X|inf vs b:");
+    let mut csv4 = String::from("b,mean,std,sqrt_thresh,lower\n");
+    let mut b = 16usize;
+    while b <= cfg.d_ffn {
+        if cfg.d_ffn % b == 0 {
+            let vals: Vec<f64> = (0..n_tokens)
+                .map(|r| stats::normalized_bound(down.row(r), b))
+                .collect();
+            let mean = vals.iter().sum::<f64>() / vals.len() as f64;
+            let var = vals.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / vals.len() as f64;
+            println!(
+                "  b={b:<5} mean {mean:.4} (std {:.4})   1/sqrt(b)={:.4}  1/b={:.4}",
+                var.sqrt(),
+                1.0 / (b as f64).sqrt(),
+                1.0 / b as f64
+            );
+            csv4.push_str(&format!(
+                "{b},{mean:.6},{:.6},{:.6},{:.6}\n",
+                var.sqrt(),
+                1.0 / (b as f64).sqrt(),
+                1.0 / b as f64
+            ));
+        }
+        b *= 2;
+    }
+    std::fs::write("outlier_fig4.csv", &csv4)?;
+    println!("CSV -> outlier_fig4.csv");
+    Ok(())
+}

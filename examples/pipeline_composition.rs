@@ -1,0 +1,44 @@
+//! Pipeline-composition study (the paper's Table 9): cross Stage-1
+//! transforms (MassDiff+QuaRot vs MassDiff+Spin) with Stage-2 rounding
+//! (RTN / GPTQ / Qronos) on one model, INT4 b=32.
+//!
+//!     cargo run --release --example pipeline_composition [model]
+
+use perq::coordinator::spec::RotationSpec;
+use perq::prelude::*;
+use perq::util::bench::{fmt_ppl, print_table};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(|s| s.as_str()).unwrap_or("llama_np2");
+    let ctx = RepoContext::discover()?;
+    let engine = Engine::new(&ctx)?;
+    let bundle = ModelBundle::load_with_engine(&ctx, &engine, model)?;
+
+    let stage1 = [
+        ("MassDiff+QuaRot", RotationSpec::quarot(32)),
+        ("MassDiff+Spin", RotationSpec::spin(32)),
+    ];
+    let stage2 = [Rounding::Rtn, Rounding::Gptq, Rounding::Qronos];
+
+    let mut rows = Vec::new();
+    for (s1_name, rot) in stage1 {
+        for rounding in stage2 {
+            let mut spec = PipelineSpec::default();
+            spec.permutation = PermKind::MassDiff;
+            spec.rotation = rot;
+            spec.rounding = rounding;
+            spec.format = Format::Int4;
+            spec.eval_tokens = 4096;
+            let rep = Pipeline::new(spec).run_with_engine(&bundle, &engine)?;
+            println!("{s1_name:<18} + {:<7} ppl {:.3}", rounding.name(), rep.perplexity);
+            rows.push((
+                format!("{s1_name} + {}", rounding.name()),
+                vec![fmt_ppl(rep.perplexity)],
+            ));
+        }
+    }
+    print_table(&format!("Table 9 shape — {model} INT4 b=32"), &["ppl"], &rows);
+    println!("\n(PeRQ* = MassDiff+QuaRot+Qronos; PeRQ† = MassDiff+Spin+RTN)");
+    Ok(())
+}

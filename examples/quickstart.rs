@@ -1,0 +1,44 @@
+//! Quickstart: quantize one model with PeRQ* and compare against the
+//! full-precision baseline.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Requires `make artifacts` (builds the tiny models + AOT graphs once).
+
+use perq::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = RepoContext::discover()?;
+    let engine = Engine::new(&ctx)?;
+    let bundle = ModelBundle::load_with_engine(&ctx, &engine, "llama_np2")?;
+    println!(
+        "model {} — {} layers, d_model {}, d_ffn {}, {} params",
+        bundle.name,
+        bundle.cfg.n_layers,
+        bundle.cfg.d_model,
+        bundle.cfg.d_ffn,
+        bundle.weights.param_count()
+    );
+
+    // full-precision reference
+    let (fp, _) = baseline_eval(&bundle, &engine, 4096, None)?;
+    println!("BF16-analog baseline ppl: {:.3}", fp.perplexity);
+
+    // PeRQ*: MassDiff permutation + QuaRot rotations + block-32 online
+    // Hadamard at the down projection + Qronos rounding, INT4 W4A4.
+    let spec = presets::perq_star(32, Format::Int4);
+    let report = Pipeline::new(spec).run_with_engine(&bundle, &engine)?;
+    println!("PeRQ* (INT4, b=32) ppl:   {:.3}", report.perplexity);
+
+    // the same pipeline without the permutation — the paper's ablation
+    let report_np = Pipeline::new(presets::no_permute(32, Format::Int4))
+        .run_with_engine(&bundle, &engine)?;
+    println!("No-Permute (b=32) ppl:    {:.3}", report_np.perplexity);
+
+    println!(
+        "\npermutation recovers {:.0}% of the quantization gap",
+        100.0 * (report_np.perplexity - report.perplexity)
+            / (report_np.perplexity - fp.perplexity).max(1e-9)
+    );
+    Ok(())
+}

@@ -1,0 +1,143 @@
+"""AOT export: lower every L2 graph variant to HLO text for the rust runtime.
+
+HLO *text* (never `.serialize()`) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published `xla` 0.1.6 crate) rejects; the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README).
+
+Artifacts per model (DESIGN.md §7):
+    fwd.hlo.txt               full-precision forward          [W.., tokens]
+    fwd_capture.hlo.txt       forward + calibration captures  [W.., tokens]
+    fwd_quant_b<b>.hlo.txt    Fig 7 merged quant graph        [W.., tokens, hb, fmt]
+    fwd_online_b<b>.hlo.txt   Fig 9 online quant graph        [W.., tokens, hbd, hbf, fmt]
+plus meta.json describing the exact input ordering (the rust contract).
+
+Weights are runtime inputs so one artifact serves every pipeline arm —
+merged permutations/rotations are weight transformations done in rust.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import CONFIGS, ModelConfig, fwd, fwd_capture, fwd_online, \
+    fwd_quant, weight_names, weight_shapes
+
+BATCH = 8  # static eval batch (B, T) = (8, seq_len); rust pads final batch
+ONLINE_BLOCK = 32  # Fig 9 ablation block size (matches the paper's b=32)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(shape=()):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def weight_specs(cfg: ModelConfig):
+    shapes = weight_shapes(cfg)
+    return [f32(shapes[n]) for n in weight_names(cfg)]
+
+
+def export_model(cfg: ModelConfig, out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    names = weight_names(cfg)
+    shapes = weight_shapes(cfg)
+    nw = len(names)
+    tok_spec = i32((BATCH, cfg.seq_len))
+    meta_arts = {}
+
+    def lower(tag: str, fn, extra_specs: list, extra_inputs: list[dict]):
+        args = weight_specs(cfg) + [tok_spec] + extra_specs
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{tag}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        inputs = ([{"name": n, "kind": "weight", "shape": list(shapes[n])}
+                   for n in names]
+                  + [{"name": "tokens", "kind": "tokens",
+                      "shape": [BATCH, cfg.seq_len]}]
+                  + extra_inputs)
+        meta_arts[tag] = {"file": fname, "inputs": inputs}
+        print(f"    {cfg.name}/{fname}: {len(text) / 1e6:.2f} MB")
+
+    def unpack(args):
+        return {n: args[i] for i, n in enumerate(names)}
+
+    # --- full-precision forward + capture ---
+    def fn_fwd(*args):
+        return (fwd(unpack(args), args[nw], cfg),)
+
+    def fn_capture(*args):
+        return fwd_capture(unpack(args), args[nw], cfg)
+
+    lower("fwd", fn_fwd, [], [])
+    lower("fwd_capture", fn_capture, [], [])
+
+    # --- Fig 7 merged quant graph, one artifact per block size ---
+    for b in cfg.block_sizes:
+        def fn_quant(*args, b=b):
+            return (fwd_quant(unpack(args), args[nw], args[nw + 1],
+                              args[nw + 2], cfg),)
+
+        lower(f"fwd_quant_b{b}", fn_quant, [f32((b, b)), i32()],
+              [{"name": "hb", "kind": "hadamard", "shape": [b, b]},
+               {"name": "fmt", "kind": "format", "shape": []}])
+
+    # --- Fig 9 fully-online graph (Table 11) ---
+    b = ONLINE_BLOCK
+    if cfg.d_model % b == 0 and cfg.d_ffn % b == 0:
+        def fn_online(*args):
+            return (fwd_online(unpack(args), args[nw], args[nw + 1],
+                               args[nw + 2], args[nw + 3], cfg),)
+
+        lower(f"fwd_online_b{b}", fn_online,
+              [f32((b, b)), f32((b, b)), i32()],
+              [{"name": "hb_d", "kind": "hadamard", "shape": [b, b]},
+               {"name": "hb_f", "kind": "hadamard", "shape": [b, b]},
+               {"name": "fmt", "kind": "format", "shape": []}])
+
+    return {
+        "config": {
+            "name": cfg.name, "n_layers": cfg.n_layers,
+            "d_model": cfg.d_model, "n_heads": cfg.n_heads,
+            "d_ffn": cfg.d_ffn, "vocab": cfg.vocab,
+            "seq_len": cfg.seq_len, "batch": BATCH,
+            "block_sizes": list(cfg.block_sizes),
+        },
+        "weights": [{"name": n, "shape": list(shapes[n])} for n in names],
+        "artifacts": meta_arts,
+    }
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--out", default="../artifacts")
+    p.add_argument("--models", default="llama_tiny,llama_np2,qwen_tiny")
+    args = p.parse_args()
+    for name in args.models.split(","):
+        cfg = CONFIGS[name]
+        meta = export_model(cfg, os.path.join(args.out, name))
+        with open(os.path.join(args.out, name, "meta.json"), "w") as f:
+            json.dump(meta, f, indent=1)
+    print("aot export complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,206 @@
+"""Deterministic synthetic corpus generator (python twin of rust `data::corpus`).
+
+The paper calibrates and evaluates on WikiText2 / C4 / FineWeb.  We have no
+licensed corpora in this environment, so we substitute a deterministic
+synthetic text generator with three "sources" that differ in seed and
+statistics (see DESIGN.md §3).  The generator is implemented bit-identically
+in python (build path: training + golden files) and rust (`data::corpus`,
+request path: calibration + evaluation streams).  Bit-identity is enforced
+by a golden-token cross-test (`artifacts/corpus_golden.bin`).
+
+Determinism rules (shared with the rust twin):
+  * RNG is xorshift64* with fixed constants; floats are derived as
+    (x >> 11) * 2^-53, and only IEEE-exact f64 ops (add/div/compare) are
+    used downstream, so python and rust agree to the bit.
+  * The word frequency law is the exact-harmonic Zipf law w_r = 1/(r+1)
+    (pure divisions; no powf, which is not cross-language deterministic).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+MASK64 = (1 << 64) - 1
+
+# Character set: 26 letters + space/period/comma/newline + 2 reserved pads.
+CHARSET = "abcdefghijklmnopqrstuvwxyz .,\n"
+VOCAB_SIZE = 32  # ids 30, 31 are reserved/unused pads
+SYLLABLES = [
+    "ba", "be", "bi", "bo", "bu", "da", "de", "di", "do", "du",
+    "ka", "ke", "ki", "ko", "ku", "la", "le", "li", "lo", "lu",
+    "ma", "me", "mi", "mo", "mu", "na", "ne", "ni", "no", "nu",
+    "ra", "re", "ri", "ro", "ru", "sa", "se", "si", "so", "su",
+    "ta", "te", "ti", "to", "tu", "va", "ve", "vi", "vo", "vu",
+]
+NUM_WORDS = 512  # synthetic vocabulary size (word-level, pre-tokenization)
+
+
+class Rng:
+    """xorshift64* — twin of rust `data::rng::Rng`."""
+
+    def __init__(self, seed: int):
+        # Never allow the all-zero state.
+        self.state = (seed ^ 0x9E3779B97F4A7C15) & MASK64 or 0xDEADBEEFCAFEF00D
+
+    def next_u64(self) -> int:
+        x = self.state
+        x ^= (x >> 12)
+        x ^= (x << 25) & MASK64
+        x ^= (x >> 27)
+        self.state = x
+        return (x * 0x2545F4914F6CDD1D) & MASK64
+
+    def next_f64(self) -> float:
+        """Uniform in [0, 1) with 53 bits — IEEE-exact in both languages."""
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def next_below(self, n: int) -> int:
+        return self.next_u64() % n
+
+
+def build_vocabulary() -> list[str]:
+    """Deterministic synthetic word list, identical across twins."""
+    rng = Rng(0x5EED_0001)
+    words = []
+    for _ in range(NUM_WORDS):
+        n_syll = 1 + rng.next_below(3)  # 1..3 syllables
+        w = "".join(SYLLABLES[rng.next_below(len(SYLLABLES))] for _ in range(n_syll))
+        words.append(w)
+    return words
+
+
+@dataclass(frozen=True)
+class SourceSpec:
+    """A corpus 'source' — the analog of WikiText2 / C4 / FineWeb."""
+
+    name: str
+    seed: int
+    bigram_weight: float  # probability of following the bigram chain
+    min_sentence: int
+    max_sentence: int
+    comma_prob: float
+
+
+SOURCES = {
+    "wiki": SourceSpec("wiki", 0x00C0FFEE, 0.5, 4, 12, 0.10),
+    "c4": SourceSpec("c4", 0x00BEEF01, 0.3, 3, 9, 0.05),
+    "fineweb": SourceSpec("fineweb", 0x00FACade, 0.7, 5, 15, 0.15),
+}
+
+
+class CorpusGenerator:
+    """Streaming word-level generator with Zipf unigrams + a bigram chain.
+
+    next-word law: with prob `bigram_weight` follow a deterministic affine
+    successor map (creates local structure / repeated n-grams, which gives
+    activations genuine token-dependent geometry); otherwise draw from the
+    exact-harmonic Zipf distribution over the word vocabulary.
+    """
+
+    def __init__(self, spec: SourceSpec):
+        self.spec = spec
+        self.rng = Rng(spec.seed)
+        self.words = build_vocabulary()
+        # Exact-harmonic cumulative weights (divisions only — IEEE exact).
+        cum = []
+        total = 0.0
+        for r in range(NUM_WORDS):
+            total += 1.0 / float(r + 1)
+            cum.append(total)
+        self.cum = cum
+        self.total = total
+        self.prev = 0
+
+    def _zipf_word(self) -> int:
+        u = self.rng.next_f64() * self.total
+        lo, hi = 0, NUM_WORDS - 1
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if self.cum[mid] < u:
+                lo = mid + 1
+            else:
+                hi = mid
+        return lo
+
+    def _next_word(self) -> int:
+        if self.rng.next_f64() < self.spec.bigram_weight:
+            w = (self.prev * 31 + 17) % NUM_WORDS
+        else:
+            w = self._zipf_word()
+        self.prev = w
+        return w
+
+    def sentence(self) -> str:
+        spec = self.spec
+        n = spec.min_sentence + self.rng.next_below(
+            spec.max_sentence - spec.min_sentence + 1
+        )
+        parts = []
+        for i in range(n):
+            parts.append(self.words[self._next_word()])
+            if i + 1 < n and self.rng.next_f64() < spec.comma_prob:
+                parts.append(",")
+        return " ".join(parts).replace(" ,", ",") + "."
+
+    def text(self, n_chars: int) -> str:
+        out = []
+        count = 0
+        sent_in_par = 0
+        while count < n_chars:
+            s = self.sentence()
+            out.append(s)
+            count += len(s)
+            sent_in_par += 1
+            if sent_in_par == 5:
+                out.append("\n")
+                count += 1
+                sent_in_par = 0
+            else:
+                out.append(" ")
+                count += 1
+        return "".join(out)[:n_chars]
+
+
+_CHAR_TO_ID = {c: i for i, c in enumerate(CHARSET)}
+
+
+def tokenize(text: str) -> list[int]:
+    return [_CHAR_TO_ID[c] for c in text]
+
+
+def detokenize(ids) -> str:
+    return "".join(CHARSET[i] for i in ids)
+
+
+def token_stream(source: str, split: str, n_tokens: int) -> list[int]:
+    """Token ids for a (source, split). Train and test are disjoint streams:
+    test tokens are generated *after* skipping the train region."""
+    spec = SOURCES[source]
+    gen = CorpusGenerator(spec)
+    train_chars = 1 << 18  # 256 KiB of train text per source
+    if split == "train":
+        return tokenize(gen.text(n_tokens))
+    if split != "test":
+        raise ValueError(f"unknown split {split!r}")
+    _ = gen.text(train_chars)  # advance deterministically past train region
+    return tokenize(gen.text(n_tokens))
+
+
+def main() -> None:
+    import argparse
+    import struct
+
+    p = argparse.ArgumentParser(description="emit golden tokens for the rust twin test")
+    p.add_argument("--out", required=True)
+    p.add_argument("--n", type=int, default=4096)
+    args = p.parse_args()
+    with open(args.out, "wb") as f:
+        for source in ("wiki", "c4", "fineweb"):
+            for split in ("train", "test"):
+                toks = token_stream(source, split, args.n)
+                f.write(struct.pack(f"<{len(toks)}H", *toks))
+    print(f"wrote golden tokens for 3 sources x 2 splits x {args.n} to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,127 @@
+"""Hadamard matrix constructions in numpy (python twin of rust `hadamard::construct`).
+
+Orders supported:
+  * 1, 2 and powers of two — Sylvester doubling.
+  * q+1 for prime q ≡ 3 (mod 4)  — Paley construction I  (12, 20, 28*, 44, ...).
+  * 2(q+1) for prime q ≡ 1 (mod 4) — Paley construction II (28 via q=13, 76 via q=37).
+  * products — any order m = 2^k * m0 where m0 is Paley-constructible, via
+    Sylvester doubling of the base (e.g. 448 = 2^4 * 28, 768 = 2^6 * 12).
+
+All matrices returned are *unnormalized* (+1/-1); callers divide by sqrt(n)
+for the normalized rotation used in the paper.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def _is_prime(n: int) -> bool:
+    if n < 2:
+        return False
+    i = 2
+    while i * i <= n:
+        if n % i == 0:
+            return False
+        i += 1
+    return True
+
+
+def _jacobsthal(q: int) -> np.ndarray:
+    """Q[i, j] = chi(i - j) where chi is the quadratic-residue character mod q."""
+    chi = np.zeros(q, dtype=np.int64)
+    residues = set((x * x) % q for x in range(1, q))
+    for a in range(1, q):
+        chi[a] = 1 if a in residues else -1
+    idx = (np.arange(q)[:, None] - np.arange(q)[None, :]) % q
+    return chi[idx]
+
+
+def paley1(q: int) -> np.ndarray:
+    """Hadamard matrix of order q+1 for prime q ≡ 3 (mod 4)."""
+    assert _is_prime(q) and q % 4 == 3, f"paley1 needs prime q ≡ 3 mod 4, got {q}"
+    n = q + 1
+    Q = _jacobsthal(q)
+    S = np.zeros((n, n), dtype=np.int64)
+    S[0, 1:] = 1
+    S[1:, 0] = -1
+    S[1:, 1:] = Q
+    H = S + np.eye(n, dtype=np.int64)
+    return H
+
+
+def paley2(q: int) -> np.ndarray:
+    """Hadamard matrix of order 2(q+1) for prime q ≡ 1 (mod 4)."""
+    assert _is_prime(q) and q % 4 == 1, f"paley2 needs prime q ≡ 1 mod 4, got {q}"
+    m = q + 1
+    Q = _jacobsthal(q)
+    S = np.zeros((m, m), dtype=np.int64)
+    S[0, 1:] = 1
+    S[1:, 0] = 1
+    S[1:, 1:] = Q
+    # Substitute entries: diagonal zeros -> [[1,-1],[-1,-1]], ±1 -> ±[[1,1],[1,-1]].
+    # S has zeros exactly on its diagonal, so H = kron(S, A) + kron(I, B).
+    A = np.array([[1, 1], [1, -1]], dtype=np.int64)
+    B = np.array([[1, -1], [-1, -1]], dtype=np.int64)
+    return np.kron(S, A) + np.kron(np.eye(m, dtype=np.int64), B)
+
+
+def sylvester_double(H: np.ndarray, times: int) -> np.ndarray:
+    for _ in range(times):
+        H = np.block([[H, H], [H, -H]])
+    return H
+
+
+# Base (non-power-of-2) orders we can build directly, keyed by 4t.
+_PALEY1_BASES = {12: 11, 20: 19, 44: 43, 60: 59, 68: 67}
+_PALEY2_BASES = {28: 13, 76: 37, 52: 25}  # 52 would need q=25 (not prime) — excluded
+_PALEY2_BASES = {28: 13, 76: 37}
+
+
+def pow2_split(d: int) -> tuple[int, int]:
+    """Return (k, t) with d = k * t, k the power-of-2 part, t odd."""
+    k = 1
+    t = d
+    while t % 2 == 0:
+        t //= 2
+        k *= 2
+    return k, t
+
+
+def hadamard(n: int) -> np.ndarray:
+    """Unnormalized Hadamard matrix of order n, or raise ValueError."""
+    if n == 1:
+        return np.array([[1]], dtype=np.int64)
+    k, t = pow2_split(n)
+    if t == 1:
+        H = np.array([[1]], dtype=np.int64)
+        return sylvester_double(H, int(np.log2(n)))
+    # base order must be 4t and divide n
+    base = 4 * t
+    if n % base != 0:
+        raise ValueError(f"no Hadamard construction for order {n}")
+    doublings = int(np.log2(n // base))
+    if (base << doublings) != n:
+        raise ValueError(f"no Hadamard construction for order {n}")
+    if _is_prime(base - 1) and (base - 1) % 4 == 3:
+        Hb = paley1(base - 1)
+    elif base % 2 == 0 and _is_prime(base // 2 - 1) and (base // 2 - 1) % 4 == 1:
+        Hb = paley2(base // 2 - 1)
+    else:
+        raise ValueError(f"no Paley construction for base order {base}")
+    return sylvester_double(Hb, doublings)
+
+
+def normalized_hadamard(n: int) -> np.ndarray:
+    return hadamard(n).astype(np.float32) / np.sqrt(np.float32(n))
+
+
+def block_hadamard(d: int, b: int) -> np.ndarray:
+    """Normalized block-diagonal rotation I_{d/b} ⊗ H_b (dense, test use only)."""
+    assert d % b == 0
+    Hb = normalized_hadamard(b)
+    n = d // b
+    out = np.zeros((d, d), dtype=np.float32)
+    for j in range(n):
+        out[j * b : (j + 1) * b, j * b : (j + 1) * b] = Hb
+    return out

@@ -1,0 +1,68 @@
+"""Pallas block-Hadamard rotation kernel (L1).
+
+TPU mapping of the paper's online rotation R̃3 (see DESIGN.md §Hardware-
+Adaptation): instead of a warp-level butterfly (the CUDA fast-hadamard-
+transform the paper benchmarks), the block rotation is expressed as a
+batched (n, b) x (b, b) contraction that maps directly onto the MXU
+systolic array.  The BlockSpec grid tiles the token axis so each program
+instance holds one (T_TILE, b) activation tile plus the shared (b, b)
+Hadamard matrix in VMEM; the HBM<->VMEM schedule the paper realizes with
+threadblocks is expressed entirely by the index maps.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so kernels lower to plain HLO (see /opt/xla-example/README).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# One (T_TILE, b) tile + (b, b) matrix + (T_TILE, b) output in VMEM.
+# T_TILE = 16, b <= 1024: footprint <= 16*1024*4*2 + 1024*1024*4 ≈ 4.3 MiB at
+# the extreme full-vector case; <= 0.3 MiB for the practical b <= 128 regime.
+T_TILE = 16
+
+
+def _rot_kernel(x_ref, h_ref, o_ref):
+    # x tile: (T_TILE, b); h: (b, b).  MXU-shaped contraction.
+    o_ref[...] = jnp.dot(x_ref[...], h_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _block_rotate_2d(x: jnp.ndarray, hb: jnp.ndarray) -> jnp.ndarray:
+    t, d = x.shape
+    b = hb.shape[0]
+    assert d % b == 0, f"dim {d} not divisible by block {b}"
+    n = d // b
+    grid = (t // T_TILE, n)
+    return pl.pallas_call(
+        _rot_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((T_TILE, b), lambda i, j: (i, j)),
+            pl.BlockSpec((b, b), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((T_TILE, b), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        interpret=True,
+    )(x, hb)
+
+
+def block_rotate(x: jnp.ndarray, hb: jnp.ndarray) -> jnp.ndarray:
+    """Rotate the last axis of x by I ⊗ H_b.  Handles any leading shape and
+    token counts that are not multiples of T_TILE (via padding)."""
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    x2 = x.reshape((-1, d))
+    t = x2.shape[0]
+    pad = (-t) % T_TILE
+    if pad:
+        x2 = jnp.concatenate([x2, jnp.zeros((pad, d), x.dtype)], axis=0)
+    out = _block_rotate_2d(x2, hb)
+    if pad:
+        out = out[:t]
+    return out.reshape(lead + (d,))

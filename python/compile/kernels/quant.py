@@ -1,0 +1,101 @@
+"""Pallas fake-quantization kernels (L1): INT4 / FP4 / MXFP4, dynamic per-token.
+
+Each kernel holds a (T_TILE, d) activation tile in VMEM, computes the
+per-token (or per-MX-group) scale with a row reduction, and rounds in place —
+one HBM round trip per tile.  Formats are python-static (each traces to its
+own kernel); the runtime `fmt` dispatch lives at L2 (`model.act_quant`)
+where all three lowered kernels sit behind a `lax.switch`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+T_TILE = 16
+EPS = 1e-8
+FP4_MAX = 6.0
+
+
+def _e2m1(y):
+    a = jnp.abs(y)
+    q = jnp.where(a < 0.25, 0.0,
+        jnp.where(a < 0.75, 0.5,
+        jnp.where(a < 1.25, 1.0,
+        jnp.where(a < 1.75, 1.5,
+        jnp.where(a < 2.5, 2.0,
+        jnp.where(a < 3.5, 3.0,
+        jnp.where(a < 5.0, 4.0, 6.0)))))))
+    return jnp.sign(y) * q
+
+
+def _int4_kernel(x_ref, o_ref, *, bits: int):
+    x = x_ref[...]
+    levels = (1 << bits) - 1
+    mn = jnp.min(x, axis=-1, keepdims=True)
+    mx = jnp.max(x, axis=-1, keepdims=True)
+    s = jnp.maximum((mx - mn) / levels, EPS)
+    z = jnp.round(mn / s)
+    q = jnp.clip(jnp.round(x / s) - z, 0, levels)
+    o_ref[...] = s * (q + z)
+
+
+def _fp4_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    mx = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    s = jnp.maximum(mx / FP4_MAX, EPS)
+    o_ref[...] = s * _e2m1(x / s)
+
+
+def _mxfp4_kernel(x_ref, o_ref, *, group: int):
+    x = x_ref[...]
+    t, d = x.shape
+    xg = x.reshape(t, d // group, group)
+    mx = jnp.max(jnp.abs(xg), axis=-1, keepdims=True)
+    raw = jnp.maximum(mx / FP4_MAX, EPS)
+    s = jnp.exp2(jnp.floor(jnp.log2(raw)))
+    o_ref[...] = (s * _e2m1(xg / s)).reshape(t, d)
+
+
+def _rowwise_call(kernel, x2: jnp.ndarray) -> jnp.ndarray:
+    t, d = x2.shape
+    return pl.pallas_call(
+        kernel,
+        grid=(t // T_TILE,),
+        in_specs=[pl.BlockSpec((T_TILE, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((T_TILE, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), x2.dtype),
+        interpret=True,
+    )(x2)
+
+
+def _with_padding(fn, x: jnp.ndarray) -> jnp.ndarray:
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    x2 = x.reshape((-1, d))
+    t = x2.shape[0]
+    pad = (-t) % T_TILE
+    if pad:
+        x2 = jnp.concatenate([x2, jnp.zeros((pad, d), x.dtype)], axis=0)
+    out = fn(x2)
+    if pad:
+        out = out[:t]
+    return out.reshape(lead + (d,))
+
+
+def quant_int_asym(x: jnp.ndarray, bits: int = 4) -> jnp.ndarray:
+    k = functools.partial(_int4_kernel, bits=bits)
+    return _with_padding(lambda x2: _rowwise_call(k, x2), x)
+
+
+def quant_fp4(x: jnp.ndarray) -> jnp.ndarray:
+    return _with_padding(lambda x2: _rowwise_call(_fp4_kernel, x2), x)
+
+
+def quant_mxfp4(x: jnp.ndarray, group: int = 32) -> jnp.ndarray:
+    assert x.shape[-1] % group == 0
+    k = functools.partial(_mxfp4_kernel, group=group)
+    return _with_padding(lambda x2: _rowwise_call(k, x2), x)

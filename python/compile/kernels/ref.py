@@ -1,0 +1,113 @@
+"""Pure-jnp correctness oracles for every L1 pallas kernel.
+
+These are the ground truth the pallas kernels (and, transitively, the AOT
+artifacts the rust coordinator executes) are validated against in pytest.
+They also serve as the L2 building blocks for graph variants where the
+pallas path is not exercised (e.g. the capture graph).
+
+Quantizers follow Appendix B of the paper exactly:
+  * INT-q asymmetric dynamic per-token (activations), Eq. 4.
+  * FP4 (e2m1 per OCP): symmetric, per-token scale s = ||X||_inf / 6, Eq. 5.
+  * MXFP4: groups of 32, power-of-2 scales rounded down.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# e2m1 positive grid (OCP MX spec): 0, 0.5, 1, 1.5, 2, 3, 4, 6
+FP4_GRID = jnp.array([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0], dtype=jnp.float32)
+FP4_MAX = 6.0
+EPS = 1e-8
+
+
+def block_rotate(x: jnp.ndarray, hb: jnp.ndarray) -> jnp.ndarray:
+    """Apply the normalized block rotation I_{d/b} ⊗ H_b along the last axis.
+
+    x: (..., d), hb: (b, b) with d % b == 0.  Equivalent to x @ (I ⊗ H_b).
+    """
+    b = hb.shape[0]
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    xr = x.reshape(lead + (d // b, b))
+    return jnp.einsum("...nb,bc->...nc", xr, hb).reshape(lead + (d,))
+
+
+def quant_e2m1(y: jnp.ndarray) -> jnp.ndarray:
+    """Round-to-nearest onto the signed e2m1 grid (input assumed pre-scaled)."""
+    a = jnp.abs(y)
+    # Midpoint thresholds between grid levels: .25, .75, 1.25, 1.75, 2.5, 3.5, 5
+    q = jnp.where(a < 0.25, 0.0,
+        jnp.where(a < 0.75, 0.5,
+        jnp.where(a < 1.25, 1.0,
+        jnp.where(a < 1.75, 1.5,
+        jnp.where(a < 2.5, 2.0,
+        jnp.where(a < 3.5, 3.0,
+        jnp.where(a < 5.0, 4.0, 6.0)))))))
+    return jnp.sign(y) * q
+
+
+def quant_int_asym(x: jnp.ndarray, bits: int = 4) -> jnp.ndarray:
+    """Asymmetric dynamic per-token INT-q fake-quant (paper Eq. 4).
+
+    s = (max - min) / (2^q - 1), z = round(min / s); rows are the tokens.
+    """
+    levels = (1 << bits) - 1
+    mn = jnp.min(x, axis=-1, keepdims=True)
+    mx = jnp.max(x, axis=-1, keepdims=True)
+    s = jnp.maximum((mx - mn) / levels, EPS)
+    z = jnp.round(mn / s)
+    q = jnp.clip(jnp.round(x / s) - z, 0, levels)
+    return s * (q + z)
+
+
+def quant_fp4(x: jnp.ndarray) -> jnp.ndarray:
+    """Symmetric per-token FP4 fake-quant, s = ||X||_inf / 6 (paper Eq. 5)."""
+    mx = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    s = jnp.maximum(mx / FP4_MAX, EPS)
+    return s * quant_e2m1(x / s)
+
+
+def quant_mxfp4(x: jnp.ndarray, group: int = 32) -> jnp.ndarray:
+    """MXFP4: e2m1 with per-group-of-32 power-of-2 scales rounded down."""
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    assert d % group == 0, f"dim {d} not divisible by MX group {group}"
+    xg = x.reshape(lead + (d // group, group))
+    mx = jnp.max(jnp.abs(xg), axis=-1, keepdims=True)
+    raw = jnp.maximum(mx / FP4_MAX, EPS)
+    s = jnp.exp2(jnp.floor(jnp.log2(raw)))
+    out = s * quant_e2m1(xg / s)
+    return out.reshape(lead + (d,))
+
+
+def quant_int_sym_weight(w: jnp.ndarray, bits: int = 4,
+                         scale: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Symmetric per-channel weight INT-q fake-quant (z = 0); channel = out col.
+
+    When `scale` is None uses the absmax scale; the MSE-searched scale lives
+    in the rust `quant` module (offline path).
+    """
+    qmax = (1 << (bits - 1)) - 1
+    if scale is None:
+        scale = jnp.maximum(jnp.max(jnp.abs(w), axis=0, keepdims=True) / qmax, EPS)
+    q = jnp.clip(jnp.round(w / scale), -qmax - 1, qmax)
+    return scale * q
+
+
+def act_quant(x: jnp.ndarray, fmt: int) -> jnp.ndarray:
+    """Static-format dispatch used by oracles/tests (0 none, 1 INT4, 2 FP4, 3 MXFP4)."""
+    if fmt == 0:
+        return x
+    if fmt == 1:
+        return quant_int_asym(x, 4)
+    if fmt == 2:
+        return quant_fp4(x)
+    if fmt == 3:
+        return quant_mxfp4(x)
+    raise ValueError(f"unknown format {fmt}")
+
+
+def block_rotate_quant(x: jnp.ndarray, hb: jnp.ndarray, fmt: int) -> jnp.ndarray:
+    """Oracle for the fused R3 hot-path kernel: rotate then fake-quant."""
+    return act_quant(block_rotate(x, hb), fmt)

@@ -1,0 +1,275 @@
+"""L2: the transformer compute graph and its quantization-graph variants.
+
+Weights are *runtime inputs* (not constants) so the rust coordinator can
+feed transformed/quantized weights into the very same AOT artifact: PeRQ's
+merged permutations (P3) and merged rotations (R1, R2) never appear in the
+graph — exactly the paper's deployment story (Fig 7).  Only the things that
+must be online are in the graph:
+
+  * dynamic per-token activation fake-quant before every linear input,
+    behind a runtime `fmt` scalar (0 none, 1 INT4, 2 FP4, 3 MXFP4) via
+    `lax.switch` over the three lowered pallas kernels;
+  * the online block Hadamard rotation R̃3 at the down-projection input,
+    as the fused pallas rotate+quantize kernel with the (b, b) Hadamard
+    matrix fed as a runtime input (one artifact per block size; b=1 with
+    H=[[1]] degenerates to "no rotation", b=d_ffn to full-vector).
+
+Architecture (Llama-style, rotation-friendly): learned positional embedding,
+scale-only RMSNorm (so the residual rotation R1 commutes), multi-head causal
+attention, SwiGLU FFN.  No RoPE: per-head rotations R2 then merge exactly.
+
+Graph variants exported by aot.py:
+  fwd          — full-precision forward (BF16-analog baseline), logits only.
+  fwd_quant    — the Fig 7 merged graph described above.
+  fwd_online   — the Fig 9 graph: *online* block rotations also around the
+                 attention/FFN linears (inverse applied after), weights
+                 untransformed at those sites.
+  fwd_capture  — fwd that additionally returns the four per-layer linear
+                 input captures the rust calibrator needs (attn in, o in,
+                 ffn in, down in — all pre-transform, full precision).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused
+from .kernels import ref
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ffn: int
+    vocab: int = 32
+    seq_len: int = 128
+    # block sizes for which quant-graph artifacts are exported
+    block_sizes: tuple = field(default_factory=tuple)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# The three model configs (DESIGN.md §6): Llama3-1B / Llama3-8B(non-pow-2 FFN)
+# / Qwen3 analogs.
+CONFIGS = {
+    "llama_tiny": ModelConfig("llama_tiny", 4, 256, 8, 1024,
+                              block_sizes=(1, 16, 32, 64, 128, 256, 512, 1024)),
+    "llama_np2": ModelConfig("llama_np2", 2, 128, 4, 448,
+                             block_sizes=(1, 16, 32, 64, 448)),
+    "qwen_tiny": ModelConfig("qwen_tiny", 3, 192, 6, 768,
+                             block_sizes=(1, 16, 32, 64, 128, 256, 768)),
+}
+
+
+def weight_names(cfg: ModelConfig) -> list[str]:
+    """Canonical weight ordering — the input contract shared with rust
+    (serialized into artifacts/<model>/meta.json)."""
+    names = ["embed", "pos"]
+    for i in range(cfg.n_layers):
+        names += [
+            f"l{i}.n1", f"l{i}.wq", f"l{i}.wk", f"l{i}.wv", f"l{i}.wo",
+            f"l{i}.n2", f"l{i}.wg", f"l{i}.wu", f"l{i}.wd",
+        ]
+    names += ["nf", "wout"]
+    return names
+
+
+def weight_shapes(cfg: ModelConfig) -> dict[str, tuple]:
+    d, f, v, t = cfg.d_model, cfg.d_ffn, cfg.vocab, cfg.seq_len
+    shapes = {"embed": (v, d), "pos": (t, d)}
+    for i in range(cfg.n_layers):
+        shapes[f"l{i}.n1"] = (d,)
+        shapes[f"l{i}.wq"] = (d, d)
+        shapes[f"l{i}.wk"] = (d, d)
+        shapes[f"l{i}.wv"] = (d, d)
+        shapes[f"l{i}.wo"] = (d, d)
+        shapes[f"l{i}.n2"] = (d,)
+        shapes[f"l{i}.wg"] = (d, f)
+        shapes[f"l{i}.wu"] = (d, f)
+        shapes[f"l{i}.wd"] = (f, d)
+    shapes["nf"] = (d,)
+    shapes["wout"] = (d, v)
+    return shapes
+
+
+def init_weights(cfg: ModelConfig, key) -> dict[str, jnp.ndarray]:
+    shapes = weight_shapes(cfg)
+    ws = {}
+    for name, shape in shapes.items():
+        key, sub = jax.random.split(key)
+        if name.endswith(("n1", "n2")) or name == "nf":
+            ws[name] = jnp.ones(shape, jnp.float32)
+        elif len(shape) == 2:
+            fan_in = shape[0]
+            ws[name] = (jax.random.normal(sub, shape, jnp.float32)
+                        * (1.0 / jnp.sqrt(fan_in)))
+        else:
+            ws[name] = jnp.zeros(shape, jnp.float32)
+    return ws
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * scale
+
+
+def swish(x: jnp.ndarray) -> jnp.ndarray:
+    return x * jax.nn.sigmoid(x)
+
+
+def causal_attention(q, k, v, n_heads: int):
+    """q, k, v: (B, T, d) -> (B, T, d); standard multi-head causal SDPA."""
+    bsz, t, d = q.shape
+    hd = d // n_heads
+
+    def split(x):
+        return x.reshape(bsz, t, n_heads, hd).transpose(0, 2, 1, 3)
+
+    qh, kh, vh = split(q), split(k), split(v)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, vh)
+    return ctx.transpose(0, 2, 1, 3).reshape(bsz, t, d)
+
+
+def act_quant(x: jnp.ndarray, fmt: jnp.ndarray) -> jnp.ndarray:
+    """Runtime-format activation fake-quant (jnp ops; fuses into the HLO).
+
+    MXFP4 requires d % 32 == 0 — true for every activation site in our
+    configs (d_model ∈ {128,192,256}, d_ffn ∈ {448,768,1024}).
+    """
+    return jax.lax.switch(
+        jnp.clip(fmt, 0, 3),
+        [lambda y: y, ref.quant_int_asym, ref.quant_fp4, ref.quant_mxfp4],
+        x,
+    )
+
+
+def _layer_fp(ws, i: int, x, n_heads: int):
+    """Full-precision transformer layer, returning capture points."""
+    h = rmsnorm(x, ws[f"l{i}.n1"])
+    q, k, v = h @ ws[f"l{i}.wq"], h @ ws[f"l{i}.wk"], h @ ws[f"l{i}.wv"]
+    ctx = causal_attention(q, k, v, n_heads)
+    x = x + ctx @ ws[f"l{i}.wo"]
+    h2 = rmsnorm(x, ws[f"l{i}.n2"])
+    g = swish(h2 @ ws[f"l{i}.wg"]) * (h2 @ ws[f"l{i}.wu"])
+    x = x + g @ ws[f"l{i}.wd"]
+    return x, (h, ctx, h2, g)
+
+
+def fwd(ws: dict, tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Full-precision forward.  tokens: (B, T) int32 -> logits (B, T, V)."""
+    x = ws["embed"][tokens] + ws["pos"][None, : tokens.shape[1]]
+    for i in range(cfg.n_layers):
+        x, _ = _layer_fp(ws, i, x, cfg.n_heads)
+    return rmsnorm(x, ws["nf"]) @ ws["wout"]
+
+
+def fwd_capture(ws: dict, tokens: jnp.ndarray, cfg: ModelConfig):
+    """Forward + per-layer linear-input captures for the rust calibrator."""
+    x = ws["embed"][tokens] + ws["pos"][None, : tokens.shape[1]]
+    caps = []
+    for i in range(cfg.n_layers):
+        x, cap = _layer_fp(ws, i, x, cfg.n_heads)
+        caps.append(cap)
+    logits = rmsnorm(x, ws["nf"]) @ ws["wout"]
+    # Stack per kind: (L, B, T, d) x3 + (L, B, T, f)
+    attn_in = jnp.stack([c[0] for c in caps])
+    o_in = jnp.stack([c[1] for c in caps])
+    ffn_in = jnp.stack([c[2] for c in caps])
+    down_in = jnp.stack([c[3] for c in caps])
+    return logits, attn_in, o_in, ffn_in, down_in
+
+
+def fwd_quant(ws: dict, tokens: jnp.ndarray, hb: jnp.ndarray,
+              fmt: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """The Fig 7 merged quantization graph.
+
+    P3/R1/R2 are already folded into `ws` by the rust transform engine;
+    the graph only performs what must be online: activation fake-quant and
+    the fused R̃3 rotate+quant pallas kernel before the down projection.
+    The three pallas quant formats sit behind `lax.switch` on `fmt`.
+    """
+    x = ws["embed"][tokens] + ws["pos"][None, : tokens.shape[1]]
+    for i in range(cfg.n_layers):
+        h = rmsnorm(x, ws[f"l{i}.n1"])
+        hq = act_quant(h, fmt)
+        q, k, v = hq @ ws[f"l{i}.wq"], hq @ ws[f"l{i}.wk"], hq @ ws[f"l{i}.wv"]
+        ctx = causal_attention(q, k, v, cfg.n_heads)
+        ctxq = act_quant(ctx, fmt)
+        x = x + ctxq @ ws[f"l{i}.wo"]
+        h2 = rmsnorm(x, ws[f"l{i}.n2"])
+        h2q = act_quant(h2, fmt)
+        g = swish(h2q @ ws[f"l{i}.wg"]) * (h2q @ ws[f"l{i}.wu"])
+        # R3 hot path: fused online block rotation + quant (pallas), with the
+        # runtime fmt dispatched across the four statically-traced kernels.
+        gq = jax.lax.switch(
+            jnp.clip(fmt, 0, 3),
+            [lambda y, h=hb, f=f: fused.block_rotate_quant(y, h, f)
+             for f in range(4)],
+            g,
+        )
+        x = x + gq @ ws[f"l{i}.wd"]
+    return rmsnorm(x, ws["nf"]) @ ws["wout"]
+
+
+def fwd_online(ws: dict, tokens: jnp.ndarray, hb_d: jnp.ndarray,
+               hb_f: jnp.ndarray, fmt: jnp.ndarray,
+               cfg: ModelConfig) -> jnp.ndarray:
+    """The Fig 9 fully-online graph (Table 11 ablation).
+
+    Block rotations are applied online around every linear: the activation
+    is rotated+quantized on the way in and the rotation is undone by the
+    (offline) inverse-rotated weights — here modeled faithfully by rotating
+    the weight in-graph, since weights stay runtime inputs.  hb_d rotates
+    d_model-sized inputs, hb_f rotates d_ffn-sized inputs.
+    """
+
+    def rotq(y, hb):
+        return jax.lax.switch(
+            jnp.clip(fmt, 0, 3),
+            [lambda z, h=hb, f=f: fused.block_rotate_quant(z, h, f)
+             for f in range(4)],
+            y,
+        )
+
+    def rot_w_in(w, hb):
+        # rows of w live in the rotated activation space: w' = (I ⊗ H)^T w
+        return ref.block_rotate(w.T, hb).T
+
+    x = ws["embed"][tokens] + ws["pos"][None, : tokens.shape[1]]
+    for i in range(cfg.n_layers):
+        h = rmsnorm(x, ws[f"l{i}.n1"])
+        hq = rotq(h, hb_d)
+        q = hq @ rot_w_in(ws[f"l{i}.wq"], hb_d)
+        k = hq @ rot_w_in(ws[f"l{i}.wk"], hb_d)
+        v = hq @ rot_w_in(ws[f"l{i}.wv"], hb_d)
+        ctx = causal_attention(q, k, v, cfg.n_heads)
+        ctxq = rotq(ctx, hb_d)
+        x = x + ctxq @ rot_w_in(ws[f"l{i}.wo"], hb_d)
+        h2 = rmsnorm(x, ws[f"l{i}.n2"])
+        h2q = rotq(h2, hb_d)
+        g = (swish(h2q @ rot_w_in(ws[f"l{i}.wg"], hb_d))
+             * (h2q @ rot_w_in(ws[f"l{i}.wu"], hb_d)))
+        gq = rotq(g, hb_f)
+        x = x + gq @ rot_w_in(ws[f"l{i}.wd"], hb_f)
+    return rmsnorm(x, ws["nf"]) @ ws["wout"]
+
+
+def loss_fn(ws: dict, tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Next-token cross-entropy (mean nats/token) for training + eval."""
+    logits = fwd(ws, tokens, cfg)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)

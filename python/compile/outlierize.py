@@ -1,0 +1,76 @@
+"""Inject function-preserving activation outliers (DESIGN.md §3).
+
+Real LLMs develop large per-channel activation outliers at the
+down-projection input — the phenomenon the paper's entire analysis targets
+(Fig 1). Tiny models trained for a few hundred steps do not, so quantizing
+them is too easy for any method ordering to be visible.
+
+This post-processing step reproduces the phenomenon exactly, without
+changing the model's function: for channel c of the SwiGLU output,
+
+    g_c = swish(x·wg_c) * (x·wu_c),
+
+scaling wu's column c by s and wd's row c by 1/s multiplies g_c by s while
+leaving the layer output bit-identical in exact arithmetic. We draw a
+heavy-tailed channel-scale profile (a few channels at 8-32x, a band at
+2-6x, the rest at 1x — qualitatively matching published Llama activation
+histograms) with deterministic per-layer seeds. The result: genuine
+outlier channels in the down-projection input, the exact code path the
+paper's permutations + block rotations act on.
+
+Run once by `make artifacts` after training, before rotopt/aot.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import numpy as np
+
+from .model import CONFIGS, ModelConfig
+
+BIG_FRAC = 0.05      # fraction of channels at 8-48x
+MID_FRAC = 0.10      # fraction of channels at 2-8x
+
+
+def channel_scales(d_ffn: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    scales = np.ones(d_ffn, dtype=np.float32)
+    idx = rng.permutation(d_ffn)
+    n_big = max(1, int(BIG_FRAC * d_ffn))
+    n_mid = max(1, int(MID_FRAC * d_ffn))
+    scales[idx[:n_big]] = rng.uniform(8.0, 48.0, n_big)
+    scales[idx[n_big:n_big + n_mid]] = rng.uniform(2.0, 8.0, n_mid)
+    return scales
+
+
+def outlierize_model(cfg: ModelConfig, wdir: str, seed: int = 0xA11) -> None:
+    marker = os.path.join(wdir, ".outlierized")
+    if os.path.exists(marker):
+        print(f"  [{cfg.name}] already outlierized; skipping")
+        return
+    for layer in range(cfg.n_layers):
+        s = channel_scales(cfg.d_ffn, seed + 31 * layer)
+        wu_path = os.path.join(wdir, f"l{layer}.wu.npy")
+        wd_path = os.path.join(wdir, f"l{layer}.wd.npy")
+        wu = np.load(wu_path)
+        wd = np.load(wd_path)
+        np.save(wu_path, (wu * s[None, :]).astype(np.float32))
+        np.save(wd_path, (wd / s[:, None]).astype(np.float32))
+        print(f"  [{cfg.name}] layer {layer}: max channel scale {s.max():.1f}x")
+    with open(marker, "w") as f:
+        f.write("outlier channel scales applied\n")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--weights", default="../artifacts/weights")
+    p.add_argument("--models", default="llama_tiny,llama_np2,qwen_tiny")
+    args = p.parse_args()
+    for name in args.models.split(","):
+        outlierize_model(CONFIGS[name], os.path.join(args.weights, name))
+
+
+if __name__ == "__main__":
+    main()

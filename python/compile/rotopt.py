@@ -1,0 +1,137 @@
+"""Build-time rotation refinement — the "learned rotations" arm (PeRQ†, BRQ-Spin).
+
+SpinQuant learns full-vector rotations R1/R2 with Cayley SGD against the
+end-to-end quantized loss.  Per DESIGN.md §3 we substitute a gradient-free
+Givens hill-climb (cheap on CPU, no STE machinery) with the same role in the
+pipeline: starting from the Hadamard seed, apply random Givens rotations and
+keep those that reduce the calibration objective
+
+    J(R) = Σ_tokens ||X R||_inf   +   Σ_linears ||W' - Q(W')||_F² / |W'|
+
+i.e. exactly the outlier-suppression-plus-weight-rounding proxy the paper's
+theory says governs quantization error.  Outputs land next to the trained
+weights and are consumed by the rust transform engine:
+
+    rotopt_r1.npy        — learned full-vector R1 (d_model × d_model)
+    rotopt_r1_b32.npy    — learned 32×32 block rotation (BRQ-Spin arm)
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import numpy as np
+
+from . import corpus
+from .hadamard_np import normalized_hadamard
+from .model import CONFIGS, ModelConfig, weight_names
+
+
+def load_weights(cfg: ModelConfig, wdir: str) -> dict[str, np.ndarray]:
+    return {n: np.load(os.path.join(wdir, n + ".npy")) for n in weight_names(cfg)}
+
+
+def residual_activations(cfg: ModelConfig, ws: dict, n_tokens: int) -> np.ndarray:
+    """Pre-norm residual-stream activations at every layer input — the site
+    R1 rotates.  Computed with the numpy forward (build path only)."""
+    import jax.numpy as jnp
+
+    from .model import fwd_capture
+
+    toks = np.array(corpus.token_stream("wiki", "train", n_tokens),
+                    dtype=np.int32)
+    t = cfg.seq_len
+    n = (len(toks) // t) * t
+    tokens = toks[:n].reshape(-1, t)
+    wj = {k: jnp.array(v) for k, v in ws.items()}
+    _, attn_in, _, ffn_in, _ = fwd_capture(wj, jnp.array(tokens), cfg)
+    acts = np.concatenate(
+        [np.asarray(attn_in).reshape(-1, cfg.d_model),
+         np.asarray(ffn_in).reshape(-1, cfg.d_model)], axis=0)
+    return acts
+
+
+def quant_mse_int4(w: np.ndarray) -> float:
+    qmax = 7
+    s = np.maximum(np.abs(w).max(axis=0, keepdims=True) / qmax, 1e-8)
+    q = np.clip(np.round(w / s), -8, qmax)
+    return float(np.mean((w - s * q) ** 2))
+
+
+def objective(r: np.ndarray, acts: np.ndarray, mats: list[np.ndarray]) -> float:
+    xr = acts @ r
+    out = float(np.abs(xr).max(axis=1).mean())
+    wq = sum(quant_mse_int4(r.T @ w) for w in mats) / max(len(mats), 1)
+    return out + wq
+
+
+def givens_hillclimb(r0: np.ndarray, acts: np.ndarray, mats: list[np.ndarray],
+                     iters: int, seed: int = 0) -> np.ndarray:
+    """Greedy refinement: propose a random Givens rotation G(i, j, θ),
+    accept R <- R G if the objective improves."""
+    rng = np.random.default_rng(seed)
+    d = r0.shape[0]
+    r = r0.copy()
+    best = objective(r, acts, mats)
+    accepted = 0
+    for it in range(iters):
+        i, j = rng.choice(d, size=2, replace=False)
+        theta = rng.normal() * (0.3 * (1.0 - it / iters) + 0.02)
+        c, s = np.cos(theta), np.sin(theta)
+        cand = r.copy()
+        ci, cj = r[:, i].copy(), r[:, j].copy()
+        cand[:, i] = c * ci + s * cj
+        cand[:, j] = -s * ci + c * cj
+        val = objective(cand, acts, mats)
+        if val < best:
+            r, best = cand, val
+            accepted += 1
+    print(f"    givens: {accepted}/{iters} accepted, objective {best:.5f}")
+    return r
+
+
+def refine(cfg: ModelConfig, wdir: str, iters: int, block: int) -> None:
+    ws = load_weights(cfg, wdir)
+    acts = residual_activations(cfg, ws, 16 * cfg.seq_len)
+    mats = []
+    for i in range(cfg.n_layers):
+        for nm in ("wq", "wk", "wv", "wg", "wu"):
+            mats.append(ws[f"l{i}.{nm}"])
+    # Full-vector R1 (PeRQ† arm)
+    h = normalized_hadamard(cfg.d_model).astype(np.float64)
+    base = objective(h, acts, mats)
+    r1 = givens_hillclimb(h, acts.astype(np.float64),
+                          [m.astype(np.float64) for m in mats], iters)
+    print(f"    [{cfg.name}] R1 objective: hadamard {base:.5f} -> learned "
+          f"{objective(r1, acts, mats):.5f}")
+    np.save(os.path.join(wdir, "rotopt_r1.npy"), r1.astype(np.float32))
+    # Block rotation (BRQ-Spin arm): learn a b×b rotation against the
+    # blocked view of the same activations.
+    hb = normalized_hadamard(block).astype(np.float64)
+    acts_b = acts.reshape(-1, block)
+    # subsample for speed
+    idx = np.random.default_rng(1).choice(len(acts_b),
+                                          size=min(len(acts_b), 8192),
+                                          replace=False)
+    rb = givens_hillclimb(hb, acts_b[idx].astype(np.float64), [], iters)
+    np.save(os.path.join(wdir, f"rotopt_r1_b{block}.npy"), rb.astype(np.float32))
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--weights", default="../artifacts/weights")
+    p.add_argument("--iters", type=int, default=600)
+    p.add_argument("--block", type=int, default=32)
+    p.add_argument("--models", default="llama_tiny,llama_np2,qwen_tiny")
+    args = p.parse_args()
+    for name in args.models.split(","):
+        t0 = time.time()
+        refine(CONFIGS[name], os.path.join(args.weights, name),
+               args.iters, args.block)
+        print(f"  [{name}] rotopt done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Build-time training of the tiny substitute models (DESIGN.md §3).
+
+The paper quantizes pre-trained HF checkpoints; we have none, so each model
+config is trained here for a few hundred adam steps on the synthetic corpus
+('wiki' source, train split) until it has genuinely learned the corpus
+statistics (loss well below the unigram entropy).  Runs once under
+`make artifacts`; weights land in artifacts/weights/<model>/*.npy, which the
+rust weight store reads directly.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus
+from .model import CONFIGS, ModelConfig, init_weights, loss_fn, weight_names
+
+
+def batches(cfg: ModelConfig, n_steps: int, batch: int, seed: int = 7):
+    toks = np.array(corpus.token_stream("wiki", "train", 1 << 20), dtype=np.int32)
+    rng = np.random.default_rng(seed)
+    n = len(toks) - cfg.seq_len - 1
+    for _ in range(n_steps):
+        starts = rng.integers(0, n, size=batch)
+        yield np.stack([toks[s : s + cfg.seq_len] for s in starts])
+
+
+def adam_init(ws):
+    zeros = {k: jnp.zeros_like(v) for k, v in ws.items()}
+    return zeros, {k: jnp.zeros_like(v) for k, v in ws.items()}
+
+
+def train_model(cfg: ModelConfig, steps: int, batch: int, lr: float,
+                out_dir: str) -> float:
+    key = jax.random.PRNGKey(42)
+    ws = init_weights(cfg, key)
+    m, v = adam_init(ws)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    @jax.jit
+    def step(ws, m, v, tokens, t):
+        loss, grads = jax.value_and_grad(lambda w: loss_fn(w, tokens, cfg))(ws)
+        warm = jnp.minimum(1.0, t / 50.0)
+        decay = 0.5 * (1 + jnp.cos(jnp.pi * jnp.minimum(t / steps, 1.0)))
+        sched = lr * warm * (0.1 + 0.9 * decay)
+        new_ws, new_m, new_v = {}, {}, {}
+        for k in ws:
+            g = grads[k]
+            new_m[k] = b1 * m[k] + (1 - b1) * g
+            new_v[k] = b2 * v[k] + (1 - b2) * g * g
+            mhat = new_m[k] / (1 - b1 ** (t + 1))
+            vhat = new_v[k] / (1 - b2 ** (t + 1))
+            new_ws[k] = ws[k] - sched * mhat / (jnp.sqrt(vhat) + eps)
+        return new_ws, new_m, new_v, loss
+
+    t0 = time.time()
+    loss = float("nan")
+    for i, tok in enumerate(batches(cfg, steps, batch)):
+        ws, m, v, loss = step(ws, m, v, jnp.array(tok), jnp.float32(i))
+        if i % 50 == 0 or i == steps - 1:
+            print(f"  [{cfg.name}] step {i:4d} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.1f}s)")
+    os.makedirs(out_dir, exist_ok=True)
+    for name in weight_names(cfg):
+        np.save(os.path.join(out_dir, name + ".npy"),
+                np.asarray(ws[name], dtype=np.float32))
+    print(f"  [{cfg.name}] final loss {float(loss):.4f} -> {out_dir}")
+    return float(loss)
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--out", default="../artifacts/weights")
+    p.add_argument("--steps", type=int, default=500)
+    p.add_argument("--batch", type=int, default=16)
+    p.add_argument("--lr", type=float, default=3e-3)
+    p.add_argument("--models", default="llama_tiny,llama_np2,qwen_tiny")
+    args = p.parse_args()
+    for name in args.models.split(","):
+        cfg = CONFIGS[name]
+        train_model(cfg, args.steps, args.batch, args.lr,
+                    os.path.join(args.out, name))
+
+
+if __name__ == "__main__":
+    main()

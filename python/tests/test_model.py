@@ -1,0 +1,216 @@
+"""L2 graph correctness: shapes, merged-transform invariances (the PeRQ
+deployment contract), and quant-graph behavior.
+
+The merge tests mirror exactly what the rust transform engine
+(`model::transform`) does to the weights; if these invariances hold here,
+the rust-side merges feeding the same artifacts are mathematically sound.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.hadamard_np import normalized_hadamard
+from compile.model import (CONFIGS, causal_attention, fwd, fwd_capture,
+                           fwd_online, fwd_quant, init_weights, rmsnorm,
+                           weight_names, weight_shapes)
+
+CFG = CONFIGS["llama_np2"]  # smallest config for speed
+
+
+@pytest.fixture(scope="module")
+def ws():
+    return init_weights(CFG, jax.random.PRNGKey(3))
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    rng = np.random.default_rng(0)
+    return jnp.array(rng.integers(0, CFG.vocab, (2, CFG.seq_len)),
+                     dtype=jnp.int32)
+
+
+def test_weight_contract(ws):
+    names = weight_names(CFG)
+    shapes = weight_shapes(CFG)
+    assert len(names) == 2 + 9 * CFG.n_layers + 2
+    for n in names:
+        assert ws[n].shape == tuple(shapes[n])
+
+
+def test_fwd_shapes(ws, tokens):
+    logits = fwd(ws, tokens, CFG)
+    assert logits.shape == (2, CFG.seq_len, CFG.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_capture_shapes(ws, tokens):
+    logits, attn_in, o_in, ffn_in, down_in = fwd_capture(ws, tokens, CFG)
+    L, B, T, d, f = CFG.n_layers, 2, CFG.seq_len, CFG.d_model, CFG.d_ffn
+    assert attn_in.shape == (L, B, T, d)
+    assert o_in.shape == (L, B, T, d)
+    assert ffn_in.shape == (L, B, T, d)
+    assert down_in.shape == (L, B, T, f)
+    assert_allclose(np.array(logits), np.array(fwd(ws, tokens, CFG)),
+                    atol=1e-5)
+
+
+def test_quant_graph_fmt0_b1_equals_fp(ws, tokens):
+    h1 = jnp.array([[1.0]], jnp.float32)
+    lq = fwd_quant(ws, tokens, h1, jnp.int32(0), CFG)
+    assert_allclose(np.array(lq), np.array(fwd(ws, tokens, CFG)), atol=1e-5)
+
+
+def test_quant_graph_fmt0_rotation_invariant(ws, tokens):
+    """At fmt=0 the online rotation changes g but wd ← R̃ᵀ wd undoes it."""
+    hb = jnp.array(normalized_hadamard(32))
+    ws2 = dict(ws)
+    for i in range(CFG.n_layers):
+        wd = np.array(ws[f"l{i}.wd"])
+        f = CFG.d_ffn
+        rot = np.zeros((f, f), np.float32)
+        b = 32
+        for j in range(f // b):
+            rot[j * b:(j + 1) * b, j * b:(j + 1) * b] = np.array(hb)
+        ws2[f"l{i}.wd"] = jnp.array(rot.T @ wd)
+    lq = fwd_quant(ws2, tokens, hb, jnp.int32(0), CFG)
+    assert_allclose(np.array(lq), np.array(fwd(ws, tokens, CFG)), atol=1e-4)
+
+
+def _merge_p3(ws, perm):
+    """Fold the P3 permutation into wg/wu (out cols) and wd (in rows) —
+    mirror of rust model::transform::merge_p3."""
+    out = dict(ws)
+    for i in range(CFG.n_layers):
+        out[f"l{i}.wg"] = ws[f"l{i}.wg"][:, perm]
+        out[f"l{i}.wu"] = ws[f"l{i}.wu"][:, perm]
+        out[f"l{i}.wd"] = ws[f"l{i}.wd"][perm, :]
+    return out
+
+
+def test_p3_permutation_equivariance(ws, tokens):
+    """Definition 4.1 / Remark 4.2: the SwiGLU region is permutation-
+    equivariant, so merging P into (wg, wu, wd) leaves the function
+    unchanged (fmt=0, identity rotation)."""
+    rng = np.random.default_rng(5)
+    perm = rng.permutation(CFG.d_ffn)
+    h1 = jnp.array([[1.0]], jnp.float32)
+    base = fwd_quant(ws, tokens, h1, jnp.int32(0), CFG)
+    merged = fwd_quant(_merge_p3(ws, perm), tokens, h1, jnp.int32(0), CFG)
+    assert_allclose(np.array(merged), np.array(base), atol=1e-4)
+
+
+def test_p3_not_equivariant_under_rotation_mismatch(ws, tokens):
+    """Sanity: with a non-identity block rotation, permuting (wg, wu) without
+    fixing wd must change the output — guards against tests passing
+    vacuously."""
+    hb = jnp.array(normalized_hadamard(16))
+    rng = np.random.default_rng(6)
+    perm = rng.permutation(CFG.d_ffn)
+    ws2 = dict(ws)
+    for i in range(CFG.n_layers):
+        ws2[f"l{i}.wg"] = ws[f"l{i}.wg"][:, perm]
+        ws2[f"l{i}.wu"] = ws[f"l{i}.wu"][:, perm]
+    a = fwd_quant(ws, tokens, hb, jnp.int32(0), CFG)
+    b = fwd_quant(ws2, tokens, hb, jnp.int32(0), CFG)
+    assert float(jnp.abs(a - b).max()) > 1e-3
+
+
+def _merge_r1(ws, r1):
+    """QuaRot-style residual rotation merge (mirror of rust merge_r1):
+    fold norm scales into the adjacent linears, then rotate."""
+    out = dict(ws)
+    r = np.array(r1)
+    out["embed"] = jnp.array(np.array(ws["embed"]) @ r)
+    out["pos"] = jnp.array(np.array(ws["pos"]) @ r)
+    for i in range(CFG.n_layers):
+        s1 = np.array(ws[f"l{i}.n1"])
+        s2 = np.array(ws[f"l{i}.n2"])
+        for nm in ("wq", "wk", "wv"):
+            out[f"l{i}.{nm}"] = jnp.array(r.T @ (s1[:, None] * np.array(ws[f"l{i}.{nm}"])))
+        out[f"l{i}.n1"] = jnp.ones_like(ws[f"l{i}.n1"])
+        for nm in ("wg", "wu"):
+            out[f"l{i}.{nm}"] = jnp.array(r.T @ (s2[:, None] * np.array(ws[f"l{i}.{nm}"])))
+        out[f"l{i}.n2"] = jnp.ones_like(ws[f"l{i}.n2"])
+        out[f"l{i}.wo"] = jnp.array(np.array(ws[f"l{i}.wo"]) @ r)
+        out[f"l{i}.wd"] = jnp.array(np.array(ws[f"l{i}.wd"]) @ r)
+    sf = np.array(ws["nf"])
+    out["wout"] = jnp.array(r.T @ (sf[:, None] * np.array(ws["wout"])))
+    out["nf"] = jnp.ones_like(ws["nf"])
+    return out
+
+
+def test_r1_rotation_invariance(ws, tokens):
+    """Merging the residual rotation R1 into the weights leaves the
+    full-precision function unchanged (rotation commutes with scale-only
+    RMSNorm)."""
+    r1 = normalized_hadamard(CFG.d_model)
+    merged = _merge_r1(ws, r1)
+    assert_allclose(np.array(fwd(merged, tokens, CFG)),
+                    np.array(fwd(ws, tokens, CFG)), atol=2e-3)
+
+
+def _merge_r2(ws, r2):
+    """Per-head v→o rotation merge (mirror of rust merge_r2)."""
+    out = dict(ws)
+    hd = CFG.head_dim
+    blk = np.zeros((CFG.d_model, CFG.d_model), np.float32)
+    for h in range(CFG.n_heads):
+        blk[h * hd:(h + 1) * hd, h * hd:(h + 1) * hd] = r2
+    for i in range(CFG.n_layers):
+        out[f"l{i}.wv"] = jnp.array(np.array(ws[f"l{i}.wv"]) @ blk)
+        out[f"l{i}.wo"] = jnp.array(blk.T @ np.array(ws[f"l{i}.wo"]))
+    return out
+
+
+def test_r2_rotation_invariance(ws, tokens):
+    r2 = normalized_hadamard(CFG.head_dim)
+    merged = _merge_r2(ws, r2)
+    assert_allclose(np.array(fwd(merged, tokens, CFG)),
+                    np.array(fwd(ws, tokens, CFG)), atol=1e-4)
+
+
+def test_causal_attention_is_causal():
+    rng = np.random.default_rng(7)
+    q = jnp.array(rng.standard_normal((1, 8, 32)), jnp.float32)
+    k = jnp.array(rng.standard_normal((1, 8, 32)), jnp.float32)
+    v = jnp.array(rng.standard_normal((1, 8, 32)), jnp.float32)
+    base = causal_attention(q, k, v, 4)
+    # perturbing position 5 must not change outputs at positions < 5
+    k2 = k.at[0, 5].add(10.0)
+    v2 = v.at[0, 5].add(10.0)
+    out = causal_attention(q, k2, v2, 4)
+    assert_allclose(np.array(out[0, :5]), np.array(base[0, :5]), atol=1e-5)
+    assert float(jnp.abs(out[0, 5:] - base[0, 5:]).max()) > 1e-3
+
+
+def test_rmsnorm_rotation_commutes():
+    rng = np.random.default_rng(8)
+    x = jnp.array(rng.standard_normal((10, 64)), jnp.float32)
+    r = jnp.array(normalized_hadamard(64))
+    ones = jnp.ones(64)
+    a = rmsnorm(x @ r, ones)
+    b = rmsnorm(x, ones) @ r
+    assert_allclose(np.array(a), np.array(b), atol=1e-5)
+
+
+def test_quant_formats_ordering(ws, tokens):
+    """INT4-quantized logits differ from fp; MXFP4 (group scaling) is closer
+    to fp than plain FP4 on average — the paper's 'MX formats inherently
+    mitigate outliers' observation."""
+    hb = jnp.array(normalized_hadamard(32))
+    lf = fwd(ws, tokens, CFG)
+    errs = {}
+    for fmt in (1, 2, 3):
+        lq = fwd_quant(ws, tokens, hb, jnp.int32(fmt), CFG)
+        errs[fmt] = float(jnp.mean((lq - lf) ** 2))
+    assert errs[1] > 0 and errs[2] > 0
+    assert errs[3] < errs[2]
+
+
+def test_online_graph_fmt0_equals_fp(ws, tokens):
+    hb = jnp.array(normalized_hadamard(32))
+    lq = fwd_online(ws, tokens, hb, hb, jnp.int32(0), CFG)
+    assert_allclose(np.array(lq), np.array(fwd(ws, tokens, CFG)), atol=1e-3)

@@ -1,0 +1,62 @@
+"""Outlier injection (DESIGN.md §3): exact function preservation + profile."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.model import CONFIGS, fwd, init_weights
+from compile.outlierize import BIG_FRAC, MID_FRAC, channel_scales
+
+CFG = CONFIGS["llama_np2"]
+
+
+def test_channel_scales_profile():
+    s = channel_scales(448, 7)
+    assert s.shape == (448,)
+    assert (s >= 1.0 - 1e-6).all()
+    n_big = (s >= 8.0).sum()
+    n_mid = ((s >= 2.0) & (s < 8.0)).sum()
+    assert n_big == max(1, int(BIG_FRAC * 448))
+    assert n_mid == max(1, int(MID_FRAC * 448))
+    assert (s[(s < 2.0)] == 1.0).all()
+
+
+def test_channel_scales_deterministic():
+    assert (channel_scales(448, 3) == channel_scales(448, 3)).all()
+    assert (channel_scales(448, 3) != channel_scales(448, 4)).any()
+
+
+def test_outlierize_preserves_function():
+    """Scaling wu out-cols by s and wd in-rows by 1/s must leave the
+    forward bit-close (the SwiGLU up-path is linear in wu)."""
+    ws = init_weights(CFG, jax.random.PRNGKey(0))
+    toks = jnp.array(np.random.default_rng(0).integers(0, 32, (2, CFG.seq_len)),
+                     dtype=jnp.int32)
+    base = fwd(ws, toks, CFG)
+    ws2 = dict(ws)
+    for layer in range(CFG.n_layers):
+        s = jnp.array(channel_scales(CFG.d_ffn, 99 + layer))
+        ws2[f"l{layer}.wu"] = ws[f"l{layer}.wu"] * s[None, :]
+        ws2[f"l{layer}.wd"] = ws[f"l{layer}.wd"] / s[:, None]
+    out = fwd(ws2, toks, CFG)
+    assert_allclose(np.array(out), np.array(base), atol=2e-3)
+
+
+def test_outlierize_changes_activations():
+    """The whole point: down-proj inputs must gain outlier channels."""
+    from compile.model import fwd_capture
+
+    ws = init_weights(CFG, jax.random.PRNGKey(1))
+    toks = jnp.array(np.random.default_rng(1).integers(0, 32, (2, CFG.seq_len)),
+                     dtype=jnp.int32)
+    _, _, _, _, down_base = fwd_capture(ws, toks, CFG)
+    ws2 = dict(ws)
+    s = jnp.array(channel_scales(CFG.d_ffn, 5))
+    ws2["l0.wu"] = ws["l0.wu"] * s[None, :]
+    ws2["l0.wd"] = ws["l0.wd"] / s[:, None]
+    _, _, _, _, down_out = fwd_capture(ws2, toks, CFG)
+    r_base = float(jnp.abs(down_base[0]).max())
+    r_out = float(jnp.abs(down_out[0]).max())
+    assert r_out > r_base * 4.0, f"{r_out} vs {r_base}"

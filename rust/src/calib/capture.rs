@@ -1,0 +1,149 @@
+//! Activation capture: executes the `fwd_capture` artifact over
+//! calibration batches and accumulates per-layer linear-input activations.
+//!
+//! Captures are taken from the *transformed* weights (rotations/norm folds
+//! already merged), so they live in exactly the space the quantized graph
+//! sees — which is what both MassDiff (Fig 2) and the GPTQ/Qronos Hessians
+//! need (Appendix B: X̃ is rotated and quantized).
+
+use anyhow::{ensure, Result};
+
+use crate::data::corpus::{self, Source, Split};
+use crate::model::config::{CaptureKind, ModelConfig};
+use crate::model::weights::WeightSet;
+use crate::runtime::engine::{self, Engine};
+use crate::tensor::Mat;
+
+/// Per-layer activation captures: rows = calibration tokens.
+pub struct Captures {
+    pub attn_in: Vec<Mat>,
+    pub o_in: Vec<Mat>,
+    pub ffn_in: Vec<Mat>,
+    pub down_in: Vec<Mat>,
+    pub n_tokens: usize,
+}
+
+impl Captures {
+    pub fn site(&self, kind: CaptureKind, layer: usize) -> &Mat {
+        match kind {
+            CaptureKind::AttnIn => &self.attn_in[layer],
+            CaptureKind::OIn => &self.o_in[layer],
+            CaptureKind::FfnIn => &self.ffn_in[layer],
+            CaptureKind::DownIn => &self.down_in[layer],
+        }
+    }
+
+    pub fn site_mut(&mut self, kind: CaptureKind, layer: usize) -> &mut Mat {
+        match kind {
+            CaptureKind::AttnIn => &mut self.attn_in[layer],
+            CaptureKind::OIn => &mut self.o_in[layer],
+            CaptureKind::FfnIn => &mut self.ffn_in[layer],
+            CaptureKind::DownIn => &mut self.down_in[layer],
+        }
+    }
+}
+
+/// Calibration token batches: `n_seqs` sequences of seq_len tokens drawn
+/// from the train split (the paper uses random 2048-token sequences; our
+/// deterministic equivalent strides a seeded offset pattern).
+pub fn calibration_batches(cfg: &ModelConfig, source: Source, n_seqs: usize,
+                           seed: u64) -> Vec<Vec<i32>> {
+    let need = n_seqs * cfg.seq_len * 4; // pool to stride over
+    let toks = corpus::token_stream(source, Split::Train, need.max(1 << 16));
+    let mut rng = crate::data::rng::Rng::new(seed ^ 0x5eed_ca1b);
+    let max_start = toks.len() - cfg.seq_len - 1;
+    (0..n_seqs)
+        .map(|_| {
+            let s = rng.next_below(max_start as u64) as usize;
+            toks[s..s + cfg.seq_len].iter().map(|&t| t as i32).collect()
+        })
+        .collect()
+}
+
+/// Run `fwd_capture` over the calibration sequences with the given
+/// (already transformed) weights, returning per-layer activations.
+pub fn run_capture(engine: &Engine, model: &str, cfg: &ModelConfig,
+                   ws: &WeightSet, seqs: &[Vec<i32>]) -> Result<Captures> {
+    ensure!(!seqs.is_empty(), "no calibration sequences");
+    let (l, d, f, b, t) = (cfg.n_layers, cfg.d_model, cfg.d_ffn, cfg.batch, cfg.seq_len);
+    let mut caps = Captures {
+        attn_in: (0..l).map(|_| Mat::zeros(0, d)).collect(),
+        o_in: (0..l).map(|_| Mat::zeros(0, d)).collect(),
+        ffn_in: (0..l).map(|_| Mat::zeros(0, d)).collect(),
+        down_in: (0..l).map(|_| Mat::zeros(0, f)).collect(),
+        n_tokens: 0,
+    };
+    let w_lits = engine::weight_literals(ws)?;
+    for chunk in seqs.chunks(b) {
+        // pad the final partial batch by repeating the first sequence
+        let mut tokens: Vec<i32> = Vec::with_capacity(b * t);
+        for i in 0..b {
+            let seq = chunk.get(i).unwrap_or(&chunk[0]);
+            tokens.extend_from_slice(seq);
+        }
+        let mut inputs = w_lits.clone();
+        inputs.push(engine::tokens_literal(&tokens, b, t)?);
+        let outs = engine.run(model, "fwd_capture", &inputs)?;
+        ensure!(outs.len() == 5, "capture artifact must return 5 outputs");
+        let real = chunk.len(); // ignore padded sequences
+        for (idx, (kind, dim)) in [
+            (CaptureKind::AttnIn, d),
+            (CaptureKind::OIn, d),
+            (CaptureKind::FfnIn, d),
+            (CaptureKind::DownIn, f),
+        ]
+        .iter()
+        .enumerate()
+        {
+            let data = engine::literal_to_vec_f32(&outs[idx + 1])?;
+            ensure!(data.len() == l * b * t * dim, "capture size mismatch");
+            for layer in 0..l {
+                let site = caps.site_mut(*kind, layer);
+                let mut rows = std::mem::replace(site, Mat::zeros(0, *dim));
+                let base = layer * b * t * dim;
+                let mut new_data = rows.data;
+                new_data.extend_from_slice(&data[base..base + real * t * dim]);
+                rows = Mat::from_vec(new_data.len() / dim, *dim, new_data);
+                *site = rows;
+            }
+        }
+        caps.n_tokens += real * t;
+    }
+    Ok(caps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn cfg() -> ModelConfig {
+        let j = json::parse(
+            r#"{"config": {"name": "m", "n_layers": 2, "d_model": 128,
+                "n_heads": 4, "d_ffn": 448, "vocab": 32, "seq_len": 128,
+                "batch": 8, "block_sizes": [1]}}"#,
+        )
+        .unwrap();
+        ModelConfig::from_meta(&j).unwrap()
+    }
+
+    #[test]
+    fn batches_deterministic_and_shaped() {
+        let c = cfg();
+        let a = calibration_batches(&c, Source::Wiki, 4, 1);
+        let b = calibration_batches(&c, Source::Wiki, 4, 1);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 4);
+        assert!(a.iter().all(|s| s.len() == c.seq_len));
+        let c2 = calibration_batches(&c, Source::Wiki, 4, 2);
+        assert_ne!(a, c2);
+    }
+
+    #[test]
+    fn batches_tokens_in_vocab() {
+        let c = cfg();
+        for seq in calibration_batches(&c, Source::C4, 3, 7) {
+            assert!(seq.iter().all(|&t| (0..32).contains(&t)));
+        }
+    }
+}

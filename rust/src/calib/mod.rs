@@ -1,0 +1,7 @@
+//! Calibration substrate: runs the capture artifact over calibration
+//! batches and exposes per-layer, per-site activation matrices to the
+//! permutation calibrators (MassDiff & co.) and the rounding Hessians.
+
+pub mod capture;
+
+pub use capture::Captures;

@@ -1,0 +1,12 @@
+//! The L3 coordinator — PeRQ's pipeline engine (Fig 2): compose Stage 1
+//! (permute × rotate) with Stage 2 (round), run calibration and the offline
+//! weight transforms, schedule per-linear rounding jobs across worker
+//! threads, and evaluate the quantized model through the AOT artifacts.
+
+pub mod pipeline;
+pub mod presets;
+pub mod spec;
+
+pub use pipeline::{Pipeline, PipelineReport};
+pub use spec::PipelineSpec;
+pub mod server;

@@ -1,0 +1,387 @@
+//! The PeRQ pipeline engine (Fig 2, executed on the Fig 7 or Fig 9 graph):
+//!
+//!   1. fold norm scales, merge R1/R2 into the weights (merged graph);
+//!   2. run the capture artifact → per-site calibration activations;
+//!   3. calibrate P3 per layer (MassDiff / baselines) on the down-proj
+//!      inputs and merge it through the SwiGLU equivariant region;
+//!   4. fold R̃3ᵀ into wd (merged graph);
+//!   5. round every linear through the chosen Stage-2 solver, with
+//!      per-site Hessians built from the transformed, fake-quantized
+//!      calibration activations (Appendix B) — one job per linear,
+//!      scheduled across worker threads;
+//!   6. evaluate perplexity (and optionally the zero-shot probes) through
+//!      the matching AOT artifact.
+//!
+//! Python never runs here: the artifacts were lowered once at build time.
+
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use super::spec::{GraphKind, PipelineSpec, RotKind};
+use crate::calib::capture::{self, Captures};
+use crate::eval::perplexity::{evaluate_stream, EvalResult};
+use crate::eval::zeroshot::{evaluate_zeroshot, ZeroShotResult};
+use crate::hadamard::{self, BlockRotator};
+use crate::model::bundle::ModelBundle;
+use crate::model::config::CaptureKind;
+use crate::model::transform;
+use crate::model::weights::WeightSet;
+use crate::permute::{self, CalibStats};
+use crate::quant::{act, Format, WeightCodec};
+use crate::runtime::engine::{self, Engine};
+use crate::tensor::linalg::SymMat;
+use crate::tensor::Mat;
+use crate::util::pool;
+
+pub struct Pipeline {
+    pub spec: PipelineSpec,
+}
+
+/// The output of the offline PTQ stages: transformed + quantized weights
+/// plus everything needed to execute the matching artifact (eval or the
+/// `coordinator::server` path).
+pub struct QuantizedModel {
+    pub ws: WeightSet,
+    pub eval_tag: String,
+    pub extras: Vec<crate::coordinator::server::ExtraInput>,
+    pub mass_balance: f64,
+    pub calib_tokens: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct PipelineReport {
+    pub label: String,
+    pub model: String,
+    pub perplexity: f64,
+    pub nll: f64,
+    pub zeroshot: Option<ZeroShotResult>,
+    /// mean per-linear proxy-loss improvement of rounding vs RTN (diag)
+    pub calib_tokens: usize,
+    pub wall_ms: f64,
+    /// max per-block l1 mass ratio achieved by the permutation (diagnostic,
+    /// 1.0 = theoretical optimum) averaged over layers
+    pub mass_balance: f64,
+}
+
+impl Pipeline {
+    pub fn new(spec: PipelineSpec) -> Pipeline {
+        Pipeline { spec }
+    }
+
+    /// Build the R1 rotation matrix for this spec (d_model space).
+    fn r1_matrix(&self, bundle: &ModelBundle) -> Result<Option<Mat>> {
+        let d = bundle.cfg.d_model;
+        Ok(match self.spec.rotation.r1 {
+            RotKind::None => None,
+            RotKind::Hadamard => Some(hadamard::normalized_hadamard(d)?),
+            RotKind::HadamardBlock(b) => {
+                Some(hadamard::construct::block_hadamard_dense(d, b.min(d))?)
+            }
+            RotKind::Learned => Some(
+                bundle
+                    .learned_r1
+                    .clone()
+                    .unwrap_or(hadamard::normalized_hadamard(d)?),
+            ),
+            RotKind::LearnedBlock(b) => {
+                let blk = match &bundle.learned_r1_block {
+                    Some((bb, m)) if *bb == b => m.clone(),
+                    _ => hadamard::normalized_hadamard(b)?,
+                };
+                // expand to block-diagonal d×d
+                let mut out = Mat::zeros(d, d);
+                for g in 0..d / b {
+                    for i in 0..b {
+                        for j in 0..b {
+                            *out.at_mut(g * b + i, g * b + j) = blk.at(i, j);
+                        }
+                    }
+                }
+                Some(out)
+            }
+        })
+    }
+
+    fn r2_matrix(&self, bundle: &ModelBundle) -> Result<Option<Mat>> {
+        let hd = bundle.cfg.head_dim();
+        Ok(match self.spec.rotation.r2 {
+            RotKind::None => None,
+            RotKind::Hadamard | RotKind::Learned => {
+                Some(hadamard::normalized_hadamard(hd)?)
+            }
+            RotKind::HadamardBlock(b) | RotKind::LearnedBlock(b) => {
+                Some(hadamard::construct::block_hadamard_dense(hd, b.min(hd))?)
+            }
+        })
+    }
+
+    /// Run the full pipeline on a model bundle.
+    pub fn run(&self, bundle: &ModelBundle) -> Result<PipelineReport> {
+        let engine = Engine::new(&bundle.ctx)?;
+        self.run_with_engine(bundle, &engine)
+    }
+
+    /// Offline stages only (transform -> capture -> permute -> rotate ->
+    /// round); returns the quantized model without evaluating it.
+    pub fn quantize_with_engine(&self, bundle: &ModelBundle, engine: &Engine) -> Result<QuantizedModel> {
+        let trace = std::env::var("PERQ_TRACE").is_ok();
+        let mut t_stage = Instant::now();
+        let mut stage = |name: &str| {
+            if trace {
+                eprintln!("[perq-trace] {name}: {:.1} ms", t_stage.elapsed().as_secs_f64() * 1e3);
+            }
+            t_stage = Instant::now();
+        };
+        let t0 = Instant::now();
+        let spec = &self.spec;
+        let cfg = &bundle.cfg;
+        let b3 = spec.rotation.r3_block;
+        ensure!(
+            cfg.d_ffn % b3 == 0,
+            "R3 block {} must divide d_ffn {}",
+            b3,
+            cfg.d_ffn
+        );
+        let merged = spec.graph == GraphKind::Merged;
+        if !merged {
+            // the Fig 9 artifact is lowered with b = 32 at every online site
+            ensure!(b3 == 32, "online graph artifacts use block size 32");
+        }
+        let eval_tag = if merged {
+            format!("fwd_quant_b{b3}")
+        } else {
+            "fwd_online_b32".to_string()
+        };
+        ensure!(
+            bundle.has_artifact(&eval_tag),
+            "missing artifact {eval_tag} for {}",
+            bundle.name
+        );
+
+        // ---- stage 0: offline transforms (norm folds + merged rotations) --
+        let mut ws = bundle.weights.clone();
+        transform::fold_norms(&mut ws, cfg);
+        if merged {
+            if let Some(r1) = self.r1_matrix(bundle)? {
+                transform::merge_r1(&mut ws, cfg, &r1);
+            }
+            if let Some(r2) = self.r2_matrix(bundle)? {
+                transform::merge_r2(&mut ws, cfg, &r2);
+            }
+        }
+
+        stage("transform");
+        // ---- stage 1: calibration captures (in the transformed space) ----
+        let seqs = capture::calibration_batches(cfg, spec.calib_source, spec.calib_seqs, spec.seed);
+        let mut caps = capture::run_capture(engine, &bundle.name, cfg, &ws, &seqs)
+            .context("running calibration capture")?;
+
+        stage("capture");
+        // ---- stage 2: permutation calibration + merge (Alg 1 / Rmk 4.2) --
+        let perm_tokens = (spec.perm_calib_seqs * cfg.seq_len).min(caps.n_tokens);
+        let mut mass_balance = 0.0f64;
+        for l in 0..cfg.n_layers {
+            let down = &caps.down_in[l];
+            let sub_rows: Vec<&[f32]> = (0..perm_tokens.min(down.rows)).map(|r| down.row(r)).collect();
+            let stats = CalibStats::from_activations(&sub_rows);
+            let perm = spec.permutation.calibrate(&stats, b3, spec.seed + l as u64);
+            // diagnostic: how balanced is the result vs the theoretical LB
+            let full_stats = CalibStats::from_mat(down);
+            let got = permute::massdiff::max_block_mass(&full_stats.mean_abs, &perm, b3);
+            let lb = permute::massdiff::mass_lower_bound(&full_stats.mean_abs, b3);
+            mass_balance += if lb > 0.0 { got / lb } else { 1.0 };
+            transform::merge_p3_layer(&mut ws, l, &perm);
+            caps.down_in[l] = caps.down_in[l].permute_cols(&perm);
+        }
+        mass_balance /= cfg.n_layers as f64;
+
+        stage("permute");
+        // ---- stage 3: R3 rotation handling -------------------------------
+        let rot3 = BlockRotator::hadamard(b3)?;
+        if merged {
+            transform::merge_r3_inv(&mut ws, cfg, &rot3)?;
+        }
+        // Hessian inputs for wd see the *rotated* activations.
+        for l in 0..cfg.n_layers {
+            rot3.apply_mat(&mut caps.down_in[l]);
+        }
+        // Online graph: d_model-space sites are rotated in-graph too.
+        let rot_online = if merged { None } else { Some(BlockRotator::hadamard(32)?) };
+        if let Some(rot) = &rot_online {
+            for l in 0..cfg.n_layers {
+                rot.apply_mat(&mut caps.attn_in[l]);
+                rot.apply_mat(&mut caps.o_in[l]);
+                rot.apply_mat(&mut caps.ffn_in[l]);
+            }
+        }
+        // X̃ is rotated *and quantized* (Appendix B).
+        if spec.format != Format::None {
+            for l in 0..cfg.n_layers {
+                act::act_quant_mat(&mut caps.attn_in[l], spec.format);
+                act::act_quant_mat(&mut caps.o_in[l], spec.format);
+                act::act_quant_mat(&mut caps.ffn_in[l], spec.format);
+                act::act_quant_mat(&mut caps.down_in[l], spec.format);
+            }
+        }
+
+        stage("rotate+actquant");
+        // ---- stage 4: per-linear rounding jobs ----------------------------
+        self.round_all(cfg, &mut ws, &caps, rot_online.as_ref())?;
+
+        stage("rounding");
+        let _ = t0;
+        Ok(QuantizedModel {
+            ws,
+            eval_tag,
+            extras: self.extra_inputs(&rot3)?,
+            mass_balance,
+            calib_tokens: caps.n_tokens,
+        })
+    }
+
+    pub fn run_with_engine(&self, bundle: &ModelBundle, engine: &Engine) -> Result<PipelineReport> {
+        let trace = std::env::var("PERQ_TRACE").is_ok();
+        let t0 = Instant::now();
+        let spec = &self.spec;
+        let qm = self.quantize_with_engine(bundle, engine)?;
+        let mut t_stage = Instant::now();
+        let mut stage = |name: &str| {
+            if trace {
+                eprintln!("[perq-trace] {name}: {:.1} ms", t_stage.elapsed().as_secs_f64() * 1e3);
+            }
+            t_stage = Instant::now();
+        };
+        // ---- stage 5: evaluation ------------------------------------------
+        let extras = extras_to_literals(&qm.extras)?;
+        let eval = evaluate_stream(
+            engine, &bundle.name, &bundle.cfg, &qm.ws, &qm.eval_tag, &extras,
+            spec.eval_source, spec.eval_tokens,
+        )?;
+        let zeroshot = if spec.run_zeroshot {
+            Some(evaluate_zeroshot(
+                engine, &bundle.name, &bundle.cfg, &qm.ws, &qm.eval_tag, &extras,
+                spec.zeroshot_tokens,
+            )?)
+        } else {
+            None
+        };
+
+        stage("eval");
+        Ok(PipelineReport {
+            label: spec.label(),
+            model: bundle.name.clone(),
+            perplexity: eval.perplexity,
+            nll: eval.nll,
+            zeroshot,
+            calib_tokens: qm.calib_tokens,
+            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+            mass_balance: qm.mass_balance,
+        })
+    }
+
+    /// Extra artifact inputs after (weights, tokens), in `Send` host form.
+    fn extra_inputs(&self, rot3: &BlockRotator) -> Result<Vec<crate::coordinator::server::ExtraInput>> {
+        use crate::coordinator::server::ExtraInput;
+        let fmt = self.spec.format.fmt_id();
+        if self.spec.graph == GraphKind::Merged {
+            Ok(vec![
+                ExtraInput::Matrix(rot3.matrix()?),
+                ExtraInput::ScalarI32(fmt),
+            ])
+        } else {
+            let h32 = hadamard::normalized_hadamard(32)?;
+            Ok(vec![
+                ExtraInput::Matrix(h32.clone()),
+                ExtraInput::Matrix(h32),
+                ExtraInput::ScalarI32(fmt),
+            ])
+        }
+    }
+
+    /// Round every linear site in parallel worker threads.
+    fn round_all(&self, cfg: &crate::model::ModelConfig, ws: &mut WeightSet,
+                 caps: &Captures, rot_online: Option<&BlockRotator>) -> Result<()> {
+        let spec = &self.spec;
+        if spec.format == Format::None {
+            return Ok(());
+        }
+        let sites = cfg.linear_sites();
+        let needs_gram = spec.rounding != crate::rounding::Rounding::Rtn;
+        // snapshot of the weights each job reads (transformed, fp)
+        let w_in: Vec<Mat> = sites
+            .iter()
+            .map(|s| {
+                let w = ws.get(&s.name).clone();
+                // online graph: the in-graph weight rotation means the
+                // effective weight is R̃ᵀw; quantize in that space and
+                // pre-compensate afterwards.
+                match (rot_online, s.capture) {
+                    (Some(rot), CaptureKind::AttnIn | CaptureKind::OIn | CaptureKind::FfnIn) => {
+                        rot.merge_into_weight_rows(&w).expect("rotating weight")
+                    }
+                    (Some(_), CaptureKind::DownIn) => {
+                        let rot3 = BlockRotator::hadamard(spec.rotation.r3_block).unwrap();
+                        rot3.merge_into_weight_rows(&w).expect("rotating weight")
+                    }
+                    _ => w,
+                }
+            })
+            .collect();
+        let quantized: Vec<Mat> = pool::parallel_map(sites.len(), spec.workers, |i| {
+            let site = &sites[i];
+            let w = &w_in[i];
+            let codec = WeightCodec::fit(spec.format, w);
+            let gram = if needs_gram {
+                let x = caps.site(site.capture, site.layer);
+                let mut h = SymMat::zeros(w.rows);
+                h.accumulate_gram(&x.data, x.rows);
+                Some(h)
+            } else {
+                None
+            };
+            spec.rounding.round(w, &codec, gram.as_ref())
+        });
+        for (site, mut q) in sites.iter().zip(quantized) {
+            // online graph: pre-compensate the in-graph rotation so the
+            // graph's R̃ᵀ(w_feed) equals the quantized rotated weight.
+            if let Some(rot) = rot_online {
+                let r = match site.capture {
+                    CaptureKind::DownIn => BlockRotator::hadamard(spec.rotation.r3_block)?,
+                    _ => BlockRotator::hadamard(rot.b)?,
+                };
+                q = r.rotate_weight_rows_fwd(&q)?;
+            }
+            ws.set(&site.name, q);
+        }
+        Ok(())
+    }
+}
+
+/// Convert host-form extras to literals for the in-process eval path.
+pub fn extras_to_literals(extras: &[crate::coordinator::server::ExtraInput]) -> Result<Vec<xla::Literal>> {
+    use crate::coordinator::server::ExtraInput;
+    extras
+        .iter()
+        .map(|e| match e {
+            ExtraInput::Matrix(m) => engine::mat_literal(m),
+            ExtraInput::ScalarI32(v) => Ok(engine::scalar_i32(*v)),
+        })
+        .collect()
+}
+
+/// Evaluate the full-precision (BF16-analog) baseline of a bundle.
+pub fn baseline_eval(bundle: &ModelBundle, engine: &Engine, eval_tokens: usize,
+                     zeroshot_tokens: Option<usize>) -> Result<(EvalResult, Option<ZeroShotResult>)> {
+    let eval = evaluate_stream(
+        engine, &bundle.name, &bundle.cfg, &bundle.weights, "fwd", &vec![],
+        crate::data::corpus::Source::Wiki, eval_tokens,
+    )?;
+    let z = match zeroshot_tokens {
+        Some(n) => Some(evaluate_zeroshot(
+            engine, &bundle.name, &bundle.cfg, &bundle.weights, "fwd", &vec![], n,
+        )?),
+        None => None,
+    };
+    Ok((eval, z))
+}

@@ -1,0 +1,99 @@
+//! Named pipeline presets matching the paper's method rows (Tables 1-2).
+
+use super::spec::{GraphKind, PipelineSpec, RotationSpec};
+use crate::permute::PermKind;
+use crate::quant::Format;
+use crate::rounding::Rounding;
+
+/// PeRQ* — MassDiff + QuaRot rotations + Qronos (Fig 7 merged graph).
+pub fn perq_star(block: usize, format: Format) -> PipelineSpec {
+    PipelineSpec {
+        permutation: PermKind::MassDiff,
+        rotation: RotationSpec::quarot(block),
+        rounding: Rounding::Qronos,
+        format,
+        ..Default::default()
+    }
+}
+
+/// PeRQ† — MassDiff + learned (SpinQuant-style) R1 + RTN.
+pub fn perq_dagger(block: usize, format: Format) -> PipelineSpec {
+    PipelineSpec {
+        permutation: PermKind::MassDiff,
+        rotation: RotationSpec::spin(block),
+        rounding: Rounding::Rtn,
+        format,
+        ..Default::default()
+    }
+}
+
+/// "No Permute" arm of Table 1: QuaRot rotations + Qronos, identity P3.
+pub fn no_permute(block: usize, format: Format) -> PipelineSpec {
+    PipelineSpec {
+        permutation: PermKind::Identity,
+        rotation: RotationSpec::quarot(block),
+        rounding: Rounding::Qronos,
+        format,
+        ..Default::default()
+    }
+}
+
+/// MR-RTN / MR-GPTQ(=BRQ) / MR-Qronos: merged block rotations, identity P3.
+pub fn mr(block: usize, rounding: Rounding, format: Format) -> PipelineSpec {
+    PipelineSpec {
+        permutation: PermKind::Identity,
+        rotation: RotationSpec::mr(block),
+        rounding,
+        format,
+        ..Default::default()
+    }
+}
+
+/// BRQ-Spin: learned block rotations at R1, GPTQ rounding.
+pub fn brq_spin(block: usize, format: Format) -> PipelineSpec {
+    PipelineSpec {
+        permutation: PermKind::Identity,
+        rotation: RotationSpec::brq_spin(block),
+        rounding: Rounding::Gptq,
+        format,
+        ..Default::default()
+    }
+}
+
+/// The online-graph variant of a spec (Fig 9 / Table 11).
+pub fn online(mut spec: PipelineSpec) -> PipelineSpec {
+    spec.graph = GraphKind::Online;
+    spec
+}
+
+/// All Table 2 method rows for a given format, in paper order.
+pub fn table2_methods(format: Format) -> Vec<(&'static str, PipelineSpec)> {
+    vec![
+        ("MR-RTN", mr(32, Rounding::Rtn, format)),
+        ("MR-GPTQ/BRQ", mr(32, Rounding::Gptq, format)),
+        ("MR-Qronos", mr(32, Rounding::Qronos, format)),
+        ("BRQ-Spin", brq_spin(32, format)),
+        ("PeRQ*", perq_star(32, format)),
+        ("PeRQ+", perq_dagger(32, format)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_compose() {
+        let s = perq_star(32, Format::Int4);
+        assert_eq!(s.label(), "massdiff+quarot(b32)+qronos@int4");
+        let d = perq_dagger(32, Format::Int4);
+        assert_eq!(d.label(), "massdiff+spin(b32)+rtn@int4");
+        let m = mr(32, Rounding::Gptq, Format::Mxfp4);
+        assert_eq!(m.label(), "identity+mr32(b32)+gptq@mxfp4");
+    }
+
+    #[test]
+    fn table2_has_six_methods() {
+        assert_eq!(table2_methods(Format::Int4).len(), 6);
+    }
+}

@@ -1,0 +1,162 @@
+//! Pipeline specification: which permutation, rotations, rounding, format,
+//! and graph architecture compose a run (the paper's Fig 2 "pipeline" vs
+//! Fig 7/9 "graph" distinction).
+
+pub use crate::permute::PermKind;
+pub use crate::quant::Format;
+pub use crate::rounding::Rounding;
+
+use crate::data::corpus::Source;
+
+/// Rotation choice at a given site.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RotKind {
+    /// No rotation.
+    None,
+    /// Full-vector normalized Hadamard.
+    Hadamard,
+    /// Block-diagonal Hadamard with the given block size.
+    HadamardBlock(usize),
+    /// Learned full-vector rotation (rotopt_r1.npy — the SpinQuant arm).
+    Learned,
+    /// Learned block rotation (rotopt_r1_b32.npy — the BRQ-Spin arm).
+    LearnedBlock(usize),
+}
+
+/// Where rotations go (Fig 7): R1 on the residual stream, R2 per-head on
+/// v→o, R̃3 online at the down-projection input with block size `r3_block`
+/// (1 = no rotation, d_ffn = full-vector).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RotationSpec {
+    pub r1: RotKind,
+    pub r2: RotKind,
+    pub r3_block: usize,
+}
+
+impl RotationSpec {
+    /// QuaRot-style: full-vector Hadamard R1/R2, block Hadamard R̃3.
+    pub fn quarot(r3_block: usize) -> Self {
+        RotationSpec { r1: RotKind::Hadamard, r2: RotKind::Hadamard, r3_block }
+    }
+
+    /// MR-GPTQ/BRQ-style: merged *block* rotations at R1/R2 too.
+    pub fn mr(block: usize) -> Self {
+        RotationSpec {
+            r1: RotKind::HadamardBlock(block),
+            r2: RotKind::Hadamard,
+            r3_block: block,
+        }
+    }
+
+    /// SpinQuant-style: learned full-vector R1, Hadamard R2.
+    pub fn spin(r3_block: usize) -> Self {
+        RotationSpec { r1: RotKind::Learned, r2: RotKind::Hadamard, r3_block }
+    }
+
+    /// BRQ-Spin: learned block rotations at R1, Hadamard R2, block R̃3.
+    pub fn brq_spin(block: usize) -> Self {
+        RotationSpec {
+            r1: RotKind::LearnedBlock(block),
+            r2: RotKind::Hadamard,
+            r3_block: block,
+        }
+    }
+
+    /// No rotations anywhere.
+    pub fn none() -> Self {
+        RotationSpec { r1: RotKind::None, r2: RotKind::None, r3_block: 1 }
+    }
+}
+
+/// Graph architecture (Table 11): merged (Fig 7) vs fully online (Fig 9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GraphKind {
+    Merged,
+    Online,
+}
+
+#[derive(Clone, Debug)]
+pub struct PipelineSpec {
+    pub permutation: PermKind,
+    pub rotation: RotationSpec,
+    pub rounding: Rounding,
+    pub format: Format,
+    pub graph: GraphKind,
+    /// capture/Hessian calibration sequences (paper: 128 × 2048 tokens)
+    pub calib_seqs: usize,
+    /// permutation-calibration sequences (paper default: 1)
+    pub perm_calib_seqs: usize,
+    pub calib_source: Source,
+    pub eval_source: Source,
+    pub eval_tokens: usize,
+    pub zeroshot_tokens: usize,
+    pub seed: u64,
+    pub workers: usize,
+    /// also run the zero-shot probe suite (slower)
+    pub run_zeroshot: bool,
+}
+
+impl Default for PipelineSpec {
+    fn default() -> Self {
+        PipelineSpec {
+            permutation: PermKind::MassDiff,
+            rotation: RotationSpec::quarot(32),
+            rounding: Rounding::Qronos,
+            format: Format::Int4,
+            graph: GraphKind::Merged,
+            calib_seqs: 16,
+            perm_calib_seqs: 2,
+            calib_source: Source::Wiki,
+            eval_source: Source::Wiki,
+            eval_tokens: 8192,
+            zeroshot_tokens: 2048,
+            seed: 7,
+            workers: crate::util::pool::default_workers(),
+            run_zeroshot: false,
+        }
+    }
+}
+
+impl PipelineSpec {
+    /// Short human label, e.g. "massdiff+quarot(b32)+qronos@int4".
+    pub fn label(&self) -> String {
+        let rot = match self.rotation.r1 {
+            RotKind::None => "norot".to_string(),
+            RotKind::Hadamard => "quarot".to_string(),
+            RotKind::HadamardBlock(b) => format!("mr{b}"),
+            RotKind::Learned => "spin".to_string(),
+            RotKind::LearnedBlock(b) => format!("brqspin{b}"),
+        };
+        format!(
+            "{}+{}(b{})+{}@{}{}",
+            self.permutation.name(),
+            rot,
+            self.rotation.r3_block,
+            self.rounding.name(),
+            self.format.name(),
+            if self.graph == GraphKind::Online { "+online" } else { "" },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_perq_star_shape() {
+        let s = PipelineSpec::default();
+        assert_eq!(s.permutation, PermKind::MassDiff);
+        assert_eq!(s.rounding, Rounding::Qronos);
+        assert_eq!(s.rotation.r3_block, 32);
+        assert_eq!(s.graph, GraphKind::Merged);
+    }
+
+    #[test]
+    fn labels_are_distinct() {
+        let a = PipelineSpec::default().label();
+        let mut s = PipelineSpec::default();
+        s.rounding = Rounding::Rtn;
+        assert_ne!(a, s.label());
+    }
+}

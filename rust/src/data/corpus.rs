@@ -1,0 +1,287 @@
+//! Synthetic corpus generator — bit-identical rust twin of
+//! python/compile/corpus.py (see that file for the determinism rules).
+//! Sources `wiki`/`c4`/`fineweb` stand in for WikiText2/C4/FineWeb
+//! (DESIGN.md §3); identity with the python stream is enforced against
+//! `artifacts/corpus_golden.bin` in the integration tests.
+
+use super::rng::Rng;
+
+pub const CHARSET: &[u8] = b"abcdefghijklmnopqrstuvwxyz .,\n";
+pub const VOCAB_SIZE: usize = 32;
+pub const NUM_WORDS: usize = 512;
+const TRAIN_CHARS: usize = 1 << 18;
+
+const SYLLABLES: [&str; 50] = [
+    "ba", "be", "bi", "bo", "bu", "da", "de", "di", "do", "du",
+    "ka", "ke", "ki", "ko", "ku", "la", "le", "li", "lo", "lu",
+    "ma", "me", "mi", "mo", "mu", "na", "ne", "ni", "no", "nu",
+    "ra", "re", "ri", "ro", "ru", "sa", "se", "si", "so", "su",
+    "ta", "te", "ti", "to", "tu", "va", "ve", "vi", "vo", "vu",
+];
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Source {
+    Wiki,
+    C4,
+    Fineweb,
+}
+
+impl Source {
+    pub fn all() -> [Source; 3] {
+        [Source::Wiki, Source::C4, Source::Fineweb]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Source::Wiki => "wiki",
+            Source::C4 => "c4",
+            Source::Fineweb => "fineweb",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Source> {
+        match s {
+            "wiki" => Some(Source::Wiki),
+            "c4" => Some(Source::C4),
+            "fineweb" => Some(Source::Fineweb),
+            _ => None,
+        }
+    }
+
+    fn spec(&self) -> SourceSpec {
+        match self {
+            Source::Wiki => SourceSpec {
+                seed: 0x00C0_FFEE,
+                bigram_weight: 0.5,
+                min_sentence: 4,
+                max_sentence: 12,
+                comma_prob: 0.10,
+            },
+            Source::C4 => SourceSpec {
+                seed: 0x00BE_EF01,
+                bigram_weight: 0.3,
+                min_sentence: 3,
+                max_sentence: 9,
+                comma_prob: 0.05,
+            },
+            Source::Fineweb => SourceSpec {
+                seed: 0x00FA_CADE,
+                bigram_weight: 0.7,
+                min_sentence: 5,
+                max_sentence: 15,
+                comma_prob: 0.15,
+            },
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+struct SourceSpec {
+    seed: u64,
+    bigram_weight: f64,
+    min_sentence: u64,
+    max_sentence: u64,
+    comma_prob: f64,
+}
+
+pub fn build_vocabulary() -> Vec<String> {
+    let mut rng = Rng::new(0x5EED_0001);
+    let mut words = Vec::with_capacity(NUM_WORDS);
+    for _ in 0..NUM_WORDS {
+        let n_syll = 1 + rng.next_below(3);
+        let mut w = String::new();
+        for _ in 0..n_syll {
+            w.push_str(SYLLABLES[rng.next_below(SYLLABLES.len() as u64) as usize]);
+        }
+        words.push(w);
+    }
+    words
+}
+
+pub struct CorpusGenerator {
+    spec: SourceSpec,
+    rng: Rng,
+    words: Vec<String>,
+    cum: Vec<f64>,
+    total: f64,
+    prev: usize,
+}
+
+impl CorpusGenerator {
+    pub fn new(source: Source) -> Self {
+        let spec = source.spec();
+        let mut cum = Vec::with_capacity(NUM_WORDS);
+        let mut total = 0.0f64;
+        for r in 0..NUM_WORDS {
+            total += 1.0 / (r + 1) as f64;
+            cum.push(total);
+        }
+        CorpusGenerator {
+            spec,
+            rng: Rng::new(spec.seed),
+            words: build_vocabulary(),
+            cum,
+            total,
+            prev: 0,
+        }
+    }
+
+    fn zipf_word(&mut self) -> usize {
+        let u = self.rng.next_f64() * self.total;
+        let (mut lo, mut hi) = (0usize, NUM_WORDS - 1);
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if self.cum[mid] < u {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+
+    fn next_word(&mut self) -> usize {
+        let w = if self.rng.next_f64() < self.spec.bigram_weight {
+            (self.prev * 31 + 17) % NUM_WORDS
+        } else {
+            self.zipf_word()
+        };
+        self.prev = w;
+        w
+    }
+
+    fn sentence(&mut self) -> String {
+        let spec = self.spec;
+        let n = spec.min_sentence
+            + self.rng.next_below(spec.max_sentence - spec.min_sentence + 1);
+        let mut parts: Vec<String> = Vec::new();
+        for i in 0..n {
+            let w = self.next_word();
+            parts.push(self.words[w].clone());
+            if i + 1 < n && self.rng.next_f64() < spec.comma_prob {
+                parts.push(",".to_string());
+            }
+        }
+        let mut s = parts.join(" ").replace(" ,", ",");
+        s.push('.');
+        s
+    }
+
+    pub fn text(&mut self, n_chars: usize) -> String {
+        let mut out = String::with_capacity(n_chars + 64);
+        let mut sent_in_par = 0;
+        while out.len() < n_chars {
+            let s = self.sentence();
+            out.push_str(&s);
+            sent_in_par += 1;
+            if sent_in_par == 5 {
+                out.push('\n');
+                sent_in_par = 0;
+            } else {
+                out.push(' ');
+            }
+        }
+        out.truncate(n_chars);
+        out
+    }
+}
+
+pub fn char_to_id(c: u8) -> Option<u16> {
+    CHARSET.iter().position(|&x| x == c).map(|p| p as u16)
+}
+
+pub fn tokenize(text: &str) -> Vec<u16> {
+    text.bytes()
+        .map(|c| char_to_id(c).unwrap_or_else(|| panic!("untokenizable byte {c}")))
+        .collect()
+}
+
+pub fn detokenize(ids: &[u16]) -> String {
+    ids.iter().map(|&i| CHARSET[i as usize] as char).collect()
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Test,
+}
+
+/// Token ids for a (source, split); twin of `corpus.token_stream`.
+pub fn token_stream(source: Source, split: Split, n_tokens: usize) -> Vec<u16> {
+    let mut gen = CorpusGenerator::new(source);
+    match split {
+        Split::Train => tokenize(&gen.text(n_tokens)),
+        Split::Test => {
+            let _ = gen.text(TRAIN_CHARS); // advance past the train region
+            tokenize(&gen.text(n_tokens))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_stream() {
+        let a = token_stream(Source::Wiki, Split::Train, 1024);
+        let b = token_stream(Source::Wiki, Split::Train, 1024);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sources_and_splits_differ() {
+        let w = token_stream(Source::Wiki, Split::Train, 512);
+        let c = token_stream(Source::C4, Split::Train, 512);
+        let t = token_stream(Source::Wiki, Split::Test, 512);
+        assert_ne!(w, c);
+        assert_ne!(w, t);
+    }
+
+    #[test]
+    fn tokens_in_range() {
+        let toks = token_stream(Source::Fineweb, Split::Train, 4096);
+        assert!(toks.iter().all(|&t| (t as usize) < VOCAB_SIZE));
+    }
+
+    #[test]
+    fn tokenize_roundtrip() {
+        let s = "hello world, this is a test.\n";
+        assert_eq!(detokenize(&tokenize(s)), s);
+    }
+
+    #[test]
+    fn vocabulary_is_stable() {
+        let v1 = build_vocabulary();
+        let v2 = build_vocabulary();
+        assert_eq!(v1, v2);
+        assert_eq!(v1.len(), NUM_WORDS);
+    }
+
+    #[test]
+    fn prefix_property() {
+        // a longer stream extends a shorter one (same generator state path)
+        let short = token_stream(Source::Wiki, Split::Train, 256);
+        let long = token_stream(Source::Wiki, Split::Train, 1024);
+        assert_eq!(&long[..256], &short[..]);
+    }
+
+    #[test]
+    fn char_distribution_nonuniform() {
+        let toks = token_stream(Source::Wiki, Split::Train, 1 << 15);
+        let mut counts = [0usize; VOCAB_SIZE];
+        for &t in &toks {
+            counts[t as usize] += 1;
+        }
+        let n = toks.len() as f64;
+        let entropy: f64 = counts
+            .iter()
+            .filter(|&&c| c > 0)
+            .map(|&c| {
+                let p = c as f64 / n;
+                -p * p.ln()
+            })
+            .sum();
+        assert!(entropy < (VOCAB_SIZE as f64).ln() * 0.95);
+    }
+}

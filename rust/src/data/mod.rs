@@ -1,0 +1,6 @@
+//! Data substrate: the deterministic synthetic corpus (rust twin of
+//! python/compile/corpus.py, bit-identical by construction and enforced by
+//! the `corpus_golden.bin` cross-test) plus the byte-level tokenizer.
+
+pub mod corpus;
+pub mod rng;

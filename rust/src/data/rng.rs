@@ -1,0 +1,84 @@
+//! xorshift64* — twin of `corpus.Rng` in python/compile/corpus.py.
+//! Both twins use only u64 integer ops and the (x >> 11) * 2^-53 float
+//! derivation, so streams are bit-identical across languages.
+
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let s = seed ^ 0x9E37_79B9_7F4A_7C15;
+        Rng { state: if s == 0 { 0xDEAD_BEEF_CAFE_F00D } else { s } }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform in [0, 1) with 53 bits — IEEE-exact across the twins.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    #[inline]
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n
+    }
+
+    /// Standard normal via Box-Muller (rust-side use only — never in the
+    /// cross-language corpus path).
+    pub fn next_normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-12);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(12345);
+        let mut b = Rng::new(12345);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn floats_in_range_and_centered() {
+        let mut r = Rng::new(99);
+        let fs: Vec<f64> = (0..1000).map(|_| r.next_f64()).collect();
+        assert!(fs.iter().all(|&f| (0.0..1.0).contains(&f)));
+        let mean = fs.iter().sum::<f64>() / fs.len() as f64;
+        assert!((0.4..0.6).contains(&mean));
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(7);
+        let xs: Vec<f64> = (0..20000).map(|_| r.next_normal()).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+}

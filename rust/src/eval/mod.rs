@@ -1,0 +1,8 @@
+//! Evaluation: perplexity over the held-out synthetic corpus and the
+//! zero-shot probe suite (the substitution for LightEval's reasoning
+//! tasks — see DESIGN.md §3).
+
+pub mod perplexity;
+pub mod zeroshot;
+
+pub use perplexity::{perplexity_from_logits, EvalResult};

@@ -1,0 +1,159 @@
+//! Perplexity evaluation over the held-out test split, streamed through an
+//! AOT forward artifact in (batch, seq) chunks.
+
+use anyhow::{ensure, Result};
+
+use crate::data::corpus::{self, Source, Split};
+use crate::model::config::ModelConfig;
+use crate::model::weights::WeightSet;
+use crate::runtime::engine::{self, Engine};
+use crate::tensor::Mat;
+
+#[derive(Clone, Debug)]
+pub struct EvalResult {
+    pub perplexity: f64,
+    pub nll: f64,
+    pub n_predictions: usize,
+}
+
+/// Cross-entropy of next-token predictions from logits (rows = positions
+/// of one sequence; evaluates positions 0..t-1 predicting 1..t).
+pub fn perplexity_from_logits(logits: &Mat, targets: &[u16]) -> (f64, usize) {
+    let t = targets.len();
+    debug_assert!(logits.rows >= t);
+    let v = logits.cols;
+    let mut nll = 0.0f64;
+    for (i, &tgt) in targets.iter().enumerate() {
+        let row = logits.row(i);
+        let mx = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x)) as f64;
+        let mut lse = 0.0f64;
+        for j in 0..v {
+            lse += ((row[j] as f64) - mx).exp();
+        }
+        let lse = mx + lse.ln();
+        nll += lse - row[tgt as usize] as f64;
+    }
+    (nll, t)
+}
+
+/// Extra artifact inputs appended after (weights, tokens): rotation
+/// matrices and the fmt scalar, depending on the graph variant.
+pub type ExtraInputs = Vec<xla::Literal>;
+
+/// Stream `n_tokens` of (source, test) through artifact `tag` and compute
+/// perplexity. `extras` are cloned per batch.
+pub fn evaluate_stream(engine: &Engine, model: &str, cfg: &ModelConfig,
+                       ws: &WeightSet, tag: &str, extras: &ExtraInputs,
+                       source: Source, n_tokens: usize) -> Result<EvalResult> {
+    let (b, t, v) = (cfg.batch, cfg.seq_len, cfg.vocab);
+    let toks = corpus::token_stream(source, Split::Test, n_tokens.max(b * t + 1));
+    let w_lits = engine::weight_literals(ws)?;
+    let mut total_nll = 0.0f64;
+    let mut total_n = 0usize;
+    // non-overlapping windows, batched
+    let n_windows = (toks.len() - 1) / t;
+    let mut window = 0usize;
+    while window < n_windows {
+        let real = (n_windows - window).min(b);
+        let mut tokens: Vec<i32> = Vec::with_capacity(b * t);
+        for i in 0..b {
+            let w = window + i.min(real - 1); // pad with last real window
+            tokens.extend(toks[w * t..(w + 1) * t].iter().map(|&x| x as i32));
+        }
+        let mut inputs = w_lits.clone();
+        inputs.push(engine::tokens_literal(&tokens, b, t)?);
+        for e in extras {
+            inputs.push(clone_literal(e)?);
+        }
+        let outs = engine.run(model, tag, &inputs)?;
+        ensure!(!outs.is_empty(), "artifact returned no outputs");
+        let data = engine::literal_to_vec_f32(&outs[0])?;
+        ensure!(data.len() == b * t * v, "logit shape mismatch");
+        for i in 0..real {
+            let w = window + i;
+            // position j of window w predicts token w*t + j + 1; the final
+            // target (w*t + t) exists because n_windows = (len-1)/t.
+            let logits = Mat::from_vec(t, v, data[i * t * v..(i + 1) * t * v].to_vec());
+            let targets: Vec<u16> = toks[w * t + 1..w * t + t + 1].to_vec();
+            let (nll, n) = perplexity_from_logits(&logits, &targets);
+            total_nll += nll;
+            total_n += n;
+        }
+        window += real;
+    }
+    let nll = total_nll / total_n as f64;
+    Ok(EvalResult { perplexity: nll.exp(), nll, n_predictions: total_n })
+}
+
+/// Public alias used by the zero-shot evaluator.
+pub fn clone_literal_pub(l: &xla::Literal) -> Result<xla::Literal> {
+    clone_literal(l)
+}
+
+fn clone_literal(l: &xla::Literal) -> Result<xla::Literal> {
+    // xla::Literal has no Clone; round-trip through shape-preserving reshape
+    let shape = l.shape().map_err(|e| anyhow::anyhow!("shape: {e:?}"))?;
+    match shape {
+        xla::Shape::Array(a) => {
+            let dims: Vec<i64> = a.dims().to_vec();
+            match a.primitive_type() {
+                xla::PrimitiveType::F32 => {
+                    let v = l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+                    xla::Literal::vec1(&v).reshape(&dims).map_err(|e| anyhow::anyhow!("{e:?}"))
+                }
+                xla::PrimitiveType::S32 => {
+                    let v = l.to_vec::<i32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+                    if dims.is_empty() {
+                        Ok(xla::Literal::scalar(v[0]))
+                    } else {
+                        xla::Literal::vec1(&v)
+                            .reshape(&dims)
+                            .map_err(|e| anyhow::anyhow!("{e:?}"))
+                    }
+                }
+                t => anyhow::bail!("unsupported literal type {t:?}"),
+            }
+        }
+        s => anyhow::bail!("unsupported literal shape {s:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_logits_give_vocab_ppl() {
+        let v = 32;
+        let logits = Mat::zeros(10, v);
+        let targets: Vec<u16> = (0..10).map(|i| (i % v) as u16).collect();
+        let (nll, n) = perplexity_from_logits(&logits, &targets);
+        assert_eq!(n, 10);
+        let ppl = (nll / n as f64).exp();
+        assert!((ppl - v as f64).abs() < 1e-6);
+    }
+
+    #[test]
+    fn confident_correct_logits_give_low_ppl() {
+        let v = 8;
+        let mut logits = Mat::zeros(5, v);
+        let targets: Vec<u16> = vec![1, 2, 3, 4, 5];
+        for (i, &t) in targets.iter().enumerate() {
+            *logits.at_mut(i, t as usize) = 20.0;
+        }
+        let (nll, n) = perplexity_from_logits(&logits, &targets);
+        assert!((nll / n as f64).exp() < 1.001);
+    }
+
+    #[test]
+    fn wrong_confident_logits_give_high_ppl() {
+        let v = 8;
+        let mut logits = Mat::zeros(3, v);
+        for i in 0..3 {
+            *logits.at_mut(i, 0) = 30.0;
+        }
+        let targets: Vec<u16> = vec![1, 1, 1];
+        let (nll, n) = perplexity_from_logits(&logits, &targets);
+        assert!((nll / n as f64).exp() > 1e8);
+    }
+}

@@ -1,0 +1,117 @@
+//! Zero-shot probe suite — the substitution for the paper's LightEval
+//! reasoning tasks (ARC-C/E, PIQA, Winogrande, HellaSwag; see DESIGN.md §3).
+//!
+//! Five probes measure next-token top-1 accuracy under distinct conditions,
+//! standing in for "downstream accuracy that is not perplexity":
+//!   wiki-next     — in-distribution next-char accuracy
+//!   c4-next       — cross-source generalization (calibrated on wiki)
+//!   fineweb-next  — cross-source, heavier bigram structure
+//!   word-start    — accuracy on positions right after a space (hard:
+//!                   requires word-level context, the "reasoning" analog)
+//!   word-body     — accuracy inside words (easy, syllable structure)
+//! The reported average plays the role of the paper's 0-shot column.
+
+use anyhow::Result;
+
+use crate::data::corpus::{self, Source, Split};
+use crate::model::config::ModelConfig;
+use crate::model::weights::WeightSet;
+use crate::runtime::engine::{self, Engine};
+
+#[derive(Clone, Debug)]
+pub struct ZeroShotResult {
+    pub task_names: Vec<&'static str>,
+    pub accuracies: Vec<f64>,
+}
+
+impl ZeroShotResult {
+    pub fn average(&self) -> f64 {
+        100.0 * self.accuracies.iter().sum::<f64>() / self.accuracies.len() as f64
+    }
+}
+
+struct ProbeAcc {
+    correct: usize,
+    total: usize,
+}
+
+/// Evaluate the probe suite through artifact `tag` with the given extras.
+pub fn evaluate_zeroshot(engine: &Engine, model: &str, cfg: &ModelConfig,
+                         ws: &WeightSet, tag: &str,
+                         extras: &super::perplexity::ExtraInputs,
+                         n_tokens: usize) -> Result<ZeroShotResult> {
+    let (b, t, v) = (cfg.batch, cfg.seq_len, cfg.vocab);
+    let w_lits = engine::weight_literals(ws)?;
+    let space_id = corpus::char_to_id(b' ').unwrap();
+    let mut accs: Vec<ProbeAcc> = (0..5).map(|_| ProbeAcc { correct: 0, total: 0 }).collect();
+
+    for (src_idx, source) in [Source::Wiki, Source::C4, Source::Fineweb].iter().enumerate() {
+        let toks = corpus::token_stream(*source, Split::Test, n_tokens.max(b * t + 1));
+        let n_windows = ((toks.len() - 1) / t).min(n_tokens / t);
+        let mut window = 0usize;
+        while window < n_windows {
+            let real = (n_windows - window).min(b);
+            let mut tokens: Vec<i32> = Vec::with_capacity(b * t);
+            for i in 0..b {
+                let w = window + i.min(real - 1);
+                tokens.extend(toks[w * t..(w + 1) * t].iter().map(|&x| x as i32));
+            }
+            let mut inputs = w_lits.clone();
+            inputs.push(engine::tokens_literal(&tokens, b, t)?);
+            for e in extras {
+                inputs.push(super::perplexity::clone_literal_pub(e)?);
+            }
+            let outs = engine.run(model, tag, &inputs)?;
+            let data = engine::literal_to_vec_f32(&outs[0])?;
+            for i in 0..real {
+                let w = window + i;
+                for j in 0..t {
+                    let row = &data[(i * t + j) * v..(i * t + j + 1) * v];
+                    let pred = row
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .unwrap()
+                        .0 as u16;
+                    let tgt = toks[w * t + j + 1];
+                    let prev = toks[w * t + j];
+                    let hit = (pred == tgt) as usize;
+                    // probes 0-2: per-source next-token accuracy
+                    accs[src_idx].correct += hit;
+                    accs[src_idx].total += 1;
+                    if *source == Source::Wiki {
+                        if prev == space_id {
+                            accs[3].correct += hit; // word-start (hard)
+                            accs[3].total += 1;
+                        } else {
+                            accs[4].correct += hit; // word-body (easy)
+                            accs[4].total += 1;
+                        }
+                    }
+                }
+            }
+            window += real;
+        }
+    }
+    Ok(ZeroShotResult {
+        task_names: vec!["wiki-next", "c4-next", "fineweb-next", "word-start", "word-body"],
+        accuracies: accs
+            .iter()
+            .map(|a| if a.total == 0 { 0.0 } else { a.correct as f64 / a.total as f64 })
+            .collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn average_is_percentage() {
+        let r = ZeroShotResult {
+            task_names: vec!["a", "b"],
+            accuracies: vec![0.5, 0.7],
+        };
+        assert!((r.average() - 60.0).abs() < 1e-9);
+    }
+}

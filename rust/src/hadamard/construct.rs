@@ -1,0 +1,263 @@
+//! Hadamard matrix constructions — rust twin of python/compile/hadamard_np.py.
+//!
+//! Orders: powers of two (Sylvester); q+1 for prime q ≡ 3 mod 4 (Paley I:
+//! 12, 20, 44, ...); 2(q+1) for prime q ≡ 1 mod 4 (Paley II: 28, 76); and
+//! any 2^j multiple of those bases via Sylvester doubling (448 = 2^4·28,
+//! 768 = 2^6·12, ...). Matrices are ±1; `normalized_hadamard` divides by
+//! √n to give the rotation used throughout the paper.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::tensor::Mat;
+
+pub fn is_prime(n: u64) -> bool {
+    if n < 2 {
+        return false;
+    }
+    let mut i = 2;
+    while i * i <= n {
+        if n % i == 0 {
+            return false;
+        }
+        i += 1;
+    }
+    true
+}
+
+/// (k, t) with d = k·t, k the power-of-2 part, t odd.
+pub fn pow2_split(d: usize) -> (usize, usize) {
+    let mut k = 1;
+    let mut t = d;
+    while t % 2 == 0 {
+        t /= 2;
+        k *= 2;
+    }
+    (k, t)
+}
+
+fn jacobsthal(q: usize) -> Vec<i8> {
+    // chi[a] for a in 0..q: quadratic residue character
+    let mut chi = vec![0i8; q];
+    let mut residues = vec![false; q];
+    for x in 1..q {
+        residues[(x * x) % q] = true;
+    }
+    for a in 1..q {
+        chi[a] = if residues[a] { 1 } else { -1 };
+    }
+    chi
+}
+
+/// Paley I: order q+1 for prime q ≡ 3 (mod 4). Entries ±1 as i8 grid.
+pub fn paley1(q: usize) -> Vec<Vec<i8>> {
+    assert!(is_prime(q as u64) && q % 4 == 3, "paley1 needs prime q ≡ 3 mod 4");
+    let n = q + 1;
+    let chi = jacobsthal(q);
+    let mut h = vec![vec![0i8; n]; n];
+    h[0][0] = 1;
+    for j in 1..n {
+        h[0][j] = 1;
+        h[j][0] = -1;
+    }
+    for i in 0..q {
+        for j in 0..q {
+            let s = chi[(i + q - j) % q];
+            h[i + 1][j + 1] = if i == j { 1 } else { s };
+        }
+    }
+    h
+}
+
+/// Paley II: order 2(q+1) for prime q ≡ 1 (mod 4).
+pub fn paley2(q: usize) -> Vec<Vec<i8>> {
+    assert!(is_prime(q as u64) && q % 4 == 1, "paley2 needs prime q ≡ 1 mod 4");
+    let m = q + 1;
+    let chi = jacobsthal(q);
+    // S: symmetric conference-type matrix with zero diagonal
+    let mut s = vec![vec![0i8; m]; m];
+    for j in 1..m {
+        s[0][j] = 1;
+        s[j][0] = 1;
+    }
+    for i in 0..q {
+        for j in 0..q {
+            if i != j {
+                s[i + 1][j + 1] = chi[(i + q - j) % q];
+            }
+        }
+    }
+    // H = kron(S, A) + kron(I, B); A = [[1,1],[1,-1]], B = [[1,-1],[-1,-1]]
+    let a = [[1i8, 1], [1, -1]];
+    let b = [[1i8, -1], [-1, -1]];
+    let n = 2 * m;
+    let mut h = vec![vec![0i8; n]; n];
+    for i in 0..m {
+        for j in 0..m {
+            for u in 0..2 {
+                for v in 0..2 {
+                    let mut val = s[i][j] * a[u][v];
+                    if i == j {
+                        val += b[u][v];
+                    }
+                    h[2 * i + u][2 * j + v] = val;
+                }
+            }
+        }
+    }
+    h
+}
+
+fn sylvester_double(h: Vec<Vec<i8>>) -> Vec<Vec<i8>> {
+    let n = h.len();
+    let mut out = vec![vec![0i8; 2 * n]; 2 * n];
+    for i in 0..n {
+        for j in 0..n {
+            out[i][j] = h[i][j];
+            out[i][j + n] = h[i][j];
+            out[i + n][j] = h[i][j];
+            out[i + n][j + n] = -h[i][j];
+        }
+    }
+    out
+}
+
+/// Unnormalized ±1 Hadamard matrix of order n.
+pub fn hadamard_signs(n: usize) -> Result<Vec<Vec<i8>>> {
+    if n == 1 {
+        return Ok(vec![vec![1]]);
+    }
+    let (k, t) = pow2_split(n);
+    if t == 1 {
+        let mut h = vec![vec![1i8]];
+        for _ in 0..k.trailing_zeros() {
+            h = sylvester_double(h);
+        }
+        return Ok(h);
+    }
+    let base = 4 * t;
+    if n % base != 0 || !(n / base).is_power_of_two() {
+        bail!("no Hadamard construction for order {n}");
+    }
+    let doublings = (n / base).trailing_zeros();
+    let mut h = if is_prime((base - 1) as u64) && (base - 1) % 4 == 3 {
+        paley1(base - 1)
+    } else if base % 2 == 0 && is_prime((base / 2 - 1) as u64) && (base / 2 - 1) % 4 == 1 {
+        paley2(base / 2 - 1)
+    } else {
+        bail!("no Paley construction for base order {base}");
+    };
+    for _ in 0..doublings {
+        h = sylvester_double(h);
+    }
+    Ok(h)
+}
+
+/// Unnormalized Hadamard matrix as a Mat of ±1.0.
+pub fn hadamard(n: usize) -> Result<Mat> {
+    let h = hadamard_signs(n)?;
+    Ok(Mat::from_fn(n, n, |i, j| h[i][j] as f32))
+}
+
+/// Normalized Hadamard rotation H/√n (columns unit-norm, ‖col‖_∞ = 1/√n).
+pub fn normalized_hadamard(n: usize) -> Result<Mat> {
+    let mut m = hadamard(n)?;
+    m.scale(1.0 / (n as f32).sqrt());
+    Ok(m)
+}
+
+/// Orders for which a construction exists (used by config validation).
+pub fn constructible(n: usize) -> bool {
+    hadamard_signs(n).is_ok()
+}
+
+/// Dense block-diagonal rotation I_{d/b} ⊗ (H_b/√b) — test/reference use.
+pub fn block_hadamard_dense(d: usize, b: usize) -> Result<Mat> {
+    ensure!(d % b == 0, "block {b} must divide {d}");
+    let hb = normalized_hadamard(b)?;
+    let mut out = Mat::zeros(d, d);
+    for g in 0..d / b {
+        for i in 0..b {
+            for j in 0..b {
+                *out.at_mut(g * b + i, g * b + j) = hb.at(i, j);
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_hadamard(h: &[Vec<i8>]) {
+        let n = h.len();
+        for i in 0..n {
+            for j in 0..n {
+                let dot: i64 = (0..n).map(|k| h[i][k] as i64 * h[j][k] as i64).sum();
+                let want = if i == j { n as i64 } else { 0 };
+                assert_eq!(dot, want, "rows {i},{j} of order {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn sylvester_orders() {
+        for n in [1usize, 2, 4, 8, 16, 64, 256, 1024] {
+            assert_hadamard(&hadamard_signs(n).unwrap());
+        }
+    }
+
+    #[test]
+    fn paley1_orders() {
+        for q in [11usize, 19, 43, 59] {
+            assert_hadamard(&paley1(q));
+        }
+    }
+
+    #[test]
+    fn paley2_orders() {
+        for q in [13usize, 37] {
+            assert_hadamard(&paley2(q));
+        }
+    }
+
+    #[test]
+    fn composite_orders() {
+        for n in [12usize, 24, 28, 48, 56, 76, 96, 112, 448, 768] {
+            assert_hadamard(&hadamard_signs(n).unwrap());
+        }
+    }
+
+    #[test]
+    fn unsupported_order() {
+        assert!(hadamard_signs(92).is_err());
+        assert!(hadamard_signs(6).is_err());
+    }
+
+    #[test]
+    fn pow2_split_cases() {
+        assert_eq!(pow2_split(14336), (2048, 7));
+        assert_eq!(pow2_split(8192), (8192, 1));
+        assert_eq!(pow2_split(9728), (512, 19));
+        assert_eq!(pow2_split(448), (64, 7));
+        assert_eq!(pow2_split(1), (1, 1));
+    }
+
+    #[test]
+    fn normalized_is_orthonormal() {
+        let h = normalized_hadamard(28).unwrap();
+        let g = h.matmul(&h.transpose());
+        for i in 0..28 {
+            for j in 0..28 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((g.at(i, j) - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn normalized_linf_is_inv_sqrt_n() {
+        let h = normalized_hadamard(64).unwrap();
+        assert!((h.abs_max() - 0.125).abs() < 1e-6);
+    }
+}

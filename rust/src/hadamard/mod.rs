@@ -1,0 +1,13 @@
+//! Hadamard rotation substrate: matrix constructions (Sylvester, Paley I/II),
+//! the in-place fast Walsh-Hadamard transform, the optimized non-power-of-2
+//! transform of Appendix A.1, and the analytic op-count model behind the
+//! paper's Tables 3 and 4.
+
+pub mod construct;
+pub mod fwht;
+pub mod nonpow2;
+pub mod opcount;
+pub mod rotator;
+
+pub use construct::{hadamard, normalized_hadamard, pow2_split};
+pub use rotator::BlockRotator;

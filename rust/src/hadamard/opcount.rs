@@ -1,0 +1,245 @@
+//! Analytic op-count model for online Hadamard rotations — Remark A.1 and
+//! Appendix A.1; regenerates the paper's Tables 3 and 4 exactly.
+//!
+//! Conventions (matching the paper's numbers):
+//!   * d = k·t with k the power-of-2 part, t the largest odd factor;
+//!   * for t > 1, d = 2^{k'}·4t with k' = log2(k) − 2;
+//!   * dense matmul: d² MACs;
+//!   * butterfly + matmul (Dao 2023-style): d(k' + 4t − 1);
+//!   * ours (App A.1): d(k' + t + 2);
+//!   * power-of-2 d: all butterfly methods cost d·log2(d);
+//!   * block rotation, power-of-2 b: d·log2(b).
+
+use super::construct::pow2_split;
+
+/// log2 for exact powers of two.
+fn log2(n: usize) -> usize {
+    debug_assert!(n.is_power_of_two());
+    n.trailing_zeros() as usize
+}
+
+/// Decompose d = 2^{k'} · 4t; returns (k', t). Requires t > 1.
+pub fn nonpow2_decomp(d: usize) -> (usize, usize) {
+    let (k, t) = pow2_split(d);
+    assert!(t > 1 && k >= 4, "d = {d} is not 2^k'·4t with t odd > 1");
+    (log2(k) - 2, t)
+}
+
+/// Ops for a dense d×d rotation matmul.
+pub fn dense_matmul_ops(d: usize) -> usize {
+    d * d
+}
+
+/// Ops for the butterfly + dense-base decomposition (existing approach).
+pub fn butterfly_matmul_ops(d: usize) -> usize {
+    let (_, t) = pow2_split(d);
+    if t == 1 {
+        d * log2(d)
+    } else {
+        let (kp, t) = nonpow2_decomp(d);
+        d * (kp + 4 * t - 1)
+    }
+}
+
+/// Ops for the paper's optimized non-power-of-2 rotation (Appendix A.1).
+pub fn ours_ops(d: usize) -> usize {
+    let (_, t) = pow2_split(d);
+    if t == 1 {
+        d * log2(d)
+    } else {
+        let (kp, t) = nonpow2_decomp(d);
+        d * (kp + t + 2)
+    }
+}
+
+/// Ops for a full-vector online rotation (paper's "Full" column): the
+/// butterfly for powers of two, ours otherwise.
+pub fn full_ops(d: usize) -> usize {
+    ours_ops(d)
+}
+
+/// Ops for a block Hadamard rotation with power-of-2 block size b.
+pub fn block_ops(d: usize, b: usize) -> usize {
+    assert!(d % b == 0, "block {b} must divide {d}");
+    if b == 1 {
+        return 0;
+    }
+    let (_, tb) = pow2_split(b);
+    if tb == 1 {
+        d * log2(b)
+    } else {
+        // non-pow-2 block: per-block ours cost
+        (d / b) * ours_ops(b)
+    }
+}
+
+/// One row of the paper's Table 3.
+#[derive(Debug, Clone)]
+pub struct Table3Row {
+    pub model: &'static str,
+    pub size: &'static str,
+    pub d: usize,
+    pub k: usize,
+    pub t: usize,
+    pub b32: usize,
+    pub b128: usize,
+    pub b512: usize,
+    pub full: usize,
+}
+
+/// The exact workloads of the paper's Table 3 (down-projection input dims).
+pub fn table3() -> Vec<Table3Row> {
+    let rows = [
+        ("Llama3", "1B/3B", 8192usize),
+        ("Llama3", "8B", 14336),
+        ("Qwen3", "1.7B", 6144),
+        ("Qwen3", "4B", 9728),
+        ("Qwen3", "8B", 12288),
+    ];
+    rows.iter()
+        .map(|&(model, size, d)| {
+            let (k, t) = pow2_split(d);
+            Table3Row {
+                model,
+                size,
+                d,
+                k,
+                t,
+                b32: block_ops(d, 32),
+                b128: block_ops(d, 128),
+                b512: block_ops(d, 512),
+                full: full_ops(d),
+            }
+        })
+        .collect()
+}
+
+/// One row of the paper's Table 4 (non-power-of-2 methods comparison).
+#[derive(Debug, Clone)]
+pub struct Table4Row {
+    pub model: &'static str,
+    pub d: usize,
+    pub kp: usize,
+    pub base: usize,
+    pub matmul: usize,
+    pub butterfly_matmul: usize,
+    pub ours: usize,
+}
+
+pub fn table4() -> Vec<Table4Row> {
+    let rows = [
+        ("Llama3-8B", 14336usize),
+        ("Qwen3-0.6B", 3072),
+        ("Qwen3-1.7B", 6144),
+        ("Qwen3-4B", 9728),
+        ("Qwen3-8B", 12288),
+    ];
+    rows.iter()
+        .map(|&(model, d)| {
+            let (_, t) = pow2_split(d);
+            let (kp, base) = if t == 1 {
+                // the paper still reports 2^{k'} x 4t with t from the
+                // greatest odd factor; for pow2 dims it uses t=3 forms of
+                // the Qwen sizes (3072 = 2^8 * 12, 12288 = 2^10 * 12)
+                (log2(d) - 2, 4)
+            } else {
+                let (kp, t) = nonpow2_decomp(d);
+                (kp, 4 * t)
+            };
+            Table4Row {
+                model,
+                d,
+                kp,
+                base,
+                matmul: dense_matmul_ops(d),
+                butterfly_matmul: butterfly_matmul_ops(d),
+                ours: ours_ops(d),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Every assertion below is a number printed in the paper.
+
+    #[test]
+    fn table3_llama3_1b() {
+        // d=8192: 40960 (38%), 57344 (54%), 73728 (69%), full 106496
+        assert_eq!(block_ops(8192, 32), 40960);
+        assert_eq!(block_ops(8192, 128), 57344);
+        assert_eq!(block_ops(8192, 512), 73728);
+        assert_eq!(full_ops(8192), 106496);
+    }
+
+    #[test]
+    fn table3_llama3_8b() {
+        // d=14336 = 2^11 * 7: 71680, 100352, 129024, full 258048
+        assert_eq!(block_ops(14336, 32), 71680);
+        assert_eq!(block_ops(14336, 128), 100352);
+        assert_eq!(block_ops(14336, 512), 129024);
+        assert_eq!(full_ops(14336), 258048);
+    }
+
+    #[test]
+    fn table3_qwen() {
+        assert_eq!(block_ops(6144, 32), 30720);
+        assert_eq!(block_ops(6144, 128), 43008);
+        assert_eq!(block_ops(6144, 512), 55296);
+        assert_eq!(full_ops(6144), 86016);
+        assert_eq!(block_ops(9728, 32), 48640);
+        assert_eq!(block_ops(9728, 128), 68096);
+        assert_eq!(block_ops(9728, 512), 87552);
+        assert_eq!(full_ops(9728), 272384);
+        assert_eq!(block_ops(12288, 32), 61440);
+        assert_eq!(block_ops(12288, 128), 86016);
+        assert_eq!(block_ops(12288, 512), 110592);
+        assert_eq!(full_ops(12288), 184320);
+    }
+
+    #[test]
+    fn table4_rows() {
+        // Llama3-8B: matmul 205.51M, butterfly+matmul 516.10K, ours 258.05K
+        assert_eq!(dense_matmul_ops(14336), 205_520_896);
+        assert_eq!(butterfly_matmul_ops(14336), 516_096);
+        assert_eq!(ours_ops(14336), 258_048);
+        // Qwen3-4B: 94.62M / 797.70K / 272.38K
+        assert_eq!(dense_matmul_ops(9728), 94_633_984);
+        assert_eq!(butterfly_matmul_ops(9728), 797_696);
+        assert_eq!(ours_ops(9728), 272_384);
+        // Qwen3-1.7B: 37.74M / 122.88K / 86.02K
+        assert_eq!(dense_matmul_ops(6144), 37_748_736);
+        assert_eq!(butterfly_matmul_ops(6144), 122_880);
+        assert_eq!(ours_ops(6144), 86_016);
+    }
+
+    #[test]
+    fn table4_ratios() {
+        // "1.4-2.9x reduction vs butterfly decomposition"
+        for d in [14336usize, 6144, 9728, 12288] {
+            let r = butterfly_matmul_ops(d) as f64 / ours_ops(d) as f64;
+            assert!((1.3..3.0).contains(&r), "d={d}: ratio {r}");
+        }
+    }
+
+    #[test]
+    fn asymptotic_4x() {
+        // for fixed k', t -> inf approaches 4x
+        let r = butterfly_matmul_ops(4 * 1019) as f64 / ours_ops(4 * 1019) as f64;
+        assert!(r > 3.5);
+    }
+
+    #[test]
+    fn block_ops_monotone_in_b() {
+        for d in [8192usize, 14336] {
+            let mut prev = 0;
+            for b in [2usize, 4, 8, 16, 32, 64, 128, 256, 512] {
+                let ops = block_ops(d, b);
+                assert!(ops > prev);
+                prev = ops;
+            }
+        }
+    }
+}

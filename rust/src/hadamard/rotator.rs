@@ -1,0 +1,221 @@
+//! `BlockRotator` — the unified online-rotation engine the L3 hot path
+//! uses: identity (b=1), FWHT (power-of-2 b), the optimized non-power-of-2
+//! plan, or an arbitrary dense orthogonal matrix (learned rotations).
+
+use anyhow::{ensure, Result};
+
+use super::construct::normalized_hadamard;
+use super::fwht::block_fwht_normalized;
+use super::nonpow2::NonPow2Plan;
+use crate::tensor::Mat;
+
+pub enum RotatorKind {
+    Identity,
+    Fwht,
+    Fast(NonPow2Plan),
+    /// Arbitrary dense b×b orthogonal rotation (e.g. Givens-refined).
+    Dense(Mat),
+}
+
+pub struct BlockRotator {
+    pub b: usize,
+    kind: RotatorKind,
+}
+
+impl BlockRotator {
+    /// Hadamard rotation with block size b (b=1 → identity, b=d → full).
+    pub fn hadamard(b: usize) -> Result<Self> {
+        let kind = if b == 1 {
+            RotatorKind::Identity
+        } else if b.is_power_of_two() {
+            RotatorKind::Fwht
+        } else {
+            RotatorKind::Fast(NonPow2Plan::new(b)?)
+        };
+        Ok(BlockRotator { b, kind })
+    }
+
+    /// Rotation by an explicit orthogonal matrix (learned-rotation arms).
+    pub fn dense(m: Mat) -> Result<Self> {
+        ensure!(m.rows == m.cols, "rotation must be square");
+        Ok(BlockRotator { b: m.rows, kind: RotatorKind::Dense(m) })
+    }
+
+    /// Transposed (inverse) rotator — used to fold R̃ᵀ into weights.
+    pub fn transposed(&self) -> Result<Self> {
+        match &self.kind {
+            // Hadamard/Sylvester normalized matrices here are symmetric only
+            // for Sylvester; Paley ones are not, so go through the dense
+            // matrix for correctness.
+            RotatorKind::Identity => BlockRotator::hadamard(1),
+            RotatorKind::Fwht => {
+                // Sylvester H/√b is symmetric ⇒ self-transpose
+                BlockRotator::hadamard(self.b)
+            }
+            RotatorKind::Fast(_) => {
+                let h = normalized_hadamard(self.b)?;
+                BlockRotator::dense(h.transpose())
+            }
+            RotatorKind::Dense(m) => BlockRotator::dense(m.transpose()),
+        }
+    }
+
+    /// The dense (b, b) matrix of this rotator — fed to the AOT artifact as
+    /// its `hb` input so the in-graph rotation matches the offline merges.
+    pub fn matrix(&self) -> Result<Mat> {
+        match &self.kind {
+            RotatorKind::Identity => Ok(Mat::eye(1)),
+            RotatorKind::Fwht | RotatorKind::Fast(_) => normalized_hadamard(self.b),
+            RotatorKind::Dense(m) => Ok(m.clone()),
+        }
+    }
+
+    /// Rotate one row in place (each contiguous b-block independently).
+    pub fn apply_row(&self, row: &mut [f32], scratch: &mut Vec<f32>) {
+        debug_assert!(row.len() % self.b == 0, "row {} not divisible by b {}", row.len(), self.b);
+        match &self.kind {
+            RotatorKind::Identity => {}
+            RotatorKind::Fwht => block_fwht_normalized(row, self.b),
+            RotatorKind::Fast(plan) => {
+                for blk in row.chunks_exact_mut(self.b) {
+                    plan.apply(blk, scratch);
+                }
+            }
+            RotatorKind::Dense(m) => {
+                let b = self.b;
+                scratch.clear();
+                scratch.resize(b, 0.0);
+                for blk in row.chunks_exact_mut(b) {
+                    for v in scratch.iter_mut() {
+                        *v = 0.0;
+                    }
+                    for (i, &xi) in blk.iter().enumerate() {
+                        if xi == 0.0 {
+                            continue;
+                        }
+                        let hrow = m.row(i);
+                        for (j, acc) in scratch.iter_mut().enumerate() {
+                            *acc += xi * hrow[j];
+                        }
+                    }
+                    blk.copy_from_slice(scratch);
+                }
+            }
+        }
+    }
+
+    /// Rotate every row of a (tokens × d) activation matrix in place.
+    pub fn apply_mat(&self, m: &mut Mat) {
+        let mut scratch = Vec::new();
+        let cols = m.cols;
+        for r in 0..m.rows {
+            let row = &mut m.data[r * cols..(r + 1) * cols];
+            self.apply_row(row, &mut scratch);
+        }
+    }
+
+    /// Rotate the *rows* of a weight matrix by R̃ᵀ, i.e. w ← R̃ᵀ w.
+    /// This is the offline merge that undoes an online activation rotation:
+    /// (x R̃)(R̃ᵀ w) = x w.
+    ///
+    /// Implementation: R̃ᵀw = (wᵀ·R̃)ᵀ, i.e. apply the rotator itself to
+    /// the rows of wᵀ. (Applying the *transposed* rotator here would give
+    /// R̃w, which only coincides for symmetric bases — Sylvester/Paley II —
+    /// and silently breaks Paley I bases like b = 12.)
+    pub fn merge_into_weight_rows(&self, w: &Mat) -> Result<Mat> {
+        let mut wt = w.transpose();
+        self.apply_mat(&mut wt);
+        Ok(wt.transpose())
+    }
+
+    /// Rotate weight rows by R̃ (the forward direction): w ← R̃ w = (wᵀR̃ᵀ)ᵀ.
+    /// Used by the fully-online graph to pre-compensate the in-graph weight
+    /// rotation (see coordinator::pipeline).
+    pub fn rotate_weight_rows_fwd(&self, w: &Mat) -> Result<Mat> {
+        let inv = self.transposed()?;
+        let mut wt = w.transpose();
+        inv.apply_mat(&mut wt);
+        Ok(wt.transpose())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hadamard::construct::normalized_hadamard;
+
+    fn rand_mat(r: usize, c: usize, seed: u64) -> Mat {
+        let mut rng = crate::data::rng::Rng::new(seed);
+        Mat::from_fn(r, c, |_, _| rng.next_normal() as f32)
+    }
+
+    #[test]
+    fn fwht_rotator_matches_dense() {
+        let x = rand_mat(5, 64, 1);
+        let rot = BlockRotator::hadamard(16).unwrap();
+        let mut got = x.clone();
+        rot.apply_mat(&mut got);
+        let h = crate::hadamard::construct::block_hadamard_dense(64, 16).unwrap();
+        let want = x.matmul(&h);
+        for (g, w) in got.data.iter().zip(&want.data) {
+            assert!((g - w).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn nonpow2_rotator_matches_dense() {
+        let x = rand_mat(4, 56, 2);
+        let rot = BlockRotator::hadamard(28).unwrap();
+        let mut got = x.clone();
+        rot.apply_mat(&mut got);
+        let h = crate::hadamard::construct::block_hadamard_dense(56, 28).unwrap();
+        let want = x.matmul(&h);
+        for (g, w) in got.data.iter().zip(&want.data) {
+            assert!((g - w).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn identity_rotator_noop() {
+        let x = rand_mat(3, 10, 3);
+        let rot = BlockRotator::hadamard(1).unwrap();
+        let mut got = x.clone();
+        rot.apply_mat(&mut got);
+        assert_eq!(got.data, x.data);
+    }
+
+    #[test]
+    fn merge_undoes_online_rotation() {
+        // (x R̃) @ (R̃ᵀ w) == x @ w for every rotator kind, including the
+        // *asymmetric* Paley-I base b = 12 (regression: a transposed-side
+        // bug is invisible on symmetric bases).
+        for b in [1usize, 4, 12, 16, 28] {
+            let d = if b == 28 { 56 } else { 48 };
+            let x = rand_mat(6, d, b as u64);
+            let w = rand_mat(d, 9, b as u64 + 100);
+            let rot = BlockRotator::hadamard(b).unwrap();
+            let mut xr = x.clone();
+            rot.apply_mat(&mut xr);
+            let wm = rot.merge_into_weight_rows(&w).unwrap();
+            let got = xr.matmul(&wm);
+            let want = x.matmul(&w);
+            for (g, ww) in got.data.iter().zip(&want.data) {
+                assert!((g - ww).abs() < 1e-3, "b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_rotator_matches_matmul() {
+        let h = normalized_hadamard(12).unwrap();
+        let rot = BlockRotator::dense(h.clone()).unwrap();
+        let x = rand_mat(4, 24, 7);
+        let mut got = x.clone();
+        rot.apply_mat(&mut got);
+        let hd = crate::hadamard::construct::block_hadamard_dense(24, 12).unwrap();
+        let want = x.matmul(&hd);
+        for (g, w) in got.data.iter().zip(&want.data) {
+            assert!((g - w).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,59 @@
+//! # PeRQ — Permute, Rotate, then Quantize
+//!
+//! Production reproduction of *"Pushing the Limits of Block Rotations in
+//! Post-Training Quantization"* (ICML 2026) as a three-layer rust + JAX +
+//! Pallas stack:
+//!
+//! * **L3 (this crate)** — the quantization-pipeline coordinator: corpus +
+//!   calibration management, the MassDiff permutation calibrator, the
+//!   offline weight-transform engine (merging permutations and rotations
+//!   into weights, Remark 4.2 / Fig 7), RTN/GPTQ/Qronos rounding, the PJRT
+//!   runtime that executes AOT artifacts, evaluation (perplexity +
+//!   zero-shot probes), and the bench harness that regenerates every table
+//!   and figure in the paper.
+//! * **L2 (python/compile, build time)** — the jax transformer compute
+//!   graph and its quantization-graph variants, lowered to HLO text.
+//! * **L1 (python/compile/kernels, build time)** — pallas kernels for the
+//!   online block-Hadamard rotation and fake-quantization hot paths.
+//!
+//! Python never runs at inference/evaluation time: `make artifacts` lowers
+//! everything once, and the rust binary is self-contained afterwards.
+//!
+//! Quick start (see examples/quickstart.rs):
+//! ```no_run
+//! use perq::prelude::*;
+//!
+//! let ctx = RepoContext::discover().unwrap();
+//! let bundle = ModelBundle::load(&ctx, "llama_tiny").unwrap();
+//! let spec = perq::coordinator::presets::perq_star(32, Format::Int4);
+//! let report = Pipeline::new(spec).run(&bundle).unwrap();
+//! println!("ppl = {:.2}", report.perplexity);
+//! ```
+
+pub mod calib;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod hadamard;
+pub mod model;
+pub mod permute;
+pub mod quant;
+pub mod rounding;
+pub mod runtime;
+pub mod stats;
+pub mod tensor;
+pub mod util;
+
+/// Convenience re-exports for examples and benches.
+pub mod prelude {
+    pub use crate::coordinator::pipeline::{baseline_eval, Pipeline, PipelineReport};
+    pub use crate::coordinator::presets;
+    pub use crate::coordinator::spec::{GraphKind, PipelineSpec, RotKind, RotationSpec};
+    pub use crate::data::corpus::Source;
+    pub use crate::model::bundle::ModelBundle;
+    pub use crate::permute::PermKind;
+    pub use crate::quant::Format;
+    pub use crate::rounding::Rounding;
+    pub use crate::runtime::{Engine, RepoContext};
+    pub use crate::tensor::Mat;
+}

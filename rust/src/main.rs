@@ -1,0 +1,247 @@
+//! `perq` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   quantize   run a full PTQ pipeline and report perplexity / 0-shot
+//!   baseline   evaluate the full-precision model
+//!   sweep      block-size sweep (Table 1 style) for one method
+//!   opcounts   print the analytic rotation op-count tables (Tables 3-4)
+//!   stats      mass-concentration statistics on real activations (Fig 3-4)
+//!   models     list available model bundles
+//!
+//! Examples:
+//!   perq quantize --model llama_tiny --preset perq_star --block 32
+//!   perq quantize --model llama_tiny --perm zigzag --rounding gptq --format fp4
+//!   perq sweep --model llama_tiny --blocks 16,32,64 --format int4
+//!   perq baseline --model qwen_tiny
+
+use anyhow::{anyhow, bail, Result};
+
+use perq::calib::capture;
+use perq::coordinator::presets;
+use perq::coordinator::spec::{GraphKind, PipelineSpec, RotationSpec};
+use perq::hadamard::opcount;
+use perq::model::transform;
+use perq::prelude::*;
+use perq::stats;
+use perq::util::bench::{fmt_count, fmt_ppl, print_table};
+use perq::util::cli;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = cli::parse(&argv);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match cmd {
+        "quantize" => cmd_quantize(&args),
+        "baseline" => cmd_baseline(&args),
+        "sweep" => cmd_sweep(&args),
+        "opcounts" => cmd_opcounts(),
+        "stats" => cmd_stats(&args),
+        "models" => cmd_models(),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "perq — Permute, Rotate, then Quantize (PTQ coordinator)\n\
+         \n\
+         USAGE: perq <command> [options]\n\
+         \n\
+         COMMANDS:\n\
+         \x20 quantize   --model M [--preset P | --perm/--rounding/--format/--block ...]\n\
+         \x20 baseline   --model M [--eval-tokens N]\n\
+         \x20 sweep      --model M --blocks 16,32,64 [--perm massdiff]\n\
+         \x20 opcounts   (analytic Tables 3-4)\n\
+         \x20 stats      --model M [--block B]\n\
+         \x20 models\n\
+         \n\
+         PRESETS: perq_star perq_dagger no_permute mr_rtn mr_gptq mr_qronos brq_spin\n\
+         OPTIONS: --perm identity|random|absmax|zigzag|massdiff\n\
+         \x20        --rounding rtn|gptq|qronos   --format int4|fp4|mxfp4\n\
+         \x20        --block N   --online   --zeroshot   --eval-tokens N\n\
+         \x20        --calib-seqs N   --source wiki|c4|fineweb"
+    );
+}
+
+fn spec_from_args(args: &cli::Args) -> Result<PipelineSpec> {
+    let block = args.get_usize("block", 32);
+    let format = Format::parse(&args.get_or("format", "int4"))
+        .ok_or_else(|| anyhow!("bad --format"))?;
+    let mut spec = if let Some(preset) = args.get("preset") {
+        match preset {
+            "perq_star" => presets::perq_star(block, format),
+            "perq_dagger" => presets::perq_dagger(block, format),
+            "no_permute" => presets::no_permute(block, format),
+            "mr_rtn" => presets::mr(block, Rounding::Rtn, format),
+            "mr_gptq" => presets::mr(block, Rounding::Gptq, format),
+            "mr_qronos" => presets::mr(block, Rounding::Qronos, format),
+            "brq_spin" => presets::brq_spin(block, format),
+            p => bail!("unknown preset {p}"),
+        }
+    } else {
+        let mut s = PipelineSpec::default();
+        s.rotation = RotationSpec::quarot(block);
+        s.format = format;
+        if let Some(p) = args.get("perm") {
+            s.permutation = PermKind::parse(p).ok_or_else(|| anyhow!("bad --perm"))?;
+        }
+        if let Some(r) = args.get("rounding") {
+            s.rounding = Rounding::parse(r).ok_or_else(|| anyhow!("bad --rounding"))?;
+        }
+        s
+    };
+    if args.has_flag("online") {
+        spec.graph = GraphKind::Online;
+    }
+    if args.has_flag("zeroshot") {
+        spec.run_zeroshot = true;
+    }
+    spec.eval_tokens = args.get_usize("eval-tokens", spec.eval_tokens);
+    spec.calib_seqs = args.get_usize("calib-seqs", spec.calib_seqs);
+    if let Some(src) = args.get("source") {
+        let s = Source::parse(src).ok_or_else(|| anyhow!("bad --source"))?;
+        spec.calib_source = s;
+    }
+    Ok(spec)
+}
+
+fn cmd_quantize(args: &cli::Args) -> Result<()> {
+    let model = args.get_or("model", "llama_tiny");
+    let ctx = RepoContext::discover()?;
+    let bundle = ModelBundle::load(&ctx, &model)?;
+    let spec = spec_from_args(args)?;
+    println!("pipeline: {}", spec.label());
+    println!("model:    {} ({} params)", model, bundle.weights.param_count());
+    let report = Pipeline::new(spec).run(&bundle)?;
+    println!("perplexity:   {:.3} ({})", report.perplexity, fmt_ppl(report.perplexity));
+    println!("nll:          {:.4} nats/token", report.nll);
+    println!("mass balance: {:.3}x of optimum", report.mass_balance);
+    println!("calib tokens: {}", report.calib_tokens);
+    if let Some(z) = &report.zeroshot {
+        for (name, acc) in z.task_names.iter().zip(&z.accuracies) {
+            println!("  0-shot {name:<14} {:.1}%", acc * 100.0);
+        }
+        println!("  0-shot average       {:.1}%", z.average());
+    }
+    println!("wall: {:.1}s", report.wall_ms / 1e3);
+    Ok(())
+}
+
+fn cmd_baseline(args: &cli::Args) -> Result<()> {
+    let model = args.get_or("model", "llama_tiny");
+    let ctx = RepoContext::discover()?;
+    let engine = Engine::new(&ctx)?;
+    let bundle = ModelBundle::load_with_engine(&ctx, &engine, &model)?;
+    let n = args.get_usize("eval-tokens", 8192);
+    let z = args.has_flag("zeroshot").then_some(2048);
+    let (eval, zres) = baseline_eval(&bundle, &engine, n, z)?;
+    println!("{model} BF16-analog baseline: ppl {:.3} over {} predictions",
+             eval.perplexity, eval.n_predictions);
+    if let Some(z) = zres {
+        println!("  0-shot average {:.1}%", z.average());
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &cli::Args) -> Result<()> {
+    let model = args.get_or("model", "llama_tiny");
+    let blocks: Vec<usize> = args
+        .get_or("blocks", "16,32,64,128")
+        .split(',')
+        .filter_map(|s| s.parse().ok())
+        .collect();
+    let ctx = RepoContext::discover()?;
+    let engine = Engine::new(&ctx)?;
+    let bundle = ModelBundle::load_with_engine(&ctx, &engine, &model)?;
+    let mut rows = Vec::new();
+    for &b in &blocks {
+        let mut spec = spec_from_args(args)?;
+        spec.rotation = RotationSpec::quarot(b);
+        let rep = Pipeline::new(spec).run_with_engine(&bundle, &engine)?;
+        println!("  b={b}: ppl {:.2}", rep.perplexity);
+        rows.push((format!("b={b}"), vec![fmt_ppl(rep.perplexity)]));
+    }
+    print_table(&format!("{model} block-size sweep"), &["ppl"], &rows);
+    Ok(())
+}
+
+fn cmd_opcounts() -> Result<()> {
+    let rows3: Vec<(String, Vec<String>)> = opcount::table3()
+        .into_iter()
+        .map(|r| {
+            let pct = |ops: usize| format!("{} ({:.0}%)", fmt_count(ops),
+                                           100.0 * ops as f64 / r.full as f64);
+            (
+                format!("{} {} d={}", r.model, r.size, r.d),
+                vec![pct(r.b32), pct(r.b128), pct(r.b512), fmt_count(r.full)],
+            )
+        })
+        .collect();
+    print_table("Table 3: rotation op counts", &["b=32", "b=128", "b=512", "Full"], &rows3);
+    let rows4: Vec<(String, Vec<String>)> = opcount::table4()
+        .into_iter()
+        .map(|r| {
+            (
+                format!("{} d={} (2^{}x{})", r.model, r.d, r.kp, r.base),
+                vec![
+                    fmt_count(r.matmul),
+                    fmt_count(r.butterfly_matmul),
+                    fmt_count(r.ours),
+                ],
+            )
+        })
+        .collect();
+    print_table("Table 4: non-power-of-2 methods", &["Matmul", "Bfly+MM", "Ours"], &rows4);
+    Ok(())
+}
+
+fn cmd_stats(args: &cli::Args) -> Result<()> {
+    let model = args.get_or("model", "llama_tiny");
+    let block = args.get_usize("block", 32);
+    let ctx = RepoContext::discover()?;
+    let engine = Engine::new(&ctx)?;
+    let bundle = ModelBundle::load_with_engine(&ctx, &engine, &model)?;
+    let cfg = &bundle.cfg;
+    let mut ws = bundle.weights.clone();
+    transform::fold_norms(&mut ws, cfg);
+    let seqs = capture::calibration_batches(cfg, Source::Wiki, 8, 3);
+    let caps = capture::run_capture(&engine, &model, cfg, &ws, &seqs)?;
+    println!("mass concentration at down-projection inputs ({model}, {} tokens):",
+             caps.n_tokens);
+    for l in 0..cfg.n_layers {
+        let down = &caps.down_in[l];
+        let mut deltas = Vec::new();
+        let mut bounds = Vec::new();
+        for r in 0..down.rows.min(512) {
+            let row = down.row(r);
+            deltas.push(stats::delta(row));
+            bounds.push(stats::normalized_bound(row, block));
+        }
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        println!(
+            "  layer {l}: mean delta {:.4}  mean bound(b={block}) {:.4}  1/sqrt(b)={:.4}  1/b={:.4}",
+            mean(&deltas), mean(&bounds),
+            1.0 / (block as f64).sqrt(), 1.0 / block as f64
+        );
+    }
+    Ok(())
+}
+
+fn cmd_models() -> Result<()> {
+    let ctx = RepoContext::discover()?;
+    for entry in std::fs::read_dir(&ctx.artifacts)? {
+        let entry = entry?;
+        if entry.path().join("meta.json").exists() {
+            let name = entry.file_name().to_string_lossy().to_string();
+            println!("{name}");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! `ModelBundle`: a model's config + pristine weights + artifact metadata,
+//! loaded once and shared (read-only) across pipeline runs.
+
+use anyhow::{Context, Result};
+
+use super::config::ModelConfig;
+use super::weights::WeightSet;
+use crate::runtime::{Engine, RepoContext};
+use crate::tensor::{npy, Mat};
+use crate::util::json::Json;
+
+pub struct ModelBundle {
+    pub name: String,
+    pub cfg: ModelConfig,
+    pub meta: Json,
+    /// pristine full-precision weights (never mutated; pipelines clone)
+    pub weights: WeightSet,
+    /// learned full-vector R1 from rotopt.py, if present
+    pub learned_r1: Option<Mat>,
+    /// learned b×b block rotation from rotopt.py, if present
+    pub learned_r1_block: Option<(usize, Mat)>,
+    pub ctx: RepoContext,
+}
+
+impl ModelBundle {
+    pub fn load(ctx: &RepoContext, name: &str) -> Result<ModelBundle> {
+        let engine = Engine::new(ctx)?;
+        Self::load_with_engine(ctx, &engine, name)
+    }
+
+    /// Load using an existing engine (avoids spinning up extra PJRT clients).
+    pub fn load_with_engine(ctx: &RepoContext, engine: &Engine, name: &str) -> Result<ModelBundle> {
+        let meta = engine
+            .load_meta(name)
+            .with_context(|| format!("loading meta for {name}"))?;
+        let cfg = ModelConfig::from_meta(&meta)?;
+        let weights = WeightSet::load(&ctx.weights_dir(name), &cfg.weight_names())
+            .with_context(|| format!("loading weights for {name}"))?;
+        let wdir = ctx.weights_dir(name);
+        let learned_r1 = npy::read_mat(&wdir.join("rotopt_r1.npy")).ok();
+        let learned_r1_block = npy::read_mat(&wdir.join("rotopt_r1_b32.npy"))
+            .ok()
+            .map(|m| (m.rows, m));
+        Ok(ModelBundle {
+            name: name.to_string(),
+            cfg,
+            meta,
+            weights,
+            learned_r1,
+            learned_r1_block,
+            ctx: ctx.clone(),
+        })
+    }
+
+    /// Tags of the quant-graph artifacts this bundle provides.
+    pub fn quant_tag(&self, block: usize) -> String {
+        format!("fwd_quant_b{block}")
+    }
+
+    pub fn has_artifact(&self, tag: &str) -> bool {
+        self.ctx
+            .model_dir(&self.name)
+            .join(format!("{tag}.hlo.txt"))
+            .exists()
+    }
+}

@@ -1,0 +1,151 @@
+//! Model configuration — the rust view of python/compile/model.py's
+//! ModelConfig, parsed from the meta.json the AOT exporter writes.
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ffn: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub block_sizes: Vec<usize>,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn from_meta(meta: &Json) -> Result<ModelConfig> {
+        let c = meta.get("config").ok_or_else(|| anyhow!("meta: no config"))?;
+        let req = |k: &str| -> Result<usize> {
+            c.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("meta.config missing {k}"))
+        };
+        Ok(ModelConfig {
+            name: c
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("meta.config missing name"))?
+                .to_string(),
+            n_layers: req("n_layers")?,
+            d_model: req("d_model")?,
+            n_heads: req("n_heads")?,
+            d_ffn: req("d_ffn")?,
+            vocab: req("vocab")?,
+            seq_len: req("seq_len")?,
+            batch: req("batch")?,
+            block_sizes: c
+                .get("block_sizes")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                .unwrap_or_default(),
+        })
+    }
+
+    /// Canonical weight ordering — must match python model.weight_names.
+    pub fn weight_names(&self) -> Vec<String> {
+        let mut names = vec!["embed".to_string(), "pos".to_string()];
+        for i in 0..self.n_layers {
+            for part in ["n1", "wq", "wk", "wv", "wo", "n2", "wg", "wu", "wd"] {
+                names.push(format!("l{i}.{part}"));
+            }
+        }
+        names.push("nf".to_string());
+        names.push("wout".to_string());
+        names
+    }
+
+    /// The per-layer linear sites PeRQ quantizes, with their calibration
+    /// capture source. (embed/pos/unembed stay full precision, as in
+    /// QuaRot-style pipelines.)
+    pub fn linear_sites(&self) -> Vec<LinearSite> {
+        let mut out = Vec::new();
+        for l in 0..self.n_layers {
+            for (part, cap) in [
+                ("wq", CaptureKind::AttnIn),
+                ("wk", CaptureKind::AttnIn),
+                ("wv", CaptureKind::AttnIn),
+                ("wo", CaptureKind::OIn),
+                ("wg", CaptureKind::FfnIn),
+                ("wu", CaptureKind::FfnIn),
+                ("wd", CaptureKind::DownIn),
+            ] {
+                out.push(LinearSite { layer: l, name: format!("l{l}.{part}"), capture: cap });
+            }
+        }
+        out
+    }
+}
+
+/// Which calibration capture feeds a linear's Hessian.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CaptureKind {
+    /// post-norm1 residual (input of wq/wk/wv)
+    AttnIn,
+    /// attention context (input of wo)
+    OIn,
+    /// post-norm2 residual (input of wg/wu)
+    FfnIn,
+    /// SwiGLU output (input of wd — the R̃3 site)
+    DownIn,
+}
+
+#[derive(Clone, Debug)]
+pub struct LinearSite {
+    pub layer: usize,
+    pub name: String,
+    pub capture: CaptureKind,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn sample_meta() -> Json {
+        json::parse(
+            r#"{"config": {"name": "m", "n_layers": 2, "d_model": 128,
+                "n_heads": 4, "d_ffn": 448, "vocab": 32, "seq_len": 128,
+                "batch": 8, "block_sizes": [1, 16, 32]}}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_config() {
+        let c = ModelConfig::from_meta(&sample_meta()).unwrap();
+        assert_eq!(c.name, "m");
+        assert_eq!(c.d_ffn, 448);
+        assert_eq!(c.head_dim(), 32);
+        assert_eq!(c.block_sizes, vec![1, 16, 32]);
+    }
+
+    #[test]
+    fn weight_names_match_python_layout() {
+        let c = ModelConfig::from_meta(&sample_meta()).unwrap();
+        let names = c.weight_names();
+        assert_eq!(names.len(), 2 + 9 * 2 + 2);
+        assert_eq!(names[0], "embed");
+        assert_eq!(names[2], "l0.n1");
+        assert_eq!(names[10], "l0.wd");
+        assert_eq!(*names.last().unwrap(), "wout");
+    }
+
+    #[test]
+    fn linear_sites_enumeration() {
+        let c = ModelConfig::from_meta(&sample_meta()).unwrap();
+        let sites = c.linear_sites();
+        assert_eq!(sites.len(), 14);
+        assert_eq!(sites[6].name, "l0.wd");
+        assert_eq!(sites[6].capture, CaptureKind::DownIn);
+    }
+}

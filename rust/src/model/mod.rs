@@ -1,0 +1,13 @@
+//! Model substrate: configuration (parsed from artifacts/<model>/meta.json),
+//! the weight store, the offline transform engine (merging norm scales,
+//! rotations R1/R2/R̃3 and permutations P3 into weights — Fig 7 / Remark
+//! 4.2), and the `ModelBundle` tying them to a set of AOT artifacts.
+
+pub mod bundle;
+pub mod config;
+pub mod transform;
+pub mod weights;
+
+pub use bundle::ModelBundle;
+pub use config::ModelConfig;
+pub use weights::WeightSet;

@@ -1,0 +1,266 @@
+//! The offline weight-transform engine — everything PeRQ merges into the
+//! model before deployment (Fig 7 / Remark 4.2), leaving the compute graph
+//! untouched:
+//!
+//! * `fold_norms`   — absorb RMSNorm scale vectors into adjacent linears
+//!                    (prerequisite for rotation commutation);
+//! * `merge_r1`     — residual-stream rotation: embed/pos/wo/wd outputs
+//!                    right-multiplied, wq/wk/wv/wg/wu/wout inputs
+//!                    left-multiplied by R1ᵀ;
+//! * `merge_r2`     — per-head v→o rotation;
+//! * `merge_p3`     — the PeRQ permutation through the SwiGLU
+//!                    permutation-equivariant region (wg/wu out-cols,
+//!                    wd in-rows);
+//! * `merge_r3_inv` — fold R̃3ᵀ into wd so the graph's online rotation is
+//!                    exactly cancelled at full precision.
+//!
+//! Python-side mirrors of these merges are validated in
+//! python/tests/test_model.py (invariance of the fp forward).
+
+use anyhow::Result;
+
+use super::config::ModelConfig;
+use super::weights::WeightSet;
+use crate::hadamard::BlockRotator;
+use crate::tensor::Mat;
+
+/// Fold every RMSNorm scale into the adjacent linear weights and reset the
+/// scales to 1 (rotation only commutes with scale-free RMSNorm).
+pub fn fold_norms(ws: &mut WeightSet, cfg: &ModelConfig) {
+    for l in 0..cfg.n_layers {
+        let s1 = ws.get(&format!("l{l}.n1")).data.clone();
+        for part in ["wq", "wk", "wv"] {
+            let name = format!("l{l}.{part}");
+            let folded = ws.get(&name).scale_rows(&s1);
+            ws.set(&name, folded);
+        }
+        ws.set(&format!("l{l}.n1"), Mat::from_vec(1, cfg.d_model, vec![1.0; cfg.d_model]));
+        let s2 = ws.get(&format!("l{l}.n2")).data.clone();
+        for part in ["wg", "wu"] {
+            let name = format!("l{l}.{part}");
+            let folded = ws.get(&name).scale_rows(&s2);
+            ws.set(&name, folded);
+        }
+        ws.set(&format!("l{l}.n2"), Mat::from_vec(1, cfg.d_model, vec![1.0; cfg.d_model]));
+    }
+    let sf = ws.get("nf").data.clone();
+    let folded = ws.get("wout").scale_rows(&sf);
+    ws.set("wout", folded);
+    ws.set("nf", Mat::from_vec(1, cfg.d_model, vec![1.0; cfg.d_model]));
+}
+
+/// Merge the residual rotation R1 (d_model × d_model orthogonal).
+/// Requires `fold_norms` first.
+pub fn merge_r1(ws: &mut WeightSet, cfg: &ModelConfig, r1: &Mat) {
+    assert_eq!(r1.rows, cfg.d_model);
+    let r1t = r1.transpose();
+    // residual producers: right-multiply by R1
+    for name in ["embed", "pos"] {
+        let m = ws.get(name).matmul(r1);
+        ws.set(name, m);
+    }
+    for l in 0..cfg.n_layers {
+        for part in ["wo", "wd"] {
+            let name = format!("l{l}.{part}");
+            let m = ws.get(&name).matmul(r1);
+            ws.set(&name, m);
+        }
+        // residual consumers: left-multiply by R1ᵀ
+        for part in ["wq", "wk", "wv", "wg", "wu"] {
+            let name = format!("l{l}.{part}");
+            let m = r1t.matmul(ws.get(&name));
+            ws.set(&name, m);
+        }
+    }
+    let m = r1t.matmul(ws.get("wout"));
+    ws.set("wout", m);
+}
+
+/// Merge the per-head rotation R2 (head_dim × head_dim) into wv (out cols,
+/// per head) and wo (in rows, per head).
+pub fn merge_r2(ws: &mut WeightSet, cfg: &ModelConfig, r2: &Mat) {
+    let hd = cfg.head_dim();
+    assert_eq!(r2.rows, hd);
+    // block-diagonal expansion of r2 over heads
+    let mut blk = Mat::zeros(cfg.d_model, cfg.d_model);
+    for h in 0..cfg.n_heads {
+        for i in 0..hd {
+            for j in 0..hd {
+                *blk.at_mut(h * hd + i, h * hd + j) = r2.at(i, j);
+            }
+        }
+    }
+    let blk_t = blk.transpose();
+    for l in 0..cfg.n_layers {
+        let wv = ws.get(&format!("l{l}.wv")).matmul(&blk);
+        ws.set(&format!("l{l}.wv"), wv);
+        let wo = blk_t.matmul(ws.get(&format!("l{l}.wo")));
+        ws.set(&format!("l{l}.wo"), wo);
+    }
+}
+
+/// Merge the PeRQ permutation P3 for one layer through the SwiGLU region:
+/// wg/wu out-columns gathered by `perm`, wd in-rows gathered by `perm`.
+pub fn merge_p3_layer(ws: &mut WeightSet, layer: usize, perm: &[usize]) {
+    for part in ["wg", "wu"] {
+        let name = format!("l{layer}.{part}");
+        let m = ws.get(&name).permute_cols(perm);
+        ws.set(&name, m);
+    }
+    let name = format!("l{layer}.wd");
+    let m = ws.get(&name).permute_rows(perm);
+    ws.set(&name, m);
+}
+
+/// Fold the inverse online rotation R̃3ᵀ into wd's input rows, so that the
+/// graph's online rotation of the activations cancels exactly at fmt=0.
+pub fn merge_r3_inv(ws: &mut WeightSet, cfg: &ModelConfig, rot: &BlockRotator) -> Result<()> {
+    for l in 0..cfg.n_layers {
+        let name = format!("l{l}.wd");
+        let merged = rot.merge_into_weight_rows(ws.get(&name))?;
+        ws.set(&name, merged);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    //! Invariance is verified end-to-end against the AOT artifacts in
+    //! tests/integration.rs; here we check the pure linear algebra.
+
+    use super::*;
+    use crate::model::config::ModelConfig;
+    use crate::util::json;
+
+    fn tiny_cfg() -> ModelConfig {
+        let j = json::parse(
+            r#"{"config": {"name": "t", "n_layers": 1, "d_model": 16,
+                "n_heads": 2, "d_ffn": 32, "vocab": 8, "seq_len": 4,
+                "batch": 1, "block_sizes": [1]}}"#,
+        )
+        .unwrap();
+        ModelConfig::from_meta(&j).unwrap()
+    }
+
+    fn fake_ws(cfg: &ModelConfig, seed: u64) -> WeightSet {
+        let mut rng = crate::data::rng::Rng::new(seed);
+        let mut tensors = std::collections::BTreeMap::new();
+        let mut shapes = std::collections::BTreeMap::new();
+        let d = cfg.d_model;
+        let f = cfg.d_ffn;
+        let mut add = |name: &str, r: usize, c: usize, rank1: bool, rng: &mut crate::data::rng::Rng| {
+            let m = Mat::from_fn(r, c, |_, _| rng.next_normal() as f32 * 0.3);
+            shapes.insert(name.to_string(), if rank1 { vec![c] } else { vec![r, c] });
+            tensors.insert(name.to_string(), m);
+        };
+        add("embed", cfg.vocab, d, false, &mut rng);
+        add("pos", cfg.seq_len, d, false, &mut rng);
+        add("l0.n1", 1, d, true, &mut rng);
+        add("l0.wq", d, d, false, &mut rng);
+        add("l0.wk", d, d, false, &mut rng);
+        add("l0.wv", d, d, false, &mut rng);
+        add("l0.wo", d, d, false, &mut rng);
+        add("l0.n2", 1, d, true, &mut rng);
+        add("l0.wg", d, f, false, &mut rng);
+        add("l0.wu", d, f, false, &mut rng);
+        add("l0.wd", f, d, false, &mut rng);
+        add("nf", 1, d, true, &mut rng);
+        add("wout", d, cfg.vocab, false, &mut rng);
+        WeightSet { names: cfg.weight_names(), tensors, shapes }
+    }
+
+    #[test]
+    fn fold_norms_preserves_linear_response() {
+        // rmsnorm(x, s) @ W == rmsnorm(x, 1) @ diag(s)W — check diag(s)W part
+        let cfg = tiny_cfg();
+        let mut ws = fake_ws(&cfg, 1);
+        let s1 = ws.get("l0.n1").data.clone();
+        let wq_before = ws.get("l0.wq").clone();
+        fold_norms(&mut ws, &cfg);
+        let wq_after = ws.get("l0.wq");
+        for i in 0..cfg.d_model {
+            for j in 0..cfg.d_model {
+                let want = wq_before.at(i, j) * s1[i];
+                assert!((wq_after.at(i, j) - want).abs() < 1e-6);
+            }
+        }
+        assert!(ws.get("l0.n1").data.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn r1_merge_preserves_residual_algebra() {
+        // (x R)(Rᵀ W) == x W at full precision
+        let cfg = tiny_cfg();
+        let mut ws = fake_ws(&cfg, 2);
+        fold_norms(&mut ws, &cfg);
+        let x = Mat::from_fn(3, cfg.d_model, |i, j| ((i + j) as f32).sin());
+        let before = x.matmul(ws.get("l0.wq"));
+        let r1 = crate::hadamard::normalized_hadamard(cfg.d_model).unwrap();
+        merge_r1(&mut ws, &cfg, &r1);
+        let xr = x.matmul(&r1);
+        let after = xr.matmul(ws.get("l0.wq"));
+        for (a, b) in after.data.iter().zip(&before.data) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn r2_merge_is_involution_for_symmetric_rotation() {
+        // Sylvester H/√n is symmetric ⇒ merging twice restores wv·wo product
+        let cfg = tiny_cfg();
+        let mut ws = fake_ws(&cfg, 3);
+        let prod_before = ws.get("l0.wv").matmul(ws.get("l0.wo"));
+        let r2 = crate::hadamard::normalized_hadamard(cfg.head_dim()).unwrap();
+        merge_r2(&mut ws, &cfg, &r2);
+        let prod_after = ws.get("l0.wv").matmul(ws.get("l0.wo"));
+        // wv·wo invariant because blk·blkᵀ = I
+        for (a, b) in prod_after.data.iter().zip(&prod_before.data) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn p3_merge_preserves_swiglu_product_path() {
+        // (elementwise(x wg P) ⊙ (x wu P)) (Pᵀ wd) == same without P
+        let cfg = tiny_cfg();
+        let mut ws = fake_ws(&cfg, 4);
+        let x = Mat::from_fn(2, cfg.d_model, |i, j| ((i * 7 + j) as f32 * 0.1).cos());
+        let fwd = |ws: &WeightSet| -> Mat {
+            let g = x.matmul(ws.get("l0.wg"));
+            let u = x.matmul(ws.get("l0.wu"));
+            let mut prod = g.clone();
+            for (p, (gv, uv)) in prod.data.iter_mut().zip(g.data.iter().zip(&u.data)) {
+                *p = (gv / (1.0 + (-gv).exp())) * uv; // swish(g) * u
+            }
+            prod.matmul(ws.get("l0.wd"))
+        };
+        let before = fwd(&ws);
+        let mut rng = crate::data::rng::Rng::new(9);
+        let mut perm: Vec<usize> = (0..cfg.d_ffn).collect();
+        for i in (1..perm.len()).rev() {
+            let j = rng.next_below((i + 1) as u64) as usize;
+            perm.swap(i, j);
+        }
+        merge_p3_layer(&mut ws, 0, &perm);
+        let after = fwd(&ws);
+        for (a, b) in after.data.iter().zip(&before.data) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn r3_merge_cancels_online_rotation() {
+        let cfg = tiny_cfg();
+        let mut ws = fake_ws(&cfg, 5);
+        let g = Mat::from_fn(3, cfg.d_ffn, |i, j| ((i + 2 * j) as f32 * 0.05).sin());
+        let before = g.matmul(ws.get("l0.wd"));
+        let rot = BlockRotator::hadamard(16).unwrap();
+        merge_r3_inv(&mut ws, &cfg, &rot).unwrap();
+        let mut gr = g.clone();
+        rot.apply_mat(&mut gr);
+        let after = gr.matmul(ws.get("l0.wd"));
+        for (a, b) in after.data.iter().zip(&before.data) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+}

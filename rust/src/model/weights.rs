@@ -1,0 +1,100 @@
+//! Weight store: named f32 tensors in the canonical artifact input order,
+//! loaded from artifacts/weights/<model>/*.npy (written by train.py).
+//! 1-D tensors (norm scales) are stored as 1×n Mats but remember their
+//! original rank for literal construction.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::tensor::{npy, Mat};
+
+#[derive(Clone)]
+pub struct WeightSet {
+    /// canonical order (the artifact input contract)
+    pub names: Vec<String>,
+    pub tensors: BTreeMap<String, Mat>,
+    /// original npy shapes (for literal reshape)
+    pub shapes: BTreeMap<String, Vec<usize>>,
+}
+
+impl WeightSet {
+    pub fn load(dir: &Path, names: &[String]) -> Result<WeightSet> {
+        let mut tensors = BTreeMap::new();
+        let mut shapes = BTreeMap::new();
+        for n in names {
+            let path = dir.join(format!("{n}.npy"));
+            let raw = npy::read(&path)?;
+            let mat = match raw.shape.len() {
+                1 => Mat::from_vec(1, raw.shape[0], raw.data),
+                2 => Mat::from_vec(raw.shape[0], raw.shape[1], raw.data),
+                r => return Err(anyhow!("weight {n}: unexpected rank {r}")),
+            };
+            shapes.insert(n.clone(), raw.shape);
+            tensors.insert(n.clone(), mat);
+        }
+        Ok(WeightSet { names: names.to_vec(), tensors, shapes })
+    }
+
+    pub fn get(&self, name: &str) -> &Mat {
+        self.tensors
+            .get(name)
+            .unwrap_or_else(|| panic!("missing weight {name}"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> &mut Mat {
+        self.tensors
+            .get_mut(name)
+            .unwrap_or_else(|| panic!("missing weight {name}"))
+    }
+
+    pub fn set(&mut self, name: &str, m: Mat) {
+        assert!(self.tensors.contains_key(name), "unknown weight {name}");
+        self.tensors.insert(name.to_string(), m);
+    }
+
+    pub fn shape(&self, name: &str) -> &[usize] {
+        &self.shapes[name]
+    }
+
+    /// Total parameter count (sanity/reporting).
+    pub fn param_count(&self) -> usize {
+        self.tensors.values().map(|m| m.data.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fake_weights(dir: &Path, names: &[(&str, Vec<usize>)]) {
+        std::fs::create_dir_all(dir).unwrap();
+        for (n, shape) in names {
+            let count: usize = shape.iter().product();
+            let data: Vec<f32> = (0..count).map(|i| i as f32 * 0.1).collect();
+            npy::write(&dir.join(format!("{n}.npy")), shape, &data).unwrap();
+        }
+    }
+
+    #[test]
+    fn load_roundtrip() {
+        let dir = std::env::temp_dir().join("perq_ws_test");
+        write_fake_weights(&dir, &[("embed", vec![4, 8]), ("nf", vec![8])]);
+        let names = vec!["embed".to_string(), "nf".to_string()];
+        let ws = WeightSet::load(&dir, &names).unwrap();
+        assert_eq!(ws.get("embed").rows, 4);
+        assert_eq!(ws.get("embed").cols, 8);
+        assert_eq!(ws.get("nf").rows, 1);
+        assert_eq!(ws.shape("nf"), &[8]);
+        assert_eq!(ws.param_count(), 40);
+    }
+
+    #[test]
+    fn missing_weight_errors() {
+        let dir = std::env::temp_dir().join("perq_ws_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let names = vec!["nope".to_string()];
+        assert!(WeightSet::load(&dir, &names).is_err());
+    }
+}

@@ -1,0 +1,131 @@
+//! Baseline permutation strategies (paper Table 6): Identity, Random,
+//! Absmax (descending max-magnitude order), and ZigZag (Lin et al. 2024a,
+//! DuQuant) — boustrophedon assignment of magnitude-sorted coordinates.
+
+use crate::data::rng::Rng;
+
+pub fn identity_perm(d: usize) -> Vec<usize> {
+    (0..d).collect()
+}
+
+pub fn random_perm(d: usize, seed: u64) -> Vec<usize> {
+    let mut rng = Rng::new(seed);
+    let mut p: Vec<usize> = (0..d).collect();
+    // Fisher-Yates
+    for i in (1..d).rev() {
+        let j = rng.next_below((i + 1) as u64) as usize;
+        p.swap(i, j);
+    }
+    p
+}
+
+fn argsort_desc(vals: &[f64]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..vals.len()).collect();
+    idx.sort_by(|&a, &b| {
+        vals[b]
+            .partial_cmp(&vals[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    idx
+}
+
+/// Absmax: coordinates in descending order of max |X_i| over calibration.
+pub fn absmax_perm(absmax: &[f64]) -> Vec<usize> {
+    argsort_desc(absmax)
+}
+
+/// ZigZag (DuQuant): sort by descending magnitude, then deal coordinates to
+/// blocks in a serpentine pattern (block 0..n-1, then n-1..0, ...) so each
+/// block receives an alternating mix of large and small coordinates.
+pub fn zigzag_perm(absmax: &[f64], b: usize) -> Vec<usize> {
+    let d = absmax.len();
+    assert!(d % b == 0, "block {b} must divide dim {d}");
+    let n = d / b;
+    let order = argsort_desc(absmax);
+    let mut blocks: Vec<Vec<usize>> = vec![Vec::with_capacity(b); n];
+    let mut fwd = true;
+    let mut pos = 0usize;
+    for &i in &order {
+        blocks[pos].push(i);
+        if fwd {
+            if pos + 1 == n {
+                fwd = false;
+            } else {
+                pos += 1;
+            }
+        } else if pos == 0 {
+            fwd = true;
+        } else {
+            pos -= 1;
+        }
+    }
+    blocks.into_iter().flatten().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::permute::is_permutation;
+
+    #[test]
+    fn identity_is_identity() {
+        assert_eq!(identity_perm(5), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn random_valid_and_seeded() {
+        let a = random_perm(100, 1);
+        let b = random_perm(100, 1);
+        let c = random_perm(100, 2);
+        assert!(is_permutation(&a));
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn absmax_sorts_descending() {
+        let vals = vec![1.0, 5.0, 3.0, 2.0];
+        assert_eq!(absmax_perm(&vals), vec![1, 2, 3, 0]);
+    }
+
+    #[test]
+    fn zigzag_valid() {
+        let mut rng = crate::data::rng::Rng::new(9);
+        let vals: Vec<f64> = (0..96).map(|_| rng.next_f64()).collect();
+        let p = zigzag_perm(&vals, 16);
+        assert!(is_permutation(&p));
+    }
+
+    #[test]
+    fn zigzag_spreads_top_coordinates() {
+        // top-n coordinates land in n distinct blocks (first forward sweep)
+        let d = 64;
+        let b = 16;
+        let n = d / b;
+        let vals: Vec<f64> = (0..d).map(|i| (d - i) as f64).collect();
+        let p = zigzag_perm(&vals, b);
+        let mut block_of = vec![0usize; d];
+        for (pos, &i) in p.iter().enumerate() {
+            block_of[i] = pos / b;
+        }
+        let mut first: Vec<usize> = (0..n).map(|i| block_of[i]).collect();
+        first.sort_unstable();
+        assert_eq!(first, (0..n).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zigzag_serpentine_second_sweep_reverses() {
+        let d = 8;
+        let b = 2; // 4 blocks
+        let vals: Vec<f64> = (0..d).map(|i| (d - i) as f64).collect();
+        // sorted order = 0,1,2,...; sweep: blocks 0,1,2,3 then 3,2,1,0
+        let p = zigzag_perm(&vals, b);
+        let mut block_of = vec![0usize; d];
+        for (pos, &i) in p.iter().enumerate() {
+            block_of[i] = pos / b;
+        }
+        assert_eq!(&block_of[..4], &[0, 1, 2, 3]);
+        assert_eq!(&block_of[4..], &[3, 2, 1, 0]);
+    }
+}

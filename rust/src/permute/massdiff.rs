@@ -1,0 +1,175 @@
+//! MassDiff (Algorithm 1): greedy mass diffusion.
+//!
+//! Sort coordinates by descending average magnitude; assign each to the
+//! block whose running average ℓ1 mass is smallest; close blocks when full.
+//! The result minimizes (greedily) E[max_j ‖X_{B_j}‖₁] — exactly the bound
+//! of Proposition 3.2 that governs worst-case post-rotation outliers.
+//!
+//! Complexity: O(d log d) for the sort + O(d log n) for the block selection
+//! via a binary heap — well under the paper's "two minutes for Llama3 8B"
+//! budget (sub-millisecond at d = 14336; see benches/perf_hotpaths.rs).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Heap entry: (mass, block). BinaryHeap is a max-heap, so order is
+/// reversed to pop the *least-loaded* block first.
+struct BlockLoad {
+    mass: f64,
+    block: usize,
+    filled: usize,
+}
+
+impl PartialEq for BlockLoad {
+    fn eq(&self, other: &Self) -> bool {
+        self.mass == other.mass && self.block == other.block
+    }
+}
+impl Eq for BlockLoad {}
+impl PartialOrd for BlockLoad {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for BlockLoad {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed: smallest mass first; tie-break on block index for
+        // determinism (python twin uses argmin which picks the lowest index)
+        other
+            .mass
+            .partial_cmp(&self.mass)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.block.cmp(&self.block))
+    }
+}
+
+/// Algorithm 1. `mean_abs[i]` = (1/m) Σ_k |X_i^{(k)}| over the calibration
+/// set; `b` = block size. Returns the gather permutation: output coordinate
+/// j reads input coordinate perm[j], blocks laid out contiguously.
+pub fn massdiff_perm(mean_abs: &[f64], b: usize) -> Vec<usize> {
+    let d = mean_abs.len();
+    assert!(d % b == 0, "block {b} must divide dim {d}");
+    let n = d / b;
+    // argsort by descending mean |X_i| (stable: ties by index)
+    let mut order: Vec<usize> = (0..d).collect();
+    order.sort_by(|&a, &c| {
+        mean_abs[c]
+            .partial_cmp(&mean_abs[a])
+            .unwrap_or(Ordering::Equal)
+            .then(a.cmp(&c))
+    });
+    let mut heap: BinaryHeap<BlockLoad> = (0..n)
+        .map(|j| BlockLoad { mass: 0.0, block: j, filled: 0 })
+        .collect();
+    let mut blocks: Vec<Vec<usize>> = vec![Vec::with_capacity(b); n];
+    for &i in &order {
+        let mut top = heap.pop().expect("a block is always open");
+        blocks[top.block].push(i);
+        top.mass += mean_abs[i];
+        top.filled += 1;
+        if top.filled < b {
+            heap.push(top);
+        }
+    }
+    blocks.into_iter().flatten().collect()
+}
+
+/// The objective MassDiff minimizes: max_j Σ_{i ∈ B_j} mean_abs[i] for the
+/// blocking induced by `perm` (contiguous b-blocks of the permuted order).
+pub fn max_block_mass(mean_abs: &[f64], perm: &[usize], b: usize) -> f64 {
+    perm.chunks(b)
+        .map(|blk| blk.iter().map(|&i| mean_abs[i]).sum::<f64>())
+        .fold(0.0, f64::max)
+}
+
+/// The theoretical lower bound on max-block-mass: total mass / n blocks.
+pub fn mass_lower_bound(mean_abs: &[f64], b: usize) -> f64 {
+    let n = mean_abs.len() / b;
+    mean_abs.iter().sum::<f64>() / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::permute::{identity_perm, is_permutation};
+
+    fn rand_masses(d: usize, seed: u64) -> Vec<f64> {
+        let mut rng = crate::data::rng::Rng::new(seed);
+        (0..d).map(|_| rng.next_f64() + 0.01).collect()
+    }
+
+    #[test]
+    fn produces_valid_permutation() {
+        let m = rand_masses(128, 1);
+        let p = massdiff_perm(&m, 16);
+        assert!(is_permutation(&p));
+    }
+
+    #[test]
+    fn improves_over_identity_on_sorted_mass() {
+        // adversarial input: mass concentrated in the first block
+        let mut m = vec![0.01f64; 64];
+        for i in 0..8 {
+            m[i] = 10.0;
+        }
+        let p = massdiff_perm(&m, 8);
+        let ident = identity_perm(64);
+        assert!(
+            max_block_mass(&m, &p, 8) < max_block_mass(&m, &ident, 8) / 4.0
+        );
+    }
+
+    #[test]
+    fn near_lower_bound_on_random_input() {
+        // the paper: MassDiff drives 77-100% of tokens within 1% of the limit
+        let m = rand_masses(1024, 2);
+        let p = massdiff_perm(&m, 32);
+        let got = max_block_mass(&m, &p, 32);
+        let lb = mass_lower_bound(&m, 32);
+        assert!(got <= lb * 1.02, "got {got} vs lb {lb}");
+    }
+
+    #[test]
+    fn exact_on_uniform_mass() {
+        let m = vec![1.0f64; 96];
+        let p = massdiff_perm(&m, 12);
+        let got = max_block_mass(&m, &p, 12);
+        assert!((got - 12.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn block_size_d_is_identity_objective() {
+        // one block: any permutation has the same mass; must still be valid
+        let m = rand_masses(64, 3);
+        let p = massdiff_perm(&m, 64);
+        assert!(is_permutation(&p));
+        assert!((max_block_mass(&m, &p, 64) - m.iter().sum::<f64>()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deterministic() {
+        let m = rand_masses(256, 4);
+        assert_eq!(massdiff_perm(&m, 16), massdiff_perm(&m, 16));
+    }
+
+    #[test]
+    fn largest_coordinates_spread_across_blocks() {
+        let mut m = vec![0.1f64; 64];
+        m[0] = 5.0;
+        m[1] = 5.0;
+        m[2] = 5.0;
+        m[3] = 5.0;
+        let p = massdiff_perm(&m, 16);
+        // the 4 heavy coordinates must land in 4 distinct blocks
+        let block_of: Vec<usize> = {
+            let mut v = vec![0usize; 64];
+            for (pos, &i) in p.iter().enumerate() {
+                v[i] = pos / 16;
+            }
+            v
+        };
+        let mut blocks = [block_of[0], block_of[1], block_of[2], block_of[3]];
+        blocks.sort_unstable();
+        assert_eq!(blocks, [0, 1, 2, 3]);
+    }
+}

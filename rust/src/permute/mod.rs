@@ -1,0 +1,173 @@
+//! Permutation substrate — the paper's Section 4.
+//!
+//! * `massdiff` — Algorithm 1: greedy mass diffusion equalizing the expected
+//!   per-block ℓ1 norm over a calibration set (the PeRQ permutation).
+//! * `baselines` — Identity / Random / Absmax / ZigZag (Lin et al. 2024a),
+//!   the alternatives of Table 6.
+//! * Permutations are `Vec<usize>` in "gather" convention:
+//!   `y[j] = x[perm[j]]`, matching `Mat::permute_cols`.
+
+pub mod baselines;
+pub mod massdiff;
+
+pub use baselines::{absmax_perm, identity_perm, random_perm, zigzag_perm};
+pub use massdiff::massdiff_perm;
+
+
+/// Permutation strategies evaluated in the paper (Table 6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PermKind {
+    Identity,
+    Random,
+    Absmax,
+    ZigZag,
+    MassDiff,
+}
+
+impl PermKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PermKind::Identity => "identity",
+            PermKind::Random => "random",
+            PermKind::Absmax => "absmax",
+            PermKind::ZigZag => "zigzag",
+            PermKind::MassDiff => "massdiff",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PermKind> {
+        match s {
+            "identity" | "none" => Some(PermKind::Identity),
+            "random" => Some(PermKind::Random),
+            "absmax" => Some(PermKind::Absmax),
+            "zigzag" => Some(PermKind::ZigZag),
+            "massdiff" => Some(PermKind::MassDiff),
+            _ => None,
+        }
+    }
+
+    /// Calibrate a permutation of dimension d for block size b from
+    /// per-coordinate calibration statistics (see `CalibStats`).
+    pub fn calibrate(&self, stats: &CalibStats, b: usize, seed: u64) -> Vec<usize> {
+        match self {
+            PermKind::Identity => identity_perm(stats.d),
+            PermKind::Random => random_perm(stats.d, seed),
+            PermKind::Absmax => absmax_perm(&stats.absmax),
+            PermKind::ZigZag => zigzag_perm(&stats.absmax, b),
+            PermKind::MassDiff => massdiff_perm(&stats.mean_abs, b),
+        }
+    }
+}
+
+/// Per-coordinate calibration statistics consumed by the permutation
+/// calibrators: E|X_i| (MassDiff's objective) and max|X_i| (Absmax/ZigZag).
+#[derive(Clone, Debug)]
+pub struct CalibStats {
+    pub d: usize,
+    /// (1/m) Σ_k |X_i^{(k)}| per coordinate.
+    pub mean_abs: Vec<f64>,
+    /// max_k |X_i^{(k)}| per coordinate.
+    pub absmax: Vec<f64>,
+}
+
+impl CalibStats {
+    pub fn from_activations(rows: &[&[f32]]) -> CalibStats {
+        assert!(!rows.is_empty());
+        let d = rows[0].len();
+        let mut mean_abs = vec![0.0f64; d];
+        let mut absmax = vec![0.0f64; d];
+        for row in rows {
+            assert_eq!(row.len(), d);
+            for (i, &v) in row.iter().enumerate() {
+                let a = v.abs() as f64;
+                mean_abs[i] += a;
+                if a > absmax[i] {
+                    absmax[i] = a;
+                }
+            }
+        }
+        let m = rows.len() as f64;
+        for v in &mut mean_abs {
+            *v /= m;
+        }
+        CalibStats { d, mean_abs, absmax }
+    }
+
+    pub fn from_mat(m: &crate::tensor::Mat) -> CalibStats {
+        let rows: Vec<&[f32]> = (0..m.rows).map(|i| m.row(i)).collect();
+        CalibStats::from_activations(&rows)
+    }
+}
+
+/// Verify `perm` is a valid permutation of 0..d.
+pub fn is_permutation(perm: &[usize]) -> bool {
+    let d = perm.len();
+    let mut seen = vec![false; d];
+    for &p in perm {
+        if p >= d || seen[p] {
+            return false;
+        }
+        seen[p] = true;
+    }
+    true
+}
+
+/// Inverse permutation: if y = x[perm], then x = y[inv].
+pub fn invert(perm: &[usize]) -> Vec<usize> {
+    let mut inv = vec![0usize; perm.len()];
+    for (j, &p) in perm.iter().enumerate() {
+        inv[p] = j;
+    }
+    inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn invert_roundtrip() {
+        let perm = vec![3usize, 0, 4, 1, 2];
+        let inv = invert(&perm);
+        let x: Vec<i32> = vec![10, 11, 12, 13, 14];
+        let y: Vec<i32> = perm.iter().map(|&p| x[p]).collect();
+        let back: Vec<i32> = inv.iter().map(|&p| y[p]).collect();
+        assert_eq!(back, x);
+    }
+
+    #[test]
+    fn is_permutation_detects_dupes() {
+        assert!(is_permutation(&[2, 0, 1]));
+        assert!(!is_permutation(&[2, 0, 2]));
+        assert!(!is_permutation(&[3, 0, 1]));
+    }
+
+    #[test]
+    fn calib_stats_basic() {
+        let a: Vec<f32> = vec![1.0, -2.0, 0.0];
+        let b: Vec<f32> = vec![-3.0, 2.0, 1.0];
+        let s = CalibStats::from_activations(&[&a, &b]);
+        assert_eq!(s.mean_abs, vec![2.0, 2.0, 0.5]);
+        assert_eq!(s.absmax, vec![3.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    fn all_kinds_produce_valid_perms() {
+        let mut rng = crate::data::rng::Rng::new(1);
+        let rows: Vec<Vec<f32>> = (0..8)
+            .map(|_| (0..64).map(|_| rng.next_normal() as f32).collect())
+            .collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let stats = CalibStats::from_activations(&refs);
+        for kind in [
+            PermKind::Identity,
+            PermKind::Random,
+            PermKind::Absmax,
+            PermKind::ZigZag,
+            PermKind::MassDiff,
+        ] {
+            let p = kind.calibrate(&stats, 16, 7);
+            assert!(is_permutation(&p), "{kind:?}");
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! Dynamic per-token activation fake-quantization — the rust mirror of
+//! ref.py / the L1 pallas kernels (Appendix B, Eqs. 4-5). Used offline to
+//! build the rotated-and-quantized activations X̃ whose Gram matrix feeds
+//! GPTQ/Qronos, and by the stats module for Figure 5.
+
+use super::e2m1;
+use super::Format;
+use crate::tensor::Mat;
+
+pub const EPS: f32 = 1e-8;
+
+/// INT-q asymmetric per-row fake-quant (Eq. 4).
+pub fn int_asym_row(row: &mut [f32], bits: u32) {
+    let levels = ((1u32 << bits) - 1) as f32;
+    let (mut mn, mut mx) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &v in row.iter() {
+        mn = mn.min(v);
+        mx = mx.max(v);
+    }
+    let s = ((mx - mn) / levels).max(EPS);
+    let z = (mn / s).round();
+    for v in row.iter_mut() {
+        let q = (*v / s).round() - z;
+        let q = q.clamp(0.0, levels);
+        *v = s * (q + z);
+    }
+}
+
+/// FP4 symmetric per-row fake-quant, s = ‖row‖_∞ / 6 (Eq. 5).
+pub fn fp4_row(row: &mut [f32]) {
+    let mx = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let s = (mx / e2m1::FP4_MAX).max(EPS);
+    for v in row.iter_mut() {
+        *v = s * e2m1::quantize(*v / s);
+    }
+}
+
+/// MXFP4: per-group-of-32 power-of-2 scales rounded down.
+pub fn mxfp4_row(row: &mut [f32], group: usize) {
+    debug_assert!(row.len() % group == 0);
+    for blk in row.chunks_exact_mut(group) {
+        let mx = blk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let raw = (mx / e2m1::FP4_MAX).max(EPS);
+        let s = (2.0f32).powi(raw.log2().floor() as i32);
+        for v in blk.iter_mut() {
+            *v = s * e2m1::quantize(*v / s);
+        }
+    }
+}
+
+/// Fake-quantize one activation row in place in the given format.
+pub fn act_quant_row(row: &mut [f32], format: Format) {
+    match format {
+        Format::None => {}
+        Format::Int4 => int_asym_row(row, 4),
+        Format::Fp4 => fp4_row(row),
+        Format::Mxfp4 => mxfp4_row(row, 32),
+    }
+}
+
+/// Fake-quantize every row (token) of an activation matrix in place.
+pub fn act_quant_mat(m: &mut Mat, format: Format) {
+    if format == Format::None {
+        return;
+    }
+    let cols = m.cols;
+    for r in 0..m.rows {
+        act_quant_row(&mut m.data[r * cols..(r + 1) * cols], format);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_row(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+        let mut rng = crate::data::rng::Rng::new(seed);
+        (0..n).map(|_| rng.next_normal() as f32 * scale).collect()
+    }
+
+    #[test]
+    fn int4_alphabet_at_most_16_levels() {
+        let mut row = rand_row(64, 1, 3.0);
+        int_asym_row(&mut row, 4);
+        let mut vals: Vec<i64> = row.iter().map(|&v| (v * 1e4).round() as i64).collect();
+        vals.sort_unstable();
+        vals.dedup();
+        assert!(vals.len() <= 16);
+    }
+
+    #[test]
+    fn int4_endpoints_representable() {
+        let mut row = vec![-2.0f32, -1.0, 0.0, 1.0, 5.5];
+        int_asym_row(&mut row, 4);
+        // min and max must be (nearly) exactly representable
+        assert!((row[0] + 2.0).abs() < 1e-3);
+        assert!((row[4] - 5.5).abs() < 1e-3);
+    }
+
+    #[test]
+    fn int4_idempotent() {
+        let mut row = rand_row(128, 2, 1.0);
+        int_asym_row(&mut row, 4);
+        let once = row.clone();
+        int_asym_row(&mut row, 4);
+        for (a, b) in row.iter().zip(&once) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn fp4_error_bounded_relative_to_linf() {
+        let mut row = rand_row(256, 3, 10.0);
+        let orig = row.clone();
+        fp4_row(&mut row);
+        let linf = orig.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        for (q, o) in row.iter().zip(&orig) {
+            // e2m1 relative step ≤ 1/3 of value, absolute ≤ linf/24 near 0
+            assert!((q - o).abs() <= linf / 6.0 + 1e-5);
+        }
+    }
+
+    #[test]
+    fn mxfp4_group_scales_pow2() {
+        let mut row = rand_row(96, 4, 23.0);
+        let orig = row.clone();
+        mxfp4_row(&mut row, 32);
+        for (qb, ob) in row.chunks(32).zip(orig.chunks(32)) {
+            let m = qb.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+            if m == 0.0 {
+                continue;
+            }
+            // max level is 6 or 4 times a power of two
+            let e6 = (m / 6.0).log2();
+            let e4 = (m / 4.0).log2();
+            assert!(
+                (e6 - e6.round()).abs() < 1e-4 || (e4 - e4.round()).abs() < 1e-4,
+                "m={m} block {ob:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_rows_stay_zero_and_finite() {
+        for f in [Format::Int4, Format::Fp4, Format::Mxfp4] {
+            let mut row = vec![0.0f32; 64];
+            act_quant_row(&mut row, f);
+            assert!(row.iter().all(|v| v.is_finite() && v.abs() < 1e-6));
+        }
+    }
+
+    #[test]
+    fn none_format_is_identity() {
+        let mut m = Mat::from_fn(3, 8, |i, j| (i * 8 + j) as f32);
+        let orig = m.clone();
+        act_quant_mat(&mut m, Format::None);
+        assert_eq!(m.data, orig.data);
+    }
+
+    #[test]
+    fn mx_tighter_than_fp4_on_outlier_rows() {
+        // a row with one huge outlier: per-token FP4 scale destroys the
+        // small values; MX group scaling preserves them (the paper's
+        // "MX formats inherently mitigate outliers").
+        let mut base = rand_row(128, 7, 0.5);
+        base[5] = 100.0;
+        let mut a = base.clone();
+        let mut b = base.clone();
+        fp4_row(&mut a);
+        mxfp4_row(&mut b, 32);
+        let err = |q: &[f32]| -> f32 {
+            q.iter().zip(&base).map(|(x, y)| (x - y) * (x - y)).sum()
+        };
+        assert!(err(&b) < err(&a));
+    }
+}

@@ -1,0 +1,69 @@
+//! e2m1 (FP4 per the OCP MX spec): signed grid {0, .5, 1, 1.5, 2, 3, 4, 6}.
+//! Threshold logic bit-matches ref.quant_e2m1 / the pallas kernels.
+
+pub const FP4_MAX: f32 = 6.0;
+pub const GRID: [f32; 8] = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+
+/// Round-to-nearest onto the signed e2m1 grid (pre-scaled input).
+#[inline]
+pub fn quantize(y: f32) -> f32 {
+    let a = y.abs();
+    let q = if a < 0.25 {
+        0.0
+    } else if a < 0.75 {
+        0.5
+    } else if a < 1.25 {
+        1.0
+    } else if a < 1.75 {
+        1.5
+    } else if a < 2.5 {
+        2.0
+    } else if a < 3.5 {
+        3.0
+    } else if a < 5.0 {
+        4.0
+    } else {
+        6.0
+    };
+    if y < 0.0 {
+        -q
+    } else {
+        q
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_fixed_points() {
+        for &g in &GRID {
+            assert_eq!(quantize(g), g);
+            assert_eq!(quantize(-g), -g);
+        }
+    }
+
+    #[test]
+    fn midpoints_round_down_as_ref() {
+        // thresholds chosen with strict `<` so midpoints round UP, matching
+        // the jnp.where ladder in ref.py
+        assert_eq!(quantize(0.25), 0.5);
+        assert_eq!(quantize(0.7499), 0.5);
+        assert_eq!(quantize(2.5), 3.0);
+        assert_eq!(quantize(5.0), 6.0);
+        assert_eq!(quantize(100.0), 6.0);
+    }
+
+    #[test]
+    fn monotone() {
+        let mut prev = quantize(-10.0);
+        let mut x = -10.0f32;
+        while x < 10.0 {
+            let q = quantize(x);
+            assert!(q >= prev);
+            prev = q;
+            x += 0.01;
+        }
+    }
+}

@@ -1,0 +1,94 @@
+//! Quantization substrate: data formats (INT4 / FP4 / MXFP4 per Appendix B),
+//! dynamic per-token activation fake-quant (bit-matching the L1 pallas
+//! kernels / ref.py), per-channel weight codecs with MSE scale search, and
+//! the worst-case error bound of Section 3.
+
+pub mod act;
+pub mod e2m1;
+pub mod weight;
+
+pub use act::act_quant_mat;
+pub use weight::WeightCodec;
+
+
+/// Target data format for weights and activations (paper Table 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Format {
+    /// No quantization (BF16-analog baseline).
+    None,
+    /// INT4: asymmetric dynamic per-token activations, symmetric per-channel
+    /// weights (Eq. 4).
+    Int4,
+    /// FP4 (e2m1, OCP): symmetric per-token / per-channel scales (Eq. 5).
+    Fp4,
+    /// MXFP4: e2m1 with power-of-2 scales per group of 32.
+    Mxfp4,
+}
+
+impl Format {
+    /// The runtime `fmt` scalar fed to the AOT artifacts
+    /// (0 none, 1 INT4, 2 FP4, 3 MXFP4 — the L2 `lax.switch` contract).
+    pub fn fmt_id(&self) -> i32 {
+        match self {
+            Format::None => 0,
+            Format::Int4 => 1,
+            Format::Fp4 => 2,
+            Format::Mxfp4 => 3,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Format::None => "bf16",
+            Format::Int4 => "int4",
+            Format::Fp4 => "fp4",
+            Format::Mxfp4 => "mxfp4",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Format> {
+        match s {
+            "none" | "bf16" => Some(Format::None),
+            "int4" => Some(Format::Int4),
+            "fp4" => Some(Format::Fp4),
+            "mxfp4" => Some(Format::Mxfp4),
+            _ => None,
+        }
+    }
+}
+
+/// Worst-case ℓ2 quantization error bound (Section 3):
+/// ‖X − Q(X)‖₂ ≤ √d/(2^q − 2) · ‖X‖_∞.
+pub fn worst_case_error_bound(d: usize, q_bits: u32, linf: f64) -> f64 {
+    (d as f64).sqrt() / ((1u64 << q_bits) as f64 - 2.0) * linf
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_ids_match_l2_contract() {
+        assert_eq!(Format::None.fmt_id(), 0);
+        assert_eq!(Format::Int4.fmt_id(), 1);
+        assert_eq!(Format::Fp4.fmt_id(), 2);
+        assert_eq!(Format::Mxfp4.fmt_id(), 3);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for f in [Format::Int4, Format::Fp4, Format::Mxfp4] {
+            assert_eq!(Format::parse(f.name()), Some(f));
+        }
+        assert_eq!(Format::parse("int8"), None);
+    }
+
+    #[test]
+    fn bound_scales_linearly_with_linf() {
+        let a = worst_case_error_bound(1024, 4, 1.0);
+        let b = worst_case_error_bound(1024, 4, 2.0);
+        assert!((b / a - 2.0).abs() < 1e-12);
+        // √1024 / 14
+        assert!((a - 32.0 / 14.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,247 @@
+//! Weight codecs (Appendix B): symmetric per-out-channel INT-q and FP4 with
+//! MSE-searched scales, and MXFP4 with power-of-2 scales per group of 32
+//! input rows. Weights are (d_in, d_out); channel = output column.
+
+use super::e2m1;
+use super::Format;
+use crate::tensor::Mat;
+
+const MSE_GRID: usize = 48; // linear search resolution, Brevitas-style
+const EPS: f32 = 1e-8;
+
+/// A fitted weight quantizer: holds per-channel (or per-group) scales so the
+/// rounding solvers can quantize entry-by-entry consistently.
+pub enum WeightCodec {
+    None,
+    Int {
+        bits: u32,
+        /// per output-channel scale
+        scales: Vec<f32>,
+    },
+    Fp4 {
+        scales: Vec<f32>,
+    },
+    Mx {
+        /// (d_in/32) x d_out power-of-2 scales
+        scales: Mat,
+        group: usize,
+    },
+}
+
+fn int_quant_val(v: f32, s: f32, bits: u32) -> f32 {
+    let qmax = ((1i64 << (bits - 1)) - 1) as f32;
+    let q = (v / s).round().clamp(-qmax - 1.0, qmax);
+    s * q
+}
+
+fn col_mse_int(w: &Mat, j: usize, s: f32, bits: u32) -> f64 {
+    let mut acc = 0.0f64;
+    for i in 0..w.rows {
+        let v = w.at(i, j);
+        let e = (v - int_quant_val(v, s, bits)) as f64;
+        acc += e * e;
+    }
+    acc
+}
+
+fn col_mse_fp4(w: &Mat, j: usize, s: f32) -> f64 {
+    let mut acc = 0.0f64;
+    for i in 0..w.rows {
+        let v = w.at(i, j);
+        let e = (v - s * e2m1::quantize(v / s)) as f64;
+        acc += e * e;
+    }
+    acc
+}
+
+impl WeightCodec {
+    /// Fit scales to a weight matrix (MSE linear search per channel for
+    /// INT/FP4; power-of-2 absmax-derived for MX — per the OCP spec).
+    pub fn fit(format: Format, w: &Mat) -> WeightCodec {
+        match format {
+            Format::None => WeightCodec::None,
+            Format::Int4 => {
+                let bits = 4;
+                let qmax = 7.0f32;
+                let scales = (0..w.cols)
+                    .map(|j| {
+                        let absmax = (0..w.rows).fold(0.0f32, |m, i| m.max(w.at(i, j).abs()));
+                        let base = (absmax / qmax).max(EPS);
+                        let mut best = (f64::INFINITY, base);
+                        for g in 0..MSE_GRID {
+                            let frac = 0.35 + 0.65 * (g as f32 + 1.0) / MSE_GRID as f32;
+                            let s = (absmax * frac / qmax).max(EPS);
+                            let mse = col_mse_int(w, j, s, bits);
+                            if mse < best.0 {
+                                best = (mse, s);
+                            }
+                        }
+                        best.1
+                    })
+                    .collect();
+                WeightCodec::Int { bits, scales }
+            }
+            Format::Fp4 => {
+                let scales = (0..w.cols)
+                    .map(|j| {
+                        let absmax = (0..w.rows).fold(0.0f32, |m, i| m.max(w.at(i, j).abs()));
+                        let base = (absmax / e2m1::FP4_MAX).max(EPS);
+                        let mut best = (f64::INFINITY, base);
+                        for g in 0..MSE_GRID {
+                            let frac = 0.35 + 0.65 * (g as f32 + 1.0) / MSE_GRID as f32;
+                            let s = (absmax * frac / e2m1::FP4_MAX).max(EPS);
+                            let mse = col_mse_fp4(w, j, s);
+                            if mse < best.0 {
+                                best = (mse, s);
+                            }
+                        }
+                        best.1
+                    })
+                    .collect();
+                WeightCodec::Fp4 { scales }
+            }
+            Format::Mxfp4 => {
+                let group = 32.min(w.rows);
+                assert!(w.rows % group == 0, "MX group must divide d_in");
+                let ng = w.rows / group;
+                let mut scales = Mat::zeros(ng, w.cols);
+                for g in 0..ng {
+                    for j in 0..w.cols {
+                        let mut mx = 0.0f32;
+                        for i in g * group..(g + 1) * group {
+                            mx = mx.max(w.at(i, j).abs());
+                        }
+                        let raw = (mx / e2m1::FP4_MAX).max(EPS);
+                        *scales.at_mut(g, j) = (2.0f32).powi(raw.log2().floor() as i32);
+                    }
+                }
+                WeightCodec::Mx { scales, group }
+            }
+        }
+    }
+
+    /// Quantize a single weight entry at (row i, channel j).
+    #[inline]
+    pub fn quantize_entry(&self, i: usize, j: usize, v: f32) -> f32 {
+        match self {
+            WeightCodec::None => v,
+            WeightCodec::Int { bits, scales } => int_quant_val(v, scales[j], *bits),
+            WeightCodec::Fp4 { scales } => scales[j] * e2m1::quantize(v / scales[j]),
+            WeightCodec::Mx { scales, group } => {
+                let s = scales.at(i / group, j);
+                s * e2m1::quantize(v / s)
+            }
+        }
+    }
+
+    /// Round-to-nearest the whole matrix through the codec.
+    pub fn quantize_mat(&self, w: &Mat) -> Mat {
+        let mut out = w.clone();
+        for i in 0..w.rows {
+            for j in 0..w.cols {
+                *out.at_mut(i, j) = self.quantize_entry(i, j, w.at(i, j));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_w(r: usize, c: usize, seed: u64) -> Mat {
+        let mut rng = crate::data::rng::Rng::new(seed);
+        Mat::from_fn(r, c, |_, _| rng.next_normal() as f32 * 0.1)
+    }
+
+    #[test]
+    fn int4_levels_bounded() {
+        let w = rand_w(64, 8, 1);
+        let codec = WeightCodec::fit(Format::Int4, &w);
+        let q = codec.quantize_mat(&w);
+        for j in 0..8 {
+            let mut levels: Vec<i64> = (0..64)
+                .map(|i| (q.at(i, j) * 1e5).round() as i64)
+                .collect();
+            levels.sort_unstable();
+            levels.dedup();
+            assert!(levels.len() <= 16, "col {j}: {} levels", levels.len());
+        }
+    }
+
+    #[test]
+    fn mse_search_beats_absmax() {
+        // inject one outlier per channel: MSE search should clip it
+        let mut w = rand_w(128, 4, 2);
+        for j in 0..4 {
+            *w.at_mut(0, j) = 3.0;
+        }
+        let codec = WeightCodec::fit(Format::Int4, &w);
+        let q = codec.quantize_mat(&w);
+        let mse_search = q.sub(&w).frob_norm();
+        // absmax baseline
+        let qmax = 7.0;
+        let absmax_codec = WeightCodec::Int {
+            bits: 4,
+            scales: (0..4)
+                .map(|j| (0..128).fold(0.0f32, |m, i| m.max(w.at(i, j).abs())) / qmax)
+                .collect(),
+        };
+        let q2 = absmax_codec.quantize_mat(&w);
+        let mse_absmax = q2.sub(&w).frob_norm();
+        assert!(mse_search <= mse_absmax * 1.0001);
+    }
+
+    #[test]
+    fn quantize_idempotent() {
+        for f in [Format::Int4, Format::Fp4, Format::Mxfp4] {
+            let w = rand_w(64, 6, 3);
+            let codec = WeightCodec::fit(f, &w);
+            let q1 = codec.quantize_mat(&w);
+            let q2 = codec.quantize_mat(&q1);
+            for (a, b) in q1.data.iter().zip(&q2.data) {
+                assert!((a - b).abs() < 1e-5, "{f:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn none_codec_identity() {
+        let w = rand_w(16, 3, 4);
+        let codec = WeightCodec::fit(Format::None, &w);
+        assert_eq!(codec.quantize_mat(&w).data, w.data);
+    }
+
+    #[test]
+    fn entry_matches_mat() {
+        let w = rand_w(64, 5, 5);
+        let codec = WeightCodec::fit(Format::Mxfp4, &w);
+        let q = codec.quantize_mat(&w);
+        for i in 0..64 {
+            for j in 0..5 {
+                assert_eq!(q.at(i, j), codec.quantize_entry(i, j, w.at(i, j)));
+            }
+        }
+    }
+
+    #[test]
+    fn error_decreases_with_bits() {
+        let w = rand_w(128, 4, 6);
+        let c4 = WeightCodec::Int {
+            bits: 4,
+            scales: (0..4).map(|j| {
+                (0..128).fold(0.0f32, |m, i| m.max(w.at(i, j).abs())) / 7.0
+            }).collect(),
+        };
+        let c8 = WeightCodec::Int {
+            bits: 8,
+            scales: (0..4).map(|j| {
+                (0..128).fold(0.0f32, |m, i| m.max(w.at(i, j).abs())) / 127.0
+            }).collect(),
+        };
+        let e4 = c4.quantize_mat(&w).sub(&w).frob_norm();
+        let e8 = c8.quantize_mat(&w).sub(&w).frob_norm();
+        assert!(e8 < e4 / 4.0);
+    }
+}

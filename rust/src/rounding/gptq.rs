@@ -1,0 +1,186 @@
+//! GPTQ / OPTQ (Frantar et al. 2023) with the Cholesky reformulation.
+//!
+//! Given W (d_in × d_out), codec Q, and Gram H₀ = X̃ᵀX̃:
+//!   1. damp: H = H₀ + λI, λ = 1% of mean diag (Appendix B);
+//!   2. order coordinates by descending diag(H);
+//!   3. factor H = LLᵀ, U = L⁻ᵀ (upper), so that for the sequential
+//!      solve the optimal correction of the not-yet-quantized coordinates
+//!      after quantizing i is  w_j ← w_j − e·U[i,j]/U[i,i];
+//!   4. walk coordinates in order, quantize through the codec, propagate.
+
+use crate::quant::WeightCodec;
+use crate::tensor::linalg::{invert_lower, SymMat};
+use crate::tensor::Mat;
+
+use super::{desc_diag_order, permute_sym};
+
+/// Damping per Appendix B: λ = 1% of the average diagonal.
+pub fn damp_gptq(h: &mut SymMat) {
+    let lambda = 0.01 * h.mean_diag();
+    h.add_diag(lambda.max(1e-10));
+}
+
+/// Core solver on a *pre-ordered* problem; returns Q in the same order.
+/// `u` is the solve factor stored row-major (upper triangular), n = d_in.
+///
+/// Hot-path layout (§Perf): the running weights are kept *transposed*
+/// (cols × n) so the per-coordinate correction `w_j -= err·u[i,j]` walks
+/// both `work` and `u` contiguously — ~3× over the naive row-major walk.
+pub(crate) fn gptq_ordered(w: &Mat, codec: &WeightCodec, u: &[f64],
+                           order: &[usize]) -> Mat {
+    let n = w.rows;
+    let cols = w.cols;
+    let mut work_t = w.transpose(); // (cols, n): row c is output channel c
+    let mut q_t = Mat::zeros(cols, n);
+    for i in 0..n {
+        let uii = u[i * n + i];
+        let urow = &u[i * n..(i + 1) * n];
+        let orig_row = order[i];
+        for c in 0..cols {
+            let wrow = &mut work_t.data[c * n..(c + 1) * n];
+            let v = wrow[i];
+            let qv = codec.quantize_entry(orig_row, c, v);
+            q_t.data[c * n + i] = qv;
+            let err = ((v - qv) as f64) / uii;
+            if err != 0.0 {
+                for j in (i + 1)..n {
+                    wrow[j] -= (err * urow[j]) as f32;
+                }
+            }
+        }
+    }
+    q_t.transpose()
+}
+
+/// The sequential-solve factor: U = R⁻¹ (upper) where H = R·Rᵀ with R
+/// *upper* triangular (the "reverse Cholesky", whose trailing blocks nest
+/// with the trailing submatrices H_{≥i,≥i} the solve needs). Equivalent to
+/// torch's `cholesky(H⁻¹, upper=True)` in the reference OPTQ code, since
+/// H⁻¹ = UᵀU. Computed via the exchange trick: J·H·J = L·Lᵀ ⇒ R = J·L·J
+/// ⇒ U = J·L⁻¹·J.
+pub(crate) fn solve_factor(h: &SymMat) -> Vec<f64> {
+    let n = h.n;
+    // reverse both dims
+    let mut hr = SymMat::zeros(n);
+    for i in 0..n {
+        for j in 0..n {
+            *hr.at_mut(i, j) = h.at(n - 1 - i, n - 1 - j);
+        }
+    }
+    let l = match hr.cholesky() {
+        Some(l) => l,
+        None => {
+            // pathological Hessian: fall back to heavier damping
+            let mut h2 = hr.clone();
+            h2.add_diag(h2.mean_diag().max(1e-8));
+            h2.cholesky().expect("Hessian not PD even after damping")
+        }
+    };
+    let linv = invert_lower(&l, n);
+    // U = J·L⁻¹·J: u[i][j] = linv[n-1-i][n-1-j] (upper triangular)
+    let mut u = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in i..n {
+            u[i * n + j] = linv[(n - 1 - i) * n + (n - 1 - j)];
+        }
+    }
+    u
+}
+
+/// Full GPTQ: damping + ordering + reverse-Cholesky + sequential solve.
+pub fn gptq(w: &Mat, codec: &WeightCodec, gram: &SymMat) -> Mat {
+    assert_eq!(w.rows, gram.n, "Hessian dim must match d_in");
+    let mut h = gram.clone();
+    damp_gptq(&mut h);
+    let order = desc_diag_order(&h);
+    let hp = permute_sym(&h, &order);
+    let u = solve_factor(&hp);
+    let w_ord = w.permute_rows(&order);
+    let q_ord = gptq_ordered(&w_ord, codec, &u, &order);
+    // un-permute rows
+    let inv = crate::permute::invert(&order);
+    q_ord.permute_rows(&inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::Format;
+    use crate::rounding::proxy_loss;
+
+    fn rand_w(r: usize, c: usize, seed: u64) -> Mat {
+        let mut rng = crate::data::rng::Rng::new(seed);
+        Mat::from_fn(r, c, |_, _| rng.next_normal() as f32 * 0.2)
+    }
+
+    #[test]
+    fn diagonal_hessian_reduces_to_rtn() {
+        // with H = I there is no cross-coordinate interaction: GPTQ == RTN
+        let w = rand_w(32, 8, 1);
+        let mut h = SymMat::zeros(32);
+        h.add_diag(1.0);
+        let codec = WeightCodec::fit(Format::Int4, &w);
+        let q = gptq(&w, &codec, &h);
+        let rtn = codec.quantize_mat(&w);
+        for (a, b) in q.data.iter().zip(&rtn.data) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn never_worse_than_rtn_in_proxy_loss() {
+        for seed in 0..8 {
+            let d = 40;
+            let w = rand_w(d, 10, seed);
+            let mut rng = crate::data::rng::Rng::new(100 + seed);
+            let mut h = SymMat::zeros(d);
+            let t = 160;
+            let mut x = vec![0.0f32; t * d];
+            for r in 0..t {
+                let c0 = rng.next_normal() as f32;
+                for j in 0..d {
+                    x[r * d + j] = rng.next_normal() as f32 + c0;
+                }
+            }
+            h.accumulate_gram(&x, t);
+            h.add_diag(0.01 * h.mean_diag());
+            let codec = WeightCodec::fit(Format::Int4, &w);
+            let q = gptq(&w, &codec, &h);
+            let rtn = codec.quantize_mat(&w);
+            let lg = proxy_loss(&w, &q, &h);
+            let lr = proxy_loss(&w, &rtn, &h);
+            assert!(lg <= lr * 1.001, "seed {seed}: {lg} vs {lr}");
+        }
+    }
+
+    #[test]
+    fn output_is_on_grid() {
+        let w = rand_w(24, 6, 5);
+        let mut h = SymMat::zeros(24);
+        let mut rng = crate::data::rng::Rng::new(77);
+        let mut x = vec![0.0f32; 96 * 24];
+        for v in x.iter_mut() {
+            *v = rng.next_normal() as f32;
+        }
+        h.accumulate_gram(&x, 96);
+        let codec = WeightCodec::fit(Format::Int4, &w);
+        let q = gptq(&w, &codec, &h);
+        // every output must be a codec fixed point
+        let q2 = codec.quantize_mat(&q);
+        for (a, b) in q.data.iter().zip(&q2.data) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn works_for_all_formats() {
+        let w = rand_w(64, 4, 6);
+        let mut h = SymMat::zeros(64);
+        h.add_diag(2.0);
+        for f in [Format::Int4, Format::Fp4, Format::Mxfp4] {
+            let codec = WeightCodec::fit(f, &w);
+            let q = gptq(&w, &codec, &h);
+            assert!(q.data.iter().all(|v| v.is_finite()), "{f:?}");
+        }
+    }
+}

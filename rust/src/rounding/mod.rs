@@ -1,0 +1,218 @@
+//! Stage-2 rounding algorithms (Fig 2): RTN, GPTQ (OPTQ, Frantar et al.
+//! 2023) and a Qronos-style corrector (Zhang et al. 2026).
+//!
+//! All solvers minimize the layerwise proxy loss
+//!     tr( (W − Q)ᵀ H (W − Q) ),  H = X̃ᵀX̃ + λI,
+//! where X̃ are the *transformed* (permuted, rotated, fake-quantized)
+//! calibration activations — matching Appendix B, including the damping
+//! rules (GPTQ: λ = 1% of mean diag; Qronos: λ = 1e-3·σ₁) and the
+//! descending-diagonal processing order.
+
+pub mod gptq;
+pub mod qronos;
+
+
+use crate::quant::WeightCodec;
+use crate::tensor::linalg::SymMat;
+use crate::tensor::Mat;
+
+/// Rounding algorithm selector (paper Tables 1-2, 9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Rounding {
+    Rtn,
+    Gptq,
+    Qronos,
+}
+
+impl Rounding {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Rounding::Rtn => "rtn",
+            Rounding::Gptq => "gptq",
+            Rounding::Qronos => "qronos",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Rounding> {
+        match s {
+            "rtn" => Some(Rounding::Rtn),
+            "gptq" => Some(Rounding::Gptq),
+            "qronos" => Some(Rounding::Qronos),
+            _ => None,
+        }
+    }
+
+    /// Round weight matrix `w` (d_in × d_out) through `codec`, using the
+    /// Gram matrix `gram` = X̃ᵀX̃ accumulated from calibration activations
+    /// (ignored for RTN).
+    pub fn round(&self, w: &Mat, codec: &WeightCodec, gram: Option<&SymMat>) -> Mat {
+        match self {
+            Rounding::Rtn => codec.quantize_mat(w),
+            Rounding::Gptq => match gram {
+                Some(h) => gptq::gptq(w, codec, h),
+                None => codec.quantize_mat(w),
+            },
+            Rounding::Qronos => match gram {
+                Some(h) => qronos::qronos(w, codec, h),
+                None => codec.quantize_mat(w),
+            },
+        }
+    }
+}
+
+/// The layerwise proxy loss tr((W−Q)ᵀH(W−Q)) all solvers minimize.
+pub fn proxy_loss(w: &Mat, q: &Mat, h: &SymMat) -> f64 {
+    let d = w.rows;
+    assert_eq!(h.n, d);
+    let e = w.sub(q); // (d_in, d_out)
+    let mut acc = 0.0f64;
+    for c in 0..e.cols {
+        // eᵀ H e per output column
+        for i in 0..d {
+            let ei = e.at(i, c) as f64;
+            if ei == 0.0 {
+                continue;
+            }
+            let hrow = &h.data[i * d..(i + 1) * d];
+            let mut s = 0.0;
+            for j in 0..d {
+                s += hrow[j] * e.at(j, c) as f64;
+            }
+            acc += ei * s;
+        }
+    }
+    acc
+}
+
+/// Descending order of the Gram diagonal — the processing order shared by
+/// GPTQ and Qronos (Appendix B; provably helps, Zhang et al. 2025).
+pub fn desc_diag_order(h: &SymMat) -> Vec<usize> {
+    let diag = h.diag();
+    let mut idx: Vec<usize> = (0..h.n).collect();
+    idx.sort_by(|&a, &b| {
+        diag[b]
+            .partial_cmp(&diag[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    idx
+}
+
+/// Reorder H rows+cols by `order`.
+pub fn permute_sym(h: &SymMat, order: &[usize]) -> SymMat {
+    let n = h.n;
+    let mut out = SymMat::zeros(n);
+    for (i, &oi) in order.iter().enumerate() {
+        for (j, &oj) in order.iter().enumerate() {
+            *out.at_mut(i, j) = h.at(oi, oj);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::Format;
+
+    fn rand_w(r: usize, c: usize, seed: u64) -> Mat {
+        let mut rng = crate::data::rng::Rng::new(seed);
+        Mat::from_fn(r, c, |_, _| rng.next_normal() as f32 * 0.2)
+    }
+
+    fn rand_gram(d: usize, t: usize, seed: u64) -> SymMat {
+        let mut rng = crate::data::rng::Rng::new(seed);
+        // correlated activations: x = z + common component
+        let mut h = SymMat::zeros(d);
+        let mut x = vec![0.0f32; t * d];
+        for r in 0..t {
+            let common = rng.next_normal() as f32;
+            for j in 0..d {
+                x[r * d + j] = rng.next_normal() as f32 + 0.7 * common;
+            }
+        }
+        h.accumulate_gram(&x, t);
+        h.add_diag(0.01 * h.mean_diag());
+        h
+    }
+
+    #[test]
+    fn rtn_equals_codec() {
+        let w = rand_w(32, 8, 1);
+        let codec = WeightCodec::fit(Format::Int4, &w);
+        let q = Rounding::Rtn.round(&w, &codec, None);
+        assert_eq!(q.data, codec.quantize_mat(&w).data);
+    }
+
+    #[test]
+    fn gptq_beats_rtn_on_correlated_hessian() {
+        let w = rand_w(64, 16, 2);
+        let h = rand_gram(64, 256, 3);
+        let codec = WeightCodec::fit(Format::Int4, &w);
+        let q_rtn = Rounding::Rtn.round(&w, &codec, Some(&h));
+        let q_gptq = Rounding::Gptq.round(&w, &codec, Some(&h));
+        let l_rtn = proxy_loss(&w, &q_rtn, &h);
+        let l_gptq = proxy_loss(&w, &q_gptq, &h);
+        assert!(l_gptq < l_rtn, "gptq {l_gptq} vs rtn {l_rtn}");
+    }
+
+    #[test]
+    fn qronos_beats_gptq_in_aggregate() {
+        // Qronos and GPTQ start from differently-damped solves, so strict
+        // per-instance dominance is not guaranteed — the paper's claim (and
+        // this test) is aggregate improvement.
+        let (mut sum_g, mut sum_q) = (0.0, 0.0);
+        for seed in 0..8 {
+            let w = rand_w(48, 12, 10 + seed);
+            let h = rand_gram(48, 200, 20 + seed);
+            let codec = WeightCodec::fit(Format::Int4, &w);
+            let q_g = Rounding::Gptq.round(&w, &codec, Some(&h));
+            let q_q = Rounding::Qronos.round(&w, &codec, Some(&h));
+            sum_g += proxy_loss(&w, &q_g, &h);
+            sum_q += proxy_loss(&w, &q_q, &h);
+        }
+        assert!(sum_q < sum_g, "qronos {sum_q} vs gptq {sum_g}");
+    }
+
+    #[test]
+    fn qronos_never_worse_than_its_own_rtn_start() {
+        for seed in 0..5 {
+            let w = rand_w(40, 8, 30 + seed);
+            let h = rand_gram(40, 160, 40 + seed);
+            let codec = WeightCodec::fit(Format::Int4, &w);
+            let q_q = Rounding::Qronos.round(&w, &codec, Some(&h));
+            let rtn = codec.quantize_mat(&w);
+            assert!(proxy_loss(&w, &q_q, &h) <= proxy_loss(&w, &rtn, &h) * 1.0001);
+        }
+    }
+
+    #[test]
+    fn desc_diag_order_sorts() {
+        let mut h = SymMat::zeros(4);
+        for (i, v) in [2.0, 9.0, 1.0, 5.0].iter().enumerate() {
+            *h.at_mut(i, i) = *v;
+        }
+        assert_eq!(desc_diag_order(&h), vec![1, 3, 0, 2]);
+    }
+
+    #[test]
+    fn permute_sym_preserves_diag_multiset() {
+        let h = rand_gram(8, 32, 5);
+        let order = desc_diag_order(&h);
+        let hp = permute_sym(&h, &order);
+        let mut a = h.diag();
+        let mut b = hp.diag();
+        a.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        b.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn proxy_loss_zero_for_exact() {
+        let w = rand_w(16, 4, 7);
+        let h = rand_gram(16, 64, 8);
+        assert!(proxy_loss(&w, &w, &h).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,200 @@
+//! Qronos-style rounding (Zhang et al. 2026) — documented substitution.
+//!
+//! The original Qronos "corrects the past by shaping the future"; its exact
+//! update rules are specified in a concurrent paper we reproduce only via
+//! the host paper's Appendix B: (i) damping λ = α·σ₁ with α = 1e-3, (ii)
+//! descending-diagonal order, (iii) it consistently improves on GPTQ.
+//!
+//! Our implementation honors all three: a GPTQ pass (with the Qronos
+//! damping rule) followed by K sweeps of exact coordinate-descent
+//! re-optimization on the quantized solution — for each coordinate i the
+//! grid point minimizing the quadratic proxy loss given all *current*
+//! other coordinates ("correcting the past") is re-selected, which
+//! monotonically decreases tr((W−Q)ᵀH(W−Q)). See DESIGN.md §3.
+
+use crate::quant::WeightCodec;
+use crate::tensor::linalg::SymMat;
+use crate::tensor::Mat;
+
+use super::gptq::gptq_ordered;
+use super::{desc_diag_order, permute_sym};
+
+const CD_SWEEPS: usize = 3;
+
+/// Damping per Appendix B: λ = 1e-3 · σ₁(H).
+pub fn damp_qronos(h: &mut SymMat) {
+    let sigma1 = h.max_eigenvalue(60);
+    h.add_diag((1e-3 * sigma1).max(1e-10));
+}
+
+/// Incremental coordinate-descent state: per output channel (transposed
+/// layout), the error e = w − q and its image He are maintained across
+/// sweeps, so each coordinate visit is O(1) and each *accepted* change is
+/// O(n) — vs the naive O(n) per visit (§Perf: ~2.5× on the wd sites).
+struct CdState {
+    n: usize,
+    e_t: Vec<f64>,  // (cols, n)
+    he_t: Vec<f64>, // (cols, n): He per channel
+}
+
+impl CdState {
+    fn new(w: &Mat, q: &Mat, h: &SymMat) -> CdState {
+        let n = w.rows;
+        let cols = w.cols;
+        let mut e_t = vec![0.0f64; cols * n];
+        for i in 0..n {
+            for c in 0..cols {
+                e_t[c * n + i] = (w.at(i, c) - q.at(i, c)) as f64;
+            }
+        }
+        let mut he_t = vec![0.0f64; cols * n];
+        for c in 0..cols {
+            let e = &e_t[c * n..(c + 1) * n];
+            let he = &mut he_t[c * n..(c + 1) * n];
+            for i in 0..n {
+                let ei = e[i];
+                if ei == 0.0 {
+                    continue;
+                }
+                let hrow = &h.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    he[j] += hrow[j] * ei;
+                }
+            }
+        }
+        CdState { n, e_t, he_t }
+    }
+}
+
+/// One coordinate-descent sweep over all coordinates (ordered space).
+/// Returns the number of coordinates whose quantized value changed.
+fn cd_sweep(w: &Mat, q: &mut Mat, codec: &WeightCodec, h: &SymMat,
+            order: &[usize], state: &mut CdState) -> usize {
+    let n = w.rows;
+    let cols = w.cols;
+    let mut changed = 0usize;
+    for i in 0..n {
+        let hii = h.at(i, i);
+        if hii <= 0.0 {
+            continue;
+        }
+        let hrow = &h.data[i * n..(i + 1) * n];
+        let orig_row = order[i];
+        for c in 0..cols {
+            let he_i = state.he_t[c * n + i];
+            // exact 1-D minimizer over the continuous line, then snap to grid:
+            // q_i* = Q( q_i + (He)_i / H_ii )
+            let target = q.at(i, c) as f64 + he_i / hii;
+            let new_q = codec.quantize_entry(orig_row, c, target as f32);
+            let old_q = q.at(i, c);
+            if (new_q - old_q).abs() > 1e-12 {
+                // accept only if the quadratic strictly decreases:
+                // Δ = H_ii/2·δ² + (He)_i·δ with δ = old_q − new_q
+                let delta = (old_q - new_q) as f64; // e_i increases by delta
+                let obj_change = hii * delta * delta / 2.0 + he_i * delta;
+                if obj_change < -1e-15 {
+                    *q.at_mut(i, c) = new_q;
+                    state.e_t[c * n + i] += delta;
+                    let he = &mut state.he_t[c * n..(c + 1) * n];
+                    for j in 0..n {
+                        he[j] += hrow[j] * delta;
+                    }
+                    changed += 1;
+                }
+            }
+        }
+    }
+    let _ = state.n;
+    changed
+}
+
+/// Full Qronos-style solve.
+pub fn qronos(w: &Mat, codec: &WeightCodec, gram: &SymMat) -> Mat {
+    assert_eq!(w.rows, gram.n);
+    let mut h = gram.clone();
+    damp_qronos(&mut h);
+    let order = desc_diag_order(&h);
+    let hp = permute_sym(&h, &order);
+    let u = super::gptq::solve_factor(&hp);
+    let w_ord = w.permute_rows(&order);
+    // pass 1: GPTQ with Qronos damping
+    let mut q_ord = gptq_ordered(&w_ord, codec, &u, &order);
+    // pass 2: coordinate-descent correction sweeps against the *undamped*
+    // Gram (the objective that matters); acceptance is strict-decrease, so
+    // this pass is monotone in the true proxy loss.
+    let gram_ord = permute_sym(gram, &order);
+    let mut state = CdState::new(&w_ord, &q_ord, &gram_ord);
+    for _ in 0..CD_SWEEPS {
+        let changed = cd_sweep(&w_ord, &mut q_ord, codec, &gram_ord, &order, &mut state);
+        if changed == 0 {
+            break;
+        }
+    }
+    let inv = crate::permute::invert(&order);
+    q_ord.permute_rows(&inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::Format;
+    use crate::rounding::proxy_loss;
+
+    fn correlated_problem(d: usize, t: usize, seed: u64) -> (Mat, SymMat) {
+        let mut rng = crate::data::rng::Rng::new(seed);
+        let w = Mat::from_fn(d, 8, |_, _| rng.next_normal() as f32 * 0.2);
+        let mut h = SymMat::zeros(d);
+        let mut x = vec![0.0f32; t * d];
+        for r in 0..t {
+            let c0 = rng.next_normal() as f32;
+            for j in 0..d {
+                x[r * d + j] = rng.next_normal() as f32 + 0.8 * c0;
+            }
+        }
+        h.accumulate_gram(&x, t);
+        (w, h)
+    }
+
+    #[test]
+    fn cd_sweeps_monotone() {
+        let (w, h) = correlated_problem(32, 128, 1);
+        let codec = WeightCodec::fit(Format::Int4, &w);
+        let mut hd = h.clone();
+        damp_qronos(&mut hd);
+        let order = desc_diag_order(&hd);
+        let hp = permute_sym(&hd, &order);
+        let w_ord = w.permute_rows(&order);
+        let mut q = codec.quantize_mat(&w_ord);
+        let mut state = CdState::new(&w_ord, &q, &hp);
+        let mut prev = proxy_loss(&w_ord, &q, &hp);
+        for _ in 0..4 {
+            cd_sweep(&w_ord, &mut q, &codec, &hp, &order, &mut state);
+            let cur = proxy_loss(&w_ord, &q, &hp);
+            assert!(cur <= prev + 1e-9);
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn qronos_on_grid() {
+        let (w, h) = correlated_problem(24, 96, 2);
+        let codec = WeightCodec::fit(Format::Int4, &w);
+        let q = qronos(&w, &codec, &h);
+        let q2 = codec.quantize_mat(&q);
+        for (a, b) in q.data.iter().zip(&q2.data) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn damping_uses_sigma1() {
+        let (_, h) = correlated_problem(16, 64, 3);
+        let sigma1 = h.max_eigenvalue(100);
+        let mut hd = h.clone();
+        damp_qronos(&mut hd);
+        for i in 0..16 {
+            let added = hd.at(i, i) - h.at(i, i);
+            assert!((added - 1e-3 * sigma1).abs() / added < 0.05);
+        }
+    }
+}

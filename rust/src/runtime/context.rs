@@ -1,0 +1,64 @@
+//! Repository context: locates the artifacts directory (built by
+//! `make artifacts`) from the current directory, an ancestor, or $PERQ_ROOT.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug)]
+pub struct RepoContext {
+    pub root: PathBuf,
+    pub artifacts: PathBuf,
+}
+
+impl RepoContext {
+    pub fn discover() -> Result<RepoContext> {
+        if let Ok(root) = std::env::var("PERQ_ROOT") {
+            return RepoContext::at(Path::new(&root));
+        }
+        let mut dir = std::env::current_dir()?;
+        loop {
+            if dir.join("artifacts").join(".stamp").exists()
+                || dir.join("artifacts").join("corpus_golden.bin").exists()
+            {
+                return RepoContext::at(&dir);
+            }
+            if !dir.pop() {
+                bail!(
+                    "no artifacts/ directory found from cwd upward — run `make artifacts` \
+                     or set PERQ_ROOT"
+                );
+            }
+        }
+    }
+
+    pub fn at(root: &Path) -> Result<RepoContext> {
+        let artifacts = root.join("artifacts");
+        if !artifacts.exists() {
+            bail!("{artifacts:?} does not exist — run `make artifacts`");
+        }
+        Ok(RepoContext { root: root.to_path_buf(), artifacts })
+    }
+
+    pub fn model_dir(&self, model: &str) -> PathBuf {
+        self.artifacts.join(model)
+    }
+
+    pub fn weights_dir(&self, model: &str) -> PathBuf {
+        self.artifacts.join("weights").join(model)
+    }
+
+    pub fn golden_path(&self) -> PathBuf {
+        self.artifacts.join("corpus_golden.bin")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn at_rejects_missing() {
+        assert!(RepoContext::at(Path::new("/definitely/not/here")).is_err());
+    }
+}

@@ -1,0 +1,117 @@
+//! The PJRT execution engine: artifact registry + compiled-executable
+//! cache + typed input builders for the L2 artifact input contract
+//! (weights..., tokens, [hb...], [fmt]).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::context::RepoContext;
+use crate::model::weights::WeightSet;
+use crate::tensor::Mat;
+use crate::util::json::{self, Json};
+
+pub struct Engine {
+    pub client: PjRtClient,
+    /// compiled executables keyed by "<model>/<tag>"
+    cache: Mutex<HashMap<String, std::sync::Arc<PjRtLoadedExecutable>>>,
+    ctx: RepoContext,
+}
+
+impl Engine {
+    pub fn new(ctx: &RepoContext) -> Result<Engine> {
+        Ok(Engine {
+            client: PjRtClient::cpu().context("creating PJRT CPU client")?,
+            cache: Mutex::new(HashMap::new()),
+            ctx: ctx.clone(),
+        })
+    }
+
+    pub fn load_meta(&self, model: &str) -> Result<Json> {
+        let path = self.ctx.model_dir(model).join("meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}"))?;
+        json::parse(&text)
+    }
+
+    fn artifact_path(&self, model: &str, tag: &str) -> PathBuf {
+        self.ctx.model_dir(model).join(format!("{tag}.hlo.txt"))
+    }
+
+    /// Compile (or fetch from cache) an artifact executable.
+    pub fn executable(&self, model: &str, tag: &str) -> Result<std::sync::Arc<PjRtLoadedExecutable>> {
+        let key = format!("{model}/{tag}");
+        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+            return Ok(exe.clone());
+        }
+        let path = self.artifact_path(model, tag);
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("loading HLO {path:?}: {e:?}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {key}: {e:?}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute and return the output tuple as literals.
+    pub fn run(&self, model: &str, tag: &str, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let exe = self.executable(model, tag)?;
+        let result = exe
+            .execute::<Literal>(inputs)
+            .map_err(|e| anyhow!("executing {model}/{tag}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untupling result: {e:?}"))
+    }
+}
+
+/// Build the weight literals in canonical artifact order (f32, original
+/// npy shapes).
+pub fn weight_literals(ws: &WeightSet) -> Result<Vec<Literal>> {
+    let mut out = Vec::with_capacity(ws.names.len());
+    for name in &ws.names {
+        let m = ws.get(name);
+        let shape = ws.shape(name);
+        let dims: Vec<i64> = shape.iter().map(|&s| s as i64).collect();
+        let lit = Literal::vec1(&m.data)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshaping weight {name}: {e:?}"))?;
+        out.push(lit);
+    }
+    Ok(out)
+}
+
+/// Tokens literal: (batch, seq) i32.
+pub fn tokens_literal(tokens: &[i32], batch: usize, seq: usize) -> Result<Literal> {
+    anyhow::ensure!(tokens.len() == batch * seq, "token shape mismatch");
+    Literal::vec1(tokens)
+        .reshape(&[batch as i64, seq as i64])
+        .map_err(|e| anyhow!("reshaping tokens: {e:?}"))
+}
+
+/// (b, b) f32 rotation matrix literal.
+pub fn mat_literal(m: &Mat) -> Result<Literal> {
+    Literal::vec1(&m.data)
+        .reshape(&[m.rows as i64, m.cols as i64])
+        .map_err(|e| anyhow!("reshaping matrix literal: {e:?}"))
+}
+
+/// i32 scalar literal (the artifact `fmt` input).
+pub fn scalar_i32(v: i32) -> Literal {
+    Literal::scalar(v)
+}
+
+/// Read an f32 literal back into a flat vector.
+pub fn literal_to_vec_f32(lit: &Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("literal to f32 vec: {e:?}"))
+}

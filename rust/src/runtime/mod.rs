@@ -1,0 +1,9 @@
+//! PJRT runtime: loads the HLO-text artifacts the python build path emits
+//! and executes them on the CPU PJRT client (xla crate / xla_extension
+//! 0.5.1). HLO *text* is the interchange format — see python/compile/aot.py.
+
+pub mod context;
+pub mod engine;
+
+pub use context::RepoContext;
+pub use engine::Engine;

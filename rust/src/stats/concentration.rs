@@ -1,0 +1,228 @@
+//! Mass/energy concentration metrics and the paper's bounds.
+
+pub fn l1(x: &[f32]) -> f64 {
+    x.iter().map(|&v| v.abs() as f64).sum()
+}
+
+pub fn l2(x: &[f32]) -> f64 {
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+}
+
+pub fn linf(x: &[f32]) -> f64 {
+    x.iter().fold(0.0f64, |m, &v| m.max(v.abs() as f64))
+}
+
+/// Mass concentration δ = ‖X‖₁ / (d‖X‖_∞) ∈ [1/d, 1] (Prop 3.1).
+pub fn delta(x: &[f32]) -> f64 {
+    let li = linf(x);
+    if li == 0.0 {
+        return 1.0; // zero vector: treat as fully uniform
+    }
+    l1(x) / (x.len() as f64 * li)
+}
+
+/// Energy concentration δ' = ‖X‖₂ / (√d‖X‖_∞) ∈ [1/√d, 1] (Remark D.1).
+pub fn delta_energy(x: &[f32]) -> f64 {
+    let li = linf(x);
+    if li == 0.0 {
+        return 1.0;
+    }
+    l2(x) / ((x.len() as f64).sqrt() * li)
+}
+
+/// Per-block mass concentrations δ_{j} for contiguous b-blocks (Prop 3.2).
+pub fn delta_blocks(x: &[f32], b: usize) -> Vec<f64> {
+    x.chunks_exact(b).map(delta).collect()
+}
+
+/// The deterministic bound of Prop 3.2 on ‖X·R̃‖_∞:
+/// max_j δ_{j}·√b·‖X_{j}‖_∞ = max_j ‖X_{j}‖₁/√b = Z(b;X) (Cor 3.3).
+pub fn z_bound(x: &[f32], b: usize) -> f64 {
+    debug_assert!(x.len() % b == 0);
+    let maxmass = x
+        .chunks_exact(b)
+        .map(|blk| l1(blk))
+        .fold(0.0f64, f64::max);
+    maxmass / (b as f64).sqrt()
+}
+
+/// Figure 4/5 normalization: max_j δ_{j}‖X_{j}‖_∞ / ‖X‖_∞ (i.e. the Prop
+/// 3.2 bound divided by √b·‖X‖_∞). Guaranteed suppression when < 1/√b;
+/// lower-bounded by 1/b.
+pub fn normalized_bound(x: &[f32], b: usize) -> f64 {
+    let li = linf(x);
+    if li == 0.0 {
+        return 0.0;
+    }
+    let maxmass = x
+        .chunks_exact(b)
+        .map(|blk| l1(blk) / b as f64)
+        .fold(0.0f64, f64::max);
+    maxmass / li
+}
+
+/// The Prop 3.4 high-probability bound:
+/// √( (2/b)·log(2d/ε)·‖X‖₂² ) with the tighter max-block-energy form.
+pub fn prob_bound(x: &[f32], b: usize, eps: f64) -> f64 {
+    let d = x.len() as f64;
+    let max_block_energy = x
+        .chunks_exact(b)
+        .map(|blk| blk.iter().map(|&v| (v as f64).powi(2)).sum::<f64>())
+        .fold(0.0f64, f64::max);
+    (2.0 / b as f64 * (2.0 * d / eps).ln() * max_block_energy).sqrt()
+}
+
+/// Outlier suppression ratio ‖XR‖_∞ / ‖X‖_∞ (Fig 3).
+pub fn suppression_ratio(x: &[f32], rotated: &[f32]) -> f64 {
+    let li = linf(x);
+    if li == 0.0 {
+        return 1.0;
+    }
+    linf(rotated) / li
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hadamard::BlockRotator;
+
+    fn rand_x(d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::data::rng::Rng::new(seed);
+        (0..d).map(|_| rng.next_normal() as f32).collect()
+    }
+
+    #[test]
+    fn delta_bounds() {
+        // uniform vector: δ = 1; one-hot: δ = 1/d
+        let uni = vec![1.0f32; 64];
+        assert!((delta(&uni) - 1.0).abs() < 1e-9);
+        let mut hot = vec![0.0f32; 64];
+        hot[3] = 5.0;
+        assert!((delta(&hot) - 1.0 / 64.0).abs() < 1e-9);
+        for seed in 0..5 {
+            let x = rand_x(128, seed);
+            let d = delta(&x);
+            assert!((1.0 / 128.0..=1.0).contains(&d));
+        }
+    }
+
+    #[test]
+    fn prop31_bound_holds() {
+        // ‖XR‖_∞ ≤ δ√d‖X‖_∞ for the full-vector rotation
+        for seed in 0..10 {
+            let d = 64;
+            let x = rand_x(d, seed);
+            let rot = BlockRotator::hadamard(d).unwrap();
+            let mut y = crate::tensor::Mat::from_vec(1, d, x.clone());
+            rot.apply_mat(&mut y);
+            let bound = delta(&x) * (d as f64).sqrt() * linf(&x);
+            assert!(linf(&y.data) <= bound + 1e-5, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn prop32_bound_holds_per_block() {
+        for seed in 0..10 {
+            let d = 128;
+            for b in [8usize, 16, 32] {
+                let x = rand_x(d, seed);
+                let rot = BlockRotator::hadamard(b).unwrap();
+                let mut y = crate::tensor::Mat::from_vec(1, d, x.clone());
+                rot.apply_mat(&mut y);
+                assert!(
+                    linf(&y.data) <= z_bound(&x, b) + 1e-5,
+                    "seed {seed} b {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prop32_reduces_to_prop31_at_full_block() {
+        let x = rand_x(64, 3);
+        let full_bound = delta(&x) * 8.0 * linf(&x); // δ√d‖X‖∞, √64 = 8
+        assert!((z_bound(&x, 64) - full_bound).abs() < 1e-9);
+    }
+
+    #[test]
+    fn corollary33_sqrt_k_growth() {
+        // Z(b;X) ≤ √k Z(b';X) for b = k·b'
+        for seed in 0..10 {
+            let x = rand_x(256, seed);
+            for (bp, k) in [(8usize, 2usize), (8, 4), (16, 4), (32, 2)] {
+                let b = bp * k;
+                assert!(
+                    z_bound(&x, b) <= (k as f64).sqrt() * z_bound(&x, bp) + 1e-9,
+                    "seed {seed} b'={bp} k={k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn normalized_bound_within_theory_limits() {
+        for seed in 0..10 {
+            let x = rand_x(256, seed);
+            for b in [16usize, 32, 64] {
+                let nb = normalized_bound(&x, b);
+                assert!(nb >= 1.0 / b as f64 - 1e-12, "lower bound 1/b");
+                assert!(nb <= 1.0 + 1e-12, "cannot exceed 1");
+            }
+        }
+    }
+
+    #[test]
+    fn prob_bound_holds_with_high_probability() {
+        // Rademacher-signed vectors: bound violated at most ~ε of the time
+        let d = 256;
+        let b = 32;
+        let eps = 0.05;
+        let mut violations = 0;
+        let trials = 400;
+        let mut rng = crate::data::rng::Rng::new(42);
+        let rot = BlockRotator::hadamard(b).unwrap();
+        for _ in 0..trials {
+            let x: Vec<f32> = (0..d)
+                .map(|_| {
+                    let mag = rng.next_normal().abs() as f32 + 0.1;
+                    if rng.next_f64() < 0.5 {
+                        -mag
+                    } else {
+                        mag
+                    }
+                })
+                .collect();
+            let bound = prob_bound(&x, b, eps);
+            let mut y = crate::tensor::Mat::from_vec(1, d, x);
+            rot.apply_mat(&mut y);
+            if linf(&y.data) > bound {
+                violations += 1;
+            }
+        }
+        assert!(
+            (violations as f64) <= eps * trials as f64,
+            "{violations}/{trials} violations"
+        );
+    }
+
+    #[test]
+    fn suppression_guaranteed_when_delta_small() {
+        // δ < 1/√d ⇒ ‖XR‖∞ < ‖X‖∞ (the Prop 3.1 sufficient condition)
+        let d = 64;
+        let mut x = vec![0.01f32; d];
+        x[0] = 10.0; // highly concentrated ⇒ tiny δ
+        assert!(delta(&x) < 1.0 / (d as f64).sqrt());
+        let rot = BlockRotator::hadamard(d).unwrap();
+        let mut y = crate::tensor::Mat::from_vec(1, d, x.clone());
+        rot.apply_mat(&mut y);
+        assert!(linf(&y.data) < linf(&x));
+    }
+
+    #[test]
+    fn delta_energy_in_range() {
+        let x = rand_x(100, 11);
+        let de = delta_energy(&x);
+        assert!((0.1..=1.0).contains(&de));
+        assert!(de >= 1.0 / (100f64).sqrt());
+    }
+}

@@ -1,0 +1,81 @@
+//! Per-token Gaussian / Laplacian fits (Figure 3's comparison): fit each
+//! distribution to an activation vector, sample a synthetic vector from the
+//! fit, and compare δ distributions. Shows — as in the paper — that common
+//! distributional assumptions fail to capture real activation geometry.
+
+use crate::data::rng::Rng;
+
+/// Maximum-likelihood Gaussian fit (mean, std).
+pub fn fit_gaussian(x: &[f32]) -> (f64, f64) {
+    let n = x.len() as f64;
+    let mean = x.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let var = x.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+    (mean, var.sqrt().max(1e-12))
+}
+
+/// Maximum-likelihood Laplacian fit (location = median, scale = mean |x-μ|).
+pub fn fit_laplacian(x: &[f32]) -> (f64, f64) {
+    let mut v: Vec<f64> = x.iter().map(|&a| a as f64).collect();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = if v.len() % 2 == 0 {
+        (v[v.len() / 2 - 1] + v[v.len() / 2]) / 2.0
+    } else {
+        v[v.len() / 2]
+    };
+    let scale = v.iter().map(|a| (a - med).abs()).sum::<f64>() / v.len() as f64;
+    (med, scale.max(1e-12))
+}
+
+/// Sample d values from the fitted Gaussian.
+pub fn sample_gaussian(mean: f64, std: f64, d: usize, rng: &mut Rng) -> Vec<f32> {
+    (0..d).map(|_| (mean + std * rng.next_normal()) as f32).collect()
+}
+
+/// Sample d values from the fitted Laplacian (inverse CDF).
+pub fn sample_laplacian(loc: f64, scale: f64, d: usize, rng: &mut Rng) -> Vec<f32> {
+    (0..d)
+        .map(|_| {
+            let u = rng.next_f64() - 0.5;
+            let mag = -(1.0 - 2.0 * u.abs()).ln() * scale;
+            (loc + if u < 0.0 { -mag } else { mag }) as f32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaussian_fit_recovers_moments() {
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..20000).map(|_| (2.0 + 3.0 * rng.next_normal()) as f32).collect();
+        let (m, s) = fit_gaussian(&x);
+        assert!((m - 2.0).abs() < 0.1, "mean {m}");
+        assert!((s - 3.0).abs() < 0.1, "std {s}");
+    }
+
+    #[test]
+    fn laplacian_fit_recovers_params() {
+        let mut rng = Rng::new(5);
+        let x = sample_laplacian(1.0, 2.0, 20000, &mut rng);
+        let (loc, scale) = fit_laplacian(&x);
+        assert!((loc - 1.0).abs() < 0.1, "loc {loc}");
+        assert!((scale - 2.0).abs() < 0.1, "scale {scale}");
+    }
+
+    #[test]
+    fn gaussian_samples_have_higher_delta_than_spiky_vectors() {
+        // Fig 3's point: real (spiky) activations have smaller δ than their
+        // Gaussian fits suggest.
+        let mut spiky = vec![0.05f32; 512];
+        spiky[0] = 8.0;
+        spiky[100] = -6.0;
+        let (m, s) = fit_gaussian(&spiky);
+        let mut rng = Rng::new(7);
+        let synth = sample_gaussian(m, s, 512, &mut rng);
+        let d_real = crate::stats::delta(&spiky);
+        let d_synth = crate::stats::delta(&synth);
+        assert!(d_synth > d_real * 2.0, "real {d_real} synth {d_synth}");
+    }
+}

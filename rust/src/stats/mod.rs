@@ -1,0 +1,13 @@
+//! Outlier-suppression statistics — the quantities of Section 3.
+//!
+//! * `delta` — mass concentration δ = ‖X‖₁/(d‖X‖_∞), Proposition 3.1.
+//! * `delta_block` — per-block δ_{j}, Proposition 3.2.
+//! * `z_bound` — Z(b;X) = max_j √b·δ_{j}‖X_{j}‖_∞ = max_j ‖X_{j}‖₁/√b,
+//!   Corollary 3.3 / the Fig 4-5 normalized bound.
+//! * `prob_bound` — the high-probability bound of Proposition 3.4.
+//! * `suppression_ratio` — ‖XR‖_∞ / ‖X‖_∞ (Fig 3).
+
+pub mod concentration;
+pub mod distfit;
+
+pub use concentration::*;

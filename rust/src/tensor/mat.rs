@@ -1,0 +1,262 @@
+//! Row-major dense f32 matrix. Activations are (tokens, features);
+//! weights are (in_features, out_features) — matching the L2 jax layout
+//! where `y = x @ w`.
+
+use std::fmt;
+
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Mat({}x{})", self.rows, self.cols)
+    }
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        Mat::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols;
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self.at(i, j)).collect()
+    }
+
+    pub fn set_col(&mut self, j: usize, v: &[f32]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            *self.at_mut(i, j) = v[i];
+        }
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                *out.at_mut(j, i) = self.at(i, j);
+            }
+        }
+        out
+    }
+
+    /// `self @ other` — cache-blocked ikj loop; the workhorse of the
+    /// offline transform engine.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        const BK: usize = 64;
+        for kb in (0..k).step_by(BK) {
+            let kend = (kb + BK).min(k);
+            for i in 0..m {
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for kk in kb..kend {
+                    let a = self.data[i * k + kk];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let brow = &other.data[kk * n..(kk + 1) * n];
+                    for j in 0..n {
+                        orow[j] += a * brow[j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// `self^T @ other` without materializing the transpose.
+    pub fn t_matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
+        let (k, m, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for kk in 0..k {
+            let arow = &self.data[kk * m..(kk + 1) * m];
+            let brow = &other.data[kk * n..(kk + 1) * n];
+            for i in 0..m {
+                let a = arow[i];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        }
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    /// Permute columns: out[:, j] = self[:, perm[j]].
+    pub fn permute_cols(&self, perm: &[usize]) -> Mat {
+        assert_eq!(perm.len(), self.cols);
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let src = self.row(i);
+            let dst = out.row_mut(i);
+            for (j, &p) in perm.iter().enumerate() {
+                dst[j] = src[p];
+            }
+        }
+        out
+    }
+
+    /// Permute rows: out[i, :] = self[perm[i], :].
+    pub fn permute_rows(&self, perm: &[usize]) -> Mat {
+        assert_eq!(perm.len(), self.rows);
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for (i, &p) in perm.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(self.row(p));
+        }
+        out
+    }
+
+    /// Scale row i by s[i] (used to fold RMSNorm scales into weights).
+    pub fn scale_rows(&self, s: &[f32]) -> Mat {
+        assert_eq!(s.len(), self.rows);
+        let mut out = self.clone();
+        for i in 0..self.rows {
+            let si = s[i];
+            for v in out.row_mut(i) {
+                *v *= si;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_fn(3, 4, |i, j| (i * 4 + j) as f32);
+        let id = Mat::eye(4);
+        assert_eq!(a.matmul(&id).data, a.data);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let b = Mat::from_vec(2, 2, vec![5., 6., 7., 8.]);
+        assert_eq!(a.matmul(&b).data, vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn t_matmul_matches_explicit_transpose() {
+        let a = Mat::from_fn(5, 3, |i, j| (i + 2 * j) as f32 * 0.5);
+        let b = Mat::from_fn(5, 4, |i, j| (i * j) as f32 - 1.0);
+        let got = a.t_matmul(&b);
+        let want = a.transpose().matmul(&b);
+        for (g, w) in got.data.iter().zip(&want.data) {
+            assert!((g - w).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Mat::from_fn(3, 7, |i, j| (i * 7 + j) as f32);
+        assert_eq!(a.transpose().transpose().data, a.data);
+    }
+
+    #[test]
+    fn permute_cols_inverse() {
+        let a = Mat::from_fn(2, 5, |i, j| (i * 5 + j) as f32);
+        let perm = vec![3, 1, 4, 0, 2];
+        let mut inv = vec![0usize; 5];
+        for (j, &p) in perm.iter().enumerate() {
+            inv[p] = j;
+        }
+        assert_eq!(a.permute_cols(&perm).permute_cols(&inv).data, a.data);
+    }
+
+    #[test]
+    fn permute_rows_then_cols_commute_on_square() {
+        let a = Mat::from_fn(4, 4, |i, j| (i * 4 + j) as f32);
+        let perm = vec![2, 0, 3, 1];
+        let rc = a.permute_rows(&perm).permute_cols(&perm);
+        let cr = a.permute_cols(&perm).permute_rows(&perm);
+        assert_eq!(rc.data, cr.data);
+    }
+
+    #[test]
+    fn scale_rows_folds_norm() {
+        let a = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let s = vec![2.0, 0.5];
+        assert_eq!(a.scale_rows(&s).data, vec![2., 4., 1.5, 2.]);
+    }
+
+    #[test]
+    fn frob_norm_known() {
+        let a = Mat::from_vec(1, 2, vec![3., 4.]);
+        assert!((a.frob_norm() - 5.0).abs() < 1e-9);
+    }
+}

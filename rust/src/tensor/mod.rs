@@ -1,0 +1,9 @@
+//! Minimal dense-tensor substrate: row-major `Mat` (f32), f64 linear
+//! algebra for rounding solvers, and NPY v1.0 interchange with the python
+//! build path. Built from scratch — no external linear-algebra crates.
+
+pub mod linalg;
+pub mod mat;
+pub mod npy;
+
+pub use mat::Mat;

@@ -1,0 +1,183 @@
+//! NPY v1.0 reader/writer — the weight interchange format with the python
+//! build path (`np.save` little-endian `<f4` / `<i4`, C-order).
+
+use std::fs::File;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use super::Mat;
+
+/// Parsed NPY payload: shape + flat f32 data (C-order).
+pub struct Npy {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+fn parse_header(header: &str) -> Result<(String, bool, Vec<usize>)> {
+    // header is a python dict literal:
+    // {'descr': '<f4', 'fortran_order': False, 'shape': (4, 2), }
+    let descr = header
+        .split("'descr':")
+        .nth(1)
+        .and_then(|s| s.split('\'').nth(1))
+        .ok_or_else(|| anyhow!("npy: no descr in {header}"))?
+        .to_string();
+    let fortran = header
+        .split("'fortran_order':")
+        .nth(1)
+        .map(|s| s.trim_start().starts_with("True"))
+        .ok_or_else(|| anyhow!("npy: no fortran_order"))?;
+    let shape_str = header
+        .split("'shape':")
+        .nth(1)
+        .and_then(|s| s.split('(').nth(1))
+        .and_then(|s| s.split(')').next())
+        .ok_or_else(|| anyhow!("npy: no shape"))?;
+    let shape: Vec<usize> = shape_str
+        .split(',')
+        .map(|t| t.trim())
+        .filter(|t| !t.is_empty())
+        .map(|t| t.parse::<usize>().map_err(|e| anyhow!("npy shape: {e}")))
+        .collect::<Result<_>>()?;
+    Ok((descr, fortran, shape))
+}
+
+pub fn read(path: &Path) -> Result<Npy> {
+    let mut f = File::open(path).map_err(|e| anyhow!("open {path:?}: {e}"))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    ensure!(&magic[..6] == b"\x93NUMPY", "not an npy file: {path:?}");
+    let major = magic[6];
+    let hlen = match major {
+        1 => {
+            let mut b = [0u8; 2];
+            f.read_exact(&mut b)?;
+            u16::from_le_bytes(b) as usize
+        }
+        2 | 3 => {
+            let mut b = [0u8; 4];
+            f.read_exact(&mut b)?;
+            u32::from_le_bytes(b) as usize
+        }
+        v => bail!("unsupported npy version {v}"),
+    };
+    let mut hbuf = vec![0u8; hlen];
+    f.read_exact(&mut hbuf)?;
+    let header = String::from_utf8_lossy(&hbuf).to_string();
+    let (descr, fortran, shape) = parse_header(&header)?;
+    ensure!(!fortran, "fortran-order npy unsupported");
+    let count: usize = shape.iter().product();
+    let mut raw = Vec::new();
+    f.read_to_end(&mut raw)?;
+    let data = match descr.as_str() {
+        "<f4" => {
+            ensure!(raw.len() >= count * 4, "npy truncated: {path:?}");
+            raw.chunks_exact(4)
+                .take(count)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()
+        }
+        "<i4" => raw
+            .chunks_exact(4)
+            .take(count)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]) as f32)
+            .collect(),
+        "<f8" => raw
+            .chunks_exact(8)
+            .take(count)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()) as f32)
+            .collect(),
+        d => bail!("unsupported npy dtype {d}"),
+    };
+    Ok(Npy { shape, data })
+}
+
+/// Read a 2-D npy (or 1-D, returned as a single-row Mat).
+pub fn read_mat(path: &Path) -> Result<Mat> {
+    let npy = read(path)?;
+    match npy.shape.len() {
+        1 => Ok(Mat::from_vec(1, npy.shape[0], npy.data)),
+        2 => Ok(Mat::from_vec(npy.shape[0], npy.shape[1], npy.data)),
+        n => bail!("read_mat: expected 1-D/2-D, got {n}-D at {path:?}"),
+    }
+}
+
+pub fn write(path: &Path, shape: &[usize], data: &[f32]) -> Result<()> {
+    ensure!(shape.iter().product::<usize>() == data.len(), "npy write shape mismatch");
+    let shape_str = match shape.len() {
+        1 => format!("({},)", shape[0]),
+        _ => format!(
+            "({})",
+            shape.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(", ")
+        ),
+    };
+    let mut header = format!(
+        "{{'descr': '<f4', 'fortran_order': False, 'shape': {shape_str}, }}"
+    );
+    // pad to 64-byte alignment including the 10-byte preamble, newline-final
+    let total = 10 + header.len() + 1;
+    let pad = (64 - total % 64) % 64;
+    header.push_str(&" ".repeat(pad));
+    header.push('\n');
+    let mut f = File::create(path)?;
+    f.write_all(b"\x93NUMPY\x01\x00")?;
+    f.write_all(&(header.len() as u16).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    for v in data {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+pub fn write_mat(path: &Path, m: &Mat) -> Result<()> {
+    write(path, &[m.rows, m.cols], &m.data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_2d() {
+        let dir = std::env::temp_dir().join("perq_npy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("a.npy");
+        let m = Mat::from_fn(7, 3, |i, j| (i * 3 + j) as f32 * 0.25 - 1.0);
+        write_mat(&p, &m).unwrap();
+        let r = read_mat(&p).unwrap();
+        assert_eq!(r.rows, 7);
+        assert_eq!(r.cols, 3);
+        assert_eq!(r.data, m.data);
+    }
+
+    #[test]
+    fn roundtrip_1d() {
+        let dir = std::env::temp_dir().join("perq_npy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("b.npy");
+        write(&p, &[5], &[1., 2., 3., 4., 5.]).unwrap();
+        let r = read(&p).unwrap();
+        assert_eq!(r.shape, vec![5]);
+        assert_eq!(r.data, vec![1., 2., 3., 4., 5.]);
+    }
+
+    #[test]
+    fn header_parser_handles_spacing() {
+        let (d, f, s) =
+            parse_header("{'descr': '<f4', 'fortran_order': False, 'shape': (4, 2), }").unwrap();
+        assert_eq!(d, "<f4");
+        assert!(!f);
+        assert_eq!(s, vec![4, 2]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("perq_npy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("junk.npy");
+        std::fs::write(&p, b"not an npy file at all").unwrap();
+        assert!(read(&p).is_err());
+    }
+}

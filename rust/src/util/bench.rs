@@ -1,0 +1,126 @@
+//! Micro bench harness (criterion is unavailable offline): warmup + timed
+//! iterations with mean/min/max, plus fixed-width table printing used by
+//! every table/figure bench binary.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub label: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl Timing {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+}
+
+/// Time `f` for at least `min_iters` iterations and ~`min_ms` total.
+pub fn time<T>(label: &str, min_iters: usize, min_ms: u64, mut f: impl FnMut() -> T) -> Timing {
+    // warmup
+    std::hint::black_box(f());
+    let mut times = Vec::new();
+    let start = Instant::now();
+    while times.len() < min_iters || start.elapsed().as_millis() < min_ms as u128 {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_nanos() as f64);
+        if times.len() > 100_000 {
+            break;
+        }
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    Timing {
+        label: label.to_string(),
+        iters: times.len(),
+        mean_ns: mean,
+        min_ns: times.iter().cloned().fold(f64::INFINITY, f64::min),
+        max_ns: times.iter().cloned().fold(0.0, f64::max),
+    }
+}
+
+/// Print a fixed-width table; `rows` are (label, cells).
+pub fn print_table(title: &str, header: &[&str], rows: &[(String, Vec<String>)]) {
+    println!("\n=== {title} ===");
+    let label_w = rows
+        .iter()
+        .map(|(l, _)| l.len())
+        .chain(std::iter::once(12))
+        .max()
+        .unwrap_or(12)
+        + 2;
+    let cell_w = 11usize;
+    let mut head = format!("{:label_w$}", "");
+    for h in header {
+        head.push_str(&format!("{h:>cell_w$}"));
+    }
+    println!("{head}");
+    for (label, cells) in rows {
+        let mut line = format!("{label:label_w$}");
+        for c in cells {
+            line.push_str(&format!("{c:>cell_w$}"));
+        }
+        println!("{line}");
+    }
+}
+
+/// Format a count the way the paper does (e.g. 205.51M, 516.10K).
+pub fn fmt_count(n: usize) -> String {
+    let x = n as f64;
+    if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2}K", x / 1e3)
+    } else {
+        format!("{n}")
+    }
+}
+
+/// Format perplexity the way the paper's tables do: one decimal below 100,
+/// scientific (e.g. 2e3) above.
+pub fn fmt_ppl(p: f64) -> String {
+    if !p.is_finite() {
+        "inf".to_string()
+    } else if p >= 100.0 {
+        let exp = p.log10().floor();
+        let mant = (p / 10f64.powf(exp)).round();
+        format!("{mant:.0}e{exp:.0}")
+    } else {
+        format!("{p:.1}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_runs() {
+        let t = time("noop", 10, 1, || 1 + 1);
+        assert!(t.iters >= 10);
+        assert!(t.mean_ns > 0.0);
+        assert!(t.min_ns <= t.mean_ns && t.mean_ns <= t.max_ns);
+    }
+
+    #[test]
+    fn count_formatting_matches_paper_style() {
+        assert_eq!(fmt_count(205_520_896), "205.52M");
+        assert_eq!(fmt_count(258_048), "258.05K");
+        assert_eq!(fmt_count(512), "512");
+    }
+
+    #[test]
+    fn ppl_formatting() {
+        assert_eq!(fmt_ppl(16.94), "16.9");
+        assert_eq!(fmt_ppl(2345.0), "2e3");
+        assert_eq!(fmt_ppl(934.0), "9e2");
+    }
+}

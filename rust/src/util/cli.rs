@@ -1,0 +1,76 @@
+//! Tiny CLI argument helper (clap is unavailable offline): supports
+//! `--key value`, `--key=value`, and bare flags.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+pub fn parse(argv: &[String]) -> Args {
+    let mut out = Args::default();
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(stripped) = a.strip_prefix("--") {
+            if let Some((k, v)) = stripped.split_once('=') {
+                out.options.insert(k.to_string(), v.to_string());
+            } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                out.options.insert(stripped.to_string(), argv[i + 1].clone());
+                i += 1;
+            } else {
+                out.flags.push(stripped.to_string());
+            }
+        } else {
+            out.positional.push(a.clone());
+        }
+        i += 1;
+    }
+    out
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = parse(&v(&["quantize", "--model", "llama_tiny", "--block=32", "--verbose"]));
+        assert_eq!(a.positional, vec!["quantize"]);
+        assert_eq!(a.get("model"), Some("llama_tiny"));
+        assert_eq!(a.get_usize("block", 0), 32);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&v(&[]));
+        assert_eq!(a.get_or("x", "y"), "y");
+        assert_eq!(a.get_usize("n", 7), 7);
+    }
+}

@@ -1,0 +1,12 @@
+//! Offline-environment utilities: this build environment has no network
+//! access and only the `xla` crate's dependency tree vendored, so the
+//! conveniences usually pulled from crates.io are implemented here —
+//! a minimal JSON parser (`json`), a micro bench harness (`bench`), a CLI
+//! argument helper (`cli`), a scoped work-queue thread pool (`pool`), and
+//! seed-sweep property-test helpers (`propcheck`).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod propcheck;

@@ -1,0 +1,74 @@
+//! Scoped work-queue thread pool for the per-layer rounding jobs.
+//! (tokio is unavailable offline; the coordinator's parallelism needs are
+//! CPU-bound fan-out/fan-in, which scoped threads express directly.)
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run `f(i)` for every i in 0..n across `workers` threads; results are
+/// returned in index order. Panics in jobs propagate.
+pub fn parallel_map<T: Send>(n: usize, workers: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+    let workers = workers.max(1).min(n.max(1));
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = f(i);
+                *results[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("job did not complete"))
+        .collect()
+}
+
+/// Default worker count: physical parallelism, capped.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let out = parallel_map(100, 8, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn handles_zero_jobs() {
+        let out: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn single_worker_equivalent() {
+        let a = parallel_map(37, 1, |i| i + 1);
+        let b = parallel_map(37, 7, |i| i + 1);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn heavy_jobs_all_complete() {
+        let out = parallel_map(32, 4, |i| {
+            let mut acc = 0u64;
+            for k in 0..10_000 {
+                acc = acc.wrapping_add((i as u64).wrapping_mul(k));
+            }
+            acc
+        });
+        assert_eq!(out.len(), 32);
+    }
+}

@@ -1,0 +1,72 @@
+//! Seed-sweep property-test helpers (proptest is unavailable offline).
+//! `check(cases, |g| ...)` runs a property across many deterministic seeds
+//! with a simple value generator; failures report the seed for replay.
+
+use crate::data::rng::Rng;
+
+pub struct Gen {
+    pub seed: u64,
+    rng: Rng,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { seed, rng: Rng::new(seed) }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.next_below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn f32_normal(&mut self, scale: f32) -> f32 {
+        self.rng.next_normal() as f32 * scale
+    }
+
+    pub fn vec_normal(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_normal(scale)).collect()
+    }
+
+    pub fn choice<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.rng.next_below(items.len() as u64) as usize]
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_f64() < 0.5
+    }
+}
+
+/// Run `prop` for `cases` deterministic seeds; panic with the seed on the
+/// first failure so it can be replayed directly.
+pub fn check(cases: u64, prop: impl Fn(&mut Gen)) {
+    for seed in 0..cases {
+        let mut g = Gen::new(0xC0DE_0000 + seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(e) = result {
+            eprintln!("property failed at seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_ranges() {
+        check(50, |g| {
+            let n = g.usize_in(3, 17);
+            assert!((3..=17).contains(&n));
+            let v = g.vec_normal(n, 2.0);
+            assert_eq!(v.len(), n);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failures_propagate() {
+        check(10, |g| {
+            assert!(g.usize_in(0, 100) > 1000);
+        });
+    }
+}

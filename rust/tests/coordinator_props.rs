@@ -1,0 +1,217 @@
+//! Property tests on coordinator invariants (seed-sweep style; proptest is
+//! unavailable offline — see util::propcheck): permutation/rotation/state
+//! algebra that the pipeline relies on, across randomized shapes and seeds.
+
+use perq::hadamard::BlockRotator;
+use perq::permute::{self, CalibStats, PermKind};
+use perq::quant::{act, Format, WeightCodec};
+use perq::rounding::{proxy_loss, Rounding};
+use perq::stats;
+use perq::tensor::linalg::SymMat;
+use perq::tensor::Mat;
+use perq::util::propcheck::{check, Gen};
+
+fn rand_mat(g: &mut Gen, rows: usize, cols: usize, scale: f32) -> Mat {
+    let data = g.vec_normal(rows * cols, scale);
+    Mat::from_vec(rows, cols, data)
+}
+
+#[test]
+fn prop_permutation_merge_roundtrip() {
+    // merging P then P⁻¹ through a weight restores it exactly
+    check(30, |g| {
+        let d = *g.choice(&[8usize, 16, 32, 48]);
+        let w = rand_mat(g, d, 6, 1.0);
+        let mut perm: Vec<usize> = (0..d).collect();
+        for i in (1..d).rev() {
+            let j = g.usize_in(0, i);
+            perm.swap(i, j);
+        }
+        let inv = permute::invert(&perm);
+        let back = w.permute_rows(&perm).permute_rows(&inv);
+        assert_eq!(back.data, w.data);
+    });
+}
+
+#[test]
+fn prop_all_calibrators_emit_valid_perms() {
+    check(25, |g| {
+        let b = *g.choice(&[4usize, 8, 16]);
+        let n = g.usize_in(2, 8);
+        let d = b * n;
+        let rows: Vec<Vec<f32>> = (0..6).map(|_| g.vec_normal(d, 2.0)).collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let stats = CalibStats::from_activations(&refs);
+        for kind in [
+            PermKind::Identity,
+            PermKind::Random,
+            PermKind::Absmax,
+            PermKind::ZigZag,
+            PermKind::MassDiff,
+        ] {
+            let p = kind.calibrate(&stats, b, g.seed);
+            assert!(permute::is_permutation(&p), "{kind:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_massdiff_never_worse_than_identity() {
+    check(40, |g| {
+        let b = *g.choice(&[4usize, 8, 16, 32]);
+        let n = g.usize_in(2, 10);
+        let d = b * n;
+        // spiky mass profile
+        let mut mass: Vec<f64> = (0..d).map(|_| g.f32_normal(1.0).abs() as f64 + 0.01).collect();
+        for _ in 0..g.usize_in(0, d / 8) {
+            let i = g.usize_in(0, d - 1);
+            mass[i] *= 20.0;
+        }
+        let md = permute::massdiff_perm(&mass, b);
+        let ident: Vec<usize> = (0..d).collect();
+        let m_md = permute::massdiff::max_block_mass(&mass, &md, b);
+        let m_id = permute::massdiff::max_block_mass(&mass, &ident, b);
+        assert!(m_md <= m_id + 1e-9);
+        assert!(m_md >= permute::massdiff::mass_lower_bound(&mass, b) - 1e-9);
+    });
+}
+
+#[test]
+fn prop_rotation_preserves_l2_and_bound_holds() {
+    // Prop 3.2: post-rotation outliers bounded by Z(b;X)/... for random X
+    check(30, |g| {
+        let b = *g.choice(&[4usize, 8, 16]);
+        let n = g.usize_in(1, 8);
+        let d = b * n;
+        let x = g.vec_normal(d, 3.0);
+        let rot = BlockRotator::hadamard(b).unwrap();
+        let mut y = Mat::from_vec(1, d, x.clone());
+        rot.apply_mat(&mut y);
+        // l2 preserved
+        let n0: f64 = x.iter().map(|&v| (v as f64).powi(2)).sum();
+        let n1: f64 = y.data.iter().map(|&v| (v as f64).powi(2)).sum();
+        assert!((n0 - n1).abs() / n0.max(1e-9) < 1e-3);
+        // Prop 3.2 bound
+        assert!(stats::linf(&y.data) <= stats::z_bound(&x, b) + 1e-4);
+    });
+}
+
+#[test]
+fn prop_act_quant_error_bounded_by_worst_case() {
+    // §3: ‖X − Q(X)‖₂ ≤ √d/(2^q−2)·‖X‖_∞ for the INT4 quantizer
+    check(30, |g| {
+        let d = *g.choice(&[32usize, 64, 128]);
+        let x = g.vec_normal(d, 5.0);
+        let mut q = x.clone();
+        act::int_asym_row(&mut q, 4);
+        let err: f64 = x
+            .iter()
+            .zip(&q)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        let bound = perq::quant::worst_case_error_bound(d, 4, stats::linf(&x));
+        assert!(err <= bound + 1e-6, "err {err} bound {bound}");
+    });
+}
+
+#[test]
+fn prop_rounding_hierarchy() {
+    // GPTQ is a greedy solver: per-instance dominance over RTN is not
+    // guaranteed, but aggregate dominance across seeds is the claim that
+    // matters (same shape as the paper's tables).
+    use std::sync::atomic::{AtomicU64, Ordering};
+    let sum_g = AtomicU64::new(0);
+    let sum_r = AtomicU64::new(0);
+    let to_bits = |x: f64| (x * 1e6) as u64;
+    check(15, |g| {
+        let d = *g.choice(&[16usize, 24, 32]);
+        let cols = g.usize_in(2, 6);
+        let w = rand_mat(g, d, cols, 0.3);
+        let t = d * 4;
+        let mut h = SymMat::zeros(d);
+        let common: Vec<f32> = g.vec_normal(t, 1.0);
+        let mut x = vec![0.0f32; t * d];
+        for r in 0..t {
+            for j in 0..d {
+                x[r * d + j] = g.f32_normal(1.0) + 0.6 * common[r];
+            }
+        }
+        h.accumulate_gram(&x, t);
+        h.add_diag(0.01 * h.mean_diag());
+        let codec = WeightCodec::fit(Format::Int4, &w);
+        let q_rtn = codec.quantize_mat(&w);
+        let q_gptq = Rounding::Gptq.round(&w, &codec, Some(&h));
+        sum_g.fetch_add(to_bits(proxy_loss(&w, &q_gptq, &h)), Ordering::Relaxed);
+        sum_r.fetch_add(to_bits(proxy_loss(&w, &q_rtn, &h)), Ordering::Relaxed);
+    });
+    let (g, r) = (sum_g.load(Ordering::Relaxed), sum_r.load(Ordering::Relaxed));
+    assert!(g < r, "aggregate gptq {g} must beat rtn {r}");
+}
+
+#[test]
+fn prop_quantizers_idempotent_and_finite() {
+    check(30, |g| {
+        let d = 64;
+        let scale = *g.choice(&[0.1f32, 1.0, 30.0]);
+        let mut row = g.vec_normal(d, scale);
+        let fmt = *g.choice(&[Format::Int4, Format::Fp4, Format::Mxfp4]);
+        act::act_quant_row(&mut row, fmt);
+        assert!(row.iter().all(|v| v.is_finite()));
+        let once = row.clone();
+        act::act_quant_row(&mut row, fmt);
+        for (a, b) in row.iter().zip(&once) {
+            assert!((a - b).abs() <= 1e-5 * b.abs().max(1.0), "{fmt:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_merge_then_online_rotation_is_identity() {
+    // the R̃3 contract between rust merges and the in-graph rotation
+    check(20, |g| {
+        let b = *g.choice(&[4usize, 8, 12, 16, 28]);
+        let n = g.usize_in(1, 4);
+        let d = b * n;
+        let cols = g.usize_in(2, 5);
+        let x = rand_mat(g, 3, d, 1.0);
+        let w = rand_mat(g, d, cols, 1.0);
+        let rot = BlockRotator::hadamard(b).unwrap();
+        let mut xr = x.clone();
+        rot.apply_mat(&mut xr);
+        let wm = rot.merge_into_weight_rows(&w).unwrap();
+        let got = xr.matmul(&wm);
+        let want = x.matmul(&w);
+        for (a, bb) in got.data.iter().zip(&want.data) {
+            assert!((a - bb).abs() < 1e-3);
+        }
+    });
+}
+
+#[test]
+fn prop_batching_pads_consistently() {
+    // calibration batching: padded sequences never affect captured stats
+    // (verified at the data level: batch construction is deterministic and
+    // only the first `real` sequences are consumed downstream)
+    check(10, |g| {
+        let n = g.usize_in(1, 9);
+        let cfgj = perq::util::json::parse(
+            r#"{"config": {"name": "m", "n_layers": 1, "d_model": 16,
+                "n_heads": 2, "d_ffn": 32, "vocab": 32, "seq_len": 64,
+                "batch": 4, "block_sizes": [1]}}"#,
+        )
+        .unwrap();
+        let cfg = perq::model::ModelConfig::from_meta(&cfgj).unwrap();
+        let seqs = perq::calib::capture::calibration_batches(
+            &cfg,
+            perq::data::corpus::Source::Wiki,
+            n,
+            g.seed,
+        );
+        assert_eq!(seqs.len(), n);
+        for s in &seqs {
+            assert_eq!(s.len(), 64);
+            assert!(s.iter().all(|&t| (0..32).contains(&t)));
+        }
+    });
+}

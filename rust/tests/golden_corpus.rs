@@ -1,0 +1,58 @@
+//! Cross-language bit-identity: the rust corpus twin must produce the
+//! exact token stream python wrote to artifacts/corpus_golden.bin
+//! (3 sources × 2 splits × 4096 u16 tokens, little-endian).
+
+use perq::data::corpus::{token_stream, Source, Split};
+use perq::runtime::RepoContext;
+
+fn golden() -> Option<Vec<u16>> {
+    let ctx = RepoContext::discover().ok()?;
+    let bytes = std::fs::read(ctx.golden_path()).ok()?;
+    Some(
+        bytes
+            .chunks_exact(2)
+            .map(|c| u16::from_le_bytes([c[0], c[1]]))
+            .collect(),
+    )
+}
+
+#[test]
+fn corpus_matches_python_golden() {
+    let Some(golden) = golden() else {
+        eprintln!("skipping: corpus_golden.bin not built (run `make artifacts`)");
+        return;
+    };
+    let n = 4096;
+    assert_eq!(golden.len(), 6 * n, "golden file layout");
+    let mut off = 0;
+    for source in [Source::Wiki, Source::C4, Source::Fineweb] {
+        for split in [Split::Train, Split::Test] {
+            let got = token_stream(source, split, n);
+            let want = &golden[off..off + n];
+            assert_eq!(
+                got, want,
+                "bit-identity broken for {source:?}/{split:?}"
+            );
+            off += n;
+        }
+    }
+}
+
+#[test]
+fn corpus_statistics_match_expectations() {
+    // tokens are characters; space must be the most common token in all
+    // sources (word-joined text), and '.' present at sentence rate
+    for source in [Source::Wiki, Source::C4, Source::Fineweb] {
+        let toks = token_stream(source, Split::Train, 1 << 14);
+        let mut counts = [0usize; 32];
+        for &t in &toks {
+            counts[t as usize] += 1;
+        }
+        let space = perq::data::corpus::char_to_id(b' ').unwrap() as usize;
+        let period = perq::data::corpus::char_to_id(b'.').unwrap() as usize;
+        let max_idx = (0..32).max_by_key(|&i| counts[i]).unwrap();
+        assert!(max_idx == space || counts[max_idx] > 0, "{source:?}");
+        assert!(counts[space] > toks.len() / 12, "{source:?} space rate");
+        assert!(counts[period] > toks.len() / 120, "{source:?} period rate");
+    }
+}
