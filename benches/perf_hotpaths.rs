@@ -5,14 +5,20 @@
 
 mod common;
 
+use perq::backend::{self, BackendKind, ExecBackend, NativeBackend};
+use perq::coordinator::pipeline::Pipeline;
+use perq::coordinator::presets;
+use perq::data::corpus::{token_stream, Source, Split};
 use perq::data::rng::Rng;
 use perq::hadamard::BlockRotator;
+use perq::model::bundle::ModelBundle;
 use perq::permute::massdiff_perm;
 use perq::quant::{Format, WeightCodec};
 use perq::rounding::Rounding;
+use perq::runtime::{Engine, RepoContext};
 use perq::tensor::linalg::SymMat;
 use perq::tensor::Mat;
-use perq::util::bench::time;
+use perq::util::bench::{append_trajectory, time};
 
 fn rand_mat(r: usize, c: usize, seed: u64) -> Mat {
     let mut rng = Rng::new(seed);
@@ -67,6 +73,16 @@ fn main() -> anyhow::Result<()> {
     let t_q = time("qronos", 1, 800, || Rounding::Qronos.round(&w, &codec, Some(&gram)));
     println!("qronos 1024x256:    {:9.1} ms", t_q.mean_ms());
 
+    // === backend scoring: native vs pjrt =============================
+    // Native scoring needs zero artifacts (synthetic weights stand in when
+    // the trained tree is absent); the pjrt column appears when the `pjrt`
+    // feature + artifacts are both present. Results append to the
+    // BENCH_backend.json trajectory for run-over-run tracking. Failures
+    // skip this section (bench convention) rather than abort the binary.
+    if let Err(e) = bench_backend_scoring() {
+        println!("\nSKIP backend scoring: {e:#}");
+    }
+
     // end-to-end pipeline stage timings on the real model (if artifacts exist)
     if let Some(bc) = common::ctx_or_skip() {
         let bundle = bc.bundle("llama_np2")?;
@@ -86,5 +102,88 @@ fn main() -> anyhow::Result<()> {
         );
     }
     common::elapsed_note(t0);
+    Ok(())
+}
+
+/// Score identical quantized weights through every available backend and
+/// report tokens/sec + per-batch latency; one trajectory entry per backend.
+fn bench_backend_scoring() -> anyhow::Result<()> {
+    const MODEL: &str = "llama_np2";
+    let discovered = RepoContext::discover().ok();
+    let (engine, bundle, root) = match &discovered {
+        Some(ctx) => {
+            let engine = Engine::new(ctx)?;
+            match ModelBundle::load(ctx, MODEL) {
+                Ok(b) => (engine, b, ctx.root.clone()),
+                Err(_) => (
+                    Engine::native_ephemeral(),
+                    ModelBundle::synthetic(MODEL)?,
+                    std::env::current_dir()?,
+                ),
+            }
+        }
+        None => (
+            Engine::native_ephemeral(),
+            ModelBundle::synthetic(MODEL)?,
+            std::env::current_dir()?,
+        ),
+    };
+    let cfg = bundle.cfg.clone();
+    let mut spec = presets::perq_star(32, Format::Int4);
+    spec.calib_seqs = 2;
+    let qm = Pipeline::new(spec).quantize_with_engine(&bundle, &engine)?;
+
+    let (b, t) = (cfg.batch, cfg.seq_len);
+    let toks = token_stream(Source::Wiki, Split::Test, b * t + 1);
+    let tokens: Vec<i32> = toks[..b * t].iter().map(|&x| x as i32).collect();
+
+    println!("\n=== backend scoring ({MODEL}, PeRQ* INT4 b=32, batch {b} x {t}) ===");
+    let stamp = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let traj = root.join("BENCH_backend.json");
+
+    let mut backends: Vec<(&str, Box<dyn ExecBackend>)> = vec![(
+        "native",
+        Box::new(NativeBackend::new(cfg.clone(), qm.ws.clone(), qm.graph.clone())?),
+    )];
+    if engine.backend() == BackendKind::Pjrt {
+        match backend::make_backend(
+            BackendKind::Pjrt,
+            discovered.as_ref(),
+            MODEL,
+            &cfg,
+            &qm.ws,
+            &qm.graph,
+        ) {
+            Ok(be) => backends.push(("pjrt", be)),
+            Err(e) => println!("  (pjrt backend unavailable: {e})"),
+        }
+    } else {
+        println!("  (pjrt column skipped: feature or artifacts absent)");
+    }
+
+    for (name, mut be) in backends {
+        let timing = time(name, 3, 1500, || be.score(&tokens).expect("scoring failed"));
+        let ms = timing.mean_ms();
+        let tok_s = (b * t) as f64 / (timing.mean_ns / 1e9);
+        let oc = be.op_counts();
+        println!(
+            "  {name:<7} {ms:9.2} ms/batch  {tok_s:9.0} tok/s  \
+             (rot {} ops/tok, {} quantized vals/tok)",
+            perq::util::bench::fmt_count(oc.rotation_ops),
+            oc.quantized_values,
+        );
+        let entry = format!(
+            "{{\"bench\": \"backend_scoring\", \"ts\": {stamp}, \"model\": \"{MODEL}\", \
+             \"backend\": \"{name}\", \"block\": 32, \"format\": \"int4\", \
+             \"ms_per_batch\": {ms:.3}, \"tok_per_s\": {tok_s:.1}}}"
+        );
+        if let Err(e) = append_trajectory(&traj, &entry) {
+            println!("  (could not write {traj:?}: {e})");
+        }
+    }
+    println!("  trajectory: {}", traj.display());
     Ok(())
 }

@@ -1,23 +1,50 @@
 //! Quickstart: quantize one model with PeRQ* and compare against the
 //! full-precision baseline.
 //!
-//!     cargo run --release --example quickstart
+//!     cargo run --release --example quickstart [-- --backend native|pjrt|auto]
 //!
-//! Requires `make artifacts` (builds the tiny models + AOT graphs once).
+//! With artifacts (`make artifacts`) the trained tiny models are used and
+//! the backend defaults to pjrt when compiled in. Without artifacts the
+//! example still runs: native backend, synthetic weights — useful to see
+//! the pipeline shape, though a random-init model has near-uniform ppl.
 
 use perq::prelude::*;
+use perq::util::cli;
 
 fn main() -> anyhow::Result<()> {
-    let ctx = RepoContext::discover()?;
-    let engine = Engine::new(&ctx)?;
-    let bundle = ModelBundle::load_with_engine(&ctx, &engine, "llama_np2")?;
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = cli::parse(&argv);
+    let (engine, bundle) = match RepoContext::discover() {
+        Ok(ctx) => {
+            let kind = BackendKind::resolve(args.backend(), &ctx)?;
+            let engine = Engine::with_backend(&ctx, kind)?;
+            let bundle = match ModelBundle::load(&ctx, "llama_np2") {
+                Ok(b) => b,
+                Err(e) if kind == BackendKind::Native => {
+                    println!("note: {e:#}\n      — falling back to synthetic weights");
+                    ModelBundle::synthetic("llama_np2")?
+                }
+                Err(e) => return Err(e),
+            };
+            (engine, bundle)
+        }
+        Err(_) => {
+            anyhow::ensure!(
+                !matches!(args.backend(), Some("pjrt")),
+                "--backend pjrt requires an artifacts/ tree (run `make artifacts`)"
+            );
+            println!("no artifacts/ tree found — native backend, synthetic weights");
+            (Engine::native_ephemeral(), ModelBundle::synthetic("llama_np2")?)
+        }
+    };
     println!(
-        "model {} — {} layers, d_model {}, d_ffn {}, {} params",
+        "model {} — {} layers, d_model {}, d_ffn {}, {} params (backend: {})",
         bundle.name,
         bundle.cfg.n_layers,
         bundle.cfg.d_model,
         bundle.cfg.d_ffn,
-        bundle.weights.param_count()
+        bundle.weights.param_count(),
+        engine.backend().name()
     );
 
     // full-precision reference

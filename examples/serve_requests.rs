@@ -1,46 +1,90 @@
 //! Serving driver: quantize a model with PeRQ*, stand up the dynamic-
-//! batching inference server (device-resident weights), fire a stream of
-//! scoring requests with random arrival gaps, and report latency /
-//! throughput per block size — the runtime side of the paper's Appendix A
-//! compute argument, plus the analytic rotation op counts for context.
+//! batching inference server, fire a stream of scoring requests with
+//! random arrival gaps, and report latency / throughput per block size —
+//! the runtime side of the paper's Appendix A compute argument, plus the
+//! analytic rotation op counts for context.
 //!
-//!     cargo run --release --example serve_requests [model] [n_requests]
+//!     cargo run --release --example serve_requests [model] [n_requests] \
+//!         [--backend native|pjrt|auto]
+//!
+//! With `--backend native` (the default when no HLO artifact tree is
+//! found) the whole path — calibration capture, PTQ, serving — runs in
+//! pure Rust with zero PJRT/XLA or Python-artifact dependency; if even the
+//! trained weights are missing, deterministic synthetic weights are used
+//! so the serving path can be exercised anywhere.
 
 use std::time::{Duration, Instant};
 
-use perq::coordinator::pipeline::Pipeline;
+use anyhow::Result;
+use perq::coordinator::pipeline::{Pipeline, QuantizedModel};
 use perq::coordinator::presets;
 use perq::coordinator::server::InferenceServer;
 use perq::data::corpus::{token_stream, Split};
 use perq::data::rng::Rng;
 use perq::hadamard::opcount;
 use perq::prelude::*;
+use perq::util::cli;
 
-fn main() -> anyhow::Result<()> {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    let model = args.first().map(|s| s.as_str()).unwrap_or("llama_np2");
-    let n_requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(64);
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = cli::parse(&argv);
+    let model = args
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "llama_np2".to_string());
+    let n_requests: usize = args
+        .positional
+        .get(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64);
 
-    let ctx = RepoContext::discover()?;
-    let engine = Engine::new(&ctx)?;
-    let bundle = ModelBundle::load_with_engine(&ctx, &engine, model)?;
+    // Resolve artifacts + backend. Native serving needs neither the XLA
+    // toolchain nor `make artifacts`; pjrt needs both.
+    let discovered = RepoContext::discover().ok();
+    let (engine, bundle) = match &discovered {
+        Some(ctx) => {
+            let kind = BackendKind::resolve(args.backend(), ctx)?;
+            let engine = Engine::with_backend(ctx, kind)?;
+            match ModelBundle::load(ctx, &model) {
+                Ok(b) => (engine, b),
+                Err(e) if kind == BackendKind::Native => {
+                    println!("note: {e:#}\n      — falling back to synthetic weights");
+                    (engine, ModelBundle::synthetic(&model)?)
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        None => {
+            anyhow::ensure!(
+                !matches!(args.backend(), Some("pjrt")),
+                "--backend pjrt requires an artifacts/ tree (run `make artifacts`)"
+            );
+            println!("no artifacts/ tree found — native backend, synthetic weights");
+            (Engine::native_ephemeral(), ModelBundle::synthetic(&model)?)
+        }
+    };
     let cfg = bundle.cfg.clone();
     let t = cfg.seq_len;
+    println!("backend: {}  model: {model}\n", engine.backend().name());
 
     for block in [16usize, 32, cfg.d_ffn] {
-        if cfg.d_ffn % block != 0 || !bundle.has_artifact(&format!("fwd_quant_b{block}")) {
+        if cfg.d_ffn % block != 0 {
             continue;
         }
-        // offline PTQ (PeRQ*, INT4)
+        if engine.backend() == BackendKind::Pjrt
+            && !bundle.has_artifact(&format!("fwd_quant_b{block}"))
+        {
+            continue;
+        }
+        // offline PTQ (PeRQ*, INT4) — capture + rounding on the same backend
         let mut spec = presets::perq_star(block, Format::Int4);
         spec.calib_seqs = 4;
         let qm = Pipeline::new(spec).quantize_with_engine(&bundle, &engine)?;
 
-        // bring up the server (own PJRT client + device-resident weights)
-        let artifact = ctx.model_dir(model).join(format!("{}.hlo.txt", qm.eval_tag));
-        let server = InferenceServer::start(
-            artifact, &cfg, &qm.ws, qm.extras.clone(), Duration::from_millis(20),
-        )?;
+        // bring up the server (backend constructed on the batcher thread;
+        // pjrt keeps device-resident weights, native keeps pooled scratch)
+        let server = start_server(&engine, &bundle, &qm)?;
 
         // request stream: random windows of the test split, random gaps
         let toks = token_stream(Source::Wiki, Split::Test, 1 << 15);
@@ -66,10 +110,11 @@ fn main() -> anyhow::Result<()> {
         lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let p = |q: f64| lats[((lats.len() - 1) as f64 * q) as usize];
         let (served, batches, exec_s) = server.stats();
+        let padded = server.padded_slots();
         let label = if block == cfg.d_ffn { "full".to_string() } else { format!("b={block}") };
         println!(
             "{model} {label:<6} | {n_requests} reqs in {wall:.2}s = {:.0} tok/s | \
-             lat p50 {:.0}ms p95 {:.0}ms | {batches} batches ({:.1} req/batch) | \
+             lat p50 {:.0}ms p95 {:.0}ms | {batches} batches ({:.1} req/batch, {padded} padded) | \
              exec {:.2}s | ppl {:.2} | rot ops/token {}",
             n_requests as f64 * t as f64 / wall,
             p(0.5),
@@ -88,4 +133,30 @@ fn main() -> anyhow::Result<()> {
          2% end-to-end observation)"
     );
     Ok(())
+}
+
+fn start_server(engine: &Engine, bundle: &ModelBundle, qm: &QuantizedModel) -> Result<InferenceServer> {
+    let wait = Duration::from_millis(20);
+    match engine.backend() {
+        BackendKind::Native => {
+            InferenceServer::start_native(&bundle.cfg, &qm.ws, &qm.graph, wait)
+        }
+        BackendKind::Pjrt => start_pjrt_server(engine, bundle, qm, wait),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn start_pjrt_server(engine: &Engine, bundle: &ModelBundle, qm: &QuantizedModel,
+                     wait: Duration) -> Result<InferenceServer> {
+    let artifact = engine
+        .ctx()
+        .model_dir(&bundle.name)
+        .join(format!("{}.hlo.txt", qm.eval_tag));
+    InferenceServer::start(artifact, &bundle.cfg, &qm.ws, qm.extras.clone(), wait)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn start_pjrt_server(_engine: &Engine, _bundle: &ModelBundle, _qm: &QuantizedModel,
+                     _wait: Duration) -> Result<InferenceServer> {
+    anyhow::bail!("the pjrt backend is not compiled in (rebuild with `--features pjrt`)")
 }

@@ -1,0 +1,350 @@
+//! Execution backends — the serving-side abstraction that decouples the L3
+//! coordinator from *how* a forward pass is executed.
+//!
+//! The paper's case for block rotations is a serving argument (App A:
+//! online rotation cost, end-to-end latency), so the rotate+quantize+matmul
+//! chain must be runnable anywhere — not only where the XLA toolchain and
+//! Python-lowered HLO artifacts exist. Two implementations sit behind the
+//! [`ExecBackend`] trait:
+//!
+//! * [`native::NativeBackend`] — the full quantized forward pass in pure
+//!   Rust: merged-permutation gather (already folded into the weights),
+//!   blockwise FWHT (`hadamard::fwht`, including the non-power-of-2 plan),
+//!   activation fake-quant from `quant::act`, and the cache-blocked f32
+//!   matmul in `tensor`. Always available; zero external dependencies.
+//! * `pjrt::PjrtBackend` — the device-resident PJRT adapter over the AOT
+//!   HLO artifacts (feature `pjrt`; requires the vendored xla-rs bindings).
+//!
+//! Selection is explicit (`--backend {native,pjrt}`) or automatic
+//! ([`BackendKind::auto`]: pjrt when HLO artifacts are present and the
+//! feature is compiled, native otherwise; `PERQ_BACKEND` overrides).
+
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+use anyhow::{bail, Result};
+
+use crate::hadamard::{self, opcount, BlockRotator};
+use crate::model::config::ModelConfig;
+use crate::model::weights::WeightSet;
+use crate::quant::Format;
+use crate::runtime::RepoContext;
+use crate::tensor::Mat;
+
+pub use native::NativeBackend;
+
+/// Extra forward-graph inputs after (weights, tokens), in host (`Send`)
+/// form: the (b, b) rotation matrix and the runtime `fmt` scalar. PJRT
+/// literal conversion happens inside the pjrt paths only.
+#[derive(Clone)]
+pub enum ExtraInput {
+    Matrix(Mat),
+    ScalarI32(i32),
+}
+
+/// Which forward graph a backend executes, in backend-neutral terms.
+/// Mirrors the L2 artifact variants (`fwd`, `fwd_quant_b{b}`,
+/// `fwd_online_b32`) without referencing artifacts.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ForwardGraph {
+    /// Full-precision forward (BF16-analog baseline) — artifact tag `fwd`.
+    Fp,
+    /// The Fig 7 merged graph: online act-quant everywhere plus the fused
+    /// R̃3 block rotate+quant before the down projection.
+    Merged { r3_block: usize, format: Format },
+    /// The Fig 9 fully-online graph (b = 32 at every site). PJRT only.
+    Online { format: Format },
+}
+
+impl ForwardGraph {
+    /// The matching AOT artifact tag.
+    pub fn tag(&self) -> String {
+        match self {
+            ForwardGraph::Fp => "fwd".to_string(),
+            ForwardGraph::Merged { r3_block, .. } => format!("fwd_quant_b{r3_block}"),
+            ForwardGraph::Online { .. } => "fwd_online_b32".to_string(),
+        }
+    }
+
+    pub fn format(&self) -> Format {
+        match self {
+            ForwardGraph::Fp => Format::None,
+            ForwardGraph::Merged { format, .. } | ForwardGraph::Online { format } => *format,
+        }
+    }
+
+    /// The extra graph inputs after (weights, tokens), in host form.
+    pub fn extras(&self) -> Result<Vec<ExtraInput>> {
+        Ok(match self {
+            ForwardGraph::Fp => vec![],
+            ForwardGraph::Merged { r3_block, format } => vec![
+                ExtraInput::Matrix(BlockRotator::hadamard(*r3_block)?.matrix()?),
+                ExtraInput::ScalarI32(format.fmt_id()),
+            ],
+            ForwardGraph::Online { format } => {
+                let h32 = hadamard::normalized_hadamard(32)?;
+                vec![
+                    ExtraInput::Matrix(h32.clone()),
+                    ExtraInput::Matrix(h32),
+                    ExtraInput::ScalarI32(format.fmt_id()),
+                ]
+            }
+        })
+    }
+}
+
+/// Per-token analytic op counts a backend reports for its graph — the
+/// serving-side view of the paper's Tables 3/4 accounting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OpCounts {
+    /// online rotation add/sub ops per token (the Appendix A quantity)
+    pub rotation_ops: usize,
+    /// linear-layer multiply-accumulate flops per token (2 per MAC)
+    pub matmul_flops: usize,
+    /// activation values fake-quantized per token
+    pub quantized_values: usize,
+}
+
+/// A compiled/loaded forward executor for one (model spec, graph) pair.
+///
+/// `score` consumes exactly `cfg.batch * cfg.seq_len` i32 tokens and
+/// returns `(batch * seq_len * vocab)` f32 logits — the same contract as
+/// the AOT artifacts, so the batching server and the eval streamers are
+/// backend-agnostic. Implementations may keep internal scratch (hence
+/// `&mut`); they are single-threaded objects owned by their caller.
+pub trait ExecBackend {
+    fn name(&self) -> &'static str;
+    fn cfg(&self) -> &ModelConfig;
+    fn score(&mut self, tokens: &[i32]) -> Result<Vec<f32>>;
+    fn op_counts(&self) -> OpCounts;
+}
+
+/// Backend selector. `Pjrt` requires both the `pjrt` cargo feature and the
+/// AOT HLO artifacts on disk; `Native` has no requirements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    Native,
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "native" | "rust" => Some(BackendKind::Native),
+            "pjrt" | "xla" => Some(BackendKind::Pjrt),
+            _ => None,
+        }
+    }
+
+    /// Default selection: pjrt when compiled in *and* HLO artifacts exist
+    /// under `ctx.artifacts`, native otherwise. `PERQ_BACKEND` overrides.
+    pub fn auto(ctx: &RepoContext) -> BackendKind {
+        if let Ok(v) = std::env::var("PERQ_BACKEND") {
+            if let Some(k) = BackendKind::parse(&v) {
+                return k;
+            }
+        }
+        if cfg!(feature = "pjrt") && has_hlo_artifacts(ctx) {
+            BackendKind::Pjrt
+        } else {
+            BackendKind::Native
+        }
+    }
+
+    /// Resolve an optional `--backend` CLI value (None/"auto" → [`auto`]).
+    pub fn resolve(arg: Option<&str>, ctx: &RepoContext) -> Result<BackendKind> {
+        match arg {
+            None | Some("auto") => Ok(BackendKind::auto(ctx)),
+            Some(s) => match BackendKind::parse(s) {
+                Some(k) => Ok(k),
+                None => bail!("unknown backend {s:?} (expected native|pjrt|auto)"),
+            },
+        }
+    }
+}
+
+/// Does any model directory under `artifacts/` hold a lowered HLO graph?
+pub fn has_hlo_artifacts(ctx: &RepoContext) -> bool {
+    let Ok(entries) = std::fs::read_dir(&ctx.artifacts) else {
+        return false;
+    };
+    for entry in entries.flatten() {
+        let dir = entry.path();
+        if !dir.is_dir() {
+            continue;
+        }
+        if let Ok(files) = std::fs::read_dir(&dir) {
+            for f in files.flatten() {
+                if f.file_name().to_string_lossy().ends_with(".hlo.txt") {
+                    return true;
+                }
+            }
+        }
+    }
+    false
+}
+
+/// Instantiate a backend for (model, graph). `ctx`/`model` are only needed
+/// by the pjrt arm (artifact lookup); native ignores them.
+pub fn make_backend(kind: BackendKind, ctx: Option<&RepoContext>, model: &str,
+                    cfg: &ModelConfig, ws: &WeightSet, graph: &ForwardGraph)
+                    -> Result<Box<dyn ExecBackend>> {
+    match kind {
+        BackendKind::Native => Ok(Box::new(NativeBackend::new(
+            cfg.clone(),
+            ws.clone(),
+            graph.clone(),
+        )?)),
+        BackendKind::Pjrt => make_pjrt_backend(ctx, model, cfg, ws, graph),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn make_pjrt_backend(ctx: Option<&RepoContext>, model: &str, cfg: &ModelConfig,
+                     ws: &WeightSet, graph: &ForwardGraph)
+                     -> Result<Box<dyn ExecBackend>> {
+    let ctx = ctx.ok_or_else(|| anyhow::anyhow!("pjrt backend needs a RepoContext"))?;
+    let artifact = ctx.model_dir(model).join(format!("{}.hlo.txt", graph.tag()));
+    anyhow::ensure!(artifact.exists(), "missing artifact {artifact:?} — run `make artifacts`");
+    Ok(Box::new(pjrt::PjrtBackend::load(&artifact, cfg, ws, graph)?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn make_pjrt_backend(_ctx: Option<&RepoContext>, _model: &str, _cfg: &ModelConfig,
+                     _ws: &WeightSet, _graph: &ForwardGraph)
+                     -> Result<Box<dyn ExecBackend>> {
+    bail!("the pjrt backend is not compiled in (rebuild with `--features pjrt`)")
+}
+
+/// Analytic per-token op counts for a graph on a model config — shared by
+/// both backends so native-vs-pjrt comparisons report identical accounting.
+pub fn graph_op_counts(cfg: &ModelConfig, graph: &ForwardGraph) -> OpCounts {
+    let (l, d, f, v, t) = (cfg.n_layers, cfg.d_model, cfg.d_ffn, cfg.vocab, cfg.seq_len);
+    // linear sites per layer: wq/wk/wv/wo (d×d), wg/wu (d×f), wd (f×d);
+    // plus attention (scores + context ≈ 2·2·t·d) and the unembed d×v.
+    let matmul_flops = l * (2 * (4 * d * d + 3 * d * f) + 4 * t * d) + 2 * d * v;
+    let (rotation_ops, quantized_values) = match graph {
+        ForwardGraph::Fp => (0, 0),
+        ForwardGraph::Merged { r3_block, format } => {
+            let rot = l * opcount::block_ops(f, *r3_block);
+            let q = if *format == Format::None { 0 } else { l * (3 * d + f) };
+            (rot, q)
+        }
+        ForwardGraph::Online { format } => {
+            let rot = l * (3 * opcount::block_ops(d, 32.min(d)) + opcount::block_ops(f, 32));
+            let q = if *format == Format::None { 0 } else { l * (3 * d + f) };
+            (rot, q)
+        }
+    };
+    OpCounts { rotation_ops, matmul_flops, quantized_values }
+}
+
+/// Build a scoring closure for (model, graph) on the engine's backend —
+/// the shared entry point of the perplexity/zero-shot streamers. The
+/// closure takes `cfg.batch * cfg.seq_len` tokens and yields flat logits.
+pub fn scorer<'a>(engine: &'a crate::runtime::Engine, model: &str, cfg: &ModelConfig,
+                  ws: &WeightSet, graph: &ForwardGraph)
+                  -> Result<Box<dyn FnMut(&[i32]) -> Result<Vec<f32>> + 'a>> {
+    match engine.backend() {
+        BackendKind::Native => {
+            let mut be = NativeBackend::new(cfg.clone(), ws.clone(), graph.clone())?;
+            Ok(Box::new(move |tokens: &[i32]| be.score(tokens)))
+        }
+        BackendKind::Pjrt => pjrt_scorer(engine, model, cfg, ws, graph),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_scorer<'a>(engine: &'a crate::runtime::Engine, model: &str, cfg: &ModelConfig,
+                   ws: &WeightSet, graph: &ForwardGraph)
+                   -> Result<Box<dyn FnMut(&[i32]) -> Result<Vec<f32>> + 'a>> {
+    use crate::runtime::engine as raw;
+    let raw_engine = engine.pjrt()?;
+    let w_lits = raw::weight_literals(ws)?;
+    let extras = graph.extras()?;
+    let model = model.to_string();
+    let tag = graph.tag();
+    let (b, t) = (cfg.batch, cfg.seq_len);
+    Ok(Box::new(move |tokens: &[i32]| {
+        let mut inputs = w_lits.clone();
+        inputs.push(raw::tokens_literal(tokens, b, t)?);
+        for e in &extras {
+            inputs.push(match e {
+                ExtraInput::Matrix(m) => raw::mat_literal(m)?,
+                ExtraInput::ScalarI32(v) => raw::scalar_i32(*v),
+            });
+        }
+        let outs = raw_engine.run(&model, &tag, &inputs)?;
+        anyhow::ensure!(!outs.is_empty(), "artifact returned no outputs");
+        raw::literal_to_vec_f32(&outs[0])
+    }))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_scorer<'a>(_engine: &'a crate::runtime::Engine, _model: &str, _cfg: &ModelConfig,
+                   _ws: &WeightSet, _graph: &ForwardGraph)
+                   -> Result<Box<dyn FnMut(&[i32]) -> Result<Vec<f32>> + 'a>> {
+    bail!("the pjrt backend is not compiled in (rebuild with `--features pjrt`)")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn graph_tags_match_artifact_contract() {
+        assert_eq!(ForwardGraph::Fp.tag(), "fwd");
+        let g = ForwardGraph::Merged { r3_block: 32, format: Format::Int4 };
+        assert_eq!(g.tag(), "fwd_quant_b32");
+        assert_eq!(ForwardGraph::Online { format: Format::Fp4 }.tag(), "fwd_online_b32");
+    }
+
+    #[test]
+    fn graph_extras_shapes() {
+        let g = ForwardGraph::Merged { r3_block: 16, format: Format::Int4 };
+        let ex = g.extras().unwrap();
+        assert_eq!(ex.len(), 2);
+        match &ex[0] {
+            ExtraInput::Matrix(m) => assert_eq!((m.rows, m.cols), (16, 16)),
+            _ => panic!("expected matrix"),
+        }
+        match &ex[1] {
+            ExtraInput::ScalarI32(v) => assert_eq!(*v, 1),
+            _ => panic!("expected scalar"),
+        }
+        assert!(ForwardGraph::Fp.extras().unwrap().is_empty());
+    }
+
+    #[test]
+    fn backend_kind_parse_roundtrip() {
+        assert_eq!(BackendKind::parse("native"), Some(BackendKind::Native));
+        assert_eq!(BackendKind::parse("pjrt"), Some(BackendKind::Pjrt));
+        assert_eq!(BackendKind::parse("tpu"), None);
+        assert_eq!(BackendKind::Native.name(), "native");
+    }
+
+    #[test]
+    fn op_counts_scale_with_layers() {
+        let j = crate::util::json::parse(
+            r#"{"config": {"name": "m", "n_layers": 2, "d_model": 128,
+                "n_heads": 4, "d_ffn": 448, "vocab": 32, "seq_len": 128,
+                "batch": 8, "block_sizes": [1]}}"#,
+        )
+        .unwrap();
+        let cfg = ModelConfig::from_meta(&j).unwrap();
+        let g = ForwardGraph::Merged { r3_block: 32, format: Format::Int4 };
+        let oc = graph_op_counts(&cfg, &g);
+        assert!(oc.matmul_flops > 0);
+        assert_eq!(oc.rotation_ops, 2 * opcount::block_ops(448, 32));
+        assert_eq!(oc.quantized_values, 2 * (3 * 128 + 448));
+        assert_eq!(graph_op_counts(&cfg, &ForwardGraph::Fp).rotation_ops, 0);
+    }
+}

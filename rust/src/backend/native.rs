@@ -1,0 +1,384 @@
+//! `NativeBackend` — the pure-Rust execution engine for the PeRQ forward
+//! graphs. Executes the same math as the L2 jax graphs (model.py), against
+//! the same transformed/quantized `WeightSet`, with zero PJRT/XLA or
+//! Python-artifact dependency:
+//!
+//! * merged permutations and rotations are already folded into the weights
+//!   (the Fig 7 deployment story), so the graph only performs what must be
+//!   online: dynamic per-token activation fake-quant (`quant::act`) and the
+//!   fused R̃3 block rotation (FWHT via `hadamard::fwht`, or the optimized
+//!   non-power-of-2 plan) followed by per-token quant — the rust mirror of
+//!   the pallas `fused.block_rotate_quant` kernel;
+//! * matmuls go through the cache-blocked kernel in `tensor::Mat`
+//!   (row-parallel across worker threads for large token counts);
+//! * per-layer activation buffers are recycled through a `util::pool`
+//!   buffer pool, so steady-state scoring does no allocation.
+//!
+//! Numerics note: rmsnorm/softmax accumulate in f32 like the XLA CPU
+//! lowering; parity with the artifact path is asserted to 1e-4 by the
+//! backend-parity property tests (rust/tests/backend_parity.rs).
+
+use anyhow::{bail, ensure, Result};
+
+use super::{graph_op_counts, ExecBackend, ForwardGraph, OpCounts};
+use crate::calib::capture::Captures;
+use crate::hadamard::BlockRotator;
+use crate::model::config::ModelConfig;
+use crate::model::weights::WeightSet;
+use crate::quant::{act, Format};
+use crate::tensor::Mat;
+use crate::util::pool::BufPool;
+
+pub struct NativeBackend {
+    cfg: ModelConfig,
+    ws: WeightSet,
+    graph: ForwardGraph,
+    rot3: Option<BlockRotator>,
+    format: Format,
+    pool: BufPool,
+}
+
+impl NativeBackend {
+    pub fn new(cfg: ModelConfig, ws: WeightSet, graph: ForwardGraph) -> Result<NativeBackend> {
+        let (rot3, format) = match &graph {
+            ForwardGraph::Fp => (None, Format::None),
+            ForwardGraph::Merged { r3_block, format } => {
+                ensure!(*r3_block >= 1 && cfg.d_ffn % r3_block == 0,
+                        "R3 block {} must divide d_ffn {}", r3_block, cfg.d_ffn);
+                (Some(BlockRotator::hadamard(*r3_block)?), *format)
+            }
+            ForwardGraph::Online { .. } => {
+                bail!("the fully-online graph (Fig 9) is only lowered for the pjrt backend")
+            }
+        };
+        Ok(NativeBackend { cfg, ws, graph, rot3, format, pool: BufPool::new() })
+    }
+
+    /// Run the forward pass over `nt = n_seqs * seq_len` token rows,
+    /// returning flat (nt, vocab) logits. `caps` collects the four
+    /// per-layer linear-input captures (fp graphs only — the calibrator's
+    /// `fwd_capture` contract).
+    pub fn forward(&mut self, tokens: &[i32], caps: Option<&mut Captures>) -> Result<Vec<f32>> {
+        let (t, d, f, heads) = (
+            self.cfg.seq_len,
+            self.cfg.d_model,
+            self.cfg.d_ffn,
+            self.cfg.n_heads,
+        );
+        let (n_layers, vocab) = (self.cfg.n_layers, self.cfg.vocab);
+        ensure!(!tokens.is_empty() && tokens.len() % t == 0,
+                "token count {} must be a multiple of seq_len {}", tokens.len(), t);
+        let n_seqs = tokens.len() / t;
+        let nt = tokens.len();
+        let mut caps = caps;
+
+        let mut x = self.take_mat(nt, d);
+        let mut h = self.take_mat(nt, d);
+        let mut q = self.take_mat(nt, d);
+        let mut k = self.take_mat(nt, d);
+        let mut v = self.take_mat(nt, d);
+        let mut ctx = self.take_mat(nt, d);
+        let mut proj = self.take_mat(nt, d);
+        let mut g = self.take_mat(nt, f);
+        let mut u = self.take_mat(nt, f);
+        let mut down = self.take_mat(nt, d);
+        let mut rot_scratch: Vec<f32> = Vec::new();
+
+        // embedding gather + learned positional: x = embed[tok] + pos[j]
+        let embed = self.ws.get("embed");
+        let pos = self.ws.get("pos");
+        for (r, &tok) in tokens.iter().enumerate() {
+            ensure!(tok >= 0 && (tok as usize) < vocab, "token {tok} out of vocab");
+            let xr = x.row_mut(r);
+            let er = embed.row(tok as usize);
+            let pr = pos.row(r % t);
+            for c in 0..d {
+                xr[c] = er[c] + pr[c];
+            }
+        }
+
+        for l in 0..n_layers {
+            let lname = |part: &str| format!("l{l}.{part}");
+            // -- attention half ------------------------------------------
+            rmsnorm_rows(&x, &self.ws.get(&lname("n1")).data, &mut h);
+            if let Some(c) = caps.as_deref_mut() {
+                c.attn_in[l] = h.clone();
+            }
+            act::act_quant_mat(&mut h, self.format);
+            h.par_matmul_into(self.ws.get(&lname("wq")), &mut q);
+            h.par_matmul_into(self.ws.get(&lname("wk")), &mut k);
+            h.par_matmul_into(self.ws.get(&lname("wv")), &mut v);
+            causal_attention(&q, &k, &v, &mut ctx, n_seqs, t, heads);
+            if let Some(c) = caps.as_deref_mut() {
+                c.o_in[l] = ctx.clone();
+            }
+            act::act_quant_mat(&mut ctx, self.format);
+            ctx.par_matmul_into(self.ws.get(&lname("wo")), &mut proj);
+            add_assign(&mut x.data, &proj.data);
+            // -- SwiGLU half ---------------------------------------------
+            rmsnorm_rows(&x, &self.ws.get(&lname("n2")).data, &mut h);
+            if let Some(c) = caps.as_deref_mut() {
+                c.ffn_in[l] = h.clone();
+            }
+            act::act_quant_mat(&mut h, self.format);
+            h.par_matmul_into(self.ws.get(&lname("wg")), &mut g);
+            h.par_matmul_into(self.ws.get(&lname("wu")), &mut u);
+            for (gv, &uv) in g.data.iter_mut().zip(&u.data) {
+                *gv = swish(*gv) * uv;
+            }
+            if let Some(c) = caps.as_deref_mut() {
+                c.down_in[l] = g.clone();
+            }
+            // fused R̃3 hot path: blockwise rotate, then per-token quant —
+            // the rust twin of the pallas block_rotate_quant kernel.
+            if let Some(rot) = &self.rot3 {
+                for r in 0..nt {
+                    let row = g.row_mut(r);
+                    rot.apply_row(row, &mut rot_scratch);
+                    act::act_quant_row(row, self.format);
+                }
+            }
+            g.par_matmul_into(self.ws.get(&lname("wd")), &mut down);
+            add_assign(&mut x.data, &down.data);
+        }
+
+        // final norm + unembed (full precision, as in the L2 graph)
+        rmsnorm_rows(&x, &self.ws.get("nf").data, &mut h);
+        let mut logits = Mat::zeros(nt, vocab);
+        h.par_matmul_into(self.ws.get("wout"), &mut logits);
+        if let Some(c) = caps.as_deref_mut() {
+            c.n_tokens += nt;
+        }
+
+        for m in [x, h, q, k, v, ctx, proj, g, u, down] {
+            self.put_mat(m);
+        }
+        Ok(logits.data)
+    }
+
+    fn take_mat(&mut self, rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: self.pool.take(rows * cols) }
+    }
+
+    fn put_mat(&mut self, m: Mat) {
+        self.pool.put(m.data);
+    }
+}
+
+impl ExecBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn cfg(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn score(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let want = self.cfg.batch * self.cfg.seq_len;
+        ensure!(tokens.len() == want,
+                "score takes batch*seq_len = {} tokens, got {}", want, tokens.len());
+        self.forward(tokens, None)
+    }
+
+    fn op_counts(&self) -> OpCounts {
+        graph_op_counts(&self.cfg, &self.graph)
+    }
+}
+
+/// Row-wise RMSNorm: out[r] = x[r] * rsqrt(mean(x[r]²) + 1e-6) * scale.
+/// Matches `model.rmsnorm` (f32 accumulation, eps inside the sqrt).
+pub fn rmsnorm_rows(x: &Mat, scale: &[f32], out: &mut Mat) {
+    debug_assert_eq!((x.rows, x.cols), (out.rows, out.cols));
+    debug_assert_eq!(scale.len(), x.cols);
+    let d = x.cols;
+    for r in 0..x.rows {
+        let xr = x.row(r);
+        let mut ss = 0.0f32;
+        for &xv in xr {
+            ss += xv * xv;
+        }
+        let inv = 1.0 / (ss / d as f32 + 1e-6).sqrt();
+        let or = out.row_mut(r);
+        for c in 0..d {
+            or[c] = xr[c] * inv * scale[c];
+        }
+    }
+}
+
+#[inline]
+fn swish(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+fn add_assign(x: &mut [f32], y: &[f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (a, b) in x.iter_mut().zip(y) {
+        *a += b;
+    }
+}
+
+/// Multi-head causal SDPA over `n_seqs` independent windows of length `t`:
+/// q/k/v/out are (n_seqs*t, d) with heads laid out contiguously along d.
+/// Matches `model.causal_attention` (f32, softmax = exp(s-max)/sum).
+pub fn causal_attention(q: &Mat, k: &Mat, v: &Mat, out: &mut Mat,
+                        n_seqs: usize, t: usize, heads: usize) {
+    let d = q.cols;
+    let hd = d / heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut scores = vec![0.0f32; t];
+    for s in 0..n_seqs {
+        for h in 0..heads {
+            let off = h * hd;
+            for i in 0..t {
+                let qrow = &q.data[(s * t + i) * d + off..(s * t + i) * d + off + hd];
+                let mut mx = f32::NEG_INFINITY;
+                for j in 0..=i {
+                    let krow = &k.data[(s * t + j) * d + off..(s * t + j) * d + off + hd];
+                    let mut acc = 0.0f32;
+                    for c in 0..hd {
+                        acc += qrow[c] * krow[c];
+                    }
+                    let sc = acc * scale;
+                    scores[j] = sc;
+                    if sc > mx {
+                        mx = sc;
+                    }
+                }
+                let mut denom = 0.0f32;
+                for sc in scores[..=i].iter_mut() {
+                    *sc = (*sc - mx).exp();
+                    denom += *sc;
+                }
+                let inv = 1.0 / denom;
+                let orow = &mut out.data[(s * t + i) * d + off..(s * t + i) * d + off + hd];
+                orow.fill(0.0);
+                for j in 0..=i {
+                    let w = scores[j] * inv;
+                    let vrow = &v.data[(s * t + j) * d + off..(s * t + j) * d + off + hd];
+                    for c in 0..hd {
+                        orow[c] += w * vrow[c];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Native calibration capture: run the full-precision forward over the
+/// calibration sequences with the given (already transformed) weights and
+/// collect the four per-layer linear-input activations — the backend-free
+/// twin of the `fwd_capture` artifact path.
+pub fn capture_native(cfg: &ModelConfig, ws: &WeightSet, seqs: &[Vec<i32>]) -> Result<Captures> {
+    ensure!(!seqs.is_empty(), "no calibration sequences");
+    let (l, b, t) = (cfg.n_layers, cfg.batch, cfg.seq_len);
+    let mut caps = Captures::empty(cfg);
+    let mut be = NativeBackend::new(cfg.clone(), ws.clone(), ForwardGraph::Fp)?;
+    for chunk in seqs.chunks(b) {
+        let mut tokens: Vec<i32> = Vec::with_capacity(chunk.len() * t);
+        for seq in chunk {
+            ensure!(seq.len() == t, "calibration sequence length mismatch");
+            tokens.extend_from_slice(seq);
+        }
+        let mut batch_caps = Captures::empty(cfg);
+        be.forward(&tokens, Some(&mut batch_caps))?;
+        for layer in 0..l {
+            append_rows(&mut caps.attn_in[layer], &batch_caps.attn_in[layer]);
+            append_rows(&mut caps.o_in[layer], &batch_caps.o_in[layer]);
+            append_rows(&mut caps.ffn_in[layer], &batch_caps.ffn_in[layer]);
+            append_rows(&mut caps.down_in[layer], &batch_caps.down_in[layer]);
+        }
+        caps.n_tokens += batch_caps.n_tokens;
+    }
+    Ok(caps)
+}
+
+fn append_rows(dst: &mut Mat, src: &Mat) {
+    debug_assert_eq!(dst.cols, src.cols);
+    dst.data.extend_from_slice(&src.data);
+    dst.rows += src.rows;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn tiny_cfg() -> ModelConfig {
+        let j = json::parse(
+            r#"{"config": {"name": "t", "n_layers": 2, "d_model": 16,
+                "n_heads": 2, "d_ffn": 32, "vocab": 8, "seq_len": 8,
+                "batch": 2, "block_sizes": [1, 8]}}"#,
+        )
+        .unwrap();
+        ModelConfig::from_meta(&j).unwrap()
+    }
+
+    fn tiny_ws(cfg: &ModelConfig, seed: u64) -> WeightSet {
+        crate::model::bundle::synthetic_weights(cfg, seed)
+    }
+
+    #[test]
+    fn score_shape_and_determinism() {
+        let cfg = tiny_cfg();
+        let ws = tiny_ws(&cfg, 1);
+        let graph = ForwardGraph::Merged { r3_block: 8, format: Format::Int4 };
+        let mut be = NativeBackend::new(cfg.clone(), ws, graph).unwrap();
+        let tokens: Vec<i32> = (0..cfg.batch * cfg.seq_len).map(|i| (i % cfg.vocab) as i32).collect();
+        let a = be.score(&tokens).unwrap();
+        let b = be.score(&tokens).unwrap();
+        assert_eq!(a.len(), cfg.batch * cfg.seq_len * cfg.vocab);
+        assert_eq!(a, b, "scoring must be deterministic");
+        assert!(a.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn score_rejects_bad_length() {
+        let cfg = tiny_cfg();
+        let ws = tiny_ws(&cfg, 2);
+        let mut be = NativeBackend::new(cfg, ws, ForwardGraph::Fp).unwrap();
+        assert!(be.score(&[0i32; 3]).is_err());
+    }
+
+    #[test]
+    fn online_graph_rejected() {
+        let cfg = tiny_cfg();
+        let ws = tiny_ws(&cfg, 3);
+        assert!(NativeBackend::new(cfg, ws, ForwardGraph::Online { format: Format::Int4 }).is_err());
+    }
+
+    #[test]
+    fn capture_shapes_match_contract() {
+        let cfg = tiny_cfg();
+        let ws = tiny_ws(&cfg, 4);
+        let seqs: Vec<Vec<i32>> = (0..3)
+            .map(|s| (0..cfg.seq_len).map(|i| ((s + i) % cfg.vocab) as i32).collect())
+            .collect();
+        let caps = capture_native(&cfg, &ws, &seqs).unwrap();
+        assert_eq!(caps.n_tokens, 3 * cfg.seq_len);
+        for l in 0..cfg.n_layers {
+            assert_eq!(caps.attn_in[l].rows, 3 * cfg.seq_len);
+            assert_eq!(caps.attn_in[l].cols, cfg.d_model);
+            assert_eq!(caps.down_in[l].cols, cfg.d_ffn);
+        }
+    }
+
+    #[test]
+    fn fp_graph_is_rotation_free() {
+        // Fp scoring must equal Merged{b=1, None} scoring on the same
+        // weights (identity rotation, no quantization).
+        let cfg = tiny_cfg();
+        let ws = tiny_ws(&cfg, 5);
+        let tokens: Vec<i32> = (0..cfg.batch * cfg.seq_len).map(|i| (i * 3 % cfg.vocab) as i32).collect();
+        let mut fp = NativeBackend::new(cfg.clone(), ws.clone(), ForwardGraph::Fp).unwrap();
+        let mut id = NativeBackend::new(
+            cfg.clone(), ws, ForwardGraph::Merged { r3_block: 1, format: Format::None },
+        )
+        .unwrap();
+        let a = fp.score(&tokens).unwrap();
+        let b = id.score(&tokens).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! `PjrtBackend` — the AOT-artifact execution path behind [`ExecBackend`]
+//! (feature `pjrt`). Wraps the PJRT CPU client with *device-resident*
+//! weights: the weight + rotation/format inputs are uploaded once via
+//! `buffer_from_host_literal`, so the per-call path copies only tokens —
+//! the §Perf win the batching server was built around.
+//!
+//! PJRT handles are `Rc`-based and thread-confined, so a `PjrtBackend` is
+//! NOT `Send`; construct it on the thread that scores with it (the server
+//! does this through its backend factory).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+use xla::{PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use super::{graph_op_counts, ExecBackend, ExtraInput, ForwardGraph, OpCounts};
+use crate::model::config::ModelConfig;
+use crate::model::weights::WeightSet;
+use crate::runtime::engine;
+
+pub struct PjrtBackend {
+    exe: PjRtLoadedExecutable,
+    weight_bufs: Vec<PjRtBuffer>,
+    extra_bufs: Vec<PjRtBuffer>,
+    /// Host literals backing the device buffers. `buffer_from_host_literal`
+    /// copies asynchronously on the CPU client, so the source literals must
+    /// outlive the buffers (dropping them early is a use-after-free that
+    /// manifests as a fatal size-check in abstract_tfrt_cpu_buffer.cc).
+    _host_literals: Vec<xla::Literal>,
+    cfg: ModelConfig,
+    graph: ForwardGraph,
+}
+
+impl PjrtBackend {
+    /// Compile the artifact at `artifact` (an .hlo.txt path) and upload
+    /// weights + graph extras to the device once.
+    pub fn load(artifact: &Path, cfg: &ModelConfig, ws: &WeightSet,
+                graph: &ForwardGraph) -> Result<PjrtBackend> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt client: {e:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            artifact.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("loading {artifact:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| anyhow!("compile: {e:?}"))?;
+        let devices = client.addressable_devices();
+        let device = &devices[0];
+        // one-time weight upload (the §Perf point of this backend)
+        let mut host_literals = engine::weight_literals(ws)?;
+        for e in &graph.extras()? {
+            host_literals.push(match e {
+                ExtraInput::Matrix(m) => engine::mat_literal(m)?,
+                ExtraInput::ScalarI32(v) => engine::scalar_i32(*v),
+            });
+        }
+        let n_weights = ws.names.len();
+        let mut weight_bufs = Vec::new();
+        let mut extra_bufs = Vec::new();
+        for (i, lit) in host_literals.iter().enumerate() {
+            let buf = client
+                .buffer_from_host_literal(Some(device), lit)
+                .map_err(|e| anyhow!("uploading input {i}: {e:?}"))?;
+            if i < n_weights {
+                weight_bufs.push(buf);
+            } else {
+                extra_bufs.push(buf);
+            }
+        }
+        Ok(PjrtBackend {
+            exe,
+            weight_bufs,
+            extra_bufs,
+            _host_literals: host_literals,
+            cfg: cfg.clone(),
+            graph: graph.clone(),
+        })
+    }
+}
+
+impl ExecBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn cfg(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn score(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let cfg = &self.cfg;
+        let tok_lit = engine::tokens_literal(tokens, cfg.batch, cfg.seq_len)?;
+        let client = self.exe.client();
+        let devices = client.addressable_devices();
+        let device = &devices[0];
+        let tok_buf = client
+            .buffer_from_host_literal(Some(device), &tok_lit)
+            .map_err(|e| anyhow!("uploading tokens: {e:?}"))?;
+        let mut inputs: Vec<&PjRtBuffer> = self.weight_bufs.iter().collect();
+        inputs.push(&tok_buf);
+        for b in &self.extra_bufs {
+            inputs.push(b);
+        }
+        let out = self
+            .exe
+            .execute_b(&inputs)
+            .map_err(|e| anyhow!("execute_b: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e:?}"))?;
+        let tuple = lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        engine::literal_to_vec_f32(&tuple[0])
+    }
+
+    fn op_counts(&self) -> OpCounts {
+        graph_op_counts(&self.cfg, &self.graph)
+    }
+}

@@ -6,12 +6,13 @@
 //! sees — which is what both MassDiff (Fig 2) and the GPTQ/Qronos Hessians
 //! need (Appendix B: X̃ is rotated and quantized).
 
-use anyhow::{ensure, Result};
+use anyhow::Result;
 
+use crate::backend::BackendKind;
 use crate::data::corpus::{self, Source, Split};
 use crate::model::config::{CaptureKind, ModelConfig};
 use crate::model::weights::WeightSet;
-use crate::runtime::engine::{self, Engine};
+use crate::runtime::Engine;
 use crate::tensor::Mat;
 
 /// Per-layer activation captures: rows = calibration tokens.
@@ -24,6 +25,18 @@ pub struct Captures {
 }
 
 impl Captures {
+    /// Empty per-layer capture matrices shaped for `cfg` (0 token rows).
+    pub fn empty(cfg: &ModelConfig) -> Captures {
+        let (l, d, f) = (cfg.n_layers, cfg.d_model, cfg.d_ffn);
+        Captures {
+            attn_in: (0..l).map(|_| Mat::zeros(0, d)).collect(),
+            o_in: (0..l).map(|_| Mat::zeros(0, d)).collect(),
+            ffn_in: (0..l).map(|_| Mat::zeros(0, d)).collect(),
+            down_in: (0..l).map(|_| Mat::zeros(0, f)).collect(),
+            n_tokens: 0,
+        }
+    }
+
     pub fn site(&self, kind: CaptureKind, layer: usize) -> &Mat {
         match kind {
             CaptureKind::AttnIn => &self.attn_in[layer],
@@ -60,20 +73,38 @@ pub fn calibration_batches(cfg: &ModelConfig, source: Source, n_seqs: usize,
         .collect()
 }
 
-/// Run `fwd_capture` over the calibration sequences with the given
+/// Run the capture forward over the calibration sequences with the given
 /// (already transformed) weights, returning per-layer activations.
+/// Dispatches on the engine's backend: the `fwd_capture` AOT artifact on
+/// pjrt, the pure-Rust forward (`backend::native::capture_native`) on
+/// native — both produce identical per-layer capture layouts.
 pub fn run_capture(engine: &Engine, model: &str, cfg: &ModelConfig,
                    ws: &WeightSet, seqs: &[Vec<i32>]) -> Result<Captures> {
-    ensure!(!seqs.is_empty(), "no calibration sequences");
+    match engine.backend() {
+        BackendKind::Native => {
+            let _ = model;
+            crate::backend::native::capture_native(cfg, ws, seqs)
+        }
+        BackendKind::Pjrt => run_capture_pjrt(engine, model, cfg, ws, seqs),
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn run_capture_pjrt(_engine: &Engine, _model: &str, _cfg: &ModelConfig,
+                    _ws: &WeightSet, _seqs: &[Vec<i32>]) -> Result<Captures> {
+    anyhow::bail!("the pjrt backend is not compiled in (rebuild with `--features pjrt`)")
+}
+
+/// Execute the `fwd_capture` artifact over calibration batches.
+#[cfg(feature = "pjrt")]
+fn run_capture_pjrt(engine: &Engine, model: &str, cfg: &ModelConfig,
+                    ws: &WeightSet, seqs: &[Vec<i32>]) -> Result<Captures> {
+    use crate::runtime::engine as raw;
+    anyhow::ensure!(!seqs.is_empty(), "no calibration sequences");
+    let engine = engine.pjrt()?;
     let (l, d, f, b, t) = (cfg.n_layers, cfg.d_model, cfg.d_ffn, cfg.batch, cfg.seq_len);
-    let mut caps = Captures {
-        attn_in: (0..l).map(|_| Mat::zeros(0, d)).collect(),
-        o_in: (0..l).map(|_| Mat::zeros(0, d)).collect(),
-        ffn_in: (0..l).map(|_| Mat::zeros(0, d)).collect(),
-        down_in: (0..l).map(|_| Mat::zeros(0, f)).collect(),
-        n_tokens: 0,
-    };
-    let w_lits = engine::weight_literals(ws)?;
+    let mut caps = Captures::empty(cfg);
+    let w_lits = raw::weight_literals(ws)?;
     for chunk in seqs.chunks(b) {
         // pad the final partial batch by repeating the first sequence
         let mut tokens: Vec<i32> = Vec::with_capacity(b * t);
@@ -82,9 +113,9 @@ pub fn run_capture(engine: &Engine, model: &str, cfg: &ModelConfig,
             tokens.extend_from_slice(seq);
         }
         let mut inputs = w_lits.clone();
-        inputs.push(engine::tokens_literal(&tokens, b, t)?);
+        inputs.push(raw::tokens_literal(&tokens, b, t)?);
         let outs = engine.run(model, "fwd_capture", &inputs)?;
-        ensure!(outs.len() == 5, "capture artifact must return 5 outputs");
+        anyhow::ensure!(outs.len() == 5, "capture artifact must return 5 outputs");
         let real = chunk.len(); // ignore padded sequences
         for (idx, (kind, dim)) in [
             (CaptureKind::AttnIn, d),
@@ -95,8 +126,8 @@ pub fn run_capture(engine: &Engine, model: &str, cfg: &ModelConfig,
         .iter()
         .enumerate()
         {
-            let data = engine::literal_to_vec_f32(&outs[idx + 1])?;
-            ensure!(data.len() == l * b * t * dim, "capture size mismatch");
+            let data = raw::literal_to_vec_f32(&outs[idx + 1])?;
+            anyhow::ensure!(data.len() == l * b * t * dim, "capture size mismatch");
             for layer in 0..l {
                 let site = caps.site_mut(*kind, layer);
                 let mut rows = std::mem::replace(site, Mat::zeros(0, *dim));

@@ -10,9 +10,10 @@
 //!      calibration activations (Appendix B) — one job per linear,
 //!      scheduled across worker threads;
 //!   6. evaluate perplexity (and optionally the zero-shot probes) through
-//!      the matching AOT artifact.
+//!      the selected execution backend — the matching AOT artifact on
+//!      pjrt, or the pure-Rust `backend::NativeBackend` otherwise.
 //!
-//! Python never runs here: the artifacts were lowered once at build time.
+//! Python never runs here; with the native backend it never ran at all.
 
 use std::time::Instant;
 
@@ -20,16 +21,17 @@ use anyhow::{ensure, Context, Result};
 
 use super::spec::{GraphKind, PipelineSpec, RotKind};
 use crate::calib::capture::{self, Captures};
-use crate::eval::perplexity::{evaluate_stream, EvalResult};
-use crate::eval::zeroshot::{evaluate_zeroshot, ZeroShotResult};
+use crate::eval::perplexity::{evaluate_with, EvalResult};
+use crate::eval::zeroshot::{evaluate_zeroshot_with, ZeroShotResult};
 use crate::hadamard::{self, BlockRotator};
 use crate::model::bundle::ModelBundle;
 use crate::model::config::CaptureKind;
 use crate::model::transform;
 use crate::model::weights::WeightSet;
+use crate::backend::{BackendKind, ExtraInput, ForwardGraph};
 use crate::permute::{self, CalibStats};
 use crate::quant::{act, Format, WeightCodec};
-use crate::runtime::engine::{self, Engine};
+use crate::runtime::Engine;
 use crate::tensor::linalg::SymMat;
 use crate::tensor::Mat;
 use crate::util::pool;
@@ -43,8 +45,12 @@ pub struct Pipeline {
 /// `coordinator::server` path).
 pub struct QuantizedModel {
     pub ws: WeightSet,
+    /// backend-neutral description of the matching forward graph
+    pub graph: ForwardGraph,
+    /// the graph's AOT artifact tag (pjrt backend)
     pub eval_tag: String,
-    pub extras: Vec<crate::coordinator::server::ExtraInput>,
+    /// extra graph inputs after (weights, tokens), in host form
+    pub extras: Vec<ExtraInput>,
     pub mass_balance: f64,
     pub calib_tokens: usize,
 }
@@ -147,17 +153,24 @@ impl Pipeline {
         if !merged {
             // the Fig 9 artifact is lowered with b = 32 at every online site
             ensure!(b3 == 32, "online graph artifacts use block size 32");
+            ensure!(
+                engine.backend() == BackendKind::Pjrt,
+                "the fully-online graph (Fig 9) is only lowered for the pjrt backend"
+            );
         }
-        let eval_tag = if merged {
-            format!("fwd_quant_b{b3}")
+        let graph = if merged {
+            ForwardGraph::Merged { r3_block: b3, format: spec.format }
         } else {
-            "fwd_online_b32".to_string()
+            ForwardGraph::Online { format: spec.format }
         };
-        ensure!(
-            bundle.has_artifact(&eval_tag),
-            "missing artifact {eval_tag} for {}",
-            bundle.name
-        );
+        let eval_tag = graph.tag();
+        if engine.backend() == BackendKind::Pjrt {
+            ensure!(
+                bundle.has_artifact(&eval_tag),
+                "missing artifact {eval_tag} for {}",
+                bundle.name
+            );
+        }
 
         // ---- stage 0: offline transforms (norm folds + merged rotations) --
         let mut ws = bundle.weights.clone();
@@ -233,8 +246,9 @@ impl Pipeline {
         let _ = t0;
         Ok(QuantizedModel {
             ws,
+            extras: graph.extras()?,
             eval_tag,
-            extras: self.extra_inputs(&rot3)?,
+            graph,
             mass_balance,
             calib_tokens: caps.n_tokens,
         })
@@ -253,16 +267,12 @@ impl Pipeline {
             t_stage = Instant::now();
         };
         // ---- stage 5: evaluation ------------------------------------------
-        let extras = extras_to_literals(&qm.extras)?;
-        let eval = evaluate_stream(
-            engine, &bundle.name, &bundle.cfg, &qm.ws, &qm.eval_tag, &extras,
-            spec.eval_source, spec.eval_tokens,
-        )?;
+        // one scorer serves both eval passes (a native scorer owns a copy
+        // of the quantized weights — no point building it twice)
+        let mut score = crate::backend::scorer(engine, &bundle.name, &bundle.cfg, &qm.ws, &qm.graph)?;
+        let eval = evaluate_with(&mut *score, &bundle.cfg, spec.eval_source, spec.eval_tokens)?;
         let zeroshot = if spec.run_zeroshot {
-            Some(evaluate_zeroshot(
-                engine, &bundle.name, &bundle.cfg, &qm.ws, &qm.eval_tag, &extras,
-                spec.zeroshot_tokens,
-            )?)
+            Some(evaluate_zeroshot_with(&mut *score, &bundle.cfg, spec.zeroshot_tokens)?)
         } else {
             None
         };
@@ -278,25 +288,6 @@ impl Pipeline {
             wall_ms: t0.elapsed().as_secs_f64() * 1e3,
             mass_balance: qm.mass_balance,
         })
-    }
-
-    /// Extra artifact inputs after (weights, tokens), in `Send` host form.
-    fn extra_inputs(&self, rot3: &BlockRotator) -> Result<Vec<crate::coordinator::server::ExtraInput>> {
-        use crate::coordinator::server::ExtraInput;
-        let fmt = self.spec.format.fmt_id();
-        if self.spec.graph == GraphKind::Merged {
-            Ok(vec![
-                ExtraInput::Matrix(rot3.matrix()?),
-                ExtraInput::ScalarI32(fmt),
-            ])
-        } else {
-            let h32 = hadamard::normalized_hadamard(32)?;
-            Ok(vec![
-                ExtraInput::Matrix(h32.clone()),
-                ExtraInput::Matrix(h32),
-                ExtraInput::ScalarI32(fmt),
-            ])
-        }
     }
 
     /// Round every linear site in parallel worker threads.
@@ -358,29 +349,16 @@ impl Pipeline {
     }
 }
 
-/// Convert host-form extras to literals for the in-process eval path.
-pub fn extras_to_literals(extras: &[crate::coordinator::server::ExtraInput]) -> Result<Vec<xla::Literal>> {
-    use crate::coordinator::server::ExtraInput;
-    extras
-        .iter()
-        .map(|e| match e {
-            ExtraInput::Matrix(m) => engine::mat_literal(m),
-            ExtraInput::ScalarI32(v) => Ok(engine::scalar_i32(*v)),
-        })
-        .collect()
-}
-
 /// Evaluate the full-precision (BF16-analog) baseline of a bundle.
 pub fn baseline_eval(bundle: &ModelBundle, engine: &Engine, eval_tokens: usize,
                      zeroshot_tokens: Option<usize>) -> Result<(EvalResult, Option<ZeroShotResult>)> {
-    let eval = evaluate_stream(
-        engine, &bundle.name, &bundle.cfg, &bundle.weights, "fwd", &vec![],
-        crate::data::corpus::Source::Wiki, eval_tokens,
+    let mut score =
+        crate::backend::scorer(engine, &bundle.name, &bundle.cfg, &bundle.weights, &ForwardGraph::Fp)?;
+    let eval = evaluate_with(
+        &mut *score, &bundle.cfg, crate::data::corpus::Source::Wiki, eval_tokens,
     )?;
     let z = match zeroshot_tokens {
-        Some(n) => Some(evaluate_zeroshot(
-            engine, &bundle.name, &bundle.cfg, &bundle.weights, "fwd", &vec![], n,
-        )?),
+        Some(n) => Some(evaluate_zeroshot_with(&mut *score, &bundle.cfg, n)?),
         None => None,
     };
     Ok((eval, z))

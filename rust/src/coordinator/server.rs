@@ -3,19 +3,25 @@
 //! The paper's case for block rotations is a *serving* argument (App A:
 //! online rotation overhead, "1.5× lower rotation cost, 2% end-to-end
 //! latency for Llama2 7B at b=32"). This module provides the runtime that
-//! argument lives in: a request router + dynamic batcher in front of the
-//! quantized AOT artifact.
+//! argument lives in: a request router + dynamic batcher in front of any
+//! [`ExecBackend`] — the device-resident PJRT artifact executor or the
+//! pure-Rust `NativeBackend`.
 //!
 //! Design (vLLM-router-like, scaled to this testbed):
 //!   * clients submit `ScoreRequest`s (token windows) and receive logits
 //!     scores through a oneshot channel;
-//!   * a batcher thread drains the queue into fixed-size artifact batches
-//!     (the AOT graph has static (B, T)), padding the tail with the first
-//!     request and waiting at most `max_wait` for a full batch;
-//!   * weights live as *device buffers* (uploaded once via
-//!     `buffer_from_host_literal`), so the request path copies only tokens
-//!     and the small rotation/format extras — the §Perf win over literal
-//!     re-upload on every call.
+//!   * a batcher thread drains the queue into fixed-size backend batches
+//!     (the forward graph has static (B, T)), padding the tail with the
+//!     first request and waiting at most `max_wait` for a full batch;
+//!     padded slots are *execution filler only* — they are excluded from
+//!     `ServerStats.served`, from per-request NLL, and from the reported
+//!     batch occupancy, and counted separately in `ServerStats.padded`;
+//!   * the backend is constructed *on the batcher thread* via a `Send`
+//!     factory, because PJRT handles are `Rc`-based and thread-confined;
+//!     weights live as device buffers there (uploaded once), so the
+//!     request path copies only tokens — the §Perf win over literal
+//!     re-upload on every call. The native backend reuses pooled scratch
+//!     the same way.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -24,21 +30,15 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
-use xla::{PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
 
+use crate::backend::ExecBackend;
 use crate::model::config::ModelConfig;
-use crate::model::weights::WeightSet;
-use crate::runtime::engine;
-use crate::tensor::Mat;
 
-/// Extra artifact inputs after (weights, tokens), in a `Send` form —
-/// PJRT handles are `Rc`-based and thread-confined, so the batcher thread
-/// materializes literals itself.
-#[derive(Clone)]
-pub enum ExtraInput {
-    Matrix(Mat),
-    ScalarI32(i32),
-}
+pub use crate::backend::ExtraInput;
+
+/// Constructs the backend on the batcher thread (PJRT handles are not
+/// `Send`; only the factory crosses threads).
+pub type BackendFactory = Box<dyn FnOnce() -> Result<Box<dyn ExecBackend>> + Send + 'static>;
 
 pub struct ScoreRequest {
     /// seq_len token window to score
@@ -53,7 +53,7 @@ pub struct ScoreResponse {
     pub nll: f64,
     /// queueing + batching + execution latency
     pub latency: Duration,
-    /// how many requests shared the batch
+    /// how many *real* requests shared the batch (padding excluded)
     pub batch_occupancy: usize,
 }
 
@@ -65,8 +65,11 @@ struct Queue {
 /// Server statistics (atomics; read while running).
 #[derive(Default)]
 pub struct ServerStats {
+    /// real requests served (padded slots never count)
     pub served: AtomicU64,
     pub batches: AtomicU64,
+    /// batch slots filled with padding (tail duplication)
+    pub padded: AtomicU64,
     pub exec_ns: AtomicU64,
 }
 
@@ -78,97 +81,11 @@ pub struct InferenceServer {
     cfg: ModelConfig,
 }
 
-/// Device-resident model state, built and owned by the batcher thread
-/// (PJRT handles are not `Send`; the whole client is thread-confined).
-struct DeviceState {
-    exe: PjRtLoadedExecutable,
-    weight_bufs: Vec<PjRtBuffer>,
-    extra_bufs: Vec<PjRtBuffer>,
-    /// Host literals backing the device buffers. `buffer_from_host_literal`
-    /// copies asynchronously on the CPU client, so the source literals must
-    /// outlive the buffers (dropping them early is a use-after-free that
-    /// manifests as a fatal size-check in abstract_tfrt_cpu_buffer.cc).
-    _host_literals: Vec<xla::Literal>,
-    cfg: ModelConfig,
-    vocab: usize,
-}
-
-fn build_device_state(artifact: &std::path::Path, cfg: &ModelConfig,
-                      ws: &WeightSet, extras: &[ExtraInput]) -> Result<DeviceState> {
-    let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt client: {e:?}"))?;
-    let proto = xla::HloModuleProto::from_text_file(
-        artifact.to_str().ok_or_else(|| anyhow!("bad path"))?,
-    )
-    .map_err(|e| anyhow!("loading {artifact:?}: {e:?}"))?;
-    let comp = xla::XlaComputation::from_proto(&proto);
-    let exe = client.compile(&comp).map_err(|e| anyhow!("compile: {e:?}"))?;
-    let devices = client.addressable_devices();
-    let device = &devices[0];
-    // one-time weight upload (the §Perf point of this server)
-    let mut host_literals = engine::weight_literals(ws)?;
-    for e in extras {
-        host_literals.push(match e {
-            ExtraInput::Matrix(m) => engine::mat_literal(m)?,
-            ExtraInput::ScalarI32(v) => engine::scalar_i32(*v),
-        });
-    }
-    let n_weights = ws.names.len();
-    let mut weight_bufs = Vec::new();
-    let mut extra_bufs = Vec::new();
-    for (i, lit) in host_literals.iter().enumerate() {
-        let buf = client
-            .buffer_from_host_literal(Some(device), lit)
-            .map_err(|e| anyhow!("uploading input {i}: {e:?}"))?;
-        if i < n_weights {
-            weight_bufs.push(buf);
-        } else {
-            extra_bufs.push(buf);
-        }
-    }
-    Ok(DeviceState {
-        exe,
-        weight_bufs,
-        extra_bufs,
-        _host_literals: host_literals,
-        cfg: cfg.clone(),
-        vocab: cfg.vocab,
-    })
-}
-
-impl DeviceState {
-    fn execute(&self, tokens: &[i32]) -> Result<Vec<f32>> {
-        let cfg = &self.cfg;
-        let tok_lit = engine::tokens_literal(tokens, cfg.batch, cfg.seq_len)?;
-        let client = self.exe.client();
-        let devices = client.addressable_devices();
-    let device = &devices[0];
-        let tok_buf = client
-            .buffer_from_host_literal(Some(device), &tok_lit)
-            .map_err(|e| anyhow!("uploading tokens: {e:?}"))?;
-        let mut inputs: Vec<&PjRtBuffer> = self.weight_bufs.iter().collect();
-        inputs.push(&tok_buf);
-        for b in &self.extra_bufs {
-            inputs.push(b);
-        }
-        let out = self
-            .exe
-            .execute_b(&inputs)
-            .map_err(|e| anyhow!("execute_b: {e:?}"))?;
-        let lit = out[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch: {e:?}"))?;
-        let tuple = lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
-        engine::literal_to_vec_f32(&tuple[0])
-    }
-}
-
 impl InferenceServer {
-    /// Spin up a server over (already transformed + quantized) weights and
-    /// the artifact at `artifact` (an .hlo.txt path); `extras` are the
-    /// rotation/format inputs. The batcher thread owns its own PJRT client
-    /// and compiles the artifact on startup.
-    pub fn start(artifact: std::path::PathBuf, cfg: &ModelConfig, ws: &WeightSet,
-                 extras: Vec<ExtraInput>, max_wait: Duration) -> Result<InferenceServer> {
+    /// Spin up a server whose batcher thread owns the backend produced by
+    /// `factory`. Construction errors surface here, not on first request.
+    pub fn start_backend(factory: BackendFactory, cfg: &ModelConfig,
+                         max_wait: Duration) -> Result<InferenceServer> {
         let queue = Arc::new((
             Mutex::new(Queue { pending: VecDeque::new(), shutdown: false }),
             Condvar::new(),
@@ -180,20 +97,18 @@ impl InferenceServer {
             let queue = queue.clone();
             let stats = stats.clone();
             let running = running.clone();
-            let cfg2 = cfg.clone();
-            let ws2 = ws.clone();
             std::thread::spawn(move || {
-                let state = match build_device_state(&artifact, &cfg2, &ws2, &extras) {
-                    Ok(s) => {
+                let backend = match factory() {
+                    Ok(b) => {
                         let _ = ready_tx.send(Ok(()));
-                        s
+                        b
                     }
                     Err(e) => {
                         let _ = ready_tx.send(Err(e));
                         return;
                     }
                 };
-                batcher_loop(state, queue, stats, running, max_wait)
+                batcher_loop(backend, queue, stats, running, max_wait)
             })
         };
         ready_rx
@@ -206,6 +121,38 @@ impl InferenceServer {
             running,
             cfg: cfg.clone(),
         })
+    }
+
+    /// Serve through the device-resident PJRT artifact at `artifact` (an
+    /// .hlo.txt path) over (already transformed + quantized) weights;
+    /// `extras` are the rotation/format inputs.
+    #[cfg(feature = "pjrt")]
+    pub fn start(artifact: std::path::PathBuf, cfg: &ModelConfig,
+                 ws: &crate::model::weights::WeightSet, extras: Vec<ExtraInput>,
+                 max_wait: Duration) -> Result<InferenceServer> {
+        let graph = graph_from_extras(&extras)?;
+        let cfg2 = cfg.clone();
+        let ws2 = ws.clone();
+        let factory: BackendFactory = Box::new(move || {
+            Ok(Box::new(crate::backend::pjrt::PjrtBackend::load(
+                &artifact, &cfg2, &ws2, &graph,
+            )?) as Box<dyn ExecBackend>)
+        });
+        InferenceServer::start_backend(factory, cfg, max_wait)
+    }
+
+    /// Serve through the pure-Rust native backend — no PJRT, no artifacts.
+    pub fn start_native(cfg: &ModelConfig, ws: &crate::model::weights::WeightSet,
+                        graph: &crate::backend::ForwardGraph,
+                        max_wait: Duration) -> Result<InferenceServer> {
+        let cfg2 = cfg.clone();
+        let ws2 = ws.clone();
+        let graph = graph.clone();
+        let factory: BackendFactory = Box::new(move || {
+            Ok(Box::new(crate::backend::NativeBackend::new(cfg2, ws2, graph)?)
+                as Box<dyn ExecBackend>)
+        });
+        InferenceServer::start_backend(factory, cfg, max_wait)
     }
 
     /// Submit a scoring request; returns a receiver for the response.
@@ -225,11 +172,19 @@ impl InferenceServer {
         Ok(rx)
     }
 
+    /// (served, batches, exec seconds) — `served` counts real requests
+    /// only; padded slots are tracked by [`InferenceServer::padded_slots`].
     pub fn stats(&self) -> (u64, u64, f64) {
         let served = self.stats.served.load(Ordering::Relaxed);
         let batches = self.stats.batches.load(Ordering::Relaxed);
         let exec_s = self.stats.exec_ns.load(Ordering::Relaxed) as f64 / 1e9;
         (served, batches, exec_s)
+    }
+
+    /// Batch slots that were filled with tail padding (never billed as
+    /// served requests).
+    pub fn padded_slots(&self) -> u64 {
+        self.stats.padded.load(Ordering::Relaxed)
     }
 
     pub fn shutdown(mut self) {
@@ -259,11 +214,48 @@ impl Drop for InferenceServer {
     }
 }
 
-fn batcher_loop(state: DeviceState, queue: Arc<(Mutex<Queue>, Condvar)>,
+/// Recover the graph description from legacy (matrix.., fmt) extras — the
+/// shape the pjrt `start` entry point and the integration suite still use.
+#[cfg(feature = "pjrt")]
+fn graph_from_extras(extras: &[ExtraInput]) -> Result<crate::backend::ForwardGraph> {
+    use crate::backend::ForwardGraph;
+    use crate::quant::Format;
+    let fmt = extras
+        .iter()
+        .find_map(|e| match e {
+            ExtraInput::ScalarI32(v) => Some(*v),
+            _ => None,
+        })
+        .unwrap_or(0);
+    let format = match fmt {
+        1 => Format::Int4,
+        2 => Format::Fp4,
+        3 => Format::Mxfp4,
+        _ => Format::None,
+    };
+    let mats = extras
+        .iter()
+        .filter(|e| matches!(e, ExtraInput::Matrix(_)))
+        .count();
+    if mats >= 2 {
+        return Ok(ForwardGraph::Online { format });
+    }
+    let b = extras
+        .iter()
+        .find_map(|e| match e {
+            ExtraInput::Matrix(m) => Some(m.rows),
+            _ => None,
+        })
+        .unwrap_or(1);
+    Ok(ForwardGraph::Merged { r3_block: b, format })
+}
+
+fn batcher_loop(mut backend: Box<dyn ExecBackend>, queue: Arc<(Mutex<Queue>, Condvar)>,
                 stats: Arc<ServerStats>, running: Arc<AtomicBool>,
                 max_wait: Duration) {
-    let b = state.cfg.batch;
-    let t = state.cfg.seq_len;
+    let b = backend.cfg().batch;
+    let t = backend.cfg().seq_len;
+    let v = backend.cfg().vocab;
     while running.load(Ordering::Relaxed) {
         // drain up to a full batch, waiting at most max_wait after the
         // first request arrives
@@ -294,20 +286,24 @@ fn batcher_loop(state: DeviceState, queue: Arc<(Mutex<Queue>, Condvar)>,
         if batch.is_empty() {
             continue;
         }
-        // assemble the padded token batch
+        let real = batch.len();
+        // assemble the token batch; tail slots are padded with the first
+        // request purely to satisfy the static (B, T) graph shape
         let mut tokens = Vec::with_capacity(b * t);
         for i in 0..b {
             let req = batch.get(i).unwrap_or(&batch[0]);
             tokens.extend_from_slice(&req.tokens[..t]);
         }
         let t_exec = Instant::now();
-        let result = state.execute(&tokens);
+        let result = backend.score(&tokens);
         let exec_ns = t_exec.elapsed().as_nanos() as u64;
         stats.exec_ns.fetch_add(exec_ns, Ordering::Relaxed);
         stats.batches.fetch_add(1, Ordering::Relaxed);
+        stats.padded.fetch_add((b - real) as u64, Ordering::Relaxed);
         match result {
             Ok(logits) => {
-                let v = state.vocab;
+                // only the `real` leading slots correspond to requests;
+                // padded tail logits are dropped without scoring
                 for (i, req) in batch.into_iter().enumerate() {
                     // mean NLL of targets tokens[1..=t] under logits[0..t)
                     let base = i * t * v;
@@ -323,7 +319,7 @@ fn batcher_loop(state: DeviceState, queue: Arc<(Mutex<Queue>, Condvar)>,
                     let _ = req.respond.send(ScoreResponse {
                         nll: nll / t as f64,
                         latency: req.submitted.elapsed(),
-                        batch_occupancy: b.min(i + 1),
+                        batch_occupancy: real,
                     });
                 }
             }
@@ -337,14 +333,73 @@ fn batcher_loop(state: DeviceState, queue: Arc<(Mutex<Queue>, Condvar)>,
 
 #[cfg(test)]
 mod tests {
-    //! Queue/batcher logic tests that don't need PJRT live in
-    //! rust/tests/coordinator_props.rs (prop_batching_pads_consistently);
-    //! full server round-trips are exercised in examples/serve_requests.rs
-    //! and the integration suite.
+    //! Queue/batcher logic tests that don't need a real model live in
+    //! rust/tests/coordinator_props.rs; full server round-trips are
+    //! exercised natively in rust/tests/backend_parity.rs and
+    //! examples/serve_requests.rs, and against PJRT in the integration
+    //! suite.
+
+    use super::*;
+    use crate::backend::ForwardGraph;
+    use crate::model::bundle;
+    use crate::util::json;
 
     #[test]
     fn stats_default_zero() {
-        let s = super::ServerStats::default();
+        let s = ServerStats::default();
         assert_eq!(s.served.load(std::sync::atomic::Ordering::Relaxed), 0);
+        assert_eq!(s.padded.load(std::sync::atomic::Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn native_server_round_trip_counts_padding() {
+        let j = json::parse(
+            r#"{"config": {"name": "t", "n_layers": 1, "d_model": 16,
+                "n_heads": 2, "d_ffn": 32, "vocab": 8, "seq_len": 8,
+                "batch": 4, "block_sizes": [1, 8]}}"#,
+        )
+        .unwrap();
+        let cfg = crate::model::config::ModelConfig::from_meta(&j).unwrap();
+        let ws = bundle::synthetic_weights(&cfg, 11);
+        let graph = ForwardGraph::Merged { r3_block: 8, format: crate::quant::Format::Int4 };
+        let server =
+            InferenceServer::start_native(&cfg, &ws, &graph, Duration::from_millis(1)).unwrap();
+        // 3 requests into a batch-of-4 server → at least one padded slot
+        let mk = |s: usize| -> Vec<i32> {
+            (0..cfg.seq_len + 1).map(|i| ((s + i) % cfg.vocab) as i32).collect()
+        };
+        let rxs: Vec<_> = (0..3).map(|s| server.submit(mk(s)).unwrap()).collect();
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            assert!(resp.nll.is_finite() && resp.nll > 0.0);
+            assert!(resp.batch_occupancy <= 3, "padding must not inflate occupancy");
+        }
+        let (served, batches, _) = server.stats();
+        assert_eq!(served, 3, "padded slots must not count as served");
+        assert!(batches >= 1);
+        assert!(server.padded_slots() >= 1, "tail padding should be recorded");
+        // identical windows score identically (deterministic native path)
+        let a = server.submit(mk(0)).unwrap().recv().unwrap().nll;
+        let b = server.submit(mk(0)).unwrap().recv().unwrap().nll;
+        assert!((a - b).abs() < 1e-12);
+        server.shutdown();
+    }
+
+    #[test]
+    fn submit_rejects_bad_window() {
+        let j = json::parse(
+            r#"{"config": {"name": "t", "n_layers": 1, "d_model": 16,
+                "n_heads": 2, "d_ffn": 32, "vocab": 8, "seq_len": 8,
+                "batch": 2, "block_sizes": [1]}}"#,
+        )
+        .unwrap();
+        let cfg = crate::model::config::ModelConfig::from_meta(&j).unwrap();
+        let ws = bundle::synthetic_weights(&cfg, 12);
+        let server = InferenceServer::start_native(
+            &cfg, &ws, &ForwardGraph::Fp, Duration::from_millis(1),
+        )
+        .unwrap();
+        assert!(server.submit(vec![0i32; 3]).is_err());
+        server.shutdown();
     }
 }

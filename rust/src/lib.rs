@@ -18,6 +18,10 @@
 //!
 //! Python never runs at inference/evaluation time: `make artifacts` lowers
 //! everything once, and the rust binary is self-contained afterwards.
+//! Since the `backend` subsystem landed, even the lowering is optional:
+//! the default (no-feature) build executes the full quantized forward pass
+//! through the pure-Rust `NativeBackend`, and the PJRT/artifact path is an
+//! opt-in `pjrt` cargo feature — see ARCHITECTURE.md.
 //!
 //! Quick start (see examples/quickstart.rs):
 //! ```no_run
@@ -30,6 +34,7 @@
 //! println!("ppl = {:.2}", report.perplexity);
 //! ```
 
+pub mod backend;
 pub mod calib;
 pub mod coordinator;
 pub mod data;
@@ -46,6 +51,7 @@ pub mod util;
 
 /// Convenience re-exports for examples and benches.
 pub mod prelude {
+    pub use crate::backend::{BackendKind, ExecBackend, ForwardGraph, NativeBackend};
     pub use crate::coordinator::pipeline::{baseline_eval, Pipeline, PipelineReport};
     pub use crate::coordinator::presets;
     pub use crate::coordinator::spec::{GraphKind, PipelineSpec, RotKind, RotationSpec};

@@ -16,6 +16,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
+use perq::backend::BackendKind;
 use perq::calib::capture;
 use perq::coordinator::presets;
 use perq::coordinator::spec::{GraphKind, PipelineSpec, RotationSpec};
@@ -66,7 +67,9 @@ fn print_help() {
          OPTIONS: --perm identity|random|absmax|zigzag|massdiff\n\
          \x20        --rounding rtn|gptq|qronos   --format int4|fp4|mxfp4\n\
          \x20        --block N   --online   --zeroshot   --eval-tokens N\n\
-         \x20        --calib-seqs N   --source wiki|c4|fineweb"
+         \x20        --calib-seqs N   --source wiki|c4|fineweb\n\
+         \x20        --backend native|pjrt|auto (native = pure-Rust forward,\n\
+         \x20                  no PJRT/XLA or HLO artifacts required)"
     );
 }
 
@@ -112,14 +115,22 @@ fn spec_from_args(args: &cli::Args) -> Result<PipelineSpec> {
     Ok(spec)
 }
 
+/// Shared engine construction honoring `--backend {native,pjrt,auto}`.
+fn engine_from_args(args: &cli::Args, ctx: &RepoContext) -> Result<Engine> {
+    let kind = BackendKind::resolve(args.get("backend"), ctx)?;
+    Engine::with_backend(ctx, kind)
+}
+
 fn cmd_quantize(args: &cli::Args) -> Result<()> {
     let model = args.get_or("model", "llama_tiny");
     let ctx = RepoContext::discover()?;
+    let engine = engine_from_args(args, &ctx)?;
     let bundle = ModelBundle::load(&ctx, &model)?;
     let spec = spec_from_args(args)?;
     println!("pipeline: {}", spec.label());
+    println!("backend:  {}", engine.backend().name());
     println!("model:    {} ({} params)", model, bundle.weights.param_count());
-    let report = Pipeline::new(spec).run(&bundle)?;
+    let report = Pipeline::new(spec).run_with_engine(&bundle, &engine)?;
     println!("perplexity:   {:.3} ({})", report.perplexity, fmt_ppl(report.perplexity));
     println!("nll:          {:.4} nats/token", report.nll);
     println!("mass balance: {:.3}x of optimum", report.mass_balance);
@@ -137,7 +148,7 @@ fn cmd_quantize(args: &cli::Args) -> Result<()> {
 fn cmd_baseline(args: &cli::Args) -> Result<()> {
     let model = args.get_or("model", "llama_tiny");
     let ctx = RepoContext::discover()?;
-    let engine = Engine::new(&ctx)?;
+    let engine = engine_from_args(args, &ctx)?;
     let bundle = ModelBundle::load_with_engine(&ctx, &engine, &model)?;
     let n = args.get_usize("eval-tokens", 8192);
     let z = args.has_flag("zeroshot").then_some(2048);
@@ -158,7 +169,7 @@ fn cmd_sweep(args: &cli::Args) -> Result<()> {
         .filter_map(|s| s.parse().ok())
         .collect();
     let ctx = RepoContext::discover()?;
-    let engine = Engine::new(&ctx)?;
+    let engine = engine_from_args(args, &ctx)?;
     let bundle = ModelBundle::load_with_engine(&ctx, &engine, &model)?;
     let mut rows = Vec::new();
     for &b in &blocks {
@@ -206,7 +217,7 @@ fn cmd_stats(args: &cli::Args) -> Result<()> {
     let model = args.get_or("model", "llama_tiny");
     let block = args.get_usize("block", 32);
     let ctx = RepoContext::discover()?;
-    let engine = Engine::new(&ctx)?;
+    let engine = engine_from_args(args, &ctx)?;
     let bundle = ModelBundle::load_with_engine(&ctx, &engine, &model)?;
     let cfg = &bundle.cfg;
     let mut ws = bundle.weights.clone();

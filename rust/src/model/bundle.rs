@@ -1,13 +1,21 @@
 //! `ModelBundle`: a model's config + pristine weights + artifact metadata,
 //! loaded once and shared (read-only) across pipeline runs.
+//!
+//! Loading is plain file IO (meta.json + .npy weights) and never touches
+//! PJRT; bundles therefore work on every backend. For artifact-free runs
+//! (native backend, zero Python involvement) [`ModelBundle::synthetic`]
+//! materializes one of the known model configs with deterministic
+//! randomly-initialized weights.
 
-use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Context, Result};
 
 use super::config::ModelConfig;
 use super::weights::WeightSet;
 use crate::runtime::{Engine, RepoContext};
 use crate::tensor::{npy, Mat};
-use crate::util::json::Json;
+use crate::util::json::{self, Json};
 
 pub struct ModelBundle {
     pub name: String,
@@ -24,15 +32,10 @@ pub struct ModelBundle {
 
 impl ModelBundle {
     pub fn load(ctx: &RepoContext, name: &str) -> Result<ModelBundle> {
-        let engine = Engine::new(ctx)?;
-        Self::load_with_engine(ctx, &engine, name)
-    }
-
-    /// Load using an existing engine (avoids spinning up extra PJRT clients).
-    pub fn load_with_engine(ctx: &RepoContext, engine: &Engine, name: &str) -> Result<ModelBundle> {
-        let meta = engine
-            .load_meta(name)
-            .with_context(|| format!("loading meta for {name}"))?;
+        let meta_path = ctx.model_dir(name).join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("loading meta for {name} ({meta_path:?})"))?;
+        let meta = json::parse(&text)?;
         let cfg = ModelConfig::from_meta(&meta)?;
         let weights = WeightSet::load(&ctx.weights_dir(name), &cfg.weight_names())
             .with_context(|| format!("loading weights for {name}"))?;
@@ -52,6 +55,32 @@ impl ModelBundle {
         })
     }
 
+    /// Load using an existing engine. Kept for API continuity — loading is
+    /// pure file IO, so the engine is only a hint that one already exists.
+    pub fn load_with_engine(ctx: &RepoContext, _engine: &Engine, name: &str) -> Result<ModelBundle> {
+        Self::load(ctx, name)
+    }
+
+    /// An artifact-free bundle: one of the known model configs with
+    /// deterministic random-init weights (the `model.init_weights` scheme:
+    /// normal · 1/√fan_in linears, unit norms, zero positional). Serves
+    /// the zero-dependency native path — no `make artifacts` required.
+    pub fn synthetic(name: &str) -> Result<ModelBundle> {
+        let cfg = synthetic_config(name)
+            .ok_or_else(|| anyhow!("unknown synthetic model {name:?} (try llama_tiny, llama_np2, qwen_tiny)"))?;
+        let seed = name.bytes().fold(0xBEEFu64, |a, b| a.wrapping_mul(31).wrapping_add(b as u64));
+        let weights = synthetic_weights(&cfg, seed);
+        Ok(ModelBundle {
+            name: name.to_string(),
+            cfg,
+            meta: json::parse("{}")?,
+            weights,
+            learned_r1: None,
+            learned_r1_block: None,
+            ctx: RepoContext::ephemeral(),
+        })
+    }
+
     /// Tags of the quant-graph artifacts this bundle provides.
     pub fn quant_tag(&self, block: usize) -> String {
         format!("fwd_quant_b{block}")
@@ -62,5 +91,95 @@ impl ModelBundle {
             .model_dir(&self.name)
             .join(format!("{tag}.hlo.txt"))
             .exists()
+    }
+}
+
+/// The rust mirror of python `model.CONFIGS` (DESIGN.md §6): Llama3-1B /
+/// Llama3-8B(non-pow-2 FFN) / Qwen3 analogs.
+pub fn synthetic_config(name: &str) -> Option<ModelConfig> {
+    let (n_layers, d_model, n_heads, d_ffn, blocks): (usize, usize, usize, usize, &[usize]) =
+        match name {
+            "llama_tiny" => (4, 256, 8, 1024, &[1, 16, 32, 64, 128, 256, 512, 1024]),
+            "llama_np2" => (2, 128, 4, 448, &[1, 16, 32, 64, 448]),
+            "qwen_tiny" => (3, 192, 6, 768, &[1, 16, 32, 64, 128, 256, 768]),
+            _ => return None,
+        };
+    Some(ModelConfig {
+        name: name.to_string(),
+        n_layers,
+        d_model,
+        n_heads,
+        d_ffn,
+        vocab: 32,
+        seq_len: 128,
+        batch: 8,
+        block_sizes: blocks.to_vec(),
+    })
+}
+
+/// Deterministic random-init weights for a config, mirroring
+/// `model.init_weights`: norm scales = 1, positional = 0, linears ~
+/// N(0, 1/fan_in).
+pub fn synthetic_weights(cfg: &ModelConfig, seed: u64) -> WeightSet {
+    let mut rng = crate::data::rng::Rng::new(seed);
+    let names = cfg.weight_names();
+    let mut tensors = BTreeMap::new();
+    let mut shapes = BTreeMap::new();
+    let (d, f, v, t) = (cfg.d_model, cfg.d_ffn, cfg.vocab, cfg.seq_len);
+    for name in &names {
+        let part = name.rsplit('.').next().unwrap_or(name);
+        let (rows, cols, rank1) = match part {
+            "embed" => (v, d, false),
+            "pos" => (t, d, false),
+            "n1" | "n2" | "nf" => (1, d, true),
+            "wq" | "wk" | "wv" | "wo" => (d, d, false),
+            "wg" | "wu" => (d, f, false),
+            "wd" => (f, d, false),
+            "wout" => (d, v, false),
+            _ => unreachable!("unexpected weight {name}"),
+        };
+        let m = if rank1 {
+            Mat::from_vec(1, cols, vec![1.0; cols])
+        } else if part == "pos" {
+            Mat::zeros(rows, cols)
+        } else {
+            let scale = 1.0 / (rows as f32).sqrt();
+            Mat::from_fn(rows, cols, |_, _| rng.next_normal() as f32 * scale)
+        };
+        shapes.insert(name.clone(), if rank1 { vec![cols] } else { vec![rows, cols] });
+        tensors.insert(name.clone(), m);
+    }
+    WeightSet { names, tensors, shapes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_bundle_matches_python_configs() {
+        let b = ModelBundle::synthetic("llama_np2").unwrap();
+        assert_eq!(b.cfg.n_layers, 2);
+        assert_eq!(b.cfg.d_model, 128);
+        assert_eq!(b.cfg.d_ffn, 448);
+        assert_eq!(b.cfg.head_dim(), 32);
+        assert_eq!(b.weights.names, b.cfg.weight_names());
+        assert!(!b.has_artifact("fwd"));
+        assert!(ModelBundle::synthetic("gpt5").is_err());
+    }
+
+    #[test]
+    fn synthetic_weights_deterministic_and_shaped() {
+        let cfg = synthetic_config("qwen_tiny").unwrap();
+        let a = synthetic_weights(&cfg, 7);
+        let b = synthetic_weights(&cfg, 7);
+        let c = synthetic_weights(&cfg, 8);
+        assert_eq!(a.get("l0.wq").data, b.get("l0.wq").data);
+        assert_ne!(a.get("l0.wq").data, c.get("l0.wq").data);
+        assert_eq!(a.get("embed").rows, 32);
+        assert_eq!(a.get("l0.wd").rows, cfg.d_ffn);
+        assert_eq!(a.shape("nf"), &[cfg.d_model]);
+        assert!(a.get("l0.n1").data.iter().all(|&x| x == 1.0));
+        assert!(a.get("pos").data.iter().all(|&x| x == 0.0));
     }
 }

@@ -32,6 +32,13 @@ impl RepoContext {
         }
     }
 
+    /// A context that points nowhere — for synthetic, artifact-free runs
+    /// (native backend only). Every artifact lookup will simply miss.
+    pub fn ephemeral() -> RepoContext {
+        let root = std::env::temp_dir().join("perq-ephemeral");
+        RepoContext { artifacts: root.join("artifacts"), root }
+    }
+
     pub fn at(root: &Path) -> Result<RepoContext> {
         let artifacts = root.join("artifacts");
         if !artifacts.exists() {

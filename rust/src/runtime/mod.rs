@@ -1,9 +1,116 @@
-//! PJRT runtime: loads the HLO-text artifacts the python build path emits
-//! and executes them on the CPU PJRT client (xla crate / xla_extension
-//! 0.5.1). HLO *text* is the interchange format — see python/compile/aot.py.
+//! Runtime layer: repository/artifact discovery plus the backend-dispatch
+//! `Engine` facade. The raw PJRT engine (HLO-text artifacts executed on the
+//! CPU PJRT client, xla crate / xla_extension 0.5.1) lives in `engine` and
+//! only exists behind the `pjrt` feature; the facade lets the coordinator,
+//! eval streamers, and benches stay backend-agnostic — they ask the facade
+//! which [`BackendKind`] is active and never touch PJRT types directly.
 
 pub mod context;
+#[cfg(feature = "pjrt")]
 pub mod engine;
 
+use anyhow::{Context, Result};
+
+use crate::backend::BackendKind;
+use crate::util::json::{self, Json};
+
 pub use context::RepoContext;
-pub use engine::Engine;
+
+/// Backend-dispatch execution facade. `Engine::new` auto-selects
+/// ([`BackendKind::auto`]): pjrt when compiled in and HLO artifacts exist,
+/// native otherwise. All meta/weight loading is plain file IO and works on
+/// every backend; artifact execution goes through [`Engine::pjrt`] (pjrt
+/// builds only) or through `backend::NativeBackend` (always).
+pub struct Engine {
+    ctx: RepoContext,
+    kind: BackendKind,
+    #[cfg(feature = "pjrt")]
+    pjrt: Option<engine::Engine>,
+}
+
+impl Engine {
+    pub fn new(ctx: &RepoContext) -> Result<Engine> {
+        let kind = BackendKind::auto(ctx);
+        Engine::with_backend(ctx, kind)
+    }
+
+    pub fn with_backend(ctx: &RepoContext, kind: BackendKind) -> Result<Engine> {
+        match kind {
+            BackendKind::Native => Ok(Engine {
+                ctx: ctx.clone(),
+                kind,
+                #[cfg(feature = "pjrt")]
+                pjrt: None,
+            }),
+            BackendKind::Pjrt => Engine::new_pjrt(ctx),
+        }
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn new_pjrt(ctx: &RepoContext) -> Result<Engine> {
+        Ok(Engine {
+            ctx: ctx.clone(),
+            kind: BackendKind::Pjrt,
+            pjrt: Some(engine::Engine::new(ctx)?),
+        })
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn new_pjrt(_ctx: &RepoContext) -> Result<Engine> {
+        anyhow::bail!("the pjrt backend is not compiled in (rebuild with `--features pjrt`)")
+    }
+
+    /// A native-only engine with no artifact directory — for synthetic
+    /// models and artifact-free serving (`--backend native` from scratch).
+    pub fn native_ephemeral() -> Engine {
+        Engine {
+            ctx: RepoContext::ephemeral(),
+            kind: BackendKind::Native,
+            #[cfg(feature = "pjrt")]
+            pjrt: None,
+        }
+    }
+
+    pub fn backend(&self) -> BackendKind {
+        self.kind
+    }
+
+    pub fn ctx(&self) -> &RepoContext {
+        &self.ctx
+    }
+
+    /// Read a model's meta.json (plain file IO — no PJRT involved).
+    pub fn load_meta(&self, model: &str) -> Result<Json> {
+        let path = self.ctx.model_dir(model).join("meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}"))?;
+        json::parse(&text)
+    }
+
+    /// The raw PJRT engine (pjrt builds, pjrt backend selected).
+    #[cfg(feature = "pjrt")]
+    pub fn pjrt(&self) -> Result<&engine::Engine> {
+        self.pjrt
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("engine is running the native backend"))
+    }
+
+    /// Execute an artifact through the raw PJRT engine (pjrt builds only;
+    /// kept for the artifact integration suite).
+    #[cfg(feature = "pjrt")]
+    pub fn run(&self, model: &str, tag: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.pjrt()?.run(model, tag, inputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_ephemeral_reports_backend() {
+        let e = Engine::native_ephemeral();
+        assert_eq!(e.backend(), BackendKind::Native);
+        assert!(e.load_meta("nope").is_err());
+    }
+}

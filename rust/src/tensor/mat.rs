@@ -86,27 +86,47 @@ impl Mat {
     /// `self @ other` — cache-blocked ikj loop; the workhorse of the
     /// offline transform engine.
     pub fn matmul(&self, other: &Mat) -> Mat {
-        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
-        let (m, k, n) = (self.rows, self.cols, other.cols);
-        let mut out = Mat::zeros(m, n);
-        const BK: usize = 64;
-        for kb in (0..k).step_by(BK) {
-            let kend = (kb + BK).min(k);
-            for i in 0..m {
-                let orow = &mut out.data[i * n..(i + 1) * n];
-                for kk in kb..kend {
-                    let a = self.data[i * k + kk];
-                    if a == 0.0 {
-                        continue;
-                    }
-                    let brow = &other.data[kk * n..(kk + 1) * n];
-                    for j in 0..n {
-                        orow[j] += a * brow[j];
-                    }
-                }
-            }
-        }
+        let mut out = Mat::zeros(self.rows, other.cols);
+        self.matmul_into(other, &mut out);
         out
+    }
+
+    /// `self @ other` into a preallocated (rows, other.cols) output —
+    /// the allocation-free form the native execution backend uses with
+    /// pooled scratch buffers. Overwrites `out`.
+    pub fn matmul_into(&self, other: &Mat, out: &mut Mat) {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        assert_eq!((out.rows, out.cols), (self.rows, other.cols), "matmul output shape");
+        out.data.fill(0.0);
+        matmul_kernel(&self.data, self.rows, self.cols, &other.data, other.cols, &mut out.data);
+    }
+
+    /// `self @ other` into `out`, with the rows of `self` partitioned
+    /// across worker threads (deterministic: each thread owns a disjoint
+    /// slice of `out`, so the result is bit-identical to `matmul_into`).
+    /// Falls back to the single-threaded kernel for small problems.
+    pub fn par_matmul_into(&self, other: &Mat, out: &mut Mat) {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        assert_eq!((out.rows, out.cols), (self.rows, other.cols), "matmul output shape");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let workers = crate::util::pool::default_workers();
+        // ~2 MFLOP per thread minimum, or it's not worth the spawns
+        if workers <= 1 || m * k * n < 1 << 21 || m < 2 * workers {
+            self.matmul_into(other, out);
+            return;
+        }
+        out.data.fill(0.0);
+        let chunk_rows = (m + workers - 1) / workers;
+        std::thread::scope(|scope| {
+            let a_chunks = self.data.chunks(chunk_rows * k);
+            let o_chunks = out.data.chunks_mut(chunk_rows * n);
+            for (a, o) in a_chunks.zip(o_chunks) {
+                let b = &other.data;
+                scope.spawn(move || {
+                    matmul_kernel(a, a.len() / k, k, b, n, o);
+                });
+            }
+        });
     }
 
     /// `self^T @ other` without materializing the transpose.
@@ -192,6 +212,31 @@ impl Mat {
     }
 }
 
+/// The shared cache-blocked ikj kernel: `out += a @ b` for a row-major
+/// (m, k) slice against (k, n). `out` must be zeroed by the caller.
+fn matmul_kernel(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    const BK: usize = 64;
+    for kb in (0..k).step_by(BK) {
+        let kend = (kb + BK).min(k);
+        for i in 0..m {
+            let orow = &mut out[i * n..(i + 1) * n];
+            for kk in kb..kend {
+                let av = a[i * k + kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -219,6 +264,27 @@ mod tests {
         for (g, w) in got.data.iter().zip(&want.data) {
             assert!((g - w).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn matmul_into_matches_matmul() {
+        let a = Mat::from_fn(7, 5, |i, j| (i * 5 + j) as f32 * 0.25 - 3.0);
+        let b = Mat::from_fn(5, 9, |i, j| ((i + 1) * (j + 2)) as f32 * 0.1);
+        let want = a.matmul(&b);
+        let mut out = Mat::from_fn(7, 9, |_, _| 42.0); // stale contents overwritten
+        a.matmul_into(&b, &mut out);
+        assert_eq!(out.data, want.data);
+    }
+
+    #[test]
+    fn par_matmul_bit_identical_to_serial() {
+        // large enough to cross the parallel threshold
+        let a = Mat::from_fn(256, 96, |i, j| ((i * 31 + j * 7) % 13) as f32 - 6.0);
+        let b = Mat::from_fn(96, 128, |i, j| ((i * 17 + j * 3) % 11) as f32 * 0.5);
+        let want = a.matmul(&b);
+        let mut out = Mat::zeros(256, 128);
+        a.par_matmul_into(&b, &mut out);
+        assert_eq!(out.data, want.data, "row partitioning must not change results");
     }
 
     #[test]

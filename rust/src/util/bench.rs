@@ -72,6 +72,27 @@ pub fn print_table(title: &str, header: &[&str], rows: &[(String, Vec<String>)])
     }
 }
 
+/// Append one JSON object to a `BENCH_*.json` trajectory file — a JSON
+/// array with one entry per bench run, so successive runs accumulate a
+/// perf history. Hand-rolled read-modify-write (no serde offline); an
+/// unrecognized file is restarted rather than corrupted.
+pub fn append_trajectory(path: &std::path::Path, obj: &str) -> std::io::Result<()> {
+    let existing = std::fs::read_to_string(path).unwrap_or_default();
+    let trimmed = existing.trim();
+    let out = match trimmed.strip_suffix(']') {
+        Some(body) if trimmed.starts_with('[') => {
+            let body = body.trim_end();
+            if body == "[" {
+                format!("[\n{obj}\n]\n")
+            } else {
+                format!("{body},\n{obj}\n]\n")
+            }
+        }
+        _ => format!("[\n{obj}\n]\n"),
+    };
+    std::fs::write(path, out)
+}
+
 /// Format a count the way the paper does (e.g. 205.51M, 516.10K).
 pub fn fmt_count(n: usize) -> String {
     let x = n as f64;
@@ -115,6 +136,20 @@ mod tests {
         assert_eq!(fmt_count(205_520_896), "205.52M");
         assert_eq!(fmt_count(258_048), "258.05K");
         assert_eq!(fmt_count(512), "512");
+    }
+
+    #[test]
+    fn trajectory_accumulates_valid_json() {
+        let path = std::env::temp_dir().join("perq_bench_traj_test.json");
+        let _ = std::fs::remove_file(&path);
+        append_trajectory(&path, r#"{"run": 1}"#).unwrap();
+        append_trajectory(&path, r#"{"run": 2}"#).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        let arr = parsed.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[1].get("run").and_then(|v| v.as_usize()), Some(2));
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -48,6 +48,13 @@ impl Args {
     pub fn has_flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }
+
+    /// The shared `--backend {native,pjrt,auto}` selection, if present.
+    /// Resolution (auto-detect, validation) lives in
+    /// `backend::BackendKind::resolve`.
+    pub fn backend(&self) -> Option<&str> {
+        self.get("backend")
+    }
 }
 
 #[cfg(test)]
@@ -72,5 +79,14 @@ mod tests {
         let a = parse(&v(&[]));
         assert_eq!(a.get_or("x", "y"), "y");
         assert_eq!(a.get_usize("n", 7), 7);
+        assert_eq!(a.backend(), None);
+    }
+
+    #[test]
+    fn backend_selection() {
+        let a = parse(&v(&["serve", "--backend", "native"]));
+        assert_eq!(a.backend(), Some("native"));
+        let b = parse(&v(&["--backend=pjrt"]));
+        assert_eq!(b.backend(), Some("pjrt"));
     }
 }

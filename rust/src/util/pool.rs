@@ -29,6 +29,53 @@ pub fn parallel_map<T: Send>(n: usize, workers: usize, f: impl Fn(usize) -> T + 
         .collect()
 }
 
+/// Reusable f32 scratch-buffer pool — the native execution backend's
+/// per-layer activation buffers cycle through here so steady-state scoring
+/// performs no heap allocation. Single-owner (no locking): each backend
+/// instance keeps its own pool.
+#[derive(Default)]
+pub struct BufPool {
+    free: Vec<Vec<f32>>,
+}
+
+impl BufPool {
+    pub fn new() -> BufPool {
+        BufPool::default()
+    }
+
+    /// Take a buffer of exactly `len` elements, zero-filled. Reuses the
+    /// smallest free buffer whose capacity fits, else allocates.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut best: Option<usize> = None;
+        for (i, b) in self.free.iter().enumerate() {
+            if b.capacity() >= len && best.map_or(true, |j| b.capacity() < self.free[j].capacity()) {
+                best = Some(i);
+            }
+        }
+        match best {
+            Some(i) => {
+                let mut b = self.free.swap_remove(i);
+                b.clear();
+                b.resize(len, 0.0);
+                b
+            }
+            None => vec![0.0; len],
+        }
+    }
+
+    /// Return a buffer for reuse.
+    pub fn put(&mut self, v: Vec<f32>) {
+        if v.capacity() > 0 && self.free.len() < 64 {
+            self.free.push(v);
+        }
+    }
+
+    /// Number of parked buffers (diagnostics/tests).
+    pub fn idle(&self) -> usize {
+        self.free.len()
+    }
+}
+
 /// Default worker count: physical parallelism, capped.
 pub fn default_workers() -> usize {
     std::thread::available_parallelism()
@@ -58,6 +105,23 @@ mod tests {
         let a = parallel_map(37, 1, |i| i + 1);
         let b = parallel_map(37, 7, |i| i + 1);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn buf_pool_recycles() {
+        let mut pool = BufPool::new();
+        let a = pool.take(128);
+        let ptr = a.as_ptr();
+        pool.put(a);
+        assert_eq!(pool.idle(), 1);
+        let b = pool.take(64); // fits in the recycled 128-cap buffer
+        assert_eq!(b.as_ptr(), ptr, "expected buffer reuse");
+        assert_eq!(b.len(), 64);
+        assert!(b.iter().all(|&v| v == 0.0));
+        pool.put(b);
+        let c = pool.take(256); // too big for the parked buffer
+        assert_eq!(c.len(), 256);
+        assert_eq!(pool.idle(), 1);
     }
 
     #[test]
