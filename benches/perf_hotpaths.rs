@@ -13,11 +13,11 @@ use perq::data::rng::Rng;
 use perq::hadamard::BlockRotator;
 use perq::model::bundle::ModelBundle;
 use perq::permute::massdiff_perm;
-use perq::quant::{Format, WeightCodec};
+use perq::quant::{act, Format, WeightCodec};
 use perq::rounding::Rounding;
 use perq::runtime::{Engine, RepoContext};
 use perq::tensor::linalg::SymMat;
-use perq::tensor::Mat;
+use perq::tensor::{qmat, Mat, QuantActs, QuantMat};
 use perq::util::bench::{append_trajectory, time};
 
 fn rand_mat(r: usize, c: usize, seed: u64) -> Mat {
@@ -73,6 +73,12 @@ fn main() -> anyhow::Result<()> {
     let t_q = time("qronos", 1, 800, || Rounding::Qronos.round(&w, &codec, Some(&gram)));
     println!("qronos 1024x256:    {:9.1} ms", t_q.mean_ms());
 
+    // packed integer GEMM + small-block FWHT throughput — the serving
+    // kernels this layer replaces/accelerates; appends BENCH_qgemm.json.
+    if let Err(e) = bench_qgemm_and_fwht() {
+        println!("\nSKIP qgemm/fwht bench: {e:#}");
+    }
+
     // === backend scoring: native vs pjrt =============================
     // Native scoring needs zero artifacts (synthetic weights stand in when
     // the trained tree is absent); the pjrt column appears when the `pjrt`
@@ -102,6 +108,98 @@ fn main() -> anyhow::Result<()> {
         );
     }
     common::elapsed_note(t0);
+    Ok(())
+}
+
+/// Packed qgemm vs the f32 fake-quant GEMM it replaces (identical math,
+/// identical quantizer rounding), plus small-block FWHT throughput — one
+/// BENCH_qgemm.json trajectory entry per case. The f32 column times the
+/// old serving path (dequantized f32 weights through `par_matmul_into`);
+/// the packed column times the full fused replacement (code emission +
+/// integer GEMM), so the speedup is end-to-end per matmul site.
+fn bench_qgemm_and_fwht() -> anyhow::Result<()> {
+    let root = match RepoContext::discover() {
+        Ok(c) => c.root,
+        Err(_) => std::env::current_dir()?,
+    };
+    let traj = root.join("BENCH_qgemm.json");
+    let stamp = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+
+    // d_model-scale shapes: llama_tiny's wq site (1024 tokens x 256 x 256)
+    // is too small to separate the paths; use the paper-scale 1024-wide
+    // projection with a serving-sized token batch.
+    let (m, k, n) = (256usize, 1024, 1024);
+    println!("\n=== packed qgemm vs f32 fake-quant GEMM ({m} toks, {k}x{n}) ===");
+    let x = rand_mat(m, k, 31);
+    for fmt in [Format::Int4, Format::Int8] {
+        let bits = fmt.int_bits().unwrap();
+        let w = rand_mat(k, n, 32 + bits as u64);
+        let codec = WeightCodec::fit(fmt, &w);
+        let qw = codec.quantize_mat(&w);
+        let packed = QuantMat::from_codec(&qw, &codec)
+            .ok_or_else(|| anyhow::anyhow!("int codec must pack"))?;
+        // old path: per-token fake-quant + f32 GEMM on dequantized weights
+        let mut out_f32 = Mat::zeros(m, n);
+        let t_f32 = time("f32", 3, 500, || {
+            let mut xq = x.clone();
+            for r in 0..m {
+                act::act_quant_row(xq.row_mut(r), fmt);
+            }
+            xq.par_matmul_into(&qw, &mut out_f32);
+        });
+        // packed path: emit u8 codes + integer GEMM with fused dequant
+        let mut acts = QuantActs::new(bits);
+        let mut out_q = Mat::zeros(m, n);
+        let t_packed = time("qgemm", 3, 500, || {
+            acts.reset(k);
+            for r in 0..m {
+                acts.push_row(x.row(r));
+            }
+            qmat::qgemm_into(&acts, &packed, &mut out_q);
+        });
+        let (ms_f32, ms_packed) = (t_f32.mean_ms(), t_packed.mean_ms());
+        let speedup = t_f32.mean_ns / t_packed.mean_ns;
+        let (pb, db) = (packed.packed_bytes(), packed.dense_bytes());
+        println!(
+            "  {:<6} f32 {ms_f32:8.2} ms  qgemm {ms_packed:8.2} ms  speedup {speedup:5.2}x  \
+             weights {:.1} MiB -> {:.2} MiB ({:.1}x smaller)",
+            fmt.name(),
+            db as f64 / (1 << 20) as f64,
+            pb as f64 / (1 << 20) as f64,
+            db as f64 / pb as f64,
+        );
+        let entry = format!(
+            "{{\"bench\": \"qgemm\", \"ts\": {stamp}, \"format\": \"{}\", \
+             \"m\": {m}, \"k\": {k}, \"n\": {n}, \"ms_f32\": {ms_f32:.3}, \
+             \"ms_packed\": {ms_packed:.3}, \"speedup\": {speedup:.2}, \
+             \"weight_bytes_f32\": {db}, \"weight_bytes_packed\": {pb}}}",
+            fmt.name()
+        );
+        if let Err(e) = append_trajectory(&traj, &entry) {
+            println!("  (could not write {traj:?}: {e})");
+        }
+    }
+
+    // small-block FWHT: the b=16/b=32 unrolled kernels on a d_ffn-wide row
+    for b in [16usize, 32] {
+        let mut m1024 = rand_mat(1024, 1024, 40 + b as u64);
+        let rot = BlockRotator::hadamard(b)?;
+        let t = time("fwht_block", 3, 300, || rot.apply_mat(&mut m1024));
+        let gbs = (1024.0 * 1024.0 * 4.0) / t.mean_ns;
+        println!("  fwht  b={b:<3} {:8.2} ms/1024toks  {gbs:5.2} GB/s", t.mean_ms());
+        let entry = format!(
+            "{{\"bench\": \"fwht_block\", \"ts\": {stamp}, \"b\": {b}, \
+             \"ms_per_1024_tokens\": {:.3}, \"gb_per_s\": {gbs:.2}}}",
+            t.mean_ms()
+        );
+        if let Err(e) = append_trajectory(&traj, &entry) {
+            println!("  (could not write {traj:?}: {e})");
+        }
+    }
+    println!("  trajectory: {}", traj.display());
     Ok(())
 }
 

@@ -23,7 +23,7 @@ pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::hadamard::{self, opcount, BlockRotator};
 use crate::model::config::ModelConfig;
@@ -171,6 +171,21 @@ impl BackendKind {
     }
 }
 
+/// The AOT artifacts only lower `fmt` ids 0..=3 (the L2 `lax.switch`
+/// branches); `Format::Int8` (id 4) is a native-backend extension. The
+/// pjrt dispatch points (and the pipeline, for an early error) must
+/// reject it — an out-of-range id would be clamped by the switch to the
+/// wrong quantizer and score silently wrong.
+pub fn ensure_artifact_format(graph: &ForwardGraph) -> Result<()> {
+    let f = graph.format();
+    ensure!(
+        (0..=3).contains(&f.fmt_id()),
+        "format {} is native-backend only (no AOT artifact lowering) — use --backend native",
+        f.name()
+    );
+    Ok(())
+}
+
 /// Does any model directory under `artifacts/` hold a lowered HLO graph?
 pub fn has_hlo_artifacts(ctx: &RepoContext) -> bool {
     let Ok(entries) = std::fs::read_dir(&ctx.artifacts) else {
@@ -203,7 +218,10 @@ pub fn make_backend(kind: BackendKind, ctx: Option<&RepoContext>, model: &str,
             ws.clone(),
             graph.clone(),
         )?)),
-        BackendKind::Pjrt => make_pjrt_backend(ctx, model, cfg, ws, graph),
+        BackendKind::Pjrt => {
+            ensure_artifact_format(graph)?;
+            make_pjrt_backend(ctx, model, cfg, ws, graph)
+        }
     }
 }
 
@@ -258,7 +276,10 @@ pub fn scorer<'a>(engine: &'a crate::runtime::Engine, model: &str, cfg: &ModelCo
             let mut be = NativeBackend::new(cfg.clone(), ws.clone(), graph.clone())?;
             Ok(Box::new(move |tokens: &[i32]| be.score(tokens)))
         }
-        BackendKind::Pjrt => pjrt_scorer(engine, model, cfg, ws, graph),
+        BackendKind::Pjrt => {
+            ensure_artifact_format(graph)?;
+            pjrt_scorer(engine, model, cfg, ws, graph)
+        }
     }
 }
 
@@ -321,6 +342,16 @@ mod tests {
             _ => panic!("expected scalar"),
         }
         assert!(ForwardGraph::Fp.extras().unwrap().is_empty());
+    }
+
+    #[test]
+    fn artifact_formats_exclude_native_only_int8() {
+        let ok = ForwardGraph::Merged { r3_block: 8, format: Format::Int4 };
+        assert!(ensure_artifact_format(&ok).is_ok());
+        assert!(ensure_artifact_format(&ForwardGraph::Fp).is_ok());
+        let bad = ForwardGraph::Merged { r3_block: 8, format: Format::Int8 };
+        let err = ensure_artifact_format(&bad).unwrap_err().to_string();
+        assert!(err.contains("native-backend only"), "{err}");
     }
 
     #[test]

@@ -5,18 +5,30 @@
 //!
 //! * merged permutations and rotations are already folded into the weights
 //!   (the Fig 7 deployment story), so the graph only performs what must be
-//!   online: dynamic per-token activation fake-quant (`quant::act`) and the
-//!   fused R̃3 block rotation (FWHT via `hadamard::fwht`, or the optimized
-//!   non-power-of-2 plan) followed by per-token quant — the rust mirror of
-//!   the pallas `fused.block_rotate_quant` kernel;
-//! * matmuls go through the cache-blocked kernel in `tensor::Mat`
-//!   (row-parallel across worker threads for large token counts);
-//! * per-layer activation buffers are recycled through a `util::pool`
-//!   buffer pool, so steady-state scoring does no allocation.
+//!   online: dynamic per-token activation quantization (`quant::act`) and
+//!   the fused R̃3 block rotation (FWHT via `hadamard::fwht`, or the
+//!   optimized non-power-of-2 plan) followed by per-token quant — the rust
+//!   mirror of the pallas `fused.block_rotate_quant` kernel;
+//! * INT4/INT8 merged graphs whose `WeightSet` carries packed twins run
+//!   the *packed* path: activations are emitted as u8 codes straight into
+//!   a staging buffer (for the R̃3 site, fused right after the in-place
+//!   block rotation) and multiplied through the integer GEMM in
+//!   `tensor::qmat` — i32 accumulation, per-channel dequant fused into the
+//!   store, dense f32 weight copies dropped at load. Float formats (or
+//!   weight sets without packed twins, e.g. the parity-test references)
+//!   keep the fake-quant f32 path through `tensor::Mat`;
+//! * matmuls fan out across the persistent `util::pool` worker pool;
+//! * per-layer activation buffers are recycled through a bounded
+//!   `util::pool::BufPool`, so steady-state scoring does no allocation.
 //!
 //! Numerics note: rmsnorm/softmax accumulate in f32 like the XLA CPU
 //! lowering; parity with the artifact path is asserted to 1e-4 by the
-//! backend-parity property tests (rust/tests/backend_parity.rs).
+//! backend-parity property tests (rust/tests/backend_parity.rs). The
+//! packed path shares the fake-quant rounding bit-for-bit (same scales,
+//! zeros, and codes); only the accumulation order differs, which the
+//! qgemm property suite (rust/tests/qgemm_props.rs) bounds.
+
+use std::collections::BTreeMap;
 
 use anyhow::{bail, ensure, Result};
 
@@ -26,8 +38,14 @@ use crate::hadamard::BlockRotator;
 use crate::model::config::ModelConfig;
 use crate::model::weights::WeightSet;
 use crate::quant::{act, Format};
-use crate::tensor::Mat;
+use crate::tensor::{qmat, Mat, QuantActs, QuantMat};
 use crate::util::pool::BufPool;
+
+/// The packed per-layer linear weights of an INT4/INT8 merged graph.
+struct PackedWeights {
+    bits: u32,
+    mats: BTreeMap<String, QuantMat>,
+}
 
 pub struct NativeBackend {
     cfg: ModelConfig,
@@ -36,10 +54,26 @@ pub struct NativeBackend {
     rot3: Option<BlockRotator>,
     format: Format,
     pool: BufPool,
+    /// Some → low-bit serving path (integer GEMM over packed weights)
+    packed: Option<PackedWeights>,
+    /// staging buffer for emitted activation codes (packed path only)
+    qa: QuantActs,
+}
+
+/// `PERQ_PACKED=0` (or `off`) forces the f32 fake-quant path even when
+/// packed weights are available — an escape hatch for debugging parity.
+/// Consulted both here and by the pipeline (which keeps the dense f32
+/// copies alive when the hatch is set, so the fallback can actually run).
+pub fn packed_serving_enabled() -> bool {
+    match std::env::var("PERQ_PACKED") {
+        Ok(v) => !(v == "0" || v.eq_ignore_ascii_case("off")),
+        Err(_) => true,
+    }
 }
 
 impl NativeBackend {
     pub fn new(cfg: ModelConfig, ws: WeightSet, graph: ForwardGraph) -> Result<NativeBackend> {
+        let mut ws = ws;
         let (rot3, format) = match &graph {
             ForwardGraph::Fp => (None, Format::None),
             ForwardGraph::Merged { r3_block, format } => {
@@ -51,7 +85,55 @@ impl NativeBackend {
                 bail!("the fully-online graph (Fig 9) is only lowered for the pjrt backend")
             }
         };
-        Ok(NativeBackend { cfg, ws, graph, rot3, format, pool: BufPool::new() })
+        // Engage the packed path when every per-layer linear site carries a
+        // packed twin of the graph's integer width; the dense f32 copies of
+        // those sites are dropped (the weight-memory reduction — embed/pos/
+        // norms/unembed stay dense, matching the full-precision sites).
+        let packed = match (&graph, format.int_bits()) {
+            (ForwardGraph::Merged { .. }, Some(bits)) => {
+                let sites = cfg.linear_sites();
+                let complete = !sites.is_empty()
+                    && sites
+                        .iter()
+                        .all(|s| ws.packed(&s.name).map_or(false, |q| q.bits == bits));
+                // The pipeline may have already dropped the dense copies
+                // (native engines do, process-wide); then packed serving
+                // is the only option and the PERQ_PACKED escape hatch
+                // cannot apply.
+                let dense_missing =
+                    sites.iter().any(|s| !ws.tensors.contains_key(&s.name));
+                if complete && (packed_serving_enabled() || dense_missing) {
+                    let mut mats = BTreeMap::new();
+                    for s in &sites {
+                        let qm = ws.take_packed(&s.name).expect("checked above");
+                        if let Some(dense) = ws.tensors.get(&s.name) {
+                            ensure!(
+                                qm.rows == dense.rows && qm.cols == dense.cols,
+                                "packed weight {} shape mismatch", s.name
+                            );
+                        }
+                        ws.drop_dense(&s.name);
+                        mats.insert(s.name.clone(), qm);
+                    }
+                    Some(PackedWeights { bits, mats })
+                } else {
+                    ensure!(
+                        !dense_missing,
+                        "weight set lacks dense f32 copies but its packed twins are \
+                         incomplete — cannot serve this graph"
+                    );
+                    None
+                }
+            }
+            _ => None,
+        };
+        let qa = QuantActs::new(packed.as_ref().map_or(8, |p| p.bits));
+        Ok(NativeBackend { cfg, ws, graph, rot3, format, pool: BufPool::new(), packed, qa })
+    }
+
+    /// Whether this backend serves from packed low-bit weights.
+    pub fn is_packed(&self) -> bool {
+        self.packed.is_some()
     }
 
     /// Run the forward pass over `nt = n_seqs * seq_len` token rows,
@@ -104,25 +186,44 @@ impl NativeBackend {
             if let Some(c) = caps.as_deref_mut() {
                 c.attn_in[l] = h.clone();
             }
-            act::act_quant_mat(&mut h, self.format);
-            h.par_matmul_into(self.ws.get(&lname("wq")), &mut q);
-            h.par_matmul_into(self.ws.get(&lname("wk")), &mut k);
-            h.par_matmul_into(self.ws.get(&lname("wv")), &mut v);
+            if let Some(pw) = &self.packed {
+                // emit codes once, run three integer GEMMs against them
+                self.qa.fill_from_mat(&h);
+                qmat::qgemm_into(&self.qa, &pw.mats[&lname("wq")], &mut q);
+                qmat::qgemm_into(&self.qa, &pw.mats[&lname("wk")], &mut k);
+                qmat::qgemm_into(&self.qa, &pw.mats[&lname("wv")], &mut v);
+            } else {
+                act::act_quant_mat(&mut h, self.format);
+                h.par_matmul_into(self.ws.get(&lname("wq")), &mut q);
+                h.par_matmul_into(self.ws.get(&lname("wk")), &mut k);
+                h.par_matmul_into(self.ws.get(&lname("wv")), &mut v);
+            }
             causal_attention(&q, &k, &v, &mut ctx, n_seqs, t, heads);
             if let Some(c) = caps.as_deref_mut() {
                 c.o_in[l] = ctx.clone();
             }
-            act::act_quant_mat(&mut ctx, self.format);
-            ctx.par_matmul_into(self.ws.get(&lname("wo")), &mut proj);
+            if let Some(pw) = &self.packed {
+                self.qa.fill_from_mat(&ctx);
+                qmat::qgemm_into(&self.qa, &pw.mats[&lname("wo")], &mut proj);
+            } else {
+                act::act_quant_mat(&mut ctx, self.format);
+                ctx.par_matmul_into(self.ws.get(&lname("wo")), &mut proj);
+            }
             add_assign(&mut x.data, &proj.data);
             // -- SwiGLU half ---------------------------------------------
             rmsnorm_rows(&x, &self.ws.get(&lname("n2")).data, &mut h);
             if let Some(c) = caps.as_deref_mut() {
                 c.ffn_in[l] = h.clone();
             }
-            act::act_quant_mat(&mut h, self.format);
-            h.par_matmul_into(self.ws.get(&lname("wg")), &mut g);
-            h.par_matmul_into(self.ws.get(&lname("wu")), &mut u);
+            if let Some(pw) = &self.packed {
+                self.qa.fill_from_mat(&h);
+                qmat::qgemm_into(&self.qa, &pw.mats[&lname("wg")], &mut g);
+                qmat::qgemm_into(&self.qa, &pw.mats[&lname("wu")], &mut u);
+            } else {
+                act::act_quant_mat(&mut h, self.format);
+                h.par_matmul_into(self.ws.get(&lname("wg")), &mut g);
+                h.par_matmul_into(self.ws.get(&lname("wu")), &mut u);
+            }
             for (gv, &uv) in g.data.iter_mut().zip(&u.data) {
                 *gv = swish(*gv) * uv;
             }
@@ -130,15 +231,30 @@ impl NativeBackend {
                 c.down_in[l] = g.clone();
             }
             // fused R̃3 hot path: blockwise rotate, then per-token quant —
-            // the rust twin of the pallas block_rotate_quant kernel.
-            if let Some(rot) = &self.rot3 {
+            // the rust twin of the pallas block_rotate_quant kernel. On the
+            // packed path the rotated row is quantized straight into the
+            // u8 staging buffer and fed to the integer GEMM.
+            if let Some(pw) = &self.packed {
+                // packed ⇒ merged graph ⇒ rot3 is always Some (b=1 is the
+                // identity rotator, not None)
+                let rot = self.rot3.as_ref().expect("merged graphs carry a rotator");
+                self.qa.reset(f);
                 for r in 0..nt {
                     let row = g.row_mut(r);
                     rot.apply_row(row, &mut rot_scratch);
-                    act::act_quant_row(row, self.format);
+                    self.qa.push_row(row);
                 }
+                qmat::qgemm_into(&self.qa, &pw.mats[&lname("wd")], &mut down);
+            } else {
+                if let Some(rot) = &self.rot3 {
+                    for r in 0..nt {
+                        let row = g.row_mut(r);
+                        rot.apply_row(row, &mut rot_scratch);
+                        act::act_quant_row(row, self.format);
+                    }
+                }
+                g.par_matmul_into(self.ws.get(&lname("wd")), &mut down);
             }
-            g.par_matmul_into(self.ws.get(&lname("wd")), &mut down);
             add_assign(&mut x.data, &down.data);
         }
 
@@ -361,6 +477,69 @@ mod tests {
             assert_eq!(caps.attn_in[l].cols, cfg.d_model);
             assert_eq!(caps.down_in[l].cols, cfg.d_ffn);
         }
+    }
+
+    /// Quantize every linear site through a fitted codec and attach packed
+    /// twins — the shape `Pipeline::round_all` produces for merged graphs.
+    fn quantize_and_pack(cfg: &ModelConfig, ws: &WeightSet, format: Format) -> WeightSet {
+        let mut out = ws.clone();
+        for site in cfg.linear_sites() {
+            let w = out.get(&site.name).clone();
+            let codec = crate::quant::WeightCodec::fit(format, &w);
+            let q = codec.quantize_mat(&w);
+            let packed = QuantMat::from_codec(&q, &codec).unwrap();
+            out.set(&site.name, q);
+            out.set_packed(&site.name, packed);
+        }
+        out
+    }
+
+    #[test]
+    fn packed_path_engages_and_tracks_fake_quant() {
+        let cfg = tiny_cfg();
+        let ws = tiny_ws(&cfg, 6);
+        for format in [Format::Int4, Format::Int8] {
+            let graph = ForwardGraph::Merged { r3_block: 8, format };
+            let wsq = quantize_and_pack(&cfg, &ws, format);
+            let mut pb = NativeBackend::new(cfg.clone(), wsq.clone(), graph.clone()).unwrap();
+            assert!(pb.is_packed(), "{format:?}: packed path must engage");
+            // dense copies of packed sites are dropped; fp sites stay
+            assert!(pb.ws.tensors.get("l0.wq").is_none());
+            assert!(pb.ws.tensors.get("embed").is_some());
+            assert!(pb.ws.tensors.get("wout").is_some());
+            // stripping the twins falls back to the fake-quant f32 path
+            let mut plain = wsq.clone();
+            plain.packed.clear();
+            let mut fb = NativeBackend::new(cfg.clone(), plain, graph).unwrap();
+            assert!(!fb.is_packed());
+            let tokens: Vec<i32> = (0..cfg.batch * cfg.seq_len)
+                .map(|i| ((i * 5 + 1) % cfg.vocab) as i32)
+                .collect();
+            let a = pb.score(&tokens).unwrap();
+            let a2 = pb.score(&tokens).unwrap();
+            assert_eq!(a, a2, "packed scoring must be deterministic");
+            assert!(a.iter().all(|v| v.is_finite()));
+            // both paths share the quantizer rounding bit-for-bit; the
+            // difference is f32 accumulation order (cliffs can amplify a
+            // single element, so the bound is aggregate)
+            let b = fb.score(&tokens).unwrap();
+            let mad: f64 =
+                a.iter().zip(&b).map(|(x, y)| (x - y).abs() as f64).sum::<f64>() / a.len() as f64;
+            assert!(mad < 5e-2, "{format:?}: packed drifts from fake-quant (mad {mad})");
+        }
+    }
+
+    #[test]
+    fn partial_packing_falls_back_to_dense() {
+        let cfg = tiny_cfg();
+        let ws = tiny_ws(&cfg, 7);
+        let format = Format::Int4;
+        let mut wsq = quantize_and_pack(&cfg, &ws, format);
+        wsq.take_packed("l0.wk"); // one missing twin → no packed serving
+        let graph = ForwardGraph::Merged { r3_block: 8, format };
+        let be = NativeBackend::new(cfg, wsq, graph).unwrap();
+        assert!(!be.is_packed());
+        assert!(be.ws.tensors.get("l0.wq").is_some(), "dense copies must survive");
     }
 
     #[test]

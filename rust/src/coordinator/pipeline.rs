@@ -33,7 +33,7 @@ use crate::permute::{self, CalibStats};
 use crate::quant::{act, Format, WeightCodec};
 use crate::runtime::Engine;
 use crate::tensor::linalg::SymMat;
-use crate::tensor::Mat;
+use crate::tensor::{Mat, QuantMat};
 use crate::util::pool;
 
 pub struct Pipeline {
@@ -165,6 +165,7 @@ impl Pipeline {
         };
         let eval_tag = graph.tag();
         if engine.backend() == BackendKind::Pjrt {
+            crate::backend::ensure_artifact_format(&graph)?;
             ensure!(
                 bundle.has_artifact(&eval_tag),
                 "missing artifact {eval_tag} for {}",
@@ -240,9 +241,28 @@ impl Pipeline {
 
         stage("rotate+actquant");
         // ---- stage 4: per-linear rounding jobs ----------------------------
-        self.round_all(cfg, &mut ws, &caps, rot_online.as_ref())?;
+        // Packing is only useful to the native backend's qgemm path; pjrt
+        // feeds dense weights into the artifacts, so skip the pack work
+        // (and the retained payloads) there.
+        let pack = engine.backend() == BackendKind::Native;
+        self.round_all(cfg, &mut ws, &caps, rot_online.as_ref(), pack)?;
 
         stage("rounding");
+        // Native engines serve packed sites straight from the integer
+        // payloads, so drop their dense f32 copies here — the 4–8× weight
+        // memory reduction then holds for the whole QuantizedModel, not
+        // just inside each backend's private clone. Skipped when the
+        // PERQ_PACKED escape hatch disables packed serving (the f32
+        // fallback needs the dense copies); pjrt feeds dense weights into
+        // the artifacts and must keep them regardless.
+        if engine.backend() == BackendKind::Native
+            && crate::backend::native::packed_serving_enabled()
+        {
+            let packed_names: Vec<String> = ws.packed.keys().cloned().collect();
+            for name in &packed_names {
+                ws.drop_dense(name);
+            }
+        }
         let _ = t0;
         Ok(QuantizedModel {
             ws,
@@ -290,9 +310,11 @@ impl Pipeline {
         })
     }
 
-    /// Round every linear site in parallel worker threads.
+    /// Round every linear site in parallel worker threads. With `pack`,
+    /// each rounded site also gets a packed integer twin for the native
+    /// backend's qgemm path (integer formats only).
     fn round_all(&self, cfg: &crate::model::ModelConfig, ws: &mut WeightSet,
-                 caps: &Captures, rot_online: Option<&BlockRotator>) -> Result<()> {
+                 caps: &Captures, rot_online: Option<&BlockRotator>, pack: bool) -> Result<()> {
         let spec = &self.spec;
         if spec.format == Format::None {
             return Ok(());
@@ -319,21 +341,33 @@ impl Pipeline {
                 }
             })
             .collect();
-        let quantized: Vec<Mat> = pool::parallel_map(sites.len(), spec.workers, |i| {
-            let site = &sites[i];
-            let w = &w_in[i];
-            let codec = WeightCodec::fit(spec.format, w);
-            let gram = if needs_gram {
-                let x = caps.site(site.capture, site.layer);
-                let mut h = SymMat::zeros(w.rows);
-                h.accumulate_gram(&x.data, x.rows);
-                Some(h)
-            } else {
-                None
-            };
-            spec.rounding.round(w, &codec, gram.as_ref())
-        });
-        for (site, mut q) in sites.iter().zip(quantized) {
+        let quantized: Vec<(Mat, Option<QuantMat>)> =
+            pool::parallel_map(sites.len(), spec.workers, |i| {
+                let site = &sites[i];
+                let w = &w_in[i];
+                let codec = WeightCodec::fit(spec.format, w);
+                let gram = if needs_gram {
+                    let x = caps.site(site.capture, site.layer);
+                    let mut h = SymMat::zeros(w.rows);
+                    h.accumulate_gram(&x.data, x.rows);
+                    Some(h)
+                } else {
+                    None
+                };
+                let rounded = spec.rounding.round(w, &codec, gram.as_ref());
+                // Merged graphs serve the rounded weight as-is: pack its
+                // integer codes once here so the native backend can run the
+                // low-bit qgemm path and drop the dequantized f32 copy.
+                // (Online graphs re-rotate the weights below, which leaves
+                // nothing integer-exact to pack — pjrt executes those.)
+                let packed = if pack && rot_online.is_none() {
+                    QuantMat::from_codec(&rounded, &codec)
+                } else {
+                    None
+                };
+                (rounded, packed)
+            });
+        for (site, (mut q, packed)) in sites.iter().zip(quantized) {
             // online graph: pre-compensate the in-graph rotation so the
             // graph's R̃ᵀ(w_feed) equals the quantized rotated weight.
             if let Some(rot) = rot_online {
@@ -344,6 +378,9 @@ impl Pipeline {
                 q = r.rotate_weight_rows_fwd(&q)?;
             }
             ws.set(&site.name, q);
+            if let Some(p) = packed {
+                ws.set_packed(&site.name, p);
+            }
         }
         Ok(())
     }

@@ -131,6 +131,9 @@ impl InferenceServer {
                  ws: &crate::model::weights::WeightSet, extras: Vec<ExtraInput>,
                  max_wait: Duration) -> Result<InferenceServer> {
         let graph = graph_from_extras(&extras)?;
+        // native-only formats (fmt id > 3) must not reach the artifact's
+        // lax.switch — it would clamp them to the wrong quantizer
+        crate::backend::ensure_artifact_format(&graph)?;
         let cfg2 = cfg.clone();
         let ws2 = ws.clone();
         let factory: BackendFactory = Box::new(move || {
@@ -231,6 +234,7 @@ fn graph_from_extras(extras: &[ExtraInput]) -> Result<crate::backend::ForwardGra
         1 => Format::Int4,
         2 => Format::Fp4,
         3 => Format::Mxfp4,
+        4 => Format::Int8,
         _ => Format::None,
     };
     let mats = extras

@@ -6,16 +6,61 @@
 /// In-place unnormalized FWHT over a power-of-2-length slice.
 /// Matches `x @ hadamard(d)` for the Sylvester construction.
 ///
-/// §Perf: the first two stages are fused into one radix-4 pass over
-/// contiguous quads (no strided access), and the remaining stages use
-/// `split_at_mut` + slice zips so LLVM auto-vectorizes the butterflies —
-/// ~2.5× over the naive indexed loop on this hardware.
+/// §Perf: sizes ≤ 32 — the hot case for the paper's b=16/b=32 block
+/// configs — dispatch to fully-unrolled fixed-size kernels that run all
+/// stages out of a stack array (no bounds checks, no strided memory
+/// traffic between stages). Larger sizes fuse the first two stages into
+/// one radix-4 pass over contiguous quads, and the remaining stages use
+/// `split_at_mut` + slice zips so LLVM auto-vectorizes the butterflies.
+/// Both paths evaluate the identical butterfly addition tree, so results
+/// are bit-identical across the size cutover.
 pub fn fwht(x: &mut [f32]) {
+    match x.len() {
+        0 | 1 => {}
+        2 => fwht_fixed::<2>(x, 1.0),
+        4 => fwht_fixed::<4>(x, 1.0),
+        8 => fwht_fixed::<8>(x, 1.0),
+        16 => fwht_fixed::<16>(x, 1.0),
+        32 => fwht_fixed::<32>(x, 1.0),
+        _ => fwht_general(x),
+    }
+}
+
+/// Fixed-size FWHT: all stages over a stack array with constant trip
+/// counts (LLVM fully unrolls), the final store fused with `scale`.
+/// Same butterfly tree as [`fwht_general`] — bit-identical results
+/// (`v * 1.0` is exact, and the trailing normalization multiply matches
+/// the separate scaling loop the general path pairs with).
+#[inline]
+fn fwht_fixed<const N: usize>(x: &mut [f32], scale: f32) {
+    debug_assert_eq!(x.len(), N);
+    debug_assert!(N.is_power_of_two());
+    let mut t = [0.0f32; N];
+    t.copy_from_slice(x);
+    let mut h = 1;
+    while h < N {
+        let mut i = 0;
+        while i < N {
+            let mut j = i;
+            while j < i + h {
+                let a = t[j];
+                let b = t[j + h];
+                t[j] = a + b;
+                t[j + h] = a - b;
+                j += 1;
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+    for (o, v) in x.iter_mut().zip(t.iter()) {
+        *o = v * scale;
+    }
+}
+
+fn fwht_general(x: &mut [f32]) {
     let n = x.len();
     debug_assert!(n.is_power_of_two(), "fwht needs power-of-2 length");
-    if n == 1 {
-        return;
-    }
     let mut h = 1;
     if n >= 4 {
         // fused radix-4 first pass (stages h=1 and h=2)
@@ -59,13 +104,48 @@ pub fn fwht_normalized(x: &mut [f32]) {
 
 /// Apply the normalized *block* FWHT to a d-length row: each contiguous
 /// b-block rotated by H_b/√b. Requires b power of two.
+///
+/// Block sizes ≤ 32 run the fixed-size kernels with the 1/√b scale fused
+/// into the final store — one pass over the row instead of two.
 pub fn block_fwht_normalized(x: &mut [f32], b: usize) {
     debug_assert!(x.len() % b == 0);
+    if b <= 1 {
+        return;
+    }
     let s = 1.0 / (b as f32).sqrt();
-    for blk in x.chunks_exact_mut(b) {
-        fwht(blk);
-        for v in blk {
-            *v *= s;
+    match b {
+        2 => {
+            for blk in x.chunks_exact_mut(2) {
+                fwht_fixed::<2>(blk, s);
+            }
+        }
+        4 => {
+            for blk in x.chunks_exact_mut(4) {
+                fwht_fixed::<4>(blk, s);
+            }
+        }
+        8 => {
+            for blk in x.chunks_exact_mut(8) {
+                fwht_fixed::<8>(blk, s);
+            }
+        }
+        16 => {
+            for blk in x.chunks_exact_mut(16) {
+                fwht_fixed::<16>(blk, s);
+            }
+        }
+        32 => {
+            for blk in x.chunks_exact_mut(32) {
+                fwht_fixed::<32>(blk, s);
+            }
+        }
+        _ => {
+            for blk in x.chunks_exact_mut(b) {
+                fwht(blk);
+                for v in blk {
+                    *v *= s;
+                }
+            }
         }
     }
 }
@@ -118,6 +198,44 @@ mod tests {
             let w = Mat::from_vec(1, 16, want_blk.to_vec()).matmul(&h);
             for (g, ww) in blk.iter().zip(&w.data) {
                 assert!((g - ww).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_small_kernels_match_general_bitwise() {
+        // the ≤32 fast path must be bit-identical to the generic butterfly
+        // (same addition tree), so block-size dispatch can never change
+        // results
+        for n in [2usize, 4, 8, 16, 32] {
+            let x0 = rand_vec(n, 100 + n as u64);
+            let mut fast = x0.clone();
+            fwht(&mut fast);
+            let mut slow = x0.clone();
+            if n >= 4 {
+                fwht_general(&mut slow);
+            } else {
+                let (a, b) = (slow[0], slow[1]);
+                slow[0] = a + b;
+                slow[1] = a - b;
+            }
+            assert_eq!(fast, slow, "n={n}");
+        }
+    }
+
+    #[test]
+    fn block_fwht_small_blocks_match_dense() {
+        for b in [2usize, 4, 8, 16, 32] {
+            let d = b * 3;
+            let x0 = rand_vec(d, 200 + b as u64);
+            let mut got = x0.clone();
+            block_fwht_normalized(&mut got, b);
+            let h = normalized_hadamard(b).unwrap();
+            for (blk, want_blk) in got.chunks(b).zip(x0.chunks(b)) {
+                let w = Mat::from_vec(1, b, want_blk.to_vec()).matmul(&h);
+                for (g, ww) in blk.iter().zip(&w.data) {
+                    assert!((g - ww).abs() < 1e-4, "b={b}");
+                }
             }
         }
     }

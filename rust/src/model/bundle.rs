@@ -149,7 +149,7 @@ pub fn synthetic_weights(cfg: &ModelConfig, seed: u64) -> WeightSet {
         shapes.insert(name.clone(), if rank1 { vec![cols] } else { vec![rows, cols] });
         tensors.insert(name.clone(), m);
     }
-    WeightSet { names, tensors, shapes }
+    WeightSet { names, tensors, shapes, packed: BTreeMap::new() }
 }
 
 #[cfg(test)]

@@ -166,7 +166,7 @@ mod tests {
         add("l0.wd", f, d, false, &mut rng);
         add("nf", 1, d, true, &mut rng);
         add("wout", d, cfg.vocab, false, &mut rng);
-        WeightSet { names: cfg.weight_names(), tensors, shapes }
+        WeightSet { names: cfg.weight_names(), tensors, shapes, packed: Default::default() }
     }
 
     #[test]

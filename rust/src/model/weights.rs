@@ -2,13 +2,20 @@
 //! loaded from artifacts/weights/<model>/*.npy (written by train.py).
 //! 1-D tensors (norm scales) are stored as 1×n Mats but remember their
 //! original rank for literal construction.
+//!
+//! Quantized graphs additionally carry *packed* low-bit twins
+//! (`tensor::qmat::QuantMat`, u4x2/i8 payloads) for the per-layer linear
+//! sites, attached by the pipeline's rounding stage. The native backend
+//! serves straight from the packed form and drops the dequantized f32
+//! copies — the 4–8× weight-memory reduction of the paper's deployment
+//! story.
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
 use anyhow::{anyhow, Result};
 
-use crate::tensor::{npy, Mat};
+use crate::tensor::{npy, Mat, QuantMat};
 
 #[derive(Clone)]
 pub struct WeightSet {
@@ -17,6 +24,8 @@ pub struct WeightSet {
     pub tensors: BTreeMap<String, Mat>,
     /// original npy shapes (for literal reshape)
     pub shapes: BTreeMap<String, Vec<usize>>,
+    /// packed low-bit twins of quantized tensors (keyed like `tensors`)
+    pub packed: BTreeMap<String, QuantMat>,
 }
 
 impl WeightSet {
@@ -34,7 +43,7 @@ impl WeightSet {
             shapes.insert(n.clone(), raw.shape);
             tensors.insert(n.clone(), mat);
         }
-        Ok(WeightSet { names: names.to_vec(), tensors, shapes })
+        Ok(WeightSet { names: names.to_vec(), tensors, shapes, packed: BTreeMap::new() })
     }
 
     pub fn get(&self, name: &str) -> &Mat {
@@ -58,9 +67,42 @@ impl WeightSet {
         &self.shapes[name]
     }
 
+    /// Attach a packed low-bit twin for a quantized tensor.
+    pub fn set_packed(&mut self, name: &str, qm: QuantMat) {
+        assert!(self.tensors.contains_key(name), "unknown weight {name}");
+        self.packed.insert(name.to_string(), qm);
+    }
+
+    /// The packed twin of a tensor, if one was attached.
+    pub fn packed(&self, name: &str) -> Option<&QuantMat> {
+        self.packed.get(name)
+    }
+
+    /// Move a packed twin out (the native backend takes ownership and
+    /// drops its dense copy).
+    pub fn take_packed(&mut self, name: &str) -> Option<QuantMat> {
+        self.packed.remove(name)
+    }
+
+    /// Drop the dense f32 copy of a tensor whose packed twin serves in its
+    /// place — the memory-reduction half of the packed deployment path.
+    /// `get` on a dropped name panics, so callers only drop tensors they
+    /// will never read densely again.
+    pub fn drop_dense(&mut self, name: &str) {
+        self.tensors.remove(name);
+    }
+
     /// Total parameter count (sanity/reporting).
     pub fn param_count(&self) -> usize {
         self.tensors.values().map(|m| m.data.len()).sum()
+    }
+
+    /// Approximate bytes held by weight storage: dense f32 tensors plus
+    /// packed payloads (reporting/diagnostics).
+    pub fn weight_bytes(&self) -> usize {
+        let dense: usize = self.tensors.values().map(|m| m.data.len() * 4).sum();
+        let packed: usize = self.packed.values().map(|q| q.packed_bytes()).sum();
+        dense + packed
     }
 }
 
@@ -88,6 +130,24 @@ mod tests {
         assert_eq!(ws.get("nf").rows, 1);
         assert_eq!(ws.shape("nf"), &[8]);
         assert_eq!(ws.param_count(), 40);
+    }
+
+    #[test]
+    fn packed_twin_lifecycle() {
+        let dir = std::env::temp_dir().join("perq_ws_test3");
+        write_fake_weights(&dir, &[("w", vec![8, 4])]);
+        let mut ws = WeightSet::load(&dir, &["w".to_string()]).unwrap();
+        assert!(ws.packed("w").is_none());
+        let w = ws.get("w").clone();
+        let codec = crate::quant::WeightCodec::fit(crate::quant::Format::Int4, &w);
+        let qm = crate::tensor::QuantMat::from_codec(&codec.quantize_mat(&w), &codec).unwrap();
+        ws.set_packed("w", qm);
+        assert!(ws.packed("w").is_some());
+        assert!(ws.weight_bytes() > 8 * 4 * 4);
+        let taken = ws.take_packed("w").unwrap();
+        assert_eq!((taken.rows, taken.cols), (8, 4));
+        ws.drop_dense("w");
+        assert_eq!(ws.param_count(), 0);
     }
 
     #[test]

@@ -9,8 +9,10 @@ use crate::tensor::Mat;
 
 pub const EPS: f32 = 1e-8;
 
-/// INT-q asymmetric per-row fake-quant (Eq. 4).
-pub fn int_asym_row(row: &mut [f32], bits: u32) {
+/// Per-row (scale, zero) of the Eq. 4 asymmetric quantizer — the single
+/// definition shared by the fake-quant and code-emit paths, so the packed
+/// kernel's bit-exactness contract holds by construction.
+fn int_asym_params(row: &[f32], bits: u32) -> (f32, f32) {
     let levels = ((1u32 << bits) - 1) as f32;
     let (mut mn, mut mx) = (f32::INFINITY, f32::NEG_INFINITY);
     for &v in row.iter() {
@@ -18,10 +20,15 @@ pub fn int_asym_row(row: &mut [f32], bits: u32) {
         mx = mx.max(v);
     }
     let s = ((mx - mn) / levels).max(EPS);
-    let z = (mn / s).round();
+    (s, (mn / s).round())
+}
+
+/// INT-q asymmetric per-row fake-quant (Eq. 4).
+pub fn int_asym_row(row: &mut [f32], bits: u32) {
+    let levels = ((1u32 << bits) - 1) as f32;
+    let (s, z) = int_asym_params(row, bits);
     for v in row.iter_mut() {
-        let q = (*v / s).round() - z;
-        let q = q.clamp(0.0, levels);
+        let q = ((*v / s).round() - z).clamp(0.0, levels);
         *v = s * (q + z);
     }
 }
@@ -48,11 +55,31 @@ pub fn mxfp4_row(row: &mut [f32], group: usize) {
     }
 }
 
+/// Quantize one row to integer codes (Eq. 4) *without* materializing the
+/// fake-quant floats — the emit half of the packed-kernel path. Appends
+/// `row.len()` codes in `[0, 2^bits - 1]` to `codes` and returns the
+/// per-row `(scale, zero)` pair, with dequantization `s · (code + z)`.
+///
+/// Bit-matches [`int_asym_row`]: `(s, z)` come from the shared
+/// [`int_asym_params`] and the rounding expression is identical, so
+/// `s * (code + z)` reproduces the fake-quant value exactly.
+pub fn int_asym_emit(row: &[f32], bits: u32, codes: &mut Vec<u8>) -> (f32, f32) {
+    debug_assert!(bits <= 8, "codes are u8");
+    let levels = ((1u32 << bits) - 1) as f32;
+    let (s, z) = int_asym_params(row, bits);
+    for &v in row.iter() {
+        let q = ((v / s).round() - z).clamp(0.0, levels);
+        codes.push(q as u8);
+    }
+    (s, z)
+}
+
 /// Fake-quantize one activation row in place in the given format.
 pub fn act_quant_row(row: &mut [f32], format: Format) {
     match format {
         Format::None => {}
         Format::Int4 => int_asym_row(row, 4),
+        Format::Int8 => int_asym_row(row, 8),
         Format::Fp4 => fp4_row(row),
         Format::Mxfp4 => mxfp4_row(row, 32),
     }
@@ -141,8 +168,40 @@ mod tests {
     }
 
     #[test]
+    fn emit_matches_fake_quant_bitwise() {
+        // s·(code + z) must reproduce int_asym_row exactly — the packed
+        // GEMM's correctness rests on this identity
+        for bits in [4u32, 8] {
+            for seed in 0..8u64 {
+                let row = rand_row(96, 10 + seed, 2.5);
+                let mut fake = row.clone();
+                int_asym_row(&mut fake, bits);
+                let mut codes = Vec::new();
+                let (s, z) = int_asym_emit(&row, bits, &mut codes);
+                assert_eq!(codes.len(), row.len());
+                for (c, f) in codes.iter().zip(&fake) {
+                    let deq = s * (*c as f32 + z);
+                    assert_eq!(deq, *f, "bits={bits} seed={seed}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn emit_codes_in_range() {
+        let row = rand_row(64, 77, 50.0);
+        let mut codes = Vec::new();
+        int_asym_emit(&row, 4, &mut codes);
+        assert!(codes.iter().all(|&c| c <= 15));
+        codes.clear();
+        int_asym_emit(&row, 8, &mut codes);
+        // u8 range is enforced by construction; clamp keeps ≤ 255
+        assert_eq!(codes.len(), 64);
+    }
+
+    #[test]
     fn zero_rows_stay_zero_and_finite() {
-        for f in [Format::Int4, Format::Fp4, Format::Mxfp4] {
+        for f in [Format::Int4, Format::Int8, Format::Fp4, Format::Mxfp4] {
             let mut row = vec![0.0f32; 64];
             act_quant_row(&mut row, f);
             assert!(row.iter().all(|v| v.is_finite() && v.abs() < 1e-6));

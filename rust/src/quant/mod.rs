@@ -19,6 +19,9 @@ pub enum Format {
     /// INT4: asymmetric dynamic per-token activations, symmetric per-channel
     /// weights (Eq. 4).
     Int4,
+    /// INT8: the same Eq. 4 scheme at 8 bits — the W8A8 deployment point.
+    /// Native-backend only: no AOT artifact variant is lowered for it.
+    Int8,
     /// FP4 (e2m1, OCP): symmetric per-token / per-channel scales (Eq. 5).
     Fp4,
     /// MXFP4: e2m1 with power-of-2 scales per group of 32.
@@ -27,13 +30,15 @@ pub enum Format {
 
 impl Format {
     /// The runtime `fmt` scalar fed to the AOT artifacts
-    /// (0 none, 1 INT4, 2 FP4, 3 MXFP4 — the L2 `lax.switch` contract).
+    /// (0 none, 1 INT4, 2 FP4, 3 MXFP4 — the L2 `lax.switch` contract;
+    /// 4 INT8 is a native-backend extension with no lowered artifact).
     pub fn fmt_id(&self) -> i32 {
         match self {
             Format::None => 0,
             Format::Int4 => 1,
             Format::Fp4 => 2,
             Format::Mxfp4 => 3,
+            Format::Int8 => 4,
         }
     }
 
@@ -41,6 +46,7 @@ impl Format {
         match self {
             Format::None => "bf16",
             Format::Int4 => "int4",
+            Format::Int8 => "int8",
             Format::Fp4 => "fp4",
             Format::Mxfp4 => "mxfp4",
         }
@@ -50,8 +56,18 @@ impl Format {
         match s {
             "none" | "bf16" => Some(Format::None),
             "int4" => Some(Format::Int4),
+            "int8" => Some(Format::Int8),
             "fp4" => Some(Format::Fp4),
             "mxfp4" => Some(Format::Mxfp4),
+            _ => None,
+        }
+    }
+
+    /// Integer bit width for the INT formats (the packed-kernel cases).
+    pub fn int_bits(&self) -> Option<u32> {
+        match self {
+            Format::Int4 => Some(4),
+            Format::Int8 => Some(8),
             _ => None,
         }
     }
@@ -73,14 +89,25 @@ mod tests {
         assert_eq!(Format::Int4.fmt_id(), 1);
         assert_eq!(Format::Fp4.fmt_id(), 2);
         assert_eq!(Format::Mxfp4.fmt_id(), 3);
+        // native-only extension; must stay outside the artifact range 0..=3
+        assert_eq!(Format::Int8.fmt_id(), 4);
     }
 
     #[test]
     fn parse_roundtrip() {
-        for f in [Format::Int4, Format::Fp4, Format::Mxfp4] {
+        for f in [Format::Int4, Format::Int8, Format::Fp4, Format::Mxfp4] {
             assert_eq!(Format::parse(f.name()), Some(f));
         }
-        assert_eq!(Format::parse("int8"), None);
+        assert_eq!(Format::parse("int16"), None);
+    }
+
+    #[test]
+    fn int_bits_only_for_int_formats() {
+        assert_eq!(Format::Int4.int_bits(), Some(4));
+        assert_eq!(Format::Int8.int_bits(), Some(8));
+        assert_eq!(Format::Fp4.int_bits(), None);
+        assert_eq!(Format::Mxfp4.int_bits(), None);
+        assert_eq!(Format::None.int_bits(), None);
     }
 
     #[test]

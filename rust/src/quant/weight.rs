@@ -34,6 +34,29 @@ fn int_quant_val(v: f32, s: f32, bits: u32) -> f32 {
     s * q
 }
 
+/// Symmetric per-channel INT-q fit with the Brevitas-style MSE linear
+/// search (shared by the INT4 and INT8 formats).
+fn fit_int(w: &Mat, bits: u32) -> WeightCodec {
+    let qmax = ((1i64 << (bits - 1)) - 1) as f32;
+    let scales = (0..w.cols)
+        .map(|j| {
+            let absmax = (0..w.rows).fold(0.0f32, |m, i| m.max(w.at(i, j).abs()));
+            let base = (absmax / qmax).max(EPS);
+            let mut best = (f64::INFINITY, base);
+            for g in 0..MSE_GRID {
+                let frac = 0.35 + 0.65 * (g as f32 + 1.0) / MSE_GRID as f32;
+                let s = (absmax * frac / qmax).max(EPS);
+                let mse = col_mse_int(w, j, s, bits);
+                if mse < best.0 {
+                    best = (mse, s);
+                }
+            }
+            best.1
+        })
+        .collect();
+    WeightCodec::Int { bits, scales }
+}
+
 fn col_mse_int(w: &Mat, j: usize, s: f32, bits: u32) -> f64 {
     let mut acc = 0.0f64;
     for i in 0..w.rows {
@@ -60,27 +83,8 @@ impl WeightCodec {
     pub fn fit(format: Format, w: &Mat) -> WeightCodec {
         match format {
             Format::None => WeightCodec::None,
-            Format::Int4 => {
-                let bits = 4;
-                let qmax = 7.0f32;
-                let scales = (0..w.cols)
-                    .map(|j| {
-                        let absmax = (0..w.rows).fold(0.0f32, |m, i| m.max(w.at(i, j).abs()));
-                        let base = (absmax / qmax).max(EPS);
-                        let mut best = (f64::INFINITY, base);
-                        for g in 0..MSE_GRID {
-                            let frac = 0.35 + 0.65 * (g as f32 + 1.0) / MSE_GRID as f32;
-                            let s = (absmax * frac / qmax).max(EPS);
-                            let mse = col_mse_int(w, j, s, bits);
-                            if mse < best.0 {
-                                best = (mse, s);
-                            }
-                        }
-                        best.1
-                    })
-                    .collect();
-                WeightCodec::Int { bits, scales }
-            }
+            Format::Int4 => fit_int(w, 4),
+            Format::Int8 => fit_int(w, 8),
             Format::Fp4 => {
                 let scales = (0..w.cols)
                     .map(|j| {
@@ -131,6 +135,17 @@ impl WeightCodec {
                 let s = scales.at(i / group, j);
                 s * e2m1::quantize(v / s)
             }
+        }
+    }
+
+    /// The (bits, per-channel scales) of an integer codec — the inputs the
+    /// packed-kernel layer (`tensor::qmat::QuantMat`) needs to recover
+    /// integer codes from codec-quantized weights. `None` for the float
+    /// formats, which have no integer-GEMM representation.
+    pub fn int_params(&self) -> Option<(u32, &[f32])> {
+        match self {
+            WeightCodec::Int { bits, scales } => Some((*bits, scales)),
+            _ => None,
         }
     }
 
@@ -194,8 +209,22 @@ mod tests {
     }
 
     #[test]
+    fn int8_levels_bounded_and_tighter_than_int4() {
+        let w = rand_w(128, 6, 9);
+        let c8 = WeightCodec::fit(Format::Int8, &w);
+        let (bits, scales) = c8.int_params().unwrap();
+        assert_eq!(bits, 8);
+        assert_eq!(scales.len(), 6);
+        let e8 = c8.quantize_mat(&w).sub(&w).frob_norm();
+        let c4 = WeightCodec::fit(Format::Int4, &w);
+        let e4 = c4.quantize_mat(&w).sub(&w).frob_norm();
+        assert!(e8 < e4, "int8 ({e8}) must beat int4 ({e4})");
+        assert!(WeightCodec::fit(Format::Fp4, &w).int_params().is_none());
+    }
+
+    #[test]
     fn quantize_idempotent() {
-        for f in [Format::Int4, Format::Fp4, Format::Mxfp4] {
+        for f in [Format::Int4, Format::Int8, Format::Fp4, Format::Mxfp4] {
             let w = rand_w(64, 6, 3);
             let codec = WeightCodec::fit(f, &w);
             let q1 = codec.quantize_mat(&w);

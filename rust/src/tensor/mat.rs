@@ -102,30 +102,33 @@ impl Mat {
     }
 
     /// `self @ other` into `out`, with the rows of `self` partitioned
-    /// across worker threads (deterministic: each thread owns a disjoint
-    /// slice of `out`, so the result is bit-identical to `matmul_into`).
-    /// Falls back to the single-threaded kernel for small problems.
+    /// across the persistent `util::pool` workers (deterministic: each
+    /// task owns a disjoint slice of `out`, so the result is bit-identical
+    /// to `matmul_into`). Falls back to the single-threaded kernel for
+    /// small problems — per-call thread spawning is gone entirely, so the
+    /// parallel threshold no longer has to amortize OS thread creation.
     pub fn par_matmul_into(&self, other: &Mat, out: &mut Mat) {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         assert_eq!((out.rows, out.cols), (self.rows, other.cols), "matmul output shape");
         let (m, k, n) = (self.rows, self.cols, other.cols);
-        let workers = crate::util::pool::default_workers();
-        // ~2 MFLOP per thread minimum, or it's not worth the spawns
+        let workers = crate::util::pool::global().parallelism();
+        // ~2 MFLOP minimum, or the fan-out costs more than it saves
         if workers <= 1 || m * k * n < 1 << 21 || m < 2 * workers {
             self.matmul_into(other, out);
             return;
         }
         out.data.fill(0.0);
         let chunk_rows = (m + workers - 1) / workers;
-        std::thread::scope(|scope| {
-            let a_chunks = self.data.chunks(chunk_rows * k);
-            let o_chunks = out.data.chunks_mut(chunk_rows * n);
-            for (a, o) in a_chunks.zip(o_chunks) {
-                let b = &other.data;
-                scope.spawn(move || {
-                    matmul_kernel(a, a.len() / k, k, b, n, o);
-                });
-            }
+        let n_chunks = (m + chunk_rows - 1) / chunk_rows;
+        let a = &self.data;
+        let b = &other.data;
+        let out_ptr = crate::util::pool::SendPtr(out.data.as_mut_ptr());
+        crate::util::pool::global().run(n_chunks, &move |ci: usize| {
+            let r0 = ci * chunk_rows;
+            let rows = chunk_rows.min(m - r0);
+            // SAFETY: chunk ci exclusively owns output rows r0..r0+rows.
+            let o = unsafe { std::slice::from_raw_parts_mut(out_ptr.get().add(r0 * n), rows * n) };
+            matmul_kernel(&a[r0 * k..(r0 + rows) * k], rows, k, b, n, o);
         });
     }
 

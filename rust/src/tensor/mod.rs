@@ -1,9 +1,12 @@
-//! Minimal dense-tensor substrate: row-major `Mat` (f32), f64 linear
-//! algebra for rounding solvers, and NPY v1.0 interchange with the python
-//! build path. Built from scratch — no external linear-algebra crates.
+//! Minimal dense-tensor substrate: row-major `Mat` (f32), packed low-bit
+//! `QuantMat` + integer GEMM for the serving path, f64 linear algebra for
+//! rounding solvers, and NPY v1.0 interchange with the python build path.
+//! Built from scratch — no external linear-algebra crates.
 
 pub mod linalg;
 pub mod mat;
 pub mod npy;
+pub mod qmat;
 
 pub use mat::Mat;
+pub use qmat::{qgemm_into, QuantActs, QuantMat};

@@ -1,0 +1,525 @@
+//! Packed low-bit weight matrices + the integer GEMM serving kernel.
+//!
+//! The fake-quant execution path materializes dequantized f32 weights and
+//! pays full f32 memory bandwidth per matmul — the INT4 deployment story
+//! (merged permutations + block rotations, paper §Fig 7) only wins if the
+//! weights *stay* low-bit. This module is that path:
+//!
+//! * [`QuantMat`] — a (d_in, d_out) weight packed once at load from a
+//!   fitted [`WeightCodec`]: u4x2 nibbles (INT4) or i8 bytes (INT8),
+//!   row-major, plus per-output-channel scales and integer column sums.
+//! * [`QuantActs`] — per-token activation rows quantized to u8 codes with
+//!   per-row (scale, zero) by `quant::act::int_asym_emit`, emitted
+//!   straight from the (already rotated) f32 row — no fake-quant floats.
+//! * [`qgemm_into`] — the integer GEMM: i32 accumulation over u8×i8
+//!   products, per-channel dequantization fused into the store. For the
+//!   asymmetric activation scheme `a = s·(u + z)` and symmetric weights
+//!   `w = t_j·q`, the dot product factors as
+//!   `Σ a·w = s·t_j·(Σ u·q + z·Σ q)` — the `Σ q` column sums are
+//!   precomputed at pack time, so the zero-point correction is one fused
+//!   multiply-add per output.
+//!
+//! The kernel is cache-blocked over token rows (MB at a time) so each
+//! unpacked weight row is reused MB times, and row blocks are fanned out
+//! across the persistent `util::pool` workers. The INT4×INT4 case runs in
+//! i16 lanes (8-wide `pmullw`/`paddw` on baseline SSE2, 16-wide on AVX2)
+//! over KC-length k-chunks widened into i32 between chunks — this is
+//! where the ≥2× over the 4-wide f32 path comes from. Overflow: INT4
+//! products are ≤ 120 so a 256-chunk stays within i16 (see `KC`); the
+//! generic i32 path is exact for d_in < 2^16 (|u|≤255 · |q|≤128 products)
+//! — far above any model dimension here.
+
+use std::cell::RefCell;
+
+use crate::quant::act;
+use crate::quant::WeightCodec;
+use crate::tensor::Mat;
+use crate::util::pool::{self, SendPtr};
+
+/// A packed integer weight matrix: (rows = d_in, cols = d_out), row-major
+/// payload, per-output-channel symmetric scales.
+#[derive(Clone)]
+pub struct QuantMat {
+    pub rows: usize,
+    pub cols: usize,
+    /// 4 (u4x2 nibble pairs, code stored offset-by-8) or 8 (i8 bytes)
+    pub bits: u32,
+    payload: Vec<u8>,
+    /// per output-channel scale t_j (dequant: w = t_j · q)
+    pub scales: Vec<f32>,
+    /// per output-channel Σ_k q — the zero-point correction term
+    colsum: Vec<i32>,
+}
+
+impl std::fmt::Debug for QuantMat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "QuantMat({}x{}, int{})", self.rows, self.cols, self.bits)
+    }
+}
+
+impl QuantMat {
+    /// Pack a (codec-quantized or raw) f32 weight with the given
+    /// per-channel scales. Codes are `round(v / t_j)` clamped to the
+    /// signed `bits`-wide range — the same rounding as
+    /// `WeightCodec::quantize_entry`, so packing codec output is lossless.
+    pub fn pack_int(w: &Mat, scales: &[f32], bits: u32) -> QuantMat {
+        assert!(bits == 4 || bits == 8, "packed kernels support int4/int8");
+        assert_eq!(scales.len(), w.cols, "one scale per output channel");
+        let (k, n) = (w.rows, w.cols);
+        let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+        let qmin = -qmax - 1.0;
+        let mut colsum = vec![0i32; n];
+        let payload = if bits == 4 {
+            let stride = (n + 1) / 2;
+            let mut p = vec![0u8; k * stride];
+            for i in 0..k {
+                for j in 0..n {
+                    let q = (w.at(i, j) / scales[j]).round().clamp(qmin, qmax) as i32;
+                    colsum[j] += q;
+                    let nib = (q + 8) as u8;
+                    let byte = &mut p[i * stride + j / 2];
+                    *byte |= if j % 2 == 0 { nib } else { nib << 4 };
+                }
+            }
+            p
+        } else {
+            let mut p = vec![0u8; k * n];
+            for i in 0..k {
+                for j in 0..n {
+                    let q = (w.at(i, j) / scales[j]).round().clamp(qmin, qmax) as i32;
+                    colsum[j] += q;
+                    p[i * n + j] = (q as i8) as u8;
+                }
+            }
+            p
+        };
+        QuantMat { rows: k, cols: n, bits, payload, scales: scales.to_vec(), colsum }
+    }
+
+    /// Pack through a fitted codec. `None` for codecs with no integer-GEMM
+    /// representation (FP4 / MXFP4 / no-op).
+    pub fn from_codec(w: &Mat, codec: &WeightCodec) -> Option<QuantMat> {
+        let (bits, scales) = codec.int_params()?;
+        if bits != 4 && bits != 8 {
+            return None;
+        }
+        Some(QuantMat::pack_int(w, scales, bits))
+    }
+
+    /// The signed integer code at (i, j) (tests/diagnostics).
+    pub fn code(&self, i: usize, j: usize) -> i32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        if self.bits == 4 {
+            let stride = (self.cols + 1) / 2;
+            let byte = self.payload[i * stride + j / 2];
+            let nib = if j % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+            nib as i32 - 8
+        } else {
+            (self.payload[i * self.cols + j] as i8) as i32
+        }
+    }
+
+    /// Materialize the dequantized f32 matrix — bit-identical to
+    /// `WeightCodec::quantize_mat` output for the packing codec (both
+    /// compute the f32 product `t_j · q`).
+    pub fn dequantize(&self) -> Mat {
+        Mat::from_fn(self.rows, self.cols, |i, j| self.scales[j] * self.code(i, j) as f32)
+    }
+
+    /// Payload bytes actually held (the weight-memory footprint).
+    pub fn packed_bytes(&self) -> usize {
+        self.payload.len() + 4 * (self.scales.len() + self.colsum.len())
+    }
+
+    /// Bytes the dequantized f32 copy would occupy.
+    pub fn dense_bytes(&self) -> usize {
+        self.rows * self.cols * 4
+    }
+}
+
+/// Per-token activation rows quantized to integer codes: `rows × cols` u8
+/// codes plus per-row (scale, zero). Buffers persist across `reset` calls,
+/// so steady-state serving emits with zero allocation.
+pub struct QuantActs {
+    pub rows: usize,
+    pub cols: usize,
+    pub bits: u32,
+    pub codes: Vec<u8>,
+    pub scales: Vec<f32>,
+    pub zeros: Vec<f32>,
+}
+
+impl QuantActs {
+    pub fn new(bits: u32) -> QuantActs {
+        assert!(bits == 4 || bits == 8, "activation codes are u8, 4- or 8-bit");
+        QuantActs { rows: 0, cols: 0, bits, codes: Vec::new(), scales: Vec::new(), zeros: Vec::new() }
+    }
+
+    /// Clear for a new batch of `cols`-wide rows (capacity retained).
+    pub fn reset(&mut self, cols: usize) {
+        self.rows = 0;
+        self.cols = cols;
+        self.codes.clear();
+        self.scales.clear();
+        self.zeros.clear();
+    }
+
+    /// Quantize one (already rotated) activation row straight into the
+    /// staging buffer — the emit half of the fused rotate→quant→qgemm
+    /// sequence.
+    pub fn push_row(&mut self, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.cols, "row width mismatch");
+        let (s, z) = act::int_asym_emit(row, self.bits, &mut self.codes);
+        self.scales.push(s);
+        self.zeros.push(z);
+        self.rows += 1;
+    }
+
+    /// Reset and emit every row of an activation matrix — the staging
+    /// counterpart of `act::act_quant_mat` on the packed path.
+    pub fn fill_from_mat(&mut self, m: &Mat) {
+        self.reset(m.cols);
+        for r in 0..m.rows {
+            self.push_row(m.row(r));
+        }
+    }
+
+    /// Quantize a whole activation matrix (convenience for tests/benches).
+    pub fn from_mat(m: &Mat, bits: u32) -> QuantActs {
+        let mut qa = QuantActs::new(bits);
+        qa.fill_from_mat(m);
+        qa
+    }
+}
+
+/// Token rows per cache block: each unpacked weight row is reused this
+/// many times, amortizing nibble decode to <10% of the MAC work, while
+/// the accumulator tile (MB × d_out) stays L2-resident.
+const MB: usize = 16;
+
+/// k-chunk length for the INT4 i16 fast path. With |u| ≤ 15 and |q| ≤ 8
+/// every product is ≤ 120 in magnitude, so 256 accumulations stay below
+/// the i16 limit (256 · 120 = 30 720 < 32 767); the i16 tile is widened
+/// into the i32 accumulator between chunks. i16 lanes are the reason the
+/// packed kernel beats f32: `pmullw`/`paddw` are 8-wide even on baseline
+/// SSE2 (16-wide on AVX2), where 32-bit integer multiplies are not.
+const KC: usize = 256;
+
+thread_local! {
+    /// Per-worker kernel scratch (i32 accumulator tile, i16 chunk
+    /// accumulator, unpacked i16 weight row) — reused across calls so
+    /// steady-state scoring does not allocate.
+    static QG_SCRATCH: RefCell<(Vec<i32>, Vec<i16>, Vec<i16>)> =
+        const { RefCell::new((Vec::new(), Vec::new(), Vec::new())) };
+}
+
+/// `acts @ w` into a preallocated (acts.rows, w.cols) f32 output: integer
+/// GEMM with i32 accumulation and per-channel dequantization fused into
+/// the store. Row blocks are distributed across the persistent worker
+/// pool; each block owns a disjoint slice of `out`, so the result is
+/// deterministic.
+pub fn qgemm_into(acts: &QuantActs, w: &QuantMat, out: &mut Mat) {
+    assert_eq!(acts.cols, w.rows, "qgemm shape mismatch");
+    assert_eq!((out.rows, out.cols), (acts.rows, w.cols), "qgemm output shape");
+    let m = acts.rows;
+    if m == 0 {
+        return;
+    }
+    let (k, n) = (w.rows, w.cols);
+    let blocks = (m + MB - 1) / MB;
+    let out_ptr = SendPtr(out.data.as_mut_ptr());
+    let task = move |bi: usize| {
+        let r0 = bi * MB;
+        let mb = MB.min(m - r0);
+        QG_SCRATCH.with(|cell| {
+            let mut guard = cell.borrow_mut();
+            let scratch = &mut *guard;
+            let (acc32, acc16, wbuf) = (&mut scratch.0, &mut scratch.1, &mut scratch.2);
+            // SAFETY: block bi exclusively owns output rows r0..r0+mb.
+            let o = unsafe { std::slice::from_raw_parts_mut(out_ptr.get().add(r0 * n), mb * n) };
+            qgemm_block(acts, w, r0, mb, acc32, acc16, wbuf, o);
+        });
+    };
+    // same threshold as par_matmul_into: below ~2 M MACs the fan-out
+    // costs more than it saves
+    if blocks == 1 || m * k * n < (1 << 21) {
+        for bi in 0..blocks {
+            task(bi);
+        }
+    } else {
+        pool::global().run(blocks, &task);
+    }
+}
+
+/// Allocating convenience wrapper over [`qgemm_into`].
+pub fn qgemm(acts: &QuantActs, w: &QuantMat) -> Mat {
+    let mut out = Mat::zeros(acts.rows, w.cols);
+    qgemm_into(acts, w, &mut out);
+    out
+}
+
+/// One MB-row block: accumulate `acc[mi][j] += u[mi][kk] · q[kk][j]` with
+/// the weight row unpacked once per kk, then store with fused dequant
+/// `out = s·t_j·(acc + z·colsum_j)`.
+///
+/// Three accumulation strategies, chosen by payload/code width:
+/// * INT4 × INT4 codes — i16 lanes in KC-length k-chunks, widened into
+///   i32 between chunks (provably overflow-free; see [`KC`]);
+/// * INT4 weights with wider activation codes — straight i32 lanes;
+/// * INT8 weights — straight i32 lanes over the raw i8 payload row.
+fn qgemm_block(acts: &QuantActs, w: &QuantMat, r0: usize, mb: usize,
+               acc32: &mut Vec<i32>, acc16: &mut Vec<i16>, wbuf: &mut Vec<i16>,
+               out: &mut [f32]) {
+    let (k, n) = (w.rows, w.cols);
+    acc32.clear();
+    acc32.resize(mb * n, 0);
+    if w.bits == 4 && acts.bits == 4 {
+        let stride = (n + 1) / 2;
+        wbuf.resize(n, 0);
+        acc16.clear();
+        acc16.resize(mb * n, 0);
+        let mut c0 = 0;
+        while c0 < k {
+            let cend = (c0 + KC).min(k);
+            for kk in c0..cend {
+                unpack_row4(&w.payload[kk * stride..(kk + 1) * stride], n, wbuf);
+                for mi in 0..mb {
+                    let u = acts.codes[(r0 + mi) * k + kk] as i16;
+                    if u == 0 {
+                        continue;
+                    }
+                    let arow = &mut acc16[mi * n..(mi + 1) * n];
+                    for (a, &wv) in arow.iter_mut().zip(wbuf.iter()) {
+                        *a += u * wv;
+                    }
+                }
+            }
+            // widen the chunk into the i32 accumulator and reset
+            for (a32, a16) in acc32.iter_mut().zip(acc16.iter_mut()) {
+                *a32 += *a16 as i32;
+                *a16 = 0;
+            }
+            c0 = cend;
+        }
+    } else if w.bits == 4 {
+        let stride = (n + 1) / 2;
+        wbuf.resize(n, 0);
+        for kk in 0..k {
+            unpack_row4(&w.payload[kk * stride..(kk + 1) * stride], n, wbuf);
+            for mi in 0..mb {
+                let u = acts.codes[(r0 + mi) * k + kk] as i32;
+                if u == 0 {
+                    continue;
+                }
+                let arow = &mut acc32[mi * n..(mi + 1) * n];
+                for (a, &wv) in arow.iter_mut().zip(wbuf.iter()) {
+                    *a += u * wv as i32;
+                }
+            }
+        }
+    } else {
+        for kk in 0..k {
+            let prow = &w.payload[kk * n..(kk + 1) * n];
+            // SAFETY: i8 and u8 have identical layout; codes were stored
+            // as i8 bit patterns.
+            let wrow = unsafe { std::slice::from_raw_parts(prow.as_ptr() as *const i8, n) };
+            for mi in 0..mb {
+                let u = acts.codes[(r0 + mi) * k + kk] as i32;
+                if u == 0 {
+                    continue;
+                }
+                let arow = &mut acc32[mi * n..(mi + 1) * n];
+                for (a, &wv) in arow.iter_mut().zip(wrow.iter()) {
+                    *a += u * wv as i32;
+                }
+            }
+        }
+    }
+    for mi in 0..mb {
+        let r = r0 + mi;
+        let (sx, z) = (acts.scales[r], acts.zeros[r]);
+        let arow = &acc32[mi * n..(mi + 1) * n];
+        let orow = &mut out[mi * n..(mi + 1) * n];
+        for j in 0..n {
+            orow[j] = sx * w.scales[j] * (arow[j] as f32 + z * w.colsum[j] as f32);
+        }
+    }
+}
+
+/// Unpack one nibble-packed weight row (offset-binary, +8) into i16 codes.
+#[inline]
+fn unpack_row4(prow: &[u8], n: usize, wbuf: &mut [i16]) {
+    for jj in 0..n / 2 {
+        let b = prow[jj];
+        wbuf[2 * jj] = (b & 0x0F) as i16 - 8;
+        wbuf[2 * jj + 1] = (b >> 4) as i16 - 8;
+    }
+    if n % 2 == 1 {
+        wbuf[n - 1] = (prow[n / 2] & 0x0F) as i16 - 8;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{act as actq, Format};
+
+    fn rand_mat(r: usize, c: usize, seed: u64, scale: f32) -> Mat {
+        let mut rng = crate::data::rng::Rng::new(seed);
+        Mat::from_fn(r, c, |_, _| rng.next_normal() as f32 * scale)
+    }
+
+    /// The fake-quant f32 reference: quantized activations (fake) × codec-
+    /// quantized weights through a naive f32 matmul.
+    fn reference(x: &Mat, qw: &Mat, bits: u32) -> Mat {
+        let mut xq = x.clone();
+        for r in 0..xq.rows {
+            actq::int_asym_row(xq.row_mut(r), bits);
+        }
+        let mut out = Mat::zeros(x.rows, qw.cols);
+        for i in 0..x.rows {
+            for j in 0..qw.cols {
+                let mut acc = 0.0f32;
+                for kk in 0..x.cols {
+                    acc += xq.at(i, kk) * qw.at(kk, j);
+                }
+                *out.at_mut(i, j) = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn pack_roundtrip_bit_exact() {
+        for (fmt, bits) in [(Format::Int4, 4u32), (Format::Int8, 8)] {
+            let w = rand_mat(48, 9, 1, 0.2); // odd cols exercise the nibble tail
+            let codec = WeightCodec::fit(fmt, &w);
+            let qw = codec.quantize_mat(&w);
+            let packed = QuantMat::from_codec(&qw, &codec).unwrap();
+            assert_eq!(packed.bits, bits);
+            assert_eq!(packed.dequantize().data, qw.data, "{fmt:?}");
+        }
+    }
+
+    #[test]
+    fn packed_bytes_shrink() {
+        let w = rand_mat(128, 64, 2, 0.1);
+        let codec = WeightCodec::fit(Format::Int4, &w);
+        let packed = QuantMat::from_codec(&w, &codec).unwrap();
+        // ~8× for int4 (plus per-channel metadata)
+        assert!(packed.packed_bytes() * 6 < packed.dense_bytes());
+    }
+
+    #[test]
+    fn qgemm_matches_fake_quant_reference() {
+        for (fmt, bits) in [(Format::Int4, 4u32), (Format::Int8, 8)] {
+            for seed in 0..4u64 {
+                let (m, k, n) = (33, 64, 17);
+                let x = rand_mat(m, k, 10 + seed, 1.0);
+                let w = rand_mat(k, n, 20 + seed, 0.3);
+                let codec = WeightCodec::fit(fmt, &w);
+                let qw = codec.quantize_mat(&w);
+                let packed = QuantMat::from_codec(&qw, &codec).unwrap();
+                let acts = QuantActs::from_mat(&x, bits);
+                let got = qgemm(&acts, &packed);
+                let want = reference(&x, &qw, bits);
+                // same rounding; only the accumulation order differs
+                let tol = 1e-4 * (1.0 + want.abs_max());
+                for (g, ww) in got.data.iter().zip(&want.data) {
+                    assert!((g - ww).abs() <= tol, "{fmt:?} seed={seed}: {g} vs {ww}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn qgemm_into_deterministic_across_block_counts() {
+        // large enough to cross the parallel threshold: pool fan-out must
+        // not change results
+        let (m, k, n) = (70, 256, 160); // m·k·n > 2^21 → pool fan-out
+        let x = rand_mat(m, k, 5, 1.0);
+        let w = rand_mat(k, n, 6, 0.2);
+        let codec = WeightCodec::fit(Format::Int4, &w);
+        let packed = QuantMat::from_codec(&codec.quantize_mat(&w), &codec).unwrap();
+        let acts = QuantActs::from_mat(&x, 4);
+        let a = qgemm(&acts, &packed);
+        let b = qgemm(&acts, &packed);
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn i16_chunk_widening_exact_at_extremes() {
+        // k > KC with extremal codes: every INT4 product is -120 and each
+        // 256-chunk sums to -30720 — the documented i16 bound. The result
+        // must be the exact integer answer.
+        let (m, k, n) = (2usize, 600, 3);
+        let w = Mat::from_fn(k, n, |_, _| -8.0);
+        let packed = QuantMat::pack_int(&w, &vec![1.0; n], 4);
+        let mut acts = QuantActs::new(4);
+        acts.rows = m;
+        acts.cols = k;
+        acts.codes = vec![15u8; m * k];
+        acts.scales = vec![1.0; m];
+        acts.zeros = vec![0.0; m];
+        let got = qgemm(&acts, &packed);
+        for v in &got.data {
+            assert_eq!(*v, (15 * -8 * 600) as f32);
+        }
+    }
+
+    #[test]
+    fn mixed_width_codes_use_exact_i32_path() {
+        // int8 activation codes against int4 weights must route around the
+        // i16 fast path (its overflow bound assumes 4-bit codes)
+        let (m, k, n) = (3usize, 300, 4);
+        let w = Mat::from_fn(k, n, |_, _| -8.0);
+        let packed = QuantMat::pack_int(&w, &vec![1.0; n], 4);
+        let mut acts = QuantActs::new(8);
+        acts.rows = m;
+        acts.cols = k;
+        acts.codes = vec![255u8; m * k];
+        acts.scales = vec![1.0; m];
+        acts.zeros = vec![0.0; m];
+        let got = qgemm(&acts, &packed);
+        for v in &got.data {
+            assert_eq!(*v, (255 * -8 * 300) as f32);
+        }
+    }
+
+    #[test]
+    fn quant_acts_reset_reuses_buffers() {
+        let x = rand_mat(8, 32, 7, 1.0);
+        let mut qa = QuantActs::new(4);
+        qa.reset(32);
+        for r in 0..8 {
+            qa.push_row(x.row(r));
+        }
+        assert_eq!((qa.rows, qa.codes.len()), (8, 256));
+        let cap = qa.codes.capacity();
+        qa.reset(32);
+        for r in 0..8 {
+            qa.push_row(x.row(r));
+        }
+        assert_eq!(qa.codes.capacity(), cap, "reset must retain capacity");
+    }
+
+    #[test]
+    fn zero_point_correction_handles_shifted_rows() {
+        // rows with a large positive offset stress the z·colsum term
+        let (m, k, n) = (5, 32, 7);
+        let mut x = rand_mat(m, k, 8, 0.5);
+        for v in &mut x.data {
+            *v += 40.0;
+        }
+        let w = rand_mat(k, n, 9, 0.3);
+        let codec = WeightCodec::fit(Format::Int8, &w);
+        let qw = codec.quantize_mat(&w);
+        let packed = QuantMat::from_codec(&qw, &codec).unwrap();
+        let got = qgemm(&QuantActs::from_mat(&x, 8), &packed);
+        let want = reference(&x, &qw, 8);
+        let tol = 1e-4 * (1.0 + want.abs_max());
+        for (g, ww) in got.data.iter().zip(&want.data) {
+            assert!((g - ww).abs() <= tol, "{g} vs {ww}");
+        }
+    }
+}

@@ -1,9 +1,22 @@
-//! Scoped work-queue thread pool for the per-layer rounding jobs.
-//! (tokio is unavailable offline; the coordinator's parallelism needs are
-//! CPU-bound fan-out/fan-in, which scoped threads express directly.)
+//! Thread-pool and buffer-pool substrate for the hot paths.
+//!
+//! * [`parallel_map`] — scoped fan-out/fan-in for the coarse per-layer
+//!   rounding jobs (caller picks the worker count per call).
+//! * [`WorkerPool`] / [`global`] — a *persistent* worker pool for the
+//!   fine-grained serving kernels (`Mat::par_matmul_into`,
+//!   `tensor::qmat::qgemm_into`). Spawning OS threads per matmul costs
+//!   tens of microseconds — comparable to the kernel itself at serving
+//!   shapes — so the serving path keeps one set of workers parked on a
+//!   condvar for the lifetime of the process.
+//! * [`BufPool`] — bounded f32 scratch-buffer recycling for per-layer
+//!   activation buffers.
+//!
+//! (tokio/rayon are unavailable offline; the needs here are CPU-bound
+//! fan-out/fan-in, which condvar-parked threads express directly.)
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Run `f(i)` for every i in 0..n across `workers` threads; results are
 /// returned in index order. Panics in jobs propagate.
@@ -29,18 +42,268 @@ pub fn parallel_map<T: Send>(n: usize, workers: usize, f: impl Fn(usize) -> T + 
         .collect()
 }
 
+// ---------------------------------------------------------------------
+// Persistent worker pool
+// ---------------------------------------------------------------------
+
+/// One submitted batch of indexed tasks. `f` is the caller's closure with
+/// its lifetime transmuted to `'static`; this is sound because the
+/// submitter blocks in [`WorkerPool::run`] until `done == total`, and
+/// workers only call it for indices they claimed before that point.
+struct Batch {
+    f: &'static (dyn Fn(usize) + Sync),
+    next: AtomicUsize,
+    total: usize,
+    panicked: AtomicBool,
+    done: Mutex<usize>,
+    done_cv: Condvar,
+}
+
+struct Slot {
+    epoch: u64,
+    batch: Option<Arc<Batch>>,
+    /// set by `Drop` — workers exit their loop instead of re-parking
+    shutdown: bool,
+}
+
+struct Shared {
+    slot: Mutex<Slot>,
+    work_cv: Condvar,
+}
+
+thread_local! {
+    /// True on pool worker threads — nested `run` calls execute inline
+    /// instead of deadlocking on the (busy) pool.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Persistent work-stealing-free worker pool: one batch at a time, indexed
+/// tasks claimed via an atomic counter, submitter participates. Used by
+/// the serving kernels through [`global`].
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    /// threads parked in the pool (the submitter adds one more at run time)
+    spawned: usize,
+    /// serializes batches; `try_lock` failure → run inline (never blocks)
+    submit: Mutex<()>,
+    /// joined on drop so non-global pools release their threads
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// A pool with `parallelism` total lanes (spawns `parallelism - 1`
+    /// threads; the submitting thread is the final lane).
+    pub fn new(parallelism: usize) -> WorkerPool {
+        let spawned = parallelism.max(1) - 1;
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(Slot { epoch: 0, batch: None, shutdown: false }),
+            work_cv: Condvar::new(),
+        });
+        let handles = (0..spawned)
+            .map(|_| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name("perq-worker".into())
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        WorkerPool { shared, spawned, submit: Mutex::new(()), handles }
+    }
+
+    /// Total parallel lanes (spawned workers + the submitting thread).
+    pub fn parallelism(&self) -> usize {
+        self.spawned + 1
+    }
+
+    /// Run `f(0..total)` across the pool. Blocks until every task has
+    /// completed. Reentrant calls (from inside a task) and contended calls
+    /// (another batch in flight) degrade to inline serial execution, so
+    /// `run` can never deadlock.
+    pub fn run(&self, total: usize, f: &(dyn Fn(usize) + Sync)) {
+        if total == 0 {
+            return;
+        }
+        if total == 1 || self.spawned == 0 || IN_POOL.with(|c| c.get()) {
+            for i in 0..total {
+                f(i);
+            }
+            return;
+        }
+        let guard = match self.submit.try_lock() {
+            Ok(g) => g,
+            // a previous batch panicked during submission — the pool
+            // itself is intact, so recover the lock rather than silently
+            // degrading every future call to serial execution
+            Err(std::sync::TryLockError::Poisoned(p)) => p.into_inner(),
+            Err(std::sync::TryLockError::WouldBlock) => {
+                for i in 0..total {
+                    f(i);
+                }
+                return;
+            }
+        };
+        // SAFETY: erase the closure lifetime to 'static. Sound because
+        // this frame outlives every call — we block on `done == total`
+        // below before returning, and no worker touches `f` afterwards.
+        let f_static: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
+        let batch = Arc::new(Batch {
+            f: f_static,
+            next: AtomicUsize::new(0),
+            total,
+            panicked: AtomicBool::new(false),
+            done: Mutex::new(0),
+            done_cv: Condvar::new(),
+        });
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            slot.epoch += 1;
+            slot.batch = Some(Arc::clone(&batch));
+            self.shared.work_cv.notify_all();
+        }
+        // participate, then wait for the stragglers
+        run_tasks(&batch);
+        let mut done = batch.done.lock().unwrap();
+        while *done < total {
+            done = batch.done_cv.wait(done).unwrap();
+        }
+        drop(done);
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            slot.batch = None;
+        }
+        // release the submit lock *before* propagating a task panic so the
+        // mutex is never poisoned and later batches still run in parallel
+        drop(guard);
+        if batch.panicked.load(Ordering::SeqCst) {
+            panic!("worker pool task panicked");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    /// Signal workers to exit so dropping a non-global pool does not leak
+    /// its threads. (The [`global`] pool lives in a static and is never
+    /// dropped.)
+    fn drop(&mut self) {
+        {
+            let mut slot = match self.shared.slot.lock() {
+                Ok(s) => s,
+                Err(p) => p.into_inner(),
+            };
+            slot.shutdown = true;
+            slot.epoch += 1;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    IN_POOL.with(|c| c.set(true));
+    let mut seen = 0u64;
+    loop {
+        let batch = {
+            let mut slot = shared.slot.lock().unwrap();
+            loop {
+                if slot.shutdown {
+                    return;
+                }
+                if slot.epoch != seen {
+                    seen = slot.epoch;
+                    if let Some(b) = slot.batch.clone() {
+                        break b;
+                    }
+                }
+                slot = shared.work_cv.wait(slot).unwrap();
+            }
+        };
+        run_tasks(&batch);
+    }
+}
+
+fn run_tasks(batch: &Batch) {
+    loop {
+        let i = batch.next.fetch_add(1, Ordering::Relaxed);
+        if i >= batch.total {
+            break;
+        }
+        // the submitter blocks until `done == total`, so the transmuted
+        // closure is alive for every claimed index
+        let f = batch.f;
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i)));
+        if r.is_err() {
+            batch.panicked.store(true, Ordering::SeqCst);
+        }
+        let mut done = batch.done.lock().unwrap();
+        *done += 1;
+        if *done >= batch.total {
+            batch.done_cv.notify_all();
+        }
+    }
+}
+
+/// The process-wide serving pool, spawned lazily on first use with
+/// [`default_workers`] lanes.
+pub fn global() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(|| WorkerPool::new(default_workers()))
+}
+
+/// A raw pointer that may cross thread boundaries — used by the kernels to
+/// hand each pool task its disjoint output slice. Callers must guarantee
+/// disjointness.
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(pub *mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    #[inline]
+    pub fn get(self) -> *mut T {
+        self.0
+    }
+}
+
+// ---------------------------------------------------------------------
+// Bounded buffer pool
+// ---------------------------------------------------------------------
+
 /// Reusable f32 scratch-buffer pool — the native execution backend's
 /// per-layer activation buffers cycle through here so steady-state scoring
 /// performs no heap allocation. Single-owner (no locking): each backend
 /// instance keeps its own pool.
-#[derive(Default)]
+///
+/// Retention is bounded on two axes (buffer count and total pooled
+/// elements), so serving a stream of varying batch shapes cannot grow the
+/// pool without limit: once full, the smallest parked buffers are evicted
+/// first (large buffers are the ones worth keeping).
 pub struct BufPool {
     free: Vec<Vec<f32>>,
+    /// total parked capacity, in f32 elements
+    held: usize,
+    max_buffers: usize,
+    max_elems: usize,
+}
+
+impl Default for BufPool {
+    fn default() -> Self {
+        BufPool::new()
+    }
 }
 
 impl BufPool {
+    /// Default bounds: 64 buffers / 32 Mi elements (128 MiB of f32).
     pub fn new() -> BufPool {
-        BufPool::default()
+        BufPool::with_limits(64, 32 << 20)
+    }
+
+    /// A pool retaining at most `max_buffers` buffers and `max_elems`
+    /// total f32 elements.
+    pub fn with_limits(max_buffers: usize, max_elems: usize) -> BufPool {
+        BufPool { free: Vec::new(), held: 0, max_buffers, max_elems }
     }
 
     /// Take a buffer of exactly `len` elements, zero-filled. Reuses the
@@ -55,6 +318,7 @@ impl BufPool {
         match best {
             Some(i) => {
                 let mut b = self.free.swap_remove(i);
+                self.held -= b.capacity();
                 b.clear();
                 b.resize(len, 0.0);
                 b
@@ -63,16 +327,46 @@ impl BufPool {
         }
     }
 
-    /// Return a buffer for reuse.
+    /// Return a buffer for reuse. Buffers that would push the pool past
+    /// its bounds evict smaller parked buffers; a buffer larger than the
+    /// whole element budget is dropped outright.
     pub fn put(&mut self, v: Vec<f32>) {
-        if v.capacity() > 0 && self.free.len() < 64 {
-            self.free.push(v);
+        let cap = v.capacity();
+        if cap == 0 || cap > self.max_elems {
+            return;
         }
+        // evict smallest-first until the newcomer fits both bounds
+        while !self.free.is_empty()
+            && (self.free.len() >= self.max_buffers || self.held + cap > self.max_elems)
+        {
+            let smallest = self
+                .free
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, b)| b.capacity())
+                .map(|(i, _)| i)
+                .unwrap();
+            if self.free[smallest].capacity() >= cap {
+                // everything parked is at least as useful as the newcomer
+                return;
+            }
+            self.held -= self.free.swap_remove(smallest).capacity();
+        }
+        if self.free.len() >= self.max_buffers || self.held + cap > self.max_elems {
+            return;
+        }
+        self.held += cap;
+        self.free.push(v);
     }
 
     /// Number of parked buffers (diagnostics/tests).
     pub fn idle(&self) -> usize {
         self.free.len()
+    }
+
+    /// Total parked capacity in f32 elements (diagnostics/tests).
+    pub fn held_elems(&self) -> usize {
+        self.held
     }
 }
 
@@ -125,6 +419,43 @@ mod tests {
     }
 
     #[test]
+    fn buf_pool_bounds_buffer_count() {
+        let mut pool = BufPool::with_limits(4, 1 << 20);
+        for len in [16usize, 32, 64, 128, 256, 512] {
+            pool.put(vec![0.0; len]);
+        }
+        assert!(pool.idle() <= 4);
+        // smallest-first eviction keeps the big (most reusable) buffers
+        let caps: Vec<usize> = pool.free.iter().map(|b| b.capacity()).collect();
+        assert!(caps.iter().all(|&c| c >= 64), "small buffers evicted first: {caps:?}");
+    }
+
+    #[test]
+    fn buf_pool_bounds_total_elems() {
+        let mut pool = BufPool::with_limits(64, 1000);
+        for _ in 0..10 {
+            pool.put(vec![0.0; 400]);
+        }
+        assert!(pool.held_elems() <= 1000, "held {}", pool.held_elems());
+        // an over-budget buffer is never parked
+        pool.put(vec![0.0; 4000]);
+        assert!(pool.held_elems() <= 1000);
+    }
+
+    #[test]
+    fn buf_pool_varying_shapes_stay_bounded() {
+        // the regression this bound exists for: a stream of distinct batch
+        // shapes must not grow the pool monotonically
+        let mut pool = BufPool::new();
+        for i in 1..200usize {
+            let b = pool.take(i * 1024);
+            pool.put(b);
+        }
+        assert!(pool.idle() <= 64);
+        assert!(pool.held_elems() <= 32 << 20);
+    }
+
+    #[test]
     fn heavy_jobs_all_complete() {
         let out = parallel_map(32, 4, |i| {
             let mut acc = 0u64;
@@ -134,5 +465,60 @@ mod tests {
             acc
         });
         assert_eq!(out.len(), 32);
+    }
+
+    #[test]
+    fn worker_pool_runs_all_tasks() {
+        let pool = WorkerPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..100).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(100, &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn worker_pool_nested_runs_inline() {
+        let pool = WorkerPool::new(4);
+        let count = AtomicUsize::new(0);
+        pool.run(8, &|_| {
+            // nested submission from a task must not deadlock
+            super::global().run(4, &|_| {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn worker_pool_reusable_across_batches() {
+        let pool = WorkerPool::new(3);
+        for round in 1..20usize {
+            let sum = AtomicUsize::new(0);
+            pool.run(round, &|i| {
+                sum.fetch_add(i + 1, Ordering::Relaxed);
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), round * (round + 1) / 2);
+        }
+    }
+
+    #[test]
+    fn worker_pool_drop_joins_workers() {
+        // drop must signal shutdown and join — no hang, no leaked threads
+        let pool = WorkerPool::new(3);
+        let n = AtomicUsize::new(0);
+        pool.run(10, &|_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 10);
+        drop(pool); // joins; a hang here fails the test via timeout
+    }
+
+    #[test]
+    fn global_pool_singleton() {
+        let a = global() as *const WorkerPool;
+        let b = global() as *const WorkerPool;
+        assert_eq!(a, b);
+        assert!(global().parallelism() >= 1);
     }
 }

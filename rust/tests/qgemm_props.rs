@@ -1,0 +1,176 @@
+//! Bit-exactness property suite for the packed low-bit kernel path
+//! (seed-sweep style, util::propcheck): the INT4/INT8 packed pipeline —
+//! `QuantActs` code emission + `QuantMat` packing + `qgemm_into` — must
+//! match the `WeightCodec::quantize_mat` fake-quant f32 reference. Both
+//! paths share the quantizer rounding bit-for-bit (same scales, zeros and
+//! integer codes), so the only permitted divergence is f32 accumulation
+//! order: the reference sums rounded f32 products sequentially, the packed
+//! kernel sums integer products exactly and dequantizes once. The suite
+//! sweeps R̃3 block sizes {8, 16, 32} and ±MassDiff permutations, mirroring
+//! the wd-site dataflow (permute → block-rotate → act-quant → matmul).
+
+use perq::hadamard::BlockRotator;
+use perq::permute::{CalibStats, PermKind};
+use perq::quant::{act, Format, WeightCodec};
+use perq::tensor::{qmat, Mat, QuantActs, QuantMat};
+use perq::util::propcheck::{check, Gen};
+
+const BLOCKS: [usize; 3] = [8, 16, 32];
+
+fn rand_mat(g: &mut Gen, r: usize, c: usize, scale: f32) -> Mat {
+    Mat::from_fn(r, c, |_, _| g.f32_normal(scale))
+}
+
+/// Naive f32 matmul — the independent reference accumulator.
+fn naive_matmul(x: &Mat, w: &Mat) -> Mat {
+    assert_eq!(x.cols, w.rows);
+    let mut out = Mat::zeros(x.rows, w.cols);
+    for i in 0..x.rows {
+        for j in 0..w.cols {
+            let mut acc = 0.0f32;
+            for k in 0..x.cols {
+                acc += x.at(i, k) * w.at(k, j);
+            }
+            *out.at_mut(i, j) = acc;
+        }
+    }
+    out
+}
+
+/// Accumulation-order tolerance: both paths compute sums of ~d terms whose
+/// magnitudes the reference matrix bounds; k·ε·Σ|terms| is the classic
+/// sequential-summation error envelope, padded generously.
+fn order_tol(want: &Mat, k: usize) -> f32 {
+    1e-6 * (k as f32) * (1.0 + want.abs_max())
+}
+
+fn assert_close(got: &Mat, want: &Mat, tol: f32, label: &str) {
+    assert_eq!((got.rows, got.cols), (want.rows, want.cols), "{label}: shape");
+    for (g, w) in got.data.iter().zip(&want.data) {
+        assert!(
+            (g - w).abs() <= tol,
+            "{label}: {g} vs {w} (tol {tol})"
+        );
+    }
+}
+
+/// One wd-site case: activations permuted, block-rotated, act-quantized;
+/// weights permuted (rows), codec-quantized. Returns
+/// (packed result, fake-quant reference result, d_in).
+fn wd_site_case(g: &mut Gen, format: Format, bits: u32, block: usize,
+                with_perm: bool) -> (Mat, Mat, usize) {
+    let d = 96; // divides 8, 16, 32
+    let (m, n) = (g.usize_in(3, 24), g.usize_in(2, 12));
+    let x = rand_mat(g, m, d, 1.2);
+    let w = rand_mat(g, d, n, 0.3);
+    let (x, w) = if with_perm {
+        // MassDiff permutation calibrated on synthetic activation stats —
+        // columns of x and rows of w move together (Remark 4.2)
+        let rows: Vec<Vec<f32>> = (0..5).map(|_| g.vec_normal(d, 1.5)).collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let stats = CalibStats::from_activations(&refs);
+        let perm = PermKind::MassDiff.calibrate(&stats, block, g.seed);
+        (x.permute_cols(&perm), w.permute_rows(&perm))
+    } else {
+        (x, w)
+    };
+    // rotate every activation row blockwise (the online R̃3)
+    let rot = BlockRotator::hadamard(block).unwrap();
+    let mut xr = x.clone();
+    rot.apply_mat(&mut xr);
+    // codec-quantized weights, shared by both paths
+    let codec = WeightCodec::fit(format, &w);
+    let qw = codec.quantize_mat(&w);
+    // packed path: emit codes from the rotated rows, integer GEMM
+    let packed = QuantMat::from_codec(&qw, &codec).unwrap();
+    let mut acts = QuantActs::new(bits);
+    acts.reset(d);
+    for r in 0..xr.rows {
+        acts.push_row(xr.row(r));
+    }
+    let mut got = Mat::zeros(m, n);
+    qmat::qgemm_into(&acts, &packed, &mut got);
+    // reference path: fake-quant f32 activations × fake-quant weights
+    let mut xq = xr;
+    for r in 0..xq.rows {
+        act::act_quant_row(xq.row_mut(r), format);
+    }
+    let want = naive_matmul(&xq, &qw);
+    (got, want, d)
+}
+
+#[test]
+fn prop_packed_qgemm_matches_fake_quant_across_blocks() {
+    check(12, |g| {
+        let (format, bits) = *g.choice(&[(Format::Int4, 4u32), (Format::Int8, 8)]);
+        let with_perm = g.bool();
+        for block in BLOCKS {
+            let (got, want, d) = wd_site_case(g, format, bits, block, with_perm);
+            assert_close(
+                &got, &want, order_tol(&want, d),
+                &format!("b={block} fmt={} perm={with_perm}", format.name()),
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_emitted_codes_dequantize_to_fake_quant_exactly() {
+    // the rounding identity underneath the tolerance above: codes + (s, z)
+    // reproduce the fake-quant floats bit-for-bit, for both widths
+    check(20, |g| {
+        let d = *g.choice(&[16usize, 64, 96]);
+        let bits = *g.choice(&[4u32, 8]);
+        let scale = *g.choice(&[0.1f32, 1.0, 25.0]);
+        let row = g.vec_normal(d, scale);
+        let mut fake = row.clone();
+        act::int_asym_row(&mut fake, bits);
+        let mut codes = Vec::new();
+        let (s, z) = act::int_asym_emit(&row, bits, &mut codes);
+        for (c, f) in codes.iter().zip(&fake) {
+            assert_eq!(s * (*c as f32 + z), *f, "bits={bits}");
+        }
+    });
+}
+
+#[test]
+fn prop_pack_unpack_roundtrip_is_lossless() {
+    // packing codec-quantized weights and dequantizing must restore the
+    // exact fake-quant matrix (both compute the identical t_j·q product)
+    check(20, |g| {
+        let (r, c) = (g.usize_in(8, 64), g.usize_in(1, 9)); // odd c → nibble tail
+        let format = *g.choice(&[Format::Int4, Format::Int8]);
+        let w = rand_mat(g, r, c, 0.4);
+        let codec = WeightCodec::fit(format, &w);
+        let qw = codec.quantize_mat(&w);
+        let packed = QuantMat::from_codec(&qw, &codec).unwrap();
+        assert_eq!(packed.dequantize().data, qw.data, "{format:?}");
+        // packing is idempotent through the codec: re-deriving codes from
+        // the dequantized matrix lands on the same payload
+        let repacked = QuantMat::from_codec(&packed.dequantize(), &codec).unwrap();
+        assert_eq!(repacked.dequantize().data, qw.data);
+    });
+}
+
+#[test]
+fn prop_qgemm_parallel_fanout_deterministic() {
+    // shapes large enough to cross the pool threshold: fan-out across the
+    // persistent workers must be bit-identical run over run
+    let mut g = Gen::new(0xFA57);
+    let (m, k, n) = (64, 256, 160);
+    let x = rand_mat(&mut g, m, k, 1.0);
+    let w = rand_mat(&mut g, k, n, 0.2);
+    let codec = WeightCodec::fit(Format::Int4, &w);
+    let packed = QuantMat::from_codec(&codec.quantize_mat(&w), &codec).unwrap();
+    let mut acts = QuantActs::new(4);
+    acts.reset(k);
+    for r in 0..m {
+        acts.push_row(x.row(r));
+    }
+    let mut a = Mat::zeros(m, n);
+    let mut b = Mat::zeros(m, n);
+    qmat::qgemm_into(&acts, &packed, &mut a);
+    qmat::qgemm_into(&acts, &packed, &mut b);
+    assert_eq!(a.data, b.data);
+    assert!(a.data.iter().all(|v| v.is_finite()));
+}
