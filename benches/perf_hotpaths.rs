@@ -79,6 +79,15 @@ fn main() -> anyhow::Result<()> {
         println!("\nSKIP qgemm/fwht bench: {e:#}");
     }
 
+    // SIMD kernel layer: forced-scalar vs runtime-dispatched, per kernel;
+    // appends BENCH_simd.json (ISSUE 3 acceptance: INT4 qgemm ≥ 2×).
+    // Setup failures skip (bench convention), but a PERQ_SIMD_GATE
+    // violation must fail the binary — that's the CI acceptance gate.
+    match bench_simd() {
+        Ok(int4_speedup) => enforce_simd_gate(int4_speedup)?,
+        Err(e) => println!("\nSKIP simd bench: {e:#}"),
+    }
+
     // === backend scoring: native vs pjrt =============================
     // Native scoring needs zero artifacts (synthetic weights stand in when
     // the trained tree is absent); the pjrt column appears when the `pjrt`
@@ -201,6 +210,160 @@ fn bench_qgemm_and_fwht() -> anyhow::Result<()> {
     }
     println!("  trajectory: {}", traj.display());
     Ok(())
+}
+
+/// Time `f` under a forced dispatch level, restoring auto-dispatch after.
+fn timed_at(level: Option<perq::tensor::simd::SimdLevel>, min_ms: u64, mut f: impl FnMut()) -> f64 {
+    perq::tensor::simd::set_override(level);
+    let t = time("simd", 3, min_ms, &mut f);
+    perq::tensor::simd::set_override(None);
+    t.mean_ns
+}
+
+/// `PERQ_SIMD_GATE=<min>` turns the printed INT4-qgemm acceptance line
+/// into a hard failure: the bench exits nonzero when the dispatched
+/// speedup lands below `<min>`× scalar. CI sets 2.0 on the native-cpu
+/// leg (ISSUE 3 acceptance). Skipped when dispatch resolved to scalar —
+/// a scalar-only host has nothing to gate.
+fn enforce_simd_gate(int4_speedup: f64) -> anyhow::Result<()> {
+    let Ok(raw) = std::env::var("PERQ_SIMD_GATE") else {
+        return Ok(());
+    };
+    // a set-but-unparsable gate must fail loudly, not silently un-gate CI
+    let min: f64 = raw
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("PERQ_SIMD_GATE={raw:?} is not a number"))?;
+    if perq::tensor::simd::active() == perq::tensor::simd::SimdLevel::Scalar {
+        println!("  (PERQ_SIMD_GATE skipped: dispatch resolved to scalar)");
+        return Ok(());
+    }
+    anyhow::ensure!(
+        int4_speedup >= min,
+        "SIMD gate failed: int4 qgemm dispatched/scalar = {int4_speedup:.2}x, required ≥ {min}x"
+    );
+    println!("  PERQ_SIMD_GATE passed: {int4_speedup:.2}x ≥ {min}x");
+    Ok(())
+}
+
+/// Per-kernel forced-scalar vs runtime-dispatched timings for the SIMD
+/// layer (`tensor::simd`): the packed integer GEMM (emit + qgemm, the
+/// full per-site serving path), the small-block FWHT, u8 activation
+/// staging, and rmsnorm. One BENCH_simd.json entry per kernel with the
+/// dispatched level recorded, so the trajectory shows which ISA the CI
+/// host ran. Returns the INT4 qgemm speedup for [`enforce_simd_gate`].
+fn bench_simd() -> anyhow::Result<f64> {
+    use perq::backend::native::rmsnorm_rows;
+    use perq::tensor::simd::{self, SimdLevel};
+
+    let root = match RepoContext::discover() {
+        Ok(c) => c.root,
+        Err(_) => std::env::current_dir()?,
+    };
+    let traj = root.join("BENCH_simd.json");
+    let stamp = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let level = simd::active().name();
+    println!("\n=== SIMD kernel layer: forced scalar vs dispatched ({level}) ===");
+
+    let report = |kernel: &str, ns_scalar: f64, ns_simd: f64| {
+        let speedup = ns_scalar / ns_simd;
+        println!(
+            "  {kernel:<14} scalar {:9.3} ms   {level:<6} {:9.3} ms   speedup {speedup:5.2}x",
+            ns_scalar / 1e6,
+            ns_simd / 1e6
+        );
+        let entry = format!(
+            "{{\"bench\": \"simd\", \"ts\": {stamp}, \"kernel\": \"{kernel}\", \
+             \"level\": \"{level}\", \"ms_scalar\": {:.4}, \"ms_dispatched\": {:.4}, \
+             \"speedup\": {speedup:.3}}}",
+            ns_scalar / 1e6,
+            ns_simd / 1e6
+        );
+        if let Err(e) = append_trajectory(&traj, &entry) {
+            println!("  (could not write {traj:?}: {e})");
+        }
+        speedup
+    };
+
+    // packed qgemm (emit + integer GEMM — the per-site serving path)
+    let (m, k, n) = (256usize, 1024, 1024);
+    let x = rand_mat(m, k, 61);
+    let mut int4_speedup = 1.0;
+    for fmt in [Format::Int4, Format::Int8] {
+        let bits = fmt.int_bits().unwrap();
+        let w = rand_mat(k, n, 62 + bits as u64);
+        let codec = WeightCodec::fit(fmt, &w);
+        let packed = QuantMat::from_codec(&codec.quantize_mat(&w), &codec)
+            .ok_or_else(|| anyhow::anyhow!("int codec must pack"))?;
+        let mut acts = QuantActs::new(bits);
+        let mut out = Mat::zeros(m, n);
+        let mut run = || {
+            acts.reset(k);
+            for r in 0..m {
+                acts.push_row(x.row(r));
+            }
+            qmat::qgemm_into(&acts, &packed, &mut out);
+        };
+        let ns_scalar = timed_at(Some(SimdLevel::Scalar), 600, &mut run);
+        let ns_simd = timed_at(None, 600, &mut run);
+        let sp = report(&format!("qgemm_{}", fmt.name()), ns_scalar, ns_simd);
+        if fmt == Format::Int4 {
+            int4_speedup = sp;
+        }
+    }
+
+    // blockwise FWHT at the paper's hot block sizes
+    for b in [16usize, 32] {
+        let rot = BlockRotator::hadamard(b)?;
+        let mut m1024 = rand_mat(1024, 1024, 70 + b as u64);
+        let ns_scalar = timed_at(Some(SimdLevel::Scalar), 300, || rot.apply_mat(&mut m1024));
+        let ns_simd = timed_at(None, 300, || rot.apply_mat(&mut m1024));
+        report(&format!("fwht_b{b}"), ns_scalar, ns_simd);
+    }
+
+    // non-pow-2 plan (butterfly stages + normalization dispatch)
+    {
+        let rot = BlockRotator::hadamard(448)?;
+        let mut m448 = rand_mat(256, 448, 75);
+        let ns_scalar = timed_at(Some(SimdLevel::Scalar), 300, || rot.apply_mat(&mut m448));
+        let ns_simd = timed_at(None, 300, || rot.apply_mat(&mut m448));
+        report("fwht_np2_448", ns_scalar, ns_simd);
+    }
+
+    // u8 activation staging (min/max scan + quantize + pack)
+    {
+        let xa = rand_mat(1024, 4096, 80);
+        let mut acts = QuantActs::new(4);
+        let mut run = || {
+            acts.reset(4096);
+            for r in 0..1024 {
+                acts.push_row(xa.row(r));
+            }
+        };
+        let ns_scalar = timed_at(Some(SimdLevel::Scalar), 300, &mut run);
+        let ns_simd = timed_at(None, 300, &mut run);
+        report("act_emit", ns_scalar, ns_simd);
+    }
+
+    // rmsnorm epilogue
+    {
+        let xr = rand_mat(1024, 1024, 81);
+        let scale: Vec<f32> = (0..1024).map(|i| 1.0 + (i % 7) as f32 * 0.1).collect();
+        let mut out = Mat::zeros(1024, 1024);
+        let ns_scalar =
+            timed_at(Some(SimdLevel::Scalar), 300, || rmsnorm_rows(&xr, &scale, &mut out));
+        let ns_simd = timed_at(None, 300, || rmsnorm_rows(&xr, &scale, &mut out));
+        report("rmsnorm", ns_scalar, ns_simd);
+    }
+
+    println!(
+        "  acceptance: int4 qgemm dispatched/scalar = {int4_speedup:.2}x (target ≥ 2x on AVX2)"
+    );
+    println!("  trajectory: {}", traj.display());
+    Ok(int4_speedup)
 }
 
 /// Score identical quantized weights through every available backend and

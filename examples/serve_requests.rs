@@ -5,13 +5,19 @@
 //! analytic rotation op counts for context.
 //!
 //!     cargo run --release --example serve_requests [model] [n_requests] \
-//!         [--backend native|pjrt|auto]
+//!         [--backend native|pjrt|auto] [--threads N] [--workers N]
 //!
 //! With `--backend native` (the default when no HLO artifact tree is
 //! found) the whole path — calibration capture, PTQ, serving — runs in
 //! pure Rust with zero PJRT/XLA or Python-artifact dependency; if even the
 //! trained weights are missing, deterministic synthetic weights are used
 //! so the serving path can be exercised anywhere.
+//!
+//! `--threads N` (or `PERQ_THREADS`) sizes the kernel worker pool;
+//! `--workers N` (or `PERQ_SERVER_WORKERS`, default 1) runs that many
+//! backend replicas on the shared request queue — NLLs are identical
+//! regardless of the replica count (per-slot-independent scoring);
+//! `PERQ_SIMD={auto,avx2,neon,scalar}` overrides kernel dispatch.
 
 use std::time::{Duration, Instant};
 
@@ -38,6 +44,18 @@ fn main() -> Result<()> {
         .get(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(64);
+    // pool sizing must precede the first kernel call (lazy global spawn)
+    if let Some(n) = args.get("threads").and_then(|s| s.parse::<usize>().ok()) {
+        perq::util::pool::set_default_parallelism(n);
+    }
+    let num_workers = args
+        .get("workers")
+        .and_then(|s| s.parse::<usize>().ok())
+        .or_else(|| {
+            std::env::var("PERQ_SERVER_WORKERS").ok().and_then(|s| s.parse().ok())
+        })
+        .unwrap_or(1)
+        .max(1);
 
     // Resolve artifacts + backend. Native serving needs neither the XLA
     // toolchain nor `make artifacts`; pjrt needs both.
@@ -82,9 +100,9 @@ fn main() -> Result<()> {
         spec.calib_seqs = 4;
         let qm = Pipeline::new(spec).quantize_with_engine(&bundle, &engine)?;
 
-        // bring up the server (backend constructed on the batcher thread;
+        // bring up the server (one backend replica per worker thread;
         // pjrt keeps device-resident weights, native keeps pooled scratch)
-        let server = start_server(&engine, &bundle, &qm)?;
+        let server = start_server(&engine, &bundle, &qm, num_workers)?;
 
         // request stream: random windows of the test split, random gaps
         let toks = token_stream(Source::Wiki, Split::Test, 1 << 15);
@@ -111,10 +129,13 @@ fn main() -> Result<()> {
         let p = |q: f64| lats[((lats.len() - 1) as f64 * q) as usize];
         let (served, batches, exec_s) = server.stats();
         let padded = server.padded_slots();
+        // server-side histogram percentiles (fixed √2 buckets, atomics)
+        let (sp50, sp95, sp99) = server.latency_percentiles();
         let label = if block == cfg.d_ffn { "full".to_string() } else { format!("b={block}") };
         println!(
             "{model} {label:<6} | {n_requests} reqs in {wall:.2}s = {:.0} tok/s | \
-             lat p50 {:.0}ms p95 {:.0}ms | {batches} batches ({:.1} req/batch, {padded} padded) | \
+             lat p50 {:.0}ms p95 {:.0}ms | hist p50/p95/p99 {sp50:.1}/{sp95:.1}/{sp99:.1}ms | \
+             {batches} batches ({:.1} req/batch, {padded} padded) | \
              exec {:.2}s | ppl {:.2} | rot ops/token {}",
             n_requests as f64 * t as f64 / wall,
             p(0.5),
@@ -124,6 +145,11 @@ fn main() -> Result<()> {
             (nll / n_requests as f64).exp(),
             perq::util::bench::fmt_count(opcount::block_ops(cfg.d_ffn, block)),
         );
+        if server.num_workers() > 1 {
+            for (w, (ws, wb, wx)) in server.per_worker_stats().into_iter().enumerate() {
+                println!("    worker {w}: {ws} served / {wb} batches / exec {wx:.2}s");
+            }
+        }
         server.shutdown();
     }
     println!(
@@ -135,28 +161,29 @@ fn main() -> Result<()> {
     Ok(())
 }
 
-fn start_server(engine: &Engine, bundle: &ModelBundle, qm: &QuantizedModel) -> Result<InferenceServer> {
+fn start_server(engine: &Engine, bundle: &ModelBundle, qm: &QuantizedModel,
+                num_workers: usize) -> Result<InferenceServer> {
     let wait = Duration::from_millis(20);
     match engine.backend() {
         BackendKind::Native => {
-            InferenceServer::start_native(&bundle.cfg, &qm.ws, &qm.graph, wait)
+            InferenceServer::start_native(&bundle.cfg, &qm.ws, &qm.graph, wait, num_workers)
         }
-        BackendKind::Pjrt => start_pjrt_server(engine, bundle, qm, wait),
+        BackendKind::Pjrt => start_pjrt_server(engine, bundle, qm, wait, num_workers),
     }
 }
 
 #[cfg(feature = "pjrt")]
 fn start_pjrt_server(engine: &Engine, bundle: &ModelBundle, qm: &QuantizedModel,
-                     wait: Duration) -> Result<InferenceServer> {
+                     wait: Duration, num_workers: usize) -> Result<InferenceServer> {
     let artifact = engine
         .ctx()
         .model_dir(&bundle.name)
         .join(format!("{}.hlo.txt", qm.eval_tag));
-    InferenceServer::start(artifact, &bundle.cfg, &qm.ws, qm.extras.clone(), wait)
+    InferenceServer::start(artifact, &bundle.cfg, &qm.ws, qm.extras.clone(), wait, num_workers)
 }
 
 #[cfg(not(feature = "pjrt"))]
 fn start_pjrt_server(_engine: &Engine, _bundle: &ModelBundle, _qm: &QuantizedModel,
-                     _wait: Duration) -> Result<InferenceServer> {
+                     _wait: Duration, _num_workers: usize) -> Result<InferenceServer> {
     anyhow::bail!("the pjrt backend is not compiled in (rebuild with `--features pjrt`)")
 }

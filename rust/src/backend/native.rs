@@ -19,7 +19,11 @@
 //!   keep the fake-quant f32 path through `tensor::Mat`;
 //! * matmuls fan out across the persistent `util::pool` worker pool;
 //! * per-layer activation buffers are recycled through a bounded
-//!   `util::pool::BufPool`, so steady-state scoring does no allocation.
+//!   `util::pool::BufPool`, so steady-state scoring does no allocation;
+//! * every inner loop — integer GEMM, f32 matmul, FWHT, activation
+//!   staging, rmsnorm/swish — runs through the runtime-dispatched
+//!   `tensor::simd` kernel layer (AVX2 / NEON / scalar, `PERQ_SIMD`
+//!   override; see ARCHITECTURE.md "Kernel dispatch").
 //!
 //! Numerics note: rmsnorm/softmax accumulate in f32 like the XLA CPU
 //! lowering; parity with the artifact path is asserted to 1e-4 by the
@@ -38,7 +42,7 @@ use crate::hadamard::BlockRotator;
 use crate::model::config::ModelConfig;
 use crate::model::weights::WeightSet;
 use crate::quant::{act, Format};
-use crate::tensor::{qmat, Mat, QuantActs, QuantMat};
+use crate::tensor::{qmat, simd, Mat, QuantActs, QuantMat};
 use crate::util::pool::BufPool;
 
 /// The packed per-layer linear weights of an INT4/INT8 merged graph.
@@ -224,9 +228,9 @@ impl NativeBackend {
                 h.par_matmul_into(self.ws.get(&lname("wg")), &mut g);
                 h.par_matmul_into(self.ws.get(&lname("wu")), &mut u);
             }
-            for (gv, &uv) in g.data.iter_mut().zip(&u.data) {
-                *gv = swish(*gv) * uv;
-            }
+            // SwiGLU gate through the SIMD layer (vector arms use a
+            // polynomial exp — ≈2 ulp of libm, deterministic per level)
+            simd::swish_mul(&mut g.data, &u.data);
             if let Some(c) = caps.as_deref_mut() {
                 c.down_in[l] = g.clone();
             }
@@ -303,35 +307,26 @@ impl ExecBackend for NativeBackend {
 }
 
 /// Row-wise RMSNorm: out[r] = x[r] * rsqrt(mean(x[r]²) + 1e-6) * scale.
-/// Matches `model.rmsnorm` (f32 accumulation, eps inside the sqrt).
+/// Matches `model.rmsnorm` (f32 accumulation, eps inside the sqrt). The
+/// power sum and the normalize-store run through the SIMD layer; the
+/// lane-parallel sum reassociates the reduction (deterministic per
+/// dispatch level, within the 1e-4 parity budget), while the store is
+/// elementwise and bit-identical.
 pub fn rmsnorm_rows(x: &Mat, scale: &[f32], out: &mut Mat) {
     debug_assert_eq!((x.rows, x.cols), (out.rows, out.cols));
     debug_assert_eq!(scale.len(), x.cols);
     let d = x.cols;
     for r in 0..x.rows {
         let xr = x.row(r);
-        let mut ss = 0.0f32;
-        for &xv in xr {
-            ss += xv * xv;
-        }
+        let ss = simd::sum_squares(xr);
         let inv = 1.0 / (ss / d as f32 + 1e-6).sqrt();
-        let or = out.row_mut(r);
-        for c in 0..d {
-            or[c] = xr[c] * inv * scale[c];
-        }
+        simd::mul_scale_store(xr, inv, scale, out.row_mut(r));
     }
-}
-
-#[inline]
-fn swish(x: f32) -> f32 {
-    x / (1.0 + (-x).exp())
 }
 
 fn add_assign(x: &mut [f32], y: &[f32]) {
     debug_assert_eq!(x.len(), y.len());
-    for (a, b) in x.iter_mut().zip(y) {
-        *a += b;
-    }
+    simd::add_assign_f32(x, y);
 }
 
 /// Multi-head causal SDPA over `n_seqs` independent windows of length `t`:

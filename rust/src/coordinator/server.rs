@@ -10,18 +10,25 @@
 //! Design (vLLM-router-like, scaled to this testbed):
 //!   * clients submit `ScoreRequest`s (token windows) and receive logits
 //!     scores through a oneshot channel;
-//!   * a batcher thread drains the queue into fixed-size backend batches
-//!     (the forward graph has static (B, T)), padding the tail with the
-//!     first request and waiting at most `max_wait` for a full batch;
-//!     padded slots are *execution filler only* — they are excluded from
-//!     `ServerStats.served`, from per-request NLL, and from the reported
-//!     batch occupancy, and counted separately in `ServerStats.padded`;
-//!   * the backend is constructed *on the batcher thread* via a `Send`
-//!     factory, because PJRT handles are `Rc`-based and thread-confined;
-//!     weights live as device buffers there (uploaded once), so the
-//!     request path copies only tokens — the §Perf win over literal
-//!     re-upload on every call. The native backend reuses pooled scratch
-//!     the same way.
+//!   * `num_workers` batcher threads (replicas) drain a shared queue into
+//!     fixed-size backend batches (the forward graph has static (B, T)),
+//!     padding the tail with the first request and waiting at most
+//!     `max_wait` for a full batch; padded slots are *execution filler
+//!     only* — they are excluded from `ServerStats.served`, from
+//!     per-request NLL, and from the reported batch occupancy, and counted
+//!     separately in `ServerStats.padded`;
+//!   * each worker constructs its own backend *on its batcher thread* via
+//!     a shared `Send + Sync` factory, because PJRT handles are `Rc`-based
+//!     and thread-confined; weights live as device buffers there (uploaded
+//!     once), so the request path copies only tokens — the §Perf win over
+//!     literal re-upload on every call. The native backend reuses pooled
+//!     scratch the same way. Scoring is per-slot independent (per-token
+//!     quantization, per-sequence attention), so NLLs are identical
+//!     regardless of `num_workers` or batch composition — asserted by
+//!     rust/tests/simd_props.rs;
+//!   * per-worker counters merge into the aggregate [`ServerStats`], and a
+//!     fixed-bucket atomic histogram tracks request latency for
+//!     p50/p95/p99 reporting (`latency_percentiles`).
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -36,9 +43,10 @@ use crate::model::config::ModelConfig;
 
 pub use crate::backend::ExtraInput;
 
-/// Constructs the backend on the batcher thread (PJRT handles are not
-/// `Send`; only the factory crosses threads).
-pub type BackendFactory = Box<dyn FnOnce() -> Result<Box<dyn ExecBackend>> + Send + 'static>;
+/// Constructs one backend per worker thread, on that thread (PJRT handles
+/// are not `Send`; only the factory crosses threads). Called once per
+/// replica, so it must be `Fn`, not `FnOnce`.
+pub type BackendFactory = Box<dyn Fn() -> Result<Box<dyn ExecBackend>> + Send + Sync + 'static>;
 
 pub struct ScoreRequest {
     /// seq_len token window to score
@@ -62,7 +70,78 @@ struct Queue {
     shutdown: bool,
 }
 
-/// Server statistics (atomics; read while running).
+/// Number of √2-spaced latency buckets: 1 µs · 2^(i/2) spans 1 µs to
+/// ≈ 35 min, far beyond any request this server can see.
+const LAT_BUCKETS: usize = 64;
+
+/// Fixed-bucket request-latency histogram over atomics — recordable from
+/// every worker thread without locks, readable while the server runs.
+/// Buckets are √2-spaced in microseconds, so a reported percentile is
+/// within ~19% of the true value (the geometric-mid representative).
+pub struct LatencyHist {
+    buckets: Vec<AtomicU64>,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        LatencyHist { buckets: (0..LAT_BUCKETS).map(|_| AtomicU64::new(0)).collect() }
+    }
+}
+
+impl LatencyHist {
+    fn bucket(ns: u64) -> usize {
+        let us = (ns / 1_000).max(1);
+        let l = 63 - us.leading_zeros() as u64; // floor(log2 µs)
+        let half = if l > 0 && (us & (1 << (l - 1))) != 0 { 1 } else { 0 };
+        ((2 * l + half) as usize).min(LAT_BUCKETS - 1)
+    }
+
+    /// Record one request latency.
+    pub fn record(&self, lat: Duration) {
+        let idx = LatencyHist::bucket(lat.as_nanos() as u64);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total recorded samples.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// The q-quantile (0 < q ≤ 1) in milliseconds, or 0.0 with no samples.
+    /// Returns the geometric midpoint of the bucket holding the rank.
+    pub fn percentile(&self, q: f64) -> f64 {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                // bucket i covers [2^(l)·(1 + h/2), …) µs for i = 2l + h
+                let l = (i / 2) as f64;
+                let half = (i % 2) as f64;
+                let lower_us = (2.0f64).powf(l) * (1.0 + 0.5 * half);
+                // geometric mid of a √2-wide interval
+                return lower_us * (2.0f64).powf(0.25) / 1_000.0;
+            }
+        }
+        0.0
+    }
+}
+
+/// Per-worker counters; the aggregate [`ServerStats`] sums across replicas.
+#[derive(Default)]
+pub struct WorkerStats {
+    pub served: AtomicU64,
+    pub batches: AtomicU64,
+    pub exec_ns: AtomicU64,
+}
+
+/// Server statistics (atomics; read while running). The aggregate counters
+/// are the merge of every worker's [`WorkerStats`].
 #[derive(Default)]
 pub struct ServerStats {
     /// real requests served (padded slots never count)
@@ -71,21 +150,28 @@ pub struct ServerStats {
     /// batch slots filled with padding (tail duplication)
     pub padded: AtomicU64,
     pub exec_ns: AtomicU64,
+    /// request latency (queue + batch + exec) histogram
+    pub latency: LatencyHist,
 }
 
 pub struct InferenceServer {
     queue: Arc<(Mutex<Queue>, Condvar)>,
     stats: Arc<ServerStats>,
-    worker: Option<std::thread::JoinHandle<()>>,
+    worker_stats: Vec<Arc<WorkerStats>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
     running: Arc<AtomicBool>,
     cfg: ModelConfig,
 }
 
 impl InferenceServer {
-    /// Spin up a server whose batcher thread owns the backend produced by
-    /// `factory`. Construction errors surface here, not on first request.
-    pub fn start_backend(factory: BackendFactory, cfg: &ModelConfig,
-                         max_wait: Duration) -> Result<InferenceServer> {
+    /// Spin up `num_workers` backend replicas (one batcher thread each,
+    /// each owning a backend produced by `factory` on that thread) over a
+    /// shared request queue. Construction errors from *any* replica
+    /// surface here, not on first request.
+    pub fn start_backend(factory: BackendFactory, cfg: &ModelConfig, max_wait: Duration,
+                         num_workers: usize) -> Result<InferenceServer> {
+        let num_workers = num_workers.max(1);
+        let factory: Arc<BackendFactory> = Arc::new(factory);
         let queue = Arc::new((
             Mutex::new(Queue { pending: VecDeque::new(), shutdown: false }),
             Condvar::new(),
@@ -93,34 +179,74 @@ impl InferenceServer {
         let stats = Arc::new(ServerStats::default());
         let running = Arc::new(AtomicBool::new(true));
         let (ready_tx, ready_rx) = channel::<Result<()>>();
-        let worker = {
-            let queue = queue.clone();
-            let stats = stats.clone();
-            let running = running.clone();
-            std::thread::spawn(move || {
-                let backend = match factory() {
-                    Ok(b) => {
-                        let _ = ready_tx.send(Ok(()));
-                        b
+        let mut workers = Vec::with_capacity(num_workers);
+        let mut worker_stats = Vec::with_capacity(num_workers);
+        for w in 0..num_workers {
+            let per = Arc::new(WorkerStats::default());
+            worker_stats.push(Arc::clone(&per));
+            let t_factory = Arc::clone(&factory);
+            let t_queue = queue.clone();
+            let t_stats = stats.clone();
+            let t_running = running.clone();
+            let t_ready = ready_tx.clone();
+            let spawned = std::thread::Builder::new()
+                .name(format!("perq-serve-{w}"))
+                .spawn(move || {
+                    let backend = match (*t_factory)() {
+                        Ok(b) => {
+                            let _ = t_ready.send(Ok(()));
+                            b
+                        }
+                        Err(e) => {
+                            let _ = t_ready.send(Err(e));
+                            return;
+                        }
+                    };
+                    drop(t_ready);
+                    batcher_loop(backend, t_queue, t_stats, per, t_running, max_wait)
+                });
+            match spawned {
+                Ok(handle) => workers.push(handle),
+                Err(e) => {
+                    // wind down the replicas that did start before bailing
+                    {
+                        let (lock, cv) = &*queue;
+                        if let Ok(mut q) = lock.lock() {
+                            q.shutdown = true;
+                        }
+                        cv.notify_all();
                     }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
+                    for h in workers {
+                        let _ = h.join();
                     }
-                };
-                batcher_loop(backend, queue, stats, running, max_wait)
-            })
-        };
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow!("server thread died during startup"))??;
-        Ok(InferenceServer {
+                    return Err(anyhow!("spawning server worker: {e}"));
+                }
+            }
+        }
+        drop(ready_tx);
+        let server = InferenceServer {
             queue,
             stats,
-            worker: Some(worker),
-            running,
+            worker_stats,
+            workers,
+            running: running.clone(),
             cfg: cfg.clone(),
-        })
+        };
+        // every replica must come up; a single failure shuts the rest down
+        for _ in 0..num_workers {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    server.shutdown();
+                    return Err(e);
+                }
+                Err(_) => {
+                    server.shutdown();
+                    return Err(anyhow!("server thread died during startup"));
+                }
+            }
+        }
+        Ok(server)
     }
 
     /// Serve through the device-resident PJRT artifact at `artifact` (an
@@ -129,7 +255,7 @@ impl InferenceServer {
     #[cfg(feature = "pjrt")]
     pub fn start(artifact: std::path::PathBuf, cfg: &ModelConfig,
                  ws: &crate::model::weights::WeightSet, extras: Vec<ExtraInput>,
-                 max_wait: Duration) -> Result<InferenceServer> {
+                 max_wait: Duration, num_workers: usize) -> Result<InferenceServer> {
         let graph = graph_from_extras(&extras)?;
         // native-only formats (fmt id > 3) must not reach the artifact's
         // lax.switch — it would clamp them to the wrong quantizer
@@ -141,21 +267,26 @@ impl InferenceServer {
                 &artifact, &cfg2, &ws2, &graph,
             )?) as Box<dyn ExecBackend>)
         });
-        InferenceServer::start_backend(factory, cfg, max_wait)
+        InferenceServer::start_backend(factory, cfg, max_wait, num_workers)
     }
 
     /// Serve through the pure-Rust native backend — no PJRT, no artifacts.
+    /// Each of the `num_workers` replicas clones the weight set (packed
+    /// low-bit twins keep that cheap for INT4/INT8 graphs).
     pub fn start_native(cfg: &ModelConfig, ws: &crate::model::weights::WeightSet,
-                        graph: &crate::backend::ForwardGraph,
-                        max_wait: Duration) -> Result<InferenceServer> {
+                        graph: &crate::backend::ForwardGraph, max_wait: Duration,
+                        num_workers: usize) -> Result<InferenceServer> {
         let cfg2 = cfg.clone();
         let ws2 = ws.clone();
         let graph = graph.clone();
         let factory: BackendFactory = Box::new(move || {
-            Ok(Box::new(crate::backend::NativeBackend::new(cfg2, ws2, graph)?)
-                as Box<dyn ExecBackend>)
+            Ok(Box::new(crate::backend::NativeBackend::new(
+                cfg2.clone(),
+                ws2.clone(),
+                graph.clone(),
+            )?) as Box<dyn ExecBackend>)
         });
-        InferenceServer::start_backend(factory, cfg, max_wait)
+        InferenceServer::start_backend(factory, cfg, max_wait, num_workers)
     }
 
     /// Submit a scoring request; returns a receiver for the response.
@@ -184,20 +315,51 @@ impl InferenceServer {
         (served, batches, exec_s)
     }
 
+    /// Per-replica (served, batches, exec seconds) snapshots, in worker
+    /// order. Sums match the aggregate [`InferenceServer::stats`].
+    pub fn per_worker_stats(&self) -> Vec<(u64, u64, f64)> {
+        self.worker_stats
+            .iter()
+            .map(|w| {
+                (
+                    w.served.load(Ordering::Relaxed),
+                    w.batches.load(Ordering::Relaxed),
+                    w.exec_ns.load(Ordering::Relaxed) as f64 / 1e9,
+                )
+            })
+            .collect()
+    }
+
+    /// Backend replica count.
+    pub fn num_workers(&self) -> usize {
+        self.worker_stats.len()
+    }
+
+    /// Server-side request-latency percentiles (p50, p95, p99) in ms from
+    /// the fixed-bucket histogram (~19% bucket resolution).
+    pub fn latency_percentiles(&self) -> (f64, f64, f64) {
+        let h = &self.stats.latency;
+        (h.percentile(0.50), h.percentile(0.95), h.percentile(0.99))
+    }
+
     /// Batch slots that were filled with tail padding (never billed as
     /// served requests).
     pub fn padded_slots(&self) -> u64 {
         self.stats.padded.load(Ordering::Relaxed)
     }
 
-    pub fn shutdown(mut self) {
+    fn signal_shutdown(&self) {
         self.running.store(false, Ordering::Relaxed);
-        {
-            let (lock, cv) = &*self.queue;
-            lock.lock().unwrap().shutdown = true;
-            cv.notify_all();
+        let (lock, cv) = &*self.queue;
+        if let Ok(mut q) = lock.lock() {
+            q.shutdown = true;
         }
-        if let Some(w) = self.worker.take() {
+        cv.notify_all();
+    }
+
+    pub fn shutdown(mut self) {
+        self.signal_shutdown();
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
@@ -205,13 +367,8 @@ impl InferenceServer {
 
 impl Drop for InferenceServer {
     fn drop(&mut self) {
-        self.running.store(false, Ordering::Relaxed);
-        let (lock, cv) = &*self.queue;
-        if let Ok(mut q) = lock.lock() {
-            q.shutdown = true;
-        }
-        cv.notify_all();
-        if let Some(w) = self.worker.take() {
+        self.signal_shutdown();
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
@@ -255,7 +412,7 @@ fn graph_from_extras(extras: &[ExtraInput]) -> Result<crate::backend::ForwardGra
 }
 
 fn batcher_loop(mut backend: Box<dyn ExecBackend>, queue: Arc<(Mutex<Queue>, Condvar)>,
-                stats: Arc<ServerStats>, running: Arc<AtomicBool>,
+                stats: Arc<ServerStats>, mine: Arc<WorkerStats>, running: Arc<AtomicBool>,
                 max_wait: Duration) {
     let b = backend.cfg().batch;
     let t = backend.cfg().seq_len;
@@ -304,6 +461,8 @@ fn batcher_loop(mut backend: Box<dyn ExecBackend>, queue: Arc<(Mutex<Queue>, Con
         stats.exec_ns.fetch_add(exec_ns, Ordering::Relaxed);
         stats.batches.fetch_add(1, Ordering::Relaxed);
         stats.padded.fetch_add((b - real) as u64, Ordering::Relaxed);
+        mine.exec_ns.fetch_add(exec_ns, Ordering::Relaxed);
+        mine.batches.fetch_add(1, Ordering::Relaxed);
         match result {
             Ok(logits) => {
                 // only the `real` leading slots correspond to requests;
@@ -320,9 +479,12 @@ fn batcher_loop(mut backend: Box<dyn ExecBackend>, queue: Arc<(Mutex<Queue>, Con
                         nll += mx + lse.ln() - row[tgt] as f64;
                     }
                     stats.served.fetch_add(1, Ordering::Relaxed);
+                    mine.served.fetch_add(1, Ordering::Relaxed);
+                    let latency = req.submitted.elapsed();
+                    stats.latency.record(latency);
                     let _ = req.respond.send(ScoreResponse {
                         nll: nll / t as f64,
-                        latency: req.submitted.elapsed(),
+                        latency,
                         batch_occupancy: real,
                     });
                 }
@@ -340,8 +502,8 @@ mod tests {
     //! Queue/batcher logic tests that don't need a real model live in
     //! rust/tests/coordinator_props.rs; full server round-trips are
     //! exercised natively in rust/tests/backend_parity.rs and
-    //! examples/serve_requests.rs, and against PJRT in the integration
-    //! suite.
+    //! examples/serve_requests.rs, multi-worker determinism in
+    //! rust/tests/simd_props.rs, and PJRT in the integration suite.
 
     use super::*;
     use crate::backend::ForwardGraph;
@@ -353,6 +515,33 @@ mod tests {
         let s = ServerStats::default();
         assert_eq!(s.served.load(std::sync::atomic::Ordering::Relaxed), 0);
         assert_eq!(s.padded.load(std::sync::atomic::Ordering::Relaxed), 0);
+        assert_eq!(s.latency.count(), 0);
+        assert_eq!(s.latency.percentile(0.5), 0.0);
+    }
+
+    #[test]
+    fn latency_hist_buckets_monotonic() {
+        let h = LatencyHist::default();
+        for us in [5u64, 50, 500, 5_000, 50_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 5);
+        let p50 = h.percentile(0.5);
+        let p95 = h.percentile(0.95);
+        let p99 = h.percentile(0.99);
+        assert!(p50 > 0.0 && p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        // p50 of {5,50,500,5000,50000}µs sits in the 500µs bucket: within
+        // bucket resolution of 0.5 ms
+        assert!((0.3..1.0).contains(&p50), "p50 {p50} ms");
+    }
+
+    #[test]
+    fn latency_hist_extremes_clamp() {
+        let h = LatencyHist::default();
+        h.record(Duration::from_nanos(1)); // below 1 µs → first bucket
+        h.record(Duration::from_secs(7200)); // beyond range → last bucket
+        assert_eq!(h.count(), 2);
+        assert!(h.percentile(1.0) > h.percentile(0.1));
     }
 
     #[test]
@@ -367,7 +556,8 @@ mod tests {
         let ws = bundle::synthetic_weights(&cfg, 11);
         let graph = ForwardGraph::Merged { r3_block: 8, format: crate::quant::Format::Int4 };
         let server =
-            InferenceServer::start_native(&cfg, &ws, &graph, Duration::from_millis(1)).unwrap();
+            InferenceServer::start_native(&cfg, &ws, &graph, Duration::from_millis(1), 1).unwrap();
+        assert_eq!(server.num_workers(), 1);
         // 3 requests into a batch-of-4 server → at least one padded slot
         let mk = |s: usize| -> Vec<i32> {
             (0..cfg.seq_len + 1).map(|i| ((s + i) % cfg.vocab) as i32).collect()
@@ -382,6 +572,11 @@ mod tests {
         assert_eq!(served, 3, "padded slots must not count as served");
         assert!(batches >= 1);
         assert!(server.padded_slots() >= 1, "tail padding should be recorded");
+        assert_eq!(server.stats.latency.count(), 3, "every request records a latency");
+        // per-worker counters merge into the aggregate
+        let per = server.per_worker_stats();
+        assert_eq!(per.iter().map(|p| p.0).sum::<u64>(), served);
+        assert_eq!(per.iter().map(|p| p.1).sum::<u64>(), batches);
         // identical windows score identically (deterministic native path)
         let a = server.submit(mk(0)).unwrap().recv().unwrap().nll;
         let b = server.submit(mk(0)).unwrap().recv().unwrap().nll;
@@ -400,9 +595,10 @@ mod tests {
         let cfg = crate::model::config::ModelConfig::from_meta(&j).unwrap();
         let ws = bundle::synthetic_weights(&cfg, 12);
         let server = InferenceServer::start_native(
-            &cfg, &ws, &ForwardGraph::Fp, Duration::from_millis(1),
+            &cfg, &ws, &ForwardGraph::Fp, Duration::from_millis(1), 2,
         )
         .unwrap();
+        assert_eq!(server.num_workers(), 2);
         assert!(server.submit(vec![0i32; 3]).is_err());
         server.shutdown();
     }

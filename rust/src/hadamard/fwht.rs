@@ -3,18 +3,23 @@
 //! 1976). `fwht` computes x ← x·H_d (unnormalized Sylvester H); callers
 //! scale by 1/√d for the rotation.
 
+use crate::tensor::simd;
+
 /// In-place unnormalized FWHT over a power-of-2-length slice.
 /// Matches `x @ hadamard(d)` for the Sylvester construction.
 ///
-/// §Perf: sizes ≤ 32 — the hot case for the paper's b=16/b=32 block
-/// configs — dispatch to fully-unrolled fixed-size kernels that run all
-/// stages out of a stack array (no bounds checks, no strided memory
-/// traffic between stages). Larger sizes fuse the first two stages into
-/// one radix-4 pass over contiguous quads, and the remaining stages use
-/// `split_at_mut` + slice zips so LLVM auto-vectorizes the butterflies.
-/// Both paths evaluate the identical butterfly addition tree, so results
-/// are bit-identical across the size cutover.
+/// §Perf: sizes ≥ 8 first try the runtime-dispatched SIMD kernels
+/// (`tensor::simd::fwht_pow2` — AVX2/NEON in-register butterflies for the
+/// sub-vector stages, wide vector butterflies above). Every path —
+/// SIMD, the fully-unrolled fixed-size kernels for sizes ≤ 32, and the
+/// general radix-4-fused tree — evaluates the identical butterfly
+/// addition DAG, so results are bit-identical across size cutovers *and*
+/// dispatch levels (each butterfly output is one IEEE add/sub of two
+/// fully-determined operands).
 pub fn fwht(x: &mut [f32]) {
+    if x.len() >= 8 && simd::fwht_pow2(x, 1.0) {
+        return;
+    }
     match x.len() {
         0 | 1 => {}
         2 => fwht_fixed::<2>(x, 1.0),
@@ -105,14 +110,19 @@ pub fn fwht_normalized(x: &mut [f32]) {
 /// Apply the normalized *block* FWHT to a d-length row: each contiguous
 /// b-block rotated by H_b/√b. Requires b power of two.
 ///
-/// Block sizes ≤ 32 run the fixed-size kernels with the 1/√b scale fused
-/// into the final store — one pass over the row instead of two.
+/// Block sizes ≥ 8 first try the SIMD block path (dispatch hoisted out of
+/// the block loop); otherwise sizes ≤ 32 run the fixed-size kernels. Both
+/// fuse the 1/√b scale into the final store — one pass over the row
+/// instead of two — and stay bit-identical to the general tree.
 pub fn block_fwht_normalized(x: &mut [f32], b: usize) {
     debug_assert!(x.len() % b == 0);
     if b <= 1 {
         return;
     }
     let s = 1.0 / (b as f32).sqrt();
+    if simd::fwht_blocks(x, b, s) {
+        return;
+    }
     match b {
         2 => {
             for blk in x.chunks_exact_mut(2) {

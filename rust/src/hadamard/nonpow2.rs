@@ -21,6 +21,7 @@
 use anyhow::{ensure, Result};
 
 use super::construct::{hadamard_signs, pow2_split};
+use crate::tensor::simd;
 
 /// One term of a final-stage output: (pool index, +1/-1 sign).
 type Term = (u32, f32);
@@ -133,6 +134,8 @@ impl NonPow2Plan {
         let base = self.base;
         let nblocks = self.d / base;
         // --- k' butterfly stages across blocks (H_{2^{k'}} ⊗ I_base) ---
+        // Each stage is an elementwise add/sub over base-length runs, so
+        // the SIMD butterfly is bit-identical to the scalar loop.
         let mut h = 1;
         while h < nblocks {
             let mut i = 0;
@@ -141,12 +144,7 @@ impl NonPow2Plan {
                     let (lo, hi) = x.split_at_mut((j + h) * base);
                     let a = &mut lo[j * base..j * base + base];
                     let b = &mut hi[..base];
-                    for c in 0..base {
-                        let av = a[c];
-                        let bv = b[c];
-                        a[c] = av + bv;
-                        b[c] = av - bv;
-                    }
+                    simd::butterfly(a, b);
                 }
                 i += 2 * h;
             }
@@ -193,10 +191,8 @@ impl NonPow2Plan {
             }
             blk.copy_from_slice(&out);
         }
-        // --- normalization ---
-        for v in x.iter_mut() {
-            *v *= self.norm;
-        }
+        // --- normalization (elementwise — bit-identical across levels) ---
+        simd::scale_inplace(x, self.norm);
     }
 }
 

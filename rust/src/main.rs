@@ -30,6 +30,12 @@ use perq::util::cli;
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = cli::parse(&argv);
+    // `--threads N` (or PERQ_THREADS) sizes the worker pool; it must be
+    // applied before any kernel work because the global pool spawns
+    // lazily on first use.
+    if let Some(n) = args.get("threads").and_then(|s| s.parse::<usize>().ok()) {
+        perq::util::pool::set_default_parallelism(n);
+    }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let result = match cmd {
         "quantize" => cmd_quantize(&args),
@@ -69,7 +75,10 @@ fn print_help() {
          \x20        --block N   --online   --zeroshot   --eval-tokens N\n\
          \x20        --calib-seqs N   --source wiki|c4|fineweb\n\
          \x20        --backend native|pjrt|auto (native = pure-Rust forward,\n\
-         \x20                  no PJRT/XLA or HLO artifacts required)"
+         \x20                  no PJRT/XLA or HLO artifacts required)\n\
+         \x20        --threads N  worker-pool lanes (default: PERQ_THREADS\n\
+         \x20                  env, else core count; PERQ_SIMD={{auto,avx2,\n\
+         \x20                  neon,scalar}} overrides kernel dispatch)"
     );
 }
 

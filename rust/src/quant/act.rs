@@ -5,32 +5,30 @@
 
 use super::e2m1;
 use super::Format;
+use crate::tensor::simd;
 use crate::tensor::Mat;
 
 pub const EPS: f32 = 1e-8;
 
 /// Per-row (scale, zero) of the Eq. 4 asymmetric quantizer — the single
 /// definition shared by the fake-quant and code-emit paths, so the packed
-/// kernel's bit-exactness contract holds by construction.
+/// kernel's bit-exactness contract holds by construction. The min/max
+/// scan runs through the SIMD layer; min/max selection is exact, so the
+/// parameters are identical across dispatch levels.
 fn int_asym_params(row: &[f32], bits: u32) -> (f32, f32) {
     let levels = ((1u32 << bits) - 1) as f32;
-    let (mut mn, mut mx) = (f32::INFINITY, f32::NEG_INFINITY);
-    for &v in row.iter() {
-        mn = mn.min(v);
-        mx = mx.max(v);
-    }
+    let (mn, mx) = simd::row_minmax(row);
     let s = ((mx - mn) / levels).max(EPS);
     (s, (mn / s).round())
 }
 
-/// INT-q asymmetric per-row fake-quant (Eq. 4).
+/// INT-q asymmetric per-row fake-quant (Eq. 4). The quantize loop runs
+/// through the SIMD layer; the vector rounding reproduces `f32::round`
+/// exactly, so the fake-quant floats are bit-identical across levels.
 pub fn int_asym_row(row: &mut [f32], bits: u32) {
     let levels = ((1u32 << bits) - 1) as f32;
     let (s, z) = int_asym_params(row, bits);
-    for v in row.iter_mut() {
-        let q = ((*v / s).round() - z).clamp(0.0, levels);
-        *v = s * (q + z);
-    }
+    simd::fake_quant_int(row, s, z, levels);
 }
 
 /// FP4 symmetric per-row fake-quant, s = ‖row‖_∞ / 6 (Eq. 5).
@@ -67,10 +65,9 @@ pub fn int_asym_emit(row: &[f32], bits: u32, codes: &mut Vec<u8>) -> (f32, f32) 
     debug_assert!(bits <= 8, "codes are u8");
     let levels = ((1u32 << bits) - 1) as f32;
     let (s, z) = int_asym_params(row, bits);
-    for &v in row.iter() {
-        let q = ((v / s).round() - z).clamp(0.0, levels);
-        codes.push(q as u8);
-    }
+    let start = codes.len();
+    codes.resize(start + row.len(), 0);
+    simd::emit_codes(row, s, z, levels, &mut codes[start..]);
     (s, z)
 }
 

@@ -216,7 +216,10 @@ impl Mat {
 }
 
 /// The shared cache-blocked ikj kernel: `out += a @ b` for a row-major
-/// (m, k) slice against (k, n). `out` must be zeroed by the caller.
+/// (m, k) slice against (k, n). `out` must be zeroed by the caller. The
+/// rank-1 update runs through the SIMD layer (`tensor::simd::axpy_f32`);
+/// each output element still accumulates in kk order with mul-then-add,
+/// so results are bit-identical across dispatch levels.
 fn matmul_kernel(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, out: &mut [f32]) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
@@ -232,9 +235,7 @@ fn matmul_kernel(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, out: &mut [
                     continue;
                 }
                 let brow = &b[kk * n..(kk + 1) * n];
-                for j in 0..n {
-                    orow[j] += av * brow[j];
-                }
+                crate::tensor::simd::axpy_f32(av, brow, orow);
             }
         }
     }

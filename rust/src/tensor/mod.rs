@@ -1,5 +1,6 @@
 //! Minimal dense-tensor substrate: row-major `Mat` (f32), packed low-bit
-//! `QuantMat` + integer GEMM for the serving path, f64 linear algebra for
+//! `QuantMat` + integer GEMM for the serving path, the runtime-dispatched
+//! SIMD kernel layer (`simd`: AVX2/NEON/scalar), f64 linear algebra for
 //! rounding solvers, and NPY v1.0 interchange with the python build path.
 //! Built from scratch — no external linear-algebra crates.
 
@@ -7,6 +8,7 @@ pub mod linalg;
 pub mod mat;
 pub mod npy;
 pub mod qmat;
+pub mod simd;
 
 pub use mat::Mat;
 pub use qmat::{qgemm_into, QuantActs, QuantMat};

@@ -20,19 +20,23 @@
 //!   multiply-add per output.
 //!
 //! The kernel is cache-blocked over token rows (MB at a time) so each
-//! unpacked weight row is reused MB times, and row blocks are fanned out
-//! across the persistent `util::pool` workers. The INT4×INT4 case runs in
-//! i16 lanes (8-wide `pmullw`/`paddw` on baseline SSE2, 16-wide on AVX2)
-//! over KC-length k-chunks widened into i32 between chunks — this is
-//! where the ≥2× over the 4-wide f32 path comes from. Overflow: INT4
-//! products are ≤ 120 so a 256-chunk stays within i16 (see `KC`); the
-//! generic i32 path is exact for d_in < 2^16 (|u|≤255 · |q|≤128 products)
-//! — far above any model dimension here.
+//! unpacked weight chunk is reused MB times, tiled over NB output columns
+//! so the accumulator tile stays L1-resident, and row blocks are fanned
+//! out across the persistent `util::pool` workers. Every inner loop runs
+//! through the runtime-dispatched `tensor::simd` layer: the INT4×INT4
+//! case accumulates in i16 lanes (16-wide on AVX2, 8-wide on NEON, scalar
+//! fallback) over KC-length k-chunks widened into i32 between chunks.
+//! Overflow: INT4 products are ≤ 120 so a 256-chunk stays within i16 (see
+//! `KC`); the generic i32 path is exact for d_in < 2^16 (|u|≤255 · |q|≤128
+//! products) — far above any model dimension here. Integer accumulation
+//! is exact, so results are bit-identical across dispatch levels and
+//! tilings (rust/tests/simd_props.rs).
 
 use std::cell::RefCell;
 
 use crate::quant::act;
 use crate::quant::WeightCodec;
+use crate::tensor::simd;
 use crate::tensor::Mat;
 use crate::util::pool::{self, SendPtr};
 
@@ -193,9 +197,17 @@ impl QuantActs {
 }
 
 /// Token rows per cache block: each unpacked weight row is reused this
-/// many times, amortizing nibble decode to <10% of the MAC work, while
-/// the accumulator tile (MB × d_out) stays L2-resident.
+/// many times, amortizing nibble decode to <10% of the MAC work.
 const MB: usize = 16;
+
+/// Columns per cache tile. The inner loops run over an (MB × NB)
+/// accumulator tile (4 KiB in i16, 8 KiB in i32) plus an NB-wide unpacked
+/// weight chunk, all L1-resident across a whole k-chunk — without the
+/// tile split the MB × d_out accumulator streams from L2 on every k step
+/// and the kernel goes memory-bound, flattening the SIMD win. Tiling only
+/// reorders the j-iteration; integer accumulation is exact, so results
+/// are bit-identical to the untiled loop.
+const NB: usize = 128;
 
 /// k-chunk length for the INT4 i16 fast path. With |u| ≤ 15 and |q| ≤ 8
 /// every product is ≤ 120 in magnitude, so 256 accumulations stay below
@@ -258,13 +270,18 @@ pub fn qgemm(acts: &QuantActs, w: &QuantMat) -> Mat {
     out
 }
 
-/// One MB-row block: accumulate `acc[mi][j] += u[mi][kk] · q[kk][j]` with
-/// the weight row unpacked once per kk, then store with fused dequant
-/// `out = s·t_j·(acc + z·colsum_j)`.
+/// One MB-row block: accumulate `acc[mi][j] += u[mi][kk] · q[kk][j]` over
+/// (MB × NB) L1-resident column tiles with the weight chunk unpacked once
+/// per (kk, tile), then store with fused dequant
+/// `out = s·t_j·(acc + z·colsum_j)`. All inner loops go through the
+/// runtime-dispatched `tensor::simd` primitives (AVX2/NEON/scalar) —
+/// integer lanes are exact, so every dispatch level and tiling produces
+/// bit-identical results.
 ///
 /// Three accumulation strategies, chosen by payload/code width:
 /// * INT4 × INT4 codes — i16 lanes in KC-length k-chunks, widened into
-///   i32 between chunks (provably overflow-free; see [`KC`]);
+///   i32 between chunks (provably overflow-free; see [`KC`]), two
+///   activation rows per weight load (`axpy2_i16`);
 /// * INT4 weights with wider activation codes — straight i32 lanes;
 /// * INT8 weights — straight i32 lanes over the raw i8 payload row.
 fn qgemm_block(acts: &QuantActs, w: &QuantMat, r0: usize, mb: usize,
@@ -275,87 +292,106 @@ fn qgemm_block(acts: &QuantActs, w: &QuantMat, r0: usize, mb: usize,
     acc32.resize(mb * n, 0);
     if w.bits == 4 && acts.bits == 4 {
         let stride = (n + 1) / 2;
-        wbuf.resize(n, 0);
+        wbuf.resize(NB.min(n), 0);
         acc16.clear();
         acc16.resize(mb * n, 0);
-        let mut c0 = 0;
-        while c0 < k {
-            let cend = (c0 + KC).min(k);
-            for kk in c0..cend {
-                unpack_row4(&w.payload[kk * stride..(kk + 1) * stride], n, wbuf);
-                for mi in 0..mb {
-                    let u = acts.codes[(r0 + mi) * k + kk] as i16;
-                    if u == 0 {
-                        continue;
+        let mut j0 = 0;
+        while j0 < n {
+            let j1 = (j0 + NB).min(n);
+            let nb = j1 - j0;
+            let mut c0 = 0;
+            while c0 < k {
+                let cend = (c0 + KC).min(k);
+                for kk in c0..cend {
+                    // NB is even, so the tile starts on a whole byte
+                    let prow = &w.payload[kk * stride + j0 / 2..(kk + 1) * stride];
+                    simd::unpack_row4(prow, nb, &mut wbuf[..nb]);
+                    let mut mi = 0;
+                    while mi + 2 <= mb {
+                        let u0 = acts.codes[(r0 + mi) * k + kk] as i16;
+                        let u1 = acts.codes[(r0 + mi + 1) * k + kk] as i16;
+                        if u0 != 0 || u1 != 0 {
+                            let (head, tail) = acc16.split_at_mut((mi + 1) * n);
+                            simd::axpy2_i16(
+                                u0,
+                                u1,
+                                &wbuf[..nb],
+                                &mut head[mi * n + j0..mi * n + j1],
+                                &mut tail[j0..j1],
+                            );
+                        }
+                        mi += 2;
                     }
-                    let arow = &mut acc16[mi * n..(mi + 1) * n];
-                    for (a, &wv) in arow.iter_mut().zip(wbuf.iter()) {
-                        *a += u * wv;
+                    if mi < mb {
+                        let u = acts.codes[(r0 + mi) * k + kk] as i16;
+                        if u != 0 {
+                            simd::axpy_i16(u, &wbuf[..nb], &mut acc16[mi * n + j0..mi * n + j1]);
+                        }
                     }
                 }
+                // widen the chunk's column tile into i32 and reset
+                for mi in 0..mb {
+                    simd::widen_reset_i16(
+                        &mut acc16[mi * n + j0..mi * n + j1],
+                        &mut acc32[mi * n + j0..mi * n + j1],
+                    );
+                }
+                c0 = cend;
             }
-            // widen the chunk into the i32 accumulator and reset
-            for (a32, a16) in acc32.iter_mut().zip(acc16.iter_mut()) {
-                *a32 += *a16 as i32;
-                *a16 = 0;
-            }
-            c0 = cend;
+            j0 = j1;
         }
     } else if w.bits == 4 {
         let stride = (n + 1) / 2;
-        wbuf.resize(n, 0);
-        for kk in 0..k {
-            unpack_row4(&w.payload[kk * stride..(kk + 1) * stride], n, wbuf);
-            for mi in 0..mb {
-                let u = acts.codes[(r0 + mi) * k + kk] as i32;
-                if u == 0 {
-                    continue;
-                }
-                let arow = &mut acc32[mi * n..(mi + 1) * n];
-                for (a, &wv) in arow.iter_mut().zip(wbuf.iter()) {
-                    *a += u * wv as i32;
+        wbuf.resize(NB.min(n), 0);
+        let mut j0 = 0;
+        while j0 < n {
+            let j1 = (j0 + NB).min(n);
+            let nb = j1 - j0;
+            for kk in 0..k {
+                let prow = &w.payload[kk * stride + j0 / 2..(kk + 1) * stride];
+                simd::unpack_row4(prow, nb, &mut wbuf[..nb]);
+                for mi in 0..mb {
+                    let u = acts.codes[(r0 + mi) * k + kk] as i32;
+                    if u == 0 {
+                        continue;
+                    }
+                    simd::axpy_i32_i16w(u, &wbuf[..nb], &mut acc32[mi * n + j0..mi * n + j1]);
                 }
             }
+            j0 = j1;
         }
     } else {
-        for kk in 0..k {
-            let prow = &w.payload[kk * n..(kk + 1) * n];
-            // SAFETY: i8 and u8 have identical layout; codes were stored
-            // as i8 bit patterns.
-            let wrow = unsafe { std::slice::from_raw_parts(prow.as_ptr() as *const i8, n) };
-            for mi in 0..mb {
-                let u = acts.codes[(r0 + mi) * k + kk] as i32;
-                if u == 0 {
-                    continue;
-                }
-                let arow = &mut acc32[mi * n..(mi + 1) * n];
-                for (a, &wv) in arow.iter_mut().zip(wrow.iter()) {
-                    *a += u * wv as i32;
+        let mut j0 = 0;
+        while j0 < n {
+            let j1 = (j0 + NB).min(n);
+            for kk in 0..k {
+                let prow = &w.payload[kk * n + j0..kk * n + j1];
+                // SAFETY: i8 and u8 have identical layout; codes were stored
+                // as i8 bit patterns.
+                let wrow =
+                    unsafe { std::slice::from_raw_parts(prow.as_ptr() as *const i8, j1 - j0) };
+                for mi in 0..mb {
+                    let u = acts.codes[(r0 + mi) * k + kk] as i32;
+                    if u == 0 {
+                        continue;
+                    }
+                    simd::axpy_i32_i8w(u, wrow, &mut acc32[mi * n + j0..mi * n + j1]);
                 }
             }
+            j0 = j1;
         }
     }
     for mi in 0..mb {
         let r = r0 + mi;
         let (sx, z) = (acts.scales[r], acts.zeros[r]);
-        let arow = &acc32[mi * n..(mi + 1) * n];
-        let orow = &mut out[mi * n..(mi + 1) * n];
-        for j in 0..n {
-            orow[j] = sx * w.scales[j] * (arow[j] as f32 + z * w.colsum[j] as f32);
-        }
-    }
-}
-
-/// Unpack one nibble-packed weight row (offset-binary, +8) into i16 codes.
-#[inline]
-fn unpack_row4(prow: &[u8], n: usize, wbuf: &mut [i16]) {
-    for jj in 0..n / 2 {
-        let b = prow[jj];
-        wbuf[2 * jj] = (b & 0x0F) as i16 - 8;
-        wbuf[2 * jj + 1] = (b >> 4) as i16 - 8;
-    }
-    if n % 2 == 1 {
-        wbuf[n - 1] = (prow[n / 2] & 0x0F) as i16 - 8;
+        simd::dequant_store(
+            sx,
+            z,
+            &w.scales,
+            &w.colsum,
+            &acc32[mi * n..(mi + 1) * n],
+            &mut out[mi * n..(mi + 1) * n],
+        );
     }
 }
 

@@ -1,0 +1,144 @@
+//! Portable scalar implementations of every SIMD primitive — the always-on
+//! fallback and the reference the vector arms are property-tested against.
+//! These are the exact loops the pre-SIMD kernels ran; `PERQ_SIMD=scalar`
+//! therefore reproduces the old serving numerics bit-for-bit. (The
+//! compiler is still free to auto-vectorize these loops — "scalar" names
+//! the source form, not the machine code.)
+
+/// `y[i] += a * x[i]`.
+pub fn axpy_f32(a: f32, x: &[f32], y: &mut [f32]) {
+    for (yv, &xv) in y.iter_mut().zip(x.iter()) {
+        *yv += a * xv;
+    }
+}
+
+/// `y[i] += x[i]`.
+pub fn add_assign_f32(y: &mut [f32], x: &[f32]) {
+    for (yv, &xv) in y.iter_mut().zip(x.iter()) {
+        *yv += xv;
+    }
+}
+
+/// `x[i] *= s`.
+pub fn scale_inplace(x: &mut [f32], s: f32) {
+    for v in x.iter_mut() {
+        *v *= s;
+    }
+}
+
+/// `out[i] = x[i] * inv * scale[i]` (left-associated).
+pub fn mul_scale_store(x: &[f32], inv: f32, scale: &[f32], out: &mut [f32]) {
+    for i in 0..out.len() {
+        out[i] = x[i] * inv * scale[i];
+    }
+}
+
+/// `a[i], b[i] = a[i] + b[i], a[i] - b[i]`.
+pub fn butterfly(a: &mut [f32], b: &mut [f32]) {
+    for (av, bv) in a.iter_mut().zip(b.iter_mut()) {
+        let x = *av;
+        let y = *bv;
+        *av = x + y;
+        *bv = x - y;
+    }
+}
+
+/// `Σ x[i]²` with a single sequential accumulator.
+pub fn sum_squares(x: &[f32]) -> f32 {
+    let mut ss = 0.0f32;
+    for &v in x.iter() {
+        ss += v * v;
+    }
+    ss
+}
+
+/// `g[i] = swish(g[i]) * u[i]`, `swish(x) = x / (1 + e^{-x})` via libm.
+pub fn swish_mul(g: &mut [f32], u: &[f32]) {
+    for (gv, &uv) in g.iter_mut().zip(u.iter()) {
+        let x = *gv;
+        *gv = x / (1.0 + (-x).exp()) * uv;
+    }
+}
+
+/// `(min, max)` over a row (`f32::min`/`max` fold).
+pub fn row_minmax(x: &[f32]) -> (f32, f32) {
+    let (mut mn, mut mx) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &v in x.iter() {
+        mn = mn.min(v);
+        mx = mx.max(v);
+    }
+    (mn, mx)
+}
+
+/// `codes[i] = clamp(round(x[i]/s) - z, 0, levels) as u8`.
+pub fn emit_codes(x: &[f32], s: f32, z: f32, levels: f32, codes: &mut [u8]) {
+    for (c, &v) in codes.iter_mut().zip(x.iter()) {
+        let q = ((v / s).round() - z).clamp(0.0, levels);
+        *c = q as u8;
+    }
+}
+
+/// `x[i] = s * (clamp(round(x[i]/s) - z, 0, levels) + z)`.
+pub fn fake_quant_int(x: &mut [f32], s: f32, z: f32, levels: f32) {
+    for v in x.iter_mut() {
+        let q = ((*v / s).round() - z).clamp(0.0, levels);
+        *v = s * (q + z);
+    }
+}
+
+/// `acc[j] += u * w[j]` in i16.
+pub fn axpy_i16(u: i16, w: &[i16], acc: &mut [i16]) {
+    for (a, &wv) in acc.iter_mut().zip(w.iter()) {
+        *a += u * wv;
+    }
+}
+
+/// Two-row i16 axpy (adding `u = 0` rows is exact, so no skip).
+pub fn axpy2_i16(u0: i16, u1: i16, w: &[i16], acc0: &mut [i16], acc1: &mut [i16]) {
+    for j in 0..w.len() {
+        let wv = w[j];
+        acc0[j] += u0 * wv;
+        acc1[j] += u1 * wv;
+    }
+}
+
+/// `acc[j] += u * w[j]` in i32 over i16 weight codes.
+pub fn axpy_i32_i16w(u: i32, w: &[i16], acc: &mut [i32]) {
+    for (a, &wv) in acc.iter_mut().zip(w.iter()) {
+        *a += u * wv as i32;
+    }
+}
+
+/// `acc[j] += u * w[j]` in i32 over i8 weight codes.
+pub fn axpy_i32_i8w(u: i32, w: &[i8], acc: &mut [i32]) {
+    for (a, &wv) in acc.iter_mut().zip(w.iter()) {
+        *a += u * wv as i32;
+    }
+}
+
+/// `acc32[j] += acc16[j]; acc16[j] = 0`.
+pub fn widen_reset_i16(acc16: &mut [i16], acc32: &mut [i32]) {
+    for (a32, a16) in acc32.iter_mut().zip(acc16.iter_mut()) {
+        *a32 += *a16 as i32;
+        *a16 = 0;
+    }
+}
+
+/// Unpack a nibble-packed row (offset-binary, +8) into i16 codes.
+pub fn unpack_row4(prow: &[u8], n: usize, wbuf: &mut [i16]) {
+    for jj in 0..n / 2 {
+        let b = prow[jj];
+        wbuf[2 * jj] = (b & 0x0F) as i16 - 8;
+        wbuf[2 * jj + 1] = (b >> 4) as i16 - 8;
+    }
+    if n % 2 == 1 {
+        wbuf[n - 1] = (prow[n / 2] & 0x0F) as i16 - 8;
+    }
+}
+
+/// `out[j] = sx * ws[j] * (acc[j] as f32 + z * colsum[j] as f32)`.
+pub fn dequant_store(sx: f32, z: f32, ws: &[f32], colsum: &[i32], acc: &[i32], out: &mut [f32]) {
+    for j in 0..out.len() {
+        out[j] = sx * ws[j] * (acc[j] as f32 + z * colsum[j] as f32);
+    }
+}

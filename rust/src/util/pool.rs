@@ -246,7 +246,8 @@ fn run_tasks(batch: &Batch) {
 }
 
 /// The process-wide serving pool, spawned lazily on first use with
-/// [`default_workers`] lanes.
+/// [`default_workers`] lanes (`--threads` CLI flag via
+/// [`set_default_parallelism`], else `PERQ_THREADS`, else core count).
 pub fn global() -> &'static WorkerPool {
     static POOL: OnceLock<WorkerPool> = OnceLock::new();
     POOL.get_or_init(|| WorkerPool::new(default_workers()))
@@ -370,12 +371,42 @@ impl BufPool {
     }
 }
 
-/// Default worker count: physical parallelism, capped.
+/// Process-wide parallelism override (`--threads N`): 0 = unset. Must be
+/// stored before the first kernel touches [`global`] — `main` applies it
+/// during argument parsing, ahead of any model work.
+static PARALLELISM_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the worker-count override (the `--threads N` CLI flag). Takes
+/// precedence over `PERQ_THREADS` and hardware detection. Has no effect
+/// on a global pool that already spawned — call before first use.
+pub fn set_default_parallelism(n: usize) {
+    PARALLELISM_OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+/// Pure resolution of the worker count from (CLI override, `PERQ_THREADS`
+/// env value, detected hardware parallelism) — split out so the
+/// precedence is unit-testable without touching process state.
+pub fn resolve_workers(override_n: usize, env: Option<&str>, hw: usize) -> usize {
+    if override_n > 0 {
+        return override_n.clamp(1, 64);
+    }
+    if let Some(n) = env.and_then(|s| s.trim().parse::<usize>().ok()) {
+        if n > 0 {
+            return n.clamp(1, 64);
+        }
+    }
+    hw.clamp(1, 16)
+}
+
+/// Default worker count: `--threads` override, else `PERQ_THREADS`, else
+/// physical parallelism capped at 16.
 pub fn default_workers() -> usize {
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(4)
-        .min(16)
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    resolve_workers(
+        PARALLELISM_OVERRIDE.load(Ordering::Relaxed),
+        std::env::var("PERQ_THREADS").ok().as_deref(),
+        hw,
+    )
 }
 
 #[cfg(test)]
@@ -512,6 +543,22 @@ mod tests {
         });
         assert_eq!(n.load(Ordering::Relaxed), 10);
         drop(pool); // joins; a hang here fails the test via timeout
+    }
+
+    #[test]
+    fn resolve_workers_precedence() {
+        // CLI override wins over env and hardware
+        assert_eq!(resolve_workers(3, Some("7"), 12), 3);
+        // env wins over hardware
+        assert_eq!(resolve_workers(0, Some("7"), 12), 7);
+        assert_eq!(resolve_workers(0, Some(" 5 "), 12), 5);
+        // bad/zero env falls through to hardware (capped at 16)
+        assert_eq!(resolve_workers(0, Some("junk"), 12), 12);
+        assert_eq!(resolve_workers(0, Some("0"), 12), 12);
+        assert_eq!(resolve_workers(0, None, 64), 16);
+        // explicit requests clamp into [1, 64]
+        assert_eq!(resolve_workers(1000, None, 4), 64);
+        assert_eq!(resolve_workers(0, Some("1000"), 4), 64);
     }
 
     #[test]

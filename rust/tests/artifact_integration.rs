@@ -245,6 +245,7 @@ fn inference_server_round_trip() {
         &qm.ws,
         qm.extras.clone(),
         std::time::Duration::from_millis(5),
+        1,
     )
     .unwrap();
     let toks = perq::data::corpus::token_stream(
@@ -295,6 +296,7 @@ fn server_rejects_bad_request_size() {
         &qm.ws,
         qm.extras.clone(),
         std::time::Duration::from_millis(5),
+        1,
     )
     .unwrap();
     assert!(server.submit(vec![0i32; 3]).is_err());
