@@ -1,5 +1,6 @@
-//! Quickstart: quantize one model with PeRQ* and compare against the
-//! full-precision baseline.
+//! Quickstart: quantize one model with PeRQ*, compare against the
+//! full-precision baseline, then round-trip the quantized model through a
+//! versioned `.perq` deployment artifact (quantize once, serve many).
 //!
 //!     cargo run --release --example quickstart [-- --backend native|pjrt|auto]
 //!
@@ -53,9 +54,14 @@ fn main() -> anyhow::Result<()> {
 
     // PeRQ*: MassDiff permutation + QuaRot rotations + block-32 online
     // Hadamard at the down projection + Qronos rounding, INT4 W4A4.
-    let spec = presets::perq_star(32, Format::Int4);
-    let report = Pipeline::new(spec).run_with_engine(&bundle, &engine)?;
-    println!("PeRQ* (INT4, b=32) ppl:   {:.3}", report.perplexity);
+    // Quantize ONCE (the offline stages), then evaluate the result — the
+    // same QuantizedModel is exported below.
+    let qm = Pipeline::new(presets::perq_star(32, Format::Int4))
+        .quantize_with_engine(&bundle, &engine)?;
+    let perq_eval = perq::eval::perplexity::evaluate_stream(
+        &engine, &qm.model, &qm.cfg, &qm.ws, &qm.graph, Source::Wiki, 8192,
+    )?;
+    println!("PeRQ* (INT4, b=32) ppl:   {:.3}", perq_eval.perplexity);
 
     // the same pipeline without the permutation — the paper's ablation
     let report_np = Pipeline::new(presets::no_permute(32, Format::Int4))
@@ -64,8 +70,24 @@ fn main() -> anyhow::Result<()> {
 
     println!(
         "\npermutation recovers {:.0}% of the quantization gap",
-        100.0 * (report_np.perplexity - report.perplexity)
+        100.0 * (report_np.perplexity - perq_eval.perplexity)
             / (report_np.perplexity - fp.perplexity).max(1e-9)
+    );
+
+    // quantize once, serve many: export the already-quantized model as a
+    // versioned .perq deployment artifact, reload it, and evaluate without
+    // touching any calibration code — the loaded copy scores
+    // bit-identically on the native backend.
+    let path = std::env::temp_dir().join("perq_quickstart.perq");
+    qm.save(&path)?;
+    let dm = DeployedModel::load(&path)?;
+    let eval = dm.evaluate(Source::Wiki, 8192)?;
+    println!(
+        "reloaded {} from {} ({:.1} KiB on disk): ppl {:.3}",
+        dm.label,
+        path.display(),
+        std::fs::metadata(&path)?.len() as f64 / 1024.0,
+        eval.perplexity
     );
     Ok(())
 }

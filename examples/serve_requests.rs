@@ -1,5 +1,7 @@
-//! Serving driver: quantize a model with PeRQ*, stand up the dynamic-
-//! batching inference server, fire a stream of scoring requests with
+//! Serving driver: quantize a model with PeRQ* **once**, export it as a
+//! versioned `.perq` deployment artifact, then stand up the dynamic-
+//! batching inference server from the *loaded artifact* (no calibration
+//! state crosses the boundary), fire a stream of scoring requests with
 //! random arrival gaps, and report latency / throughput per block size —
 //! the runtime side of the paper's Appendix A compute argument, plus the
 //! analytic rotation op counts for context.
@@ -166,7 +168,22 @@ fn start_server(engine: &Engine, bundle: &ModelBundle, qm: &QuantizedModel,
     let wait = Duration::from_millis(20);
     match engine.backend() {
         BackendKind::Native => {
-            InferenceServer::start_native(&bundle.cfg, &qm.ws, &qm.graph, wait, num_workers)
+            // quantize-once / serve-many: round-trip through the versioned
+            // .perq deployment artifact and serve the *loaded* copy — the
+            // replicas come up from the file alone, in milliseconds.
+            let path = std::env::temp_dir()
+                .join(format!("serve_requests_{}_{}.perq", bundle.name, qm.graph.tag()));
+            qm.save(&path)?;
+            let t0 = Instant::now();
+            let dm = perq::deploy::DeployedModel::load(&path)?;
+            let server = InferenceServer::start_deployed(&dm, wait, num_workers)?;
+            println!(
+                "    .perq artifact: {:.1} KiB, load + {num_workers} replica(s) \
+                 ready in {:.1}ms (no calibration)",
+                std::fs::metadata(&path)?.len() as f64 / 1024.0,
+                t0.elapsed().as_secs_f64() * 1e3
+            );
+            Ok(server)
         }
         BackendKind::Pjrt => start_pjrt_server(engine, bundle, qm, wait, num_workers),
     }

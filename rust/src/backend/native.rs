@@ -135,6 +135,12 @@ impl NativeBackend {
         Ok(NativeBackend { cfg, ws, graph, rot3, format, pool: BufPool::new(), packed, qa })
     }
 
+    /// Build a backend straight from a loaded `.perq` deployment artifact
+    /// — the serving entry point that never touches calibration code.
+    pub fn from_deployed(dm: &crate::deploy::DeployedModel) -> Result<NativeBackend> {
+        NativeBackend::new(dm.cfg.clone(), dm.ws.clone(), dm.graph.clone())
+    }
+
     /// Whether this backend serves from packed low-bit weights.
     pub fn is_packed(&self) -> bool {
         self.packed.is_some()

@@ -41,9 +41,15 @@ pub struct Pipeline {
 }
 
 /// The output of the offline PTQ stages: transformed + quantized weights
-/// plus everything needed to execute the matching artifact (eval or the
-/// `coordinator::server` path).
+/// plus everything needed to execute the matching artifact (eval, the
+/// `coordinator::server` path, or a `.perq` deployment artifact via
+/// [`QuantizedModel::save`]).
 pub struct QuantizedModel {
+    /// the bundle name this model was quantized from
+    pub model: String,
+    /// the pipeline label (`PipelineSpec::label`)
+    pub label: String,
+    pub cfg: crate::model::ModelConfig,
     pub ws: WeightSet,
     /// backend-neutral description of the matching forward graph
     pub graph: ForwardGraph,
@@ -53,6 +59,55 @@ pub struct QuantizedModel {
     pub extras: Vec<ExtraInput>,
     pub mass_balance: f64,
     pub calib_tokens: usize,
+    /// pipeline seed (provenance)
+    pub seed: u64,
+    /// fused per-layer P3 permutations — already merged into `ws`
+    /// (Remark 4.2); retained for artifact provenance
+    pub perms: Vec<Vec<u32>>,
+}
+
+impl QuantizedModel {
+    fn provenance(&self) -> crate::deploy::Provenance {
+        crate::deploy::Provenance {
+            seed: self.seed,
+            spec: self.label.clone(),
+            writer: format!("perq {}", env!("CARGO_PKG_VERSION")),
+            mass_balance: self.mass_balance,
+            calib_tokens: self.calib_tokens,
+        }
+    }
+
+    /// Write this model as a versioned `.perq` deployment artifact —
+    /// the quantize-once half of quantize-once / serve-many. The file
+    /// round-trips bit-exactly: serving the loaded artifact scores
+    /// bit-identically to serving this in-process model.
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        crate::deploy::write_model(
+            path, &self.model, &self.label, &self.cfg, &self.ws, &self.graph,
+            &self.perms, &self.provenance(),
+        )
+    }
+
+    /// Load a `.perq` artifact (convenience alias for
+    /// [`crate::deploy::DeployedModel::load`]).
+    pub fn load(path: &std::path::Path) -> Result<crate::deploy::DeployedModel> {
+        crate::deploy::DeployedModel::load(path)
+    }
+
+    /// The in-memory deployment view of this model (no disk round-trip) —
+    /// what [`QuantizedModel::save`] + `DeployedModel::load` produce.
+    pub fn deploy(&self) -> crate::deploy::DeployedModel {
+        crate::deploy::DeployedModel {
+            model: self.model.clone(),
+            label: self.label.clone(),
+            cfg: self.cfg.clone(),
+            ws: self.ws.clone(),
+            graph: self.graph.clone(),
+            perms: self.perms.clone(),
+            provenance: self.provenance(),
+            version: crate::deploy::artifact::FORMAT_VERSION,
+        }
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -195,6 +250,7 @@ impl Pipeline {
         // ---- stage 2: permutation calibration + merge (Alg 1 / Rmk 4.2) --
         let perm_tokens = (spec.perm_calib_seqs * cfg.seq_len).min(caps.n_tokens);
         let mut mass_balance = 0.0f64;
+        let mut perms: Vec<Vec<u32>> = Vec::with_capacity(cfg.n_layers);
         for l in 0..cfg.n_layers {
             let down = &caps.down_in[l];
             let sub_rows: Vec<&[f32]> = (0..perm_tokens.min(down.rows)).map(|r| down.row(r)).collect();
@@ -207,6 +263,7 @@ impl Pipeline {
             mass_balance += if lb > 0.0 { got / lb } else { 1.0 };
             transform::merge_p3_layer(&mut ws, l, &perm);
             caps.down_in[l] = caps.down_in[l].permute_cols(&perm);
+            perms.push(perm.iter().map(|&i| i as u32).collect());
         }
         mass_balance /= cfg.n_layers as f64;
 
@@ -265,12 +322,17 @@ impl Pipeline {
         }
         let _ = t0;
         Ok(QuantizedModel {
+            model: bundle.name.clone(),
+            label: spec.label(),
+            cfg: cfg.clone(),
             ws,
             extras: graph.extras()?,
             eval_tag,
             graph,
             mass_balance,
             calib_tokens: caps.n_tokens,
+            seed: spec.seed,
+            perms,
         })
     }
 

@@ -66,6 +66,28 @@ pub fn online(mut spec: PipelineSpec) -> PipelineSpec {
     spec
 }
 
+/// CLI-facing preset names, in help-text order. [`parse`] accepts exactly
+/// these — the single registry both the `perq` dispatch and its help text
+/// share, so they cannot drift.
+pub fn names() -> &'static [&'static str] {
+    &["perq_star", "perq_dagger", "no_permute", "mr_rtn", "mr_gptq", "mr_qronos", "brq_spin"]
+}
+
+/// Resolve a preset by CLI name at the given block size and format.
+/// Returns `None` for unknown names (see [`names`]).
+pub fn parse(name: &str, block: usize, format: Format) -> Option<PipelineSpec> {
+    Some(match name {
+        "perq_star" => perq_star(block, format),
+        "perq_dagger" => perq_dagger(block, format),
+        "no_permute" => no_permute(block, format),
+        "mr_rtn" => mr(block, Rounding::Rtn, format),
+        "mr_gptq" => mr(block, Rounding::Gptq, format),
+        "mr_qronos" => mr(block, Rounding::Qronos, format),
+        "brq_spin" => brq_spin(block, format),
+        _ => return None,
+    })
+}
+
 /// All Table 2 method rows for a given format, in paper order.
 pub fn table2_methods(format: Format) -> Vec<(&'static str, PipelineSpec)> {
     vec![
@@ -95,5 +117,27 @@ mod tests {
     #[test]
     fn table2_has_six_methods() {
         assert_eq!(table2_methods(Format::Int4).len(), 6);
+    }
+
+    #[test]
+    fn every_registered_name_parses() {
+        for name in names() {
+            let spec = parse(name, 32, Format::Int4)
+                .unwrap_or_else(|| panic!("registered preset {name} must parse"));
+            assert_eq!(spec.rotation.r3_block, 32);
+        }
+        assert!(parse("perq_nope", 32, Format::Int4).is_none());
+    }
+
+    #[test]
+    fn parse_matches_direct_constructors() {
+        assert_eq!(
+            parse("mr_gptq", 16, Format::Mxfp4).unwrap().label(),
+            mr(16, Rounding::Gptq, Format::Mxfp4).label()
+        );
+        assert_eq!(
+            parse("perq_star", 32, Format::Int8).unwrap().label(),
+            perq_star(32, Format::Int8).label()
+        );
     }
 }

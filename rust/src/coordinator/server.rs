@@ -289,6 +289,16 @@ impl InferenceServer {
         InferenceServer::start_backend(factory, cfg, max_wait, num_workers)
     }
 
+    /// Serve a loaded `.perq` deployment artifact — the serve-many half of
+    /// quantize-once / serve-many. Replicas come up from the artifact
+    /// weights alone (packed low-bit or merged dense); no calibration,
+    /// permutation search, or rounding code runs. Native backend only:
+    /// deployment artifacts carry no AOT HLO graphs.
+    pub fn start_deployed(dm: &crate::deploy::DeployedModel, max_wait: Duration,
+                          num_workers: usize) -> Result<InferenceServer> {
+        InferenceServer::start_native(&dm.cfg, &dm.ws, &dm.graph, max_wait, num_workers)
+    }
+
     /// Submit a scoring request; returns a receiver for the response.
     pub fn submit(&self, tokens: Vec<i32>) -> Result<std::sync::mpsc::Receiver<ScoreResponse>> {
         anyhow::ensure!(tokens.len() == self.cfg.seq_len + 1,

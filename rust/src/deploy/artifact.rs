@@ -1,0 +1,620 @@
+//! The versioned `.perq` container format — the byte-level half of the
+//! deploy subsystem (see `deploy::mod` for the model-level schema).
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! ┌────────────────────────────────────────────────────────────┐
+//! │ magic  "PERQARTF"                                  8 bytes │
+//! │ format version (u32)                               4 bytes │
+//! │ header length H (u32)                              4 bytes │
+//! │ header CRC32 (u32)                                 4 bytes │
+//! │ header JSON (schema: deploy::mod)                  H bytes │
+//! ├── aligned to 64 ───────────────────────────────────────────┤
+//! │ section 0 payload                                          │
+//! ├── aligned to 64 ───────────────────────────────────────────┤
+//! │ section 1 payload …                                        │
+//! ├── aligned to 64 ───────────────────────────────────────────┤
+//! │ footer JSON: the section table                     F bytes │
+//! │   {"sections": [{name, kind, dims, bits,                   │
+//! │                  offset, len, crc}, …]}                    │
+//! │ footer length F (u32) │ footer CRC32 (u32) │ magic 8 bytes │
+//! └────────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! Design notes:
+//! * the header (label, config, provenance, weight names/shapes) is known
+//!   before any payload, so it streams out first; the section table needs
+//!   offsets and checksums, so it lands in a footer — the writer is fully
+//!   streaming (one pass, `Write`-generic, no payload buffering);
+//! * sections are 64-byte aligned, so a reader that maps the file can
+//!   hand out payload slices directly (the in-tree reader loads the file
+//!   into one buffer and borrows sections from it — zero-copy-friendly,
+//!   one copy total);
+//! * every region is independently checksummed (CRC32/IEEE): header,
+//!   footer, and each section. Truncation is caught by the trailing
+//!   magic, corruption by the covering CRC;
+//! * versioning: readers accept `version <= FORMAT_VERSION` and must
+//!   reject anything newer — forward compatibility is explicit re-export,
+//!   never silent reinterpretation. Additive changes (new section kinds,
+//!   new header fields) do not bump the version; layout changes do.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+use std::sync::OnceLock;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// File magic, present at both ends (head: format id; tail: truncation
+/// sentinel).
+pub const MAGIC: &[u8; 8] = b"PERQARTF";
+
+/// Current container format version. Readers reject anything newer.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Section payload alignment (bytes) — mmap/zero-copy friendly.
+pub const ALIGN: usize = 64;
+
+/// Fixed head: magic + version + header length + header crc.
+const HEAD_LEN: usize = 20;
+
+/// Fixed trailer: footer length + footer crc + magic.
+const TRAILER_LEN: usize = 16;
+
+// ---------------------------------------------------------------- crc32
+
+fn crc32_table() -> &'static [u32; 256] {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, slot) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *slot = c;
+        }
+        t
+    })
+}
+
+/// Incremental CRC32 (IEEE 802.3 polynomial) state.
+pub struct Crc32(u32);
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Crc32::new()
+    }
+}
+
+impl Crc32 {
+    pub fn new() -> Crc32 {
+        Crc32(0xFFFF_FFFF)
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        let table = crc32_table();
+        let mut c = self.0;
+        for &b in bytes {
+            c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+        self.0 = c;
+    }
+
+    pub fn finish(&self) -> u32 {
+        self.0 ^ 0xFFFF_FFFF
+    }
+}
+
+/// One-shot CRC32 of a byte slice.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(bytes);
+    c.finish()
+}
+
+// ------------------------------------------------------------- sections
+
+/// A section table entry: where a payload lives and how to validate it.
+/// `dims`/`bits` carry the shape metadata the model-level reader needs to
+/// reconstruct matrices without re-deriving it from the header.
+#[derive(Clone, Debug)]
+pub struct SectionDesc {
+    pub name: String,
+    /// payload kind tag: "f32", "qmat", "u32", …
+    pub kind: String,
+    pub dims: Vec<usize>,
+    /// integer code width for "qmat" sections (0 otherwise)
+    pub bits: u32,
+    /// absolute byte offset of the payload in the file
+    pub offset: usize,
+    pub len: usize,
+    pub crc: u32,
+}
+
+fn sections_to_json(sections: &[SectionDesc]) -> Json {
+    let arr = sections
+        .iter()
+        .map(|s| {
+            let mut m = BTreeMap::new();
+            m.insert("name".to_string(), Json::Str(s.name.clone()));
+            m.insert("kind".to_string(), Json::Str(s.kind.clone()));
+            m.insert(
+                "dims".to_string(),
+                Json::Arr(s.dims.iter().map(|&d| Json::Num(d as f64)).collect()),
+            );
+            m.insert("bits".to_string(), Json::Num(s.bits as f64));
+            m.insert("offset".to_string(), Json::Num(s.offset as f64));
+            m.insert("len".to_string(), Json::Num(s.len as f64));
+            m.insert("crc".to_string(), Json::Num(s.crc as f64));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut root = BTreeMap::new();
+    root.insert("sections".to_string(), Json::Arr(arr));
+    Json::Obj(root)
+}
+
+fn sections_from_json(footer: &Json) -> Result<Vec<SectionDesc>> {
+    let arr = footer
+        .get("sections")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("artifact footer carries no section table"))?;
+    arr.iter()
+        .map(|s| {
+            let str_field = |k: &str| -> Result<String> {
+                Ok(s.get(k)
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("section entry missing {k}"))?
+                    .to_string())
+            };
+            let num_field = |k: &str| -> Result<usize> {
+                s.get(k)
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| anyhow!("section entry missing {k}"))
+            };
+            Ok(SectionDesc {
+                name: str_field("name")?,
+                kind: str_field("kind")?,
+                dims: s
+                    .get("dims")
+                    .and_then(|v| v.as_arr())
+                    .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                    .unwrap_or_default(),
+                bits: num_field("bits")? as u32,
+                offset: num_field("offset")?,
+                len: num_field("len")?,
+                crc: s
+                    .get("crc")
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| anyhow!("section entry missing crc"))? as u32,
+            })
+        })
+        .collect()
+}
+
+// --------------------------------------------------------------- writer
+
+/// Streaming `.perq` writer: header up front, sections appended one at a
+/// time (length + CRC accumulated on the fly), section table in the
+/// footer. Payloads are never buffered, so writing a model costs O(1)
+/// extra memory over the weights it serializes.
+pub struct ArtifactWriter<W: Write> {
+    out: W,
+    pos: usize,
+    sections: Vec<SectionDesc>,
+    cur: Option<Crc32>,
+}
+
+impl<W: Write> ArtifactWriter<W> {
+    /// Write the fixed head + header JSON and return a writer positioned
+    /// for the first section.
+    pub fn new(mut out: W, header: &Json) -> Result<ArtifactWriter<W>> {
+        let hjson = json::dump(header);
+        let hbytes = hjson.as_bytes();
+        out.write_all(MAGIC)?;
+        out.write_all(&FORMAT_VERSION.to_le_bytes())?;
+        out.write_all(&(hbytes.len() as u32).to_le_bytes())?;
+        out.write_all(&crc32(hbytes).to_le_bytes())?;
+        out.write_all(hbytes)?;
+        Ok(ArtifactWriter {
+            out,
+            pos: HEAD_LEN + hbytes.len(),
+            sections: Vec::new(),
+            cur: None,
+        })
+    }
+
+    /// Open a new section (pads to [`ALIGN`] first).
+    pub fn begin_section(&mut self, name: &str, kind: &str, dims: &[usize], bits: u32) -> Result<()> {
+        ensure!(self.cur.is_none(), "previous section was not ended");
+        self.pad_file(ALIGN)?;
+        self.sections.push(SectionDesc {
+            name: name.to_string(),
+            kind: kind.to_string(),
+            dims: dims.to_vec(),
+            bits,
+            offset: self.pos,
+            len: 0,
+            crc: 0,
+        });
+        self.cur = Some(Crc32::new());
+        Ok(())
+    }
+
+    /// Append raw bytes to the open section.
+    pub fn write_bytes(&mut self, bytes: &[u8]) -> Result<()> {
+        let crc = self
+            .cur
+            .as_mut()
+            .ok_or_else(|| anyhow!("write outside an open section"))?;
+        crc.update(bytes);
+        self.out.write_all(bytes)?;
+        self.pos += bytes.len();
+        self.sections.last_mut().expect("open section").len += bytes.len();
+        Ok(())
+    }
+
+    /// Append f32 values (little-endian), chunked to bound scratch.
+    pub fn write_f32s(&mut self, values: &[f32]) -> Result<()> {
+        let mut buf = Vec::with_capacity(values.len().min(16_384) * 4);
+        for chunk in values.chunks(16_384) {
+            buf.clear();
+            for x in chunk {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+            self.write_bytes(&buf)?;
+        }
+        Ok(())
+    }
+
+    /// Append i32 values (little-endian).
+    pub fn write_i32s(&mut self, values: &[i32]) -> Result<()> {
+        let mut buf = Vec::with_capacity(values.len().min(16_384) * 4);
+        for chunk in values.chunks(16_384) {
+            buf.clear();
+            for x in chunk {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+            self.write_bytes(&buf)?;
+        }
+        Ok(())
+    }
+
+    /// Append u32 values (little-endian).
+    pub fn write_u32s(&mut self, values: &[u32]) -> Result<()> {
+        let mut buf = Vec::with_capacity(values.len().min(16_384) * 4);
+        for chunk in values.chunks(16_384) {
+            buf.clear();
+            for x in chunk {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+            self.write_bytes(&buf)?;
+        }
+        Ok(())
+    }
+
+    /// Zero-pad *inside* the open section to the given alignment of the
+    /// section-relative position (padding counts toward len and CRC).
+    pub fn pad_section(&mut self, align: usize) -> Result<()> {
+        ensure!(self.cur.is_some(), "pad_section outside an open section");
+        let sec_pos = self.sections.last().expect("open section").len;
+        let rem = sec_pos % align;
+        if rem != 0 {
+            self.write_bytes(&vec![0u8; align - rem])?;
+        }
+        Ok(())
+    }
+
+    /// Close the open section, sealing its CRC.
+    pub fn end_section(&mut self) -> Result<()> {
+        let crc = self
+            .cur
+            .take()
+            .ok_or_else(|| anyhow!("end_section without an open section"))?;
+        self.sections.last_mut().expect("open section").crc = crc.finish();
+        Ok(())
+    }
+
+    /// Zero-pad the file position to `align` (between sections only).
+    fn pad_file(&mut self, align: usize) -> Result<()> {
+        let rem = self.pos % align;
+        if rem != 0 {
+            let pad = align - rem;
+            self.out.write_all(&vec![0u8; pad])?;
+            self.pos += pad;
+        }
+        Ok(())
+    }
+
+    /// Write the footer section table + trailer and flush.
+    pub fn finish(mut self) -> Result<()> {
+        ensure!(self.cur.is_none(), "finish with an unfinished section");
+        self.pad_file(ALIGN)?;
+        let fjson = json::dump(&sections_to_json(&self.sections));
+        let fbytes = fjson.as_bytes();
+        self.out.write_all(fbytes)?;
+        self.out.write_all(&(fbytes.len() as u32).to_le_bytes())?;
+        self.out.write_all(&crc32(fbytes).to_le_bytes())?;
+        self.out.write_all(MAGIC)?;
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+// --------------------------------------------------------------- reader
+
+/// A fully-validated `.perq` file: header parsed, section table located,
+/// every CRC checked, all bounds verified. Section payloads are borrowed
+/// slices of the single file buffer.
+pub struct ArtifactReader {
+    pub version: u32,
+    pub header: Json,
+    data: Vec<u8>,
+    sections: Vec<SectionDesc>,
+    by_name: BTreeMap<String, usize>,
+}
+
+fn u32_at(data: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes([data[at], data[at + 1], data[at + 2], data[at + 3]])
+}
+
+impl ArtifactReader {
+    pub fn open(path: &Path) -> Result<ArtifactReader> {
+        let data =
+            std::fs::read(path).with_context(|| format!("reading artifact {path:?}"))?;
+        ArtifactReader::from_bytes(data)
+            .with_context(|| format!("loading artifact {path:?}"))
+    }
+
+    pub fn from_bytes(data: Vec<u8>) -> Result<ArtifactReader> {
+        ensure!(
+            data.len() >= HEAD_LEN + TRAILER_LEN,
+            "artifact truncated ({} bytes — smaller than the fixed framing)",
+            data.len()
+        );
+        let (version, hlen) = read_head(&data)?;
+        ensure!(
+            HEAD_LEN + hlen + TRAILER_LEN <= data.len(),
+            "artifact truncated inside the header"
+        );
+        let hbytes = &data[HEAD_LEN..HEAD_LEN + hlen];
+        let hcrc = u32_at(&data, 16);
+        ensure!(
+            crc32(hbytes) == hcrc,
+            "header checksum mismatch — corrupted artifact"
+        );
+        let header = json::parse(
+            std::str::from_utf8(hbytes).context("artifact header is not UTF-8")?,
+        )
+        .context("parsing artifact header JSON")?;
+
+        // trailer: the truncation sentinel, then the footer section table
+        let n = data.len();
+        ensure!(
+            &data[n - 8..] == MAGIC,
+            "trailing magic missing — truncated artifact"
+        );
+        let flen = u32_at(&data, n - TRAILER_LEN) as usize;
+        let fcrc = u32_at(&data, n - TRAILER_LEN + 4);
+        ensure!(
+            flen + TRAILER_LEN <= n && n - TRAILER_LEN - flen >= HEAD_LEN + hlen,
+            "artifact truncated before the section table"
+        );
+        let fstart = n - TRAILER_LEN - flen;
+        let fbytes = &data[fstart..fstart + flen];
+        ensure!(
+            crc32(fbytes) == fcrc,
+            "section-table checksum mismatch — corrupted artifact"
+        );
+        let footer = json::parse(
+            std::str::from_utf8(fbytes).context("section table is not UTF-8")?,
+        )
+        .context("parsing artifact section table")?;
+        let sections = sections_from_json(&footer)?;
+
+        let mut by_name = BTreeMap::new();
+        for (i, s) in sections.iter().enumerate() {
+            // offsets/lens come from the (attacker-controllable) section
+            // table, so the bound check must not itself overflow
+            let end = s
+                .offset
+                .checked_add(s.len)
+                .ok_or_else(|| anyhow!("section {} extent overflows", s.name))?;
+            ensure!(
+                s.offset >= HEAD_LEN + hlen && end <= fstart,
+                "section {} points outside the payload area",
+                s.name
+            );
+            ensure!(
+                crc32(&data[s.offset..end]) == s.crc,
+                "section {} checksum mismatch — corrupted artifact",
+                s.name
+            );
+            ensure!(
+                by_name.insert(s.name.clone(), i).is_none(),
+                "duplicate section {}",
+                s.name
+            );
+        }
+        Ok(ArtifactReader { version, header, data, sections, by_name })
+    }
+
+    pub fn sections(&self) -> &[SectionDesc] {
+        &self.sections
+    }
+
+    pub fn section(&self, name: &str) -> Option<&SectionDesc> {
+        self.by_name.get(name).map(|&i| &self.sections[i])
+    }
+
+    /// Borrow a section's (already CRC-verified) payload bytes.
+    pub fn bytes(&self, s: &SectionDesc) -> &[u8] {
+        &self.data[s.offset..s.offset + s.len]
+    }
+
+    pub fn f32s(&self, s: &SectionDesc) -> Result<Vec<f32>> {
+        le_f32s(self.bytes(s))
+    }
+
+    pub fn u32s(&self, s: &SectionDesc) -> Result<Vec<u32>> {
+        let b = self.bytes(s);
+        ensure!(b.len() % 4 == 0, "section {} is not u32-aligned", s.name);
+        Ok(b.chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// Decode little-endian f32s from raw bytes.
+pub fn le_f32s(b: &[u8]) -> Result<Vec<f32>> {
+    ensure!(b.len() % 4 == 0, "f32 payload length {} is not a multiple of 4", b.len());
+    Ok(b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Decode little-endian i32s from raw bytes.
+pub fn le_i32s(b: &[u8]) -> Result<Vec<i32>> {
+    ensure!(b.len() % 4 == 0, "i32 payload length {} is not a multiple of 4", b.len());
+    Ok(b.chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Validate the fixed head (magic + version) and return
+/// `(version, header_len)`. Shared by the full reader and the cheap
+/// header-only path.
+fn read_head(head: &[u8]) -> Result<(u32, usize)> {
+    ensure!(head.len() >= HEAD_LEN, "artifact shorter than the fixed head");
+    ensure!(
+        &head[0..8] == MAGIC,
+        "bad magic — not a .perq deployment artifact"
+    );
+    let version = u32_at(head, 8);
+    ensure!(version >= 1, "bad artifact format version 0");
+    if version > FORMAT_VERSION {
+        bail!(
+            "artifact format version {version} is newer than this build supports \
+             (max {FORMAT_VERSION}) — upgrade perq or re-export the artifact"
+        );
+    }
+    Ok((version, u32_at(head, 12) as usize))
+}
+
+/// Read and validate only the head + header JSON — the cheap path for
+/// listings (`perq models`) that must not load payloads.
+pub fn read_header(path: &Path) -> Result<(u32, Json)> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening artifact {path:?}"))?;
+    let mut head = [0u8; HEAD_LEN];
+    f.read_exact(&mut head)
+        .with_context(|| format!("reading artifact head of {path:?}"))?;
+    let (version, hlen) = read_head(&head)?;
+    let hcrc = u32_at(&head, 16);
+    let mut hbytes = vec![0u8; hlen];
+    f.read_exact(&mut hbytes)
+        .with_context(|| format!("reading artifact header of {path:?}"))?;
+    ensure!(
+        crc32(&hbytes) == hcrc,
+        "header checksum mismatch — corrupted artifact {path:?}"
+    );
+    let header = json::parse(std::str::from_utf8(&hbytes).context("header is not UTF-8")?)
+        .with_context(|| format!("parsing artifact header of {path:?}"))?;
+    Ok((version, header))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn header() -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("model".to_string(), Json::Str("t".to_string()));
+        Json::Obj(m)
+    }
+
+    fn sample() -> Vec<u8> {
+        let mut buf = Vec::new();
+        {
+            let mut w = ArtifactWriter::new(&mut buf, &header()).unwrap();
+            w.begin_section("a", "f32", &[2, 3], 0).unwrap();
+            w.write_f32s(&[1.0, -2.5, 3.0, 0.0, 7.0, -0.125]).unwrap();
+            w.end_section().unwrap();
+            w.begin_section("b", "u32", &[3], 0).unwrap();
+            w.write_u32s(&[5, 0, 9]).unwrap();
+            w.end_section().unwrap();
+            w.begin_section("c", "qmat", &[4, 2], 4).unwrap();
+            w.write_bytes(&[0xAB, 0xCD, 0x01]).unwrap();
+            w.pad_section(4).unwrap();
+            w.write_i32s(&[-7, 7]).unwrap();
+            w.end_section().unwrap();
+            w.finish().unwrap();
+        }
+        buf
+    }
+
+    #[test]
+    fn round_trip_sections() {
+        let r = ArtifactReader::from_bytes(sample()).unwrap();
+        assert_eq!(r.version, FORMAT_VERSION);
+        assert_eq!(r.header.get("model").and_then(|v| v.as_str()), Some("t"));
+        assert_eq!(r.sections().len(), 3);
+        let a = r.section("a").unwrap();
+        assert_eq!((a.kind.as_str(), a.dims.as_slice()), ("f32", &[2usize, 3][..]));
+        assert_eq!(a.offset % ALIGN, 0, "sections are aligned");
+        assert_eq!(r.f32s(a).unwrap(), vec![1.0, -2.5, 3.0, 0.0, 7.0, -0.125]);
+        let b = r.section("b").unwrap();
+        assert_eq!(r.u32s(b).unwrap(), vec![5, 0, 9]);
+        let c = r.section("c").unwrap();
+        assert_eq!(c.bits, 4);
+        // 3 payload bytes padded to 4, then two i32s
+        assert_eq!(c.len, 4 + 8);
+        assert_eq!(&r.bytes(c)[..4], &[0xAB, 0xCD, 0x01, 0x00]);
+        assert_eq!(le_i32s(&r.bytes(c)[4..]).unwrap(), vec![-7, 7]);
+        assert!(r.section("missing").is_none());
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_future_version() {
+        let good = sample();
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        assert!(ArtifactReader::from_bytes(bad).is_err());
+        let mut newer = good.clone();
+        newer[8..12].copy_from_slice(&(FORMAT_VERSION + 1).to_le_bytes());
+        let err = ArtifactReader::from_bytes(newer).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn rejects_corruption_everywhere() {
+        let good = sample();
+        // header byte
+        let mut b = good.clone();
+        b[HEAD_LEN + 2] ^= 0x01;
+        assert!(ArtifactReader::from_bytes(b).is_err());
+        // a payload byte inside section "a"
+        let r = ArtifactReader::from_bytes(good.clone()).unwrap();
+        let off = r.section("a").unwrap().offset;
+        let mut b = good.clone();
+        b[off + 1] ^= 0x40;
+        let err = ArtifactReader::from_bytes(b).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+        // truncation
+        let b = good[..good.len() - 5].to_vec();
+        assert!(ArtifactReader::from_bytes(b).is_err());
+        // empty file
+        assert!(ArtifactReader::from_bytes(Vec::new()).is_err());
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // the canonical IEEE test vector
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+}

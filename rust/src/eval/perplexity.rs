@@ -49,6 +49,15 @@ pub fn evaluate_stream(engine: &Engine, model: &str, cfg: &ModelConfig,
     evaluate_with(&mut *score, cfg, source, n_tokens)
 }
 
+/// Evaluate a loaded `.perq` deployment artifact through the engine's
+/// backend — no calibration or quantization code runs; the artifact
+/// weights are served as-is. (For the engine-free native path, see
+/// `deploy::DeployedModel::evaluate`.)
+pub fn evaluate_deployed(engine: &Engine, dm: &crate::deploy::DeployedModel,
+                         source: Source, n_tokens: usize) -> Result<EvalResult> {
+    evaluate_stream(engine, &dm.model, &dm.cfg, &dm.ws, &dm.graph, source, n_tokens)
+}
+
 /// The backend-agnostic streaming core: non-overlapping windows, batched,
 /// tail batches padded with the last real window (padding excluded from
 /// the NLL). `score` takes `batch * seq_len` tokens → flat logits.

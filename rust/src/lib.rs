@@ -38,6 +38,7 @@ pub mod backend;
 pub mod calib;
 pub mod coordinator;
 pub mod data;
+pub mod deploy;
 pub mod eval;
 pub mod hadamard;
 pub mod model;
@@ -52,8 +53,9 @@ pub mod util;
 /// Convenience re-exports for examples and benches.
 pub mod prelude {
     pub use crate::backend::{BackendKind, ExecBackend, ForwardGraph, NativeBackend};
-    pub use crate::coordinator::pipeline::{baseline_eval, Pipeline, PipelineReport};
+    pub use crate::coordinator::pipeline::{baseline_eval, Pipeline, PipelineReport, QuantizedModel};
     pub use crate::coordinator::presets;
+    pub use crate::deploy::DeployedModel;
     pub use crate::coordinator::spec::{GraphKind, PipelineSpec, RotKind, RotationSpec};
     pub use crate::data::corpus::Source;
     pub use crate::model::bundle::ModelBundle;

@@ -2,30 +2,41 @@
 //!
 //! Subcommands:
 //!   quantize   run a full PTQ pipeline and report perplexity / 0-shot
+//!   export     quantize once and write a versioned .perq deployment
+//!              artifact (no evaluation)
+//!   serve      load a .perq artifact and serve scoring requests — no
+//!              calibration; start-to-ready lands in BENCH_deploy.json
 //!   baseline   evaluate the full-precision model
 //!   sweep      block-size sweep (Table 1 style) for one method
 //!   opcounts   print the analytic rotation op-count tables (Tables 3-4)
 //!   stats      mass-concentration statistics on real activations (Fig 3-4)
-//!   models     list available model bundles
+//!   models     list model bundles and exported .perq artifacts
 //!
 //! Examples:
 //!   perq quantize --model llama_tiny --preset perq_star --block 32
-//!   perq quantize --model llama_tiny --perm zigzag --rounding gptq --format fp4
+//!   perq export --model llama_np2 --preset perq_star --block 32 --out m.perq
+//!   perq serve --artifact m.perq --requests 64 --workers 4
 //!   perq sweep --model llama_tiny --blocks 16,32,64 --format int4
 //!   perq baseline --model qwen_tiny
 
-use anyhow::{anyhow, bail, Result};
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
 
 use perq::backend::BackendKind;
 use perq::calib::capture;
 use perq::coordinator::presets;
 use perq::coordinator::spec::{GraphKind, PipelineSpec, RotationSpec};
+use perq::data::corpus::{token_stream, Split};
+use perq::deploy;
 use perq::hadamard::opcount;
 use perq::model::transform;
 use perq::prelude::*;
 use perq::stats;
-use perq::util::bench::{fmt_count, fmt_ppl, print_table};
+use perq::util::bench::{append_trajectory, fmt_count, fmt_ppl, print_table};
 use perq::util::cli;
+use perq::util::json::{self, Json};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -39,6 +50,8 @@ fn main() {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let result = match cmd {
         "quantize" => cmd_quantize(&args),
+        "export" => cmd_export(&args),
+        "serve" => cmd_serve(&args),
         "baseline" => cmd_baseline(&args),
         "sweep" => cmd_sweep(&args),
         "opcounts" => cmd_opcounts(),
@@ -63,22 +76,28 @@ fn print_help() {
          \n\
          COMMANDS:\n\
          \x20 quantize   --model M [--preset P | --perm/--rounding/--format/--block ...]\n\
+         \x20 export     --model M [--preset P ...] --out m.perq\n\
+         \x20            (quantize once, write a versioned deployment artifact)\n\
+         \x20 serve      --artifact m.perq [--requests N] [--workers W]\n\
+         \x20            (load + serve, no calibration; appends BENCH_deploy.json)\n\
          \x20 baseline   --model M [--eval-tokens N]\n\
          \x20 sweep      --model M --blocks 16,32,64 [--perm massdiff]\n\
          \x20 opcounts   (analytic Tables 3-4)\n\
          \x20 stats      --model M [--block B]\n\
-         \x20 models\n\
+         \x20 models     (bundles + exported .perq artifacts)\n\
          \n\
-         PRESETS: perq_star perq_dagger no_permute mr_rtn mr_gptq mr_qronos brq_spin\n\
+         PRESETS: {}\n\
          OPTIONS: --perm identity|random|absmax|zigzag|massdiff\n\
-         \x20        --rounding rtn|gptq|qronos   --format int4|fp4|mxfp4\n\
+         \x20        --rounding rtn|gptq|qronos   --format int4|int8|fp4|mxfp4\n\
          \x20        --block N   --online   --zeroshot   --eval-tokens N\n\
-         \x20        --calib-seqs N   --source wiki|c4|fineweb\n\
+         \x20        --calib-seqs N   --source wiki|c4|fineweb (calib + eval)\n\
+         \x20        --eval-source wiki|c4|fineweb (override eval split only)\n\
          \x20        --backend native|pjrt|auto (native = pure-Rust forward,\n\
          \x20                  no PJRT/XLA or HLO artifacts required)\n\
          \x20        --threads N  worker-pool lanes (default: PERQ_THREADS\n\
          \x20                  env, else core count; PERQ_SIMD={{auto,avx2,\n\
-         \x20                  neon,scalar}} overrides kernel dispatch)"
+         \x20                  neon,scalar}} overrides kernel dispatch)",
+        presets::names().join(" ")
     );
 }
 
@@ -87,16 +106,9 @@ fn spec_from_args(args: &cli::Args) -> Result<PipelineSpec> {
     let format = Format::parse(&args.get_or("format", "int4"))
         .ok_or_else(|| anyhow!("bad --format"))?;
     let mut spec = if let Some(preset) = args.get("preset") {
-        match preset {
-            "perq_star" => presets::perq_star(block, format),
-            "perq_dagger" => presets::perq_dagger(block, format),
-            "no_permute" => presets::no_permute(block, format),
-            "mr_rtn" => presets::mr(block, Rounding::Rtn, format),
-            "mr_gptq" => presets::mr(block, Rounding::Gptq, format),
-            "mr_qronos" => presets::mr(block, Rounding::Qronos, format),
-            "brq_spin" => presets::brq_spin(block, format),
-            p => bail!("unknown preset {p}"),
-        }
+        presets::parse(preset, block, format).ok_or_else(|| {
+            anyhow!("unknown preset {preset} (expected one of: {})", presets::names().join(" "))
+        })?
     } else {
         let mut s = PipelineSpec::default();
         s.rotation = RotationSpec::quarot(block);
@@ -119,7 +131,14 @@ fn spec_from_args(args: &cli::Args) -> Result<PipelineSpec> {
     spec.calib_seqs = args.get_usize("calib-seqs", spec.calib_seqs);
     if let Some(src) = args.get("source") {
         let s = Source::parse(src).ok_or_else(|| anyhow!("bad --source"))?;
+        // --source selects the corpus for the whole run: calibration AND
+        // evaluation (previously only calibration was switched, silently
+        // evaluating on the default split). --eval-source overrides below.
         spec.calib_source = s;
+        spec.eval_source = s;
+    }
+    if let Some(src) = args.get("eval-source") {
+        spec.eval_source = Source::parse(src).ok_or_else(|| anyhow!("bad --eval-source"))?;
     }
     Ok(spec)
 }
@@ -128,6 +147,146 @@ fn spec_from_args(args: &cli::Args) -> Result<PipelineSpec> {
 fn engine_from_args(args: &cli::Args, ctx: &RepoContext) -> Result<Engine> {
     let kind = BackendKind::resolve(args.get("backend"), ctx)?;
     Engine::with_backend(ctx, kind)
+}
+
+/// Engine + bundle resolution with the synthetic fallback: no artifacts
+/// tree (or no trained weights) still yields a runnable native setup, so
+/// `perq export` works from a bare checkout — the CI smoke path.
+fn engine_and_bundle(args: &cli::Args, model: &str) -> Result<(Engine, ModelBundle)> {
+    match RepoContext::discover() {
+        Ok(ctx) => {
+            let kind = BackendKind::resolve(args.get("backend"), &ctx)?;
+            let engine = Engine::with_backend(&ctx, kind)?;
+            match ModelBundle::load(&ctx, model) {
+                Ok(b) => Ok((engine, b)),
+                Err(e) if kind == BackendKind::Native => {
+                    eprintln!("note: {e:#}\n      — falling back to synthetic weights");
+                    Ok((engine, ModelBundle::synthetic(model)?))
+                }
+                Err(e) => Err(e),
+            }
+        }
+        Err(_) => {
+            anyhow::ensure!(
+                !matches!(args.get("backend"), Some("pjrt")),
+                "--backend pjrt requires an artifacts/ tree (run `make artifacts`)"
+            );
+            Ok((Engine::native_ephemeral(), ModelBundle::synthetic(model)?))
+        }
+    }
+}
+
+/// `perq export`: run the offline PTQ stages once and write the result as
+/// a versioned `.perq` deployment artifact — no evaluation, no serving.
+fn cmd_export(args: &cli::Args) -> Result<()> {
+    let model = args.get_or("model", "llama_tiny");
+    let out = args.get_or("out", &format!("{model}.perq"));
+    let (engine, bundle) = engine_and_bundle(args, &model)?;
+    let spec = spec_from_args(args)?;
+    println!("pipeline: {}", spec.label());
+    println!("backend:  {}", engine.backend().name());
+    println!("model:    {} ({} params)", model, bundle.weights.param_count());
+    let t0 = Instant::now();
+    let qm = Pipeline::new(spec).quantize_with_engine(&bundle, &engine)?;
+    let quantize_s = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    qm.save(Path::new(&out))?;
+    let write_ms = t1.elapsed().as_secs_f64() * 1e3;
+    let bytes = std::fs::metadata(&out)?.len();
+    println!(
+        "exported {out}: {} — {} packed / {} dense sites, {:.1} KiB \
+         ({quantize_s:.1}s quantize + {write_ms:.0}ms write)",
+        qm.label,
+        qm.ws.packed.len(),
+        qm.ws.tensors.len(),
+        bytes as f64 / 1024.0,
+    );
+    Ok(())
+}
+
+/// `perq serve`: load a `.perq` artifact, bring up the batching server
+/// (no calibration), fire a deterministic request stream, and append the
+/// start-to-ready / latency numbers to BENCH_deploy.json.
+fn cmd_serve(args: &cli::Args) -> Result<()> {
+    let artifact = args.get("artifact").ok_or_else(|| {
+        anyhow!("serve needs --artifact model.perq (create one with `perq export`)")
+    })?;
+    let n_requests = args.get_usize("requests", 32).max(1);
+    let workers = args.get_usize("workers", 1).max(1);
+    let max_wait = Duration::from_millis(args.get_usize("max-wait-ms", 5) as u64);
+
+    // quantize-once / serve-many: everything below is artifact load +
+    // server bring-up — the offline pipeline never runs here
+    let t0 = Instant::now();
+    let dm = DeployedModel::load(Path::new(artifact))?;
+    let load_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t1 = Instant::now();
+    let server = dm.serve(max_wait, workers)?;
+    let ready_ms = t1.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "{artifact}: {} {} (format v{}) — loaded in {load_ms:.1}ms, \
+         {workers} replica(s) ready in {ready_ms:.1}ms, start-to-ready {:.1}ms",
+        dm.model,
+        dm.label,
+        dm.version,
+        load_ms + ready_ms,
+    );
+
+    // deterministic request stream over the held-out split
+    let t = dm.cfg.seq_len;
+    let toks = token_stream(Source::Wiki, Split::Test, (n_requests + 2) * t);
+    let t2 = Instant::now();
+    let mut rxs = Vec::with_capacity(n_requests);
+    for i in 0..n_requests {
+        let start = (i * t) % (toks.len() - t - 1);
+        let window: Vec<i32> = toks[start..start + t + 1].iter().map(|&x| x as i32).collect();
+        rxs.push(server.submit(window)?);
+    }
+    let mut nll = 0.0f64;
+    for rx in rxs {
+        nll += rx.recv()?.nll;
+    }
+    nll /= n_requests as f64;
+    let wall = t2.elapsed().as_secs_f64();
+    let (served, batches, exec_s) = server.stats();
+    let (p50, p95, p99) = server.latency_percentiles();
+    println!(
+        "{served} requests in {wall:.2}s = {:.0} tok/s | mean nll {nll:.6} (ppl {:.2}) | \
+         {batches} batches | exec {exec_s:.2}s | hist p50/p95/p99 {p50:.1}/{p95:.1}/{p99:.1}ms",
+        served as f64 * t as f64 / wall.max(1e-9),
+        nll.exp(),
+    );
+    server.shutdown();
+
+    // build the record through the JSON serializer so paths/labels with
+    // quotes or backslashes stay valid JSON
+    let bench_path = args.get_or("bench-out", "BENCH_deploy.json");
+    let mut o = std::collections::BTreeMap::new();
+    for (k, v) in [
+        ("bench", "deploy".to_string()),
+        ("artifact", artifact.to_string()),
+        ("model", dm.model.clone()),
+        ("label", dm.label.clone()),
+    ] {
+        o.insert(k.to_string(), Json::Str(v));
+    }
+    for (k, v) in [
+        ("workers", workers as f64),
+        ("requests", n_requests as f64),
+        ("load_ms", load_ms),
+        ("ready_ms", ready_ms),
+        ("start_to_ready_ms", load_ms + ready_ms),
+        ("nll", nll),
+        ("wall_s", wall),
+        ("p50_ms", p50),
+        ("p95_ms", p95),
+        ("p99_ms", p99),
+    ] {
+        o.insert(k.to_string(), Json::Num(v));
+    }
+    append_trajectory(Path::new(&bench_path), &json::dump(&Json::Obj(o)))?;
+    println!("appended {bench_path}");
+    Ok(())
 }
 
 fn cmd_quantize(args: &cli::Args) -> Result<()> {
@@ -255,13 +414,57 @@ fn cmd_stats(args: &cli::Args) -> Result<()> {
 }
 
 fn cmd_models() -> Result<()> {
-    let ctx = RepoContext::discover()?;
-    for entry in std::fs::read_dir(&ctx.artifacts)? {
-        let entry = entry?;
-        if entry.path().join("meta.json").exists() {
-            let name = entry.file_name().to_string_lossy().to_string();
-            println!("{name}");
+    // HLO model bundles (meta.json directories) — only with an artifacts
+    // tree; exported .perq artifacts list fine without one.
+    let ctx = RepoContext::discover().ok();
+    let mut any = false;
+    if let Some(ctx) = &ctx {
+        if let Ok(entries) = std::fs::read_dir(&ctx.artifacts) {
+            let mut names: Vec<String> = entries
+                .flatten()
+                .filter(|e| e.path().join("meta.json").exists())
+                .map(|e| e.file_name().to_string_lossy().to_string())
+                .collect();
+            names.sort();
+            for name in names {
+                println!("{name}  (HLO bundle)");
+                any = true;
+            }
         }
+    }
+    // exported .perq deployment artifacts: cwd + the artifacts tree,
+    // summarized from the header alone (format/block/label, no payload IO)
+    let mut dirs = vec![PathBuf::from(".")];
+    if let Some(ctx) = &ctx {
+        dirs.push(ctx.artifacts.clone());
+    }
+    for dir in dirs {
+        let Ok(entries) = std::fs::read_dir(&dir) else { continue };
+        let mut paths: Vec<PathBuf> = entries
+            .flatten()
+            .map(|e| e.path())
+            .filter(|p| p.extension().map_or(false, |e| e == "perq"))
+            .collect();
+        paths.sort();
+        for p in paths {
+            match deploy::inspect(&p) {
+                Ok(info) => println!(
+                    "{}  (.perq v{}: {} {} {} b={} — {})",
+                    p.display(),
+                    info.version,
+                    info.model,
+                    info.graph_kind,
+                    info.format,
+                    info.r3_block,
+                    info.label
+                ),
+                Err(e) => println!("{}  (unreadable .perq: {e:#})", p.display()),
+            }
+            any = true;
+        }
+    }
+    if !any {
+        println!("no model bundles or .perq artifacts found (run `make artifacts` or `perq export`)");
     }
     Ok(())
 }

@@ -34,6 +34,8 @@
 
 use std::cell::RefCell;
 
+use anyhow::{bail, ensure, Result};
+
 use crate::quant::act;
 use crate::quant::WeightCodec;
 use crate::tensor::simd;
@@ -128,6 +130,53 @@ impl QuantMat {
     /// compute the f32 product `t_j · q`).
     pub fn dequantize(&self) -> Mat {
         Mat::from_fn(self.rows, self.cols, |i, j| self.scales[j] * self.code(i, j) as f32)
+    }
+
+    /// The raw packed payload (u4x2 nibble pairs or i8 bit patterns),
+    /// row-major — the bytes the `.perq` deployment artifact persists.
+    pub fn payload_bytes(&self) -> &[u8] {
+        &self.payload
+    }
+
+    /// Per output-channel integer column sums (the zero-point correction
+    /// term), exposed for artifact serialization.
+    pub fn colsums(&self) -> &[i32] {
+        &self.colsum
+    }
+
+    /// Payload byte length of a (rows × cols) matrix packed at `bits` —
+    /// the artifact reader uses this to split a section into payload /
+    /// scales / colsums without trusting stored lengths. Checked: header
+    /// shapes are untrusted input, so an overflowing product is an error,
+    /// never a wrap or a debug panic.
+    pub fn payload_len(rows: usize, cols: usize, bits: u32) -> Result<usize> {
+        let per_row = match bits {
+            4 => cols / 2 + cols % 2,
+            8 => cols,
+            _ => bail!("unsupported packed width int{bits} (expected 4 or 8)"),
+        };
+        rows.checked_mul(per_row)
+            .ok_or_else(|| anyhow::anyhow!("packed {rows}x{cols} int{bits} size overflows"))
+    }
+
+    /// Reassemble a packed matrix from serialized parts (the inverse of
+    /// reading [`QuantMat::payload_bytes`]/`scales`/[`QuantMat::colsums`]),
+    /// validating every length against the declared shape. Round-trips
+    /// bit-exactly: the payload is stored verbatim.
+    pub fn from_parts(rows: usize, cols: usize, bits: u32, payload: Vec<u8>,
+                      scales: Vec<f32>, colsum: Vec<i32>) -> Result<QuantMat> {
+        let want = QuantMat::payload_len(rows, cols, bits)?;
+        ensure!(
+            payload.len() == want,
+            "packed payload holds {} bytes, {}x{} int{} needs {}",
+            payload.len(), rows, cols, bits, want
+        );
+        ensure!(
+            scales.len() == cols && colsum.len() == cols,
+            "per-channel metadata must carry one entry per output column ({} scales, {} colsums, {} cols)",
+            scales.len(), colsum.len(), cols
+        );
+        Ok(QuantMat { rows, cols, bits, payload, scales, colsum })
     }
 
     /// Payload bytes actually held (the weight-memory footprint).
@@ -435,6 +484,34 @@ mod tests {
             assert_eq!(packed.bits, bits);
             assert_eq!(packed.dequantize().data, qw.data, "{fmt:?}");
         }
+    }
+
+    #[test]
+    fn from_parts_round_trips_bit_exact() {
+        for (fmt, bits) in [(Format::Int4, 4u32), (Format::Int8, 8)] {
+            let w = rand_mat(24, 7, 3, 0.2); // odd cols: nibble-tail coverage
+            let codec = WeightCodec::fit(fmt, &w);
+            let qm = QuantMat::from_codec(&codec.quantize_mat(&w), &codec).unwrap();
+            let back = QuantMat::from_parts(
+                qm.rows, qm.cols, qm.bits,
+                qm.payload_bytes().to_vec(),
+                qm.scales.clone(),
+                qm.colsums().to_vec(),
+            )
+            .unwrap();
+            assert_eq!(back.bits, bits);
+            assert_eq!(back.payload_bytes(), qm.payload_bytes());
+            assert_eq!(back.dequantize().data, qm.dequantize().data);
+        }
+    }
+
+    #[test]
+    fn from_parts_rejects_bad_lengths() {
+        assert!(QuantMat::from_parts(4, 4, 4, vec![0u8; 3], vec![1.0; 4], vec![0; 4]).is_err());
+        assert!(QuantMat::from_parts(4, 4, 8, vec![0u8; 16], vec![1.0; 3], vec![0; 4]).is_err());
+        assert!(QuantMat::from_parts(4, 4, 2, vec![0u8; 16], vec![1.0; 4], vec![0; 4]).is_err());
+        assert_eq!(QuantMat::payload_len(4, 5, 4).unwrap(), 4 * 3);
+        assert_eq!(QuantMat::payload_len(4, 5, 8).unwrap(), 20);
     }
 
     #[test]

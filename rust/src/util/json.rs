@@ -57,6 +57,73 @@ impl Json {
     }
 }
 
+/// Serialize a [`Json`] value to compact JSON text. The inverse of
+/// [`parse`] for everything this module can represent: object keys keep
+/// `BTreeMap` order (deterministic output), numbers that hold integral
+/// values print without a fractional part, and non-finite numbers (which
+/// JSON cannot express) degrade to `null`. Used by the `.perq` deployment
+/// artifact headers, which must round-trip through `parse`.
+pub fn dump(j: &Json) -> String {
+    let mut out = String::new();
+    dump_value(j, &mut out);
+    out
+}
+
+fn dump_value(j: &Json, out: &mut String) {
+    match j {
+        Json::Null => out.push_str("null"),
+        Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Json::Num(n) => {
+            if !n.is_finite() {
+                out.push_str("null");
+            } else if n.fract() == 0.0 && n.abs() < 9.0e15 {
+                out.push_str(&format!("{}", *n as i64));
+            } else {
+                // f64 Display is shortest-round-trip, so parse(dump(x)) == x
+                out.push_str(&format!("{n}"));
+            }
+        }
+        Json::Str(s) => dump_string(s, out),
+        Json::Arr(v) => {
+            out.push('[');
+            for (i, x) in v.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                dump_value(x, out);
+            }
+            out.push(']');
+        }
+        Json::Obj(m) => {
+            out.push('{');
+            for (i, (k, v)) in m.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                dump_string(k, out);
+                out.push(':');
+                dump_value(v, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+fn dump_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
 pub fn parse(text: &str) -> Result<Json> {
     let bytes = text.as_bytes();
     let mut pos = 0usize;
@@ -244,5 +311,23 @@ mod tests {
     fn empty_containers() {
         assert_eq!(parse("[]").unwrap(), Json::Arr(vec![]));
         assert_eq!(parse("{}").unwrap(), Json::Obj(Default::default()));
+    }
+
+    #[test]
+    fn dump_round_trips_through_parse() {
+        let text = r#"{"config": {"name": "m\n\"x\"", "d_model": 256,
+            "scale": 0.125, "blocks": [1, 16], "flag": true, "none": null}}"#;
+        let j = parse(text).unwrap();
+        let dumped = dump(&j);
+        assert_eq!(parse(&dumped).unwrap(), j);
+        // integral numbers print without a fractional part
+        assert!(dumped.contains("\"d_model\":256"), "{dumped}");
+        assert!(dumped.contains("\"scale\":0.125"), "{dumped}");
+    }
+
+    #[test]
+    fn dump_nonfinite_degrades_to_null() {
+        assert_eq!(dump(&Json::Num(f64::NAN)), "null");
+        assert_eq!(dump(&Json::Num(f64::INFINITY)), "null");
     }
 }

@@ -1,0 +1,214 @@
+//! Deployment-artifact round trips: save → load → serve must be
+//! bit-identical to serving the in-process `QuantizedModel`, for packed
+//! (INT4/INT8 qgemm) and dense (fake-quant f32) weight sets, across R̃3
+//! block sizes — plus the rejection matrix (corrupted header, corrupted
+//! payload, truncation, future format versions).
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use perq::backend::NativeBackend;
+use perq::coordinator::presets;
+use perq::coordinator::server::InferenceServer;
+use perq::deploy::{self, artifact, DeployedModel};
+use perq::model::config::ModelConfig;
+use perq::prelude::*;
+
+/// Quantize the synthetic llama_np2 bundle offline (native engine, small
+/// calibration, RTN rounding for speed — artifact identity is independent
+/// of the rounding solver).
+fn quantized(block: usize, format: Format) -> QuantizedModel {
+    let engine = Engine::native_ephemeral();
+    let bundle = ModelBundle::synthetic("llama_np2").unwrap();
+    let mut spec = presets::perq_star(block, format);
+    spec.calib_seqs = 2;
+    spec.rounding = Rounding::Rtn;
+    Pipeline::new(spec).quantize_with_engine(&bundle, &engine).unwrap()
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("perq_deploy_roundtrip");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn batch_tokens(cfg: &ModelConfig) -> Vec<i32> {
+    (0..cfg.batch * cfg.seq_len)
+        .map(|i| ((i * 7 + 3) % cfg.vocab) as i32)
+        .collect()
+}
+
+#[test]
+fn packed_roundtrip_scores_bit_identical() {
+    for format in [Format::Int4, Format::Int8] {
+        for block in [16usize, 32] {
+            let qm = quantized(block, format);
+            assert!(
+                !qm.ws.packed.is_empty(),
+                "{format:?} b={block}: pipeline should attach packed twins"
+            );
+            let path = tmp(&format!("packed_{}_{block}.perq", format.name()));
+            qm.save(&path).unwrap();
+            let dm = DeployedModel::load(&path).unwrap();
+            assert_eq!(dm.label, qm.label);
+            assert_eq!(dm.model, qm.model);
+            assert_eq!(dm.graph, qm.graph);
+            assert_eq!(dm.cfg.d_ffn, qm.cfg.d_ffn);
+            assert_eq!(dm.perms.len(), qm.cfg.n_layers, "fused perms ride along");
+            assert_eq!(dm.provenance.seed, qm.seed);
+            assert_eq!(dm.ws.packed.len(), qm.ws.packed.len());
+
+            let toks = batch_tokens(&qm.cfg);
+            let mut inproc =
+                NativeBackend::new(qm.cfg.clone(), qm.ws.clone(), qm.graph.clone()).unwrap();
+            let mut loaded = dm.backend().unwrap();
+            assert!(loaded.is_packed(), "{format:?} b={block}: loaded model must serve packed");
+            let a = inproc.score(&toks).unwrap();
+            let b = loaded.score(&toks).unwrap();
+            assert_eq!(a, b, "{format:?} b={block}: artifact scores must be bit-identical");
+        }
+    }
+}
+
+#[test]
+fn dense_roundtrip_scores_bit_identical() {
+    // the "without packed twins" arm: dequantize the packed payloads into
+    // dense fake-quant weights, drop the twins, and round-trip the f32
+    // path through the artifact
+    for format in [Format::Int4, Format::Int8] {
+        let qm = quantized(16, format);
+        let mut dm0 = qm.deploy();
+        let names: Vec<String> = dm0.ws.packed.keys().cloned().collect();
+        for n in &names {
+            let dense = dm0.ws.packed[n].dequantize();
+            dm0.ws.tensors.insert(n.clone(), dense);
+        }
+        dm0.ws.packed.clear();
+
+        let path = tmp(&format!("dense_{}.perq", format.name()));
+        deploy::write_model(
+            &path, &dm0.model, &dm0.label, &dm0.cfg, &dm0.ws, &dm0.graph, &dm0.perms,
+            &dm0.provenance,
+        )
+        .unwrap();
+        let dm = DeployedModel::load(&path).unwrap();
+        assert!(dm.ws.packed.is_empty());
+
+        let toks = batch_tokens(&dm0.cfg);
+        let mut inproc =
+            NativeBackend::new(dm0.cfg.clone(), dm0.ws.clone(), dm0.graph.clone()).unwrap();
+        assert!(!inproc.is_packed());
+        let mut loaded = dm.backend().unwrap();
+        assert!(!loaded.is_packed());
+        let a = inproc.score(&toks).unwrap();
+        let b = loaded.score(&toks).unwrap();
+        assert_eq!(a, b, "{format:?}: dense artifact scores must be bit-identical");
+    }
+}
+
+#[test]
+fn served_nll_bit_identical_to_in_process() {
+    let qm = quantized(32, Format::Int4);
+    let path = tmp("served.perq");
+    qm.save(&path).unwrap();
+    let dm = DeployedModel::load(&path).unwrap();
+
+    let wait = Duration::from_millis(1);
+    let inproc = InferenceServer::start_native(&qm.cfg, &qm.ws, &qm.graph, wait, 1).unwrap();
+    let deployed = InferenceServer::start_deployed(&dm, wait, 1).unwrap();
+    let t = qm.cfg.seq_len;
+    for s in 0..3usize {
+        let window: Vec<i32> = (0..t + 1)
+            .map(|i| ((i * 11 + s * 5 + 1) % qm.cfg.vocab) as i32)
+            .collect();
+        let a = inproc.submit(window.clone()).unwrap().recv().unwrap().nll;
+        let b = deployed.submit(window).unwrap().recv().unwrap().nll;
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "request {s}: served NLL must be bit-identical ({a} vs {b})"
+        );
+    }
+    inproc.shutdown();
+    deployed.shutdown();
+}
+
+#[test]
+fn evaluate_deployed_matches_in_process_eval() {
+    let qm = quantized(32, Format::Int4);
+    let path = tmp("eval.perq");
+    qm.save(&path).unwrap();
+    let dm = DeployedModel::load(&path).unwrap();
+    let engine = Engine::native_ephemeral();
+    let a = perq::eval::perplexity::evaluate_stream(
+        &engine, &qm.model, &qm.cfg, &qm.ws, &qm.graph, Source::Wiki, 2048,
+    )
+    .unwrap();
+    let b = perq::eval::perplexity::evaluate_deployed(&engine, &dm, Source::Wiki, 2048).unwrap();
+    assert_eq!(a.n_predictions, b.n_predictions);
+    assert_eq!(a.nll.to_bits(), b.nll.to_bits(), "eval NLL must be bit-identical");
+    // the engine-free convenience path agrees too
+    let c = dm.evaluate(Source::Wiki, 2048).unwrap();
+    assert_eq!(a.nll.to_bits(), c.nll.to_bits());
+}
+
+#[test]
+fn inspect_reads_header_without_payload() {
+    let qm = quantized(16, Format::Int8);
+    let path = tmp("inspect.perq");
+    qm.save(&path).unwrap();
+    let info = deploy::inspect(&path).unwrap();
+    assert_eq!(info.model, "llama_np2");
+    assert_eq!(info.format, "int8");
+    assert_eq!(info.graph_kind, "merged");
+    assert_eq!(info.r3_block, 16);
+    assert_eq!(info.version, artifact::FORMAT_VERSION);
+    assert!(info.label.contains("massdiff"), "{}", info.label);
+}
+
+#[test]
+fn rejects_corruption_truncation_and_future_versions() {
+    let qm = quantized(16, Format::Int4);
+    let path = tmp("reject.perq");
+    qm.save(&path).unwrap();
+    let good = std::fs::read(&path).unwrap();
+    assert!(DeployedModel::load(&path).is_ok(), "pristine artifact must load");
+
+    let check = |name: &str, bytes: &[u8]| -> String {
+        let p = tmp(name);
+        std::fs::write(&p, bytes).unwrap();
+        let err = DeployedModel::load(&p).expect_err("corrupted artifact must be rejected");
+        format!("{err:#}")
+    };
+
+    // bad magic
+    let mut b = good.clone();
+    b[0] ^= 0xFF;
+    let e = check("bad_magic.perq", &b);
+    assert!(e.contains("magic"), "{e}");
+
+    // corrupted header byte (inside the header JSON)
+    let mut b = good.clone();
+    b[24] ^= 0x01;
+    let e = check("bad_header.perq", &b);
+    assert!(e.contains("checksum") || e.contains("parsing"), "{e}");
+
+    // future format version
+    let mut b = good.clone();
+    b[8..12].copy_from_slice(&(artifact::FORMAT_VERSION + 1).to_le_bytes());
+    let e = check("future.perq", &b);
+    assert!(e.contains("version"), "{e}");
+
+    // truncated payload (trailing magic gone)
+    let e = check("truncated.perq", &good[..good.len() - 9]);
+    assert!(e.contains("truncat"), "{e}");
+
+    // corrupted section payload byte — pick the largest section so the
+    // flip is guaranteed to land inside CRC-covered bytes
+    let reader = artifact::ArtifactReader::open(&path).unwrap();
+    let s = reader.sections().iter().max_by_key(|s| s.len).unwrap();
+    let mut b = good.clone();
+    b[s.offset + 1] ^= 0x40;
+    let e = check("bad_payload.perq", &b);
+    assert!(e.contains("checksum"), "{e}");
+}
