@@ -79,6 +79,13 @@ fn main() -> anyhow::Result<()> {
         println!("\nSKIP qgemm/fwht bench: {e:#}");
     }
 
+    // stateful decode throughput (prefill/decode sessions, quantized KV
+    // cache) + continuous batching vs a padded fixed-batch baseline on
+    // mixed-length request streams; appends BENCH_decode.json.
+    if let Err(e) = bench_decode() {
+        println!("\nSKIP decode bench: {e:#}");
+    }
+
     // SIMD kernel layer: forced-scalar vs runtime-dispatched, per kernel;
     // appends BENCH_simd.json (ISSUE 3 acceptance: INT4 qgemm ≥ 2×).
     // Setup failures skip (bench convention), but a PERQ_SIMD_GATE
@@ -203,6 +210,199 @@ fn bench_qgemm_and_fwht() -> anyhow::Result<()> {
             "{{\"bench\": \"fwht_block\", \"ts\": {stamp}, \"b\": {b}, \
              \"ms_per_1024_tokens\": {:.3}, \"gb_per_s\": {gbs:.2}}}",
             t.mean_ms()
+        );
+        if let Err(e) = append_trajectory(&traj, &entry) {
+            println!("  (could not write {traj:?}: {e})");
+        }
+    }
+    println!("  trajectory: {}", traj.display());
+    Ok(())
+}
+
+/// Decode-throughput cases for the stateful execution model (ISSUE 5):
+/// steady-state `decode_step` tokens/sec with the packed-int8 KV cache at
+/// INT4 b∈{16,32}, plus **continuous batching vs a padded fixed-batch
+/// baseline** on a mixed-length generation stream. The padded baseline
+/// reproduces the pre-session serving shape: requests grouped into fixed
+/// batches, every group decoded until its *longest* member finishes (the
+/// short members keep burning slots — that waste is exactly what
+/// slot-level join/leave removes). One BENCH_decode.json entry per case.
+fn bench_decode() -> anyhow::Result<()> {
+    use perq::backend::greedy_argmax;
+
+    let root = match RepoContext::discover() {
+        Ok(c) => c.root,
+        Err(_) => std::env::current_dir()?,
+    };
+    let traj = root.join("BENCH_decode.json");
+    let stamp = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let bundle = ModelBundle::synthetic("llama_np2")?;
+    let engine = Engine::native_ephemeral();
+    let cfg = bundle.cfg.clone();
+    let (b, t, v) = (cfg.batch, cfg.seq_len, cfg.vocab);
+    println!("\n=== stateful decode ({}, batch {b}, seq_len {t}, kv {}) ===",
+             cfg.name, perq::tensor::KvMode::from_env().name());
+
+    for block in [16usize, 32] {
+        if cfg.d_ffn % block != 0 {
+            continue;
+        }
+        let mut spec = presets::perq_star(block, Format::Int4);
+        spec.calib_seqs = 2;
+        let qm = Pipeline::new(spec).quantize_with_engine(&bundle, &engine)?;
+        let mut be = NativeBackend::new(cfg.clone(), qm.ws.clone(), qm.graph.clone())?;
+
+        // -- steady-state decode tokens/sec: every slot busy -------------
+        let plen = 4usize.min(t / 2);
+        let sid = be.begin(b)?;
+        let prompts: Vec<i32> = (0..b * plen).map(|i| (i % v) as i32).collect();
+        let logits = be.prefill_slots(sid, &(0..b).collect::<Vec<_>>(), &prompts)?;
+        let mut last: Vec<i32> =
+            (0..b).map(|s| greedy_argmax(&logits[((s + 1) * plen - 1) * v..(s + 1) * plen * v])).collect();
+        let mut out = Vec::new();
+        let warm = 3usize;
+        let steps = t.saturating_sub(plen + warm + 1).min(48).max(1);
+        for _ in 0..warm {
+            be.decode_step_into(sid, &last, &mut out)?;
+            for s in 0..b {
+                last[s] = greedy_argmax(&out[s * v..(s + 1) * v]);
+            }
+        }
+        let t0 = std::time::Instant::now();
+        for _ in 0..steps {
+            be.decode_step_into(sid, &last, &mut out)?;
+            for s in 0..b {
+                last[s] = greedy_argmax(&out[s * v..(s + 1) * v]);
+            }
+        }
+        let decode_s = t0.elapsed().as_secs_f64();
+        be.end(sid)?;
+        let tok_s = (b * steps) as f64 / decode_s.max(1e-9);
+        println!(
+            "  int4 b={block:<3} steady decode: {steps} steps x {b} slots = {:.0} tok/s \
+             ({:.3} ms/step)",
+            tok_s,
+            decode_s * 1e3 / steps as f64
+        );
+        let entry = format!(
+            "{{\"bench\": \"decode\", \"ts\": {stamp}, \"format\": \"int4\", \
+             \"block\": {block}, \"mode\": \"steady\", \"slots\": {b}, \
+             \"steps\": {steps}, \"tok_per_s\": {tok_s:.1}}}"
+        );
+        if let Err(e) = append_trajectory(&traj, &entry) {
+            println!("  (could not write {traj:?}: {e})");
+        }
+
+        // -- mixed-length stream: continuous vs padded fixed batches -----
+        // request i wants gen_lens[i] tokens from a plen-token prompt; the
+        // mix alternates short and long so fixed batches strand capacity
+        let n_req = 2 * b;
+        let long = t.saturating_sub(plen + 1).min(40).max(2);
+        let gen_lens: Vec<usize> = (0..n_req).map(|i| if i % 2 == 0 { 4.min(long) } else { long }).collect();
+        let useful: usize = gen_lens.iter().sum();
+        let prompt_of = |i: usize| -> Vec<i32> {
+            (0..plen).map(|j| ((i * 7 + j * 3) % v) as i32).collect()
+        };
+
+        // padded fixed-batch baseline: groups of b, decoded until the
+        // longest member of the group is done (finished members idle in
+        // their slots — the stranded capacity). One session for the whole
+        // run (slots reset between groups), so the comparison with the
+        // continuous path below isolates the scheduling effect rather
+        // than per-group arena allocation.
+        let sid = be.begin(b)?;
+        let t0 = std::time::Instant::now();
+        for g0 in (0..n_req).step_by(b) {
+            let group: Vec<usize> = (g0..(g0 + b).min(n_req)).collect();
+            for s in 0..b {
+                be.reset_slot(sid, s)?;
+            }
+            let mut tokens = Vec::with_capacity(group.len() * plen);
+            for &i in &group {
+                tokens.extend(prompt_of(i));
+            }
+            let slots: Vec<usize> = (0..group.len()).collect();
+            let logits = be.prefill_slots(sid, &slots, &tokens)?;
+            let mut last: Vec<i32> = vec![-1; b];
+            for (si, _) in group.iter().enumerate() {
+                last[si] = greedy_argmax(&logits[((si + 1) * plen - 1) * v..(si + 1) * plen * v]);
+            }
+            let group_steps = group.iter().map(|&i| gen_lens[i]).max().unwrap_or(0);
+            // every slot decodes every step until the longest is done —
+            // the fixed-batch shape (finished requests pad the batch)
+            for _ in 1..group_steps {
+                be.decode_step_into(sid, &last, &mut out)?;
+                for si in 0..group.len() {
+                    last[si] = greedy_argmax(&out[si * v..(si + 1) * v]);
+                }
+            }
+        }
+        let padded_s = t0.elapsed().as_secs_f64();
+        be.end(sid)?;
+        let padded_tok_s = useful as f64 / padded_s.max(1e-9);
+
+        // continuous batching: one live session; finished requests free
+        // their slot immediately and the next request prefills into it
+        let sid = be.begin(b)?;
+        let t0 = std::time::Instant::now();
+        let mut next_req = 0usize;
+        let mut remaining: Vec<usize> = vec![0; b]; // tokens still wanted per slot
+        let mut last: Vec<i32> = vec![-1; b];
+        let mut active = 0usize;
+        let mut done = 0usize;
+        while done < n_req {
+            // admit into free slots
+            while next_req < n_req && active < b {
+                let slot = (0..b).find(|&s| remaining[s] == 0 && last[s] < 0)
+                    .expect("active < b implies a free slot");
+                let logits = be.prefill_slots(sid, &[slot], &prompt_of(next_req))?;
+                last[slot] = greedy_argmax(&logits[(plen - 1) * v..plen * v]);
+                remaining[slot] = gen_lens[next_req] - 1; // first token from prefill
+                if remaining[slot] == 0 {
+                    be.reset_slot(sid, slot)?;
+                    last[slot] = -1;
+                    done += 1;
+                } else {
+                    active += 1;
+                }
+                next_req += 1;
+            }
+            if active == 0 {
+                continue;
+            }
+            be.decode_step_into(sid, &last, &mut out)?;
+            for s in 0..b {
+                if last[s] < 0 {
+                    continue;
+                }
+                last[s] = greedy_argmax(&out[s * v..(s + 1) * v]);
+                remaining[s] -= 1;
+                if remaining[s] == 0 {
+                    be.reset_slot(sid, s)?;
+                    last[s] = -1;
+                    active -= 1;
+                    done += 1;
+                }
+            }
+        }
+        be.end(sid)?;
+        let cont_s = t0.elapsed().as_secs_f64();
+        let cont_tok_s = useful as f64 / cont_s.max(1e-9);
+        let speedup = cont_tok_s / padded_tok_s.max(1e-9);
+        println!(
+            "  int4 b={block:<3} mixed stream ({n_req} reqs, lens 4/{long}): \
+             padded {padded_tok_s:.0} tok/s  continuous {cont_tok_s:.0} tok/s  \
+             ({speedup:.2}x) {}",
+            if speedup >= 1.0 { "— continuous wins" } else { "— REGRESSION" }
+        );
+        let entry = format!(
+            "{{\"bench\": \"decode\", \"ts\": {stamp}, \"format\": \"int4\", \
+             \"block\": {block}, \"mode\": \"mixed_stream\", \"requests\": {n_req}, \
+             \"useful_tokens\": {useful}, \"padded_tok_per_s\": {padded_tok_s:.1}, \
+             \"continuous_tok_per_s\": {cont_tok_s:.1}, \"speedup\": {speedup:.3}}}"
         );
         if let Err(e) = append_trajectory(&traj, &entry) {
             println!("  (could not write {traj:?}: {e})");

@@ -19,7 +19,11 @@
 //! `--workers N` (or `PERQ_SERVER_WORKERS`, default 1) runs that many
 //! backend replicas on the shared request queue — NLLs are identical
 //! regardless of the replica count (per-slot-independent scoring);
-//! `PERQ_SIMD={auto,avx2,neon,scalar}` overrides kernel dispatch.
+//! `--max-wait-ms MS` (or `PERQ_MAX_WAIT_MS`) bounds the batch-forming
+//! wait of idle replicas; `PERQ_SIMD={auto,avx2,neon,scalar}` overrides
+//! kernel dispatch. Requests join each replica's live batch at step
+//! granularity (continuous batching) — partial steps run fewer rows, so
+//! there is no padding anywhere.
 
 use std::time::{Duration, Instant};
 
@@ -104,7 +108,11 @@ fn main() -> Result<()> {
 
         // bring up the server (one backend replica per worker thread;
         // pjrt keeps device-resident weights, native keeps pooled scratch)
-        let server = start_server(&engine, &bundle, &qm, num_workers)?;
+        // --max-wait-ms > PERQ_MAX_WAIT_MS > shared default
+        let wait = perq::coordinator::server::resolve_max_wait(
+            args.get("max-wait-ms").and_then(|s| s.parse::<u64>().ok()),
+        );
+        let server = start_server(&engine, &bundle, &qm, num_workers, wait)?;
 
         // request stream: random windows of the test split, random gaps
         let toks = token_stream(Source::Wiki, Split::Test, 1 << 15);
@@ -129,20 +137,20 @@ fn main() -> Result<()> {
         let wall = t0.elapsed().as_secs_f64();
         lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let p = |q: f64| lats[((lats.len() - 1) as f64 * q) as usize];
-        let (served, batches, exec_s) = server.stats();
-        let padded = server.padded_slots();
+        let (_served, batches, exec_s) = server.stats();
+        let snap = server.snapshot();
         // server-side histogram percentiles (fixed √2 buckets, atomics)
         let (sp50, sp95, sp99) = server.latency_percentiles();
         let label = if block == cfg.d_ffn { "full".to_string() } else { format!("b={block}") };
         println!(
             "{model} {label:<6} | {n_requests} reqs in {wall:.2}s = {:.0} tok/s | \
              lat p50 {:.0}ms p95 {:.0}ms | hist p50/p95/p99 {sp50:.1}/{sp95:.1}/{sp99:.1}ms | \
-             {batches} batches ({:.1} req/batch, {padded} padded) | \
+             {batches} steps (occupancy {:.2}) | \
              exec {:.2}s | ppl {:.2} | rot ops/token {}",
             n_requests as f64 * t as f64 / wall,
             p(0.5),
             p(0.95),
-            served as f64 / batches.max(1) as f64,
+            snap.mean_occupancy,
             exec_s,
             (nll / n_requests as f64).exp(),
             perq::util::bench::fmt_count(opcount::block_ops(cfg.d_ffn, block)),
@@ -164,8 +172,7 @@ fn main() -> Result<()> {
 }
 
 fn start_server(engine: &Engine, bundle: &ModelBundle, qm: &QuantizedModel,
-                num_workers: usize) -> Result<InferenceServer> {
-    let wait = Duration::from_millis(20);
+                num_workers: usize, wait: Duration) -> Result<InferenceServer> {
     match engine.backend() {
         BackendKind::Native => {
             // quantize-once / serve-many: round-trip through the versioned

@@ -106,18 +106,122 @@ pub struct OpCounts {
     pub quantized_values: usize,
 }
 
+/// Handle to one live execution session (a batch of attention states).
+pub type SessionId = u64;
+
 /// A compiled/loaded forward executor for one (model spec, graph) pair.
 ///
-/// `score` consumes exactly `cfg.batch * cfg.seq_len` i32 tokens and
-/// returns `(batch * seq_len * vocab)` f32 logits — the same contract as
-/// the AOT artifacts, so the batching server and the eval streamers are
-/// backend-agnostic. Implementations may keep internal scratch (hence
-/// `&mut`); they are single-threaded objects owned by their caller.
+/// Execution is **stateful and stepwise**: a session ([`ExecBackend::begin`])
+/// owns `batch` independent attention-state slots (per-layer K/V caches);
+/// slots prefill prompt windows ([`ExecBackend::prefill_slots`]), then
+/// advance one token per [`ExecBackend::decode_step`] — the workload the
+/// paper's App A decode-time argument is about. Slots join and leave a
+/// live session independently ([`ExecBackend::reset_slot`]), which is the
+/// substrate the coordinator's continuous batching runs on.
+///
+/// The legacy stateless contract survives as the provided
+/// [`ExecBackend::score`]: exactly `cfg.batch * cfg.seq_len` i32 tokens →
+/// `(batch * seq_len * vocab)` f32 logits, re-expressed as
+/// prefill-then-read over a throwaway session, so the eval streamers, the
+/// parity suites, and the scoring server are unchanged callers.
+///
+/// Token layout is slot-major everywhere: `prefill_slots(sid, &[s0, s1],
+/// toks)` splits `toks` into `slots.len()` equal consecutive prompt
+/// windows. Implementations may keep internal scratch (hence `&mut`);
+/// they are single-threaded objects owned by their caller.
 pub trait ExecBackend {
     fn name(&self) -> &'static str;
     fn cfg(&self) -> &ModelConfig;
-    fn score(&mut self, tokens: &[i32]) -> Result<Vec<f32>>;
     fn op_counts(&self) -> OpCounts;
+
+    /// Open a session with `batch` empty attention-state slots.
+    fn begin(&mut self, batch: usize) -> Result<SessionId>;
+
+    /// Open a session for *exact* stateless scoring. Backends with a
+    /// lossy KV-cache mode (the native int8 cache) pin this session to
+    /// exact storage so served NLLs match the eval/`score` path
+    /// bit-for-bit; the default is an ordinary session.
+    fn begin_scoring(&mut self, batch: usize) -> Result<SessionId> {
+        self.begin(batch)
+    }
+
+    /// Whether this backend can advance sessions incrementally
+    /// (`decode_step`). False for fixed-shape AOT executors — the server
+    /// uses this to reject generation requests up front instead of
+    /// failing them one by one on the worker thread.
+    fn supports_decode(&self) -> bool {
+        true
+    }
+
+    /// Slot count of a live session.
+    fn session_batch(&self, sid: SessionId) -> Result<usize>;
+
+    /// Current position count of one slot.
+    fn slot_len(&self, sid: SessionId, slot: usize) -> Result<usize>;
+
+    /// Append `tokens.len() / slots.len()` prompt tokens to each listed
+    /// slot and return the full prompt logits, flat
+    /// `(slots.len() * n_new, vocab)` in slot-major order.
+    fn prefill_slots(&mut self, sid: SessionId, slots: &[usize], tokens: &[i32])
+                     -> Result<Vec<f32>>;
+
+    /// Advance every *active* slot by one token. `last_tokens` carries one
+    /// entry per session slot; a negative entry marks the slot idle — it
+    /// is skipped entirely (no compute) and its logits row comes back
+    /// zeroed. `out` is resized to `batch * vocab`; reusing one buffer
+    /// across steps keeps steady-state decode allocation-free.
+    fn decode_step_into(&mut self, sid: SessionId, last_tokens: &[i32], out: &mut Vec<f32>)
+                        -> Result<()>;
+
+    /// Release one slot of a live session for reuse (a request left the
+    /// continuous batch).
+    fn reset_slot(&mut self, sid: SessionId, slot: usize) -> Result<()>;
+
+    /// Close a session, releasing its attention state.
+    fn end(&mut self, sid: SessionId) -> Result<()>;
+
+    /// Prefill every slot of the session uniformly (`tokens` =
+    /// `batch * n_new`, slot-major).
+    fn prefill(&mut self, sid: SessionId, tokens: &[i32]) -> Result<Vec<f32>> {
+        let batch = self.session_batch(sid)?;
+        let slots: Vec<usize> = (0..batch).collect();
+        self.prefill_slots(sid, &slots, tokens)
+    }
+
+    /// Allocating convenience over [`ExecBackend::decode_step_into`].
+    fn decode_step(&mut self, sid: SessionId, last_tokens: &[i32]) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.decode_step_into(sid, last_tokens, &mut out)?;
+        Ok(out)
+    }
+
+    /// The stateless full-window contract, re-expressed as
+    /// prefill-then-read: `cfg.batch * cfg.seq_len` tokens → flat logits.
+    fn score(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let (b, t) = (self.cfg().batch, self.cfg().seq_len);
+        ensure!(tokens.len() == b * t,
+                "score takes batch*seq_len = {} tokens, got {}", b * t, tokens.len());
+        let sid = self.begin(b)?;
+        let result = self.prefill(sid, tokens);
+        let _ = self.end(sid);
+        result
+    }
+}
+
+/// Greedy sampling: the index of the maximum logit (ties resolve to the
+/// lowest index, so sampling is deterministic). Shared by the serving
+/// loop, `DeployedModel::generate`, and the decode benches so every
+/// generation path samples identically.
+pub fn greedy_argmax(row: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in row.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as i32
 }
 
 /// Backend selector. `Pjrt` requires both the `pjrt` cargo feature and the

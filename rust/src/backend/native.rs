@@ -1,54 +1,95 @@
 //! `NativeBackend` — the pure-Rust execution engine for the PeRQ forward
 //! graphs. Executes the same math as the L2 jax graphs (model.py), against
 //! the same transformed/quantized `WeightSet`, with zero PJRT/XLA or
-//! Python-artifact dependency:
+//! Python-artifact dependency.
+//!
+//! Execution is **stateful and stepwise** (see `backend::ExecBackend`):
+//! a session owns `batch` independent attention-state slots backed by a
+//! `tensor::kvcache::KvCache` — per-layer K/V rows stored as packed u8
+//! int8 codes (per-row scale/zero via `quant::act::int_asym_emit_into`,
+//! `PERQ_KV={int8,f32}` escape hatch). Prompt windows prefill a slot;
+//! each `decode_step` advances the active slots by one token, re-running
+//! only the new rows — the decode-time workload the paper's App A
+//! rotation-cost argument is about. Slots join/leave a live session at
+//! step granularity, which is what the coordinator's continuous batching
+//! drives.
+//!
+//! The forward math per row is unchanged from the stateless engine:
 //!
 //! * merged permutations and rotations are already folded into the weights
 //!   (the Fig 7 deployment story), so the graph only performs what must be
 //!   online: dynamic per-token activation quantization (`quant::act`) and
 //!   the fused R̃3 block rotation (FWHT via `hadamard::fwht`, or the
-//!   optimized non-power-of-2 plan) followed by per-token quant — the rust
-//!   mirror of the pallas `fused.block_rotate_quant` kernel;
+//!   optimized non-power-of-2 plan) followed by per-token quant;
 //! * INT4/INT8 merged graphs whose `WeightSet` carries packed twins run
-//!   the *packed* path: activations are emitted as u8 codes straight into
-//!   a staging buffer (for the R̃3 site, fused right after the in-place
-//!   block rotation) and multiplied through the integer GEMM in
-//!   `tensor::qmat` — i32 accumulation, per-channel dequant fused into the
-//!   store, dense f32 weight copies dropped at load. Float formats (or
-//!   weight sets without packed twins, e.g. the parity-test references)
-//!   keep the fake-quant f32 path through `tensor::Mat`;
-//! * matmuls fan out across the persistent `util::pool` worker pool;
-//! * per-layer activation buffers are recycled through a bounded
-//!   `util::pool::BufPool`, so steady-state scoring does no allocation;
-//! * every inner loop — integer GEMM, f32 matmul, FWHT, activation
-//!   staging, rmsnorm/swish — runs through the runtime-dispatched
-//!   `tensor::simd` kernel layer (AVX2 / NEON / scalar, `PERQ_SIMD`
-//!   override; see ARCHITECTURE.md "Kernel dispatch").
+//!   the *packed* path: activation codes staged straight into `QuantActs`
+//!   and multiplied through the integer GEMM in `tensor::qmat`;
+//! * every inner loop runs through the runtime-dispatched `tensor::simd`
+//!   kernel layer (AVX2 / NEON / scalar, `PERQ_SIMD` override).
 //!
-//! Numerics note: rmsnorm/softmax accumulate in f32 like the XLA CPU
-//! lowering; parity with the artifact path is asserted to 1e-4 by the
-//! backend-parity property tests (rust/tests/backend_parity.rs). The
-//! packed path shares the fake-quant rounding bit-for-bit (same scales,
-//! zeros, and codes); only the accumulation order differs, which the
-//! qgemm property suite (rust/tests/qgemm_props.rs) bounds.
+//! Allocation discipline: session arenas are allocated once at `begin`;
+//! activation buffers, KV gather scratch, and decode logits cycle through
+//! the backend's `BufPool`; per-layer weight names and packed matrices are
+//! resolved at construction (no `format!` on the hot path). Steady-state
+//! `decode_step_into` therefore performs **zero heap allocation** —
+//! asserted with a counting allocator in rust/tests/decode_parity.rs.
+//!
+//! Numerics: `score` (the stateless full-window contract) runs its
+//! internal session in `KvMode::F32`, so it is bit-identical to the
+//! pre-session engine regardless of `PERQ_KV` — the parity suites and
+//! eval streamers observe no behavior change. Sessions opened through
+//! `begin` use the configured KV mode; prefill attention reads *through*
+//! the cache (quantize-on-write, dequantize-on-read), so a full-window
+//! prefill and any prefill+decode split of the same tokens observe
+//! bit-identical cache contents — the decode-parity contract of
+//! rust/tests/decode_parity.rs.
 
-use std::collections::BTreeMap;
+use anyhow::{anyhow, bail, ensure, Result};
 
-use anyhow::{bail, ensure, Result};
-
-use super::{graph_op_counts, ExecBackend, ForwardGraph, OpCounts};
+use super::{graph_op_counts, ExecBackend, ForwardGraph, OpCounts, SessionId};
 use crate::calib::capture::Captures;
 use crate::hadamard::BlockRotator;
 use crate::model::config::ModelConfig;
 use crate::model::weights::WeightSet;
 use crate::quant::{act, Format};
-use crate::tensor::{qmat, simd, Mat, QuantActs, QuantMat};
+use crate::tensor::{qmat, simd, KvCache, KvMode, Mat, QuantActs, QuantMat};
 use crate::util::pool::BufPool;
 
-/// The packed per-layer linear weights of an INT4/INT8 merged graph.
+/// The packed linear weights of one layer (INT4/INT8 merged graphs),
+/// resolved out of the `WeightSet` maps at construction so the serving
+/// loop never does a string lookup.
+struct LayerPacked {
+    wq: QuantMat,
+    wk: QuantMat,
+    wv: QuantMat,
+    wo: QuantMat,
+    wg: QuantMat,
+    wu: QuantMat,
+    wd: QuantMat,
+}
+
 struct PackedWeights {
     bits: u32,
-    mats: BTreeMap<String, QuantMat>,
+    layers: Vec<LayerPacked>,
+}
+
+/// Per-layer weight-name strings for the dense (fake-quant f32) path,
+/// precomputed so the hot path never calls `format!`.
+struct LayerNames {
+    n1: String,
+    wq: String,
+    wk: String,
+    wv: String,
+    wo: String,
+    n2: String,
+    wg: String,
+    wu: String,
+    wd: String,
+}
+
+/// One live execution session: `batch` attention-state slots.
+struct Session {
+    kv: KvCache,
 }
 
 pub struct NativeBackend {
@@ -62,6 +103,22 @@ pub struct NativeBackend {
     packed: Option<PackedWeights>,
     /// staging buffer for emitted activation codes (packed path only)
     qa: QuantActs,
+    /// KV storage mode for sessions opened via `begin` (`PERQ_KV`)
+    kv_mode: KvMode,
+    names: Vec<LayerNames>,
+    sessions: Vec<Option<Session>>,
+    /// persistent F32-mode session backing the stateless `score` contract
+    score_sid: Option<SessionId>,
+    /// persistent F32-mode session (with its slot count) backing the
+    /// capture `forward` path — calibration loops over many batches and
+    /// must not reallocate KV arenas per batch
+    capture_sid: Option<(SessionId, usize)>,
+    // -- reusable hot-path scratch (steady-state decode: zero alloc) ----
+    rot_scratch: Vec<f32>,
+    attn_scores: Vec<f32>,
+    active_scratch: Vec<usize>,
+    tok_scratch: Vec<i32>,
+    slot_seen: Vec<bool>,
 }
 
 /// `PERQ_PACKED=0` (or `off`) forces the f32 fake-quant path even when
@@ -107,19 +164,30 @@ impl NativeBackend {
                 let dense_missing =
                     sites.iter().any(|s| !ws.tensors.contains_key(&s.name));
                 if complete && (packed_serving_enabled() || dense_missing) {
-                    let mut mats = BTreeMap::new();
-                    for s in &sites {
-                        let qm = ws.take_packed(&s.name).expect("checked above");
-                        if let Some(dense) = ws.tensors.get(&s.name) {
+                    let mut take = |name: &str| -> Result<QuantMat> {
+                        let qm = ws.take_packed(name).expect("completeness checked above");
+                        if let Some(dense) = ws.tensors.get(name) {
                             ensure!(
                                 qm.rows == dense.rows && qm.cols == dense.cols,
-                                "packed weight {} shape mismatch", s.name
+                                "packed weight {name} shape mismatch"
                             );
                         }
-                        ws.drop_dense(&s.name);
-                        mats.insert(s.name.clone(), qm);
+                        ws.drop_dense(name);
+                        Ok(qm)
+                    };
+                    let mut layers = Vec::with_capacity(cfg.n_layers);
+                    for l in 0..cfg.n_layers {
+                        layers.push(LayerPacked {
+                            wq: take(&format!("l{l}.wq"))?,
+                            wk: take(&format!("l{l}.wk"))?,
+                            wv: take(&format!("l{l}.wv"))?,
+                            wo: take(&format!("l{l}.wo"))?,
+                            wg: take(&format!("l{l}.wg"))?,
+                            wu: take(&format!("l{l}.wu"))?,
+                            wd: take(&format!("l{l}.wd"))?,
+                        });
                     }
-                    Some(PackedWeights { bits, mats })
+                    Some(PackedWeights { bits, layers })
                 } else {
                     ensure!(
                         !dense_missing,
@@ -132,7 +200,39 @@ impl NativeBackend {
             _ => None,
         };
         let qa = QuantActs::new(packed.as_ref().map_or(8, |p| p.bits));
-        Ok(NativeBackend { cfg, ws, graph, rot3, format, pool: BufPool::new(), packed, qa })
+        let names = (0..cfg.n_layers)
+            .map(|l| LayerNames {
+                n1: format!("l{l}.n1"),
+                wq: format!("l{l}.wq"),
+                wk: format!("l{l}.wk"),
+                wv: format!("l{l}.wv"),
+                wo: format!("l{l}.wo"),
+                n2: format!("l{l}.n2"),
+                wg: format!("l{l}.wg"),
+                wu: format!("l{l}.wu"),
+                wd: format!("l{l}.wd"),
+            })
+            .collect();
+        Ok(NativeBackend {
+            cfg,
+            ws,
+            graph,
+            rot3,
+            format,
+            pool: BufPool::new(),
+            packed,
+            qa,
+            kv_mode: KvMode::from_env(),
+            names,
+            sessions: Vec::new(),
+            score_sid: None,
+            capture_sid: None,
+            rot_scratch: Vec::new(),
+            attn_scores: Vec::new(),
+            active_scratch: Vec::new(),
+            tok_scratch: Vec::new(),
+            slot_seen: Vec::new(),
+        })
     }
 
     /// Build a backend straight from a loaded `.perq` deployment artifact
@@ -146,23 +246,110 @@ impl NativeBackend {
         self.packed.is_some()
     }
 
-    /// Run the forward pass over `nt = n_seqs * seq_len` token rows,
-    /// returning flat (nt, vocab) logits. `caps` collects the four
-    /// per-layer linear-input captures (fp graphs only — the calibrator's
-    /// `fwd_capture` contract).
+    /// KV storage mode of sessions opened via `begin`.
+    pub fn kv_mode(&self) -> KvMode {
+        self.kv_mode
+    }
+
+    /// Open a session with an explicit KV mode (tests and the stateless
+    /// `score` path pin `F32`; `begin` uses the `PERQ_KV` default).
+    pub fn begin_with_mode(&mut self, batch: usize, mode: KvMode) -> Result<SessionId> {
+        ensure!(batch >= 1, "a session needs at least one slot");
+        let sess = Session {
+            kv: KvCache::new(mode, self.cfg.n_layers, batch, self.cfg.seq_len, self.cfg.d_model),
+        };
+        match self.sessions.iter().position(|s| s.is_none()) {
+            Some(i) => {
+                self.sessions[i] = Some(sess);
+                Ok(i as SessionId)
+            }
+            None => {
+                self.sessions.push(Some(sess));
+                Ok((self.sessions.len() - 1) as SessionId)
+            }
+        }
+    }
+
+    /// Bytes resident in a session's KV arenas (diagnostics/serving stats).
+    pub fn session_kv_bytes(&self, sid: SessionId) -> Result<usize> {
+        Ok(self.session_ref(sid)?.kv.bytes())
+    }
+
+    fn session_ref(&self, sid: SessionId) -> Result<&Session> {
+        self.sessions
+            .get(sid as usize)
+            .and_then(|s| s.as_ref())
+            .ok_or_else(|| anyhow!("unknown session {sid}"))
+    }
+
+    fn take_session(&mut self, sid: SessionId) -> Result<Session> {
+        self.sessions
+            .get_mut(sid as usize)
+            .and_then(|s| s.take())
+            .ok_or_else(|| anyhow!("unknown session {sid}"))
+    }
+
+    /// Run the full-precision forward over `nt = n_seqs * seq_len` token
+    /// rows with calibration capture — the calibrator's `fwd_capture`
+    /// contract. Runs in a persistent F32-KV session (exact numerics),
+    /// recreated only when the batch size changes, so calibration loops
+    /// reuse the KV arenas instead of reallocating per batch.
     pub fn forward(&mut self, tokens: &[i32], caps: Option<&mut Captures>) -> Result<Vec<f32>> {
-        let (t, d, f, heads) = (
-            self.cfg.seq_len,
-            self.cfg.d_model,
-            self.cfg.d_ffn,
-            self.cfg.n_heads,
-        );
-        let (n_layers, vocab) = (self.cfg.n_layers, self.cfg.vocab);
+        let t = self.cfg.seq_len;
         ensure!(!tokens.is_empty() && tokens.len() % t == 0,
                 "token count {} must be a multiple of seq_len {}", tokens.len(), t);
         let n_seqs = tokens.len() / t;
-        let nt = tokens.len();
-        let mut caps = caps;
+        let sid = match self.capture_sid {
+            Some((sid, batch)) if batch == n_seqs => sid,
+            stale => {
+                if let Some((old, _)) = stale {
+                    if (old as usize) < self.sessions.len() {
+                        self.sessions[old as usize] = None;
+                    }
+                }
+                let sid = self.begin_with_mode(n_seqs, KvMode::F32)?;
+                self.capture_sid = Some((sid, n_seqs));
+                sid
+            }
+        };
+        let mut sess = self.take_session(sid)?;
+        sess.kv.reset_all();
+        let slots: Vec<usize> = (0..n_seqs).collect();
+        let result = self.run_rows(&mut sess, &slots, t, tokens, caps);
+        self.sessions[sid as usize] = Some(sess);
+        result.map(|m| m.data)
+    }
+
+    /// The session engine core: append `n_new` tokens to each listed slot
+    /// (slot-major `tokens`), running the full graph over the new rows
+    /// with attention against each slot's KV cache, and return the
+    /// `(slots.len() * n_new, vocab)` logits. The returned `Mat`'s buffer
+    /// came from the pool; decode gives it back, scoring moves it out.
+    fn run_rows(&mut self, sess: &mut Session, slots: &[usize], n_new: usize,
+                tokens: &[i32], mut caps: Option<&mut Captures>) -> Result<Mat> {
+        let (d, f, heads) = (self.cfg.d_model, self.cfg.d_ffn, self.cfg.n_heads);
+        let (n_layers, vocab) = (self.cfg.n_layers, self.cfg.vocab);
+        let hd = d / heads;
+        ensure!(n_new >= 1, "no tokens to run");
+        ensure!(!slots.is_empty() && tokens.len() == slots.len() * n_new,
+                "token count {} must equal slots*n_new = {}", tokens.len(),
+                slots.len() * n_new);
+        // validate slots: in range, distinct, with capacity for n_new
+        self.slot_seen.iter_mut().for_each(|s| *s = false);
+        if self.slot_seen.len() < sess.kv.slots {
+            self.slot_seen.resize(sess.kv.slots, false);
+        }
+        for &slot in slots {
+            ensure!(slot < sess.kv.slots, "slot {slot} out of range ({} slots)", sess.kv.slots);
+            ensure!(!self.slot_seen[slot], "slot {slot} listed twice");
+            self.slot_seen[slot] = true;
+            ensure!(
+                sess.kv.remaining(slot) >= n_new,
+                "slot {slot} holds {} of {} positions — no room for {n_new} more",
+                sess.kv.len(slot), sess.kv.cap
+            );
+        }
+        let nt = slots.len() * n_new;
 
         let mut x = self.take_mat(nt, d);
         let mut h = self.take_mat(nt, d);
@@ -174,65 +361,104 @@ impl NativeBackend {
         let mut g = self.take_mat(nt, f);
         let mut u = self.take_mat(nt, f);
         let mut down = self.take_mat(nt, d);
-        let mut rot_scratch: Vec<f32> = Vec::new();
 
-        // embedding gather + learned positional: x = embed[tok] + pos[j]
+        // embedding gather + learned positional: x = embed[tok] + pos[p]
+        // where p is the slot's absolute position (cache length + offset)
         let embed = self.ws.get("embed");
         let pos = self.ws.get("pos");
-        for (r, &tok) in tokens.iter().enumerate() {
-            ensure!(tok >= 0 && (tok as usize) < vocab, "token {tok} out of vocab");
-            let xr = x.row_mut(r);
-            let er = embed.row(tok as usize);
-            let pr = pos.row(r % t);
-            for c in 0..d {
-                xr[c] = er[c] + pr[c];
+        for (si, &slot) in slots.iter().enumerate() {
+            let base = sess.kv.len(slot);
+            for j in 0..n_new {
+                let r = si * n_new + j;
+                let tok = tokens[r];
+                ensure!(tok >= 0 && (tok as usize) < vocab, "token {tok} out of vocab");
+                let xr = x.row_mut(r);
+                let er = embed.row(tok as usize);
+                let pr = pos.row(base + j);
+                for c in 0..d {
+                    xr[c] = er[c] + pr[c];
+                }
             }
         }
 
+        if self.attn_scores.len() < sess.kv.cap {
+            self.attn_scores.resize(sess.kv.cap, 0.0);
+        }
+
+        // KV gather scratch, taken once per call at full session capacity:
+        // a constant size keeps the pool recycling one buffer across the
+        // whole decode, and taking outside the layer/slot loops avoids
+        // re-zeroing cap*d floats per (layer, slot) — each slot's gather
+        // overwrites the prefix before its attention reads it
+        let mut kbuf = self.pool.take(sess.kv.cap * d);
+        let mut vbuf = self.pool.take(sess.kv.cap * d);
+
         for l in 0..n_layers {
-            let lname = |part: &str| format!("l{l}.{part}");
             // -- attention half ------------------------------------------
-            rmsnorm_rows(&x, &self.ws.get(&lname("n1")).data, &mut h);
+            rmsnorm_rows(&x, &self.ws.get(&self.names[l].n1).data, &mut h);
             if let Some(c) = caps.as_deref_mut() {
                 c.attn_in[l] = h.clone();
             }
             if let Some(pw) = &self.packed {
                 // emit codes once, run three integer GEMMs against them
                 self.qa.fill_from_mat(&h);
-                qmat::qgemm_into(&self.qa, &pw.mats[&lname("wq")], &mut q);
-                qmat::qgemm_into(&self.qa, &pw.mats[&lname("wk")], &mut k);
-                qmat::qgemm_into(&self.qa, &pw.mats[&lname("wv")], &mut v);
+                qmat::qgemm_into(&self.qa, &pw.layers[l].wq, &mut q);
+                qmat::qgemm_into(&self.qa, &pw.layers[l].wk, &mut k);
+                qmat::qgemm_into(&self.qa, &pw.layers[l].wv, &mut v);
             } else {
                 act::act_quant_mat(&mut h, self.format);
-                h.par_matmul_into(self.ws.get(&lname("wq")), &mut q);
-                h.par_matmul_into(self.ws.get(&lname("wk")), &mut k);
-                h.par_matmul_into(self.ws.get(&lname("wv")), &mut v);
+                h.par_matmul_into(self.ws.get(&self.names[l].wq), &mut q);
+                h.par_matmul_into(self.ws.get(&self.names[l].wk), &mut k);
+                h.par_matmul_into(self.ws.get(&self.names[l].wv), &mut v);
             }
-            causal_attention(&q, &k, &v, &mut ctx, n_seqs, t, heads);
+            // write the new K/V rows into the cache (quantize-on-write in
+            // int8 mode), then attend against the cache — prefill and
+            // decode read identical cache contents by construction
+            for (si, &slot) in slots.iter().enumerate() {
+                let base = sess.kv.len(slot);
+                for j in 0..n_new {
+                    let r = si * n_new + j;
+                    sess.kv.write_k(l, slot, base + j, k.row(r));
+                    sess.kv.write_v(l, slot, base + j, v.row(r));
+                }
+            }
+            for (si, &slot) in slots.iter().enumerate() {
+                let base = sess.kv.len(slot);
+                let total = base + n_new;
+                sess.kv.gather_k(l, slot, total, &mut kbuf[..total * d]);
+                sess.kv.gather_v(l, slot, total, &mut vbuf[..total * d]);
+                for j in 0..n_new {
+                    let r = si * n_new + j;
+                    attend_rows(
+                        q.row(r), &kbuf, &vbuf, base + j + 1, d, heads, hd,
+                        &mut self.attn_scores, ctx.row_mut(r),
+                    );
+                }
+            }
             if let Some(c) = caps.as_deref_mut() {
                 c.o_in[l] = ctx.clone();
             }
             if let Some(pw) = &self.packed {
                 self.qa.fill_from_mat(&ctx);
-                qmat::qgemm_into(&self.qa, &pw.mats[&lname("wo")], &mut proj);
+                qmat::qgemm_into(&self.qa, &pw.layers[l].wo, &mut proj);
             } else {
                 act::act_quant_mat(&mut ctx, self.format);
-                ctx.par_matmul_into(self.ws.get(&lname("wo")), &mut proj);
+                ctx.par_matmul_into(self.ws.get(&self.names[l].wo), &mut proj);
             }
             add_assign(&mut x.data, &proj.data);
             // -- SwiGLU half ---------------------------------------------
-            rmsnorm_rows(&x, &self.ws.get(&lname("n2")).data, &mut h);
+            rmsnorm_rows(&x, &self.ws.get(&self.names[l].n2).data, &mut h);
             if let Some(c) = caps.as_deref_mut() {
                 c.ffn_in[l] = h.clone();
             }
             if let Some(pw) = &self.packed {
                 self.qa.fill_from_mat(&h);
-                qmat::qgemm_into(&self.qa, &pw.mats[&lname("wg")], &mut g);
-                qmat::qgemm_into(&self.qa, &pw.mats[&lname("wu")], &mut u);
+                qmat::qgemm_into(&self.qa, &pw.layers[l].wg, &mut g);
+                qmat::qgemm_into(&self.qa, &pw.layers[l].wu, &mut u);
             } else {
                 act::act_quant_mat(&mut h, self.format);
-                h.par_matmul_into(self.ws.get(&lname("wg")), &mut g);
-                h.par_matmul_into(self.ws.get(&lname("wu")), &mut u);
+                h.par_matmul_into(self.ws.get(&self.names[l].wg), &mut g);
+                h.par_matmul_into(self.ws.get(&self.names[l].wu), &mut u);
             }
             // SwiGLU gate through the SIMD layer (vector arms use a
             // polynomial exp — ≈2 ulp of libm, deterministic per level)
@@ -251,35 +477,42 @@ impl NativeBackend {
                 self.qa.reset(f);
                 for r in 0..nt {
                     let row = g.row_mut(r);
-                    rot.apply_row(row, &mut rot_scratch);
+                    rot.apply_row(row, &mut self.rot_scratch);
                     self.qa.push_row(row);
                 }
-                qmat::qgemm_into(&self.qa, &pw.mats[&lname("wd")], &mut down);
+                qmat::qgemm_into(&self.qa, &pw.layers[l].wd, &mut down);
             } else {
                 if let Some(rot) = &self.rot3 {
                     for r in 0..nt {
                         let row = g.row_mut(r);
-                        rot.apply_row(row, &mut rot_scratch);
+                        rot.apply_row(row, &mut self.rot_scratch);
                         act::act_quant_row(row, self.format);
                     }
                 }
-                g.par_matmul_into(self.ws.get(&lname("wd")), &mut down);
+                g.par_matmul_into(self.ws.get(&self.names[l].wd), &mut down);
             }
             add_assign(&mut x.data, &down.data);
         }
 
+        // commit the freshly written positions (validated up front)
+        for &slot in slots {
+            sess.kv.advance(slot, n_new)?;
+        }
+
         // final norm + unembed (full precision, as in the L2 graph)
         rmsnorm_rows(&x, &self.ws.get("nf").data, &mut h);
-        let mut logits = Mat::zeros(nt, vocab);
+        let mut logits = self.take_mat(nt, vocab);
         h.par_matmul_into(self.ws.get("wout"), &mut logits);
         if let Some(c) = caps.as_deref_mut() {
             c.n_tokens += nt;
         }
 
+        self.pool.put(kbuf);
+        self.pool.put(vbuf);
         for m in [x, h, q, k, v, ctx, proj, g, u, down] {
             self.put_mat(m);
         }
-        Ok(logits.data)
+        Ok(logits)
     }
 
     fn take_mat(&mut self, rows: usize, cols: usize) -> Mat {
@@ -300,15 +533,136 @@ impl ExecBackend for NativeBackend {
         &self.cfg
     }
 
-    fn score(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
-        let want = self.cfg.batch * self.cfg.seq_len;
-        ensure!(tokens.len() == want,
-                "score takes batch*seq_len = {} tokens, got {}", want, tokens.len());
-        self.forward(tokens, None)
-    }
-
     fn op_counts(&self) -> OpCounts {
         graph_op_counts(&self.cfg, &self.graph)
+    }
+
+    fn begin(&mut self, batch: usize) -> Result<SessionId> {
+        self.begin_with_mode(batch, self.kv_mode)
+    }
+
+    /// Scoring sessions are pinned to the exact f32 cache regardless of
+    /// `PERQ_KV`, so served NLLs match `score`/eval bit-for-bit.
+    fn begin_scoring(&mut self, batch: usize) -> Result<SessionId> {
+        self.begin_with_mode(batch, KvMode::F32)
+    }
+
+    fn session_batch(&self, sid: SessionId) -> Result<usize> {
+        Ok(self.session_ref(sid)?.kv.slots)
+    }
+
+    fn slot_len(&self, sid: SessionId, slot: usize) -> Result<usize> {
+        let sess = self.session_ref(sid)?;
+        ensure!(slot < sess.kv.slots, "slot {slot} out of range");
+        Ok(sess.kv.len(slot))
+    }
+
+    fn prefill_slots(&mut self, sid: SessionId, slots: &[usize], tokens: &[i32])
+                     -> Result<Vec<f32>> {
+        ensure!(!slots.is_empty(), "prefill needs at least one slot");
+        ensure!(tokens.len() % slots.len() == 0,
+                "token count {} must split evenly across {} slots",
+                tokens.len(), slots.len());
+        let n_new = tokens.len() / slots.len();
+        let mut sess = self.take_session(sid)?;
+        let result = self.run_rows(&mut sess, slots, n_new, tokens, None);
+        self.sessions[sid as usize] = Some(sess);
+        result.map(|m| m.data)
+    }
+
+    fn decode_step_into(&mut self, sid: SessionId, last_tokens: &[i32], out: &mut Vec<f32>)
+                        -> Result<()> {
+        let vocab = self.cfg.vocab;
+        let mut sess = self.take_session(sid)?;
+        let batch = sess.kv.slots;
+        if last_tokens.len() != batch {
+            self.sessions[sid as usize] = Some(sess);
+            bail!("decode_step takes one token per slot ({batch}), got {}", last_tokens.len());
+        }
+        // compact the active slots (negative token = idle, skipped)
+        let mut active = std::mem::take(&mut self.active_scratch);
+        let mut toks = std::mem::take(&mut self.tok_scratch);
+        active.clear();
+        toks.clear();
+        for (slot, &tok) in last_tokens.iter().enumerate() {
+            if tok >= 0 {
+                active.push(slot);
+                toks.push(tok);
+            }
+        }
+        out.clear();
+        out.resize(batch * vocab, 0.0);
+        let result = if active.is_empty() {
+            Ok(())
+        } else {
+            match self.run_rows(&mut sess, &active, 1, &toks, None) {
+                Ok(logits) => {
+                    for (i, &slot) in active.iter().enumerate() {
+                        out[slot * vocab..(slot + 1) * vocab]
+                            .copy_from_slice(logits.row(i));
+                    }
+                    self.put_mat(logits);
+                    Ok(())
+                }
+                Err(e) => Err(e),
+            }
+        };
+        self.active_scratch = active;
+        self.tok_scratch = toks;
+        self.sessions[sid as usize] = Some(sess);
+        result
+    }
+
+    fn reset_slot(&mut self, sid: SessionId, slot: usize) -> Result<()> {
+        let sess = self
+            .sessions
+            .get_mut(sid as usize)
+            .and_then(|s| s.as_mut())
+            .ok_or_else(|| anyhow!("unknown session {sid}"))?;
+        ensure!(slot < sess.kv.slots, "slot {slot} out of range");
+        sess.kv.reset_slot(slot);
+        Ok(())
+    }
+
+    fn end(&mut self, sid: SessionId) -> Result<()> {
+        let i = sid as usize;
+        ensure!(
+            self.sessions.get(i).map_or(false, |s| s.is_some()),
+            "unknown session {sid}"
+        );
+        self.sessions[i] = None;
+        if self.score_sid == Some(sid) {
+            self.score_sid = None;
+        }
+        if self.capture_sid.map(|(s, _)| s) == Some(sid) {
+            self.capture_sid = None;
+        }
+        Ok(())
+    }
+
+    /// The stateless contract, re-expressed as prefill-then-read over a
+    /// *persistent F32-KV session* — bit-identical to the pre-session
+    /// engine (f32 cache reads are exact copies), so eval streamers and
+    /// the parity suites observe no behavior change, and repeat scoring
+    /// reuses the session arenas instead of reallocating.
+    fn score(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let (b, t) = (self.cfg.batch, self.cfg.seq_len);
+        ensure!(tokens.len() == b * t,
+                "score takes batch*seq_len = {} tokens, got {}", b * t, tokens.len());
+        let sid = match self.score_sid {
+            Some(sid) => sid,
+            None => {
+                let sid = self.begin_with_mode(b, KvMode::F32)?;
+                self.score_sid = Some(sid);
+                sid
+            }
+        };
+        let mut sess = self.take_session(sid)?;
+        sess.kv.reset_all();
+        let slots: Vec<usize> = (0..b).collect();
+        let result = self.run_rows(&mut sess, &slots, t, tokens, None);
+        self.sessions[sid as usize] = Some(sess);
+        result.map(|m| m.data)
     }
 }
 
@@ -335,48 +689,46 @@ fn add_assign(x: &mut [f32], y: &[f32]) {
     simd::add_assign_f32(x, y);
 }
 
-/// Multi-head causal SDPA over `n_seqs` independent windows of length `t`:
-/// q/k/v/out are (n_seqs*t, d) with heads laid out contiguously along d.
-/// Matches `model.causal_attention` (f32, softmax = exp(s-max)/sum).
-pub fn causal_attention(q: &Mat, k: &Mat, v: &Mat, out: &mut Mat,
-                        n_seqs: usize, t: usize, heads: usize) {
-    let d = q.cols;
-    let hd = d / heads;
+/// Multi-head causal SDPA for **one query row** against `len` cached K/V
+/// rows (`kbuf`/`vbuf` are `len × d`, heads contiguous along d) — the
+/// incremental form the prefill loop and `decode_step` share, so a
+/// full-window prefill and any prefill+decode split are bit-identical.
+/// Per (head, position) the arithmetic is exactly the pre-session
+/// `causal_attention` (f32, softmax = exp(s-max)/sum, running max inside
+/// the score loop).
+#[allow(clippy::too_many_arguments)]
+fn attend_rows(qrow: &[f32], kbuf: &[f32], vbuf: &[f32], len: usize, d: usize,
+               heads: usize, hd: usize, scores: &mut [f32], out: &mut [f32]) {
     let scale = 1.0 / (hd as f32).sqrt();
-    let mut scores = vec![0.0f32; t];
-    for s in 0..n_seqs {
-        for h in 0..heads {
-            let off = h * hd;
-            for i in 0..t {
-                let qrow = &q.data[(s * t + i) * d + off..(s * t + i) * d + off + hd];
-                let mut mx = f32::NEG_INFINITY;
-                for j in 0..=i {
-                    let krow = &k.data[(s * t + j) * d + off..(s * t + j) * d + off + hd];
-                    let mut acc = 0.0f32;
-                    for c in 0..hd {
-                        acc += qrow[c] * krow[c];
-                    }
-                    let sc = acc * scale;
-                    scores[j] = sc;
-                    if sc > mx {
-                        mx = sc;
-                    }
-                }
-                let mut denom = 0.0f32;
-                for sc in scores[..=i].iter_mut() {
-                    *sc = (*sc - mx).exp();
-                    denom += *sc;
-                }
-                let inv = 1.0 / denom;
-                let orow = &mut out.data[(s * t + i) * d + off..(s * t + i) * d + off + hd];
-                orow.fill(0.0);
-                for j in 0..=i {
-                    let w = scores[j] * inv;
-                    let vrow = &v.data[(s * t + j) * d + off..(s * t + j) * d + off + hd];
-                    for c in 0..hd {
-                        orow[c] += w * vrow[c];
-                    }
-                }
+    for h in 0..heads {
+        let off = h * hd;
+        let qh = &qrow[off..off + hd];
+        let mut mx = f32::NEG_INFINITY;
+        for j in 0..len {
+            let krow = &kbuf[j * d + off..j * d + off + hd];
+            let mut acc = 0.0f32;
+            for c in 0..hd {
+                acc += qh[c] * krow[c];
+            }
+            let sc = acc * scale;
+            scores[j] = sc;
+            if sc > mx {
+                mx = sc;
+            }
+        }
+        let mut denom = 0.0f32;
+        for sc in scores[..len].iter_mut() {
+            *sc = (*sc - mx).exp();
+            denom += *sc;
+        }
+        let inv = 1.0 / denom;
+        let oh = &mut out[off..off + hd];
+        oh.fill(0.0);
+        for j in 0..len {
+            let w = scores[j] * inv;
+            let vrow = &vbuf[j * d + off..j * d + off + hd];
+            for c in 0..hd {
+                oh[c] += w * vrow[c];
             }
         }
     }
@@ -560,5 +912,51 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             assert!((x - y).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn session_lifecycle_and_slot_bookkeeping() {
+        let cfg = tiny_cfg();
+        let ws = tiny_ws(&cfg, 9);
+        let mut be = NativeBackend::new(cfg.clone(), ws, ForwardGraph::Fp).unwrap();
+        let sid = be.begin(3).unwrap();
+        assert_eq!(be.session_batch(sid).unwrap(), 3);
+        assert_eq!(be.slot_len(sid, 0).unwrap(), 0);
+        // prefill two of the three slots with 4-token prompts
+        let prompts: Vec<i32> = vec![1, 2, 3, 4, 5, 6, 7, 0];
+        let logits = be.prefill_slots(sid, &[0, 2], &prompts).unwrap();
+        assert_eq!(logits.len(), 2 * 4 * cfg.vocab);
+        assert_eq!(be.slot_len(sid, 0).unwrap(), 4);
+        assert_eq!(be.slot_len(sid, 1).unwrap(), 0);
+        assert_eq!(be.slot_len(sid, 2).unwrap(), 4);
+        // decode advances only the active slots (slot 1 idle)
+        let step = be.decode_step(sid, &[2, -1, 3]).unwrap();
+        assert_eq!(step.len(), 3 * cfg.vocab);
+        assert!(step[cfg.vocab..2 * cfg.vocab].iter().all(|&v| v == 0.0), "idle row zeroed");
+        assert!(step[..cfg.vocab].iter().any(|&v| v != 0.0));
+        assert_eq!(be.slot_len(sid, 0).unwrap(), 5);
+        assert_eq!(be.slot_len(sid, 1).unwrap(), 0);
+        // releasing a slot frees its positions
+        be.reset_slot(sid, 0).unwrap();
+        assert_eq!(be.slot_len(sid, 0).unwrap(), 0);
+        // capacity overflow is an error, not a wrap
+        let full: Vec<i32> = (0..cfg.seq_len as i32).collect();
+        be.prefill_slots(sid, &[0], &full).unwrap();
+        assert!(be.decode_step(sid, &[1, -1, -1]).is_err(), "slot 0 is full");
+        be.end(sid).unwrap();
+        assert!(be.slot_len(sid, 0).is_err(), "ended session is gone");
+        assert!(be.end(sid).is_err());
+    }
+
+    #[test]
+    fn duplicate_or_oob_slots_rejected() {
+        let cfg = tiny_cfg();
+        let ws = tiny_ws(&cfg, 10);
+        let mut be = NativeBackend::new(cfg, ws, ForwardGraph::Fp).unwrap();
+        let sid = be.begin(2).unwrap();
+        assert!(be.prefill_slots(sid, &[0, 0], &[1, 2, 3, 4]).is_err());
+        assert!(be.prefill_slots(sid, &[5], &[1, 2]).is_err());
+        // after a rejected call the session must still be usable
+        assert!(be.prefill_slots(sid, &[0], &[1, 2]).is_ok());
     }
 }

@@ -10,13 +10,21 @@
 
 use std::path::Path;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 use xla::{PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
 
-use super::{graph_op_counts, ExecBackend, ExtraInput, ForwardGraph, OpCounts};
+use super::{graph_op_counts, ExecBackend, ExtraInput, ForwardGraph, OpCounts, SessionId};
 use crate::model::config::ModelConfig;
 use crate::model::weights::WeightSet;
 use crate::runtime::engine;
+
+/// Minimal session bookkeeping for the AOT path: the lowered HLO graphs
+/// are fixed-shape `(batch, seq_len)` forwards with no KV state, so a
+/// pjrt session only supports one full-window prefill per slot set (the
+/// `score` contract); incremental decode requires the native backend.
+struct PjrtSession {
+    lens: Vec<usize>,
+}
 
 pub struct PjrtBackend {
     exe: PjRtLoadedExecutable,
@@ -29,6 +37,7 @@ pub struct PjrtBackend {
     _host_literals: Vec<xla::Literal>,
     cfg: ModelConfig,
     graph: ForwardGraph,
+    sessions: Vec<Option<PjrtSession>>,
 }
 
 impl PjrtBackend {
@@ -73,20 +82,19 @@ impl PjrtBackend {
             _host_literals: host_literals,
             cfg: cfg.clone(),
             graph: graph.clone(),
+            sessions: Vec::new(),
         })
     }
-}
 
-impl ExecBackend for PjrtBackend {
-    fn name(&self) -> &'static str {
-        "pjrt"
+    fn session_ref(&self, sid: SessionId) -> Result<&PjrtSession> {
+        self.sessions
+            .get(sid as usize)
+            .and_then(|s| s.as_ref())
+            .ok_or_else(|| anyhow!("unknown session {sid}"))
     }
 
-    fn cfg(&self) -> &ModelConfig {
-        &self.cfg
-    }
-
-    fn score(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+    /// The raw fixed-shape artifact execution (the pre-session `score`).
+    fn score_full(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
         let cfg = &self.cfg;
         let tok_lit = engine::tokens_literal(tokens, cfg.batch, cfg.seq_len)?;
         let client = self.exe.client();
@@ -110,8 +118,137 @@ impl ExecBackend for PjrtBackend {
         let tuple = lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
         engine::literal_to_vec_f32(&tuple[0])
     }
+}
+
+impl ExecBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn cfg(&self) -> &ModelConfig {
+        &self.cfg
+    }
 
     fn op_counts(&self) -> OpCounts {
         graph_op_counts(&self.cfg, &self.graph)
+    }
+
+    fn begin(&mut self, batch: usize) -> Result<SessionId> {
+        ensure!(
+            batch == self.cfg.batch,
+            "the pjrt backend executes fixed-shape AOT graphs — sessions carry \
+             exactly cfg.batch = {} slots (got {batch})",
+            self.cfg.batch
+        );
+        let sess = PjrtSession { lens: vec![0; batch] };
+        match self.sessions.iter().position(|s| s.is_none()) {
+            Some(i) => {
+                self.sessions[i] = Some(sess);
+                Ok(i as SessionId)
+            }
+            None => {
+                self.sessions.push(Some(sess));
+                Ok((self.sessions.len() - 1) as SessionId)
+            }
+        }
+    }
+
+    fn session_batch(&self, sid: SessionId) -> Result<usize> {
+        Ok(self.session_ref(sid)?.lens.len())
+    }
+
+    fn slot_len(&self, sid: SessionId, slot: usize) -> Result<usize> {
+        let sess = self.session_ref(sid)?;
+        sess.lens
+            .get(slot)
+            .copied()
+            .ok_or_else(|| anyhow!("slot {slot} out of range"))
+    }
+
+    /// Full-window prefill over any subset of slots. The lowered graph has
+    /// a static `(batch, seq_len)` shape, so a partial batch is padded *by
+    /// this adapter* (last window replicated into the unused rows — rows
+    /// are scored independently, so filler never leaks into real logits);
+    /// only the requested slots' logits are returned. The scheduler above
+    /// carries no padding concept — fixed shapes are a pjrt artifact
+    /// detail, handled here.
+    fn prefill_slots(&mut self, sid: SessionId, slots: &[usize], tokens: &[i32])
+                     -> Result<Vec<f32>> {
+        let (b, t, v) = (self.cfg.batch, self.cfg.seq_len, self.cfg.vocab);
+        {
+            let sess = self.session_ref(sid)?;
+            ensure!(!slots.is_empty() && slots.len() <= b, "bad slot count {}", slots.len());
+            ensure!(tokens.len() == slots.len() * t,
+                    "pjrt prefill takes seq_len = {t} tokens per slot, got {} for {} slots",
+                    tokens.len(), slots.len());
+            for (i, &s) in slots.iter().enumerate() {
+                ensure!(s < b, "slot {s} out of range ({b} slots)");
+                ensure!(!slots[..i].contains(&s), "slot {s} listed twice");
+                ensure!(
+                    sess.lens[s] == 0,
+                    "pjrt slots score one full window each (no incremental append) — \
+                     reset slot {s} first"
+                );
+            }
+        }
+        let k = slots.len();
+        let mut full = Vec::with_capacity(b * t);
+        for i in 0..b {
+            let src = i.min(k - 1) * t;
+            full.extend_from_slice(&tokens[src..src + t]);
+        }
+        let logits = self.score_full(&full)?;
+        ensure!(logits.len() == b * t * v, "artifact returned a bad logit shape");
+        if let Some(Some(sess)) = self.sessions.get_mut(sid as usize) {
+            for &s in slots {
+                sess.lens[s] = t;
+            }
+        }
+        Ok(logits[..k * t * v].to_vec())
+    }
+
+    fn supports_decode(&self) -> bool {
+        false
+    }
+
+    fn decode_step_into(&mut self, _sid: SessionId, _last_tokens: &[i32],
+                        _out: &mut Vec<f32>) -> Result<()> {
+        bail!(
+            "incremental decode requires the native backend — the AOT HLO graphs \
+             are fixed-shape full-window forwards (use --backend native)"
+        )
+    }
+
+    fn reset_slot(&mut self, sid: SessionId, slot: usize) -> Result<()> {
+        let sess = self
+            .sessions
+            .get_mut(sid as usize)
+            .and_then(|s| s.as_mut())
+            .ok_or_else(|| anyhow!("unknown session {sid}"))?;
+        let len = sess
+            .lens
+            .get_mut(slot)
+            .ok_or_else(|| anyhow!("slot {slot} out of range"))?;
+        *len = 0;
+        Ok(())
+    }
+
+    fn end(&mut self, sid: SessionId) -> Result<()> {
+        let i = sid as usize;
+        ensure!(
+            self.sessions.get(i).map_or(false, |s| s.is_some()),
+            "unknown session {sid}"
+        );
+        self.sessions[i] = None;
+        Ok(())
+    }
+
+    /// Direct fixed-shape execution (identical to the provided
+    /// prefill-then-read default, minus the session bookkeeping).
+    fn score(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let want = self.cfg.batch * self.cfg.seq_len;
+        ensure!(tokens.len() == want,
+                "score takes batch*seq_len = {want} tokens, got {}", tokens.len());
+        self.score_full(tokens)
     }
 }

@@ -1,44 +1,52 @@
-//! Batched inference server — the serving-side L3 coordinator.
+//! Continuous-batching inference server — the serving-side L3 coordinator.
 //!
-//! The paper's case for block rotations is a *serving* argument (App A:
-//! online rotation overhead, "1.5× lower rotation cost, 2% end-to-end
-//! latency for Llama2 7B at b=32"). This module provides the runtime that
-//! argument lives in: a request router + dynamic batcher in front of any
-//! [`ExecBackend`] — the device-resident PJRT artifact executor or the
-//! pure-Rust `NativeBackend`.
+//! The paper's case for block rotations is a *serving* argument, and a
+//! *decode-time* one (App A: the online R̃3 rotation is paid per generated
+//! token). This module provides the runtime that argument lives in: a
+//! request router + slot-based continuous batcher in front of any
+//! [`ExecBackend`] session.
 //!
-//! Design (vLLM-router-like, scaled to this testbed):
-//!   * clients submit `ScoreRequest`s (token windows) and receive logits
-//!     scores through a oneshot channel;
-//!   * `num_workers` batcher threads (replicas) drain a shared queue into
-//!     fixed-size backend batches (the forward graph has static (B, T)),
-//!     padding the tail with the first request and waiting at most
-//!     `max_wait` for a full batch; padded slots are *execution filler
-//!     only* — they are excluded from `ServerStats.served`, from
-//!     per-request NLL, and from the reported batch occupancy, and counted
-//!     separately in `ServerStats.padded`;
-//!   * each worker constructs its own backend *on its batcher thread* via
-//!     a shared `Send + Sync` factory, because PJRT handles are `Rc`-based
-//!     and thread-confined; weights live as device buffers there (uploaded
-//!     once), so the request path copies only tokens — the §Perf win over
-//!     literal re-upload on every call. The native backend reuses pooled
-//!     scratch the same way. Scoring is per-slot independent (per-token
-//!     quantization, per-sequence attention), so NLLs are identical
-//!     regardless of `num_workers` or batch composition — asserted by
-//!     rust/tests/simd_props.rs;
-//!   * per-worker counters merge into the aggregate [`ServerStats`], and a
-//!     fixed-bucket atomic histogram tracks request latency for
-//!     p50/p95/p99 reporting (`latency_percentiles`).
+//! Design (vLLM-style, scaled to this testbed):
+//!   * clients submit [`ScoreRequest`]s (token windows → NLL) or
+//!     [`GenerateRequest`]s (prompt + `max_new_tokens` → greedy tokens)
+//!     and receive responses through oneshot channels;
+//!   * each of the `num_workers` replicas owns a backend *session* with
+//!     `cfg.batch` attention-state slots. Requests join and leave the live
+//!     batch at **step granularity**: score windows prefill free slots and
+//!     release them immediately; generation requests prefill their prompt
+//!     into a slot and then ride the shared `decode_step` until done,
+//!     while new arrivals backfill freed slots between steps. There is no
+//!     fixed-size batch assembly and no tail-padding filler — a partial
+//!     step simply runs fewer rows (the pjrt adapter hides its static
+//!     graph shape internally);
+//!   * each worker constructs its own backend *on its replica thread* via
+//!     a shared `Send + Sync` factory (PJRT handles are `Rc`-based and
+//!     thread-confined; the native backend keeps pooled scratch + session
+//!     arenas warm the same way). Scoring and sampling are per-slot
+//!     independent (per-token quantization, per-slot attention state), so
+//!     NLLs and generated tokens are identical regardless of arrival
+//!     order, co-batched requests, or replica count — asserted by
+//!     rust/tests/decode_parity.rs;
+//!   * [`ServerStats`] tracks request counts, per-phase (prefill/decode)
+//!     execution time and token throughput, step occupancy, and three
+//!     fixed-bucket atomic latency histograms (end-to-end, prefill phase,
+//!     decode phase) with explicit saturation counting. A coherent
+//!     [`StatsSnapshot`] feeds the `perq serve` JSON output.
+//!
+//! The batch-forming wait is configurable: `--max-wait-ms` on the CLIs,
+//! `PERQ_MAX_WAIT_MS` in the environment, else [`DEFAULT_MAX_WAIT_MS`]
+//! (see [`resolve_max_wait`]). It only delays *idle* workers to let a
+//! fuller prefill form; a worker with active decode slots never waits.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, ensure, Result};
 
-use crate::backend::ExecBackend;
+use crate::backend::{ExecBackend, SessionId};
 use crate::model::config::ModelConfig;
 
 pub use crate::backend::ExtraInput;
@@ -48,8 +56,24 @@ pub use crate::backend::ExtraInput;
 /// replica, so it must be `Fn`, not `FnOnce`.
 pub type BackendFactory = Box<dyn Fn() -> Result<Box<dyn ExecBackend>> + Send + Sync + 'static>;
 
+/// Default batch-forming wait for idle workers, in milliseconds.
+pub const DEFAULT_MAX_WAIT_MS: u64 = 5;
+
+/// Resolve the batch-forming wait: CLI `--max-wait-ms` wins, then the
+/// `PERQ_MAX_WAIT_MS` environment variable, then [`DEFAULT_MAX_WAIT_MS`].
+pub fn resolve_max_wait(cli_ms: Option<u64>) -> Duration {
+    let ms = cli_ms
+        .or_else(|| {
+            std::env::var("PERQ_MAX_WAIT_MS")
+                .ok()
+                .and_then(|s| s.trim().parse::<u64>().ok())
+        })
+        .unwrap_or(DEFAULT_MAX_WAIT_MS);
+    Duration::from_millis(ms)
+}
+
 pub struct ScoreRequest {
-    /// seq_len token window to score
+    /// seq_len + 1 tokens: the window to score plus the next-token target
     pub tokens: Vec<i32>,
     pub submitted: Instant,
     respond: Sender<ScoreResponse>,
@@ -61,12 +85,36 @@ pub struct ScoreResponse {
     pub nll: f64,
     /// queueing + batching + execution latency
     pub latency: Duration,
-    /// how many *real* requests shared the batch (padding excluded)
+    /// score windows that shared this request's prefill step
     pub batch_occupancy: usize,
 }
 
+pub struct GenerateRequest {
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub submitted: Instant,
+    respond: Sender<GenerateResponse>,
+}
+
+#[derive(Debug)]
+pub struct GenerateResponse {
+    /// greedily sampled tokens (prompt excluded)
+    pub tokens: Vec<i32>,
+    /// submit → prompt prefilled + first token sampled
+    pub prefill_latency: Duration,
+    /// first token → generation complete
+    pub decode_latency: Duration,
+    /// end-to-end (prefill + decode phases)
+    pub latency: Duration,
+}
+
+enum Request {
+    Score(ScoreRequest),
+    Generate(GenerateRequest),
+}
+
 struct Queue {
-    pending: VecDeque<ScoreRequest>,
+    pending: VecDeque<Request>,
     shutdown: bool,
 }
 
@@ -78,33 +126,52 @@ const LAT_BUCKETS: usize = 64;
 /// every worker thread without locks, readable while the server runs.
 /// Buckets are √2-spaced in microseconds, so a reported percentile is
 /// within ~19% of the true value (the geometric-mid representative).
+/// Out-of-range samples clamp into the edge buckets (so `count` always
+/// equals the number of records); clamps past the top are additionally
+/// tallied in a saturation counter instead of disappearing silently.
 pub struct LatencyHist {
     buckets: Vec<AtomicU64>,
+    saturated: AtomicU64,
 }
 
 impl Default for LatencyHist {
     fn default() -> Self {
-        LatencyHist { buckets: (0..LAT_BUCKETS).map(|_| AtomicU64::new(0)).collect() }
+        LatencyHist {
+            buckets: (0..LAT_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            saturated: AtomicU64::new(0),
+        }
     }
 }
 
 impl LatencyHist {
+    /// Raw (unclamped) bucket index of a nanosecond latency.
     fn bucket(ns: u64) -> usize {
         let us = (ns / 1_000).max(1);
         let l = 63 - us.leading_zeros() as u64; // floor(log2 µs)
         let half = if l > 0 && (us & (1 << (l - 1))) != 0 { 1 } else { 0 };
-        ((2 * l + half) as usize).min(LAT_BUCKETS - 1)
+        (2 * l + half) as usize
     }
 
-    /// Record one request latency.
+    /// Record one request latency. Samples past the top bucket land in the
+    /// last bucket *and* bump the saturation counter.
     pub fn record(&self, lat: Duration) {
         let idx = LatencyHist::bucket(lat.as_nanos() as u64);
-        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        if idx >= LAT_BUCKETS {
+            self.saturated.fetch_add(1, Ordering::Relaxed);
+            self.buckets[LAT_BUCKETS - 1].fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        }
     }
 
-    /// Total recorded samples.
+    /// Total recorded samples (clamped records included).
     pub fn count(&self) -> u64 {
         self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Records that overflowed the top bucket and were clamped into it.
+    pub fn saturated(&self) -> u64 {
+        self.saturated.load(Ordering::Relaxed)
     }
 
     /// The q-quantile (0 < q ≤ 1) in milliseconds, or 0.0 with no samples.
@@ -135,23 +202,105 @@ impl LatencyHist {
 /// Per-worker counters; the aggregate [`ServerStats`] sums across replicas.
 #[derive(Default)]
 pub struct WorkerStats {
+    /// requests completed on this replica (score + generate)
     pub served: AtomicU64,
+    /// engine steps (prefill calls + decode calls)
     pub batches: AtomicU64,
     pub exec_ns: AtomicU64,
 }
 
 /// Server statistics (atomics; read while running). The aggregate counters
-/// are the merge of every worker's [`WorkerStats`].
+/// are the merge of every worker's [`WorkerStats`]; the phase split and
+/// the histograms are aggregate-only.
 #[derive(Default)]
 pub struct ServerStats {
-    /// real requests served (padded slots never count)
+    /// requests completed (score + generate)
     pub served: AtomicU64,
+    /// generate requests completed (subset of `served`)
+    pub generated: AtomicU64,
+    /// engine steps executed (prefill calls + decode calls)
     pub batches: AtomicU64,
-    /// batch slots filled with padding (tail duplication)
-    pub padded: AtomicU64,
     pub exec_ns: AtomicU64,
-    /// request latency (queue + batch + exec) histogram
+    /// execution time spent in prefill steps
+    pub prefill_ns: AtomicU64,
+    /// execution time spent in decode steps
+    pub decode_ns: AtomicU64,
+    /// prompt/window tokens pushed through prefill
+    pub prefill_tokens: AtomicU64,
+    /// tokens produced by decode steps
+    pub decode_tokens: AtomicU64,
+    /// Σ active requests over engine steps (mean = occupancy_sum/batches)
+    pub occupancy_sum: AtomicU64,
+    /// end-to-end request latency histogram
     pub latency: LatencyHist,
+    /// submit → prefill-complete latency (generate requests)
+    pub prefill_lat: LatencyHist,
+    /// decode-phase latency (generate requests)
+    pub decode_lat: LatencyHist,
+}
+
+/// One coherent read of [`ServerStats`] — the `perq serve` JSON record.
+#[derive(Clone, Debug)]
+pub struct StatsSnapshot {
+    pub served: u64,
+    pub generated: u64,
+    pub batches: u64,
+    pub exec_s: f64,
+    pub prefill_s: f64,
+    pub decode_s: f64,
+    pub prefill_tokens: u64,
+    pub decode_tokens: u64,
+    /// decode tokens per second of decode execution time
+    pub decode_tok_per_s: f64,
+    /// mean active requests per engine step
+    pub mean_occupancy: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub prefill_p50_ms: f64,
+    pub prefill_p95_ms: f64,
+    pub prefill_p99_ms: f64,
+    pub decode_p50_ms: f64,
+    pub decode_p95_ms: f64,
+    pub decode_p99_ms: f64,
+    /// latency records clamped into the top histogram bucket
+    pub hist_saturated: u64,
+}
+
+impl ServerStats {
+    fn snapshot(&self) -> StatsSnapshot {
+        let batches = self.batches.load(Ordering::Relaxed);
+        let decode_s = self.decode_ns.load(Ordering::Relaxed) as f64 / 1e9;
+        let decode_tokens = self.decode_tokens.load(Ordering::Relaxed);
+        StatsSnapshot {
+            served: self.served.load(Ordering::Relaxed),
+            generated: self.generated.load(Ordering::Relaxed),
+            batches,
+            exec_s: self.exec_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            prefill_s: self.prefill_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            decode_s,
+            prefill_tokens: self.prefill_tokens.load(Ordering::Relaxed),
+            decode_tokens,
+            decode_tok_per_s: if decode_s > 0.0 { decode_tokens as f64 / decode_s } else { 0.0 },
+            mean_occupancy: if batches > 0 {
+                self.occupancy_sum.load(Ordering::Relaxed) as f64 / batches as f64
+            } else {
+                0.0
+            },
+            p50_ms: self.latency.percentile(0.50),
+            p95_ms: self.latency.percentile(0.95),
+            p99_ms: self.latency.percentile(0.99),
+            prefill_p50_ms: self.prefill_lat.percentile(0.50),
+            prefill_p95_ms: self.prefill_lat.percentile(0.95),
+            prefill_p99_ms: self.prefill_lat.percentile(0.99),
+            decode_p50_ms: self.decode_lat.percentile(0.50),
+            decode_p95_ms: self.decode_lat.percentile(0.95),
+            decode_p99_ms: self.decode_lat.percentile(0.99),
+            hist_saturated: self.latency.saturated()
+                + self.prefill_lat.saturated()
+                + self.decode_lat.saturated(),
+        }
+    }
 }
 
 pub struct InferenceServer {
@@ -161,12 +310,15 @@ pub struct InferenceServer {
     workers: Vec<std::thread::JoinHandle<()>>,
     running: Arc<AtomicBool>,
     cfg: ModelConfig,
+    /// false when the backend cannot decode incrementally (pjrt AOT
+    /// graphs) — generation requests are rejected at submit time
+    supports_generate: bool,
 }
 
 impl InferenceServer {
-    /// Spin up `num_workers` backend replicas (one batcher thread each,
-    /// each owning a backend produced by `factory` on that thread) over a
-    /// shared request queue. Construction errors from *any* replica
+    /// Spin up `num_workers` backend replicas (one session-owning thread
+    /// each, each owning a backend produced by `factory` on that thread)
+    /// over a shared request queue. Construction errors from *any* replica
     /// surface here, not on first request.
     pub fn start_backend(factory: BackendFactory, cfg: &ModelConfig, max_wait: Duration,
                          num_workers: usize) -> Result<InferenceServer> {
@@ -178,7 +330,9 @@ impl InferenceServer {
         ));
         let stats = Arc::new(ServerStats::default());
         let running = Arc::new(AtomicBool::new(true));
-        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        // each replica reports readiness plus whether its backend can
+        // decode incrementally (pjrt cannot)
+        let (ready_tx, ready_rx) = channel::<Result<bool>>();
         let mut workers = Vec::with_capacity(num_workers);
         let mut worker_stats = Vec::with_capacity(num_workers);
         for w in 0..num_workers {
@@ -194,7 +348,7 @@ impl InferenceServer {
                 .spawn(move || {
                     let backend = match (*t_factory)() {
                         Ok(b) => {
-                            let _ = t_ready.send(Ok(()));
+                            let _ = t_ready.send(Ok(b.supports_decode()));
                             b
                         }
                         Err(e) => {
@@ -203,7 +357,7 @@ impl InferenceServer {
                         }
                     };
                     drop(t_ready);
-                    batcher_loop(backend, t_queue, t_stats, per, t_running, max_wait)
+                    worker_loop(backend, t_queue, t_stats, per, t_running, max_wait)
                 });
             match spawned {
                 Ok(handle) => workers.push(handle),
@@ -224,18 +378,21 @@ impl InferenceServer {
             }
         }
         drop(ready_tx);
-        let server = InferenceServer {
+        let mut server = InferenceServer {
             queue,
             stats,
             worker_stats,
             workers,
             running: running.clone(),
             cfg: cfg.clone(),
+            supports_generate: true,
         };
         // every replica must come up; a single failure shuts the rest down
         for _ in 0..num_workers {
             match ready_rx.recv() {
-                Ok(Ok(())) => {}
+                Ok(Ok(can_decode)) => {
+                    server.supports_generate &= can_decode;
+                }
                 Ok(Err(e)) => {
                     server.shutdown();
                     return Err(e);
@@ -300,29 +457,86 @@ impl InferenceServer {
     }
 
     /// Submit a scoring request; returns a receiver for the response.
-    pub fn submit(&self, tokens: Vec<i32>) -> Result<std::sync::mpsc::Receiver<ScoreResponse>> {
-        anyhow::ensure!(tokens.len() == self.cfg.seq_len + 1,
-                        "requests carry seq_len+1 tokens (window + next-token target)");
+    pub fn submit(&self, tokens: Vec<i32>) -> Result<Receiver<ScoreResponse>> {
+        ensure!(tokens.len() == self.cfg.seq_len + 1,
+                "requests carry seq_len+1 tokens (window + next-token target)");
+        // validate every token here — including the final next-token
+        // target, which never flows through prefill's own check; an
+        // out-of-vocab target must fail the submit, not panic a worker
+        self.check_tokens(&tokens)?;
         let (tx, rx) = channel();
-        let (lock, cv) = &*self.queue;
-        let mut q = lock.lock().unwrap();
-        anyhow::ensure!(!q.shutdown, "server is shut down");
-        q.pending.push_back(ScoreRequest {
+        self.push(Request::Score(ScoreRequest {
             tokens,
             submitted: Instant::now(),
             respond: tx,
-        });
-        cv.notify_one();
+        }))?;
         Ok(rx)
     }
 
-    /// (served, batches, exec seconds) — `served` counts real requests
-    /// only; padded slots are tracked by [`InferenceServer::padded_slots`].
+    /// Submit a generation request (greedy sampling); returns a receiver
+    /// for the response. The request joins a replica's live batch at the
+    /// next step boundary and holds one slot until `max_new_tokens` are
+    /// produced.
+    pub fn submit_generate(&self, prompt: Vec<i32>, max_new_tokens: usize)
+                           -> Result<Receiver<GenerateResponse>> {
+        ensure!(
+            self.supports_generate,
+            "this server's backend cannot decode incrementally (fixed-shape AOT \
+             graphs) — generation requires the native backend"
+        );
+        ensure!(!prompt.is_empty(), "generation needs a non-empty prompt");
+        ensure!(max_new_tokens >= 1, "generation needs max_new_tokens >= 1");
+        ensure!(
+            prompt.len() + max_new_tokens <= self.cfg.seq_len,
+            "prompt ({}) + max_new_tokens ({max_new_tokens}) exceeds the model's \
+             seq_len ({})",
+            prompt.len(),
+            self.cfg.seq_len
+        );
+        self.check_tokens(&prompt)?;
+        let (tx, rx) = channel();
+        self.push(Request::Generate(GenerateRequest {
+            prompt,
+            max_new_tokens,
+            submitted: Instant::now(),
+            respond: tx,
+        }))?;
+        Ok(rx)
+    }
+
+    fn check_tokens(&self, tokens: &[i32]) -> Result<()> {
+        for &t in tokens {
+            ensure!(
+                t >= 0 && (t as usize) < self.cfg.vocab,
+                "token {t} outside the model's vocab (0..{})",
+                self.cfg.vocab
+            );
+        }
+        Ok(())
+    }
+
+    fn push(&self, req: Request) -> Result<()> {
+        let (lock, cv) = &*self.queue;
+        let mut q = lock.lock().unwrap();
+        ensure!(!q.shutdown, "server is shut down");
+        q.pending.push_back(req);
+        cv.notify_one();
+        Ok(())
+    }
+
+    /// (served, batches, exec seconds) — the legacy aggregate triple
+    /// (`served` counts completed requests of both kinds).
     pub fn stats(&self) -> (u64, u64, f64) {
         let served = self.stats.served.load(Ordering::Relaxed);
         let batches = self.stats.batches.load(Ordering::Relaxed);
         let exec_s = self.stats.exec_ns.load(Ordering::Relaxed) as f64 / 1e9;
         (served, batches, exec_s)
+    }
+
+    /// A full coherent statistics read: request counts, per-phase
+    /// execution/throughput, occupancy, percentiles, saturation.
+    pub fn snapshot(&self) -> StatsSnapshot {
+        self.stats.snapshot()
     }
 
     /// Per-replica (served, batches, exec seconds) snapshots, in worker
@@ -350,12 +564,6 @@ impl InferenceServer {
     pub fn latency_percentiles(&self) -> (f64, f64, f64) {
         let h = &self.stats.latency;
         (h.percentile(0.50), h.percentile(0.95), h.percentile(0.99))
-    }
-
-    /// Batch slots that were filled with tail padding (never billed as
-    /// served requests).
-    pub fn padded_slots(&self) -> u64 {
-        self.stats.padded.load(Ordering::Relaxed)
     }
 
     fn signal_shutdown(&self) {
@@ -421,99 +629,283 @@ fn graph_from_extras(extras: &[ExtraInput]) -> Result<crate::backend::ForwardGra
     Ok(ForwardGraph::Merged { r3_block: b, format })
 }
 
-fn batcher_loop(mut backend: Box<dyn ExecBackend>, queue: Arc<(Mutex<Queue>, Condvar)>,
-                stats: Arc<ServerStats>, mine: Arc<WorkerStats>, running: Arc<AtomicBool>,
-                max_wait: Duration) {
+/// A generation request currently occupying a session slot.
+struct ActiveGen {
+    req: GenerateRequest,
+    generated: Vec<i32>,
+    /// when the prompt prefill (+ first token) completed
+    prefilled: Instant,
+}
+
+use crate::backend::greedy_argmax as argmax;
+
+/// Mean next-token NLL of one scored window from its prefill logits.
+fn window_nll(logits: &[f32], tokens: &[i32], t: usize, v: usize) -> f64 {
+    let mut nll = 0.0f64;
+    for j in 0..t {
+        let row = &logits[j * v..(j + 1) * v];
+        let mx = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x)) as f64;
+        let lse: f64 = row.iter().map(|&x| ((x as f64) - mx).exp()).sum();
+        let tgt = tokens[j + 1] as usize;
+        nll += mx + lse.ln() - row[tgt] as f64;
+    }
+    nll / t as f64
+}
+
+/// One replica: a backend session with `cfg.batch` slots, driven at step
+/// granularity. Score requests prefill free slots and release them in the
+/// same step; generation requests hold a slot across decode steps, with
+/// new arrivals backfilling freed slots between steps.
+fn worker_loop(mut backend: Box<dyn ExecBackend>, queue: Arc<(Mutex<Queue>, Condvar)>,
+               stats: Arc<ServerStats>, mine: Arc<WorkerStats>, running: Arc<AtomicBool>,
+               max_wait: Duration) {
     let b = backend.cfg().batch;
     let t = backend.cfg().seq_len;
     let v = backend.cfg().vocab;
+    // two sessions per replica: generation rides the backend's default
+    // KV mode (quantized cache); score requests run in an *exact* scoring
+    // session so served NLLs match the eval/`score` path bit-for-bit
+    let sid: SessionId = match backend.begin(b) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("server: opening execution session failed: {e:#}");
+            return;
+        }
+    };
+    let sid_score: SessionId = match backend.begin_scoring(b) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("server: opening scoring session failed: {e:#}");
+            return;
+        }
+    };
+    let mut gen_slots: Vec<Option<ActiveGen>> = (0..b).map(|_| None).collect();
+    let mut last_tokens: Vec<i32> = vec![-1; b];
+    let mut logits_buf: Vec<f32> = Vec::new();
+
     while running.load(Ordering::Relaxed) {
-        // drain up to a full batch, waiting at most max_wait after the
-        // first request arrives
-        let batch: Vec<ScoreRequest> = {
+        let n_active = gen_slots.iter().filter(|s| s.is_some()).count();
+        // -- pull work: block only when fully idle ------------------------
+        let (score_reqs, gen_reqs): (Vec<ScoreRequest>, Vec<GenerateRequest>) = {
             let (lock, cv) = &*queue;
             let mut q = lock.lock().unwrap();
-            while q.pending.is_empty() && !q.shutdown {
-                q = cv.wait(q).unwrap();
+            if n_active == 0 {
+                while q.pending.is_empty() && !q.shutdown {
+                    q = cv.wait(q).unwrap();
+                }
+                if q.shutdown && q.pending.is_empty() {
+                    return;
+                }
+                // batch-forming wait: give peers up to max_wait to arrive
+                // so the prefill runs fuller (idle workers only — a worker
+                // with live decode slots never stalls here)
+                let deadline = Instant::now() + max_wait;
+                while q.pending.len() < b && !q.shutdown {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    let (qq, timeout) = cv.wait_timeout(q, deadline - now).unwrap();
+                    q = qq;
+                    if timeout.timed_out() {
+                        break;
+                    }
+                }
             }
-            if q.shutdown && q.pending.is_empty() {
-                return;
-            }
-            let deadline = Instant::now() + max_wait;
-            while q.pending.len() < b && !q.shutdown {
-                let now = Instant::now();
-                if now >= deadline {
+            // FIFO admission: scores fill the scoring session (up to b),
+            // generations fill the free generation slots; stop at the
+            // first request that doesn't fit so nothing is overtaken
+            let free_gen = b - n_active;
+            let mut scores = Vec::new();
+            let mut gens = Vec::new();
+            loop {
+                let fits = match q.pending.front() {
+                    Some(Request::Score(_)) => scores.len() < b,
+                    Some(Request::Generate(_)) => gens.len() < free_gen,
+                    None => false,
+                };
+                if !fits {
                     break;
                 }
-                let (qq, timeout) = cv.wait_timeout(q, deadline - now).unwrap();
-                q = qq;
-                if timeout.timed_out() {
-                    break;
+                match q.pending.pop_front().expect("front checked above") {
+                    Request::Score(s) => scores.push(s),
+                    Request::Generate(g) => gens.push(g),
                 }
             }
-            let take = q.pending.len().min(b);
-            q.pending.drain(..take).collect()
+            (scores, gens)
         };
-        if batch.is_empty() {
+
+        // -- score admissions: one batched prefill (exact session) --------
+        if !score_reqs.is_empty() {
+            // occupancy of THIS engine step: the score windows it runs
+            let occupancy = score_reqs.len();
+            let slots: Vec<usize> = (0..score_reqs.len()).collect();
+            let mut tokens = Vec::with_capacity(slots.len() * t);
+            for req in &score_reqs {
+                tokens.extend_from_slice(&req.tokens[..t]);
+            }
+            let t_exec = Instant::now();
+            let result = backend.prefill_slots(sid_score, &slots, &tokens);
+            let exec_ns = t_exec.elapsed().as_nanos() as u64;
+            record_step(&stats, &mine, exec_ns, true, (slots.len() * t) as u64,
+                        occupancy as u64);
+            for &slot in &slots {
+                if let Err(e) = backend.reset_slot(sid_score, slot) {
+                    eprintln!("server: releasing score slot {slot} failed: {e:#}");
+                }
+            }
+            match result {
+                Ok(logits) => {
+                    for (i, req) in score_reqs.into_iter().enumerate() {
+                        let nll = window_nll(&logits[i * t * v..(i + 1) * t * v],
+                                             &req.tokens, t, v);
+                        let latency = req.submitted.elapsed();
+                        stats.served.fetch_add(1, Ordering::Relaxed);
+                        mine.served.fetch_add(1, Ordering::Relaxed);
+                        stats.latency.record(latency);
+                        let _ = req.respond.send(ScoreResponse {
+                            nll,
+                            latency,
+                            batch_occupancy: occupancy,
+                        });
+                    }
+                }
+                Err(e) => {
+                    eprintln!("server: score prefill failed: {e:#}");
+                    // drop senders → clients observe disconnection
+                }
+            }
+        }
+
+        // -- generation admissions: prefill prompts into free slots -------
+        for req in gen_reqs {
+            let Some(slot) = (0..b).find(|&s| gen_slots[s].is_none()) else {
+                eprintln!("server: admission raced past capacity — requeueing");
+                let (lock, cv) = &*queue;
+                if let Ok(mut q) = lock.lock() {
+                    q.pending.push_front(Request::Generate(req));
+                }
+                cv.notify_one();
+                break;
+            };
+            let t_exec = Instant::now();
+            let result = backend.prefill_slots(sid, &[slot], &req.prompt);
+            let exec_ns = t_exec.elapsed().as_nanos() as u64;
+            // a prompt prefill is its own engine step, running 1 request
+            record_step(&stats, &mine, exec_ns, true, req.prompt.len() as u64, 1);
+            match result {
+                Ok(logits) => {
+                    // greedy first token from the last prompt position
+                    let first = argmax(&logits[(req.prompt.len() - 1) * v..req.prompt.len() * v]);
+                    let prefilled = Instant::now();
+                    stats.prefill_lat.record(prefilled - req.submitted);
+                    let active = ActiveGen { req, generated: vec![first], prefilled };
+                    if active.generated.len() >= active.req.max_new_tokens {
+                        finish_generation(&stats, &mine, active);
+                        let _ = backend.reset_slot(sid, slot);
+                    } else {
+                        last_tokens[slot] = first;
+                        gen_slots[slot] = Some(active);
+                    }
+                }
+                Err(e) => {
+                    eprintln!("server: prompt prefill failed: {e:#}");
+                    let _ = backend.reset_slot(sid, slot);
+                    // drop sender → client observes disconnection
+                }
+            }
+        }
+
+        // -- one decode step over every active slot -----------------------
+        let n_active = gen_slots.iter().filter(|s| s.is_some()).count();
+        if n_active == 0 {
             continue;
         }
-        let real = batch.len();
-        // assemble the token batch; tail slots are padded with the first
-        // request purely to satisfy the static (B, T) graph shape
-        let mut tokens = Vec::with_capacity(b * t);
-        for i in 0..b {
-            let req = batch.get(i).unwrap_or(&batch[0]);
-            tokens.extend_from_slice(&req.tokens[..t]);
-        }
         let t_exec = Instant::now();
-        let result = backend.score(&tokens);
+        let result = backend.decode_step_into(sid, &last_tokens, &mut logits_buf);
         let exec_ns = t_exec.elapsed().as_nanos() as u64;
-        stats.exec_ns.fetch_add(exec_ns, Ordering::Relaxed);
-        stats.batches.fetch_add(1, Ordering::Relaxed);
-        stats.padded.fetch_add((b - real) as u64, Ordering::Relaxed);
-        mine.exec_ns.fetch_add(exec_ns, Ordering::Relaxed);
-        mine.batches.fetch_add(1, Ordering::Relaxed);
+        record_step(&stats, &mine, exec_ns, false, n_active as u64, n_active as u64);
         match result {
-            Ok(logits) => {
-                // only the `real` leading slots correspond to requests;
-                // padded tail logits are dropped without scoring
-                for (i, req) in batch.into_iter().enumerate() {
-                    // mean NLL of targets tokens[1..=t] under logits[0..t)
-                    let base = i * t * v;
-                    let mut nll = 0.0f64;
-                    for j in 0..t {
-                        let row = &logits[base + j * v..base + (j + 1) * v];
-                        let mx = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x)) as f64;
-                        let lse: f64 = row.iter().map(|&x| ((x as f64) - mx).exp()).sum();
-                        let tgt = req.tokens[j + 1] as usize;
-                        nll += mx + lse.ln() - row[tgt] as f64;
+            Ok(()) => {
+                // tokens count only for steps that actually produced them
+                stats.decode_tokens.fetch_add(n_active as u64, Ordering::Relaxed);
+                for slot in 0..b {
+                    if gen_slots[slot].is_none() {
+                        continue;
                     }
-                    stats.served.fetch_add(1, Ordering::Relaxed);
-                    mine.served.fetch_add(1, Ordering::Relaxed);
-                    let latency = req.submitted.elapsed();
-                    stats.latency.record(latency);
-                    let _ = req.respond.send(ScoreResponse {
-                        nll: nll / t as f64,
-                        latency,
-                        batch_occupancy: real,
-                    });
+                    let tok = argmax(&logits_buf[slot * v..(slot + 1) * v]);
+                    let done = {
+                        let active = gen_slots[slot].as_mut().expect("checked above");
+                        active.generated.push(tok);
+                        active.generated.len() >= active.req.max_new_tokens
+                    };
+                    if done {
+                        let finished = gen_slots[slot].take().expect("checked above");
+                        finish_generation(&stats, &mine, finished);
+                        last_tokens[slot] = -1;
+                        let _ = backend.reset_slot(sid, slot);
+                    } else {
+                        last_tokens[slot] = tok;
+                    }
                 }
             }
             Err(e) => {
-                eprintln!("server: batch execution failed: {e:#}");
-                // drop senders → clients observe disconnection
+                eprintln!("server: decode step failed: {e:#}");
+                // abandon the active generations (senders drop) and
+                // release their slots so the replica can keep serving
+                for slot in 0..b {
+                    if gen_slots[slot].take().is_some() {
+                        last_tokens[slot] = -1;
+                        let _ = backend.reset_slot(sid, slot);
+                    }
+                }
             }
         }
     }
 }
 
+/// Account one engine step (prefill or decode) in the aggregate and
+/// per-worker counters.
+fn record_step(stats: &ServerStats, mine: &WorkerStats, exec_ns: u64, is_prefill: bool,
+               tokens: u64, occupancy: u64) {
+    stats.exec_ns.fetch_add(exec_ns, Ordering::Relaxed);
+    stats.batches.fetch_add(1, Ordering::Relaxed);
+    stats.occupancy_sum.fetch_add(occupancy, Ordering::Relaxed);
+    if is_prefill {
+        stats.prefill_ns.fetch_add(exec_ns, Ordering::Relaxed);
+        stats.prefill_tokens.fetch_add(tokens, Ordering::Relaxed);
+    } else {
+        stats.decode_ns.fetch_add(exec_ns, Ordering::Relaxed);
+    }
+    mine.exec_ns.fetch_add(exec_ns, Ordering::Relaxed);
+    mine.batches.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Complete a generation request: respond and account it.
+fn finish_generation(stats: &ServerStats, mine: &WorkerStats, active: ActiveGen) {
+    let now = Instant::now();
+    let latency = now - active.req.submitted;
+    let decode_latency = now - active.prefilled;
+    stats.served.fetch_add(1, Ordering::Relaxed);
+    stats.generated.fetch_add(1, Ordering::Relaxed);
+    mine.served.fetch_add(1, Ordering::Relaxed);
+    stats.latency.record(latency);
+    stats.decode_lat.record(decode_latency);
+    let _ = active.req.respond.send(GenerateResponse {
+        tokens: active.generated,
+        prefill_latency: active.prefilled - active.req.submitted,
+        decode_latency,
+        latency,
+    });
+}
+
 #[cfg(test)]
 mod tests {
-    //! Queue/batcher logic tests that don't need a real model live in
+    //! Queue/scheduler logic tests that don't need a real model live in
     //! rust/tests/coordinator_props.rs; full server round-trips are
-    //! exercised natively in rust/tests/backend_parity.rs and
-    //! examples/serve_requests.rs, multi-worker determinism in
-    //! rust/tests/simd_props.rs, and PJRT in the integration suite.
+    //! exercised natively below and in examples/serve_requests.rs,
+    //! multi-worker determinism in rust/tests/simd_props.rs and
+    //! rust/tests/decode_parity.rs, and PJRT in the integration suite.
 
     use super::*;
     use crate::backend::ForwardGraph;
@@ -524,9 +916,14 @@ mod tests {
     fn stats_default_zero() {
         let s = ServerStats::default();
         assert_eq!(s.served.load(std::sync::atomic::Ordering::Relaxed), 0);
-        assert_eq!(s.padded.load(std::sync::atomic::Ordering::Relaxed), 0);
+        assert_eq!(s.generated.load(std::sync::atomic::Ordering::Relaxed), 0);
         assert_eq!(s.latency.count(), 0);
         assert_eq!(s.latency.percentile(0.5), 0.0);
+        let snap = s.snapshot();
+        assert_eq!(snap.decode_tokens, 0);
+        assert_eq!(snap.decode_tok_per_s, 0.0);
+        assert_eq!(snap.mean_occupancy, 0.0);
+        assert_eq!(snap.hist_saturated, 0);
     }
 
     #[test]
@@ -546,43 +943,71 @@ mod tests {
     }
 
     #[test]
-    fn latency_hist_extremes_clamp() {
+    fn latency_hist_extremes_clamp_with_saturation() {
         let h = LatencyHist::default();
         h.record(Duration::from_nanos(1)); // below 1 µs → first bucket
+        assert_eq!(h.saturated(), 0, "low clamp is not saturation");
         h.record(Duration::from_secs(7200)); // beyond range → last bucket
-        assert_eq!(h.count(), 2);
+        h.record(Duration::from_secs(9000));
+        assert_eq!(h.count(), 3, "clamped records still count");
+        assert_eq!(h.saturated(), 2, "top-bucket clamps are tallied");
         assert!(h.percentile(1.0) > h.percentile(0.1));
     }
 
     #[test]
-    fn native_server_round_trip_counts_padding() {
-        let j = json::parse(
-            r#"{"config": {"name": "t", "n_layers": 1, "d_model": 16,
-                "n_heads": 2, "d_ffn": 32, "vocab": 8, "seq_len": 8,
-                "batch": 4, "block_sizes": [1, 8]}}"#,
-        )
+    fn resolve_max_wait_precedence() {
+        // CLI value wins outright (env consultation skipped)
+        assert_eq!(resolve_max_wait(Some(25)), Duration::from_millis(25));
+        assert_eq!(resolve_max_wait(Some(0)), Duration::from_millis(0));
+        // no CLI and no env (assuming a clean test environment) → default
+        if std::env::var("PERQ_MAX_WAIT_MS").is_err() {
+            assert_eq!(resolve_max_wait(None), Duration::from_millis(DEFAULT_MAX_WAIT_MS));
+        }
+    }
+
+    fn tiny_parts(seq_len: usize, batch: usize)
+                  -> (crate::model::config::ModelConfig,
+                      crate::model::weights::WeightSet,
+                      ForwardGraph) {
+        let j = json::parse(&format!(
+            r#"{{"config": {{"name": "t", "n_layers": 1, "d_model": 16,
+                "n_heads": 2, "d_ffn": 32, "vocab": 8, "seq_len": {seq_len},
+                "batch": {batch}, "block_sizes": [1, 8]}}}}"#,
+        ))
         .unwrap();
         let cfg = crate::model::config::ModelConfig::from_meta(&j).unwrap();
         let ws = bundle::synthetic_weights(&cfg, 11);
         let graph = ForwardGraph::Merged { r3_block: 8, format: crate::quant::Format::Int4 };
-        let server =
-            InferenceServer::start_native(&cfg, &ws, &graph, Duration::from_millis(1), 1).unwrap();
+        (cfg, ws, graph)
+    }
+
+    fn tiny_server(seq_len: usize, batch: usize, workers: usize) -> InferenceServer {
+        let (cfg, ws, graph) = tiny_parts(seq_len, batch);
+        InferenceServer::start_native(&cfg, &ws, &graph, Duration::from_millis(1), workers)
+            .unwrap()
+    }
+
+    #[test]
+    fn native_score_round_trip_partial_batch() {
+        let server = tiny_server(8, 4, 1);
         assert_eq!(server.num_workers(), 1);
-        // 3 requests into a batch-of-4 server → at least one padded slot
-        let mk = |s: usize| -> Vec<i32> {
-            (0..cfg.seq_len + 1).map(|i| ((s + i) % cfg.vocab) as i32).collect()
-        };
+        // 3 requests into a 4-slot server: a partial step, no filler
+        let mk = |s: usize| -> Vec<i32> { (0..9).map(|i| ((s + i) % 8) as i32).collect() };
         let rxs: Vec<_> = (0..3).map(|s| server.submit(mk(s)).unwrap()).collect();
         for rx in rxs {
             let resp = rx.recv().unwrap();
             assert!(resp.nll.is_finite() && resp.nll > 0.0);
-            assert!(resp.batch_occupancy <= 3, "padding must not inflate occupancy");
+            assert!(resp.batch_occupancy <= 3, "occupancy counts real requests only");
         }
         let (served, batches, _) = server.stats();
-        assert_eq!(served, 3, "padded slots must not count as served");
+        assert_eq!(served, 3);
         assert!(batches >= 1);
-        assert!(server.padded_slots() >= 1, "tail padding should be recorded");
         assert_eq!(server.stats.latency.count(), 3, "every request records a latency");
+        let snap = server.snapshot();
+        assert_eq!(snap.served, 3);
+        assert_eq!(snap.generated, 0);
+        assert!(snap.prefill_tokens >= 3 * 8, "score windows flow through prefill");
+        assert!(snap.mean_occupancy > 0.0);
         // per-worker counters merge into the aggregate
         let per = server.per_worker_stats();
         assert_eq!(per.iter().map(|p| p.0).sum::<u64>(), served);
@@ -591,6 +1016,86 @@ mod tests {
         let a = server.submit(mk(0)).unwrap().recv().unwrap().nll;
         let b = server.submit(mk(0)).unwrap().recv().unwrap().nll;
         assert!((a - b).abs() < 1e-12);
+        server.shutdown();
+    }
+
+    #[test]
+    fn generate_round_trip_greedy_and_deterministic() {
+        let server = tiny_server(16, 2, 1);
+        let prompt = vec![1i32, 5, 2, 7];
+        let a = server.submit_generate(prompt.clone(), 6).unwrap().recv().unwrap();
+        assert_eq!(a.tokens.len(), 6);
+        assert!(a.tokens.iter().all(|&t| (0..8).contains(&t)), "tokens in vocab");
+        assert!(a.latency >= a.prefill_latency);
+        // greedy sampling is deterministic: same prompt → same tokens
+        let b = server.submit_generate(prompt.clone(), 6).unwrap().recv().unwrap();
+        assert_eq!(a.tokens, b.tokens);
+        // interleave a score request with generation traffic
+        let win: Vec<i32> = (0..17).map(|i| (i % 8) as i32).collect();
+        let rx_g = server.submit_generate(prompt, 8).unwrap();
+        let rx_s = server.submit(win).unwrap();
+        assert_eq!(rx_g.recv().unwrap().tokens.len(), 8);
+        assert!(rx_s.recv().unwrap().nll.is_finite());
+        let snap = server.snapshot();
+        assert_eq!(snap.generated, 3);
+        assert_eq!(snap.served, 4, "served counts score + generate");
+        // 3 generations × (n-1) decode steps each produced decode tokens
+        assert!(snap.decode_tokens >= 5 + 5 + 7, "decode tokens {}", snap.decode_tokens);
+        assert!(snap.decode_s > 0.0 && snap.decode_tok_per_s > 0.0);
+        assert!(snap.batches > 3, "prefill + decode steps both count");
+        server.shutdown();
+    }
+
+    #[test]
+    fn served_nll_is_exact_regardless_of_kv_mode() {
+        // the server scores through an exact (f32-KV) scoring session,
+        // so served NLLs must equal a direct exact-session rescore
+        // bit-for-bit even though generation sessions default to the
+        // quantized cache
+        let (cfg, ws, graph) = tiny_parts(8, 4);
+        let server = InferenceServer::start_native(
+            &cfg, &ws, &graph, Duration::from_millis(1), 1,
+        )
+        .unwrap();
+        let win: Vec<i32> = (0..9).map(|i| ((i * 3 + 1) % 8) as i32).collect();
+        let served = server.submit(win.clone()).unwrap().recv().unwrap().nll;
+        server.shutdown();
+        use crate::backend::NativeBackend;
+        use crate::tensor::KvMode;
+        let mut be = NativeBackend::new(cfg, ws, graph).unwrap();
+        let sid = be.begin_with_mode(1, KvMode::F32).unwrap();
+        let logits = be.prefill_slots(sid, &[0], &win[..8]).unwrap();
+        let direct = window_nll(&logits, &win, 8, 8);
+        assert_eq!(served.to_bits(), direct.to_bits(),
+                   "served NLL must match the exact rescore ({served} vs {direct})");
+    }
+
+    #[test]
+    fn submit_rejects_out_of_vocab_tokens() {
+        let server = tiny_server(8, 2, 1);
+        // out-of-vocab *target* token (the final entry never reaches
+        // prefill's own validation) must fail at submit, not panic a
+        // worker thread
+        let mut win: Vec<i32> = (0..9).map(|i| (i % 8) as i32).collect();
+        win[8] = 99;
+        assert!(server.submit(win).is_err());
+        let mut win2: Vec<i32> = (0..9).map(|i| (i % 8) as i32).collect();
+        win2[3] = -2;
+        assert!(server.submit(win2).is_err());
+        assert!(server.submit_generate(vec![1, 99], 2).is_err());
+        // the server is still alive and serving after the rejections
+        let ok: Vec<i32> = (0..9).map(|i| (i % 8) as i32).collect();
+        assert!(server.submit(ok).unwrap().recv().unwrap().nll.is_finite());
+        server.shutdown();
+    }
+
+    #[test]
+    fn generate_rejects_oversized_requests() {
+        let server = tiny_server(8, 2, 1);
+        assert!(server.submit_generate(vec![], 3).is_err());
+        assert!(server.submit_generate(vec![1, 2, 3], 0).is_err());
+        assert!(server.submit_generate(vec![1; 6], 3).is_err(), "6 + 3 > seq_len 8");
+        assert!(server.submit_generate(vec![1; 4], 4).is_ok());
         server.shutdown();
     }
 

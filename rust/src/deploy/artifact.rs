@@ -505,6 +505,54 @@ fn read_head(head: &[u8]) -> Result<(u32, usize)> {
     Ok((version, u32_at(head, 12) as usize))
 }
 
+/// Read and validate only the fixed head plus the footer section table —
+/// the cheap path for listings that need payload *sizes* (packed weight
+/// bytes, section inventory) without reading any payload: two small reads
+/// at the ends of the file, every byte read is CRC-covered.
+pub fn read_section_table(path: &Path) -> Result<(u32, Vec<SectionDesc>)> {
+    use std::io::{Seek, SeekFrom};
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening artifact {path:?}"))?;
+    let mut head = [0u8; HEAD_LEN];
+    f.read_exact(&mut head)
+        .with_context(|| format!("reading artifact head of {path:?}"))?;
+    let (version, hlen) = read_head(&head)?;
+    let n = f
+        .seek(SeekFrom::End(0))
+        .with_context(|| format!("sizing artifact {path:?}"))? as usize;
+    ensure!(
+        n >= HEAD_LEN + hlen + TRAILER_LEN,
+        "artifact {path:?} truncated ({n} bytes)"
+    );
+    let mut trailer = [0u8; TRAILER_LEN];
+    f.seek(SeekFrom::End(-(TRAILER_LEN as i64)))?;
+    f.read_exact(&mut trailer)
+        .with_context(|| format!("reading artifact trailer of {path:?}"))?;
+    ensure!(
+        &trailer[8..] == MAGIC,
+        "trailing magic missing — truncated artifact {path:?}"
+    );
+    let flen = u32_at(&trailer, 0) as usize;
+    let fcrc = u32_at(&trailer, 4);
+    ensure!(
+        flen + TRAILER_LEN <= n && n - TRAILER_LEN - flen >= HEAD_LEN + hlen,
+        "artifact {path:?} truncated before the section table"
+    );
+    f.seek(SeekFrom::End(-((TRAILER_LEN + flen) as i64)))?;
+    let mut fbytes = vec![0u8; flen];
+    f.read_exact(&mut fbytes)
+        .with_context(|| format!("reading artifact section table of {path:?}"))?;
+    ensure!(
+        crc32(&fbytes) == fcrc,
+        "section-table checksum mismatch — corrupted artifact {path:?}"
+    );
+    let footer = json::parse(
+        std::str::from_utf8(&fbytes).context("section table is not UTF-8")?,
+    )
+    .with_context(|| format!("parsing artifact section table of {path:?}"))?;
+    Ok((version, sections_from_json(&footer)?))
+}
+
 /// Read and validate only the head + header JSON — the cheap path for
 /// listings (`perq models`) that must not load payloads.
 pub fn read_header(path: &Path) -> Result<(u32, Json)> {
@@ -609,6 +657,21 @@ mod tests {
         assert!(ArtifactReader::from_bytes(b).is_err());
         // empty file
         assert!(ArtifactReader::from_bytes(Vec::new()).is_err());
+    }
+
+    #[test]
+    fn section_table_reads_from_file_ends_only() {
+        let path = std::env::temp_dir().join("perq_secs_test.perq");
+        std::fs::write(&path, sample()).unwrap();
+        let (v, secs) = read_section_table(&path).unwrap();
+        assert_eq!(v, FORMAT_VERSION);
+        assert_eq!(secs.len(), 3);
+        let c = secs.iter().find(|s| s.name == "c").unwrap();
+        assert_eq!((c.kind.as_str(), c.bits, c.len), ("qmat", 4, 12));
+        // a truncated file is rejected by the trailing magic / bounds
+        let full = sample();
+        std::fs::write(&path, &full[..full.len() - 3]).unwrap();
+        assert!(read_section_table(&path).is_err());
     }
 
     #[test]

@@ -128,14 +128,75 @@ impl DeployedModel {
         evaluate_with(&mut score, &self.cfg, source, n_tokens)
     }
 
+    /// Greedy token generation straight from the deployed weights: prefill
+    /// the prompt into a one-slot execution session, then `decode_step`
+    /// until `max_new_tokens` are produced — the stateful serving workload
+    /// (quantized KV cache, per-token R̃3 rotation) behind `perq generate`.
+    pub fn generate(&self, prompt: &[i32], max_new_tokens: usize) -> Result<GenerateResult> {
+        use std::time::Instant;
+        ensure!(!prompt.is_empty(), "generation needs a non-empty prompt");
+        ensure!(max_new_tokens >= 1, "generation needs max_new_tokens >= 1");
+        ensure!(
+            prompt.len() + max_new_tokens <= self.cfg.seq_len,
+            "prompt ({}) + max_new_tokens ({max_new_tokens}) exceeds seq_len ({})",
+            prompt.len(),
+            self.cfg.seq_len
+        );
+        let v = self.cfg.vocab;
+        let mut be = self.backend()?;
+        let sid = be.begin(1)?;
+        let t0 = Instant::now();
+        let logits = be.prefill_slots(sid, &[0], prompt)?;
+        let prefill_s = t0.elapsed().as_secs_f64();
+        let mut tokens = vec![crate::backend::greedy_argmax(
+            &logits[(prompt.len() - 1) * v..prompt.len() * v],
+        )];
+        let t1 = Instant::now();
+        let mut step = Vec::new();
+        while tokens.len() < max_new_tokens {
+            let last = *tokens.last().expect("seeded above");
+            be.decode_step_into(sid, &[last], &mut step)?;
+            tokens.push(crate::backend::greedy_argmax(&step[..v]));
+        }
+        let decode_s = t1.elapsed().as_secs_f64();
+        be.end(sid)?;
+        Ok(GenerateResult { tokens, prefill_s, decode_s })
+    }
+
     /// Bytes held by the deployed weights (packed + dense).
     pub fn weight_bytes(&self) -> usize {
         self.ws.weight_bytes()
     }
 }
 
-/// Cheap header summary of a `.perq` file — read without touching any
-/// payload section (the `perq models` listing path).
+/// The output of [`DeployedModel::generate`].
+#[derive(Clone, Debug)]
+pub struct GenerateResult {
+    /// greedily sampled tokens (prompt excluded)
+    pub tokens: Vec<i32>,
+    /// prompt prefill wall time (seconds)
+    pub prefill_s: f64,
+    /// decode-loop wall time (seconds)
+    pub decode_s: f64,
+}
+
+impl GenerateResult {
+    /// Decode throughput: tokens produced by the decode loop per second
+    /// (the first token comes from prefill, so it is excluded).
+    pub fn decode_tok_per_s(&self) -> f64 {
+        let decode_tokens = self.tokens.len().saturating_sub(1);
+        if self.decode_s > 0.0 {
+            decode_tokens as f64 / self.decode_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Cheap summary of a `.perq` file — read without touching any payload
+/// section (the `perq models` listing path): the header JSON plus the
+/// footer section table, so operators can size replicas (sequence budget,
+/// layer count, resident weight bytes) without loading the artifact.
 #[derive(Clone, Debug)]
 pub struct ArtifactInfo {
     pub model: String,
@@ -146,9 +207,16 @@ pub struct ArtifactInfo {
     pub graph_kind: String,
     pub r3_block: usize,
     pub version: u32,
+    /// maximum positions per sequence slot (KV-cache capacity)
+    pub seq_len: usize,
+    pub n_layers: usize,
+    /// bytes of packed low-bit weight sections (`q:*` payloads)
+    pub packed_bytes: u64,
+    /// bytes of dense f32 weight sections (`w:*` payloads)
+    pub dense_bytes: u64,
 }
 
-/// Read only the header of a `.perq` artifact and summarize it.
+/// Read only the header and footer of a `.perq` artifact and summarize it.
 pub fn inspect(path: &Path) -> Result<ArtifactInfo> {
     let (version, header) = artifact::read_header(path)?;
     let graph = graph_from_json(
@@ -161,6 +229,19 @@ pub fn inspect(path: &Path) -> Result<ArtifactInfo> {
         ForwardGraph::Merged { r3_block, .. } => ("merged", *r3_block),
         ForwardGraph::Online { .. } => ("online", 32),
     };
+    let cfg = ModelConfig::from_meta(&header).context("parsing artifact model config")?;
+    // payload sizes come from the footer table (two end-of-file reads, no
+    // payload IO); sum the packed vs dense weight sections
+    let (_, sections) = artifact::read_section_table(path)?;
+    let mut packed_bytes = 0u64;
+    let mut dense_bytes = 0u64;
+    for s in &sections {
+        if s.name.starts_with("q:") {
+            packed_bytes += s.len as u64;
+        } else if s.name.starts_with("w:") {
+            dense_bytes += s.len as u64;
+        }
+    }
     let str_field = |k: &str| -> String {
         header
             .get(k)
@@ -175,6 +256,10 @@ pub fn inspect(path: &Path) -> Result<ArtifactInfo> {
         graph_kind: graph_kind.to_string(),
         r3_block,
         version,
+        seq_len: cfg.seq_len,
+        n_layers: cfg.n_layers,
+        packed_bytes,
+        dense_bytes,
     })
 }
 

@@ -20,7 +20,7 @@
 //!   perq baseline --model qwen_tiny
 
 use std::path::{Path, PathBuf};
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
@@ -39,7 +39,12 @@ use perq::util::cli;
 use perq::util::json::{self, Json};
 
 fn main() {
-    let argv: Vec<String> = std::env::args().skip(1).collect();
+    // `-n N` is the conventional short form for `--max-new N` (the tiny
+    // parser only understands `--` options)
+    let argv: Vec<String> = std::env::args()
+        .skip(1)
+        .map(|a| if a == "-n" { "--max-new".to_string() } else { a })
+        .collect();
     let args = cli::parse(&argv);
     // `--threads N` (or PERQ_THREADS) sizes the worker pool; it must be
     // applied before any kernel work because the global pool spawns
@@ -52,6 +57,7 @@ fn main() {
         "quantize" => cmd_quantize(&args),
         "export" => cmd_export(&args),
         "serve" => cmd_serve(&args),
+        "generate" => cmd_generate(&args),
         "baseline" => cmd_baseline(&args),
         "sweep" => cmd_sweep(&args),
         "opcounts" => cmd_opcounts(),
@@ -79,7 +85,11 @@ fn print_help() {
          \x20 export     --model M [--preset P ...] --out m.perq\n\
          \x20            (quantize once, write a versioned deployment artifact)\n\
          \x20 serve      --artifact m.perq [--requests N] [--workers W]\n\
-         \x20            (load + serve, no calibration; appends BENCH_deploy.json)\n\
+         \x20            [--max-wait-ms MS | PERQ_MAX_WAIT_MS] (load + serve, no\n\
+         \x20            calibration; full stats snapshot → BENCH_deploy.json)\n\
+         \x20 generate   --artifact m.perq [--prompt-tokens 1,2,3] [--max-new N | -n N]\n\
+         \x20            (stateful prefill+decode generation: quantized KV cache,\n\
+         \x20            PERQ_KV={{int8,f32}}; appends BENCH_decode.json)\n\
          \x20 baseline   --model M [--eval-tokens N]\n\
          \x20 sweep      --model M --blocks 16,32,64 [--perm massdiff]\n\
          \x20 opcounts   (analytic Tables 3-4)\n\
@@ -213,7 +223,10 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
     })?;
     let n_requests = args.get_usize("requests", 32).max(1);
     let workers = args.get_usize("workers", 1).max(1);
-    let max_wait = Duration::from_millis(args.get_usize("max-wait-ms", 5) as u64);
+    // --max-wait-ms > PERQ_MAX_WAIT_MS > default
+    let max_wait = perq::coordinator::server::resolve_max_wait(
+        args.get("max-wait-ms").and_then(|s| s.parse::<u64>().ok()),
+    );
 
     // quantize-once / serve-many: everything below is artifact load +
     // server bring-up — the offline pipeline never runs here
@@ -247,19 +260,58 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
         nll += rx.recv()?.nll;
     }
     nll /= n_requests as f64;
-    let wall = t2.elapsed().as_secs_f64();
-    let (served, batches, exec_s) = server.stats();
-    let (p50, p95, p99) = server.latency_percentiles();
+    // score-phase wall only — the generation slice below gets its own
+    // clock so the throughput line and the JSON record stay coherent
+    let score_wall = t2.elapsed().as_secs_f64();
+    // a slice of generation traffic so the decode-phase stats are live
+    let n_gen = args.get_usize("gen-requests", 4);
+    if n_gen > 0 && t >= 4 {
+        let plen = (t / 2).clamp(1, 8);
+        let max_new = (t - plen).min(8).max(1);
+        let gen_rxs: Vec<_> = (0..n_gen)
+            .map(|i| {
+                let start = (i * plen) % (toks.len() - plen - 1);
+                let prompt: Vec<i32> =
+                    toks[start..start + plen].iter().map(|&x| x as i32).collect();
+                server.submit_generate(prompt, max_new)
+            })
+            .collect::<Result<_>>()?;
+        for rx in gen_rxs {
+            rx.recv()?;
+        }
+    }
+    let wall = t2.elapsed().as_secs_f64(); // score + generation phases
+    let snap = server.snapshot();
     println!(
-        "{served} requests in {wall:.2}s = {:.0} tok/s | mean nll {nll:.6} (ppl {:.2}) | \
-         {batches} batches | exec {exec_s:.2}s | hist p50/p95/p99 {p50:.1}/{p95:.1}/{p99:.1}ms",
-        served as f64 * t as f64 / wall.max(1e-9),
+        "{} requests ({} generate) in {wall:.2}s — score phase {score_wall:.2}s = \
+         {:.0} tok/s | mean nll {nll:.6} (ppl {:.2}) | \
+         {} steps (occupancy {:.2}) | exec {:.2}s (prefill {:.2}s / decode {:.2}s)",
+        snap.served,
+        snap.generated,
+        n_requests as f64 * t as f64 / score_wall.max(1e-9),
         nll.exp(),
+        snap.batches,
+        snap.mean_occupancy,
+        snap.exec_s,
+        snap.prefill_s,
+        snap.decode_s,
+    );
+    println!(
+        "decode {:.0} tok/s | latency p50/p95/p99 {:.1}/{:.1}/{:.1}ms | \
+         prefill-phase p50 {:.1}ms | decode-phase p50 {:.1}ms | hist saturated {}",
+        snap.decode_tok_per_s,
+        snap.p50_ms,
+        snap.p95_ms,
+        snap.p99_ms,
+        snap.prefill_p50_ms,
+        snap.decode_p50_ms,
+        snap.hist_saturated,
     );
     server.shutdown();
 
     // build the record through the JSON serializer so paths/labels with
-    // quotes or backslashes stay valid JSON
+    // quotes or backslashes stay valid JSON; the full ServerStats
+    // snapshot rides along (percentiles, occupancy, decode tok/s)
     let bench_path = args.get_or("bench-out", "BENCH_deploy.json");
     let mut o = std::collections::BTreeMap::new();
     for (k, v) in [
@@ -278,9 +330,103 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
         ("start_to_ready_ms", load_ms + ready_ms),
         ("nll", nll),
         ("wall_s", wall),
-        ("p50_ms", p50),
-        ("p95_ms", p95),
-        ("p99_ms", p99),
+        ("score_wall_s", score_wall),
+        ("served", snap.served as f64),
+        ("generated", snap.generated as f64),
+        ("steps", snap.batches as f64),
+        ("mean_occupancy", snap.mean_occupancy),
+        ("exec_s", snap.exec_s),
+        ("prefill_s", snap.prefill_s),
+        ("decode_s", snap.decode_s),
+        ("prefill_tokens", snap.prefill_tokens as f64),
+        ("decode_tokens", snap.decode_tokens as f64),
+        ("decode_tok_per_s", snap.decode_tok_per_s),
+        ("p50_ms", snap.p50_ms),
+        ("p95_ms", snap.p95_ms),
+        ("p99_ms", snap.p99_ms),
+        ("prefill_p50_ms", snap.prefill_p50_ms),
+        ("prefill_p95_ms", snap.prefill_p95_ms),
+        ("prefill_p99_ms", snap.prefill_p99_ms),
+        ("decode_p50_ms", snap.decode_p50_ms),
+        ("decode_p95_ms", snap.decode_p95_ms),
+        ("decode_p99_ms", snap.decode_p99_ms),
+        ("hist_saturated", snap.hist_saturated as f64),
+    ] {
+        o.insert(k.to_string(), Json::Num(v));
+    }
+    append_trajectory(Path::new(&bench_path), &json::dump(&Json::Obj(o)))?;
+    println!("appended {bench_path}");
+    Ok(())
+}
+
+/// `perq generate`: load a `.perq` artifact and run greedy token
+/// generation through the stateful prefill/decode session path — the
+/// decode-time workload (quantized KV cache, per-token R̃3 rotation) the
+/// paper's Appendix A argument is about. Appends decode throughput to
+/// BENCH_decode.json.
+fn cmd_generate(args: &cli::Args) -> Result<()> {
+    let artifact = args.get("artifact").ok_or_else(|| {
+        anyhow!("generate needs --artifact model.perq (create one with `perq export`)")
+    })?;
+    let dm = DeployedModel::load(Path::new(artifact))?;
+    let t = dm.cfg.seq_len;
+    let max_new = args.get_usize("max-new", 16).max(1);
+    let prompt: Vec<i32> = match args.get("prompt-tokens") {
+        Some(s) => s
+            .split(',')
+            .map(|x| {
+                x.trim()
+                    .parse::<i32>()
+                    .map_err(|_| anyhow!("bad --prompt-tokens entry {x:?}"))
+            })
+            .collect::<Result<_>>()?,
+        None => {
+            // deterministic default prompt from the held-out split
+            let plen = (t / 4).clamp(1, 8);
+            token_stream(Source::Wiki, Split::Test, plen + 1)[..plen]
+                .iter()
+                .map(|&x| x as i32)
+                .collect()
+        }
+    };
+    anyhow::ensure!(
+        prompt.len() + max_new <= t,
+        "prompt ({}) + --max-new ({max_new}) exceeds the model's seq_len ({t})",
+        prompt.len()
+    );
+    println!(
+        "{artifact}: {} {} (format v{}) — prompt {} tokens, generating {max_new} \
+         (KV cache: {})",
+        dm.model,
+        dm.label,
+        dm.version,
+        prompt.len(),
+        perq::tensor::KvMode::from_env().name(),
+    );
+    let r = dm.generate(&prompt, max_new)?;
+    let toks: Vec<String> = r.tokens.iter().map(|t| t.to_string()).collect();
+    println!("tokens: {}", toks.join(" "));
+    println!(
+        "prefill {:.1}ms | decode {} tokens in {:.1}ms = {:.0} tok/s",
+        r.prefill_s * 1e3,
+        r.tokens.len().saturating_sub(1),
+        r.decode_s * 1e3,
+        r.decode_tok_per_s(),
+    );
+    let bench_path = args.get_or("bench-out", "BENCH_decode.json");
+    let mut o = std::collections::BTreeMap::new();
+    o.insert("bench".to_string(), Json::Str("generate".to_string()));
+    o.insert("artifact".to_string(), Json::Str(artifact.to_string()));
+    o.insert("model".to_string(), Json::Str(dm.model.clone()));
+    o.insert("label".to_string(), Json::Str(dm.label.clone()));
+    o.insert("kv_mode".to_string(),
+             Json::Str(perq::tensor::KvMode::from_env().name().to_string()));
+    for (k, v) in [
+        ("prompt_tokens", prompt.len() as f64),
+        ("max_new", max_new as f64),
+        ("prefill_ms", r.prefill_s * 1e3),
+        ("decode_ms", r.decode_s * 1e3),
+        ("decode_tok_per_s", r.decode_tok_per_s()),
     ] {
         o.insert(k.to_string(), Json::Num(v));
     }
@@ -448,14 +594,21 @@ fn cmd_models() -> Result<()> {
         paths.sort();
         for p in paths {
             match deploy::inspect(&p) {
+                // sizing columns (seq_len / layers / packed bytes) come
+                // from the header + footer alone — no payload is loaded
                 Ok(info) => println!(
-                    "{}  (.perq v{}: {} {} {} b={} — {})",
+                    "{}  (.perq v{}: {} {} {} b={} | seq_len {} | {} layers | \
+                     packed {:.1} KiB + dense {:.1} KiB — {})",
                     p.display(),
                     info.version,
                     info.model,
                     info.graph_kind,
                     info.format,
                     info.r3_block,
+                    info.seq_len,
+                    info.n_layers,
+                    info.packed_bytes as f64 / 1024.0,
+                    info.dense_bytes as f64 / 1024.0,
                     info.label
                 ),
                 Err(e) => println!("{}  (unreadable .perq: {e:#})", p.display()),

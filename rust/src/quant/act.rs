@@ -62,12 +62,21 @@ pub fn mxfp4_row(row: &mut [f32], group: usize) {
 /// [`int_asym_params`] and the rounding expression is identical, so
 /// `s * (code + z)` reproduces the fake-quant value exactly.
 pub fn int_asym_emit(row: &[f32], bits: u32, codes: &mut Vec<u8>) -> (f32, f32) {
-    debug_assert!(bits <= 8, "codes are u8");
-    let levels = ((1u32 << bits) - 1) as f32;
-    let (s, z) = int_asym_params(row, bits);
     let start = codes.len();
     codes.resize(start + row.len(), 0);
-    simd::emit_codes(row, s, z, levels, &mut codes[start..]);
+    int_asym_emit_into(row, bits, &mut codes[start..])
+}
+
+/// [`int_asym_emit`] into a preallocated slice — the allocation-free form
+/// the KV cache writes through (`tensor::kvcache`): steady-state decode
+/// must not touch the heap, so codes land in an arena indexed by
+/// (slot, position) instead of growing a staging vector.
+pub fn int_asym_emit_into(row: &[f32], bits: u32, codes: &mut [u8]) -> (f32, f32) {
+    debug_assert!(bits <= 8, "codes are u8");
+    debug_assert_eq!(codes.len(), row.len());
+    let levels = ((1u32 << bits) - 1) as f32;
+    let (s, z) = int_asym_params(row, bits);
+    simd::emit_codes(row, s, z, levels, codes);
     (s, z)
 }
 

@@ -1,0 +1,331 @@
+//! Per-layer K/V caches for stateful (prefill/decode) execution.
+//!
+//! The paper's serving argument (App A) is a *decode-time* argument: the
+//! online R̃3 rotation is paid per generated token, so the workload that
+//! matters is incremental token generation over a persistent attention
+//! state — not stateless full-window rescoring. This module holds that
+//! state. Following the SpinQuant/QuaRot deployment story (rotations
+//! placed so caches stay low-bit at decode), K/V rows are stored as
+//! **packed u8 codes** with per-row (scale, zero) from the same Eq. 4
+//! asymmetric quantizer the activation path uses (`quant::act`), so the
+//! cache costs 1 byte/value instead of 4 — the dominant per-session memory
+//! at serving batch sizes.
+//!
+//! Layout: one [`KvStore`] per layer for K and one for V, each a flat
+//! `slots × cap × d` arena indexed `(slot, pos, channel)`. All buffers are
+//! allocated once at session creation (`KvCache::new`) and written in
+//! place, so steady-state decode performs **zero heap allocation**; reads
+//! dequantize a slot's prefix into caller-provided scratch (the backend
+//! recycles that scratch through its `BufPool`).
+//!
+//! Modes ([`KvMode`], `PERQ_KV={int8,f32}` escape hatch):
+//! * `Int8` (default) — packed u8 codes + per-row (scale, zero); reads
+//!   reproduce the fake-quant value `s·(code + z)` exactly, so prefill and
+//!   decode observe bit-identical cache contents.
+//! * `F32` — raw f32 rows; `gather` is a copy, making the session path
+//!   bit-identical to the stateless full-precision forward (the parity
+//!   baseline, and the mode `ExecBackend::score` runs in).
+
+use anyhow::{ensure, Result};
+
+use crate::quant::act;
+
+/// How cached K/V rows are stored. Parsed from `PERQ_KV` (default int8).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvMode {
+    /// packed u8 codes, per-row (scale, zero) — 1 byte/value
+    Int8,
+    /// raw f32 rows — the exact-cache escape hatch
+    F32,
+}
+
+impl KvMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KvMode::Int8 => "int8",
+            KvMode::F32 => "f32",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<KvMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "int8" | "i8" | "u8" => Some(KvMode::Int8),
+            "f32" | "fp32" | "float" => Some(KvMode::F32),
+            _ => None,
+        }
+    }
+
+    /// `PERQ_KV` override, else the int8 default (the paper's low-bit
+    /// decode story).
+    pub fn from_env() -> KvMode {
+        std::env::var("PERQ_KV")
+            .ok()
+            .and_then(|v| KvMode::parse(&v))
+            .unwrap_or(KvMode::Int8)
+    }
+}
+
+/// One `slots × cap × d` arena of cached rows (one per layer per K/V).
+enum KvStore {
+    /// u8 codes + per-(slot,pos) scale/zero, dequant `s · (code + z)`
+    Int8 { codes: Vec<u8>, scales: Vec<f32>, zeros: Vec<f32> },
+    F32(Vec<f32>),
+}
+
+impl KvStore {
+    fn new(mode: KvMode, slots: usize, cap: usize, d: usize) -> KvStore {
+        let n = slots * cap * d;
+        match mode {
+            KvMode::Int8 => KvStore::Int8 {
+                codes: vec![0u8; n],
+                scales: vec![0.0; slots * cap],
+                zeros: vec![0.0; slots * cap],
+            },
+            KvMode::F32 => KvStore::F32(vec![0.0; n]),
+        }
+    }
+
+    /// Bytes resident in this store's buffers.
+    fn bytes(&self) -> usize {
+        match self {
+            KvStore::Int8 { codes, scales, zeros } => {
+                codes.len() + 4 * (scales.len() + zeros.len())
+            }
+            KvStore::F32(data) => 4 * data.len(),
+        }
+    }
+
+    #[inline]
+    fn write(&mut self, row_idx: usize, d: usize, row: &[f32]) {
+        debug_assert_eq!(row.len(), d);
+        match self {
+            KvStore::Int8 { codes, scales, zeros } => {
+                let (s, z) = act::int_asym_emit_into(row, 8, &mut codes[row_idx * d..(row_idx + 1) * d]);
+                scales[row_idx] = s;
+                zeros[row_idx] = z;
+            }
+            KvStore::F32(data) => {
+                data[row_idx * d..(row_idx + 1) * d].copy_from_slice(row);
+            }
+        }
+    }
+
+    /// Dequantize rows `row0 .. row0 + n` into `out` (n·d f32s).
+    #[inline]
+    fn gather(&self, row0: usize, n: usize, d: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), n * d);
+        match self {
+            KvStore::Int8 { codes, scales, zeros } => {
+                for r in 0..n {
+                    let (s, z) = (scales[row0 + r], zeros[row0 + r]);
+                    let src = &codes[(row0 + r) * d..(row0 + r + 1) * d];
+                    let dst = &mut out[r * d..(r + 1) * d];
+                    for c in 0..d {
+                        dst[c] = s * (src[c] as f32 + z);
+                    }
+                }
+            }
+            KvStore::F32(data) => {
+                out.copy_from_slice(&data[row0 * d..(row0 + n) * d]);
+            }
+        }
+    }
+}
+
+/// The full per-session attention state: `n_layers` K stores + V stores
+/// over `slots` independent sequences of up to `cap` positions each.
+/// Slot lengths advance via [`KvCache::advance`] and reset independently
+/// ([`KvCache::reset_slot`]) — the substrate of continuous batching, where
+/// requests join and leave a live batch at step granularity.
+pub struct KvCache {
+    mode: KvMode,
+    pub slots: usize,
+    /// maximum positions per slot (the model's seq_len)
+    pub cap: usize,
+    /// row width (d_model)
+    pub d: usize,
+    k: Vec<KvStore>,
+    v: Vec<KvStore>,
+    lens: Vec<usize>,
+}
+
+impl KvCache {
+    /// Allocate the full arena up front — the only allocation this cache
+    /// ever performs.
+    pub fn new(mode: KvMode, n_layers: usize, slots: usize, cap: usize, d: usize) -> KvCache {
+        KvCache {
+            mode,
+            slots,
+            cap,
+            d,
+            k: (0..n_layers).map(|_| KvStore::new(mode, slots, cap, d)).collect(),
+            v: (0..n_layers).map(|_| KvStore::new(mode, slots, cap, d)).collect(),
+            lens: vec![0; slots],
+        }
+    }
+
+    pub fn mode(&self) -> KvMode {
+        self.mode
+    }
+
+    /// Current position count of a slot.
+    pub fn len(&self, slot: usize) -> usize {
+        self.lens[slot]
+    }
+
+    pub fn is_empty(&self, slot: usize) -> bool {
+        self.lens[slot] == 0
+    }
+
+    /// Free positions left in a slot.
+    pub fn remaining(&self, slot: usize) -> usize {
+        self.cap - self.lens[slot]
+    }
+
+    /// Write the K row of `(slot, pos)` at `layer` (quantizing in int8
+    /// mode). Positions at or past the slot's length are staging writes;
+    /// they become visible via [`KvCache::advance`].
+    #[inline]
+    pub fn write_k(&mut self, layer: usize, slot: usize, pos: usize, row: &[f32]) {
+        debug_assert!(pos < self.cap, "position {pos} past cache capacity {}", self.cap);
+        self.k[layer].write(slot * self.cap + pos, self.d, row);
+    }
+
+    /// Write the V row of `(slot, pos)` at `layer`.
+    #[inline]
+    pub fn write_v(&mut self, layer: usize, slot: usize, pos: usize, row: &[f32]) {
+        debug_assert!(pos < self.cap, "position {pos} past cache capacity {}", self.cap);
+        self.v[layer].write(slot * self.cap + pos, self.d, row);
+    }
+
+    /// Dequantize the first `n` K rows of `slot` at `layer` into `out`.
+    pub fn gather_k(&self, layer: usize, slot: usize, n: usize, out: &mut [f32]) {
+        self.k[layer].gather(slot * self.cap, n, self.d, out);
+    }
+
+    /// Dequantize the first `n` V rows of `slot` at `layer` into `out`.
+    pub fn gather_v(&self, layer: usize, slot: usize, n: usize, out: &mut [f32]) {
+        self.v[layer].gather(slot * self.cap, n, self.d, out);
+    }
+
+    /// Commit `n` freshly written positions to a slot (after every layer
+    /// has written them).
+    pub fn advance(&mut self, slot: usize, n: usize) -> Result<()> {
+        ensure!(
+            self.lens[slot] + n <= self.cap,
+            "slot {slot} overflows cache capacity {} ({} + {n})",
+            self.cap,
+            self.lens[slot]
+        );
+        self.lens[slot] += n;
+        Ok(())
+    }
+
+    /// Release a slot for reuse (continuous batching: a request left the
+    /// batch). O(1): codes are overwritten in place by the next occupant.
+    pub fn reset_slot(&mut self, slot: usize) {
+        self.lens[slot] = 0;
+    }
+
+    /// Reset every slot (the persistent scoring session reuses its cache
+    /// across `score` calls).
+    pub fn reset_all(&mut self) {
+        self.lens.iter_mut().for_each(|l| *l = 0);
+    }
+
+    /// Bytes resident in the cache arenas — the number the int8 mode
+    /// exists to shrink.
+    pub fn bytes(&self) -> usize {
+        self.k.iter().chain(self.v.iter()).map(|s| s.bytes()).sum::<usize>()
+            + 8 * self.lens.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::act;
+
+    fn rand_row(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+        let mut rng = crate::data::rng::Rng::new(seed);
+        (0..n).map(|_| rng.next_normal() as f32 * scale).collect()
+    }
+
+    #[test]
+    fn mode_parse_and_env_default() {
+        assert_eq!(KvMode::parse("int8"), Some(KvMode::Int8));
+        assert_eq!(KvMode::parse("F32"), Some(KvMode::F32));
+        assert_eq!(KvMode::parse("fp32"), Some(KvMode::F32));
+        assert_eq!(KvMode::parse("nope"), None);
+        assert_eq!(KvMode::Int8.name(), "int8");
+    }
+
+    #[test]
+    fn f32_mode_round_trips_exactly() {
+        let (layers, slots, cap, d) = (2, 3, 8, 16);
+        let mut kv = KvCache::new(KvMode::F32, layers, slots, cap, d);
+        let rows: Vec<Vec<f32>> = (0..4).map(|i| rand_row(d, 100 + i, 2.0)).collect();
+        for (p, row) in rows.iter().enumerate() {
+            kv.write_k(1, 2, p, row);
+            kv.write_v(1, 2, p, row);
+        }
+        kv.advance(2, 4).unwrap();
+        assert_eq!(kv.len(2), 4);
+        assert_eq!(kv.len(0), 0);
+        let mut out = vec![0.0f32; 4 * d];
+        kv.gather_k(1, 2, 4, &mut out);
+        let want: Vec<f32> = rows.concat();
+        assert_eq!(out, want, "f32 mode must be an exact copy");
+        kv.gather_v(1, 2, 4, &mut out);
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn int8_mode_matches_fake_quant_bitwise() {
+        // the cache's read value must equal the Eq. 4 int8 fake-quant of
+        // the written row, bit for bit — the same identity the packed
+        // GEMM rests on
+        let (layers, slots, cap, d) = (1, 2, 4, 32);
+        let mut kv = KvCache::new(KvMode::Int8, layers, slots, cap, d);
+        for p in 0..3 {
+            let row = rand_row(d, 7 + p as u64, 1.5);
+            kv.write_k(0, 1, p, &row);
+            kv.advance(1, 1).unwrap();
+            let mut fake = row.clone();
+            act::int_asym_row(&mut fake, 8);
+            let mut out = vec![0.0f32; (p + 1) * d];
+            kv.gather_k(0, 1, p + 1, &mut out);
+            assert_eq!(&out[p * d..], fake.as_slice(), "pos {p}");
+        }
+    }
+
+    #[test]
+    fn slots_are_independent_and_resettable() {
+        let d = 8;
+        let mut kv = KvCache::new(KvMode::Int8, 1, 2, 4, d);
+        let a = rand_row(d, 1, 1.0);
+        let b = rand_row(d, 2, 1.0);
+        kv.write_k(0, 0, 0, &a);
+        kv.write_k(0, 1, 0, &b);
+        kv.advance(0, 1).unwrap();
+        kv.advance(1, 1).unwrap();
+        let (mut oa, mut ob) = (vec![0.0; d], vec![0.0; d]);
+        kv.gather_k(0, 0, 1, &mut oa);
+        kv.gather_k(0, 1, 1, &mut ob);
+        assert_ne!(oa, ob, "slots must not alias");
+        kv.reset_slot(0);
+        assert_eq!(kv.len(0), 0);
+        assert_eq!(kv.len(1), 1, "resetting one slot must not touch others");
+        assert_eq!(kv.remaining(0), 4);
+        // overflow is an error, not a wrap
+        assert!(kv.advance(1, 4).is_err());
+    }
+
+    #[test]
+    fn int8_arena_is_quarter_sized() {
+        let f = KvCache::new(KvMode::F32, 2, 4, 16, 64);
+        let q = KvCache::new(KvMode::Int8, 2, 4, 16, 64);
+        // codes are 1 byte/value vs 4; per-row metadata is amortized by d
+        assert!(q.bytes() * 3 < f.bytes(), "int8 {} vs f32 {}", q.bytes(), f.bytes());
+    }
+}

@@ -4,11 +4,13 @@
 //! rounding solvers, and NPY v1.0 interchange with the python build path.
 //! Built from scratch — no external linear-algebra crates.
 
+pub mod kvcache;
 pub mod linalg;
 pub mod mat;
 pub mod npy;
 pub mod qmat;
 pub mod simd;
 
+pub use kvcache::{KvCache, KvMode};
 pub use mat::Mat;
 pub use qmat::{qgemm_into, QuantActs, QuantMat};

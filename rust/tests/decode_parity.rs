@@ -1,0 +1,424 @@
+//! Decode-path parity + continuous-batching determinism + allocation
+//! discipline for the stateful execution model (ISSUE 5).
+//!
+//! The contract under test: a session's **full-window prefill** and any
+//! **prefill + decode split** of the same tokens must agree —
+//! *bit-identically* with the f32 KV cache, and within 1e-4 with the
+//! packed-int8 KV cache (prefill attention reads *through* the cache, so
+//! both executions observe identical cache contents; the budget only
+//! absorbs accumulation-order noise). Swept across R̃3 blocks
+//! {8, 16, 32, 12} (12 exercises the non-power-of-2 plan), INT4/INT8
+//! packed serving, and with/without calibrated MassDiff permutations.
+//!
+//! Also here: continuous-batching determinism (per-request NLLs and greedy
+//! generations independent of arrival order, co-batched peers, and replica
+//! count) and the zero-allocation guarantee of steady-state decode,
+//! asserted with a thread-local counting global allocator.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::time::Duration;
+
+use perq::backend::{ExecBackend, ForwardGraph, NativeBackend};
+use perq::coordinator::server::InferenceServer;
+use perq::model::bundle::synthetic_weights;
+use perq::model::config::ModelConfig;
+use perq::model::transform;
+use perq::model::weights::WeightSet;
+use perq::permute::{CalibStats, PermKind};
+use perq::quant::{Format, WeightCodec};
+use perq::tensor::{KvMode, QuantMat};
+use perq::util::json;
+use perq::util::propcheck::{check, Gen};
+
+// ---------------------------------------------------------------------
+// Thread-local allocation counter. Counting is per-thread so the other
+// tests in this binary (running on sibling threads) cannot perturb the
+// zero-alloc assertion; const-init Cell TLS needs no lazy initializer and
+// u64 has no destructor, so the allocator never re-enters itself.
+// ---------------------------------------------------------------------
+
+thread_local! {
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+fn thread_allocs() -> u64 {
+    THREAD_ALLOCS.with(|c| c.get())
+}
+
+struct CountingAlloc;
+
+fn bump() {
+    // try_with: TLS may be unavailable during thread teardown
+    let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+// ---------------------------------------------------------------------
+// Fixtures
+// ---------------------------------------------------------------------
+
+/// d_ffn = 96 divides every required block size {8, 16, 32, 12}.
+fn parity_cfg() -> ModelConfig {
+    let j = json::parse(
+        r#"{"config": {"name": "decode", "n_layers": 2, "d_model": 32,
+            "n_heads": 2, "d_ffn": 96, "vocab": 16, "seq_len": 12,
+            "batch": 2, "block_sizes": [1, 8, 12, 16, 32]}}"#,
+    )
+    .unwrap();
+    ModelConfig::from_meta(&j).unwrap()
+}
+
+const BLOCKS: [usize; 4] = [8, 16, 32, 12]; // 12 = non-power-of-2 plan
+
+/// Quantize every linear site and attach packed twins — the weight shape
+/// the pipeline produces for INT4/INT8 merged graphs, so the packed
+/// integer-GEMM serving path is what decode parity exercises.
+fn quantize_and_pack(cfg: &ModelConfig, ws: &WeightSet, format: Format) -> WeightSet {
+    let mut out = ws.clone();
+    for site in cfg.linear_sites() {
+        let w = out.get(&site.name).clone();
+        let codec = WeightCodec::fit(format, &w);
+        let q = codec.quantize_mat(&w);
+        let packed = QuantMat::from_codec(&q, &codec).unwrap();
+        out.set(&site.name, q);
+        out.set_packed(&site.name, packed);
+    }
+    out
+}
+
+/// Merge a MassDiff permutation (calibrated on synthetic activation
+/// statistics) through every layer's SwiGLU region.
+fn apply_massdiff(g: &mut Gen, cfg: &ModelConfig, ws: &mut WeightSet, block: usize) {
+    let rows: Vec<Vec<f32>> = (0..6).map(|_| g.vec_normal(cfg.d_ffn, 1.5)).collect();
+    let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+    let stats = CalibStats::from_activations(&refs);
+    for l in 0..cfg.n_layers {
+        let perm = PermKind::MassDiff.calibrate(&stats, block, g.seed + l as u64);
+        transform::merge_p3_layer(ws, l, &perm);
+    }
+}
+
+fn random_tokens(g: &mut Gen, n: usize, vocab: usize) -> Vec<i32> {
+    (0..n).map(|_| g.usize_in(0, vocab - 1) as i32).collect()
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs() as f64).fold(0.0, f64::max)
+}
+
+/// Assert prefill+decode ≡ full-window rescore for one (weights, graph,
+/// KV mode) case, splitting at several prefill lengths.
+fn assert_decode_parity(cfg: &ModelConfig, ws: &WeightSet, graph: &ForwardGraph,
+                        tokens: &[i32], mode: KvMode, label: &str) {
+    let n = tokens.len();
+    let v = cfg.vocab;
+    let mut be = NativeBackend::new(cfg.clone(), ws.clone(), graph.clone()).unwrap();
+    // the full-window rescore: one prefill over the entire token window
+    let sid = be.begin_with_mode(1, mode).unwrap();
+    let full = be.prefill_slots(sid, &[0], tokens).unwrap();
+    be.end(sid).unwrap();
+    assert_eq!(full.len(), n * v);
+    for split in [1usize, n / 2, n - 1] {
+        let sid = be.begin_with_mode(1, mode).unwrap();
+        let pre = be.prefill_slots(sid, &[0], &tokens[..split]).unwrap();
+        // prompt rows must match the rescore's leading rows
+        check_rows(&full[..split * v], &pre, mode, &format!("{label} split={split} prefix"));
+        // decode the remaining tokens one step at a time; the step for
+        // token i yields the logits row at position i
+        for (i, &tok) in tokens.iter().enumerate().skip(split) {
+            let step = be.decode_step(sid, &[tok]).unwrap();
+            assert_eq!(step.len(), v);
+            check_rows(
+                &full[i * v..(i + 1) * v],
+                &step,
+                mode,
+                &format!("{label} split={split} pos={i}"),
+            );
+        }
+        be.end(sid).unwrap();
+    }
+}
+
+/// f32 KV: bit-identical. int8 KV: ≤ 1e-4 (identical cache contents; the
+/// budget absorbs accumulation-order noise only).
+fn check_rows(want: &[f32], got: &[f32], mode: KvMode, label: &str) {
+    assert_eq!(want.len(), got.len(), "{label}: row count");
+    match mode {
+        KvMode::F32 => {
+            for (i, (w, g)) in want.iter().zip(got).enumerate() {
+                assert_eq!(
+                    w.to_bits(),
+                    g.to_bits(),
+                    "{label}: f32-KV decode must be bit-identical (elem {i}: {w} vs {g})"
+                );
+            }
+        }
+        KvMode::Int8 => {
+            let diff = max_abs_diff(want, got);
+            assert!(diff <= 1e-4, "{label}: int8-KV decode diverges by {diff}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Decode parity across blocks, formats, permutations, KV modes
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_decode_parity_int4_across_blocks() {
+    check(3, |g| {
+        let cfg = parity_cfg();
+        let mut ws = synthetic_weights(&cfg, g.seed ^ 0xDEC0DE);
+        let with_perm = g.bool();
+        for block in BLOCKS {
+            if with_perm {
+                apply_massdiff(g, &cfg, &mut ws, block);
+            }
+            let wsq = quantize_and_pack(&cfg, &ws, Format::Int4);
+            let graph = ForwardGraph::Merged { r3_block: block, format: Format::Int4 };
+            let tokens = random_tokens(g, cfg.seq_len, cfg.vocab);
+            for mode in [KvMode::F32, KvMode::Int8] {
+                assert_decode_parity(
+                    &cfg, &wsq, &graph, &tokens, mode,
+                    &format!("int4 b={block} perm={with_perm} kv={}", mode.name()),
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_decode_parity_int8_across_blocks() {
+    check(2, |g| {
+        let cfg = parity_cfg();
+        let mut ws = synthetic_weights(&cfg, g.seed ^ 0x1B1B);
+        let with_perm = g.bool();
+        for block in BLOCKS {
+            if with_perm {
+                apply_massdiff(g, &cfg, &mut ws, block);
+            }
+            let wsq = quantize_and_pack(&cfg, &ws, Format::Int8);
+            let graph = ForwardGraph::Merged { r3_block: block, format: Format::Int8 };
+            let tokens = random_tokens(g, cfg.seq_len, cfg.vocab);
+            for mode in [KvMode::F32, KvMode::Int8] {
+                assert_decode_parity(
+                    &cfg, &wsq, &graph, &tokens, mode,
+                    &format!("int8 b={block} perm={with_perm} kv={}", mode.name()),
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn decode_parity_fake_quant_fallback_path() {
+    // the dense (no packed twins) f32 fake-quant path shares the session
+    // machinery — parity must hold there too
+    let mut g = Gen::new(0xFA11BACC);
+    let cfg = parity_cfg();
+    let ws = synthetic_weights(&cfg, 77);
+    let tokens = random_tokens(&mut g, cfg.seq_len, cfg.vocab);
+    for (block, format) in [(16usize, Format::Int4), (12, Format::None)] {
+        let graph = ForwardGraph::Merged { r3_block: block, format };
+        for mode in [KvMode::F32, KvMode::Int8] {
+            assert_decode_parity(
+                &cfg, &ws, &graph, &tokens, mode,
+                &format!("dense b={block} fmt={} kv={}", format.name(), mode.name()),
+            );
+        }
+    }
+}
+
+#[test]
+fn int8_kv_cache_actually_quantizes() {
+    // the int8 arena must be live, not silently f32: full-window logits
+    // under the two KV modes differ (prefill attention reads through the
+    // cache), while staying in the same neighborhood
+    let cfg = parity_cfg();
+    let ws = quantize_and_pack(&cfg, &synthetic_weights(&cfg, 31), Format::Int4);
+    let graph = ForwardGraph::Merged { r3_block: 16, format: Format::Int4 };
+    let tokens: Vec<i32> = (0..cfg.seq_len).map(|i| ((i * 5 + 3) % cfg.vocab) as i32).collect();
+    let mut be = NativeBackend::new(cfg.clone(), ws, graph).unwrap();
+    let run = |be: &mut NativeBackend, mode: KvMode| {
+        let sid = be.begin_with_mode(1, mode).unwrap();
+        let out = be.prefill_slots(sid, &[0], &tokens).unwrap();
+        be.end(sid).unwrap();
+        out
+    };
+    let f = run(&mut be, KvMode::F32);
+    let q = run(&mut be, KvMode::Int8);
+    let diff = max_abs_diff(&f, &q);
+    assert!(diff > 0.0, "int8 KV mode must actually quantize the cache");
+    assert!(diff < 1.0, "int8 KV error should stay small on this model ({diff})");
+    // and the stateless score contract pins the exact (f32) semantics
+    // regardless of session modes in flight
+    let mut windows = Vec::new();
+    for s in 0..cfg.batch {
+        windows.extend(tokens.iter().map(|&t| (t + s as i32) % cfg.vocab as i32));
+    }
+    let a = be.score(&windows).unwrap();
+    let b = be.score(&windows).unwrap();
+    assert_eq!(a, b);
+}
+
+// ---------------------------------------------------------------------
+// Continuous-batching determinism
+// ---------------------------------------------------------------------
+
+fn serving_cfg() -> ModelConfig {
+    let j = json::parse(
+        r#"{"config": {"name": "serve", "n_layers": 1, "d_model": 16,
+            "n_heads": 2, "d_ffn": 32, "vocab": 8, "seq_len": 12,
+            "batch": 3, "block_sizes": [1, 8]}}"#,
+    )
+    .unwrap();
+    ModelConfig::from_meta(&j).unwrap()
+}
+
+/// Score `windows` through a fresh server, submitting in `order`; NLLs
+/// come back indexed by the original window position.
+fn score_with_server(cfg: &ModelConfig, ws: &WeightSet, graph: &ForwardGraph,
+                     windows: &[Vec<i32>], order: &[usize], workers: usize) -> Vec<f64> {
+    let server =
+        InferenceServer::start_native(cfg, ws, graph, Duration::from_millis(1), workers).unwrap();
+    let mut rxs: Vec<Option<std::sync::mpsc::Receiver<_>>> =
+        (0..windows.len()).map(|_| None).collect();
+    for &i in order {
+        rxs[i] = Some(server.submit(windows[i].clone()).unwrap());
+    }
+    let nlls: Vec<f64> = rxs
+        .into_iter()
+        .map(|rx| rx.expect("order is a permutation").recv().unwrap().nll)
+        .collect();
+    server.shutdown();
+    nlls
+}
+
+#[test]
+fn continuous_batching_nll_independent_of_order_and_replicas() {
+    let cfg = serving_cfg();
+    let ws = quantize_and_pack(&cfg, &synthetic_weights(&cfg, 21), Format::Int4);
+    let graph = ForwardGraph::Merged { r3_block: 8, format: Format::Int4 };
+    let t = cfg.seq_len;
+    let windows: Vec<Vec<i32>> = (0..7)
+        .map(|s| (0..t + 1).map(|i| ((3 * s + i) % cfg.vocab) as i32).collect())
+        .collect();
+    let fwd: Vec<usize> = (0..windows.len()).collect();
+    let rev: Vec<usize> = (0..windows.len()).rev().collect();
+    let shuffled: Vec<usize> = vec![3, 0, 6, 2, 5, 1, 4];
+    let base = score_with_server(&cfg, &ws, &graph, &windows, &fwd, 1);
+    for (label, order, workers) in [
+        ("reversed x1", &rev, 1usize),
+        ("shuffled x1", &shuffled, 1),
+        ("forward x2", &fwd, 2),
+        ("shuffled x3", &shuffled, 3),
+    ] {
+        let got = score_with_server(&cfg, &ws, &graph, &windows, order, workers);
+        for (i, (a, b)) in base.iter().zip(&got).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-12,
+                "{label}: window {i} NLL drifted ({a} vs {b})"
+            );
+        }
+    }
+}
+
+#[test]
+fn continuous_batching_generation_deterministic() {
+    let cfg = serving_cfg();
+    let ws = quantize_and_pack(&cfg, &synthetic_weights(&cfg, 22), Format::Int4);
+    let graph = ForwardGraph::Merged { r3_block: 8, format: Format::Int4 };
+    let prompts: Vec<Vec<i32>> = vec![vec![1, 4, 2], vec![7, 0], vec![3, 3, 5, 1]];
+    let gen_all = |workers: usize, reverse: bool| -> Vec<Vec<i32>> {
+        let server =
+            InferenceServer::start_native(&cfg, &ws, &graph, Duration::from_millis(1), workers)
+                .unwrap();
+        let idx: Vec<usize> = if reverse {
+            (0..prompts.len()).rev().collect()
+        } else {
+            (0..prompts.len()).collect()
+        };
+        let mut rxs: Vec<Option<std::sync::mpsc::Receiver<_>>> =
+            (0..prompts.len()).map(|_| None).collect();
+        for &i in &idx {
+            rxs[i] = Some(server.submit_generate(prompts[i].clone(), 6).unwrap());
+        }
+        let out: Vec<Vec<i32>> = rxs
+            .into_iter()
+            .map(|rx| rx.expect("covered").recv().unwrap().tokens)
+            .collect();
+        server.shutdown();
+        out
+    };
+    let base = gen_all(1, false);
+    assert!(base.iter().all(|t| t.len() == 6));
+    assert_eq!(base, gen_all(1, true), "arrival order must not change tokens");
+    assert_eq!(base, gen_all(3, false), "replica count must not change tokens");
+}
+
+// ---------------------------------------------------------------------
+// Steady-state decode performs zero heap allocation
+// ---------------------------------------------------------------------
+
+#[test]
+fn steady_state_decode_is_allocation_free() {
+    // packed INT4 serving shapes, sized well below the worker-pool
+    // fan-out threshold so every kernel runs on this thread (the counter
+    // is thread-local)
+    let j = json::parse(
+        r#"{"config": {"name": "alloc", "n_layers": 2, "d_model": 16,
+            "n_heads": 2, "d_ffn": 32, "vocab": 8, "seq_len": 16,
+            "batch": 2, "block_sizes": [1, 8]}}"#,
+    )
+    .unwrap();
+    let cfg = ModelConfig::from_meta(&j).unwrap();
+    let ws = quantize_and_pack(&cfg, &synthetic_weights(&cfg, 55), Format::Int4);
+    let graph = ForwardGraph::Merged { r3_block: 8, format: Format::Int4 };
+    let mut be = NativeBackend::new(cfg, ws, graph).unwrap();
+    assert!(be.is_packed());
+    let sid = be.begin_with_mode(2, KvMode::Int8).unwrap();
+    be.prefill_slots(sid, &[0, 1], &[1, 2, 3, 4]).unwrap();
+    let mut out = Vec::new();
+    // warm-up: pools, staging buffers, and scratch reach steady state
+    for i in 0..4 {
+        be.decode_step_into(sid, &[(i % 8) as i32, ((i + 3) % 8) as i32], &mut out).unwrap();
+    }
+    let before = thread_allocs();
+    for i in 0..5 {
+        be.decode_step_into(sid, &[((i + 1) % 8) as i32, (i % 8) as i32], &mut out).unwrap();
+    }
+    let grew = thread_allocs() - before;
+    assert_eq!(
+        grew, 0,
+        "steady-state decode must not allocate (saw {grew} allocations in 5 steps)"
+    );
+    // sanity: the counter itself is live on this thread
+    let probe = vec![0u8; 1024];
+    assert!(thread_allocs() > before, "allocation counter must be active");
+    drop(probe);
+    be.end(sid).unwrap();
+}
