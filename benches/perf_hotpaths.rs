@@ -18,7 +18,7 @@ use perq::rounding::Rounding;
 use perq::runtime::{Engine, RepoContext};
 use perq::tensor::linalg::SymMat;
 use perq::tensor::{qmat, Mat, QuantActs, QuantMat};
-use perq::util::bench::{append_trajectory, time};
+use perq::util::bench::{time, TrajectoryRow};
 
 fn rand_mat(r: usize, c: usize, seed: u64) -> Mat {
     let mut rng = Rng::new(seed);
@@ -139,10 +139,6 @@ fn bench_qgemm_and_fwht() -> anyhow::Result<()> {
         Err(_) => std::env::current_dir()?,
     };
     let traj = root.join("BENCH_qgemm.json");
-    let stamp = std::time::SystemTime::now()
-        .duration_since(std::time::UNIX_EPOCH)
-        .map(|d| d.as_secs())
-        .unwrap_or(0);
 
     // d_model-scale shapes: llama_tiny's wq site (1024 tokens x 256 x 256)
     // is too small to separate the paths; use the paper-scale 1024-wide
@@ -187,14 +183,17 @@ fn bench_qgemm_and_fwht() -> anyhow::Result<()> {
             pb as f64 / (1 << 20) as f64,
             db as f64 / pb as f64,
         );
-        let entry = format!(
-            "{{\"bench\": \"qgemm\", \"ts\": {stamp}, \"format\": \"{}\", \
-             \"m\": {m}, \"k\": {k}, \"n\": {n}, \"ms_f32\": {ms_f32:.3}, \
-             \"ms_packed\": {ms_packed:.3}, \"speedup\": {speedup:.2}, \
-             \"weight_bytes_f32\": {db}, \"weight_bytes_packed\": {pb}}}",
-            fmt.name()
-        );
-        if let Err(e) = append_trajectory(&traj, &entry) {
+        let row = TrajectoryRow::new("qgemm")
+            .str_field("format", fmt.name())
+            .num_field("m", m as f64)
+            .num_field("k", k as f64)
+            .num_field("n", n as f64)
+            .num_field("ms_f32", ms_f32)
+            .num_field("ms_packed", ms_packed)
+            .num_field("speedup", speedup)
+            .num_field("weight_bytes_f32", db as f64)
+            .num_field("weight_bytes_packed", pb as f64);
+        if let Err(e) = row.append_to(&traj) {
             println!("  (could not write {traj:?}: {e})");
         }
     }
@@ -206,12 +205,11 @@ fn bench_qgemm_and_fwht() -> anyhow::Result<()> {
         let t = time("fwht_block", 3, 300, || rot.apply_mat(&mut m1024));
         let gbs = (1024.0 * 1024.0 * 4.0) / t.mean_ns;
         println!("  fwht  b={b:<3} {:8.2} ms/1024toks  {gbs:5.2} GB/s", t.mean_ms());
-        let entry = format!(
-            "{{\"bench\": \"fwht_block\", \"ts\": {stamp}, \"b\": {b}, \
-             \"ms_per_1024_tokens\": {:.3}, \"gb_per_s\": {gbs:.2}}}",
-            t.mean_ms()
-        );
-        if let Err(e) = append_trajectory(&traj, &entry) {
+        let row = TrajectoryRow::new("fwht_block")
+            .num_field("b", b as f64)
+            .num_field("ms_per_1024_tokens", t.mean_ms())
+            .num_field("gb_per_s", gbs);
+        if let Err(e) = row.append_to(&traj) {
             println!("  (could not write {traj:?}: {e})");
         }
     }
@@ -235,10 +233,6 @@ fn bench_decode() -> anyhow::Result<()> {
         Err(_) => std::env::current_dir()?,
     };
     let traj = root.join("BENCH_decode.json");
-    let stamp = std::time::SystemTime::now()
-        .duration_since(std::time::UNIX_EPOCH)
-        .map(|d| d.as_secs())
-        .unwrap_or(0);
     let bundle = ModelBundle::synthetic("llama_np2")?;
     let engine = Engine::native_ephemeral();
     let cfg = bundle.cfg.clone();
@@ -287,12 +281,14 @@ fn bench_decode() -> anyhow::Result<()> {
             tok_s,
             decode_s * 1e3 / steps as f64
         );
-        let entry = format!(
-            "{{\"bench\": \"decode\", \"ts\": {stamp}, \"format\": \"int4\", \
-             \"block\": {block}, \"mode\": \"steady\", \"slots\": {b}, \
-             \"steps\": {steps}, \"tok_per_s\": {tok_s:.1}}}"
-        );
-        if let Err(e) = append_trajectory(&traj, &entry) {
+        let row = TrajectoryRow::new("decode")
+            .str_field("format", "int4")
+            .str_field("mode", "steady")
+            .num_field("block", block as f64)
+            .num_field("slots", b as f64)
+            .num_field("steps", steps as f64)
+            .num_field("tok_per_s", tok_s);
+        if let Err(e) = row.append_to(&traj) {
             println!("  (could not write {traj:?}: {e})");
         }
 
@@ -398,13 +394,16 @@ fn bench_decode() -> anyhow::Result<()> {
              ({speedup:.2}x) {}",
             if speedup >= 1.0 { "— continuous wins" } else { "— REGRESSION" }
         );
-        let entry = format!(
-            "{{\"bench\": \"decode\", \"ts\": {stamp}, \"format\": \"int4\", \
-             \"block\": {block}, \"mode\": \"mixed_stream\", \"requests\": {n_req}, \
-             \"useful_tokens\": {useful}, \"padded_tok_per_s\": {padded_tok_s:.1}, \
-             \"continuous_tok_per_s\": {cont_tok_s:.1}, \"speedup\": {speedup:.3}}}"
-        );
-        if let Err(e) = append_trajectory(&traj, &entry) {
+        let row = TrajectoryRow::new("decode")
+            .str_field("format", "int4")
+            .str_field("mode", "mixed_stream")
+            .num_field("block", block as f64)
+            .num_field("requests", n_req as f64)
+            .num_field("useful_tokens", useful as f64)
+            .num_field("padded_tok_per_s", padded_tok_s)
+            .num_field("continuous_tok_per_s", cont_tok_s)
+            .num_field("speedup", speedup);
+        if let Err(e) = row.append_to(&traj) {
             println!("  (could not write {traj:?}: {e})");
         }
     }
@@ -461,10 +460,6 @@ fn bench_simd() -> anyhow::Result<f64> {
         Err(_) => std::env::current_dir()?,
     };
     let traj = root.join("BENCH_simd.json");
-    let stamp = std::time::SystemTime::now()
-        .duration_since(std::time::UNIX_EPOCH)
-        .map(|d| d.as_secs())
-        .unwrap_or(0);
     let level = simd::active().name();
     println!("\n=== SIMD kernel layer: forced scalar vs dispatched ({level}) ===");
 
@@ -475,14 +470,13 @@ fn bench_simd() -> anyhow::Result<f64> {
             ns_scalar / 1e6,
             ns_simd / 1e6
         );
-        let entry = format!(
-            "{{\"bench\": \"simd\", \"ts\": {stamp}, \"kernel\": \"{kernel}\", \
-             \"level\": \"{level}\", \"ms_scalar\": {:.4}, \"ms_dispatched\": {:.4}, \
-             \"speedup\": {speedup:.3}}}",
-            ns_scalar / 1e6,
-            ns_simd / 1e6
-        );
-        if let Err(e) = append_trajectory(&traj, &entry) {
+        let row = TrajectoryRow::new("simd")
+            .str_field("kernel", kernel)
+            .str_field("level", level)
+            .num_field("ms_scalar", ns_scalar / 1e6)
+            .num_field("ms_dispatched", ns_simd / 1e6)
+            .num_field("speedup", speedup);
+        if let Err(e) = row.append_to(&traj) {
             println!("  (could not write {traj:?}: {e})");
         }
         speedup
@@ -599,10 +593,6 @@ fn bench_backend_scoring() -> anyhow::Result<()> {
     let tokens: Vec<i32> = toks[..b * t].iter().map(|&x| x as i32).collect();
 
     println!("\n=== backend scoring ({MODEL}, PeRQ* INT4 b=32, batch {b} x {t}) ===");
-    let stamp = std::time::SystemTime::now()
-        .duration_since(std::time::UNIX_EPOCH)
-        .map(|d| d.as_secs())
-        .unwrap_or(0);
     let traj = root.join("BENCH_backend.json");
 
     let mut backends: Vec<(&str, Box<dyn ExecBackend>)> = vec![(
@@ -636,12 +626,14 @@ fn bench_backend_scoring() -> anyhow::Result<()> {
             perq::util::bench::fmt_count(oc.rotation_ops),
             oc.quantized_values,
         );
-        let entry = format!(
-            "{{\"bench\": \"backend_scoring\", \"ts\": {stamp}, \"model\": \"{MODEL}\", \
-             \"backend\": \"{name}\", \"block\": 32, \"format\": \"int4\", \
-             \"ms_per_batch\": {ms:.3}, \"tok_per_s\": {tok_s:.1}}}"
-        );
-        if let Err(e) = append_trajectory(&traj, &entry) {
+        let row = TrajectoryRow::new("backend_scoring")
+            .str_field("model", MODEL)
+            .str_field("backend", name)
+            .str_field("format", "int4")
+            .num_field("block", 32.0)
+            .num_field("ms_per_batch", ms)
+            .num_field("tok_per_s", tok_s);
+        if let Err(e) = row.append_to(&traj) {
             println!("  (could not write {traj:?}: {e})");
         }
     }

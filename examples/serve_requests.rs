@@ -105,6 +105,9 @@ fn main() -> Result<()> {
         let mut spec = presets::perq_star(block, Format::Int4);
         spec.calib_seqs = 4;
         let qm = Pipeline::new(spec).quantize_with_engine(&bundle, &engine)?;
+        // rotation-quality telemetry recorded during calibration — the
+        // report `perq export` writes beside the artifact
+        println!("    {}", qm.telemetry.summary());
 
         // bring up the server (one backend replica per worker thread;
         // pjrt keeps device-resident weights, native keeps pooled scratch)
@@ -159,6 +162,22 @@ fn main() -> Result<()> {
             for (w, (ws, wb, wx)) in server.per_worker_stats().into_iter().enumerate() {
                 println!("    worker {w}: {ws} served / {wb} batches / exec {wx:.2}s");
             }
+        }
+        // request-lifecycle traces from the server's ring buffer — the
+        // per-request spans `perq serve --metrics-out` dumps as JSON
+        let traces = server.recent_traces();
+        if let Some(slowest) = traces.iter().max_by(|a, b| a.total_ms.total_cmp(&b.total_ms)) {
+            println!(
+                "    traces: {} in ring | slowest {} #{}: queued {:.1}ms + \
+                 prefill {:.1}ms + decode {:.1}ms = {:.1}ms total",
+                traces.len(),
+                slowest.kind,
+                slowest.id,
+                slowest.queued_ms,
+                slowest.prefill_ms,
+                slowest.decode_ms,
+                slowest.total_ms,
+            );
         }
         server.shutdown();
     }

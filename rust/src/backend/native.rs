@@ -32,7 +32,11 @@
 //! the backend's `BufPool`; per-layer weight names and packed matrices are
 //! resolved at construction (no `format!` on the hot path). Steady-state
 //! `decode_step_into` therefore performs **zero heap allocation** —
-//! asserted with a counting allocator in rust/tests/decode_parity.rs.
+//! asserted with a counting allocator in rust/tests/decode_parity.rs and
+//! (with instrumentation enabled) rust/tests/obs_props.rs. Engine counters
+//! ([`EngineObs`]) are `Arc` handles resolved once at construction from
+//! the process-wide `obs::metrics::global()` registry; recording them is a
+//! relaxed atomic add, so the zero-alloc contract holds with metrics on.
 //!
 //! Numerics: `score` (the stateless full-window contract) runs its
 //! internal session in `KvMode::F32`, so it is bit-identical to the
@@ -44,6 +48,8 @@
 //! bit-identical cache contents — the decode-parity contract of
 //! rust/tests/decode_parity.rs.
 
+use std::sync::Arc;
+
 use anyhow::{anyhow, bail, ensure, Result};
 
 use super::{graph_op_counts, ExecBackend, ForwardGraph, OpCounts, SessionId};
@@ -51,9 +57,39 @@ use crate::calib::capture::Captures;
 use crate::hadamard::BlockRotator;
 use crate::model::config::ModelConfig;
 use crate::model::weights::WeightSet;
+use crate::obs::metrics::Counter;
 use crate::quant::{act, Format};
 use crate::tensor::{qmat, simd, KvCache, KvMode, Mat, QuantActs, QuantMat};
 use crate::util::pool::BufPool;
+
+/// Engine-level counters in the process-wide metrics registry, resolved
+/// once at backend construction so the hot path never touches the
+/// registry's name map. Recording is a single relaxed atomic add.
+struct EngineObs {
+    decode_steps: Arc<Counter>,
+    decode_rows: Arc<Counter>,
+    prefill_tokens: Arc<Counter>,
+}
+
+impl EngineObs {
+    fn resolve() -> EngineObs {
+        let reg = crate::obs::metrics::global();
+        EngineObs {
+            decode_steps: reg.counter(
+                "perq_native_decode_steps_total",
+                "decode_step_into calls executed by native backends",
+            ),
+            decode_rows: reg.counter(
+                "perq_native_decode_rows_total",
+                "active slot-rows advanced across all native decode steps",
+            ),
+            prefill_tokens: reg.counter(
+                "perq_native_prefill_tokens_total",
+                "prompt tokens prefilled through native sessions",
+            ),
+        }
+    }
+}
 
 /// The packed linear weights of one layer (INT4/INT8 merged graphs),
 /// resolved out of the `WeightSet` maps at construction so the serving
@@ -119,6 +155,7 @@ pub struct NativeBackend {
     active_scratch: Vec<usize>,
     tok_scratch: Vec<i32>,
     slot_seen: Vec<bool>,
+    obs: EngineObs,
 }
 
 /// `PERQ_PACKED=0` (or `off`) forces the f32 fake-quant path even when
@@ -232,6 +269,7 @@ impl NativeBackend {
             active_scratch: Vec::new(),
             tok_scratch: Vec::new(),
             slot_seen: Vec::new(),
+            obs: EngineObs::resolve(),
         })
     }
 
@@ -567,6 +605,9 @@ impl ExecBackend for NativeBackend {
         let mut sess = self.take_session(sid)?;
         let result = self.run_rows(&mut sess, slots, n_new, tokens, None);
         self.sessions[sid as usize] = Some(sess);
+        if result.is_ok() {
+            self.obs.prefill_tokens.add(tokens.len() as u64);
+        }
         result.map(|m| m.data)
     }
 
@@ -602,6 +643,10 @@ impl ExecBackend for NativeBackend {
                             .copy_from_slice(logits.row(i));
                     }
                     self.put_mat(logits);
+                    // relaxed atomic adds on pre-resolved handles — the
+                    // zero-alloc decode contract holds with metrics on
+                    self.obs.decode_steps.inc();
+                    self.obs.decode_rows.add(active.len() as u64);
                     Ok(())
                 }
                 Err(e) => Err(e),

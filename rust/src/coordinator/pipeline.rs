@@ -29,6 +29,7 @@ use crate::model::config::CaptureKind;
 use crate::model::transform;
 use crate::model::weights::WeightSet;
 use crate::backend::{BackendKind, ExtraInput, ForwardGraph};
+use crate::obs::telemetry::{self, LayerRotationStats, RotationReport, SiteQuantStats};
 use crate::permute::{self, CalibStats};
 use crate::quant::{act, Format, WeightCodec};
 use crate::runtime::Engine;
@@ -64,6 +65,11 @@ pub struct QuantizedModel {
     /// fused per-layer P3 permutations — already merged into `ws`
     /// (Remark 4.2); retained for artifact provenance
     pub perms: Vec<Vec<u32>>,
+    /// rotation-quality telemetry gathered during calibration (per-layer
+    /// mass imbalance pre/post permutation, post-rotation outlier shape,
+    /// per-site quantization MSE); `perq export` writes it beside the
+    /// artifact (see `deploy::telemetry_path`)
+    pub telemetry: RotationReport,
 }
 
 impl QuantizedModel {
@@ -186,12 +192,12 @@ impl Pipeline {
     /// Offline stages only (transform -> capture -> permute -> rotate ->
     /// round); returns the quantized model without evaluating it.
     pub fn quantize_with_engine(&self, bundle: &ModelBundle, engine: &Engine) -> Result<QuantizedModel> {
-        let trace = std::env::var("PERQ_TRACE").is_ok();
+        // stage timings go through the leveled log facade: visible with
+        // PERQ_LOG=debug (or the legacy PERQ_TRACE switch)
         let mut t_stage = Instant::now();
         let mut stage = |name: &str| {
-            if trace {
-                eprintln!("[perq-trace] {name}: {:.1} ms", t_stage.elapsed().as_secs_f64() * 1e3);
-            }
+            crate::log_debug!("[perq-trace] {name}: {:.1} ms",
+                              t_stage.elapsed().as_secs_f64() * 1e3);
             t_stage = Instant::now();
         };
         let t0 = Instant::now();
@@ -251,16 +257,32 @@ impl Pipeline {
         let perm_tokens = (spec.perm_calib_seqs * cfg.seq_len).min(caps.n_tokens);
         let mut mass_balance = 0.0f64;
         let mut perms: Vec<Vec<u32>> = Vec::with_capacity(cfg.n_layers);
+        let mut layer_stats: Vec<LayerRotationStats> = Vec::with_capacity(cfg.n_layers);
         for l in 0..cfg.n_layers {
             let down = &caps.down_in[l];
             let sub_rows: Vec<&[f32]> = (0..perm_tokens.min(down.rows)).map(|r| down.row(r)).collect();
             let stats = CalibStats::from_activations(&sub_rows);
             let perm = spec.permutation.calibrate(&stats, b3, spec.seed + l as u64);
-            // diagnostic: how balanced is the result vs the theoretical LB
+            // diagnostic: how balanced is the result vs the theoretical LB,
+            // and vs the identity ordering it started from (`down` is still
+            // pre-permutation here) — the pre/post pair is the telemetry
+            // report's mass-diffusion evidence
             let full_stats = CalibStats::from_mat(down);
+            let pre = permute::massdiff::max_block_mass(
+                &full_stats.mean_abs, &permute::identity_perm(full_stats.d), b3,
+            );
             let got = permute::massdiff::max_block_mass(&full_stats.mean_abs, &perm, b3);
             let lb = permute::massdiff::mass_lower_bound(&full_stats.mean_abs, b3);
             mass_balance += if lb > 0.0 { got / lb } else { 1.0 };
+            layer_stats.push(LayerRotationStats {
+                layer: l,
+                pre_max_block_mass: pre,
+                post_max_block_mass: got,
+                mass_lower_bound: lb,
+                // filled in after the R̃3 rotation below
+                post_rot_absmax: 0.0,
+                post_rot_kurtosis: 0.0,
+            });
             transform::merge_p3_layer(&mut ws, l, &perm);
             caps.down_in[l] = caps.down_in[l].permute_cols(&perm);
             perms.push(perm.iter().map(|&i| i as u32).collect());
@@ -273,9 +295,15 @@ impl Pipeline {
         if merged {
             transform::merge_r3_inv(&mut ws, cfg, &rot3)?;
         }
-        // Hessian inputs for wd see the *rotated* activations.
+        // Hessian inputs for wd see the *rotated* activations. The rotated
+        // (not yet fake-quantized) matrix is also the right place to read
+        // the outlier shape the rotation leaves behind: max|x| and
+        // kurtosis of what the quantizer will actually see.
         for l in 0..cfg.n_layers {
             rot3.apply_mat(&mut caps.down_in[l]);
+            let (amax, kurt) = telemetry::absmax_and_kurtosis(&caps.down_in[l].data);
+            layer_stats[l].post_rot_absmax = amax;
+            layer_stats[l].post_rot_kurtosis = kurt;
         }
         // Online graph: d_model-space sites are rotated in-graph too.
         let rot_online = if merged { None } else { Some(BlockRotator::hadamard(32)?) };
@@ -302,7 +330,7 @@ impl Pipeline {
         // feeds dense weights into the artifacts, so skip the pack work
         // (and the retained payloads) there.
         let pack = engine.backend() == BackendKind::Native;
-        self.round_all(cfg, &mut ws, &caps, rot_online.as_ref(), pack)?;
+        let site_stats = self.round_all(cfg, &mut ws, &caps, rot_online.as_ref(), pack)?;
 
         stage("rounding");
         // Native engines serve packed sites straight from the integer
@@ -321,6 +349,14 @@ impl Pipeline {
             }
         }
         let _ = t0;
+        let telemetry = RotationReport {
+            model: bundle.name.clone(),
+            label: spec.label(),
+            r3_block: b3,
+            calib_tokens: caps.n_tokens,
+            layers: layer_stats,
+            sites: site_stats,
+        };
         Ok(QuantizedModel {
             model: bundle.name.clone(),
             label: spec.label(),
@@ -333,19 +369,18 @@ impl Pipeline {
             calib_tokens: caps.n_tokens,
             seed: spec.seed,
             perms,
+            telemetry,
         })
     }
 
     pub fn run_with_engine(&self, bundle: &ModelBundle, engine: &Engine) -> Result<PipelineReport> {
-        let trace = std::env::var("PERQ_TRACE").is_ok();
         let t0 = Instant::now();
         let spec = &self.spec;
         let qm = self.quantize_with_engine(bundle, engine)?;
         let mut t_stage = Instant::now();
         let mut stage = |name: &str| {
-            if trace {
-                eprintln!("[perq-trace] {name}: {:.1} ms", t_stage.elapsed().as_secs_f64() * 1e3);
-            }
+            crate::log_debug!("[perq-trace] {name}: {:.1} ms",
+                              t_stage.elapsed().as_secs_f64() * 1e3);
             t_stage = Instant::now();
         };
         // ---- stage 5: evaluation ------------------------------------------
@@ -374,12 +409,15 @@ impl Pipeline {
 
     /// Round every linear site in parallel worker threads. With `pack`,
     /// each rounded site also gets a packed integer twin for the native
-    /// backend's qgemm path (integer formats only).
+    /// backend's qgemm path (integer formats only). Returns per-site
+    /// quantization MSE (rounded vs float reference) for the telemetry
+    /// report.
     fn round_all(&self, cfg: &crate::model::ModelConfig, ws: &mut WeightSet,
-                 caps: &Captures, rot_online: Option<&BlockRotator>, pack: bool) -> Result<()> {
+                 caps: &Captures, rot_online: Option<&BlockRotator>, pack: bool)
+                 -> Result<Vec<SiteQuantStats>> {
         let spec = &self.spec;
         if spec.format == Format::None {
-            return Ok(());
+            return Ok(Vec::new());
         }
         let sites = cfg.linear_sites();
         let needs_gram = spec.rounding != crate::rounding::Rounding::Rtn;
@@ -403,7 +441,7 @@ impl Pipeline {
                 }
             })
             .collect();
-        let quantized: Vec<(Mat, Option<QuantMat>)> =
+        let quantized: Vec<(Mat, Option<QuantMat>, f64)> =
             pool::parallel_map(sites.len(), spec.workers, |i| {
                 let site = &sites[i];
                 let w = &w_in[i];
@@ -417,6 +455,14 @@ impl Pipeline {
                     None
                 };
                 let rounded = spec.rounding.round(w, &codec, gram.as_ref());
+                // telemetry: mean squared rounding error vs the float
+                // reference, in the space the site is quantized in
+                let mut err = 0.0f64;
+                for (a, b) in w.data.iter().zip(&rounded.data) {
+                    let d = (*a - *b) as f64;
+                    err += d * d;
+                }
+                let mse = err / w.data.len().max(1) as f64;
                 // Merged graphs serve the rounded weight as-is: pack its
                 // integer codes once here so the native backend can run the
                 // low-bit qgemm path and drop the dequantized f32 copy.
@@ -427,9 +473,11 @@ impl Pipeline {
                 } else {
                     None
                 };
-                (rounded, packed)
+                (rounded, packed, mse)
             });
-        for (site, (mut q, packed)) in sites.iter().zip(quantized) {
+        let mut site_stats = Vec::with_capacity(sites.len());
+        for (site, (mut q, packed, mse)) in sites.iter().zip(quantized) {
+            site_stats.push(SiteQuantStats { name: site.name.clone(), mse });
             // online graph: pre-compensate the in-graph rotation so the
             // graph's R̃ᵀ(w_feed) equals the quantized rotated weight.
             if let Some(rot) = rot_online {

@@ -30,15 +30,21 @@
 //!   * [`ServerStats`] tracks request counts, per-phase (prefill/decode)
 //!     execution time and token throughput, step occupancy, and three
 //!     fixed-bucket atomic latency histograms (end-to-end, prefill phase,
-//!     decode phase) with explicit saturation counting. A coherent
-//!     [`StatsSnapshot`] feeds the `perq serve` JSON output.
+//!     decode phase) with explicit saturation counting. Every field is a
+//!     handle registered in a per-server [`Registry`] (`obs::metrics`), so
+//!     the coherent [`StatsSnapshot`] that feeds the `perq serve` JSON
+//!     output, the Prometheus text dump (`--metrics-out`), and the JSON
+//!     metrics snapshot are all views over the same atomics. Completed
+//!     requests additionally leave a [`RequestTrace`] (enqueue → admit →
+//!     prefill → decode → complete spans) in a ring buffer readable via
+//!     [`InferenceServer::recent_traces`].
 //!
 //! The batch-forming wait is configurable: `--max-wait-ms` on the CLIs,
 //! `PERQ_MAX_WAIT_MS` in the environment, else [`DEFAULT_MAX_WAIT_MS`]
 //! (see [`resolve_max_wait`]). It only delays *idle* workers to let a
 //! fuller prefill form; a worker with active decode slots never waits.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -48,6 +54,9 @@ use anyhow::{anyhow, ensure, Result};
 
 use crate::backend::{ExecBackend, SessionId};
 use crate::model::config::ModelConfig;
+use crate::obs::metrics::{Counter, Gauge, Hist, Registry};
+use crate::obs::trace::{RequestTrace, Tracer};
+use crate::util::json::Json;
 
 pub use crate::backend::ExtraInput;
 
@@ -76,6 +85,8 @@ pub struct ScoreRequest {
     /// seq_len + 1 tokens: the window to score plus the next-token target
     pub tokens: Vec<i32>,
     pub submitted: Instant,
+    /// lifecycle-trace ID, assigned at submit time
+    pub trace_id: u64,
     respond: Sender<ScoreResponse>,
 }
 
@@ -93,6 +104,8 @@ pub struct GenerateRequest {
     pub prompt: Vec<i32>,
     pub max_new_tokens: usize,
     pub submitted: Instant,
+    /// lifecycle-trace ID, assigned at submit time
+    pub trace_id: u64,
     respond: Sender<GenerateResponse>,
 }
 
@@ -118,85 +131,19 @@ struct Queue {
     shutdown: bool,
 }
 
-/// Number of √2-spaced latency buckets: 1 µs · 2^(i/2) spans 1 µs to
-/// ≈ 35 min, far beyond any request this server can see.
-const LAT_BUCKETS: usize = 64;
+/// The request-latency histogram, generalized into `obs::metrics` (PR 6)
+/// and re-exported under its historical serving-layer name: √2-spaced
+/// microsecond buckets, atomic recording, explicit saturation counting,
+/// and the percentile saturation clamp (a rank landing among saturated
+/// samples reports the top bucket's lower bound, not a midpoint).
+pub use crate::obs::metrics::Hist as LatencyHist;
 
-/// Fixed-bucket request-latency histogram over atomics — recordable from
-/// every worker thread without locks, readable while the server runs.
-/// Buckets are √2-spaced in microseconds, so a reported percentile is
-/// within ~19% of the true value (the geometric-mid representative).
-/// Out-of-range samples clamp into the edge buckets (so `count` always
-/// equals the number of records); clamps past the top are additionally
-/// tallied in a saturation counter instead of disappearing silently.
-pub struct LatencyHist {
-    buckets: Vec<AtomicU64>,
-    saturated: AtomicU64,
-}
+/// Completed-trace ring capacity per server (see [`Tracer`]).
+const TRACE_RING: usize = 256;
 
-impl Default for LatencyHist {
-    fn default() -> Self {
-        LatencyHist {
-            buckets: (0..LAT_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
-            saturated: AtomicU64::new(0),
-        }
-    }
-}
-
-impl LatencyHist {
-    /// Raw (unclamped) bucket index of a nanosecond latency.
-    fn bucket(ns: u64) -> usize {
-        let us = (ns / 1_000).max(1);
-        let l = 63 - us.leading_zeros() as u64; // floor(log2 µs)
-        let half = if l > 0 && (us & (1 << (l - 1))) != 0 { 1 } else { 0 };
-        (2 * l + half) as usize
-    }
-
-    /// Record one request latency. Samples past the top bucket land in the
-    /// last bucket *and* bump the saturation counter.
-    pub fn record(&self, lat: Duration) {
-        let idx = LatencyHist::bucket(lat.as_nanos() as u64);
-        if idx >= LAT_BUCKETS {
-            self.saturated.fetch_add(1, Ordering::Relaxed);
-            self.buckets[LAT_BUCKETS - 1].fetch_add(1, Ordering::Relaxed);
-        } else {
-            self.buckets[idx].fetch_add(1, Ordering::Relaxed);
-        }
-    }
-
-    /// Total recorded samples (clamped records included).
-    pub fn count(&self) -> u64 {
-        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
-    }
-
-    /// Records that overflowed the top bucket and were clamped into it.
-    pub fn saturated(&self) -> u64 {
-        self.saturated.load(Ordering::Relaxed)
-    }
-
-    /// The q-quantile (0 < q ≤ 1) in milliseconds, or 0.0 with no samples.
-    /// Returns the geometric midpoint of the bucket holding the rank.
-    pub fn percentile(&self, q: f64) -> f64 {
-        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
-        let total: u64 = counts.iter().sum();
-        if total == 0 {
-            return 0.0;
-        }
-        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
-        let mut seen = 0u64;
-        for (i, &c) in counts.iter().enumerate() {
-            seen += c;
-            if seen >= rank {
-                // bucket i covers [2^(l)·(1 + h/2), …) µs for i = 2l + h
-                let l = (i / 2) as f64;
-                let half = (i % 2) as f64;
-                let lower_us = (2.0f64).powf(l) * (1.0 + 0.5 * half);
-                // geometric mid of a √2-wide interval
-                return lower_us * (2.0f64).powf(0.25) / 1_000.0;
-            }
-        }
-        0.0
-    }
+/// Milliseconds of a span, for trace records.
+fn ms(d: Duration) -> f64 {
+    d.as_secs_f64() * 1e3
 }
 
 /// Per-worker counters; the aggregate [`ServerStats`] sums across replicas.
@@ -212,31 +159,89 @@ pub struct WorkerStats {
 /// Server statistics (atomics; read while running). The aggregate counters
 /// are the merge of every worker's [`WorkerStats`]; the phase split and
 /// the histograms are aggregate-only.
-#[derive(Default)]
+///
+/// Every field is a handle registered in `registry` under a stable
+/// `perq_*` metric name (see the README metrics table), so the legacy
+/// [`StatsSnapshot`], `registry.render_prometheus()`, and
+/// `registry.snapshot_json()` read the very same atomics — the snapshot is
+/// a *view over the registry*, not a second accounting path. Each server
+/// owns its own registry so concurrent servers in one process never mix
+/// counts; process-wide engine metrics live in `obs::metrics::global()`.
 pub struct ServerStats {
+    /// the registry every handle below is registered in
+    pub registry: Arc<Registry>,
     /// requests completed (score + generate)
-    pub served: AtomicU64,
+    pub served: Arc<Counter>,
     /// generate requests completed (subset of `served`)
-    pub generated: AtomicU64,
+    pub generated: Arc<Counter>,
     /// engine steps executed (prefill calls + decode calls)
-    pub batches: AtomicU64,
-    pub exec_ns: AtomicU64,
+    pub batches: Arc<Counter>,
+    pub exec_ns: Arc<Counter>,
     /// execution time spent in prefill steps
-    pub prefill_ns: AtomicU64,
+    pub prefill_ns: Arc<Counter>,
     /// execution time spent in decode steps
-    pub decode_ns: AtomicU64,
+    pub decode_ns: Arc<Counter>,
     /// prompt/window tokens pushed through prefill
-    pub prefill_tokens: AtomicU64,
+    pub prefill_tokens: Arc<Counter>,
     /// tokens produced by decode steps
-    pub decode_tokens: AtomicU64,
+    pub decode_tokens: Arc<Counter>,
     /// Σ active requests over engine steps (mean = occupancy_sum/batches)
-    pub occupancy_sum: AtomicU64,
+    pub occupancy_sum: Arc<Counter>,
+    /// requests dropped because a backend call failed
+    pub failures: Arc<Counter>,
+    /// requests waiting for admission (sampled at queue transitions)
+    pub queue_depth: Arc<Gauge>,
     /// end-to-end request latency histogram
-    pub latency: LatencyHist,
+    pub latency: Arc<Hist>,
     /// submit → prefill-complete latency (generate requests)
-    pub prefill_lat: LatencyHist,
+    pub prefill_lat: Arc<Hist>,
     /// decode-phase latency (generate requests)
-    pub decode_lat: LatencyHist,
+    pub decode_lat: Arc<Hist>,
+    /// single decode engine-step execution time (per-token span source)
+    pub decode_step: Arc<Hist>,
+    /// completed request-lifecycle traces (fixed ring)
+    pub traces: Tracer,
+}
+
+impl Default for ServerStats {
+    fn default() -> Self {
+        let registry = Arc::new(Registry::new());
+        ServerStats {
+            served: registry
+                .counter("perq_requests_served_total", "requests completed (score + generate)"),
+            generated: registry
+                .counter("perq_generate_requests_total", "generate requests completed"),
+            batches: registry
+                .counter("perq_engine_steps_total", "engine steps (prefill + decode calls)"),
+            exec_ns: registry
+                .counter("perq_exec_ns_total", "execution time across engine steps (ns)"),
+            prefill_ns: registry
+                .counter("perq_prefill_ns_total", "execution time in prefill steps (ns)"),
+            decode_ns: registry
+                .counter("perq_decode_ns_total", "execution time in decode steps (ns)"),
+            prefill_tokens: registry
+                .counter("perq_prefill_tokens_total", "prompt/window tokens through prefill"),
+            decode_tokens: registry
+                .counter("perq_decode_tokens_total", "tokens produced by decode steps"),
+            occupancy_sum: registry
+                .counter("perq_step_occupancy_total", "sum of active requests over engine steps"),
+            failures: registry
+                .counter("perq_request_failures_total", "requests dropped by backend errors"),
+            queue_depth: registry.gauge("perq_queue_depth", "requests waiting for admission"),
+            latency: registry
+                .hist("perq_request_latency_seconds", "end-to-end request latency"),
+            prefill_lat: registry.hist(
+                "perq_prefill_latency_seconds",
+                "submit to prefill-complete latency (generate requests)",
+            ),
+            decode_lat: registry
+                .hist("perq_decode_latency_seconds", "decode-phase latency (generate requests)"),
+            decode_step: registry
+                .hist("perq_decode_step_seconds", "single decode engine-step execution time"),
+            traces: Tracer::new(TRACE_RING),
+            registry,
+        }
+    }
 }
 
 /// One coherent read of [`ServerStats`] — the `perq serve` JSON record.
@@ -268,22 +273,24 @@ pub struct StatsSnapshot {
 }
 
 impl ServerStats {
-    fn snapshot(&self) -> StatsSnapshot {
-        let batches = self.batches.load(Ordering::Relaxed);
-        let decode_s = self.decode_ns.load(Ordering::Relaxed) as f64 / 1e9;
-        let decode_tokens = self.decode_tokens.load(Ordering::Relaxed);
+    /// The legacy `perq serve` statistics view, read straight off the
+    /// registry-registered handles (see [`ServerStats`]).
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let batches = self.batches.get();
+        let decode_s = self.decode_ns.get() as f64 / 1e9;
+        let decode_tokens = self.decode_tokens.get();
         StatsSnapshot {
-            served: self.served.load(Ordering::Relaxed),
-            generated: self.generated.load(Ordering::Relaxed),
+            served: self.served.get(),
+            generated: self.generated.get(),
             batches,
-            exec_s: self.exec_ns.load(Ordering::Relaxed) as f64 / 1e9,
-            prefill_s: self.prefill_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            exec_s: self.exec_ns.get() as f64 / 1e9,
+            prefill_s: self.prefill_ns.get() as f64 / 1e9,
             decode_s,
-            prefill_tokens: self.prefill_tokens.load(Ordering::Relaxed),
+            prefill_tokens: self.prefill_tokens.get(),
             decode_tokens,
             decode_tok_per_s: if decode_s > 0.0 { decode_tokens as f64 / decode_s } else { 0.0 },
             mean_occupancy: if batches > 0 {
-                self.occupancy_sum.load(Ordering::Relaxed) as f64 / batches as f64
+                self.occupancy_sum.get() as f64 / batches as f64
             } else {
                 0.0
             },
@@ -300,6 +307,36 @@ impl ServerStats {
                 + self.prefill_lat.saturated()
                 + self.decode_lat.saturated(),
         }
+    }
+}
+
+impl StatsSnapshot {
+    /// The PR 5 `perq serve` JSON shape, field for field — consumers of
+    /// the legacy record (BENCH_deploy.json rows, the `--metrics-out`
+    /// snapshot) must keep seeing exactly these keys.
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("served".to_string(), Json::Num(self.served as f64));
+        o.insert("generated".to_string(), Json::Num(self.generated as f64));
+        o.insert("batches".to_string(), Json::Num(self.batches as f64));
+        o.insert("exec_s".to_string(), Json::Num(self.exec_s));
+        o.insert("prefill_s".to_string(), Json::Num(self.prefill_s));
+        o.insert("decode_s".to_string(), Json::Num(self.decode_s));
+        o.insert("prefill_tokens".to_string(), Json::Num(self.prefill_tokens as f64));
+        o.insert("decode_tokens".to_string(), Json::Num(self.decode_tokens as f64));
+        o.insert("decode_tok_per_s".to_string(), Json::Num(self.decode_tok_per_s));
+        o.insert("mean_occupancy".to_string(), Json::Num(self.mean_occupancy));
+        o.insert("p50_ms".to_string(), Json::Num(self.p50_ms));
+        o.insert("p95_ms".to_string(), Json::Num(self.p95_ms));
+        o.insert("p99_ms".to_string(), Json::Num(self.p99_ms));
+        o.insert("prefill_p50_ms".to_string(), Json::Num(self.prefill_p50_ms));
+        o.insert("prefill_p95_ms".to_string(), Json::Num(self.prefill_p95_ms));
+        o.insert("prefill_p99_ms".to_string(), Json::Num(self.prefill_p99_ms));
+        o.insert("decode_p50_ms".to_string(), Json::Num(self.decode_p50_ms));
+        o.insert("decode_p95_ms".to_string(), Json::Num(self.decode_p95_ms));
+        o.insert("decode_p99_ms".to_string(), Json::Num(self.decode_p99_ms));
+        o.insert("hist_saturated".to_string(), Json::Num(self.hist_saturated as f64));
+        Json::Obj(o)
     }
 }
 
@@ -468,6 +505,7 @@ impl InferenceServer {
         self.push(Request::Score(ScoreRequest {
             tokens,
             submitted: Instant::now(),
+            trace_id: self.stats.traces.next_id(),
             respond: tx,
         }))?;
         Ok(rx)
@@ -499,6 +537,7 @@ impl InferenceServer {
             prompt,
             max_new_tokens,
             submitted: Instant::now(),
+            trace_id: self.stats.traces.next_id(),
             respond: tx,
         }))?;
         Ok(rx)
@@ -520,6 +559,7 @@ impl InferenceServer {
         let mut q = lock.lock().unwrap();
         ensure!(!q.shutdown, "server is shut down");
         q.pending.push_back(req);
+        self.stats.queue_depth.set(q.pending.len() as i64);
         cv.notify_one();
         Ok(())
     }
@@ -527,9 +567,9 @@ impl InferenceServer {
     /// (served, batches, exec seconds) — the legacy aggregate triple
     /// (`served` counts completed requests of both kinds).
     pub fn stats(&self) -> (u64, u64, f64) {
-        let served = self.stats.served.load(Ordering::Relaxed);
-        let batches = self.stats.batches.load(Ordering::Relaxed);
-        let exec_s = self.stats.exec_ns.load(Ordering::Relaxed) as f64 / 1e9;
+        let served = self.stats.served.get();
+        let batches = self.stats.batches.get();
+        let exec_s = self.stats.exec_ns.get() as f64 / 1e9;
         (served, batches, exec_s)
     }
 
@@ -564,6 +604,26 @@ impl InferenceServer {
     pub fn latency_percentiles(&self) -> (f64, f64, f64) {
         let h = &self.stats.latency;
         (h.percentile(0.50), h.percentile(0.95), h.percentile(0.99))
+    }
+
+    /// The metrics registry behind this server's statistics. Render with
+    /// `render_prometheus()` (text exposition format) or `snapshot_json()`;
+    /// both read the same atomics [`InferenceServer::snapshot`] does.
+    pub fn registry(&self) -> Arc<Registry> {
+        Arc::clone(&self.stats.registry)
+    }
+
+    /// Shared handle to the live statistics — for periodic metric dumps
+    /// that outlive a `&self` borrow (e.g. the `--metrics-out` writer
+    /// thread).
+    pub fn shared_stats(&self) -> Arc<ServerStats> {
+        Arc::clone(&self.stats)
+    }
+
+    /// Completed request-lifecycle traces currently in the ring buffer,
+    /// oldest first.
+    pub fn recent_traces(&self) -> Vec<RequestTrace> {
+        self.stats.traces.recent_traces()
     }
 
     fn signal_shutdown(&self) {
@@ -633,6 +693,8 @@ fn graph_from_extras(extras: &[ExtraInput]) -> Result<crate::backend::ForwardGra
 struct ActiveGen {
     req: GenerateRequest,
     generated: Vec<i32>,
+    /// when a replica pulled the request off the queue
+    admitted: Instant,
     /// when the prompt prefill (+ first token) completed
     prefilled: Instant,
 }
@@ -668,14 +730,14 @@ fn worker_loop(mut backend: Box<dyn ExecBackend>, queue: Arc<(Mutex<Queue>, Cond
     let sid: SessionId = match backend.begin(b) {
         Ok(s) => s,
         Err(e) => {
-            eprintln!("server: opening execution session failed: {e:#}");
+            crate::log_error!("server: opening execution session failed: {e:#}");
             return;
         }
     };
     let sid_score: SessionId = match backend.begin_scoring(b) {
         Ok(s) => s,
         Err(e) => {
-            eprintln!("server: opening scoring session failed: {e:#}");
+            crate::log_error!("server: opening scoring session failed: {e:#}");
             return;
         }
     };
@@ -732,8 +794,12 @@ fn worker_loop(mut backend: Box<dyn ExecBackend>, queue: Arc<(Mutex<Queue>, Cond
                     Request::Generate(g) => gens.push(g),
                 }
             }
+            stats.queue_depth.set(q.pending.len() as i64);
             (scores, gens)
         };
+        // admission stamp for everything pulled this round (trace span:
+        // enqueue → admit)
+        let admitted = Instant::now();
 
         // -- score admissions: one batched prefill (exact session) --------
         if !score_reqs.is_empty() {
@@ -751,7 +817,7 @@ fn worker_loop(mut backend: Box<dyn ExecBackend>, queue: Arc<(Mutex<Queue>, Cond
                         occupancy as u64);
             for &slot in &slots {
                 if let Err(e) = backend.reset_slot(sid_score, slot) {
-                    eprintln!("server: releasing score slot {slot} failed: {e:#}");
+                    crate::log_warn!("server: releasing score slot {slot} failed: {e:#}");
                 }
             }
             match result {
@@ -760,9 +826,19 @@ fn worker_loop(mut backend: Box<dyn ExecBackend>, queue: Arc<(Mutex<Queue>, Cond
                         let nll = window_nll(&logits[i * t * v..(i + 1) * t * v],
                                              &req.tokens, t, v);
                         let latency = req.submitted.elapsed();
-                        stats.served.fetch_add(1, Ordering::Relaxed);
+                        stats.served.inc();
                         mine.served.fetch_add(1, Ordering::Relaxed);
                         stats.latency.record(latency);
+                        stats.traces.record(RequestTrace {
+                            id: req.trace_id,
+                            kind: "score",
+                            queued_ms: ms(admitted - req.submitted),
+                            prefill_ms: exec_ns as f64 / 1e6,
+                            decode_ms: 0.0,
+                            total_ms: ms(latency),
+                            decode_steps: 0,
+                            ok: true,
+                        });
                         let _ = req.respond.send(ScoreResponse {
                             nll,
                             latency,
@@ -771,8 +847,21 @@ fn worker_loop(mut backend: Box<dyn ExecBackend>, queue: Arc<(Mutex<Queue>, Cond
                     }
                 }
                 Err(e) => {
-                    eprintln!("server: score prefill failed: {e:#}");
+                    crate::log_error!("server: score prefill failed: {e:#}");
                     // drop senders → clients observe disconnection
+                    for req in score_reqs {
+                        stats.failures.inc();
+                        stats.traces.record(RequestTrace {
+                            id: req.trace_id,
+                            kind: "score",
+                            queued_ms: ms(admitted - req.submitted),
+                            prefill_ms: exec_ns as f64 / 1e6,
+                            decode_ms: 0.0,
+                            total_ms: ms(req.submitted.elapsed()),
+                            decode_steps: 0,
+                            ok: false,
+                        });
+                    }
                 }
             }
         }
@@ -780,10 +869,11 @@ fn worker_loop(mut backend: Box<dyn ExecBackend>, queue: Arc<(Mutex<Queue>, Cond
         // -- generation admissions: prefill prompts into free slots -------
         for req in gen_reqs {
             let Some(slot) = (0..b).find(|&s| gen_slots[s].is_none()) else {
-                eprintln!("server: admission raced past capacity — requeueing");
+                crate::log_warn!("server: admission raced past capacity — requeueing");
                 let (lock, cv) = &*queue;
                 if let Ok(mut q) = lock.lock() {
                     q.pending.push_front(Request::Generate(req));
+                    stats.queue_depth.set(q.pending.len() as i64);
                 }
                 cv.notify_one();
                 break;
@@ -799,7 +889,8 @@ fn worker_loop(mut backend: Box<dyn ExecBackend>, queue: Arc<(Mutex<Queue>, Cond
                     let first = argmax(&logits[(req.prompt.len() - 1) * v..req.prompt.len() * v]);
                     let prefilled = Instant::now();
                     stats.prefill_lat.record(prefilled - req.submitted);
-                    let active = ActiveGen { req, generated: vec![first], prefilled };
+                    let active =
+                        ActiveGen { req, generated: vec![first], admitted, prefilled };
                     if active.generated.len() >= active.req.max_new_tokens {
                         finish_generation(&stats, &mine, active);
                         let _ = backend.reset_slot(sid, slot);
@@ -809,9 +900,20 @@ fn worker_loop(mut backend: Box<dyn ExecBackend>, queue: Arc<(Mutex<Queue>, Cond
                     }
                 }
                 Err(e) => {
-                    eprintln!("server: prompt prefill failed: {e:#}");
+                    crate::log_error!("server: prompt prefill failed: {e:#}");
                     let _ = backend.reset_slot(sid, slot);
                     // drop sender → client observes disconnection
+                    stats.failures.inc();
+                    stats.traces.record(RequestTrace {
+                        id: req.trace_id,
+                        kind: "generate",
+                        queued_ms: ms(admitted - req.submitted),
+                        prefill_ms: exec_ns as f64 / 1e6,
+                        decode_ms: 0.0,
+                        total_ms: ms(req.submitted.elapsed()),
+                        decode_steps: 0,
+                        ok: false,
+                    });
                 }
             }
         }
@@ -828,7 +930,7 @@ fn worker_loop(mut backend: Box<dyn ExecBackend>, queue: Arc<(Mutex<Queue>, Cond
         match result {
             Ok(()) => {
                 // tokens count only for steps that actually produced them
-                stats.decode_tokens.fetch_add(n_active as u64, Ordering::Relaxed);
+                stats.decode_tokens.add(n_active as u64);
                 for slot in 0..b {
                     if gen_slots[slot].is_none() {
                         continue;
@@ -850,11 +952,22 @@ fn worker_loop(mut backend: Box<dyn ExecBackend>, queue: Arc<(Mutex<Queue>, Cond
                 }
             }
             Err(e) => {
-                eprintln!("server: decode step failed: {e:#}");
+                crate::log_error!("server: decode step failed: {e:#}");
                 // abandon the active generations (senders drop) and
                 // release their slots so the replica can keep serving
                 for slot in 0..b {
-                    if gen_slots[slot].take().is_some() {
+                    if let Some(active) = gen_slots[slot].take() {
+                        stats.failures.inc();
+                        stats.traces.record(RequestTrace {
+                            id: active.req.trace_id,
+                            kind: "generate",
+                            queued_ms: ms(active.admitted - active.req.submitted),
+                            prefill_ms: ms(active.prefilled - active.admitted),
+                            decode_ms: ms(active.prefilled.elapsed()),
+                            total_ms: ms(active.req.submitted.elapsed()),
+                            decode_steps: (active.generated.len() as u64).saturating_sub(1),
+                            ok: false,
+                        });
                         last_tokens[slot] = -1;
                         let _ = backend.reset_slot(sid, slot);
                     }
@@ -868,29 +981,43 @@ fn worker_loop(mut backend: Box<dyn ExecBackend>, queue: Arc<(Mutex<Queue>, Cond
 /// per-worker counters.
 fn record_step(stats: &ServerStats, mine: &WorkerStats, exec_ns: u64, is_prefill: bool,
                tokens: u64, occupancy: u64) {
-    stats.exec_ns.fetch_add(exec_ns, Ordering::Relaxed);
-    stats.batches.fetch_add(1, Ordering::Relaxed);
-    stats.occupancy_sum.fetch_add(occupancy, Ordering::Relaxed);
+    stats.exec_ns.add(exec_ns);
+    stats.batches.inc();
+    stats.occupancy_sum.add(occupancy);
     if is_prefill {
-        stats.prefill_ns.fetch_add(exec_ns, Ordering::Relaxed);
-        stats.prefill_tokens.fetch_add(tokens, Ordering::Relaxed);
+        stats.prefill_ns.add(exec_ns);
+        stats.prefill_tokens.add(tokens);
     } else {
-        stats.decode_ns.fetch_add(exec_ns, Ordering::Relaxed);
+        stats.decode_ns.add(exec_ns);
+        // the per-token span source: every decode engine step's execution
+        // time (all handles pre-resolved — atomics only on this path)
+        stats.decode_step.record_ns(exec_ns);
     }
     mine.exec_ns.fetch_add(exec_ns, Ordering::Relaxed);
     mine.batches.fetch_add(1, Ordering::Relaxed);
 }
 
-/// Complete a generation request: respond and account it.
+/// Complete a generation request: respond, account it, and leave its
+/// lifecycle trace.
 fn finish_generation(stats: &ServerStats, mine: &WorkerStats, active: ActiveGen) {
     let now = Instant::now();
     let latency = now - active.req.submitted;
     let decode_latency = now - active.prefilled;
-    stats.served.fetch_add(1, Ordering::Relaxed);
-    stats.generated.fetch_add(1, Ordering::Relaxed);
+    stats.served.inc();
+    stats.generated.inc();
     mine.served.fetch_add(1, Ordering::Relaxed);
     stats.latency.record(latency);
     stats.decode_lat.record(decode_latency);
+    stats.traces.record(RequestTrace {
+        id: active.req.trace_id,
+        kind: "generate",
+        queued_ms: ms(active.admitted - active.req.submitted),
+        prefill_ms: ms(active.prefilled - active.admitted),
+        decode_ms: ms(decode_latency),
+        total_ms: ms(latency),
+        decode_steps: (active.generated.len() as u64).saturating_sub(1),
+        ok: true,
+    });
     let _ = active.req.respond.send(GenerateResponse {
         tokens: active.generated,
         prefill_latency: active.prefilled - active.req.submitted,
@@ -915,8 +1042,8 @@ mod tests {
     #[test]
     fn stats_default_zero() {
         let s = ServerStats::default();
-        assert_eq!(s.served.load(std::sync::atomic::Ordering::Relaxed), 0);
-        assert_eq!(s.generated.load(std::sync::atomic::Ordering::Relaxed), 0);
+        assert_eq!(s.served.get(), 0);
+        assert_eq!(s.generated.get(), 0);
         assert_eq!(s.latency.count(), 0);
         assert_eq!(s.latency.percentile(0.5), 0.0);
         let snap = s.snapshot();
@@ -924,6 +1051,34 @@ mod tests {
         assert_eq!(snap.decode_tok_per_s, 0.0);
         assert_eq!(snap.mean_occupancy, 0.0);
         assert_eq!(snap.hist_saturated, 0);
+        assert!(s.traces.recent_traces().is_empty());
+    }
+
+    #[test]
+    fn stats_are_a_view_over_the_registry() {
+        // the snapshot and the registry render must read the same atomics
+        let s = ServerStats::default();
+        s.served.add(4);
+        s.latency.record(Duration::from_micros(300));
+        assert_eq!(s.snapshot().served, 4);
+        let prom = s.registry.render_prometheus();
+        assert!(prom.contains("perq_requests_served_total 4"), "{prom}");
+        assert!(prom.contains("perq_request_latency_seconds_count 1"), "{prom}");
+        let j = s.registry.snapshot_json();
+        assert_eq!(
+            j.get("counters").and_then(|c| c.get("perq_requests_served_total"))
+                .and_then(|v| v.as_usize()),
+            Some(4)
+        );
+        // the legacy JSON view carries the exact PR 5 field set
+        let legacy = s.snapshot().to_json();
+        for key in ["served", "generated", "batches", "exec_s", "prefill_s", "decode_s",
+                    "prefill_tokens", "decode_tokens", "decode_tok_per_s", "mean_occupancy",
+                    "p50_ms", "p95_ms", "p99_ms", "prefill_p50_ms", "prefill_p95_ms",
+                    "prefill_p99_ms", "decode_p50_ms", "decode_p95_ms", "decode_p99_ms",
+                    "hist_saturated"] {
+            assert!(legacy.get(key).is_some(), "legacy snapshot lost key {key}");
+        }
     }
 
     #[test]
@@ -952,6 +1107,11 @@ mod tests {
         assert_eq!(h.count(), 3, "clamped records still count");
         assert_eq!(h.saturated(), 2, "top-bucket clamps are tallied");
         assert!(h.percentile(1.0) > h.percentile(0.1));
+        // saturation clamp: a rank landing among saturated samples reports
+        // the top bucket's lower bound, not its geometric midpoint
+        let top_lower_ms =
+            LatencyHist::bucket_lower_us(crate::obs::metrics::HIST_BUCKETS - 1) / 1_000.0;
+        assert_eq!(h.percentile(1.0), top_lower_ms, "no midpoint beyond the data");
     }
 
     #[test]
@@ -1043,6 +1203,27 @@ mod tests {
         assert!(snap.decode_tokens >= 5 + 5 + 7, "decode tokens {}", snap.decode_tokens);
         assert!(snap.decode_s > 0.0 && snap.decode_tok_per_s > 0.0);
         assert!(snap.batches > 3, "prefill + decode steps both count");
+        server.shutdown();
+    }
+
+    #[test]
+    fn request_traces_cover_both_submit_paths() {
+        let server = tiny_server(16, 2, 1);
+        let win: Vec<i32> = (0..17).map(|i| (i % 8) as i32).collect();
+        server.submit(win).unwrap().recv().unwrap();
+        server.submit_generate(vec![1, 5, 2], 4).unwrap().recv().unwrap();
+        let traces = server.recent_traces();
+        assert_eq!(traces.len(), 2, "every completed request leaves a trace");
+        assert!(traces[0].id < traces[1].id, "IDs are monotone with submit order");
+        assert!(traces.iter().any(|t| t.kind == "score"));
+        let g = traces.iter().find(|t| t.kind == "generate").expect("generate trace");
+        assert!(g.ok);
+        assert_eq!(g.decode_steps, 3, "4 tokens = prefill's first + 3 decode steps");
+        assert!(g.decode_ms <= g.total_ms && g.prefill_ms <= g.total_ms);
+        // the registry saw the same traffic the snapshot did
+        let prom = server.registry().render_prometheus();
+        assert!(prom.contains("perq_requests_served_total 2"), "{prom}");
+        assert!(prom.contains("perq_generate_requests_total 1"), "{prom}");
         server.shutdown();
     }
 

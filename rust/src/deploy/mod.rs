@@ -216,6 +216,24 @@ pub struct ArtifactInfo {
     pub dense_bytes: u64,
 }
 
+/// Where `perq export` writes the rotation-quality telemetry report for an
+/// artifact: `<artifact>.telemetry.json` beside the `.perq` file.
+pub fn telemetry_path(artifact: &Path) -> std::path::PathBuf {
+    let mut s = artifact.as_os_str().to_os_string();
+    s.push(".telemetry.json");
+    std::path::PathBuf::from(s)
+}
+
+/// Load the telemetry sidecar written beside an artifact, if present and
+/// parseable. `None` covers artifacts exported before telemetry existed.
+pub fn load_telemetry(artifact: &Path) -> Option<crate::obs::telemetry::RotationReport> {
+    let p = telemetry_path(artifact);
+    if !p.exists() {
+        return None;
+    }
+    crate::obs::telemetry::RotationReport::load(&p).ok()
+}
+
 /// Read only the header and footer of a `.perq` artifact and summarize it.
 pub fn inspect(path: &Path) -> Result<ArtifactInfo> {
     let (version, header) = artifact::read_header(path)?;
@@ -612,6 +630,13 @@ mod tests {
             assert_eq!(graph_from_json(&j).unwrap(), g);
         }
         assert!(graph_from_json(&Json::Obj(Default::default())).is_err());
+    }
+
+    #[test]
+    fn telemetry_sidecar_path_and_absence() {
+        let p = telemetry_path(Path::new("/tmp/m.perq"));
+        assert_eq!(p, Path::new("/tmp/m.perq.telemetry.json"));
+        assert!(load_telemetry(Path::new("/tmp/does_not_exist.perq")).is_none());
     }
 
     #[test]

@@ -42,6 +42,7 @@ pub mod deploy;
 pub mod eval;
 pub mod hadamard;
 pub mod model;
+pub mod obs;
 pub mod permute;
 pub mod quant;
 pub mod rounding;

@@ -11,6 +11,15 @@
 //!   opcounts   print the analytic rotation op-count tables (Tables 3-4)
 //!   stats      mass-concentration statistics on real activations (Fig 3-4)
 //!   models     list model bundles and exported .perq artifacts
+//!   inspect    summarize one .perq artifact + its telemetry sidecar
+//!
+//! Observability: `perq serve --metrics-out FILE` dumps the server's
+//! metrics registry periodically and at shutdown — Prometheus text
+//! exposition to FILE, a JSON snapshot (legacy ServerStats shape +
+//! registry + request traces) to FILE.json. `perq export` writes the
+//! rotation-quality telemetry report beside the artifact
+//! (`<artifact>.telemetry.json`). `PERQ_LOG={error,warn,info,debug}`
+//! levels the CLI/server stderr logging.
 //!
 //! Examples:
 //!   perq quantize --model llama_tiny --preset perq_star --block 32
@@ -20,13 +29,16 @@
 //!   perq baseline --model qwen_tiny
 
 use std::path::{Path, PathBuf};
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use perq::backend::BackendKind;
 use perq::calib::capture;
 use perq::coordinator::presets;
+use perq::coordinator::server::ServerStats;
 use perq::coordinator::spec::{GraphKind, PipelineSpec, RotationSpec};
 use perq::data::corpus::{token_stream, Split};
 use perq::deploy;
@@ -34,7 +46,7 @@ use perq::hadamard::opcount;
 use perq::model::transform;
 use perq::prelude::*;
 use perq::stats;
-use perq::util::bench::{append_trajectory, fmt_count, fmt_ppl, print_table};
+use perq::util::bench::{fmt_count, fmt_ppl, print_table, TrajectoryRow};
 use perq::util::cli;
 use perq::util::json::{self, Json};
 
@@ -63,13 +75,14 @@ fn main() {
         "opcounts" => cmd_opcounts(),
         "stats" => cmd_stats(&args),
         "models" => cmd_models(),
+        "inspect" => cmd_inspect(&args),
         _ => {
             print_help();
             Ok(())
         }
     };
     if let Err(e) = result {
-        eprintln!("error: {e:#}");
+        perq::log_error!("{e:#}");
         std::process::exit(1);
     }
 }
@@ -87,6 +100,8 @@ fn print_help() {
          \x20 serve      --artifact m.perq [--requests N] [--workers W]\n\
          \x20            [--max-wait-ms MS | PERQ_MAX_WAIT_MS] (load + serve, no\n\
          \x20            calibration; full stats snapshot → BENCH_deploy.json)\n\
+         \x20            [--metrics-out FILE] (periodic + final registry dump:\n\
+         \x20            Prometheus text → FILE, JSON snapshot → FILE.json)\n\
          \x20 generate   --artifact m.perq [--prompt-tokens 1,2,3] [--max-new N | -n N]\n\
          \x20            (stateful prefill+decode generation: quantized KV cache,\n\
          \x20            PERQ_KV={{int8,f32}}; appends BENCH_decode.json)\n\
@@ -94,7 +109,9 @@ fn print_help() {
          \x20 sweep      --model M --blocks 16,32,64 [--perm massdiff]\n\
          \x20 opcounts   (analytic Tables 3-4)\n\
          \x20 stats      --model M [--block B]\n\
-         \x20 models     (bundles + exported .perq artifacts)\n\
+         \x20 models     (bundles + exported .perq artifacts + telemetry)\n\
+         \x20 inspect    --artifact m.perq (header summary + rotation-quality\n\
+         \x20            telemetry report, if exported)\n\
          \n\
          PRESETS: {}\n\
          OPTIONS: --perm identity|random|absmax|zigzag|massdiff\n\
@@ -106,7 +123,8 @@ fn print_help() {
          \x20                  no PJRT/XLA or HLO artifacts required)\n\
          \x20        --threads N  worker-pool lanes (default: PERQ_THREADS\n\
          \x20                  env, else core count; PERQ_SIMD={{auto,avx2,\n\
-         \x20                  neon,scalar}} overrides kernel dispatch)",
+         \x20                  neon,scalar}} overrides kernel dispatch)\n\
+         \x20        PERQ_LOG=error|warn|info|debug  stderr log level",
         presets::names().join(" ")
     );
 }
@@ -170,7 +188,7 @@ fn engine_and_bundle(args: &cli::Args, model: &str) -> Result<(Engine, ModelBund
             match ModelBundle::load(&ctx, model) {
                 Ok(b) => Ok((engine, b)),
                 Err(e) if kind == BackendKind::Native => {
-                    eprintln!("note: {e:#}\n      — falling back to synthetic weights");
+                    perq::log_warn!("{e:#} — falling back to synthetic weights");
                     Ok((engine, ModelBundle::synthetic(model)?))
                 }
                 Err(e) => Err(e),
@@ -211,6 +229,12 @@ fn cmd_export(args: &cli::Args) -> Result<()> {
         qm.ws.tensors.len(),
         bytes as f64 / 1024.0,
     );
+    // rotation-quality telemetry rides beside the artifact so the serving
+    // fleet can answer "how well did the permutation/rotation do?" without
+    // the pipeline that built it
+    let tpath = deploy::telemetry_path(Path::new(&out));
+    qm.telemetry.save(&tpath)?;
+    println!("telemetry: {} — {}", tpath.display(), qm.telemetry.summary());
     Ok(())
 }
 
@@ -244,6 +268,25 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
         dm.version,
         load_ms + ready_ms,
     );
+
+    // --metrics-out FILE: dump the metrics registry periodically while the
+    // server runs (Prometheus text → FILE, JSON snapshot → FILE.json) and
+    // once more at shutdown, so a scraper or a post-mortem always sees a
+    // current view
+    let metrics_out = args.get("metrics-out").map(PathBuf::from);
+    let metrics_stop = Arc::new(AtomicBool::new(false));
+    let metrics_writer = metrics_out.clone().map(|path| {
+        let shared = server.shared_stats();
+        let stop = metrics_stop.clone();
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_millis(500));
+                if let Err(e) = write_metrics_files(&path, &shared) {
+                    perq::log_warn!("metrics dump failed: {e:#}");
+                }
+            }
+        })
+    });
 
     // deterministic request stream over the held-out split
     let t = dm.cfg.seq_len;
@@ -307,21 +350,32 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
         snap.decode_p50_ms,
         snap.hist_saturated,
     );
+
+    // final metrics dump covers the whole run, including the shutdown
+    // drain the periodic writer may have missed
+    metrics_stop.store(true, Ordering::Relaxed);
+    if let Some(h) = metrics_writer {
+        let _ = h.join();
+    }
+    if let Some(path) = &metrics_out {
+        let shared = server.shared_stats();
+        write_metrics_files(path, &shared)?;
+        println!(
+            "metrics: {} (Prometheus text) + {} (JSON snapshot)",
+            path.display(),
+            metrics_json_path(path).display(),
+        );
+    }
     server.shutdown();
 
-    // build the record through the JSON serializer so paths/labels with
-    // quotes or backslashes stay valid JSON; the full ServerStats
-    // snapshot rides along (percentiles, occupancy, decode tok/s)
+    // the trajectory row rides the shared JSON serializer so paths/labels
+    // with quotes or backslashes stay valid; the full ServerStats snapshot
+    // comes along (percentiles, occupancy, decode tok/s)
     let bench_path = args.get_or("bench-out", "BENCH_deploy.json");
-    let mut o = std::collections::BTreeMap::new();
-    for (k, v) in [
-        ("bench", "deploy".to_string()),
-        ("artifact", artifact.to_string()),
-        ("model", dm.model.clone()),
-        ("label", dm.label.clone()),
-    ] {
-        o.insert(k.to_string(), Json::Str(v));
-    }
+    let mut row = TrajectoryRow::new("deploy")
+        .str_field("artifact", artifact)
+        .str_field("model", &dm.model)
+        .str_field("label", &dm.label);
     for (k, v) in [
         ("workers", workers as f64),
         ("requests", n_requests as f64),
@@ -352,10 +406,38 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
         ("decode_p99_ms", snap.decode_p99_ms),
         ("hist_saturated", snap.hist_saturated as f64),
     ] {
-        o.insert(k.to_string(), Json::Num(v));
+        row = row.num_field(k, v);
     }
-    append_trajectory(Path::new(&bench_path), &json::dump(&Json::Obj(o)))?;
+    row.append_to(Path::new(&bench_path))?;
     println!("appended {bench_path}");
+    Ok(())
+}
+
+/// Sibling path for the JSON half of a `--metrics-out` dump: `FILE.json`.
+fn metrics_json_path(prom: &Path) -> PathBuf {
+    let mut s = prom.as_os_str().to_os_string();
+    s.push(".json");
+    PathBuf::from(s)
+}
+
+/// Dump the server's metrics registry: Prometheus text exposition to
+/// `prom` (server registry + the process-wide `perq_native_*` engine
+/// counters; the name sets are disjoint), and a JSON snapshot to
+/// `prom`.json — the legacy `ServerStats` fields flat at the top level
+/// (bit-compatible with the pre-registry shape), plus the full registry,
+/// the engine registry, and the recent request traces.
+fn write_metrics_files(prom: &Path, stats: &ServerStats) -> Result<()> {
+    let mut text = stats.registry.render_prometheus();
+    text.push_str(&perq::obs::metrics::global().render_prometheus());
+    std::fs::write(prom, text)?;
+    let mut o = match stats.snapshot().to_json() {
+        Json::Obj(m) => m,
+        _ => std::collections::BTreeMap::new(),
+    };
+    o.insert("registry".to_string(), stats.registry.snapshot_json());
+    o.insert("engine".to_string(), perq::obs::metrics::global().snapshot_json());
+    o.insert("traces".to_string(), stats.traces.to_json());
+    std::fs::write(metrics_json_path(prom), json::dump(&Json::Obj(o)))?;
     Ok(())
 }
 
@@ -414,23 +496,17 @@ fn cmd_generate(args: &cli::Args) -> Result<()> {
         r.decode_tok_per_s(),
     );
     let bench_path = args.get_or("bench-out", "BENCH_decode.json");
-    let mut o = std::collections::BTreeMap::new();
-    o.insert("bench".to_string(), Json::Str("generate".to_string()));
-    o.insert("artifact".to_string(), Json::Str(artifact.to_string()));
-    o.insert("model".to_string(), Json::Str(dm.model.clone()));
-    o.insert("label".to_string(), Json::Str(dm.label.clone()));
-    o.insert("kv_mode".to_string(),
-             Json::Str(perq::tensor::KvMode::from_env().name().to_string()));
-    for (k, v) in [
-        ("prompt_tokens", prompt.len() as f64),
-        ("max_new", max_new as f64),
-        ("prefill_ms", r.prefill_s * 1e3),
-        ("decode_ms", r.decode_s * 1e3),
-        ("decode_tok_per_s", r.decode_tok_per_s()),
-    ] {
-        o.insert(k.to_string(), Json::Num(v));
-    }
-    append_trajectory(Path::new(&bench_path), &json::dump(&Json::Obj(o)))?;
+    TrajectoryRow::new("generate")
+        .str_field("artifact", artifact)
+        .str_field("model", &dm.model)
+        .str_field("label", &dm.label)
+        .str_field("kv_mode", perq::tensor::KvMode::from_env().name())
+        .num_field("prompt_tokens", prompt.len() as f64)
+        .num_field("max_new", max_new as f64)
+        .num_field("prefill_ms", r.prefill_s * 1e3)
+        .num_field("decode_ms", r.decode_s * 1e3)
+        .num_field("decode_tok_per_s", r.decode_tok_per_s())
+        .append_to(Path::new(&bench_path))?;
     println!("appended {bench_path}");
     Ok(())
 }
@@ -613,11 +689,78 @@ fn cmd_models() -> Result<()> {
                 ),
                 Err(e) => println!("{}  (unreadable .perq: {e:#})", p.display()),
             }
+            if let Some(report) = deploy::load_telemetry(&p) {
+                println!("    {}", report.summary());
+            }
             any = true;
         }
     }
     if !any {
         println!("no model bundles or .perq artifacts found (run `make artifacts` or `perq export`)");
+    }
+    Ok(())
+}
+
+/// `perq inspect`: summarize one `.perq` artifact from its header/footer
+/// alone, then print the full rotation-quality telemetry report if the
+/// export wrote one beside it.
+fn cmd_inspect(args: &cli::Args) -> Result<()> {
+    let artifact = args.get("artifact").ok_or_else(|| {
+        anyhow!("inspect needs --artifact model.perq (create one with `perq export`)")
+    })?;
+    let path = Path::new(artifact);
+    let info = deploy::inspect(path)?;
+    println!(
+        "{artifact}: {} {} (.perq v{}) — {} b={} | seq_len {} | {} layers | \
+         packed {:.1} KiB + dense {:.1} KiB",
+        info.model,
+        info.graph_kind,
+        info.version,
+        info.format,
+        info.r3_block,
+        info.seq_len,
+        info.n_layers,
+        info.packed_bytes as f64 / 1024.0,
+        info.dense_bytes as f64 / 1024.0,
+    );
+    println!("label: {}", info.label);
+    match deploy::load_telemetry(path) {
+        None => println!(
+            "no telemetry sidecar ({}) — re-export to record rotation quality",
+            deploy::telemetry_path(path).display()
+        ),
+        Some(report) => {
+            println!("{}", report.summary());
+            println!(
+                "  {:>5}  {:>9} {:>9} {:>9}  {:>9} {:>9}",
+                "layer", "pre_imb", "post_imb", "improve", "absmax", "kurtosis"
+            );
+            for l in &report.layers {
+                println!(
+                    "  {:>5}  {:>9.3} {:>9.3} {:>8.2}x  {:>9.3} {:>9.2}",
+                    l.layer,
+                    l.pre_imbalance(),
+                    l.post_imbalance(),
+                    if l.post_imbalance() > 0.0 {
+                        l.pre_imbalance() / l.post_imbalance()
+                    } else {
+                        1.0
+                    },
+                    l.post_rot_absmax,
+                    l.post_rot_kurtosis,
+                );
+            }
+            if !report.sites.is_empty() {
+                // worst rounding errors first — the sites to look at when
+                // perplexity regresses
+                let mut sites = report.sites.clone();
+                sites.sort_by(|a, b| b.mse.total_cmp(&a.mse));
+                println!("  worst-mse sites:");
+                for s in sites.iter().take(8) {
+                    println!("    {:<16} mse {:.3e}", s.name, s.mse);
+                }
+            }
+        }
     }
     Ok(())
 }

@@ -1,0 +1,126 @@
+//! Minimal leveled logging facade (the `log` crate is unavailable
+//! offline): `PERQ_LOG={error,warn,info,debug}` selects the maximum level
+//! (default `info`; setting the legacy `PERQ_TRACE` variable without
+//! `PERQ_LOG` promotes to `debug`, preserving the old pipeline tracing
+//! switch). Messages go to stderr as `[perq LEVEL] ...`, keeping stdout
+//! clean for CLI results and JSON.
+//!
+//! Use through the crate-root macros — the level gate runs *before* the
+//! format arguments are evaluated, so disabled sites cost one relaxed
+//! enum compare:
+//!
+//! ```ignore
+//! crate::log_warn!("server: score prefill failed: {e:#}");
+//! crate::log_debug!("[{stage}] {ms:.1} ms");
+//! ```
+
+use std::sync::OnceLock;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" | "trace" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+        }
+    }
+}
+
+/// The active maximum level, resolved from the environment once per
+/// process (first use wins; later env changes are not observed).
+pub fn max_level() -> Level {
+    static MAX: OnceLock<Level> = OnceLock::new();
+    *MAX.get_or_init(|| match std::env::var("PERQ_LOG") {
+        Ok(s) => Level::parse(&s).unwrap_or(Level::Info),
+        Err(_) if std::env::var("PERQ_TRACE").is_ok() => Level::Debug,
+        Err(_) => Level::Info,
+    })
+}
+
+pub fn enabled(level: Level) -> bool {
+    level <= max_level()
+}
+
+/// Emit one line. Callers go through the `log_*!` macros, which gate on
+/// [`enabled`] first.
+pub fn emit(level: Level, args: std::fmt::Arguments<'_>) {
+    eprintln!("[perq {}] {args}", level.tag());
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($a:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Error) {
+            $crate::obs::log::emit($crate::obs::log::Level::Error, format_args!($($a)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($a:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Warn) {
+            $crate::obs::log::emit($crate::obs::log::Level::Warn, format_args!($($a)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($a:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Info) {
+            $crate::obs::log::emit($crate::obs::log::Level::Info, format_args!($($a)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($a:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Debug) {
+            $crate::obs::log::emit($crate::obs::log::Level::Debug, format_args!($($a)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing_and_ordering() {
+        assert_eq!(Level::parse("error"), Some(Level::Error));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse(" info "), Some(Level::Info));
+        assert_eq!(Level::parse("trace"), Some(Level::Debug));
+        assert_eq!(Level::parse("verbose"), None);
+        assert!(Level::Error < Level::Debug, "lower levels are more severe");
+    }
+
+    #[test]
+    fn macros_expand_without_panicking() {
+        // max_level() is process-cached, so this only checks the plumbing
+        crate::log_error!("test error {}", 1);
+        crate::log_debug!("test debug {}", 2);
+        assert!(enabled(Level::Error), "error is never filtered out");
+    }
+}

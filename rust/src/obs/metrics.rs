@@ -1,0 +1,404 @@
+//! Metrics registry: named atomic counters, gauges, and √2-bucket
+//! histograms, cheap enough for the decode hot loop.
+//!
+//! Handles ([`Counter`], [`Gauge`], [`Hist`]) are plain atomics behind an
+//! `Arc` — callers resolve them from a [`Registry`] **once** (at server or
+//! backend construction) and then record through the handle with a single
+//! relaxed atomic op: no locks, no lookups, no allocation on the hot path.
+//! The registry itself is only locked at registration and render time.
+//!
+//! Two rendering surfaces:
+//!   * [`Registry::render_prometheus`] — Prometheus text exposition format
+//!     (`# HELP`/`# TYPE` + samples; histograms as cumulative `le` buckets
+//!     with `_sum`/`_count`), for `perq serve --metrics-out`;
+//!   * [`Registry::snapshot_json`] — a deterministic [`Json`] object
+//!     (BTreeMap key order) for machine-readable dumps.
+//!
+//! Per-process engine metrics (the native backend's decode/prefill
+//! counters) live in the [`global`] registry; each [`InferenceServer`]
+//! owns its own registry so concurrently running servers (tests spin up
+//! many) never mix counts.
+//!
+//! [`InferenceServer`]: crate::coordinator::server::InferenceServer
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// Number of √2-spaced histogram buckets: 1 µs · 2^(i/2) spans 1 µs to
+/// ≈ 35 min, far beyond any request this server can see.
+pub const HIST_BUCKETS: usize = 64;
+
+/// Geometric midpoint multiplier of a √2-wide bucket: 2^(1/4).
+const GEO_MID: f64 = 1.189_207_115_002_721_1;
+
+/// Monotone named counter. One relaxed `fetch_add` per record.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous signed value (queue depth, active slots).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-bucket latency histogram over atomics — recordable from every
+/// worker thread without locks, readable while the server runs. Buckets
+/// are √2-spaced in microseconds, so a reported percentile is within ~19%
+/// of the true value (the geometric-mid representative). Out-of-range
+/// samples clamp into the edge buckets (so `count` always equals the
+/// number of records); clamps past the top are additionally tallied in a
+/// saturation counter instead of disappearing silently, and a percentile
+/// that lands among saturated samples reports the top bucket's *lower
+/// bound* (the tightest claim the histogram can actually support) rather
+/// than a midpoint it has no evidence for.
+#[derive(Debug)]
+pub struct Hist {
+    buckets: Vec<AtomicU64>,
+    saturated: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            saturated: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Hist {
+    /// Raw (unclamped) bucket index of a nanosecond latency.
+    fn bucket(ns: u64) -> usize {
+        let us = (ns / 1_000).max(1);
+        let l = 63 - us.leading_zeros() as u64; // floor(log2 µs)
+        let half = if l > 0 && (us & (1 << (l - 1))) != 0 { 1 } else { 0 };
+        (2 * l + half) as usize
+    }
+
+    /// Lower bound of bucket `i` in microseconds: 2^l · (1 + h/2) for
+    /// i = 2l + h. `bucket_lower_us(HIST_BUCKETS)` is the top bucket's
+    /// nominal upper edge.
+    pub fn bucket_lower_us(i: usize) -> f64 {
+        let l = (i / 2) as f64;
+        let half = (i % 2) as f64;
+        (2.0f64).powf(l) * (1.0 + 0.5 * half)
+    }
+
+    /// Record one duration. Samples past the top bucket land in the last
+    /// bucket *and* bump the saturation counter.
+    pub fn record(&self, lat: Duration) {
+        self.record_ns(lat.as_nanos() as u64);
+    }
+
+    /// Record one latency in nanoseconds (the hot-loop entry point: two
+    /// relaxed `fetch_add`s and integer bit-math, nothing else).
+    pub fn record_ns(&self, ns: u64) {
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        let idx = Hist::bucket(ns);
+        if idx >= HIST_BUCKETS {
+            self.saturated.fetch_add(1, Ordering::Relaxed);
+            self.buckets[HIST_BUCKETS - 1].fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Total recorded samples (clamped records included).
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Records that overflowed the top bucket and were clamped into it.
+    pub fn saturated(&self) -> u64 {
+        self.saturated.load(Ordering::Relaxed)
+    }
+
+    /// Sum of recorded durations in seconds.
+    pub fn sum_s(&self) -> f64 {
+        self.sum_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// The q-quantile (0 < q ≤ 1) in milliseconds, or 0.0 with no samples.
+    pub fn percentile(&self, q: f64) -> f64 {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        percentile_ms(&counts, self.saturated(), q)
+    }
+
+    /// One coherent copy of the bucket counts (each bucket is read once;
+    /// concurrent records may straddle the read, as with any lock-free
+    /// snapshot).
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            saturated: self.saturated(),
+            sum_ns: self.sum_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// The q-quantile of a √2-bucket count vector in milliseconds. Returns the
+/// geometric midpoint of the bucket holding the rank — except at the top
+/// bucket when saturation occurred, where the midpoint would fabricate
+/// precision for samples that only clamped there: the bucket **lower
+/// bound** is reported instead (a floor the data actually supports).
+fn percentile_ms(counts: &[u64], saturated: u64, q: f64) -> f64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+    let mut seen = 0u64;
+    for (i, &c) in counts.iter().enumerate() {
+        seen += c;
+        if seen >= rank {
+            let lower_us = Hist::bucket_lower_us(i);
+            if i == HIST_BUCKETS - 1 && saturated > 0 {
+                return lower_us / 1_000.0;
+            }
+            return lower_us * GEO_MID / 1_000.0;
+        }
+    }
+    0.0
+}
+
+/// An owned, mergeable copy of a [`Hist`]'s state. Merging is exact bucket
+/// addition, so it is associative and commutative — per-shard histograms
+/// can be combined in any order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub buckets: Vec<u64>,
+    pub saturated: u64,
+    pub sum_ns: u64,
+}
+
+impl HistSnapshot {
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    pub fn percentile(&self, q: f64) -> f64 {
+        percentile_ms(&self.buckets, self.saturated, q)
+    }
+
+    /// Elementwise sum of two snapshots.
+    pub fn merge(&self, other: &HistSnapshot) -> HistSnapshot {
+        HistSnapshot {
+            buckets: self
+                .buckets
+                .iter()
+                .zip(&other.buckets)
+                .map(|(a, b)| a + b)
+                .collect(),
+            saturated: self.saturated + other.saturated,
+            sum_ns: self.sum_ns + other.sum_ns,
+        }
+    }
+}
+
+/// A named metrics registry. Registration is get-or-create (re-registering
+/// a name returns the existing handle); rendering walks the sorted name
+/// maps, so output is deterministic for a given state.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, (String, Arc<Counter>)>>,
+    gauges: Mutex<BTreeMap<String, (String, Arc<Gauge>)>>,
+    hists: Mutex<BTreeMap<String, (String, Arc<Hist>)>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get-or-create the counter `name`. The handle stays valid (and keeps
+    /// feeding this registry) for as long as the caller holds it.
+    pub fn counter(&self, name: &str, help: &str) -> Arc<Counter> {
+        let mut m = self.counters.lock().unwrap();
+        Arc::clone(
+            &m.entry(name.to_string())
+                .or_insert_with(|| (help.to_string(), Arc::new(Counter::default())))
+                .1,
+        )
+    }
+
+    pub fn gauge(&self, name: &str, help: &str) -> Arc<Gauge> {
+        let mut m = self.gauges.lock().unwrap();
+        Arc::clone(
+            &m.entry(name.to_string())
+                .or_insert_with(|| (help.to_string(), Arc::new(Gauge::default())))
+                .1,
+        )
+    }
+
+    pub fn hist(&self, name: &str, help: &str) -> Arc<Hist> {
+        let mut m = self.hists.lock().unwrap();
+        Arc::clone(
+            &m.entry(name.to_string())
+                .or_insert_with(|| (help.to_string(), Arc::new(Hist::default())))
+                .1,
+        )
+    }
+
+    /// Prometheus text exposition format: `# HELP`/`# TYPE` per metric,
+    /// histograms as cumulative `le` buckets (upper edges in seconds) plus
+    /// `_sum`/`_count`, and the saturation tally as a companion counter.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, (help, c)) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} counter\n"));
+            out.push_str(&format!("{name} {}\n", c.get()));
+        }
+        for (name, (help, g)) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n"));
+            out.push_str(&format!("{name} {}\n", g.get()));
+        }
+        for (name, (help, h)) in self.hists.lock().unwrap().iter() {
+            let snap = h.snapshot();
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} histogram\n"));
+            let mut cum = 0u64;
+            for (i, &c) in snap.buckets.iter().enumerate() {
+                cum += c;
+                // skip interior empty buckets to keep the dump readable;
+                // cumulative counts stay exact because `cum` carries on
+                if c == 0 && i + 1 < HIST_BUCKETS {
+                    continue;
+                }
+                if i + 1 < HIST_BUCKETS {
+                    let le = Hist::bucket_lower_us(i + 1) * 1e-6;
+                    out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cum}\n"));
+                }
+            }
+            out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {cum}\n"));
+            out.push_str(&format!("{name}_sum {}\n", snap.sum_ns as f64 / 1e9));
+            out.push_str(&format!("{name}_count {cum}\n"));
+            out.push_str(&format!(
+                "# HELP {name}_saturated_total samples clamped into the top bucket\n\
+                 # TYPE {name}_saturated_total counter\n\
+                 {name}_saturated_total {}\n",
+                snap.saturated
+            ));
+        }
+        out
+    }
+
+    /// Deterministic JSON snapshot:
+    /// `{"counters": {..}, "gauges": {..}, "hists": {name: {count,
+    /// saturated, sum_ms, p50_ms, p95_ms, p99_ms}}}`.
+    pub fn snapshot_json(&self) -> Json {
+        let mut counters = BTreeMap::new();
+        for (name, (_, c)) in self.counters.lock().unwrap().iter() {
+            counters.insert(name.clone(), Json::Num(c.get() as f64));
+        }
+        let mut gauges = BTreeMap::new();
+        for (name, (_, g)) in self.gauges.lock().unwrap().iter() {
+            gauges.insert(name.clone(), Json::Num(g.get() as f64));
+        }
+        let mut hists = BTreeMap::new();
+        for (name, (_, h)) in self.hists.lock().unwrap().iter() {
+            let snap = h.snapshot();
+            let mut o = BTreeMap::new();
+            o.insert("count".to_string(), Json::Num(snap.count() as f64));
+            o.insert("saturated".to_string(), Json::Num(snap.saturated as f64));
+            o.insert("sum_ms".to_string(), Json::Num(snap.sum_ns as f64 / 1e6));
+            o.insert("p50_ms".to_string(), Json::Num(snap.percentile(0.50)));
+            o.insert("p95_ms".to_string(), Json::Num(snap.percentile(0.95)));
+            o.insert("p99_ms".to_string(), Json::Num(snap.percentile(0.99)));
+            hists.insert(name.clone(), Json::Obj(o));
+        }
+        let mut top = BTreeMap::new();
+        top.insert("counters".to_string(), Json::Obj(counters));
+        top.insert("gauges".to_string(), Json::Obj(gauges));
+        top.insert("hists".to_string(), Json::Obj(hists));
+        Json::Obj(top)
+    }
+}
+
+/// The process-wide registry: engine-level metrics (native backend decode
+/// and prefill counters) that are not tied to one server instance.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    //! Concurrency, bucket-boundary, merge, and determinism coverage lives
+    //! in rust/tests/obs_props.rs (its own binary, so it can also own a
+    //! counting global allocator for the zero-alloc decode assertion).
+    //! These are shape checks only.
+
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let r = Registry::new();
+        let c = r.counter("x_total", "a counter");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // re-registering the same name returns the same handle
+        assert_eq!(r.counter("x_total", "a counter").get(), 5);
+        let g = r.gauge("depth", "a gauge");
+        g.set(7);
+        g.add(-3);
+        assert_eq!(g.get(), 4);
+    }
+
+    #[test]
+    fn prometheus_render_contains_all_families() {
+        let r = Registry::new();
+        r.counter("served_total", "requests").add(3);
+        r.gauge("queue_depth", "pending").set(2);
+        r.hist("lat_seconds", "latency").record(Duration::from_micros(250));
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE served_total counter"), "{text}");
+        assert!(text.contains("served_total 3"), "{text}");
+        assert!(text.contains("# TYPE queue_depth gauge"), "{text}");
+        assert!(text.contains("# TYPE lat_seconds histogram"), "{text}");
+        assert!(text.contains("lat_seconds_bucket{le=\"+Inf\"} 1"), "{text}");
+        assert!(text.contains("lat_seconds_count 1"), "{text}");
+    }
+
+    #[test]
+    fn hist_snapshot_round_trip() {
+        let h = Hist::default();
+        h.record(Duration::from_micros(10));
+        h.record(Duration::from_micros(10_000));
+        let snap = h.snapshot();
+        assert_eq!(snap.count(), 2);
+        assert_eq!(snap.saturated, 0);
+        assert!((snap.percentile(0.5) - h.percentile(0.5)).abs() < 1e-12);
+    }
+}

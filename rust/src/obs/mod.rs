@@ -1,0 +1,19 @@
+//! Unified observability layer: metrics, request tracing, rotation-quality
+//! telemetry, and leveled logging.
+//!
+//!   * [`metrics`] — named atomic counters/gauges/√2-bucket histograms in
+//!     a [`metrics::Registry`], with a Prometheus text renderer and a JSON
+//!     snapshot. Handles are resolved once and recorded through relaxed
+//!     atomics, so the decode hot loop stays lock- and allocation-free.
+//!   * [`trace`] — per-request lifecycle spans (enqueue → admit → prefill
+//!     → decode → complete) in a lock-light ring buffer.
+//!   * [`telemetry`] — the calibration-time rotation-quality report
+//!     (blockwise ℓ1 mass imbalance pre/post permutation, post-rotation
+//!     max|x| and kurtosis, per-site quantization MSE).
+//!   * [`log`] — `PERQ_LOG`-leveled stderr logging behind the crate-root
+//!     `log_error!`/`log_warn!`/`log_info!`/`log_debug!` macros.
+
+pub mod log;
+pub mod metrics;
+pub mod telemetry;
+pub mod trace;

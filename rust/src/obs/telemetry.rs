@@ -1,0 +1,296 @@
+//! Rotation-quality telemetry: the calibration-time statistics the paper's
+//! argument actually rests on, recorded instead of discarded.
+//!
+//! Three families, gathered by `Pipeline::quantize_with_engine`:
+//!   * per-layer blockwise ℓ1 **mass imbalance** before vs after the
+//!     MassDiff permutation — `max_block_mass / mass_lower_bound`, the
+//!     quantity the greedy mass-diffusion pass equalizes (1.0 = perfectly
+//!     balanced blocks);
+//!   * per-layer post-rotation **outlier shape** — max|x| and kurtosis of
+//!     the rotated calibration activations (kurtosis 3 = Gaussian; block
+//!     rotations should pull heavy-tailed activations toward it);
+//!   * per-site weight **quantization MSE** — mean squared error between
+//!     each quantized site and its float reference.
+//!
+//! The assembled [`RotationReport`] rides on `QuantizedModel`, is written
+//! beside the `.perq` artifact by `perq export` (see
+//! `deploy::telemetry_path`), and is printed by `perq models` /
+//! `perq inspect`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Rotation/permutation quality for one layer's down-projection input.
+#[derive(Clone, Debug)]
+pub struct LayerRotationStats {
+    pub layer: usize,
+    /// max blockwise ℓ1 mass under the identity ordering
+    pub pre_max_block_mass: f64,
+    /// max blockwise ℓ1 mass under the calibrated permutation
+    pub post_max_block_mass: f64,
+    /// ideal (perfectly balanced) blockwise mass — the LPT lower bound
+    pub mass_lower_bound: f64,
+    /// max |x| of the calibration activations after the R̃3 rotation
+    pub post_rot_absmax: f64,
+    /// kurtosis (m4/m2², Gaussian = 3) after the R̃3 rotation
+    pub post_rot_kurtosis: f64,
+}
+
+impl LayerRotationStats {
+    /// Imbalance ratio before permutation (≥ 1.0; 1.0 = balanced).
+    pub fn pre_imbalance(&self) -> f64 {
+        ratio(self.pre_max_block_mass, self.mass_lower_bound)
+    }
+
+    /// Imbalance ratio after permutation. MassDiff should pull this at or
+    /// below [`LayerRotationStats::pre_imbalance`], toward 1.0.
+    pub fn post_imbalance(&self) -> f64 {
+        ratio(self.post_max_block_mass, self.mass_lower_bound)
+    }
+}
+
+fn ratio(num: f64, den: f64) -> f64 {
+    if den > 0.0 { num / den } else { 1.0 }
+}
+
+/// Quantization error for one weight site.
+#[derive(Clone, Debug)]
+pub struct SiteQuantStats {
+    pub name: String,
+    /// mean((w - quantize(w))²) over the site's elements
+    pub mse: f64,
+}
+
+/// The structured calibration-telemetry report.
+#[derive(Clone, Debug, Default)]
+pub struct RotationReport {
+    pub model: String,
+    pub label: String,
+    pub r3_block: usize,
+    pub calib_tokens: usize,
+    pub layers: Vec<LayerRotationStats>,
+    pub sites: Vec<SiteQuantStats>,
+}
+
+impl RotationReport {
+    /// Mean pre/post imbalance ratio across layers: > 1.0 means the
+    /// permutation reduced the worst block's ℓ1 mass by that factor.
+    pub fn mean_mass_improvement(&self) -> f64 {
+        if self.layers.is_empty() {
+            return 1.0;
+        }
+        let s: f64 = self
+            .layers
+            .iter()
+            .map(|l| ratio(l.pre_imbalance(), l.post_imbalance()))
+            .sum();
+        s / self.layers.len() as f64
+    }
+
+    pub fn mean_site_mse(&self) -> f64 {
+        if self.sites.is_empty() {
+            return 0.0;
+        }
+        self.sites.iter().map(|s| s.mse).sum::<f64>() / self.sites.len() as f64
+    }
+
+    /// One-line summary for `perq models`.
+    pub fn summary(&self) -> String {
+        format!(
+            "telemetry: {} layers, mass imbalance {:.3}→{:.3} ({:.2}x), {} sites, mean mse {:.3e}",
+            self.layers.len(),
+            mean(self.layers.iter().map(|l| l.pre_imbalance())),
+            mean(self.layers.iter().map(|l| l.post_imbalance())),
+            self.mean_mass_improvement(),
+            self.sites.len(),
+            self.mean_site_mse(),
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("model".to_string(), Json::Str(self.model.clone()));
+        o.insert("label".to_string(), Json::Str(self.label.clone()));
+        o.insert("r3_block".to_string(), Json::Num(self.r3_block as f64));
+        o.insert("calib_tokens".to_string(), Json::Num(self.calib_tokens as f64));
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| {
+                let mut m = BTreeMap::new();
+                m.insert("layer".to_string(), Json::Num(l.layer as f64));
+                m.insert("pre_max_block_mass".to_string(), Json::Num(l.pre_max_block_mass));
+                m.insert("post_max_block_mass".to_string(), Json::Num(l.post_max_block_mass));
+                m.insert("mass_lower_bound".to_string(), Json::Num(l.mass_lower_bound));
+                m.insert("pre_imbalance".to_string(), Json::Num(l.pre_imbalance()));
+                m.insert("post_imbalance".to_string(), Json::Num(l.post_imbalance()));
+                m.insert("post_rot_absmax".to_string(), Json::Num(l.post_rot_absmax));
+                m.insert("post_rot_kurtosis".to_string(), Json::Num(l.post_rot_kurtosis));
+                Json::Obj(m)
+            })
+            .collect();
+        o.insert("layers".to_string(), Json::Arr(layers));
+        let sites = self
+            .sites
+            .iter()
+            .map(|s| {
+                let mut m = BTreeMap::new();
+                m.insert("name".to_string(), Json::Str(s.name.clone()));
+                m.insert("mse".to_string(), Json::Num(s.mse));
+                Json::Obj(m)
+            })
+            .collect();
+        o.insert("sites".to_string(), Json::Arr(sites));
+        o.insert(
+            "mean_mass_improvement".to_string(),
+            Json::Num(self.mean_mass_improvement()),
+        );
+        Json::Obj(o)
+    }
+
+    pub fn from_json(j: &Json) -> Result<RotationReport> {
+        let str_of = |k: &str| -> String {
+            j.get(k).and_then(|v| v.as_str()).unwrap_or_default().to_string()
+        };
+        let num_of = |k: &str| j.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+        let mut layers = Vec::new();
+        for l in j.get("layers").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+            let f = |k: &str| l.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+            layers.push(LayerRotationStats {
+                layer: l.get("layer").and_then(|v| v.as_usize()).unwrap_or(0),
+                pre_max_block_mass: f("pre_max_block_mass"),
+                post_max_block_mass: f("post_max_block_mass"),
+                mass_lower_bound: f("mass_lower_bound"),
+                post_rot_absmax: f("post_rot_absmax"),
+                post_rot_kurtosis: f("post_rot_kurtosis"),
+            });
+        }
+        let mut sites = Vec::new();
+        for s in j.get("sites").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+            sites.push(SiteQuantStats {
+                name: s.get("name").and_then(|v| v.as_str()).unwrap_or_default().to_string(),
+                mse: s.get("mse").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            });
+        }
+        Ok(RotationReport {
+            model: str_of("model"),
+            label: str_of("label"),
+            r3_block: num_of("r3_block"),
+            calib_tokens: num_of("calib_tokens"),
+            layers,
+            sites,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, json::dump(&self.to_json()))
+            .with_context(|| format!("writing telemetry report {path:?}"))
+    }
+
+    pub fn load(path: &Path) -> Result<RotationReport> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading telemetry report {path:?}"))?;
+        RotationReport::from_json(&json::parse(&text)?)
+    }
+}
+
+fn mean(it: impl Iterator<Item = f64>) -> f64 {
+    let (mut s, mut n) = (0.0f64, 0usize);
+    for x in it {
+        s += x;
+        n += 1;
+    }
+    if n > 0 { s / n as f64 } else { 0.0 }
+}
+
+/// max|x| and kurtosis (m4/m2², Gaussian = 3) of a sample. Kurtosis is
+/// 0.0 for degenerate samples (fewer than 2 values or zero variance).
+pub fn absmax_and_kurtosis(xs: &[f32]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let n = xs.len() as f64;
+    let mut absmax = 0.0f64;
+    let mut sum = 0.0f64;
+    for &x in xs {
+        absmax = absmax.max((x as f64).abs());
+        sum += x as f64;
+    }
+    let mu = sum / n;
+    let (mut m2, mut m4) = (0.0f64, 0.0f64);
+    for &x in xs {
+        let d = x as f64 - mu;
+        let d2 = d * d;
+        m2 += d2;
+        m4 += d2 * d2;
+    }
+    m2 /= n;
+    m4 /= n;
+    let kurt = if xs.len() >= 2 && m2 > 0.0 { m4 / (m2 * m2) } else { 0.0 };
+    (absmax, kurt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> RotationReport {
+        RotationReport {
+            model: "m".to_string(),
+            label: "massdiff+r3".to_string(),
+            r3_block: 16,
+            calib_tokens: 128,
+            layers: vec![LayerRotationStats {
+                layer: 0,
+                pre_max_block_mass: 2.0,
+                post_max_block_mass: 1.2,
+                mass_lower_bound: 1.0,
+                post_rot_absmax: 0.7,
+                post_rot_kurtosis: 3.1,
+            }],
+            sites: vec![SiteQuantStats { name: "l0.down".to_string(), mse: 1.5e-4 }],
+        }
+    }
+
+    #[test]
+    fn imbalance_ratios_and_improvement() {
+        let r = report();
+        let l = &r.layers[0];
+        assert!((l.pre_imbalance() - 2.0).abs() < 1e-12);
+        assert!((l.post_imbalance() - 1.2).abs() < 1e-12);
+        assert!((r.mean_mass_improvement() - 2.0 / 1.2).abs() < 1e-12);
+        assert!(r.summary().contains("1 layers"), "{}", r.summary());
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let r = report();
+        let dumped = json::dump(&r.to_json());
+        let back = RotationReport::from_json(&json::parse(&dumped).unwrap()).unwrap();
+        assert_eq!(back.model, "m");
+        assert_eq!(back.r3_block, 16);
+        assert_eq!(back.layers.len(), 1);
+        assert!((back.layers[0].post_rot_kurtosis - 3.1).abs() < 1e-12);
+        assert!((back.sites[0].mse - 1.5e-4).abs() < 1e-18);
+        // derived fields are recomputed, not trusted from the file
+        assert!((back.mean_mass_improvement() - r.mean_mass_improvement()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kurtosis_of_known_shapes() {
+        // constant sample: zero variance → 0.0 sentinel
+        assert_eq!(absmax_and_kurtosis(&[2.0; 8]).1, 0.0);
+        // symmetric two-point mass {-1, +1}: kurtosis = 1 (sub-Gaussian)
+        let (amax, k) = absmax_and_kurtosis(&[1.0, -1.0, 1.0, -1.0]);
+        assert_eq!(amax, 1.0);
+        assert!((k - 1.0).abs() < 1e-12, "{k}");
+        // one huge outlier among small values → heavy-tailed, k >> 3
+        let mut xs = vec![0.01f32; 63];
+        xs.push(10.0);
+        assert!(absmax_and_kurtosis(&xs).1 > 10.0);
+    }
+}

@@ -1,0 +1,139 @@
+//! Request-lifecycle tracing: per-request IDs with span timings through
+//! enqueue → admit → prefill → per-token decode → complete.
+//!
+//! A request's span stamps travel *with* the request (plain `Instant`
+//! fields on the queue entry — no shared state while the request is in
+//! flight), and the finished [`RequestTrace`] is pushed into a lock-light
+//! ring buffer: an atomic cursor picks the slot, and each slot has its own
+//! mutex, so concurrent completions from different replicas contend only
+//! when they hash to the same slot. [`Tracer::recent_traces`] drains a
+//! coherent copy for `perq serve --metrics-out` and the examples.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+/// The completed lifecycle of one request, in span durations. Per-token
+/// decode timing is not stored per request (that would allocate in the
+/// hot loop) — `decode_steps` plus the server's decode-step histogram
+/// recover the per-token distribution.
+#[derive(Clone, Debug)]
+pub struct RequestTrace {
+    /// Monotone per-server request ID, assigned at submit time.
+    pub id: u64,
+    /// "score" or "generate".
+    pub kind: &'static str,
+    /// enqueue → admitted by a replica
+    pub queued_ms: f64,
+    /// admitted → prefill complete (first token sampled, for generate)
+    pub prefill_ms: f64,
+    /// prefill complete → generation complete (0 for score requests)
+    pub decode_ms: f64,
+    /// enqueue → response sent
+    pub total_ms: f64,
+    /// decode steps this request rode (tokens after the first)
+    pub decode_steps: u64,
+    /// false when the request was dropped by a backend error
+    pub ok: bool,
+}
+
+impl RequestTrace {
+    pub fn to_json(&self) -> Json {
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("id".to_string(), Json::Num(self.id as f64));
+        o.insert("kind".to_string(), Json::Str(self.kind.to_string()));
+        o.insert("queued_ms".to_string(), Json::Num(self.queued_ms));
+        o.insert("prefill_ms".to_string(), Json::Num(self.prefill_ms));
+        o.insert("decode_ms".to_string(), Json::Num(self.decode_ms));
+        o.insert("total_ms".to_string(), Json::Num(self.total_ms));
+        o.insert("decode_steps".to_string(), Json::Num(self.decode_steps as f64));
+        o.insert("ok".to_string(), Json::Bool(self.ok));
+        Json::Obj(o)
+    }
+}
+
+/// Fixed-capacity ring of completed request traces.
+pub struct Tracer {
+    next_id: AtomicU64,
+    cursor: AtomicU64,
+    slots: Vec<Mutex<Option<RequestTrace>>>,
+}
+
+impl Tracer {
+    pub fn new(capacity: usize) -> Tracer {
+        let capacity = capacity.max(1);
+        Tracer {
+            next_id: AtomicU64::new(1),
+            cursor: AtomicU64::new(0),
+            slots: (0..capacity).map(|_| Mutex::new(None)).collect(),
+        }
+    }
+
+    /// Allocate the next request ID (1-based, monotone per tracer).
+    pub fn next_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Push a completed trace, evicting the oldest once full.
+    pub fn record(&self, trace: RequestTrace) {
+        let i = (self.cursor.fetch_add(1, Ordering::Relaxed) % self.slots.len() as u64) as usize;
+        *self.slots[i].lock().unwrap() = Some(trace);
+    }
+
+    /// Completed traces currently in the ring, oldest first (by request
+    /// ID — completion order and ID order can differ under batching).
+    pub fn recent_traces(&self) -> Vec<RequestTrace> {
+        let mut out: Vec<RequestTrace> = self
+            .slots
+            .iter()
+            .filter_map(|s| s.lock().unwrap().clone())
+            .collect();
+        out.sort_by_key(|t| t.id);
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.recent_traces().iter().map(|t| t.to_json()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(id: u64) -> RequestTrace {
+        RequestTrace {
+            id,
+            kind: "score",
+            queued_ms: 0.1,
+            prefill_ms: 0.2,
+            decode_ms: 0.0,
+            total_ms: 0.3,
+            decode_steps: 0,
+            ok: true,
+        }
+    }
+
+    #[test]
+    fn ring_keeps_newest_and_orders_by_id() {
+        let tr = Tracer::new(4);
+        for id in [3u64, 1, 2, 5, 4, 6] {
+            tr.record(t(id));
+        }
+        let got: Vec<u64> = tr.recent_traces().iter().map(|x| x.id).collect();
+        // capacity 4: the first two records (ids 3, 1) were evicted
+        assert_eq!(got, vec![2, 4, 5, 6]);
+    }
+
+    #[test]
+    fn ids_are_monotone_and_json_dumps() {
+        let tr = Tracer::new(2);
+        assert_eq!(tr.next_id(), 1);
+        assert_eq!(tr.next_id(), 2);
+        tr.record(t(1));
+        let j = crate::util::json::dump(&tr.to_json());
+        assert!(j.contains("\"kind\":\"score\""), "{j}");
+        assert!(j.contains("\"ok\":true"), "{j}");
+    }
+}

@@ -1,8 +1,14 @@
 //! Micro bench harness (criterion is unavailable offline): warmup + timed
-//! iterations with mean/min/max, plus fixed-width table printing used by
-//! every table/figure bench binary.
+//! iterations with mean/min/max, plus fixed-width table printing and the
+//! shared `BENCH_*.json` trajectory-row writer used by every table/figure
+//! bench binary and the CLI bench paths.
 
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::OnceLock;
 use std::time::Instant;
+
+use crate::util::json::{self, Json};
 
 #[derive(Debug, Clone)]
 pub struct Timing {
@@ -93,6 +99,68 @@ pub fn append_trajectory(path: &std::path::Path, obj: &str) -> std::io::Result<(
     std::fs::write(path, out)
 }
 
+/// `git describe --always --dirty` of the working tree, resolved once per
+/// process. `None` outside a git checkout (or without a git binary) — the
+/// provenance key is simply omitted then.
+pub fn git_describe() -> Option<String> {
+    static GIT: OnceLock<Option<String>> = OnceLock::new();
+    GIT.get_or_init(|| {
+        let out = std::process::Command::new("git")
+            .args(["describe", "--always", "--dirty"])
+            .output()
+            .ok()?;
+        if !out.status.success() {
+            return None;
+        }
+        let s = String::from_utf8_lossy(&out.stdout).trim().to_string();
+        if s.is_empty() { None } else { Some(s) }
+    })
+    .clone()
+}
+
+/// One `BENCH_*.json` record under construction. Every row stamps shared
+/// provenance — the bench name, a unix-epoch `ts`, and the working tree's
+/// `git describe` — so trajectory entries are comparable across runs. The
+/// single append path keeps all bench writers (CLI + bench binaries) on
+/// the same serializer, so labels with quotes stay valid JSON.
+pub struct TrajectoryRow {
+    obj: BTreeMap<String, Json>,
+}
+
+impl TrajectoryRow {
+    pub fn new(bench: &str) -> TrajectoryRow {
+        let mut obj = BTreeMap::new();
+        obj.insert("bench".to_string(), Json::Str(bench.to_string()));
+        let ts = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        obj.insert("ts".to_string(), Json::Num(ts as f64));
+        if let Some(desc) = git_describe() {
+            obj.insert("git".to_string(), Json::Str(desc));
+        }
+        TrajectoryRow { obj }
+    }
+
+    pub fn str_field(mut self, k: &str, v: &str) -> TrajectoryRow {
+        self.obj.insert(k.to_string(), Json::Str(v.to_string()));
+        self
+    }
+
+    pub fn num_field(mut self, k: &str, v: f64) -> TrajectoryRow {
+        self.obj.insert(k.to_string(), Json::Num(v));
+        self
+    }
+
+    pub fn to_json_string(&self) -> String {
+        json::dump(&Json::Obj(self.obj.clone()))
+    }
+
+    pub fn append_to(&self, path: &Path) -> std::io::Result<()> {
+        append_trajectory(path, &self.to_json_string())
+    }
+}
+
 /// Format a count the way the paper does (e.g. 205.51M, 516.10K).
 pub fn fmt_count(n: usize) -> String {
     let x = n as f64;
@@ -149,6 +217,25 @@ mod tests {
         let arr = parsed.as_arr().unwrap();
         assert_eq!(arr.len(), 2);
         assert_eq!(arr[1].get("run").and_then(|v| v.as_usize()), Some(2));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn trajectory_row_stamps_provenance_and_appends() {
+        let path = std::env::temp_dir().join("perq_bench_row_test.json");
+        let _ = std::fs::remove_file(&path);
+        TrajectoryRow::new("unit")
+            .str_field("label", "a\"b")
+            .num_field("value", 2.5)
+            .append_to(&path)
+            .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        let row = &parsed.as_arr().unwrap()[0];
+        assert_eq!(row.get("bench").and_then(|v| v.as_str()), Some("unit"));
+        assert_eq!(row.get("label").and_then(|v| v.as_str()), Some("a\"b"));
+        assert_eq!(row.get("value").and_then(|v| v.as_f64()), Some(2.5));
+        assert!(row.get("ts").and_then(|v| v.as_f64()).unwrap_or(0.0) > 0.0);
         let _ = std::fs::remove_file(&path);
     }
 
