@@ -406,6 +406,70 @@ fn bench_decode() -> anyhow::Result<()> {
         if let Err(e) = row.append_to(&traj) {
             println!("  (could not write {traj:?}: {e})");
         }
+
+        // -- degraded mode: 1 of 2 replicas killed mid-stream ------------
+        // a deterministic panic poisons one replica's next engine step;
+        // the in-flight score batch is requeued + retried and the replica
+        // respawns, so every request still completes. Recorded: time until
+        // the fleet answers again and the post-recovery throughput.
+        if block == 32 {
+            use perq::backend::native::fault::{self, FaultPlan};
+            use perq::coordinator::server::{InferenceServer, ServeOptions};
+
+            let opts = ServeOptions::new(std::time::Duration::from_millis(1), 2);
+            let server = InferenceServer::start_native(&cfg, &qm.ws, &qm.graph, opts)?;
+            let window =
+                |s: usize| -> Vec<i32> { (0..t + 1).map(|i| ((5 * s + i) % v) as i32).collect() };
+            let n = 16usize;
+            let t0 = std::time::Instant::now();
+            let rxs: Vec<_> =
+                (0..n).map(|s| server.submit(window(s))).collect::<anyhow::Result<_>>()?;
+            for rx in rxs {
+                rx.recv()?
+                    .map_err(|e| anyhow::anyhow!("healthy-phase request failed: {e}"))?;
+            }
+            let healthy_tok_s = (n * t) as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+
+            fault::arm(FaultPlan { panic_step: Some(1), ..FaultPlan::default() });
+            let t1 = std::time::Instant::now();
+            let rxs: Vec<_> =
+                (0..n).map(|s| server.submit(window(s))).collect::<anyhow::Result<_>>()?;
+            let mut recovery_ms = f64::NAN;
+            for rx in rxs {
+                rx.recv()?
+                    .map_err(|e| anyhow::anyhow!("degraded-phase request failed: {e}"))?;
+                if recovery_ms.is_nan() {
+                    // first completion after the poisoning = the fleet is
+                    // answering again
+                    recovery_ms = t1.elapsed().as_secs_f64() * 1e3;
+                }
+            }
+            let post_s = t1.elapsed().as_secs_f64();
+            fault::disarm();
+            let post_tok_s = (n * t) as f64 / post_s.max(1e-9);
+            let snap = server.snapshot();
+            server.shutdown();
+            println!(
+                "  int4 b={block:<3} degraded (1/2 replicas panicked): healthy \
+                 {healthy_tok_s:.0} tok/s → recovered in {recovery_ms:.1}ms, \
+                 post-recovery {post_tok_s:.0} tok/s ({} failure(s), {} retries)",
+                snap.worker_failures, snap.retries
+            );
+            let row = TrajectoryRow::new("decode")
+                .str_field("format", "int4")
+                .str_field("mode", "degraded")
+                .num_field("block", block as f64)
+                .num_field("replicas", 2.0)
+                .num_field("requests", n as f64)
+                .num_field("healthy_tok_per_s", healthy_tok_s)
+                .num_field("recovery_ms", recovery_ms)
+                .num_field("post_recovery_tok_per_s", post_tok_s)
+                .num_field("worker_failures", snap.worker_failures as f64)
+                .num_field("retries", snap.retries as f64);
+            if let Err(e) = row.append_to(&traj) {
+                println!("  (could not write {traj:?}: {e})");
+            }
+        }
     }
     println!("  trajectory: {}", traj.display());
     Ok(())

@@ -17,7 +17,7 @@
 
 use anyhow::Result;
 use perq::coordinator::presets;
-use perq::coordinator::server::resolve_max_wait;
+use perq::coordinator::server::{resolve_max_wait, ServeOptions};
 use perq::data::corpus::{token_stream, Split};
 use perq::prelude::*;
 use perq::util::cli;
@@ -94,7 +94,7 @@ fn main() -> Result<()> {
 
     // path 2: the continuous-batching server — several concurrent
     // requests (the shared prompt plus varied peers) ride one live batch
-    let server = dm.serve(resolve_max_wait(None), workers)?;
+    let server = dm.serve(ServeOptions::new(resolve_max_wait(None), workers))?;
     let rx_main = server.submit_generate(prompt.clone(), max_new)?;
     let peers: Vec<_> = (0..3usize)
         .filter_map(|i| {
@@ -109,7 +109,9 @@ fn main() -> Result<()> {
             }
         })
         .collect();
-    let served = rx_main.recv()?;
+    // double unwrap: channel intact AND the request actually completed
+    // (no cap/deadline configured, so nothing may be rejected here)
+    let served = rx_main.recv()??;
     for rx in peers {
         let _ = rx.recv();
     }

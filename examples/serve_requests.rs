@@ -30,7 +30,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 use perq::coordinator::pipeline::{Pipeline, QuantizedModel};
 use perq::coordinator::presets;
-use perq::coordinator::server::InferenceServer;
+use perq::coordinator::server::{InferenceServer, ServeOptions};
 use perq::data::corpus::{token_stream, Split};
 use perq::data::rng::Rng;
 use perq::hadamard::opcount;
@@ -51,14 +51,18 @@ fn main() -> Result<()> {
         .and_then(|s| s.parse().ok())
         .unwrap_or(64);
     // pool sizing must precede the first kernel call (lazy global spawn)
-    if let Some(n) = args.get("threads").and_then(|s| s.parse::<usize>().ok()) {
-        perq::util::pool::set_default_parallelism(n);
+    if let Some(raw) = args.get("threads") {
+        match raw.parse::<usize>() {
+            Ok(n) => perq::util::pool::set_default_parallelism(n),
+            Err(_) => perq::log_warn!(
+                "--threads {raw:?} is not a lane count — using the default pool size"
+            ),
+        }
     }
-    let num_workers = args
-        .get("workers")
-        .and_then(|s| s.parse::<usize>().ok())
+    let num_workers = parse_count(args.get("workers"), "--workers")
         .or_else(|| {
-            std::env::var("PERQ_SERVER_WORKERS").ok().and_then(|s| s.parse().ok())
+            let env = std::env::var("PERQ_SERVER_WORKERS").ok();
+            parse_count(env.as_deref(), "PERQ_SERVER_WORKERS")
         })
         .unwrap_or(1)
         .max(1);
@@ -113,9 +117,19 @@ fn main() -> Result<()> {
         // pjrt keeps device-resident weights, native keeps pooled scratch)
         // --max-wait-ms > PERQ_MAX_WAIT_MS > shared default
         let wait = perq::coordinator::server::resolve_max_wait(
-            args.get("max-wait-ms").and_then(|s| s.parse::<u64>().ok()),
+            args.get("max-wait-ms").and_then(|s| match s.parse::<u64>() {
+                Ok(v) => Some(v),
+                Err(_) => {
+                    perq::log_warn!(
+                        "--max-wait-ms {s:?} is not a millisecond count — \
+                         using PERQ_MAX_WAIT_MS / the default"
+                    );
+                    None
+                }
+            }),
         );
-        let server = start_server(&engine, &bundle, &qm, num_workers, wait)?;
+        let server =
+            start_server(&engine, &bundle, &qm, ServeOptions::new(wait, num_workers))?;
 
         // request stream: random windows of the test split, random gaps
         let toks = token_stream(Source::Wiki, Split::Test, 1 << 15);
@@ -133,7 +147,10 @@ fn main() -> Result<()> {
         let mut lats: Vec<f64> = Vec::new();
         let mut nll = 0.0;
         for rx in rxs {
-            let resp = rx.recv()?;
+            // outer ? = channel intact; inner ? = request actually served
+            // (no admission cap or deadline is set here, so every request
+            // must complete)
+            let resp = rx.recv()??;
             lats.push(resp.latency.as_secs_f64() * 1e3);
             nll += resp.nll;
         }
@@ -190,8 +207,22 @@ fn main() -> Result<()> {
     Ok(())
 }
 
+/// Parse a worker count, warning (instead of silently ignoring) when the
+/// value does not parse — a mistyped `--workers` should not quietly serve
+/// on one replica.
+fn parse_count(raw: Option<&str>, what: &str) -> Option<usize> {
+    let raw = raw?;
+    match raw.parse::<usize>() {
+        Ok(n) => Some(n),
+        Err(_) => {
+            perq::log_warn!("{what}={raw:?} is not a worker count — ignoring it");
+            None
+        }
+    }
+}
+
 fn start_server(engine: &Engine, bundle: &ModelBundle, qm: &QuantizedModel,
-                num_workers: usize, wait: Duration) -> Result<InferenceServer> {
+                opts: ServeOptions) -> Result<InferenceServer> {
     match engine.backend() {
         BackendKind::Native => {
             // quantize-once / serve-many: round-trip through the versioned
@@ -202,7 +233,8 @@ fn start_server(engine: &Engine, bundle: &ModelBundle, qm: &QuantizedModel,
             qm.save(&path)?;
             let t0 = Instant::now();
             let dm = perq::deploy::DeployedModel::load(&path)?;
-            let server = InferenceServer::start_deployed(&dm, wait, num_workers)?;
+            let num_workers = opts.num_workers;
+            let server = InferenceServer::start_deployed(&dm, opts)?;
             println!(
                 "    .perq artifact: {:.1} KiB, load + {num_workers} replica(s) \
                  ready in {:.1}ms (no calibration)",
@@ -211,22 +243,22 @@ fn start_server(engine: &Engine, bundle: &ModelBundle, qm: &QuantizedModel,
             );
             Ok(server)
         }
-        BackendKind::Pjrt => start_pjrt_server(engine, bundle, qm, wait, num_workers),
+        BackendKind::Pjrt => start_pjrt_server(engine, bundle, qm, opts),
     }
 }
 
 #[cfg(feature = "pjrt")]
 fn start_pjrt_server(engine: &Engine, bundle: &ModelBundle, qm: &QuantizedModel,
-                     wait: Duration, num_workers: usize) -> Result<InferenceServer> {
+                     opts: ServeOptions) -> Result<InferenceServer> {
     let artifact = engine
         .ctx()
         .model_dir(&bundle.name)
         .join(format!("{}.hlo.txt", qm.eval_tag));
-    InferenceServer::start(artifact, &bundle.cfg, &qm.ws, qm.extras.clone(), wait, num_workers)
+    InferenceServer::start(artifact, &bundle.cfg, &qm.ws, qm.extras.clone(), opts)
 }
 
 #[cfg(not(feature = "pjrt"))]
 fn start_pjrt_server(_engine: &Engine, _bundle: &ModelBundle, _qm: &QuantizedModel,
-                     _wait: Duration, _num_workers: usize) -> Result<InferenceServer> {
+                     _opts: ServeOptions) -> Result<InferenceServer> {
     anyhow::bail!("the pjrt backend is not compiled in (rebuild with `--features pjrt`)")
 }

@@ -23,6 +23,9 @@ pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
 use anyhow::{bail, ensure, Result};
 
 use crate::hadamard::{self, opcount, BlockRotator};
@@ -152,6 +155,15 @@ pub trait ExecBackend {
     fn supports_decode(&self) -> bool {
         true
     }
+
+    /// Install (or clear) a cooperative step-interrupt probe. When the
+    /// flag reads `true` mid-step, the backend abandons the step with an
+    /// error at its next cancellation point instead of finishing the full
+    /// forward pass — the server's drain-timeout abort uses this so a
+    /// slow or wedged engine step cannot stall shutdown. The check must
+    /// be cheap (a relaxed atomic load on the hot path); backends whose
+    /// steps are short may ignore it entirely (the default is a no-op).
+    fn set_step_interrupt(&mut self, _interrupt: Option<Arc<AtomicBool>>) {}
 
     /// Slot count of a live session.
     fn session_batch(&self, sid: SessionId) -> Result<usize>;

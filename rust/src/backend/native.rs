@@ -48,6 +48,7 @@
 //! bit-identical cache contents — the decode-parity contract of
 //! rust/tests/decode_parity.rs.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use anyhow::{anyhow, bail, ensure, Result};
@@ -156,6 +157,164 @@ pub struct NativeBackend {
     tok_scratch: Vec<i32>,
     slot_seen: Vec<bool>,
     obs: EngineObs,
+    /// cooperative step-interrupt probe (`ExecBackend::set_step_interrupt`):
+    /// checked once per layer in `run_rows` with a relaxed load, so the
+    /// zero-alloc decode contract holds with cancellation enabled
+    interrupt: Option<Arc<AtomicBool>>,
+}
+
+/// Deterministic fault injection for the engine step path — the test-only
+/// harness behind `PERQ_FAULT` that the fail-safe serving suite
+/// (rust/tests/failsafe.rs) and the CI fault leg drive to prove the
+/// completion contract.
+///
+/// Spec grammar (comma-separated clauses, unknown clauses are warned and
+/// ignored):
+///   * `panic_step:N`    — panic at exactly the N-th engine step
+///   * `fail_step:N`     — return an error at exactly the N-th step
+///   * `slow_step:N:MS`  — sleep MS milliseconds on every step ≥ N
+///
+/// Steps are counted process-wide across all backends from the moment the
+/// plan is armed ([`arm`] resets the counter), which keeps injection
+/// deterministic for single-replica tests and merely *eventual* for
+/// multi-replica ones (some step hits N). When disarmed — the normal
+/// state — [`on_step`] is a single relaxed atomic load.
+pub mod fault {
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::sync::{Mutex, Once};
+
+    use anyhow::{bail, Result};
+
+    /// One armed injection plan (see the module docs for the grammar).
+    #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+    pub struct FaultPlan {
+        /// panic at exactly this (1-based) engine step
+        pub panic_step: Option<u64>,
+        /// return an engine error at exactly this step
+        pub fail_step: Option<u64>,
+        /// (from, ms): sleep `ms` on every step ≥ `from`
+        pub slow_step: Option<(u64, u64)>,
+    }
+
+    impl FaultPlan {
+        pub fn is_empty(&self) -> bool {
+            *self == FaultPlan::default()
+        }
+    }
+
+    static ACTIVE: AtomicBool = AtomicBool::new(false);
+    static STEP: AtomicU64 = AtomicU64::new(0);
+    static PLAN: Mutex<FaultPlan> =
+        Mutex::new(FaultPlan { panic_step: None, fail_step: None, slow_step: None });
+    static ENV_ONCE: Once = Once::new();
+
+    /// Parse a `PERQ_FAULT` spec. Returns the plan plus every clause that
+    /// failed to parse (callers log those — a typo must not silently
+    /// disable an intended fault).
+    pub fn parse(spec: &str) -> (FaultPlan, Vec<String>) {
+        let mut plan = FaultPlan::default();
+        let mut rejected = Vec::new();
+        for clause in spec.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            let mut parts = clause.split(':');
+            let parsed = match parts.next() {
+                Some("panic_step") => {
+                    match (parts.next().and_then(|n| n.parse::<u64>().ok()), parts.next()) {
+                        (Some(n), None) if n >= 1 => {
+                            plan.panic_step = Some(n);
+                            true
+                        }
+                        _ => false,
+                    }
+                }
+                Some("fail_step") => {
+                    match (parts.next().and_then(|n| n.parse::<u64>().ok()), parts.next()) {
+                        (Some(n), None) if n >= 1 => {
+                            plan.fail_step = Some(n);
+                            true
+                        }
+                        _ => false,
+                    }
+                }
+                Some("slow_step") => {
+                    let from = parts.next().and_then(|n| n.parse::<u64>().ok());
+                    let ms = parts.next().and_then(|n| n.parse::<u64>().ok());
+                    match (from, ms, parts.next()) {
+                        (Some(from), Some(ms), None) if from >= 1 => {
+                            plan.slow_step = Some((from, ms));
+                            true
+                        }
+                        _ => false,
+                    }
+                }
+                _ => false,
+            };
+            if !parsed {
+                rejected.push(clause.to_string());
+            }
+        }
+        (plan, rejected)
+    }
+
+    /// Arm `plan`, resetting the step counter. Process-global: tests that
+    /// arm faults must serialize against each other.
+    pub fn arm(plan: FaultPlan) {
+        *PLAN.lock().unwrap() = plan;
+        STEP.store(0, Ordering::SeqCst);
+        ACTIVE.store(!plan.is_empty(), Ordering::SeqCst);
+    }
+
+    /// Disarm injection (the hot path returns to one relaxed load).
+    pub fn disarm() {
+        ACTIVE.store(false, Ordering::SeqCst);
+        *PLAN.lock().unwrap() = FaultPlan::default();
+    }
+
+    /// Arm from `PERQ_FAULT` once per process (backend construction calls
+    /// this; explicit [`arm`] in tests takes precedence afterwards).
+    pub fn load_env_once() {
+        ENV_ONCE.call_once(|| {
+            if let Ok(spec) = std::env::var("PERQ_FAULT") {
+                let (plan, rejected) = parse(&spec);
+                for clause in rejected {
+                    crate::log_warn!(
+                        "PERQ_FAULT: ignoring unparsable clause {clause:?} \
+                         (grammar: panic_step:N, fail_step:N, slow_step:N:MS)"
+                    );
+                }
+                if !plan.is_empty() {
+                    crate::log_warn!("PERQ_FAULT armed: {plan:?}");
+                    arm(plan);
+                }
+            }
+        });
+    }
+
+    /// The engine-step hook: called once per `run_rows` invocation.
+    #[inline]
+    pub fn on_step() -> Result<()> {
+        if !ACTIVE.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        step_armed()
+    }
+
+    #[cold]
+    fn step_armed() -> Result<()> {
+        let plan = *PLAN.lock().unwrap();
+        let n = STEP.fetch_add(1, Ordering::SeqCst) + 1;
+        if let Some((from, ms)) = plan.slow_step {
+            if n >= from {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+            }
+        }
+        if plan.fail_step == Some(n) {
+            bail!("PERQ_FAULT: injected engine failure at step {n}");
+        }
+        if plan.panic_step == Some(n) {
+            panic!("PERQ_FAULT: injected panic at engine step {n}");
+        }
+        Ok(())
+    }
 }
 
 /// `PERQ_PACKED=0` (or `off`) forces the f32 fake-quant path even when
@@ -171,6 +330,7 @@ pub fn packed_serving_enabled() -> bool {
 
 impl NativeBackend {
     pub fn new(cfg: ModelConfig, ws: WeightSet, graph: ForwardGraph) -> Result<NativeBackend> {
+        fault::load_env_once();
         let mut ws = ws;
         let (rot3, format) = match &graph {
             ForwardGraph::Fp => (None, Format::None),
@@ -270,6 +430,7 @@ impl NativeBackend {
             tok_scratch: Vec::new(),
             slot_seen: Vec::new(),
             obs: EngineObs::resolve(),
+            interrupt: None,
         })
     }
 
@@ -365,6 +526,9 @@ impl NativeBackend {
     /// came from the pool; decode gives it back, scoring moves it out.
     fn run_rows(&mut self, sess: &mut Session, slots: &[usize], n_new: usize,
                 tokens: &[i32], mut caps: Option<&mut Captures>) -> Result<Mat> {
+        // fault-injection hook (one relaxed load when disarmed) — every
+        // engine step (prefill, decode, score) passes through here
+        fault::on_step()?;
         let (d, f, heads) = (self.cfg.d_model, self.cfg.d_ffn, self.cfg.n_heads);
         let (n_layers, vocab) = (self.cfg.n_layers, self.cfg.vocab);
         let hd = d / heads;
@@ -432,6 +596,14 @@ impl NativeBackend {
         let mut vbuf = self.pool.take(sess.kv.cap * d);
 
         for l in 0..n_layers {
+            // cooperative cancellation point: a relaxed load per layer —
+            // cheap enough for the zero-alloc decode contract, frequent
+            // enough that a drain abort never waits on a full forward pass
+            if let Some(flag) = &self.interrupt {
+                if flag.load(Ordering::Relaxed) {
+                    bail!("engine step interrupted");
+                }
+            }
             // -- attention half ------------------------------------------
             rmsnorm_rows(&x, &self.ws.get(&self.names[l].n1).data, &mut h);
             if let Some(c) = caps.as_deref_mut() {
@@ -583,6 +755,10 @@ impl ExecBackend for NativeBackend {
     /// `PERQ_KV`, so served NLLs match `score`/eval bit-for-bit.
     fn begin_scoring(&mut self, batch: usize) -> Result<SessionId> {
         self.begin_with_mode(batch, KvMode::F32)
+    }
+
+    fn set_step_interrupt(&mut self, interrupt: Option<Arc<AtomicBool>>) {
+        self.interrupt = interrupt;
     }
 
     fn session_batch(&self, sid: SessionId) -> Result<usize> {
@@ -991,6 +1167,25 @@ mod tests {
         be.end(sid).unwrap();
         assert!(be.slot_len(sid, 0).is_err(), "ended session is gone");
         assert!(be.end(sid).is_err());
+    }
+
+    #[test]
+    fn fault_spec_parses_and_rejects_junk() {
+        let (plan, bad) = fault::parse("panic_step:3, slow_step:2:15");
+        assert_eq!(plan.panic_step, Some(3));
+        assert_eq!(plan.slow_step, Some((2, 15)));
+        assert_eq!(plan.fail_step, None);
+        assert!(bad.is_empty(), "{bad:?}");
+        let (plan, bad) = fault::parse("fail_step:1,panic_step:zero,bogus:4,slow_step:1");
+        assert_eq!(plan.fail_step, Some(1));
+        assert_eq!(plan.panic_step, None, "unparsable clause must not arm");
+        assert_eq!(bad, vec!["panic_step:zero", "bogus:4", "slow_step:1"]);
+        let (plan, bad) = fault::parse("");
+        assert!(plan.is_empty() && bad.is_empty());
+        // step 0 never fires (steps are 1-based) — reject it at parse time
+        let (plan, bad) = fault::parse("panic_step:0");
+        assert!(plan.is_empty());
+        assert_eq!(bad.len(), 1);
     }
 
     #[test]

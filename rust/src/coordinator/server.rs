@@ -9,35 +9,53 @@
 //! Design (vLLM-style, scaled to this testbed):
 //!   * clients submit [`ScoreRequest`]s (token windows → NLL) or
 //!     [`GenerateRequest`]s (prompt + `max_new_tokens` → greedy tokens)
-//!     and receive responses through oneshot channels;
+//!     and receive `ServeResult` responses through oneshot channels;
 //!   * each of the `num_workers` replicas owns a backend *session* with
 //!     `cfg.batch` attention-state slots. Requests join and leave the live
 //!     batch at **step granularity**: score windows prefill free slots and
 //!     release them immediately; generation requests prefill their prompt
 //!     into a slot and then ride the shared `decode_step` until done,
-//!     while new arrivals backfill freed slots between steps. There is no
-//!     fixed-size batch assembly and no tail-padding filler — a partial
-//!     step simply runs fewer rows (the pjrt adapter hides its static
-//!     graph shape internally);
+//!     while new arrivals backfill freed slots between steps;
 //!   * each worker constructs its own backend *on its replica thread* via
 //!     a shared `Send + Sync` factory (PJRT handles are `Rc`-based and
-//!     thread-confined; the native backend keeps pooled scratch + session
-//!     arenas warm the same way). Scoring and sampling are per-slot
-//!     independent (per-token quantization, per-slot attention state), so
-//!     NLLs and generated tokens are identical regardless of arrival
+//!     thread-confined). Scoring and sampling are per-slot independent,
+//!     so NLLs and generated tokens are identical regardless of arrival
 //!     order, co-batched requests, or replica count — asserted by
 //!     rust/tests/decode_parity.rs;
-//!   * [`ServerStats`] tracks request counts, per-phase (prefill/decode)
-//!     execution time and token throughput, step occupancy, and three
-//!     fixed-bucket atomic latency histograms (end-to-end, prefill phase,
-//!     decode phase) with explicit saturation counting. Every field is a
-//!     handle registered in a per-server [`Registry`] (`obs::metrics`), so
-//!     the coherent [`StatsSnapshot`] that feeds the `perq serve` JSON
-//!     output, the Prometheus text dump (`--metrics-out`), and the JSON
-//!     metrics snapshot are all views over the same atomics. Completed
-//!     requests additionally leave a [`RequestTrace`] (enqueue → admit →
-//!     prefill → decode → complete spans) in a ring buffer readable via
+//!   * [`ServerStats`] tracks request counts, per-phase execution time and
+//!     token throughput, step occupancy, and fixed-bucket atomic latency
+//!     histograms. Every field is a handle registered in a per-server
+//!     [`Registry`] (`obs::metrics`), so the [`StatsSnapshot`], the
+//!     Prometheus dump, and the JSON snapshot are views over the same
+//!     atomics. Completed requests leave a [`RequestTrace`] (with a
+//!     terminal `outcome`) in a ring readable via
 //!     [`InferenceServer::recent_traces`].
+//!
+//! # Failure model (the fail-safe layer)
+//!
+//! Every request accepted by a `submit*` call resolves to **exactly one**
+//! terminal state, delivered as a `ServeResult` on its channel and
+//! mirrored in the trace ring + metric counters:
+//!
+//!   * `Ok(response)` — completed (`perq_requests_served_total`);
+//!   * `Err(QueueFull | Shed | ShuttingDown)` — rejected by admission
+//!     control (`perq_server_rejected_total`; sheds also count in
+//!     `perq_server_shed_total`);
+//!   * `Err(DeadlineExceeded)` — expired at batch-forming time or between
+//!     decode steps (`perq_server_deadline_exceeded_total`);
+//!   * `Err(WorkerFailed)` — lost to a backend error or replica panic
+//!     (`perq_request_failures_total`).
+//!
+//! Replica threads run every engine step under `catch_unwind`: a panic
+//! poisons only that replica's sessions, fails only the in-flight slots,
+//! and the worker respawns a fresh backend from the factory
+//! (`perq_server_worker_failures_total`). Score requests get a bounded
+//! automatic retry (`score_retries`, `perq_server_retries_total`);
+//! partially-generated requests are never retried. [`ServeOptions`]
+//! bounds the intake queue (`queue_cap`, with priority shedding), sets a
+//! default deadline, and caps the graceful drain (`drain_timeout`) —
+//! after which in-flight steps are aborted through each backend's
+//! cooperative step interrupt.
 //!
 //! The batch-forming wait is configurable: `--max-wait-ms` on the CLIs,
 //! `PERQ_MAX_WAIT_MS` in the environment, else [`DEFAULT_MAX_WAIT_MS`]
@@ -45,7 +63,7 @@
 //! fuller prefill form; a worker with active decode slots never waits.
 
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -62,7 +80,7 @@ pub use crate::backend::ExtraInput;
 
 /// Constructs one backend per worker thread, on that thread (PJRT handles
 /// are not `Send`; only the factory crosses threads). Called once per
-/// replica, so it must be `Fn`, not `FnOnce`.
+/// replica *plus once per respawn after a panic*, so it must be `Fn`.
 pub type BackendFactory = Box<dyn Fn() -> Result<Box<dyn ExecBackend>> + Send + Sync + 'static>;
 
 /// Default batch-forming wait for idle workers, in milliseconds.
@@ -70,15 +88,145 @@ pub const DEFAULT_MAX_WAIT_MS: u64 = 5;
 
 /// Resolve the batch-forming wait: CLI `--max-wait-ms` wins, then the
 /// `PERQ_MAX_WAIT_MS` environment variable, then [`DEFAULT_MAX_WAIT_MS`].
+/// An unparsable environment value is *reported*, not silently ignored.
 pub fn resolve_max_wait(cli_ms: Option<u64>) -> Duration {
     let ms = cli_ms
         .or_else(|| {
-            std::env::var("PERQ_MAX_WAIT_MS")
-                .ok()
-                .and_then(|s| s.trim().parse::<u64>().ok())
+            let raw = std::env::var("PERQ_MAX_WAIT_MS").ok()?;
+            match raw.trim().parse::<u64>() {
+                Ok(v) => Some(v),
+                Err(_) => {
+                    crate::log_warn!(
+                        "PERQ_MAX_WAIT_MS={raw:?} is not a millisecond count — using \
+                         default {DEFAULT_MAX_WAIT_MS} ms"
+                    );
+                    None
+                }
+            }
         })
         .unwrap_or(DEFAULT_MAX_WAIT_MS);
     Duration::from_millis(ms)
+}
+
+/// Terminal non-success states of an accepted request (see the module's
+/// failure model). Delivered through the response channel, so a client
+/// always learns its request's fate — no silent drops.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// rejected at submit: the intake queue was at capacity
+    QueueFull,
+    /// evicted from the queue by a higher-priority arrival
+    Shed,
+    /// expired before completion (batch-forming or between decode steps)
+    DeadlineExceeded,
+    /// lost to a backend error or replica panic (retries exhausted)
+    WorkerFailed,
+    /// the server drained before this request could run
+    ShuttingDown,
+}
+
+impl ServeError {
+    /// Stable lowercase kind, used as the trace `outcome` label.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ServeError::QueueFull => "queue_full",
+            ServeError::Shed => "shed",
+            ServeError::DeadlineExceeded => "deadline_exceeded",
+            ServeError::WorkerFailed => "worker_failed",
+            ServeError::ShuttingDown => "shutting_down",
+        }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let what = match self {
+            ServeError::QueueFull => "request rejected: intake queue full",
+            ServeError::Shed => "request shed for a higher-priority arrival",
+            ServeError::DeadlineExceeded => "request deadline exceeded",
+            ServeError::WorkerFailed => "request lost to a worker failure",
+            ServeError::ShuttingDown => "request dropped: server shutting down",
+        };
+        f.write_str(what)
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// What a response channel carries: the response, or the terminal
+/// [`ServeError`] the request resolved to instead.
+pub type ServeResult<T> = std::result::Result<T, ServeError>;
+
+/// Per-request submission options: admission priority and deadline.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SubmitOpts {
+    /// admission priority — higher wins queue slots under pressure;
+    /// equal priorities keep FIFO order (default 0)
+    pub priority: u8,
+    /// absolute deadline; `None` inherits the server's default deadline
+    pub deadline: Option<Instant>,
+}
+
+/// Server-wide serving policy, shared by every `start_*` entry point.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ServeOptions {
+    /// backend replicas (session-owning threads); min 1
+    pub num_workers: usize,
+    /// batch-forming wait for idle workers (see [`resolve_max_wait`])
+    pub max_wait: Duration,
+    /// intake-queue capacity; `None` = unbounded (the pre-fail-safe
+    /// behavior). Oversubscription rejects with `QueueFull` or sheds the
+    /// lowest-priority queued request.
+    pub queue_cap: Option<usize>,
+    /// default per-request deadline, measured from submit
+    pub deadline: Option<Duration>,
+    /// graceful-drain budget for `shutdown()`/`Drop`: queued + in-flight
+    /// work gets this long to finish before in-flight steps are aborted
+    pub drain_timeout: Duration,
+    /// automatic retries for score requests lost to a worker failure
+    /// (generation requests are never retried: partially-generated
+    /// output must not be silently recomputed)
+    pub score_retries: u32,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            num_workers: 1,
+            max_wait: Duration::from_millis(DEFAULT_MAX_WAIT_MS),
+            queue_cap: None,
+            deadline: None,
+            drain_timeout: Duration::from_secs(5),
+            score_retries: 1,
+        }
+    }
+}
+
+impl ServeOptions {
+    /// The historical `(max_wait, num_workers)` constructor shape.
+    pub fn new(max_wait: Duration, num_workers: usize) -> ServeOptions {
+        ServeOptions { num_workers, max_wait, ..ServeOptions::default() }
+    }
+
+    pub fn with_queue_cap(mut self, cap: usize) -> Self {
+        self.queue_cap = Some(cap);
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    pub fn with_drain_timeout(mut self, timeout: Duration) -> Self {
+        self.drain_timeout = timeout;
+        self
+    }
+
+    pub fn with_score_retries(mut self, retries: u32) -> Self {
+        self.score_retries = retries;
+        self
+    }
 }
 
 pub struct ScoreRequest {
@@ -87,7 +235,13 @@ pub struct ScoreRequest {
     pub submitted: Instant,
     /// lifecycle-trace ID, assigned at submit time
     pub trace_id: u64,
-    respond: Sender<ScoreResponse>,
+    /// admission priority (higher wins under queue pressure)
+    pub priority: u8,
+    /// absolute deadline, resolved at submit time
+    pub deadline: Option<Instant>,
+    /// worker-failure retries consumed so far
+    attempts: u32,
+    respond: Sender<ServeResult<ScoreResponse>>,
 }
 
 #[derive(Debug)]
@@ -106,7 +260,11 @@ pub struct GenerateRequest {
     pub submitted: Instant,
     /// lifecycle-trace ID, assigned at submit time
     pub trace_id: u64,
-    respond: Sender<GenerateResponse>,
+    /// admission priority (higher wins under queue pressure)
+    pub priority: u8,
+    /// absolute deadline, resolved at submit time
+    pub deadline: Option<Instant>,
+    respond: Sender<ServeResult<GenerateResponse>>,
 }
 
 #[derive(Debug)]
@@ -126,16 +284,66 @@ enum Request {
     Generate(GenerateRequest),
 }
 
+impl Request {
+    fn priority(&self) -> u8 {
+        match self {
+            Request::Score(r) => r.priority,
+            Request::Generate(r) => r.priority,
+        }
+    }
+
+    fn deadline(&self) -> Option<Instant> {
+        match self {
+            Request::Score(r) => r.deadline,
+            Request::Generate(r) => r.deadline,
+        }
+    }
+
+    fn is_expired(&self, now: Instant) -> bool {
+        self.deadline().map_or(false, |d| now >= d)
+    }
+}
+
 struct Queue {
     pending: VecDeque<Request>,
     shutdown: bool,
 }
 
+/// Insert keeping the queue sorted by priority (descending), FIFO within
+/// equal priorities. All-default (0) priorities degrade to `push_back`,
+/// so the scan from the back is O(1) for the common case.
+fn insert_by_priority(pending: &mut VecDeque<Request>, req: Request) {
+    let p = req.priority();
+    let mut idx = pending.len();
+    while idx > 0 && pending[idx - 1].priority() < p {
+        idx -= 1;
+    }
+    pending.insert(idx, req);
+}
+
+/// Admit `req` under `cap` (None = unbounded). At capacity, a request
+/// that outranks the lowest-priority queued entry sheds it; otherwise
+/// the arrival itself is rejected. Returns the request to resolve with
+/// its rejection kind — resolution happens *after* the lock drops.
+fn admit_locked(pending: &mut VecDeque<Request>, cap: Option<usize>,
+                req: Request) -> Option<(Request, ServeError)> {
+    if let Some(cap) = cap {
+        if pending.len() >= cap {
+            let outranks = pending.back().map_or(false, |back| back.priority() < req.priority());
+            if outranks {
+                let victim = pending.pop_back().expect("back checked above");
+                insert_by_priority(pending, req);
+                return Some((victim, ServeError::Shed));
+            }
+            return Some((req, ServeError::QueueFull));
+        }
+    }
+    insert_by_priority(pending, req);
+    None
+}
+
 /// The request-latency histogram, generalized into `obs::metrics` (PR 6)
-/// and re-exported under its historical serving-layer name: √2-spaced
-/// microsecond buckets, atomic recording, explicit saturation counting,
-/// and the percentile saturation clamp (a rank landing among saturated
-/// samples reports the top bucket's lower bound, not a midpoint).
+/// and re-exported under its historical serving-layer name.
 pub use crate::obs::metrics::Hist as LatencyHist;
 
 /// Completed-trace ring capacity per server (see [`Tracer`]).
@@ -156,20 +364,17 @@ pub struct WorkerStats {
     pub exec_ns: AtomicU64,
 }
 
-/// Server statistics (atomics; read while running). The aggregate counters
-/// are the merge of every worker's [`WorkerStats`]; the phase split and
-/// the histograms are aggregate-only.
-///
-/// Every field is a handle registered in `registry` under a stable
-/// `perq_*` metric name (see the README metrics table), so the legacy
-/// [`StatsSnapshot`], `registry.render_prometheus()`, and
-/// `registry.snapshot_json()` read the very same atomics — the snapshot is
-/// a *view over the registry*, not a second accounting path. Each server
-/// owns its own registry so concurrent servers in one process never mix
-/// counts; process-wide engine metrics live in `obs::metrics::global()`.
+/// Server statistics (atomics; read while running). Every field is a
+/// handle registered in `registry` under a stable `perq_*` metric name
+/// (see the README metrics table), so the legacy [`StatsSnapshot`],
+/// `registry.render_prometheus()`, and `registry.snapshot_json()` read
+/// the very same atomics. Each server owns its own registry.
 pub struct ServerStats {
     /// the registry every handle below is registered in
     pub registry: Arc<Registry>,
+    /// requests accepted by a `submit*` call (each resolves to exactly
+    /// one terminal state: served/rejected/deadline_exceeded/failed)
+    pub submitted: Arc<Counter>,
     /// requests completed (score + generate)
     pub served: Arc<Counter>,
     /// generate requests completed (subset of `served`)
@@ -187,8 +392,19 @@ pub struct ServerStats {
     pub decode_tokens: Arc<Counter>,
     /// Σ active requests over engine steps (mean = occupancy_sum/batches)
     pub occupancy_sum: Arc<Counter>,
-    /// requests dropped because a backend call failed
+    /// requests lost to backend errors or replica panics (WorkerFailed)
     pub failures: Arc<Counter>,
+    /// requests rejected by admission control (QueueFull + Shed +
+    /// ShuttingDown)
+    pub rejected: Arc<Counter>,
+    /// queued requests evicted for higher-priority arrivals (⊂ rejected)
+    pub shed: Arc<Counter>,
+    /// requests expired before completion
+    pub deadline_exceeded: Arc<Counter>,
+    /// replica poisonings (panic → session quarantined → respawn)
+    pub worker_failures: Arc<Counter>,
+    /// score requests requeued after a worker failure
+    pub retries: Arc<Counter>,
     /// requests waiting for admission (sampled at queue transitions)
     pub queue_depth: Arc<Gauge>,
     /// end-to-end request latency histogram
@@ -207,6 +423,10 @@ impl Default for ServerStats {
     fn default() -> Self {
         let registry = Arc::new(Registry::new());
         ServerStats {
+            submitted: registry.counter(
+                "perq_requests_submitted_total",
+                "requests accepted into the intake queue",
+            ),
             served: registry
                 .counter("perq_requests_served_total", "requests completed (score + generate)"),
             generated: registry
@@ -226,7 +446,27 @@ impl Default for ServerStats {
             occupancy_sum: registry
                 .counter("perq_step_occupancy_total", "sum of active requests over engine steps"),
             failures: registry
-                .counter("perq_request_failures_total", "requests dropped by backend errors"),
+                .counter("perq_request_failures_total", "requests lost to worker failures"),
+            rejected: registry.counter(
+                "perq_server_rejected_total",
+                "requests rejected by admission control",
+            ),
+            shed: registry.counter(
+                "perq_server_shed_total",
+                "queued requests shed for higher-priority arrivals",
+            ),
+            deadline_exceeded: registry.counter(
+                "perq_server_deadline_exceeded_total",
+                "requests expired before completion",
+            ),
+            worker_failures: registry.counter(
+                "perq_server_worker_failures_total",
+                "replica poisonings (panic, session quarantined, respawn)",
+            ),
+            retries: registry.counter(
+                "perq_server_retries_total",
+                "score requests requeued after a worker failure",
+            ),
             queue_depth: registry.gauge("perq_queue_depth", "requests waiting for admission"),
             latency: registry
                 .hist("perq_request_latency_seconds", "end-to-end request latency"),
@@ -270,6 +510,20 @@ pub struct StatsSnapshot {
     pub decode_p99_ms: f64,
     /// latency records clamped into the top histogram bucket
     pub hist_saturated: u64,
+    /// requests accepted by submit (completion-contract denominator)
+    pub submitted: u64,
+    /// rejected by admission control (queue full / shed / shutdown)
+    pub rejected: u64,
+    /// subset of `rejected`: evicted for higher-priority arrivals
+    pub shed: u64,
+    /// expired before completion
+    pub deadline_exceeded: u64,
+    /// lost to worker failures (terminal, retries exhausted)
+    pub failed: u64,
+    /// replica poisonings (panic → respawn)
+    pub worker_failures: u64,
+    /// score-request retries after worker failures
+    pub retries: u64,
 }
 
 impl ServerStats {
@@ -306,14 +560,21 @@ impl ServerStats {
             hist_saturated: self.latency.saturated()
                 + self.prefill_lat.saturated()
                 + self.decode_lat.saturated(),
+            submitted: self.submitted.get(),
+            rejected: self.rejected.get(),
+            shed: self.shed.get(),
+            deadline_exceeded: self.deadline_exceeded.get(),
+            failed: self.failures.get(),
+            worker_failures: self.worker_failures.get(),
+            retries: self.retries.get(),
         }
     }
 }
 
 impl StatsSnapshot {
-    /// The PR 5 `perq serve` JSON shape, field for field — consumers of
-    /// the legacy record (BENCH_deploy.json rows, the `--metrics-out`
-    /// snapshot) must keep seeing exactly these keys.
+    /// The `perq serve` JSON record: the PR 5 field set, field for field,
+    /// plus the additive failure-model fields. Consumers of the legacy
+    /// record must keep seeing exactly the original keys.
     pub fn to_json(&self) -> Json {
         let mut o = BTreeMap::new();
         o.insert("served".to_string(), Json::Num(self.served as f64));
@@ -336,6 +597,13 @@ impl StatsSnapshot {
         o.insert("decode_p95_ms".to_string(), Json::Num(self.decode_p95_ms));
         o.insert("decode_p99_ms".to_string(), Json::Num(self.decode_p99_ms));
         o.insert("hist_saturated".to_string(), Json::Num(self.hist_saturated as f64));
+        o.insert("submitted".to_string(), Json::Num(self.submitted as f64));
+        o.insert("rejected".to_string(), Json::Num(self.rejected as f64));
+        o.insert("shed".to_string(), Json::Num(self.shed as f64));
+        o.insert("deadline_exceeded".to_string(), Json::Num(self.deadline_exceeded as f64));
+        o.insert("failed".to_string(), Json::Num(self.failed as f64));
+        o.insert("worker_failures".to_string(), Json::Num(self.worker_failures as f64));
+        o.insert("retries".to_string(), Json::Num(self.retries as f64));
         Json::Obj(o)
     }
 }
@@ -346,20 +614,24 @@ pub struct InferenceServer {
     worker_stats: Vec<Arc<WorkerStats>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     running: Arc<AtomicBool>,
+    /// drain-timeout escalation: stop cooperating, abandon in-flight work
+    /// (doubles as every backend's step-interrupt probe)
+    abort: Arc<AtomicBool>,
     cfg: ModelConfig,
     /// false when the backend cannot decode incrementally (pjrt AOT
     /// graphs) — generation requests are rejected at submit time
     supports_generate: bool,
+    opts: ServeOptions,
 }
 
 impl InferenceServer {
-    /// Spin up `num_workers` backend replicas (one session-owning thread
-    /// each, each owning a backend produced by `factory` on that thread)
-    /// over a shared request queue. Construction errors from *any* replica
-    /// surface here, not on first request.
-    pub fn start_backend(factory: BackendFactory, cfg: &ModelConfig, max_wait: Duration,
-                         num_workers: usize) -> Result<InferenceServer> {
-        let num_workers = num_workers.max(1);
+    /// Spin up `opts.num_workers` backend replicas (one session-owning
+    /// thread each, each owning a backend produced by `factory` on that
+    /// thread) over a shared request queue. Construction errors from
+    /// *any* replica surface here, not on first request.
+    pub fn start_backend(factory: BackendFactory, cfg: &ModelConfig,
+                         opts: ServeOptions) -> Result<InferenceServer> {
+        let num_workers = opts.num_workers.max(1);
         let factory: Arc<BackendFactory> = Arc::new(factory);
         let queue = Arc::new((
             Mutex::new(Queue { pending: VecDeque::new(), shutdown: false }),
@@ -367,6 +639,10 @@ impl InferenceServer {
         ));
         let stats = Arc::new(ServerStats::default());
         let running = Arc::new(AtomicBool::new(true));
+        let abort = Arc::new(AtomicBool::new(false));
+        // live-replica count: the last one out fails whatever is still
+        // queued so no client blocks on a dead server
+        let alive = Arc::new(AtomicUsize::new(num_workers));
         // each replica reports readiness plus whether its backend can
         // decode incrementally (pjrt cannot)
         let (ready_tx, ready_rx) = channel::<Result<bool>>();
@@ -375,27 +651,20 @@ impl InferenceServer {
         for w in 0..num_workers {
             let per = Arc::new(WorkerStats::default());
             worker_stats.push(Arc::clone(&per));
+            let ctx = WorkerCtx {
+                queue: queue.clone(),
+                stats: stats.clone(),
+                running: running.clone(),
+                abort: abort.clone(),
+                alive: alive.clone(),
+                max_wait: opts.max_wait,
+                score_retries: opts.score_retries,
+            };
             let t_factory = Arc::clone(&factory);
-            let t_queue = queue.clone();
-            let t_stats = stats.clone();
-            let t_running = running.clone();
             let t_ready = ready_tx.clone();
             let spawned = std::thread::Builder::new()
                 .name(format!("perq-serve-{w}"))
-                .spawn(move || {
-                    let backend = match (*t_factory)() {
-                        Ok(b) => {
-                            let _ = t_ready.send(Ok(b.supports_decode()));
-                            b
-                        }
-                        Err(e) => {
-                            let _ = t_ready.send(Err(e));
-                            return;
-                        }
-                    };
-                    drop(t_ready);
-                    worker_loop(backend, t_queue, t_stats, per, t_running, max_wait)
-                });
+                .spawn(move || run_worker(t_factory, ctx, per, t_ready));
             match spawned {
                 Ok(handle) => workers.push(handle),
                 Err(e) => {
@@ -421,8 +690,10 @@ impl InferenceServer {
             worker_stats,
             workers,
             running: running.clone(),
+            abort,
             cfg: cfg.clone(),
             supports_generate: true,
+            opts,
         };
         // every replica must come up; a single failure shuts the rest down
         for _ in 0..num_workers {
@@ -449,7 +720,7 @@ impl InferenceServer {
     #[cfg(feature = "pjrt")]
     pub fn start(artifact: std::path::PathBuf, cfg: &ModelConfig,
                  ws: &crate::model::weights::WeightSet, extras: Vec<ExtraInput>,
-                 max_wait: Duration, num_workers: usize) -> Result<InferenceServer> {
+                 opts: ServeOptions) -> Result<InferenceServer> {
         let graph = graph_from_extras(&extras)?;
         // native-only formats (fmt id > 3) must not reach the artifact's
         // lax.switch — it would clamp them to the wrong quantizer
@@ -461,15 +732,15 @@ impl InferenceServer {
                 &artifact, &cfg2, &ws2, &graph,
             )?) as Box<dyn ExecBackend>)
         });
-        InferenceServer::start_backend(factory, cfg, max_wait, num_workers)
+        InferenceServer::start_backend(factory, cfg, opts)
     }
 
     /// Serve through the pure-Rust native backend — no PJRT, no artifacts.
-    /// Each of the `num_workers` replicas clones the weight set (packed
-    /// low-bit twins keep that cheap for INT4/INT8 graphs).
+    /// Each replica clones the weight set (packed low-bit twins keep that
+    /// cheap for INT4/INT8 graphs).
     pub fn start_native(cfg: &ModelConfig, ws: &crate::model::weights::WeightSet,
-                        graph: &crate::backend::ForwardGraph, max_wait: Duration,
-                        num_workers: usize) -> Result<InferenceServer> {
+                        graph: &crate::backend::ForwardGraph,
+                        opts: ServeOptions) -> Result<InferenceServer> {
         let cfg2 = cfg.clone();
         let ws2 = ws.clone();
         let graph = graph.clone();
@@ -480,21 +751,26 @@ impl InferenceServer {
                 graph.clone(),
             )?) as Box<dyn ExecBackend>)
         });
-        InferenceServer::start_backend(factory, cfg, max_wait, num_workers)
+        InferenceServer::start_backend(factory, cfg, opts)
     }
 
     /// Serve a loaded `.perq` deployment artifact — the serve-many half of
-    /// quantize-once / serve-many. Replicas come up from the artifact
-    /// weights alone (packed low-bit or merged dense); no calibration,
-    /// permutation search, or rounding code runs. Native backend only:
-    /// deployment artifacts carry no AOT HLO graphs.
-    pub fn start_deployed(dm: &crate::deploy::DeployedModel, max_wait: Duration,
-                          num_workers: usize) -> Result<InferenceServer> {
-        InferenceServer::start_native(&dm.cfg, &dm.ws, &dm.graph, max_wait, num_workers)
+    /// quantize-once / serve-many. Native backend only: deployment
+    /// artifacts carry no AOT HLO graphs.
+    pub fn start_deployed(dm: &crate::deploy::DeployedModel,
+                          opts: ServeOptions) -> Result<InferenceServer> {
+        InferenceServer::start_native(&dm.cfg, &dm.ws, &dm.graph, opts)
     }
 
-    /// Submit a scoring request; returns a receiver for the response.
-    pub fn submit(&self, tokens: Vec<i32>) -> Result<Receiver<ScoreResponse>> {
+    /// Submit a scoring request with default priority and the server's
+    /// default deadline; returns a receiver for the terminal result.
+    pub fn submit(&self, tokens: Vec<i32>) -> Result<Receiver<ServeResult<ScoreResponse>>> {
+        self.submit_with(tokens, SubmitOpts::default())
+    }
+
+    /// Submit a scoring request with explicit priority/deadline.
+    pub fn submit_with(&self, tokens: Vec<i32>, opts: SubmitOpts)
+                       -> Result<Receiver<ServeResult<ScoreResponse>>> {
         ensure!(tokens.len() == self.cfg.seq_len + 1,
                 "requests carry seq_len+1 tokens (window + next-token target)");
         // validate every token here — including the final next-token
@@ -506,17 +782,72 @@ impl InferenceServer {
             tokens,
             submitted: Instant::now(),
             trace_id: self.stats.traces.next_id(),
+            priority: opts.priority,
+            deadline: self.effective_deadline(opts),
+            attempts: 0,
             respond: tx,
         }))?;
         Ok(rx)
     }
 
-    /// Submit a generation request (greedy sampling); returns a receiver
-    /// for the response. The request joins a replica's live batch at the
-    /// next step boundary and holds one slot until `max_new_tokens` are
-    /// produced.
+    /// Submit many score windows under ONE queue lock, so capacity
+    /// admission is deterministic with respect to this batch's order: with
+    /// `queue_cap = C` and an idle server, exactly the first `C` windows
+    /// are admitted and the rest resolve `Err(QueueFull)` — regardless of
+    /// replica scheduling.
+    pub fn submit_batch(&self, windows: Vec<Vec<i32>>, opts: SubmitOpts)
+                        -> Result<Vec<Receiver<ServeResult<ScoreResponse>>>> {
+        for tokens in &windows {
+            ensure!(tokens.len() == self.cfg.seq_len + 1,
+                    "requests carry seq_len+1 tokens (window + next-token target)");
+            self.check_tokens(tokens)?;
+        }
+        let deadline = self.effective_deadline(opts);
+        let mut rxs = Vec::with_capacity(windows.len());
+        let mut rejects = Vec::new();
+        {
+            let (lock, cv) = &*self.queue;
+            let mut q = lock.lock().unwrap();
+            ensure!(!q.shutdown, "server is shut down");
+            for tokens in windows {
+                let (tx, rx) = channel();
+                rxs.push(rx);
+                self.stats.submitted.inc();
+                let req = Request::Score(ScoreRequest {
+                    tokens,
+                    submitted: Instant::now(),
+                    trace_id: self.stats.traces.next_id(),
+                    priority: opts.priority,
+                    deadline,
+                    attempts: 0,
+                    respond: tx,
+                });
+                if let Some(reject) = admit_locked(&mut q.pending, self.opts.queue_cap, req) {
+                    rejects.push(reject);
+                }
+            }
+            self.stats.queue_depth.set(q.pending.len() as i64);
+            cv.notify_all();
+        }
+        for (victim, err) in rejects {
+            resolve_unserved(&self.stats, victim, err);
+        }
+        Ok(rxs)
+    }
+
+    /// Submit a generation request (greedy sampling) with default
+    /// priority/deadline; returns a receiver for the terminal result. The
+    /// request joins a replica's live batch at the next step boundary and
+    /// holds one slot until `max_new_tokens` are produced.
     pub fn submit_generate(&self, prompt: Vec<i32>, max_new_tokens: usize)
-                           -> Result<Receiver<GenerateResponse>> {
+                           -> Result<Receiver<ServeResult<GenerateResponse>>> {
+        self.submit_generate_with(prompt, max_new_tokens, SubmitOpts::default())
+    }
+
+    /// Submit a generation request with explicit priority/deadline.
+    pub fn submit_generate_with(&self, prompt: Vec<i32>, max_new_tokens: usize,
+                                opts: SubmitOpts)
+                                -> Result<Receiver<ServeResult<GenerateResponse>>> {
         ensure!(
             self.supports_generate,
             "this server's backend cannot decode incrementally (fixed-shape AOT \
@@ -538,9 +869,17 @@ impl InferenceServer {
             max_new_tokens,
             submitted: Instant::now(),
             trace_id: self.stats.traces.next_id(),
+            priority: opts.priority,
+            deadline: self.effective_deadline(opts),
             respond: tx,
         }))?;
         Ok(rx)
+    }
+
+    /// Per-request deadline wins; otherwise the server default (if any)
+    /// starts counting at submit time.
+    fn effective_deadline(&self, opts: SubmitOpts) -> Option<Instant> {
+        opts.deadline.or_else(|| self.opts.deadline.map(|d| Instant::now() + d))
     }
 
     fn check_tokens(&self, tokens: &[i32]) -> Result<()> {
@@ -555,12 +894,20 @@ impl InferenceServer {
     }
 
     fn push(&self, req: Request) -> Result<()> {
-        let (lock, cv) = &*self.queue;
-        let mut q = lock.lock().unwrap();
-        ensure!(!q.shutdown, "server is shut down");
-        q.pending.push_back(req);
-        self.stats.queue_depth.set(q.pending.len() as i64);
-        cv.notify_one();
+        let reject = {
+            let (lock, cv) = &*self.queue;
+            let mut q = lock.lock().unwrap();
+            ensure!(!q.shutdown, "server is shut down");
+            self.stats.submitted.inc();
+            let reject = admit_locked(&mut q.pending, self.opts.queue_cap, req);
+            self.stats.queue_depth.set(q.pending.len() as i64);
+            cv.notify_one();
+            reject
+        };
+        // rejections resolve outside the lock (channel send + trace)
+        if let Some((victim, err)) = reject {
+            resolve_unserved(&self.stats, victim, err);
+        }
         Ok(())
     }
 
@@ -574,7 +921,7 @@ impl InferenceServer {
     }
 
     /// A full coherent statistics read: request counts, per-phase
-    /// execution/throughput, occupancy, percentiles, saturation.
+    /// execution/throughput, occupancy, percentiles, failure counters.
     pub fn snapshot(&self) -> StatsSnapshot {
         self.stats.snapshot()
     }
@@ -599,6 +946,11 @@ impl InferenceServer {
         self.worker_stats.len()
     }
 
+    /// The serving policy this server was started with.
+    pub fn options(&self) -> &ServeOptions {
+        &self.opts
+    }
+
     /// Server-side request-latency percentiles (p50, p95, p99) in ms from
     /// the fixed-bucket histogram (~19% bucket resolution).
     pub fn latency_percentiles(&self) -> (f64, f64, f64) {
@@ -615,7 +967,7 @@ impl InferenceServer {
 
     /// Shared handle to the live statistics — for periodic metric dumps
     /// that outlive a `&self` borrow (e.g. the `--metrics-out` writer
-    /// thread).
+    /// thread and its exit-time flush guard).
     pub fn shared_stats(&self) -> Arc<ServerStats> {
         Arc::clone(&self.stats)
     }
@@ -635,20 +987,46 @@ impl InferenceServer {
         cv.notify_all();
     }
 
-    pub fn shutdown(mut self) {
+    /// Graceful drain: stop admission, let replicas finish queued and
+    /// in-flight work, then — once `timeout` expires — abort whatever is
+    /// still running (the abort flag is every backend's step interrupt,
+    /// so even a mid-step replica unwinds at its next cancellation point).
+    fn drain(&mut self, timeout: Duration) {
+        if self.workers.is_empty() {
+            return;
+        }
         self.signal_shutdown();
+        let deadline = Instant::now() + timeout;
+        while self.workers.iter().any(|w| !w.is_finished()) {
+            if Instant::now() >= deadline {
+                crate::log_warn!(
+                    "server: drain timeout ({} ms) expired — aborting in-flight work",
+                    timeout.as_millis()
+                );
+                self.abort.store(true, Ordering::Relaxed);
+                let (_, cv) = &*self.queue;
+                cv.notify_all();
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+    }
+
+    /// Drain with the configured `drain_timeout` and join the replicas.
+    /// Every still-unserved request resolves to `Err(ShuttingDown)`.
+    pub fn shutdown(mut self) {
+        let timeout = self.opts.drain_timeout;
+        self.drain(timeout);
     }
 }
 
 impl Drop for InferenceServer {
     fn drop(&mut self) {
-        self.signal_shutdown();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        let timeout = self.opts.drain_timeout;
+        self.drain(timeout);
     }
 }
 
@@ -714,13 +1092,205 @@ fn window_nll(logits: &[f32], tokens: &[i32], t: usize, v: usize) -> f64 {
     nll / t as f64
 }
 
-/// One replica: a backend session with `cfg.batch` slots, driven at step
-/// granularity. Score requests prefill free slots and release them in the
-/// same step; generation requests hold a slot across decode steps, with
-/// new arrivals backfilling freed slots between steps.
-fn worker_loop(mut backend: Box<dyn ExecBackend>, queue: Arc<(Mutex<Queue>, Condvar)>,
-               stats: Arc<ServerStats>, mine: Arc<WorkerStats>, running: Arc<AtomicBool>,
-               max_wait: Duration) {
+/// Run one engine step under `catch_unwind`: `Ok(result)` is the
+/// backend's own result; `Err(msg)` means the step panicked and the
+/// replica's sessions must be treated as poisoned. `AssertUnwindSafe` is
+/// sound here because a panicking backend is *discarded*, never reused.
+fn guard<T>(f: impl FnOnce() -> Result<T>) -> std::result::Result<Result<T>, String> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+        Ok(result) => Ok(result),
+        Err(payload) => Err(panic_message(payload)),
+    }
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic (non-string payload)".to_string()
+    }
+}
+
+/// Tally one terminal failure in the counters the completion contract is
+/// audited against (served + rejected + deadline_exceeded + failed ==
+/// submitted; shed is a sub-count of rejected).
+fn count_failure(stats: &ServerStats, err: ServeError) {
+    match err {
+        ServeError::QueueFull | ServeError::ShuttingDown => stats.rejected.inc(),
+        ServeError::Shed => {
+            stats.shed.inc();
+            stats.rejected.inc();
+        }
+        ServeError::DeadlineExceeded => stats.deadline_exceeded.inc(),
+        ServeError::WorkerFailed => stats.failures.inc(),
+    }
+}
+
+/// Resolve a request that never reached an engine step: count it, leave
+/// its trace (all queue time), and deliver the error to the client.
+fn resolve_unserved(stats: &ServerStats, req: Request, err: ServeError) {
+    count_failure(stats, err);
+    let (id, kind, submitted) = match &req {
+        Request::Score(r) => (r.trace_id, "score", r.submitted),
+        Request::Generate(r) => (r.trace_id, "generate", r.submitted),
+    };
+    let total_ms = ms(submitted.elapsed());
+    stats.traces.record(RequestTrace {
+        id,
+        kind,
+        queued_ms: total_ms,
+        prefill_ms: 0.0,
+        decode_ms: 0.0,
+        total_ms,
+        decode_steps: 0,
+        ok: false,
+        outcome: err.as_str(),
+    });
+    match req {
+        Request::Score(r) => {
+            let _ = r.respond.send(Err(err));
+        }
+        Request::Generate(r) => {
+            let _ = r.respond.send(Err(err));
+        }
+    }
+}
+
+/// Resolve an in-flight generation (slot already held, spans real): count
+/// it, trace it with its actual phase timings, deliver the error.
+fn fail_active(stats: &ServerStats, active: ActiveGen, err: ServeError) {
+    count_failure(stats, err);
+    stats.traces.record(RequestTrace {
+        id: active.req.trace_id,
+        kind: "generate",
+        queued_ms: ms(active.admitted - active.req.submitted),
+        prefill_ms: ms(active.prefilled - active.admitted),
+        decode_ms: ms(active.prefilled.elapsed()),
+        total_ms: ms(active.req.submitted.elapsed()),
+        decode_steps: (active.generated.len() as u64).saturating_sub(1),
+        ok: false,
+        outcome: err.as_str(),
+    });
+    let _ = active.req.respond.send(Err(err));
+}
+
+/// Resolve a generation whose prompt prefill failed or panicked.
+fn fail_gen_prefill(stats: &ServerStats, req: GenerateRequest, admitted: Instant,
+                    exec_ns: u64, err: ServeError) {
+    count_failure(stats, err);
+    stats.traces.record(RequestTrace {
+        id: req.trace_id,
+        kind: "generate",
+        queued_ms: ms(admitted - req.submitted),
+        prefill_ms: exec_ns as f64 / 1e6,
+        decode_ms: 0.0,
+        total_ms: ms(req.submitted.elapsed()),
+        decode_steps: 0,
+        ok: false,
+        outcome: err.as_str(),
+    });
+    let _ = req.respond.send(Err(err));
+}
+
+/// Everything a replica thread needs besides its backend — shared
+/// handles cloned once at spawn, reused across respawns.
+struct WorkerCtx {
+    queue: Arc<(Mutex<Queue>, Condvar)>,
+    stats: Arc<ServerStats>,
+    running: Arc<AtomicBool>,
+    abort: Arc<AtomicBool>,
+    /// live-replica count (see `worker_epilogue`)
+    alive: Arc<AtomicUsize>,
+    max_wait: Duration,
+    score_retries: u32,
+}
+
+/// Why `run_replica` returned.
+enum ReplicaExit {
+    /// drain complete or abort requested — the worker thread exits
+    Clean,
+    /// an engine step panicked: sessions are quarantined, the worker
+    /// respawns a fresh backend from the factory
+    Poisoned,
+    /// the backend could not even open its sessions — don't respawn,
+    /// it would fail the same way
+    Fatal,
+}
+
+/// Worker thread body: construct the backend, report readiness, then run
+/// replica incarnations until drain — respawning after each poisoning.
+fn run_worker(factory: Arc<BackendFactory>, ctx: WorkerCtx, mine: Arc<WorkerStats>,
+              ready: Sender<Result<bool>>) {
+    let mut backend = match (*factory)() {
+        Ok(b) => {
+            let _ = ready.send(Ok(b.supports_decode()));
+            b
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            worker_epilogue(&ctx);
+            return;
+        }
+    };
+    drop(ready);
+    backend.set_step_interrupt(Some(ctx.abort.clone()));
+    loop {
+        match run_replica(backend, &ctx, &mine) {
+            ReplicaExit::Clean | ReplicaExit::Fatal => break,
+            ReplicaExit::Poisoned => {
+                ctx.stats.worker_failures.inc();
+                if !ctx.running.load(Ordering::Relaxed) || ctx.abort.load(Ordering::Relaxed) {
+                    break;
+                }
+                match (*factory)() {
+                    Ok(mut b) => {
+                        b.set_step_interrupt(Some(ctx.abort.clone()));
+                        crate::log_warn!(
+                            "server: replica poisoned by a panic — respawned a fresh backend"
+                        );
+                        backend = b;
+                    }
+                    Err(e) => {
+                        crate::log_error!("server: respawning replica failed: {e:#}");
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    worker_epilogue(&ctx);
+}
+
+/// The last replica out resolves whatever is still queued (requeued
+/// retries, work admitted during a crash cascade) as `ShuttingDown`, and
+/// closes the queue so later submits fail fast — no client ever blocks
+/// on a server with no workers left.
+fn worker_epilogue(ctx: &WorkerCtx) {
+    if ctx.alive.fetch_sub(1, Ordering::AcqRel) != 1 {
+        return;
+    }
+    let pending: Vec<Request> = {
+        let (lock, cv) = &*ctx.queue;
+        let mut q = lock.lock().unwrap();
+        q.shutdown = true;
+        let pending = q.pending.drain(..).collect();
+        ctx.stats.queue_depth.set(0);
+        cv.notify_all();
+        pending
+    };
+    for req in pending {
+        resolve_unserved(&ctx.stats, req, ServeError::ShuttingDown);
+    }
+}
+
+/// One replica incarnation: a backend session with `cfg.batch` slots,
+/// driven at step granularity until drain (`Clean`), a session-opening
+/// failure (`Fatal`), or a panic in an engine step (`Poisoned` — every
+/// in-flight or untouched request is resolved or requeued first).
+fn run_replica(mut backend: Box<dyn ExecBackend>, ctx: &WorkerCtx,
+               mine: &Arc<WorkerStats>) -> ReplicaExit {
     let b = backend.cfg().batch;
     let t = backend.cfg().seq_len;
     let v = backend.cfg().vocab;
@@ -731,56 +1301,84 @@ fn worker_loop(mut backend: Box<dyn ExecBackend>, queue: Arc<(Mutex<Queue>, Cond
         Ok(s) => s,
         Err(e) => {
             crate::log_error!("server: opening execution session failed: {e:#}");
-            return;
+            return ReplicaExit::Fatal;
         }
     };
     let sid_score: SessionId = match backend.begin_scoring(b) {
         Ok(s) => s,
         Err(e) => {
             crate::log_error!("server: opening scoring session failed: {e:#}");
-            return;
+            return ReplicaExit::Fatal;
         }
     };
     let mut gen_slots: Vec<Option<ActiveGen>> = (0..b).map(|_| None).collect();
     let mut last_tokens: Vec<i32> = vec![-1; b];
     let mut logits_buf: Vec<f32> = Vec::new();
 
-    while running.load(Ordering::Relaxed) {
+    loop {
+        // drain-timeout escalation: abandon in-flight generations and exit
+        if ctx.abort.load(Ordering::Relaxed) {
+            for slot in gen_slots.iter_mut() {
+                if let Some(active) = slot.take() {
+                    fail_active(&ctx.stats, active, ServeError::ShuttingDown);
+                }
+            }
+            return ReplicaExit::Clean;
+        }
         let n_active = gen_slots.iter().filter(|s| s.is_some()).count();
+        // requests whose deadline expired while queued, resolved after
+        // the lock drops
+        let mut expired: Vec<Request> = Vec::new();
         // -- pull work: block only when fully idle ------------------------
         let (score_reqs, gen_reqs): (Vec<ScoreRequest>, Vec<GenerateRequest>) = {
-            let (lock, cv) = &*queue;
+            let (lock, cv) = &*ctx.queue;
             let mut q = lock.lock().unwrap();
-            if n_active == 0 {
-                while q.pending.is_empty() && !q.shutdown {
+            let mut draining = q.shutdown || !ctx.running.load(Ordering::Relaxed);
+            if n_active == 0 && !draining {
+                while q.pending.is_empty()
+                    && !q.shutdown
+                    && ctx.running.load(Ordering::Relaxed)
+                    && !ctx.abort.load(Ordering::Relaxed)
+                {
                     q = cv.wait(q).unwrap();
                 }
-                if q.shutdown && q.pending.is_empty() {
-                    return;
-                }
+                draining = q.shutdown || !ctx.running.load(Ordering::Relaxed);
                 // batch-forming wait: give peers up to max_wait to arrive
                 // so the prefill runs fuller (idle workers only — a worker
                 // with live decode slots never stalls here)
-                let deadline = Instant::now() + max_wait;
-                while q.pending.len() < b && !q.shutdown {
-                    let now = Instant::now();
-                    if now >= deadline {
-                        break;
+                if !draining && !ctx.abort.load(Ordering::Relaxed) {
+                    let deadline = Instant::now() + ctx.max_wait;
+                    while q.pending.len() < b && !q.shutdown {
+                        let now = Instant::now();
+                        if now >= deadline {
+                            break;
+                        }
+                        let (qq, timeout) = cv.wait_timeout(q, deadline - now).unwrap();
+                        q = qq;
+                        if timeout.timed_out() {
+                            break;
+                        }
                     }
-                    let (qq, timeout) = cv.wait_timeout(q, deadline - now).unwrap();
-                    q = qq;
-                    if timeout.timed_out() {
-                        break;
-                    }
+                    draining = q.shutdown || !ctx.running.load(Ordering::Relaxed);
                 }
+            }
+            if draining && q.pending.is_empty() && n_active == 0 {
+                return ReplicaExit::Clean;
             }
             // FIFO admission: scores fill the scoring session (up to b),
             // generations fill the free generation slots; stop at the
-            // first request that doesn't fit so nothing is overtaken
+            // first request that doesn't fit so nothing is overtaken.
+            // Dead-on-arrival requests (deadline already behind us) are
+            // pulled out without consuming admission capacity.
             let free_gen = b - n_active;
             let mut scores = Vec::new();
             let mut gens = Vec::new();
+            let now = Instant::now();
             loop {
+                if q.pending.front().map_or(false, |r| r.is_expired(now)) {
+                    expired.push(q.pending.pop_front().expect("front checked above"));
+                    continue;
+                }
                 let fits = match q.pending.front() {
                     Some(Request::Score(_)) => scores.len() < b,
                     Some(Request::Generate(_)) => gens.len() < free_gen,
@@ -794,9 +1392,12 @@ fn worker_loop(mut backend: Box<dyn ExecBackend>, queue: Arc<(Mutex<Queue>, Cond
                     Request::Generate(g) => gens.push(g),
                 }
             }
-            stats.queue_depth.set(q.pending.len() as i64);
+            ctx.stats.queue_depth.set(q.pending.len() as i64);
             (scores, gens)
         };
+        for req in expired {
+            resolve_unserved(&ctx.stats, req, ServeError::DeadlineExceeded);
+        }
         // admission stamp for everything pulled this round (trace span:
         // enqueue → admit)
         let admitted = Instant::now();
@@ -811,25 +1412,22 @@ fn worker_loop(mut backend: Box<dyn ExecBackend>, queue: Arc<(Mutex<Queue>, Cond
                 tokens.extend_from_slice(&req.tokens[..t]);
             }
             let t_exec = Instant::now();
-            let result = backend.prefill_slots(sid_score, &slots, &tokens);
+            let result = guard(|| backend.prefill_slots(sid_score, &slots, &tokens));
             let exec_ns = t_exec.elapsed().as_nanos() as u64;
-            record_step(&stats, &mine, exec_ns, true, (slots.len() * t) as u64,
+            record_step(&ctx.stats, mine, exec_ns, true, (slots.len() * t) as u64,
                         occupancy as u64);
-            for &slot in &slots {
-                if let Err(e) = backend.reset_slot(sid_score, slot) {
-                    crate::log_warn!("server: releasing score slot {slot} failed: {e:#}");
-                }
-            }
             match result {
-                Ok(logits) => {
+                Ok(Ok(logits)) => {
+                    // respond before releasing slots: the logits are
+                    // already extracted, so nothing can lose these
                     for (i, req) in score_reqs.into_iter().enumerate() {
                         let nll = window_nll(&logits[i * t * v..(i + 1) * t * v],
                                              &req.tokens, t, v);
                         let latency = req.submitted.elapsed();
-                        stats.served.inc();
+                        ctx.stats.served.inc();
                         mine.served.fetch_add(1, Ordering::Relaxed);
-                        stats.latency.record(latency);
-                        stats.traces.record(RequestTrace {
+                        ctx.stats.latency.record(latency);
+                        ctx.stats.traces.record(RequestTrace {
                             id: req.trace_id,
                             kind: "score",
                             queued_ms: ms(admitted - req.submitted),
@@ -838,82 +1436,91 @@ fn worker_loop(mut backend: Box<dyn ExecBackend>, queue: Arc<(Mutex<Queue>, Cond
                             total_ms: ms(latency),
                             decode_steps: 0,
                             ok: true,
+                            outcome: "completed",
                         });
-                        let _ = req.respond.send(ScoreResponse {
+                        let _ = req.respond.send(Ok(ScoreResponse {
                             nll,
                             latency,
                             batch_occupancy: occupancy,
-                        });
+                        }));
+                    }
+                    for &slot in &slots {
+                        if let Err(e) = backend.reset_slot(sid_score, slot) {
+                            crate::log_warn!("server: releasing score slot {slot} failed: {e:#}");
+                        }
                     }
                 }
-                Err(e) => {
+                Ok(Err(e)) => {
                     crate::log_error!("server: score prefill failed: {e:#}");
-                    // drop senders → clients observe disconnection
-                    for req in score_reqs {
-                        stats.failures.inc();
-                        stats.traces.record(RequestTrace {
-                            id: req.trace_id,
-                            kind: "score",
-                            queued_ms: ms(admitted - req.submitted),
-                            prefill_ms: exec_ns as f64 / 1e6,
-                            decode_ms: 0.0,
-                            total_ms: ms(req.submitted.elapsed()),
-                            decode_steps: 0,
-                            ok: false,
-                        });
+                    for &slot in &slots {
+                        let _ = backend.reset_slot(sid_score, slot);
                     }
+                    retry_or_fail_scores(ctx, score_reqs);
+                }
+                Err(panic_msg) => {
+                    crate::log_error!("server: score prefill panicked: {panic_msg}");
+                    retry_or_fail_scores(ctx, score_reqs);
+                    poison_cleanup(ctx, &mut gen_slots, Vec::new());
+                    return ReplicaExit::Poisoned;
                 }
             }
         }
 
         // -- generation admissions: prefill prompts into free slots -------
-        for req in gen_reqs {
+        let mut gen_iter = gen_reqs.into_iter();
+        while let Some(req) = gen_iter.next() {
             let Some(slot) = (0..b).find(|&s| gen_slots[s].is_none()) else {
                 crate::log_warn!("server: admission raced past capacity — requeueing");
-                let (lock, cv) = &*queue;
+                let rest: Vec<GenerateRequest> = std::iter::once(req).chain(gen_iter).collect();
+                let (lock, cv) = &*ctx.queue;
                 if let Ok(mut q) = lock.lock() {
-                    q.pending.push_front(Request::Generate(req));
-                    stats.queue_depth.set(q.pending.len() as i64);
+                    for r in rest.into_iter().rev() {
+                        q.pending.push_front(Request::Generate(r));
+                    }
+                    ctx.stats.queue_depth.set(q.pending.len() as i64);
                 }
                 cv.notify_one();
                 break;
             };
             let t_exec = Instant::now();
-            let result = backend.prefill_slots(sid, &[slot], &req.prompt);
+            let result = guard(|| backend.prefill_slots(sid, &[slot], &req.prompt));
             let exec_ns = t_exec.elapsed().as_nanos() as u64;
             // a prompt prefill is its own engine step, running 1 request
-            record_step(&stats, &mine, exec_ns, true, req.prompt.len() as u64, 1);
+            record_step(&ctx.stats, mine, exec_ns, true, req.prompt.len() as u64, 1);
             match result {
-                Ok(logits) => {
+                Ok(Ok(logits)) => {
                     // greedy first token from the last prompt position
                     let first = argmax(&logits[(req.prompt.len() - 1) * v..req.prompt.len() * v]);
                     let prefilled = Instant::now();
-                    stats.prefill_lat.record(prefilled - req.submitted);
+                    ctx.stats.prefill_lat.record(prefilled - req.submitted);
                     let active =
                         ActiveGen { req, generated: vec![first], admitted, prefilled };
                     if active.generated.len() >= active.req.max_new_tokens {
-                        finish_generation(&stats, &mine, active);
+                        finish_generation(&ctx.stats, mine, active);
                         let _ = backend.reset_slot(sid, slot);
                     } else {
                         last_tokens[slot] = first;
                         gen_slots[slot] = Some(active);
                     }
                 }
-                Err(e) => {
+                Ok(Err(e)) => {
                     crate::log_error!("server: prompt prefill failed: {e:#}");
                     let _ = backend.reset_slot(sid, slot);
-                    // drop sender → client observes disconnection
-                    stats.failures.inc();
-                    stats.traces.record(RequestTrace {
-                        id: req.trace_id,
-                        kind: "generate",
-                        queued_ms: ms(admitted - req.submitted),
-                        prefill_ms: exec_ns as f64 / 1e6,
-                        decode_ms: 0.0,
-                        total_ms: ms(req.submitted.elapsed()),
-                        decode_steps: 0,
-                        ok: false,
-                    });
+                    let err = if ctx.abort.load(Ordering::Relaxed) {
+                        ServeError::ShuttingDown
+                    } else {
+                        ServeError::WorkerFailed
+                    };
+                    fail_gen_prefill(&ctx.stats, req, admitted, exec_ns, err);
+                }
+                Err(panic_msg) => {
+                    crate::log_error!("server: prompt prefill panicked: {panic_msg}");
+                    fail_gen_prefill(&ctx.stats, req, admitted, exec_ns,
+                                     ServeError::WorkerFailed);
+                    // the rest of this admission round never touched the
+                    // backend — requeue it untouched (not a retry)
+                    poison_cleanup(ctx, &mut gen_slots, gen_iter.collect());
+                    return ReplicaExit::Poisoned;
                 }
             }
         }
@@ -923,14 +1530,33 @@ fn worker_loop(mut backend: Box<dyn ExecBackend>, queue: Arc<(Mutex<Queue>, Cond
         if n_active == 0 {
             continue;
         }
+        // deadline sweep between decode steps: expired generations free
+        // their slots instead of burning further decode work
+        let now = Instant::now();
+        for slot in 0..b {
+            let hit = gen_slots[slot]
+                .as_ref()
+                .and_then(|a| a.req.deadline)
+                .map_or(false, |d| now >= d);
+            if hit {
+                let active = gen_slots[slot].take().expect("checked above");
+                fail_active(&ctx.stats, active, ServeError::DeadlineExceeded);
+                last_tokens[slot] = -1;
+                let _ = backend.reset_slot(sid, slot);
+            }
+        }
+        let n_active = gen_slots.iter().filter(|s| s.is_some()).count();
+        if n_active == 0 {
+            continue;
+        }
         let t_exec = Instant::now();
-        let result = backend.decode_step_into(sid, &last_tokens, &mut logits_buf);
+        let result = guard(|| backend.decode_step_into(sid, &last_tokens, &mut logits_buf));
         let exec_ns = t_exec.elapsed().as_nanos() as u64;
-        record_step(&stats, &mine, exec_ns, false, n_active as u64, n_active as u64);
+        record_step(&ctx.stats, mine, exec_ns, false, n_active as u64, n_active as u64);
         match result {
-            Ok(()) => {
+            Ok(Ok(())) => {
                 // tokens count only for steps that actually produced them
-                stats.decode_tokens.add(n_active as u64);
+                ctx.stats.decode_tokens.add(n_active as u64);
                 for slot in 0..b {
                     if gen_slots[slot].is_none() {
                         continue;
@@ -943,7 +1569,7 @@ fn worker_loop(mut backend: Box<dyn ExecBackend>, queue: Arc<(Mutex<Queue>, Cond
                     };
                     if done {
                         let finished = gen_slots[slot].take().expect("checked above");
-                        finish_generation(&stats, &mine, finished);
+                        finish_generation(&ctx.stats, mine, finished);
                         last_tokens[slot] = -1;
                         let _ = backend.reset_slot(sid, slot);
                     } else {
@@ -951,29 +1577,85 @@ fn worker_loop(mut backend: Box<dyn ExecBackend>, queue: Arc<(Mutex<Queue>, Cond
                     }
                 }
             }
-            Err(e) => {
+            Ok(Err(e)) => {
+                // an abort-interrupted step is shutdown, not a failure
+                let err = if ctx.abort.load(Ordering::Relaxed) {
+                    ServeError::ShuttingDown
+                } else {
+                    ServeError::WorkerFailed
+                };
                 crate::log_error!("server: decode step failed: {e:#}");
-                // abandon the active generations (senders drop) and
-                // release their slots so the replica can keep serving
                 for slot in 0..b {
                     if let Some(active) = gen_slots[slot].take() {
-                        stats.failures.inc();
-                        stats.traces.record(RequestTrace {
-                            id: active.req.trace_id,
-                            kind: "generate",
-                            queued_ms: ms(active.admitted - active.req.submitted),
-                            prefill_ms: ms(active.prefilled - active.admitted),
-                            decode_ms: ms(active.prefilled.elapsed()),
-                            total_ms: ms(active.req.submitted.elapsed()),
-                            decode_steps: (active.generated.len() as u64).saturating_sub(1),
-                            ok: false,
-                        });
+                        fail_active(&ctx.stats, active, err);
                         last_tokens[slot] = -1;
                         let _ = backend.reset_slot(sid, slot);
                     }
                 }
             }
+            Err(panic_msg) => {
+                crate::log_error!("server: decode step panicked: {panic_msg}");
+                poison_cleanup(ctx, &mut gen_slots, Vec::new());
+                return ReplicaExit::Poisoned;
+            }
         }
+    }
+}
+
+/// Score requests lost to a worker failure: requeue those with retry
+/// budget left (front of the queue, original order), resolve the rest.
+/// Generation requests never come through here — partially-generated
+/// output is never silently recomputed.
+fn retry_or_fail_scores(ctx: &WorkerCtx, reqs: Vec<ScoreRequest>) {
+    let aborting = ctx.abort.load(Ordering::Relaxed);
+    let mut requeue: Vec<ScoreRequest> = Vec::new();
+    for mut req in reqs {
+        if !aborting && req.attempts < ctx.score_retries {
+            req.attempts += 1;
+            ctx.stats.retries.inc();
+            crate::log_warn!(
+                "server: score request {} retrying after worker failure (attempt {} of {})",
+                req.trace_id,
+                req.attempts + 1,
+                ctx.score_retries + 1
+            );
+            requeue.push(req);
+        } else {
+            let err = if aborting { ServeError::ShuttingDown } else { ServeError::WorkerFailed };
+            resolve_unserved(&ctx.stats, Request::Score(req), err);
+        }
+    }
+    if !requeue.is_empty() {
+        let (lock, cv) = &*ctx.queue;
+        let mut q = lock.lock().unwrap();
+        for req in requeue.into_iter().rev() {
+            q.pending.push_front(Request::Score(req));
+        }
+        ctx.stats.queue_depth.set(q.pending.len() as i64);
+        drop(q);
+        cv.notify_all();
+    }
+}
+
+/// A replica just poisoned itself: fail every in-flight generation with
+/// `WorkerFailed` and put never-attempted generation admissions back at
+/// the queue front (they are untouched work, not retries).
+fn poison_cleanup(ctx: &WorkerCtx, gen_slots: &mut [Option<ActiveGen>],
+                  untouched: Vec<GenerateRequest>) {
+    for slot in gen_slots.iter_mut() {
+        if let Some(active) = slot.take() {
+            fail_active(&ctx.stats, active, ServeError::WorkerFailed);
+        }
+    }
+    if !untouched.is_empty() {
+        let (lock, cv) = &*ctx.queue;
+        let mut q = lock.lock().unwrap();
+        for req in untouched.into_iter().rev() {
+            q.pending.push_front(Request::Generate(req));
+        }
+        ctx.stats.queue_depth.set(q.pending.len() as i64);
+        drop(q);
+        cv.notify_all();
     }
 }
 
@@ -1017,13 +1699,14 @@ fn finish_generation(stats: &ServerStats, mine: &WorkerStats, active: ActiveGen)
         total_ms: ms(latency),
         decode_steps: (active.generated.len() as u64).saturating_sub(1),
         ok: true,
+        outcome: "completed",
     });
-    let _ = active.req.respond.send(GenerateResponse {
+    let _ = active.req.respond.send(Ok(GenerateResponse {
         tokens: active.generated,
         prefill_latency: active.prefilled - active.req.submitted,
         decode_latency,
         latency,
-    });
+    }));
 }
 
 #[cfg(test)]
@@ -1032,7 +1715,8 @@ mod tests {
     //! rust/tests/coordinator_props.rs; full server round-trips are
     //! exercised natively below and in examples/serve_requests.rs,
     //! multi-worker determinism in rust/tests/simd_props.rs and
-    //! rust/tests/decode_parity.rs, and PJRT in the integration suite.
+    //! rust/tests/decode_parity.rs, fault injection in
+    //! rust/tests/failsafe.rs, and PJRT in the integration suite.
 
     use super::*;
     use crate::backend::ForwardGraph;
@@ -1051,6 +1735,13 @@ mod tests {
         assert_eq!(snap.decode_tok_per_s, 0.0);
         assert_eq!(snap.mean_occupancy, 0.0);
         assert_eq!(snap.hist_saturated, 0);
+        assert_eq!(snap.submitted, 0);
+        assert_eq!(snap.rejected, 0);
+        assert_eq!(snap.shed, 0);
+        assert_eq!(snap.deadline_exceeded, 0);
+        assert_eq!(snap.failed, 0);
+        assert_eq!(snap.worker_failures, 0);
+        assert_eq!(snap.retries, 0);
         assert!(s.traces.recent_traces().is_empty());
     }
 
@@ -1070,6 +1761,13 @@ mod tests {
                 .and_then(|v| v.as_usize()),
             Some(4)
         );
+        // the failure-model counters live in the same registry
+        s.rejected.inc();
+        s.worker_failures.inc();
+        let prom = s.registry.render_prometheus();
+        assert!(prom.contains("perq_server_rejected_total 1"), "{prom}");
+        assert!(prom.contains("perq_server_worker_failures_total 1"), "{prom}");
+        assert!(prom.contains("perq_requests_submitted_total 0"), "{prom}");
         // the legacy JSON view carries the exact PR 5 field set
         let legacy = s.snapshot().to_json();
         for key in ["served", "generated", "batches", "exec_s", "prefill_s", "decode_s",
@@ -1079,6 +1777,115 @@ mod tests {
                     "hist_saturated"] {
             assert!(legacy.get(key).is_some(), "legacy snapshot lost key {key}");
         }
+        // plus the additive failure-model keys
+        for key in ["submitted", "rejected", "shed", "deadline_exceeded", "failed",
+                    "worker_failures", "retries"] {
+            assert!(legacy.get(key).is_some(), "snapshot missing failure key {key}");
+        }
+    }
+
+    #[test]
+    fn serve_error_kinds_are_stable() {
+        let all = [ServeError::QueueFull, ServeError::Shed, ServeError::DeadlineExceeded,
+                   ServeError::WorkerFailed, ServeError::ShuttingDown];
+        let kinds: Vec<&str> = all.iter().map(|e| e.as_str()).collect();
+        assert_eq!(kinds, vec!["queue_full", "shed", "deadline_exceeded", "worker_failed",
+                               "shutting_down"]);
+        // Display is human-readable and distinct per kind
+        let shown: std::collections::BTreeSet<String> =
+            all.iter().map(|e| e.to_string()).collect();
+        assert_eq!(shown.len(), all.len());
+        // it is a std error, so `rx.recv()??` works under anyhow
+        let e: Box<dyn std::error::Error> = Box::new(ServeError::QueueFull);
+        assert!(e.to_string().contains("queue full"));
+    }
+
+    #[test]
+    fn serve_options_defaults_and_builders() {
+        let o = ServeOptions::default();
+        assert_eq!(o.num_workers, 1);
+        assert_eq!(o.max_wait, Duration::from_millis(DEFAULT_MAX_WAIT_MS));
+        assert_eq!(o.queue_cap, None);
+        assert_eq!(o.deadline, None);
+        assert_eq!(o.drain_timeout, Duration::from_secs(5));
+        assert_eq!(o.score_retries, 1);
+        let o = ServeOptions::new(Duration::from_millis(2), 3)
+            .with_queue_cap(8)
+            .with_deadline(Duration::from_millis(50))
+            .with_drain_timeout(Duration::from_millis(200))
+            .with_score_retries(0);
+        assert_eq!(o.num_workers, 3);
+        assert_eq!(o.max_wait, Duration::from_millis(2));
+        assert_eq!(o.queue_cap, Some(8));
+        assert_eq!(o.deadline, Some(Duration::from_millis(50)));
+        assert_eq!(o.drain_timeout, Duration::from_millis(200));
+        assert_eq!(o.score_retries, 0);
+    }
+
+    /// A throwaway score request for queue-logic tests (receiver dropped —
+    /// sends are ignored).
+    fn qreq(priority: u8, trace_id: u64) -> Request {
+        let (tx, _rx) = channel();
+        Request::Score(ScoreRequest {
+            tokens: vec![],
+            submitted: Instant::now(),
+            trace_id,
+            priority,
+            deadline: None,
+            attempts: 0,
+            respond: tx,
+        })
+    }
+
+    fn id_of(r: &Request) -> u64 {
+        match r {
+            Request::Score(s) => s.trace_id,
+            Request::Generate(g) => g.trace_id,
+        }
+    }
+
+    fn queue_ids(q: &VecDeque<Request>) -> Vec<u64> {
+        q.iter().map(id_of).collect()
+    }
+
+    #[test]
+    fn priority_insert_is_ordered_and_fifo_within_ties() {
+        let mut q = VecDeque::new();
+        for (p, id) in [(0u8, 1u64), (2, 2), (1, 3), (2, 4), (0, 5)] {
+            insert_by_priority(&mut q, qreq(p, id));
+        }
+        // descending priority; equal priorities keep submit order
+        assert_eq!(queue_ids(&q), vec![2, 4, 3, 1, 5]);
+        // all-default priorities degrade to plain FIFO
+        let mut q = VecDeque::new();
+        for id in 1..=4u64 {
+            insert_by_priority(&mut q, qreq(0, id));
+        }
+        assert_eq!(queue_ids(&q), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn admit_locked_caps_and_sheds_by_priority() {
+        // unbounded: everything is admitted
+        let mut q = VecDeque::new();
+        assert!(admit_locked(&mut q, None, qreq(0, 1)).is_none());
+        // cap 2, all equal priority: third arrival is rejected, queue keeps
+        // the first two
+        let mut q = VecDeque::new();
+        assert!(admit_locked(&mut q, Some(2), qreq(0, 1)).is_none());
+        assert!(admit_locked(&mut q, Some(2), qreq(0, 2)).is_none());
+        let (victim, err) = admit_locked(&mut q, Some(2), qreq(0, 3)).expect("rejected");
+        assert_eq!(err, ServeError::QueueFull);
+        assert_eq!(id_of(&victim), 3);
+        assert_eq!(queue_ids(&q), vec![1, 2]);
+        // a higher-priority arrival sheds the lowest-priority queued entry
+        let (victim, err) = admit_locked(&mut q, Some(2), qreq(5, 4)).expect("shed");
+        assert_eq!(err, ServeError::Shed);
+        assert_eq!(id_of(&victim), 2);
+        assert_eq!(queue_ids(&q), vec![4, 1], "priority 5 jumps the survivor");
+        // an equal-priority arrival cannot shed (no livelock of peers)
+        let (_, err) = admit_locked(&mut q, Some(2), qreq(5, 5)).expect("rejected");
+        assert_eq!(err, ServeError::QueueFull);
     }
 
     #[test]
@@ -1143,7 +1950,8 @@ mod tests {
 
     fn tiny_server(seq_len: usize, batch: usize, workers: usize) -> InferenceServer {
         let (cfg, ws, graph) = tiny_parts(seq_len, batch);
-        InferenceServer::start_native(&cfg, &ws, &graph, Duration::from_millis(1), workers)
+        InferenceServer::start_native(&cfg, &ws, &graph,
+                                      ServeOptions::new(Duration::from_millis(1), workers))
             .unwrap()
     }
 
@@ -1155,7 +1963,7 @@ mod tests {
         let mk = |s: usize| -> Vec<i32> { (0..9).map(|i| ((s + i) % 8) as i32).collect() };
         let rxs: Vec<_> = (0..3).map(|s| server.submit(mk(s)).unwrap()).collect();
         for rx in rxs {
-            let resp = rx.recv().unwrap();
+            let resp = rx.recv().unwrap().unwrap();
             assert!(resp.nll.is_finite() && resp.nll > 0.0);
             assert!(resp.batch_occupancy <= 3, "occupancy counts real requests only");
         }
@@ -1166,6 +1974,8 @@ mod tests {
         let snap = server.snapshot();
         assert_eq!(snap.served, 3);
         assert_eq!(snap.generated, 0);
+        assert_eq!(snap.submitted, 3, "accepted submits are counted");
+        assert_eq!(snap.rejected + snap.deadline_exceeded + snap.failed, 0);
         assert!(snap.prefill_tokens >= 3 * 8, "score windows flow through prefill");
         assert!(snap.mean_occupancy > 0.0);
         // per-worker counters merge into the aggregate
@@ -1173,8 +1983,8 @@ mod tests {
         assert_eq!(per.iter().map(|p| p.0).sum::<u64>(), served);
         assert_eq!(per.iter().map(|p| p.1).sum::<u64>(), batches);
         // identical windows score identically (deterministic native path)
-        let a = server.submit(mk(0)).unwrap().recv().unwrap().nll;
-        let b = server.submit(mk(0)).unwrap().recv().unwrap().nll;
+        let a = server.submit(mk(0)).unwrap().recv().unwrap().unwrap().nll;
+        let b = server.submit(mk(0)).unwrap().recv().unwrap().unwrap().nll;
         assert!((a - b).abs() < 1e-12);
         server.shutdown();
     }
@@ -1183,22 +1993,23 @@ mod tests {
     fn generate_round_trip_greedy_and_deterministic() {
         let server = tiny_server(16, 2, 1);
         let prompt = vec![1i32, 5, 2, 7];
-        let a = server.submit_generate(prompt.clone(), 6).unwrap().recv().unwrap();
+        let a = server.submit_generate(prompt.clone(), 6).unwrap().recv().unwrap().unwrap();
         assert_eq!(a.tokens.len(), 6);
         assert!(a.tokens.iter().all(|&t| (0..8).contains(&t)), "tokens in vocab");
         assert!(a.latency >= a.prefill_latency);
         // greedy sampling is deterministic: same prompt → same tokens
-        let b = server.submit_generate(prompt.clone(), 6).unwrap().recv().unwrap();
+        let b = server.submit_generate(prompt.clone(), 6).unwrap().recv().unwrap().unwrap();
         assert_eq!(a.tokens, b.tokens);
         // interleave a score request with generation traffic
         let win: Vec<i32> = (0..17).map(|i| (i % 8) as i32).collect();
         let rx_g = server.submit_generate(prompt, 8).unwrap();
         let rx_s = server.submit(win).unwrap();
-        assert_eq!(rx_g.recv().unwrap().tokens.len(), 8);
-        assert!(rx_s.recv().unwrap().nll.is_finite());
+        assert_eq!(rx_g.recv().unwrap().unwrap().tokens.len(), 8);
+        assert!(rx_s.recv().unwrap().unwrap().nll.is_finite());
         let snap = server.snapshot();
         assert_eq!(snap.generated, 3);
         assert_eq!(snap.served, 4, "served counts score + generate");
+        assert_eq!(snap.submitted, 4);
         // 3 generations × (n-1) decode steps each produced decode tokens
         assert!(snap.decode_tokens >= 5 + 5 + 7, "decode tokens {}", snap.decode_tokens);
         assert!(snap.decode_s > 0.0 && snap.decode_tok_per_s > 0.0);
@@ -1210,12 +2021,13 @@ mod tests {
     fn request_traces_cover_both_submit_paths() {
         let server = tiny_server(16, 2, 1);
         let win: Vec<i32> = (0..17).map(|i| (i % 8) as i32).collect();
-        server.submit(win).unwrap().recv().unwrap();
-        server.submit_generate(vec![1, 5, 2], 4).unwrap().recv().unwrap();
+        server.submit(win).unwrap().recv().unwrap().unwrap();
+        server.submit_generate(vec![1, 5, 2], 4).unwrap().recv().unwrap().unwrap();
         let traces = server.recent_traces();
         assert_eq!(traces.len(), 2, "every completed request leaves a trace");
         assert!(traces[0].id < traces[1].id, "IDs are monotone with submit order");
         assert!(traces.iter().any(|t| t.kind == "score"));
+        assert!(traces.iter().all(|t| t.outcome == "completed"));
         let g = traces.iter().find(|t| t.kind == "generate").expect("generate trace");
         assert!(g.ok);
         assert_eq!(g.decode_steps, 3, "4 tokens = prefill's first + 3 decode steps");
@@ -1224,6 +2036,7 @@ mod tests {
         let prom = server.registry().render_prometheus();
         assert!(prom.contains("perq_requests_served_total 2"), "{prom}");
         assert!(prom.contains("perq_generate_requests_total 1"), "{prom}");
+        assert!(prom.contains("perq_requests_submitted_total 2"), "{prom}");
         server.shutdown();
     }
 
@@ -1235,11 +2048,11 @@ mod tests {
         // quantized cache
         let (cfg, ws, graph) = tiny_parts(8, 4);
         let server = InferenceServer::start_native(
-            &cfg, &ws, &graph, Duration::from_millis(1), 1,
+            &cfg, &ws, &graph, ServeOptions::new(Duration::from_millis(1), 1),
         )
         .unwrap();
         let win: Vec<i32> = (0..9).map(|i| ((i * 3 + 1) % 8) as i32).collect();
-        let served = server.submit(win.clone()).unwrap().recv().unwrap().nll;
+        let served = server.submit(win.clone()).unwrap().recv().unwrap().unwrap().nll;
         server.shutdown();
         use crate::backend::NativeBackend;
         use crate::tensor::KvMode;
@@ -1264,9 +2077,11 @@ mod tests {
         win2[3] = -2;
         assert!(server.submit(win2).is_err());
         assert!(server.submit_generate(vec![1, 99], 2).is_err());
+        // validation failures happen before admission: not "submitted"
+        assert_eq!(server.snapshot().submitted, 0);
         // the server is still alive and serving after the rejections
         let ok: Vec<i32> = (0..9).map(|i| (i % 8) as i32).collect();
-        assert!(server.submit(ok).unwrap().recv().unwrap().nll.is_finite());
+        assert!(server.submit(ok).unwrap().recv().unwrap().unwrap().nll.is_finite());
         server.shutdown();
     }
 
@@ -1291,11 +2106,53 @@ mod tests {
         let cfg = crate::model::config::ModelConfig::from_meta(&j).unwrap();
         let ws = bundle::synthetic_weights(&cfg, 12);
         let server = InferenceServer::start_native(
-            &cfg, &ws, &ForwardGraph::Fp, Duration::from_millis(1), 2,
+            &cfg, &ws, &ForwardGraph::Fp, ServeOptions::new(Duration::from_millis(1), 2),
         )
         .unwrap();
         assert_eq!(server.num_workers(), 2);
         assert!(server.submit(vec![0i32; 3]).is_err());
         server.shutdown();
+    }
+
+    #[test]
+    fn expired_deadline_resolves_without_engine_work() {
+        let server = tiny_server(8, 2, 1);
+        let win: Vec<i32> = (0..9).map(|i| (i % 8) as i32).collect();
+        // a deadline already behind us: the request must resolve
+        // DeadlineExceeded at batch-forming time, never touching a slot
+        let opts = SubmitOpts {
+            priority: 0,
+            deadline: Some(Instant::now() - Duration::from_millis(1)),
+        };
+        let rx = server.submit_with(win.clone(), opts).unwrap();
+        assert!(matches!(rx.recv().unwrap(), Err(ServeError::DeadlineExceeded)));
+        let snap = server.snapshot();
+        assert_eq!(snap.deadline_exceeded, 1);
+        assert_eq!(snap.submitted, 1);
+        let trace = server.recent_traces().pop().expect("expired request left a trace");
+        assert!(!trace.ok);
+        assert_eq!(trace.outcome, "deadline_exceeded");
+        // the server keeps serving afterwards
+        assert!(server.submit(win).unwrap().recv().unwrap().unwrap().nll.is_finite());
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_resolves_queued_requests_and_closes_submits() {
+        let server = tiny_server(8, 2, 1);
+        let win: Vec<i32> = (0..9).map(|i| (i % 8) as i32).collect();
+        let rx = server.submit(win.clone()).unwrap();
+        let snap_stats = server.shared_stats();
+        server.shutdown();
+        // the in-flight request resolved one way or the other — never hangs
+        let outcome = rx.recv().unwrap();
+        match outcome {
+            Ok(resp) => assert!(resp.nll.is_finite()),
+            Err(e) => assert_eq!(e, ServeError::ShuttingDown),
+        }
+        // terminal accounting is complete: one submit, one terminal state
+        let snap = snap_stats.snapshot();
+        assert_eq!(snap.submitted, 1);
+        assert_eq!(snap.served + snap.rejected + snap.deadline_exceeded + snap.failed, 1);
     }
 }

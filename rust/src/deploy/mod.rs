@@ -27,7 +27,9 @@
 //!
 //! // serving fleet, many times (no calibration, ~ms startup):
 //! let dm = DeployedModel::load(Path::new("llama_np2.perq")).unwrap();
-//! let server = dm.serve(std::time::Duration::from_millis(5), 4).unwrap();
+//! let opts = perq::coordinator::server::ServeOptions::new(
+//!     std::time::Duration::from_millis(5), 4);
+//! let server = dm.serve(opts).unwrap();
 //! # drop(server);
 //! ```
 //!
@@ -54,7 +56,7 @@ use std::time::Duration;
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::backend::{ExecBackend, ForwardGraph, NativeBackend};
-use crate::coordinator::server::InferenceServer;
+use crate::coordinator::server::{InferenceServer, ServeOptions};
 use crate::data::corpus::Source;
 use crate::eval::perplexity::{evaluate_with, EvalResult};
 use crate::hadamard::BlockRotator;
@@ -115,9 +117,10 @@ impl DeployedModel {
     }
 
     /// Stand up the batching inference server on this model —
-    /// `num_workers` native replicas, zero calibration work.
-    pub fn serve(&self, max_wait: Duration, num_workers: usize) -> Result<InferenceServer> {
-        InferenceServer::start_deployed(self, max_wait, num_workers)
+    /// `opts.num_workers` native replicas under `opts`' serving policy
+    /// (queue capacity, deadlines, drain timeout), zero calibration work.
+    pub fn serve(&self, opts: ServeOptions) -> Result<InferenceServer> {
+        InferenceServer::start_deployed(self, opts)
     }
 
     /// Perplexity over the held-out split of `source`, served from the

@@ -38,7 +38,7 @@ use anyhow::{anyhow, Result};
 use perq::backend::BackendKind;
 use perq::calib::capture;
 use perq::coordinator::presets;
-use perq::coordinator::server::ServerStats;
+use perq::coordinator::server::{ServeOptions, ServerStats};
 use perq::coordinator::spec::{GraphKind, PipelineSpec, RotationSpec};
 use perq::data::corpus::{token_stream, Split};
 use perq::deploy;
@@ -61,8 +61,14 @@ fn main() {
     // `--threads N` (or PERQ_THREADS) sizes the worker pool; it must be
     // applied before any kernel work because the global pool spawns
     // lazily on first use.
-    if let Some(n) = args.get("threads").and_then(|s| s.parse::<usize>().ok()) {
-        perq::util::pool::set_default_parallelism(n);
+    if let Some(raw) = args.get("threads") {
+        match raw.parse::<usize>() {
+            Ok(n) => perq::util::pool::set_default_parallelism(n),
+            Err(_) => perq::log_warn!(
+                "--threads {raw:?} is not a lane count — using the \
+                 PERQ_THREADS / core-count default"
+            ),
+        }
     }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let result = match cmd {
@@ -100,8 +106,14 @@ fn print_help() {
          \x20 serve      --artifact m.perq [--requests N] [--workers W]\n\
          \x20            [--max-wait-ms MS | PERQ_MAX_WAIT_MS] (load + serve, no\n\
          \x20            calibration; full stats snapshot → BENCH_deploy.json)\n\
+         \x20            [--queue-cap N] (bounded admission: reject/shed when the\n\
+         \x20            intake queue is full)  [--deadline-ms MS] (per-request\n\
+         \x20            deadline)  [--drain-timeout-ms MS] (graceful-drain cap\n\
+         \x20            at shutdown)  PERQ_FAULT=panic_step:N,... (deterministic\n\
+         \x20            fault injection in the engine step path)\n\
          \x20            [--metrics-out FILE] (periodic + final registry dump:\n\
-         \x20            Prometheus text → FILE, JSON snapshot → FILE.json)\n\
+         \x20            Prometheus text → FILE, JSON snapshot → FILE.json;\n\
+         \x20            writes are atomic temp-file + rename)\n\
          \x20 generate   --artifact m.perq [--prompt-tokens 1,2,3] [--max-new N | -n N]\n\
          \x20            (stateful prefill+decode generation: quantized KV cache,\n\
          \x20            PERQ_KV={{int8,f32}}; appends BENCH_decode.json)\n\
@@ -248,9 +260,20 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
     let n_requests = args.get_usize("requests", 32).max(1);
     let workers = args.get_usize("workers", 1).max(1);
     // --max-wait-ms > PERQ_MAX_WAIT_MS > default
-    let max_wait = perq::coordinator::server::resolve_max_wait(
-        args.get("max-wait-ms").and_then(|s| s.parse::<u64>().ok()),
-    );
+    let max_wait =
+        perq::coordinator::server::resolve_max_wait(flag_u64(args, "max-wait-ms"));
+    // fail-safe knobs: all off/unbounded unless asked for, so the default
+    // serve path behaves exactly as before
+    let mut opts = ServeOptions::new(max_wait, workers);
+    if let Some(cap) = flag_u64(args, "queue-cap") {
+        opts = opts.with_queue_cap((cap as usize).max(1));
+    }
+    if let Some(ms) = flag_u64(args, "deadline-ms") {
+        opts = opts.with_deadline(Duration::from_millis(ms));
+    }
+    if let Some(ms) = flag_u64(args, "drain-timeout-ms") {
+        opts = opts.with_drain_timeout(Duration::from_millis(ms));
+    }
 
     // quantize-once / serve-many: everything below is artifact load +
     // server bring-up — the offline pipeline never runs here
@@ -258,7 +281,7 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
     let dm = DeployedModel::load(Path::new(artifact))?;
     let load_ms = t0.elapsed().as_secs_f64() * 1e3;
     let t1 = Instant::now();
-    let server = dm.serve(max_wait, workers)?;
+    let server = dm.serve(opts)?;
     let ready_ms = t1.elapsed().as_secs_f64() * 1e3;
     println!(
         "{artifact}: {} {} (format v{}) — loaded in {load_ms:.1}ms, \
@@ -274,6 +297,13 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
     // once more at shutdown, so a scraper or a post-mortem always sees a
     // current view
     let metrics_out = args.get("metrics-out").map(PathBuf::from);
+    // one last dump on EVERY exit path — normal return, early `?`, or a
+    // panic unwinding through this frame — so a post-mortem always finds
+    // the terminal counters on disk
+    let _final_flush = metrics_out.clone().map(|path| MetricsFlushGuard {
+        path,
+        stats: server.shared_stats(),
+    });
     let metrics_stop = Arc::new(AtomicBool::new(false));
     let metrics_writer = metrics_out.clone().map(|path| {
         let shared = server.shared_stats();
@@ -298,11 +328,24 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
         let window: Vec<i32> = toks[start..start + t + 1].iter().map(|&x| x as i32).collect();
         rxs.push(server.submit(window)?);
     }
+    // every submitted request resolves exactly once: either a response or
+    // a terminal ServeError (rejected / deadline-exceeded / failed) —
+    // tally the unserved kinds instead of aborting the run on the first
+    let mut unserved: std::collections::BTreeMap<&'static str, usize> =
+        std::collections::BTreeMap::new();
     let mut nll = 0.0f64;
+    let mut scored = 0usize;
     for rx in rxs {
-        nll += rx.recv()?.nll;
+        match rx.recv() {
+            Ok(Ok(r)) => {
+                nll += r.nll;
+                scored += 1;
+            }
+            Ok(Err(e)) => *unserved.entry(e.as_str()).or_insert(0) += 1,
+            Err(_) => *unserved.entry("worker_failed").or_insert(0) += 1,
+        }
     }
-    nll /= n_requests as f64;
+    nll /= scored.max(1) as f64;
     // score-phase wall only — the generation slice below gets its own
     // clock so the throughput line and the JSON record stay coherent
     let score_wall = t2.elapsed().as_secs_f64();
@@ -320,7 +363,11 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
             })
             .collect::<Result<_>>()?;
         for rx in gen_rxs {
-            rx.recv()?;
+            match rx.recv() {
+                Ok(Ok(_)) => {}
+                Ok(Err(e)) => *unserved.entry(e.as_str()).or_insert(0) += 1,
+                Err(_) => *unserved.entry("worker_failed").or_insert(0) += 1,
+            }
         }
     }
     let wall = t2.elapsed().as_secs_f64(); // score + generation phases
@@ -331,7 +378,7 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
          {} steps (occupancy {:.2}) | exec {:.2}s (prefill {:.2}s / decode {:.2}s)",
         snap.served,
         snap.generated,
-        n_requests as f64 * t as f64 / score_wall.max(1e-9),
+        scored as f64 * t as f64 / score_wall.max(1e-9),
         nll.exp(),
         snap.batches,
         snap.mean_occupancy,
@@ -350,15 +397,35 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
         snap.decode_p50_ms,
         snap.hist_saturated,
     );
+    // the completion contract, checkable from stdout alone:
+    // submitted == served + rejected + deadline-exceeded + failed
+    println!(
+        "outcomes: {} submitted = {} served + {} rejected ({} shed) + \
+         {} deadline-exceeded + {} failed | {} worker failure(s), {} retries",
+        snap.submitted,
+        snap.served,
+        snap.rejected,
+        snap.shed,
+        snap.deadline_exceeded,
+        snap.failed,
+        snap.worker_failures,
+        snap.retries,
+    );
+    if !unserved.is_empty() {
+        let parts: Vec<String> =
+            unserved.iter().map(|(k, n)| format!("{n} {k}")).collect();
+        println!("unserved: {}", parts.join(", "));
+    }
 
-    // final metrics dump covers the whole run, including the shutdown
-    // drain the periodic writer may have missed
+    // stop the periodic writer, then drain the server so the final dump
+    // carries the terminal counters (ShuttingDown resolutions included)
     metrics_stop.store(true, Ordering::Relaxed);
     if let Some(h) = metrics_writer {
         let _ = h.join();
     }
+    let shared = server.shared_stats();
+    server.shutdown();
     if let Some(path) = &metrics_out {
-        let shared = server.shared_stats();
         write_metrics_files(path, &shared)?;
         println!(
             "metrics: {} (Prometheus text) + {} (JSON snapshot)",
@@ -366,7 +433,6 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
             metrics_json_path(path).display(),
         );
     }
-    server.shutdown();
 
     // the trajectory row rides the shared JSON serializer so paths/labels
     // with quotes or backslashes stay valid; the full ServerStats snapshot
@@ -405,6 +471,13 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
         ("decode_p95_ms", snap.decode_p95_ms),
         ("decode_p99_ms", snap.decode_p99_ms),
         ("hist_saturated", snap.hist_saturated as f64),
+        ("submitted", snap.submitted as f64),
+        ("rejected", snap.rejected as f64),
+        ("shed", snap.shed as f64),
+        ("deadline_exceeded", snap.deadline_exceeded as f64),
+        ("failed", snap.failed as f64),
+        ("worker_failures", snap.worker_failures as f64),
+        ("retries", snap.retries as f64),
     ] {
         row = row.num_field(k, v);
     }
@@ -413,11 +486,52 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse an optional numeric flag, warning (instead of silently ignoring)
+/// when the value does not parse — a mistyped `--queue-cap` or
+/// `--deadline-ms` must not quietly disable admission control.
+fn flag_u64(args: &cli::Args, name: &str) -> Option<u64> {
+    let raw = args.get(name)?;
+    match raw.parse::<u64>() {
+        Ok(v) => Some(v),
+        Err(_) => {
+            perq::log_warn!("--{name} {raw:?} is not a number — ignoring the flag");
+            None
+        }
+    }
+}
+
+/// Drop guard for `--metrics-out`: writes one final registry dump when the
+/// serve command exits by any path, including a panic unwinding through
+/// `cmd_serve`, so the on-disk snapshot always reflects the end of the run.
+struct MetricsFlushGuard {
+    path: PathBuf,
+    stats: Arc<ServerStats>,
+}
+
+impl Drop for MetricsFlushGuard {
+    fn drop(&mut self) {
+        if let Err(e) = write_metrics_files(&self.path, &self.stats) {
+            perq::log_warn!("final metrics dump failed: {e:#}");
+        }
+    }
+}
+
 /// Sibling path for the JSON half of a `--metrics-out` dump: `FILE.json`.
 fn metrics_json_path(prom: &Path) -> PathBuf {
     let mut s = prom.as_os_str().to_os_string();
     s.push(".json");
     PathBuf::from(s)
+}
+
+/// Write `contents` to `path` atomically: a scraper reading mid-dump sees
+/// either the previous complete file or the new one, never a torn write.
+fn write_atomic(path: &Path, contents: &str) -> Result<()> {
+    let mut tmp = path.as_os_str().to_os_string();
+    tmp.push(".tmp");
+    let tmp = PathBuf::from(tmp);
+    std::fs::write(&tmp, contents)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
 }
 
 /// Dump the server's metrics registry: Prometheus text exposition to
@@ -429,7 +543,7 @@ fn metrics_json_path(prom: &Path) -> PathBuf {
 fn write_metrics_files(prom: &Path, stats: &ServerStats) -> Result<()> {
     let mut text = stats.registry.render_prometheus();
     text.push_str(&perq::obs::metrics::global().render_prometheus());
-    std::fs::write(prom, text)?;
+    write_atomic(prom, &text)?;
     let mut o = match stats.snapshot().to_json() {
         Json::Obj(m) => m,
         _ => std::collections::BTreeMap::new(),
@@ -437,7 +551,7 @@ fn write_metrics_files(prom: &Path, stats: &ServerStats) -> Result<()> {
     o.insert("registry".to_string(), stats.registry.snapshot_json());
     o.insert("engine".to_string(), perq::obs::metrics::global().snapshot_json());
     o.insert("traces".to_string(), stats.traces.to_json());
-    std::fs::write(metrics_json_path(prom), json::dump(&Json::Obj(o)))?;
+    write_atomic(&metrics_json_path(prom), &json::dump(&Json::Obj(o)))?;
     Ok(())
 }
 

@@ -34,8 +34,12 @@ pub struct RequestTrace {
     pub total_ms: f64,
     /// decode steps this request rode (tokens after the first)
     pub decode_steps: u64,
-    /// false when the request was dropped by a backend error
+    /// false when the request did not complete (see `outcome`)
     pub ok: bool,
+    /// terminal state: "completed", "queue_full", "shed",
+    /// "deadline_exceeded", "worker_failed", or "shutting_down" —
+    /// mirrors the `ServeError` kind the client received
+    pub outcome: &'static str,
 }
 
 impl RequestTrace {
@@ -49,6 +53,7 @@ impl RequestTrace {
         o.insert("total_ms".to_string(), Json::Num(self.total_ms));
         o.insert("decode_steps".to_string(), Json::Num(self.decode_steps as f64));
         o.insert("ok".to_string(), Json::Bool(self.ok));
+        o.insert("outcome".to_string(), Json::Str(self.outcome.to_string()));
         Json::Obj(o)
     }
 }
@@ -112,6 +117,7 @@ mod tests {
             total_ms: 0.3,
             decode_steps: 0,
             ok: true,
+            outcome: "completed",
         }
     }
 
@@ -135,5 +141,6 @@ mod tests {
         let j = crate::util::json::dump(&tr.to_json());
         assert!(j.contains("\"kind\":\"score\""), "{j}");
         assert!(j.contains("\"ok\":true"), "{j}");
+        assert!(j.contains("\"outcome\":\"completed\""), "{j}");
     }
 }

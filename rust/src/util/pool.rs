@@ -390,9 +390,17 @@ pub fn resolve_workers(override_n: usize, env: Option<&str>, hw: usize) -> usize
     if override_n > 0 {
         return override_n.clamp(1, 64);
     }
-    if let Some(n) = env.and_then(|s| s.trim().parse::<usize>().ok()) {
-        if n > 0 {
-            return n.clamp(1, 64);
+    if let Some(raw) = env {
+        match raw.trim().parse::<usize>() {
+            Ok(n) if n > 0 => return n.clamp(1, 64),
+            // a mistyped PERQ_THREADS silently falling back to hardware
+            // detection hides sizing mistakes — name the bad value and
+            // what is used instead
+            _ => crate::log_warn!(
+                "PERQ_THREADS={raw:?} is not a positive lane count — \
+                 using detected parallelism ({})",
+                hw.clamp(1, 16)
+            ),
         }
     }
     hw.clamp(1, 16)

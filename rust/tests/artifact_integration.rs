@@ -244,8 +244,7 @@ fn inference_server_round_trip() {
         &bundle.cfg,
         &qm.ws,
         qm.extras.clone(),
-        std::time::Duration::from_millis(5),
-        1,
+        perq::coordinator::server::ServeOptions::new(std::time::Duration::from_millis(5), 1),
     )
     .unwrap();
     let toks = perq::data::corpus::token_stream(
@@ -263,7 +262,7 @@ fn inference_server_round_trip() {
     }
     let mut nlls = Vec::new();
     for rx in rxs {
-        let resp = rx.recv().unwrap();
+        let resp = rx.recv().unwrap().unwrap();
         assert!(resp.nll.is_finite() && resp.nll > 0.0);
         nlls.push(resp.nll);
     }
@@ -275,8 +274,8 @@ fn inference_server_round_trip() {
     assert!(mean < 3.2, "mean nll {mean}");
     // same window twice gives identical score (deterministic execution)
     let w: Vec<i32> = toks[..t + 1].iter().map(|&x| x as i32).collect();
-    let a = server.submit(w.clone()).unwrap().recv().unwrap().nll;
-    let b = server.submit(w).unwrap().recv().unwrap().nll;
+    let a = server.submit(w.clone()).unwrap().recv().unwrap().unwrap().nll;
+    let b = server.submit(w).unwrap().recv().unwrap().unwrap().nll;
     assert!((a - b).abs() < 1e-9);
     server.shutdown();
 }
@@ -295,8 +294,7 @@ fn server_rejects_bad_request_size() {
         &bundle.cfg,
         &qm.ws,
         qm.extras.clone(),
-        std::time::Duration::from_millis(5),
-        1,
+        perq::coordinator::server::ServeOptions::new(std::time::Duration::from_millis(5), 1),
     )
     .unwrap();
     assert!(server.submit(vec![0i32; 3]).is_err());

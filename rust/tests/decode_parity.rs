@@ -20,7 +20,7 @@ use std::cell::Cell;
 use std::time::Duration;
 
 use perq::backend::{ExecBackend, ForwardGraph, NativeBackend};
-use perq::coordinator::server::InferenceServer;
+use perq::coordinator::server::{InferenceServer, ServeError, ServeOptions, SubmitOpts};
 use perq::model::bundle::synthetic_weights;
 use perq::model::config::ModelConfig;
 use perq::model::transform;
@@ -303,8 +303,8 @@ fn serving_cfg() -> ModelConfig {
 /// come back indexed by the original window position.
 fn score_with_server(cfg: &ModelConfig, ws: &WeightSet, graph: &ForwardGraph,
                      windows: &[Vec<i32>], order: &[usize], workers: usize) -> Vec<f64> {
-    let server =
-        InferenceServer::start_native(cfg, ws, graph, Duration::from_millis(1), workers).unwrap();
+    let opts = ServeOptions::new(Duration::from_millis(1), workers);
+    let server = InferenceServer::start_native(cfg, ws, graph, opts).unwrap();
     let mut rxs: Vec<Option<std::sync::mpsc::Receiver<_>>> =
         (0..windows.len()).map(|_| None).collect();
     for &i in order {
@@ -312,7 +312,7 @@ fn score_with_server(cfg: &ModelConfig, ws: &WeightSet, graph: &ForwardGraph,
     }
     let nlls: Vec<f64> = rxs
         .into_iter()
-        .map(|rx| rx.expect("order is a permutation").recv().unwrap().nll)
+        .map(|rx| rx.expect("order is a permutation").recv().unwrap().unwrap().nll)
         .collect();
     server.shutdown();
     nlls
@@ -348,15 +348,87 @@ fn continuous_batching_nll_independent_of_order_and_replicas() {
 }
 
 #[test]
+fn oversubscription_rejections_are_deterministic() {
+    // 4x the queue capacity across 2 replicas: admission is resolved
+    // under ONE queue lock at submit time, so exactly the first `cap`
+    // arrivals are accepted and every later one resolves QueueFull —
+    // independent of replica scheduling. The accepted windows must score
+    // bit-identically no matter the arrival order (per-slot-independent
+    // scoring), and the rejection count must equal the oversubscription
+    // count exactly: no silent drops, no double resolutions.
+    let cfg = serving_cfg();
+    let ws = quantize_and_pack(&cfg, &synthetic_weights(&cfg, 21), Format::Int4);
+    let graph = ForwardGraph::Merged { r3_block: 8, format: Format::Int4 };
+    let t = cfg.seq_len;
+    let cap = 4usize;
+    let windows: Vec<Vec<i32>> = (0..4 * cap)
+        .map(|s| (0..t + 1).map(|i| ((5 * s + i) % cfg.vocab) as i32).collect())
+        .collect();
+    // uncapped single-replica baseline: the exact NLL of every window
+    let fwd: Vec<usize> = (0..windows.len()).collect();
+    let baseline = score_with_server(&cfg, &ws, &graph, &windows, &fwd, 1);
+
+    // both orders admit the same window SET {0..cap} but in different
+    // arrival order, and reject the same tail in different order
+    let mut order_b: Vec<usize> = vec![3, 1, 0, 2];
+    order_b.extend((cap..windows.len()).rev());
+    let mut accepted_nll: Vec<std::collections::BTreeMap<usize, f64>> = Vec::new();
+    for order in [&fwd, &order_b] {
+        let opts = ServeOptions::new(Duration::from_millis(1), 2).with_queue_cap(cap);
+        let server = InferenceServer::start_native(&cfg, &ws, &graph, opts).unwrap();
+        let batch: Vec<Vec<i32>> = order.iter().map(|&i| windows[i].clone()).collect();
+        let rxs = server.submit_batch(batch, SubmitOpts::default()).unwrap();
+        let mut got = std::collections::BTreeMap::new();
+        let mut rejected = 0usize;
+        for (k, rx) in rxs.into_iter().enumerate() {
+            match rx.recv().unwrap() {
+                Ok(resp) => {
+                    assert!(k < cap, "arrival #{k} is over capacity yet was admitted");
+                    got.insert(order[k], resp.nll);
+                }
+                Err(ServeError::QueueFull) => {
+                    assert!(k >= cap, "arrival #{k} fits under the cap yet was rejected");
+                    rejected += 1;
+                }
+                Err(e) => panic!("unexpected terminal state: {e:?}"),
+            }
+        }
+        assert_eq!(got.len(), cap);
+        assert_eq!(rejected, 3 * cap, "rejections must equal the oversubscription exactly");
+        let snap = server.snapshot();
+        assert_eq!(snap.submitted, (4 * cap) as u64);
+        assert_eq!(snap.served, cap as u64);
+        assert_eq!(snap.rejected, (3 * cap) as u64);
+        assert_eq!(snap.shed, 0, "equal-priority arrivals must never shed peers");
+        assert_eq!(snap.submitted, snap.served + snap.rejected);
+        for (&i, &nll) in &got {
+            assert!(
+                (nll - baseline[i]).abs() < 1e-12,
+                "window {i}: capped NLL {nll} drifted from baseline {}",
+                baseline[i]
+            );
+        }
+        accepted_nll.push(got);
+        server.shutdown();
+    }
+    for i in 0..cap {
+        assert_eq!(
+            accepted_nll[0][&i].to_bits(),
+            accepted_nll[1][&i].to_bits(),
+            "window {i}: accepted-set NLL must be bit-identical across arrival orders"
+        );
+    }
+}
+
+#[test]
 fn continuous_batching_generation_deterministic() {
     let cfg = serving_cfg();
     let ws = quantize_and_pack(&cfg, &synthetic_weights(&cfg, 22), Format::Int4);
     let graph = ForwardGraph::Merged { r3_block: 8, format: Format::Int4 };
     let prompts: Vec<Vec<i32>> = vec![vec![1, 4, 2], vec![7, 0], vec![3, 3, 5, 1]];
     let gen_all = |workers: usize, reverse: bool| -> Vec<Vec<i32>> {
-        let server =
-            InferenceServer::start_native(&cfg, &ws, &graph, Duration::from_millis(1), workers)
-                .unwrap();
+        let opts = ServeOptions::new(Duration::from_millis(1), workers);
+        let server = InferenceServer::start_native(&cfg, &ws, &graph, opts).unwrap();
         let idx: Vec<usize> = if reverse {
             (0..prompts.len()).rev().collect()
         } else {
@@ -369,7 +441,7 @@ fn continuous_batching_generation_deterministic() {
         }
         let out: Vec<Vec<i32>> = rxs
             .into_iter()
-            .map(|rx| rx.expect("covered").recv().unwrap().tokens)
+            .map(|rx| rx.expect("covered").recv().unwrap().unwrap().tokens)
             .collect();
         server.shutdown();
         out

@@ -9,7 +9,7 @@ use std::time::Duration;
 
 use perq::backend::NativeBackend;
 use perq::coordinator::presets;
-use perq::coordinator::server::InferenceServer;
+use perq::coordinator::server::{InferenceServer, ServeOptions};
 use perq::deploy::{self, artifact, DeployedModel};
 use perq::model::config::ModelConfig;
 use perq::prelude::*;
@@ -113,16 +113,16 @@ fn served_nll_bit_identical_to_in_process() {
     qm.save(&path).unwrap();
     let dm = DeployedModel::load(&path).unwrap();
 
-    let wait = Duration::from_millis(1);
-    let inproc = InferenceServer::start_native(&qm.cfg, &qm.ws, &qm.graph, wait, 1).unwrap();
-    let deployed = InferenceServer::start_deployed(&dm, wait, 1).unwrap();
+    let opts = ServeOptions::new(Duration::from_millis(1), 1);
+    let inproc = InferenceServer::start_native(&qm.cfg, &qm.ws, &qm.graph, opts).unwrap();
+    let deployed = InferenceServer::start_deployed(&dm, opts).unwrap();
     let t = qm.cfg.seq_len;
     for s in 0..3usize {
         let window: Vec<i32> = (0..t + 1)
             .map(|i| ((i * 11 + s * 5 + 1) % qm.cfg.vocab) as i32)
             .collect();
-        let a = inproc.submit(window.clone()).unwrap().recv().unwrap().nll;
-        let b = deployed.submit(window).unwrap().recv().unwrap().nll;
+        let a = inproc.submit(window.clone()).unwrap().recv().unwrap().unwrap().nll;
+        let b = deployed.submit(window).unwrap().recv().unwrap().unwrap().nll;
         assert_eq!(
             a.to_bits(),
             b.to_bits(),

@@ -1,0 +1,357 @@
+//! Fail-safe serving under deterministic fault injection.
+//!
+//! These tests prove the completion contract the server module documents:
+//! **every submitted request resolves to exactly one terminal state** —
+//! a response, `QueueFull`/`Shed`, `DeadlineExceeded`, `WorkerFailed`, or
+//! `ShuttingDown` — with the matching observability counters, no hangs
+//! and no silent drops, even while the engine step path is panicking,
+//! erroring, or crawling under an injected fault plan.
+//!
+//! The injection state (`perq::backend::native::fault`) is process-global,
+//! so every test that arms a plan serializes on one mutex and disarms via
+//! a drop guard (a failing assertion must not leave faults armed for the
+//! next test).
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::{Duration, Instant};
+
+use perq::backend::native::fault::{self, FaultPlan};
+use perq::backend::ForwardGraph;
+use perq::coordinator::server::{
+    InferenceServer, ServeError, ServeOptions, SubmitOpts,
+};
+use perq::model::bundle::synthetic_weights;
+use perq::model::config::ModelConfig;
+use perq::model::weights::WeightSet;
+use perq::quant::{Format, WeightCodec};
+use perq::tensor::QuantMat;
+use perq::util::json;
+
+/// Serialize fault-arming tests; recover a poisoned lock (an earlier
+/// test's panic must not cascade).
+fn serial() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+/// Disarms injection when dropped — including on unwind out of an assert.
+struct Disarm;
+impl Drop for Disarm {
+    fn drop(&mut self) {
+        fault::disarm();
+    }
+}
+
+fn arm(plan: FaultPlan) -> Disarm {
+    fault::arm(plan);
+    Disarm
+}
+
+fn serving_cfg() -> ModelConfig {
+    let j = json::parse(
+        r#"{"config": {"name": "failsafe", "n_layers": 1, "d_model": 16,
+            "n_heads": 2, "d_ffn": 32, "vocab": 8, "seq_len": 12,
+            "batch": 3, "block_sizes": [1, 8]}}"#,
+    )
+    .unwrap();
+    ModelConfig::from_meta(&j).unwrap()
+}
+
+fn quantize_and_pack(cfg: &ModelConfig, ws: &WeightSet, format: Format) -> WeightSet {
+    let mut out = ws.clone();
+    for site in cfg.linear_sites() {
+        let w = out.get(&site.name).clone();
+        let codec = WeightCodec::fit(format, &w);
+        let q = codec.quantize_mat(&w);
+        let packed = QuantMat::from_codec(&q, &codec).unwrap();
+        out.set(&site.name, q);
+        out.set_packed(&site.name, packed);
+    }
+    out
+}
+
+fn setup() -> (ModelConfig, WeightSet, ForwardGraph) {
+    let cfg = serving_cfg();
+    let ws = quantize_and_pack(&cfg, &synthetic_weights(&cfg, 21), Format::Int4);
+    let graph = ForwardGraph::Merged { r3_block: 8, format: Format::Int4 };
+    (cfg, ws, graph)
+}
+
+fn window(cfg: &ModelConfig, s: usize) -> Vec<i32> {
+    (0..cfg.seq_len + 1).map(|i| ((3 * s + i) % cfg.vocab) as i32).collect()
+}
+
+/// submitted == served + rejected + deadline_exceeded + failed, exactly.
+fn assert_accounting(server: &InferenceServer) {
+    let snap = server.snapshot();
+    assert_eq!(
+        snap.submitted,
+        snap.served + snap.rejected + snap.deadline_exceeded + snap.failed,
+        "completion contract violated: {} submitted vs {} served + {} rejected + \
+         {} deadline-exceeded + {} failed",
+        snap.submitted,
+        snap.served,
+        snap.rejected,
+        snap.deadline_exceeded,
+        snap.failed,
+    );
+    assert!(snap.shed <= snap.rejected, "shed must be a subset of rejected");
+}
+
+#[test]
+fn panic_during_score_is_retried_to_the_exact_nll() {
+    let _s = serial();
+    let (cfg, ws, graph) = setup();
+    // clean baseline first (no faults armed)
+    let opts = ServeOptions::new(Duration::from_millis(1), 1);
+    let clean = InferenceServer::start_native(&cfg, &ws, &graph, opts).unwrap();
+    let baseline: Vec<f64> = (0..3usize)
+        .map(|s| clean.submit(window(&cfg, s)).unwrap().recv().unwrap().unwrap().nll)
+        .collect();
+    clean.shutdown();
+
+    // the FIRST engine step panics: the replica is poisoned and respawned,
+    // the in-flight score batch is requeued (score requests are safe to
+    // retry — nothing was streamed) and must come back bit-identical
+    let _g = arm(FaultPlan { panic_step: Some(1), ..FaultPlan::default() });
+    let server = InferenceServer::start_native(&cfg, &ws, &graph, opts).unwrap();
+    let rxs: Vec<_> =
+        (0..3usize).map(|s| server.submit(window(&cfg, s)).unwrap()).collect();
+    for (s, rx) in rxs.into_iter().enumerate() {
+        let nll = rx.recv().unwrap().expect("retried score must succeed").nll;
+        assert_eq!(
+            nll.to_bits(),
+            baseline[s].to_bits(),
+            "window {s}: NLL after a worker failure + retry must be exact"
+        );
+    }
+    let snap = server.snapshot();
+    assert_eq!(snap.worker_failures, 1, "exactly one replica poisoning");
+    assert!(snap.retries >= 1, "the failed batch must have been retried");
+    assert_eq!(snap.served, 3);
+    assert_eq!(snap.failed, 0);
+    assert_accounting(&server);
+    server.shutdown();
+}
+
+#[test]
+fn panic_during_decode_fails_generations_but_not_the_server() {
+    let _s = serial();
+    let (cfg, ws, graph) = setup();
+    // step 1 = generation prefill, steps 2.. = decode: panic mid-stream.
+    // A partially-generated request must NEVER be retried (tokens already
+    // left the engine once) — it fails with WorkerFailed while the replica
+    // respawns and keeps serving new work.
+    let _g = arm(FaultPlan { panic_step: Some(3), ..FaultPlan::default() });
+    let opts = ServeOptions::new(Duration::from_millis(1), 1);
+    let server = InferenceServer::start_native(&cfg, &ws, &graph, opts).unwrap();
+    let rx = server.submit_generate(vec![1, 4, 2], 6).unwrap();
+    match rx.recv().unwrap() {
+        Err(ServeError::WorkerFailed) => {}
+        other => panic!("mid-stream panic must fail the generation, got {other:?}"),
+    }
+    // the respawned replica still serves (the plan fires only at step 3)
+    let nll = server
+        .submit(window(&cfg, 0))
+        .unwrap()
+        .recv()
+        .unwrap()
+        .expect("server must keep serving after a poisoning")
+        .nll;
+    assert!(nll.is_finite());
+    let snap = server.snapshot();
+    assert_eq!(snap.worker_failures, 1);
+    assert_eq!(snap.failed, 1, "the generation is lost, not retried");
+    assert_eq!(snap.served, 1);
+    assert_accounting(&server);
+    server.shutdown();
+}
+
+#[test]
+fn queue_cap_sheds_by_priority_and_rejects_peers() {
+    let _s = serial();
+    let (cfg, ws, graph) = setup();
+    // hold the single replica inside a slow engine step so the intake
+    // queue actually fills while we submit
+    let _g = arm(FaultPlan { slow_step: Some((1, 250)), ..FaultPlan::default() });
+    let opts = ServeOptions::new(Duration::from_millis(1), 1).with_queue_cap(2);
+    let server = InferenceServer::start_native(&cfg, &ws, &graph, opts).unwrap();
+
+    // A is popped by the replica (now crawling through its slow step)...
+    let rx_a = server.submit(window(&cfg, 0)).unwrap();
+    std::thread::sleep(Duration::from_millis(100));
+    // ...so B and C fill the queue to its cap of 2
+    let rx_b = server.submit(window(&cfg, 1)).unwrap();
+    let rx_c = server.submit(window(&cfg, 2)).unwrap();
+    // D outranks the queue's back → C (lowest-priority, newest) is shed
+    let rx_d = server
+        .submit_with(window(&cfg, 3), SubmitOpts { priority: 1, deadline: None })
+        .unwrap();
+    // E ties with the back → rejected outright (equal priority never sheds
+    // a peer, so two priority-0 floods cannot livelock each other)
+    let rx_e = server.submit(window(&cfg, 4)).unwrap();
+
+    assert!(matches!(rx_c.recv().unwrap(), Err(ServeError::Shed)));
+    assert!(matches!(rx_e.recv().unwrap(), Err(ServeError::QueueFull)));
+    assert!(rx_a.recv().unwrap().is_ok(), "in-flight work is never shed");
+    assert!(rx_d.recv().unwrap().is_ok(), "the high-priority request is served");
+    assert!(rx_b.recv().unwrap().is_ok(), "the surviving queued request is served");
+    let snap = server.snapshot();
+    assert_eq!(snap.served, 3);
+    assert_eq!(snap.shed, 1);
+    assert_eq!(snap.rejected, 2, "shed counts inside rejected");
+    assert_accounting(&server);
+    server.shutdown();
+}
+
+#[test]
+fn deadline_fires_between_decode_steps() {
+    let _s = serial();
+    let (cfg, ws, graph) = setup();
+    // prefill is fast (step 1), every decode step crawls: a generation
+    // with a tight deadline must be cancelled BETWEEN steps — after some
+    // tokens streamed, before the budget is burned on the rest
+    let _g = arm(FaultPlan { slow_step: Some((2, 120)), ..FaultPlan::default() });
+    let opts = ServeOptions::new(Duration::from_millis(1), 1);
+    let server = InferenceServer::start_native(&cfg, &ws, &graph, opts).unwrap();
+    let rx = server
+        .submit_generate_with(
+            vec![1, 4, 2],
+            8,
+            SubmitOpts { priority: 0, deadline: Some(Instant::now() + Duration::from_millis(150)) },
+        )
+        .unwrap();
+    let t0 = Instant::now();
+    match rx.recv().unwrap() {
+        Err(ServeError::DeadlineExceeded) => {}
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+    // cancelled between steps — not after all 8 slow steps (~960ms)
+    assert!(
+        t0.elapsed() < Duration::from_millis(700),
+        "cancellation must not wait for the full generation"
+    );
+    let snap = server.snapshot();
+    assert_eq!(snap.deadline_exceeded, 1);
+    assert_eq!(snap.served, 0);
+    assert_accounting(&server);
+    server.shutdown();
+}
+
+#[test]
+fn expired_deadline_is_dropped_at_batch_forming() {
+    let _s = serial();
+    let (cfg, ws, graph) = setup();
+    // no faults: an already-expired deadline must cost zero engine work
+    let opts = ServeOptions::new(Duration::from_millis(1), 1);
+    let server = InferenceServer::start_native(&cfg, &ws, &graph, opts).unwrap();
+    let rx = server
+        .submit_with(
+            window(&cfg, 0),
+            SubmitOpts { priority: 0, deadline: Some(Instant::now() - Duration::from_millis(5)) },
+        )
+        .unwrap();
+    assert!(matches!(rx.recv().unwrap(), Err(ServeError::DeadlineExceeded)));
+    // a fresh request right behind it is unaffected
+    assert!(server.submit(window(&cfg, 1)).unwrap().recv().unwrap().is_ok());
+    let snap = server.snapshot();
+    assert_eq!(snap.deadline_exceeded, 1);
+    assert_eq!(snap.served, 1);
+    assert_accounting(&server);
+    server.shutdown();
+}
+
+#[test]
+fn drain_timeout_aborts_a_wedged_replica() {
+    let _s = serial();
+    let (cfg, ws, graph) = setup();
+    // every step takes ~400ms; the drain budget is 50ms — shutdown() must
+    // come back promptly (abort flag + step interrupt), and the wedged
+    // request must still resolve exactly once
+    let _g = arm(FaultPlan { slow_step: Some((1, 400)), ..FaultPlan::default() });
+    let opts =
+        ServeOptions::new(Duration::from_millis(1), 1).with_drain_timeout(Duration::from_millis(50));
+    let server = InferenceServer::start_native(&cfg, &ws, &graph, opts).unwrap();
+    let rx = server.submit(window(&cfg, 0)).unwrap();
+    std::thread::sleep(Duration::from_millis(40)); // let the replica pop it
+    let t0 = Instant::now();
+    server.shutdown();
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "shutdown must not hang on a wedged step"
+    );
+    // terminal state: served (step finished before the abort landed) or
+    // ShuttingDown / WorkerFailed — but never silence
+    let outcome = rx
+        .recv_timeout(Duration::from_secs(5))
+        .expect("the in-flight request must resolve during drain");
+    match outcome {
+        Ok(_) | Err(ServeError::ShuttingDown) | Err(ServeError::WorkerFailed) => {}
+        other => panic!("unexpected terminal state: {other:?}"),
+    }
+}
+
+#[test]
+fn accounting_holds_under_mixed_faults_and_oversubscription() {
+    let _s = serial();
+    let (cfg, ws, graph) = setup();
+    // the first engine step returns an error (not a panic): the whole
+    // score batch is retried once and succeeds; meanwhile the queue cap
+    // rejects the oversubscribed tail and an expired deadline resolves
+    // without engine work — the equation must still balance exactly
+    let _g = arm(FaultPlan { fail_step: Some(1), ..FaultPlan::default() });
+    let opts = ServeOptions::new(Duration::from_millis(1), 1).with_queue_cap(3);
+    let server = InferenceServer::start_native(&cfg, &ws, &graph, opts).unwrap();
+    // resolve the expired-deadline request FIRST so it cannot race the
+    // batch for queue capacity (it is dropped at batch-forming time and
+    // costs no engine step, so the fault plan's step numbering holds)
+    let rx_dead = server
+        .submit_with(
+            window(&cfg, 9),
+            SubmitOpts { priority: 0, deadline: Some(Instant::now() - Duration::from_millis(1)) },
+        )
+        .unwrap();
+    assert!(matches!(rx_dead.recv().unwrap(), Err(ServeError::DeadlineExceeded)));
+    let windows: Vec<Vec<i32>> = (0..8).map(|s| window(&cfg, s)).collect();
+    let rxs = server.submit_batch(windows, SubmitOpts::default()).unwrap();
+    let mut served = 0usize;
+    let mut queue_full = 0usize;
+    for rx in rxs {
+        match rx.recv().unwrap() {
+            Ok(resp) => {
+                assert!(resp.nll.is_finite());
+                served += 1;
+            }
+            Err(ServeError::QueueFull) => queue_full += 1,
+            Err(e) => panic!("unexpected terminal state: {e:?}"),
+        }
+    }
+    assert_eq!(served, 3, "the capped prefix is retried through the engine error");
+    assert_eq!(queue_full, 5);
+    let snap = server.snapshot();
+    assert_eq!(snap.submitted, 9);
+    assert_eq!(snap.served, 3);
+    assert_eq!(snap.rejected, 5);
+    assert_eq!(snap.deadline_exceeded, 1);
+    assert_eq!(snap.failed, 0);
+    assert!(snap.retries >= 1, "the engine error must surface as retries");
+    assert_eq!(snap.worker_failures, 0, "an engine error is not a poisoning");
+    assert_accounting(&server);
+    server.shutdown();
+}
+
+#[test]
+fn fault_plan_spec_round_trips() {
+    // the CLI-facing grammar: good clauses arm, junk is reported (never
+    // silently dropped)
+    let (plan, rejected) = fault::parse("panic_step:3, slow_step:2:50, fail_step:7");
+    assert_eq!(plan.panic_step, Some(3));
+    assert_eq!(plan.slow_step, Some((2, 50)));
+    assert_eq!(plan.fail_step, Some(7));
+    assert!(rejected.is_empty());
+    let (plan, rejected) = fault::parse("panic_step:0,wat,slow_step:1");
+    assert!(plan.is_empty());
+    assert_eq!(rejected.len(), 3);
+}

@@ -346,12 +346,13 @@ fn quantize_and_pack(cfg: &ModelConfig, ws: &WeightSet, format: Format) -> Weigh
 
 fn serve_nlls(cfg: &ModelConfig, ws: &WeightSet, graph: &ForwardGraph,
               num_workers: usize, windows: &[Vec<i32>]) -> Vec<f64> {
-    let server =
-        InferenceServer::start_native(cfg, ws, graph, Duration::from_millis(1), num_workers)
-            .unwrap();
+    let opts =
+        perq::coordinator::server::ServeOptions::new(Duration::from_millis(1), num_workers);
+    let server = InferenceServer::start_native(cfg, ws, graph, opts).unwrap();
     assert_eq!(server.num_workers(), num_workers);
     let rxs: Vec<_> = windows.iter().map(|w| server.submit(w.clone()).unwrap()).collect();
-    let nlls: Vec<f64> = rxs.into_iter().map(|rx| rx.recv().unwrap().nll).collect();
+    let nlls: Vec<f64> =
+        rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap().nll).collect();
     let (served, batches, _) = server.stats();
     assert_eq!(served, windows.len() as u64);
     assert!(batches >= 1);
