@@ -1,0 +1,261 @@
+//! Load generator for the HTTP front door: closed- and open-loop request
+//! streams against `perq serve --http`, with exponential backoff that
+//! honors `Retry-After` on 429/503, exact client-side latency percentiles
+//! (sorted samples, not histogram buckets), and a goodput summary appended
+//! to `BENCH_serve.json`.
+//!
+//!     cargo run --release --example load_gen [--addr HOST:PORT] \
+//!         [--mode closed|open] [--conns N] [--qps Q] [--duration-ms MS] \
+//!         [--seq-len T] [--vocab V] [--workers W] [--queue-cap N] \
+//!         [--out FILE]
+//!
+//! Without `--addr` a tiny synthetic model is served in-process on a free
+//! port (so the harness runs anywhere, CI included); `--seq-len`/`--vocab`
+//! must match the target model when pointing at an external server, since
+//! score requests carry exactly `seq_len + 1` token ids.
+//!
+//! Closed loop: `--conns` threads each keep one request in flight —
+//! throughput finds its own level. Open loop: the same threads pace
+//! arrivals at `--qps` regardless of completions — the harness that shows
+//! queueing collapse and back-pressure (429/503) instead of hiding them.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use perq::backend::ForwardGraph;
+use perq::coordinator::http::{HttpOptions, HttpServer};
+use perq::coordinator::net::client;
+use perq::coordinator::server::{InferenceServer, ServeOptions};
+use perq::model::bundle::synthetic_weights;
+use perq::model::config::ModelConfig;
+use perq::quant::{Format, WeightCodec};
+use perq::tensor::QuantMat;
+use perq::util::bench::TrajectoryRow;
+use perq::util::{cli, json};
+
+const CLIENT_TIMEOUT: Duration = Duration::from_secs(30);
+const MAX_BACKOFF_MS: u64 = 500;
+
+/// One worker's view of the run.
+#[derive(Default)]
+struct Tally {
+    /// latencies of successful attempts, milliseconds
+    lats_ms: Vec<f64>,
+    ok: u64,
+    /// 429/503 responses (each one backed off and retried)
+    backpressure: u64,
+    /// non-back-pressure failures: 4xx/5xx or transport errors
+    errors: u64,
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = cli::parse(&argv);
+    let mode = args.get_or("mode", "closed");
+    anyhow::ensure!(
+        mode == "closed" || mode == "open",
+        "--mode must be `closed` or `open`, got {mode:?}"
+    );
+    let conns = flag_u64(&args, "conns", 4).max(1) as usize;
+    let qps = flag_u64(&args, "qps", 50).max(1);
+    let duration = Duration::from_millis(flag_u64(&args, "duration-ms", 2_000).max(1));
+    let seq_len = flag_u64(&args, "seq-len", 12).max(2) as usize;
+    let vocab = flag_u64(&args, "vocab", 8).max(2) as usize;
+    let out = args.get_or("out", "BENCH_serve.json");
+
+    // target: an external front door, or an in-process synthetic one
+    let mut local: Option<(HttpServer, Arc<InferenceServer>)> = None;
+    let addr = match args.get("addr") {
+        Some(a) => a.to_string(),
+        None => {
+            let (http, server, addr) = start_local(&args, seq_len, vocab)?;
+            println!("no --addr: serving a synthetic model in-process on {addr}");
+            local = Some((http, server));
+            addr
+        }
+    };
+
+    // one request body per worker, varied by worker index (the engine cost
+    // is shape-bound, not value-bound, so this is purely cosmetic)
+    let bodies: Vec<Vec<u8>> = (0..conns)
+        .map(|w| {
+            let tokens: Vec<i32> =
+                (0..seq_len + 1).map(|i| ((3 * w + i) % vocab) as i32).collect();
+            format!("{{\"tokens\":{tokens:?}}}").into_bytes()
+        })
+        .collect();
+
+    println!(
+        "load_gen: mode={mode} conns={conns}{} duration={:.1}s target={addr}",
+        if mode == "open" { format!(" qps={qps}") } else { String::new() },
+        duration.as_secs_f64()
+    );
+    let t0 = Instant::now();
+    let deadline = t0 + duration;
+    let mut handles = Vec::new();
+    for (w, body) in bodies.into_iter().enumerate() {
+        let addr = addr.clone();
+        let mode = mode.clone();
+        // each worker paces its share of the open-loop arrival rate
+        let gap = Duration::from_secs_f64(conns as f64 / qps as f64);
+        handles.push(std::thread::spawn(move || {
+            run_worker(&addr, &body, &mode, gap, deadline, w)
+        }));
+    }
+    let mut all = Tally::default();
+    for h in handles {
+        let t = h.join().expect("worker panicked");
+        all.lats_ms.extend(t.lats_ms);
+        all.ok += t.ok;
+        all.backpressure += t.backpressure;
+        all.errors += t.errors;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    all.lats_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |q: f64| -> f64 {
+        if all.lats_ms.is_empty() {
+            return 0.0;
+        }
+        all.lats_ms[((all.lats_ms.len() - 1) as f64 * q) as usize]
+    };
+    let (p50, p95, p99) = (pct(0.50), pct(0.95), pct(0.99));
+    let goodput = all.ok as f64 / wall;
+    println!(
+        "done in {wall:.2}s: {} ok, {} back-pressured, {} errors | \
+         goodput {goodput:.1} req/s | lat p50 {p50:.1}ms p95 {p95:.1}ms p99 {p99:.1}ms",
+        all.ok, all.backpressure, all.errors
+    );
+
+    // the server's own view, when we own the server
+    if let Some((http, _server)) = local {
+        let snap = http.stats().snapshot();
+        println!(
+            "server counters: submitted={} served={} rejected={} \
+             deadline_exceeded={} failed={}",
+            snap.submitted, snap.served, snap.rejected, snap.deadline_exceeded,
+            snap.failed
+        );
+        http.shutdown();
+    }
+
+    TrajectoryRow::new("serve")
+        .str_field("mode", &mode)
+        .num_field("conns", conns as f64)
+        .num_field("target_qps", if mode == "open" { qps as f64 } else { 0.0 })
+        .num_field("duration_s", wall)
+        .num_field("ok", all.ok as f64)
+        .num_field("backpressure", all.backpressure as f64)
+        .num_field("errors", all.errors as f64)
+        .num_field("goodput_rps", goodput)
+        .num_field("p50_ms", p50)
+        .num_field("p95_ms", p95)
+        .num_field("p99_ms", p99)
+        .append_to(Path::new(&out))?;
+    println!("appended the run to {out}");
+    Ok(())
+}
+
+/// One worker: closed loop keeps a single request in flight; open loop
+/// paces arrivals on a fixed clock no matter how the last request fared.
+fn run_worker(addr: &str, body: &[u8], mode: &str, gap: Duration,
+              deadline: Instant, w: usize) -> Tally {
+    let mut t = Tally::default();
+    let mut next_arrival = Instant::now() + gap.mul_f64((w % 7) as f64 / 7.0);
+    while Instant::now() < deadline {
+        if mode == "open" {
+            let now = Instant::now();
+            if now < next_arrival {
+                std::thread::sleep(next_arrival - now);
+            }
+            // fixed schedule: late workers skip sleeping, never re-anchor
+            next_arrival += gap;
+        }
+        let mut backoff = Duration::from_millis(5);
+        // one logical request: retry through back-pressure until it lands
+        // or the run ends
+        loop {
+            let attempt = Instant::now();
+            if attempt >= deadline {
+                break;
+            }
+            match client::request(addr, "POST", "/v1/score", &[], body, CLIENT_TIMEOUT) {
+                Ok(resp) if resp.status == 200 => {
+                    t.ok += 1;
+                    t.lats_ms.push(attempt.elapsed().as_secs_f64() * 1e3);
+                    break;
+                }
+                Ok(resp) if resp.status == 429 || resp.status == 503 => {
+                    t.backpressure += 1;
+                    // honor Retry-After when present, otherwise double up
+                    let wait = resp
+                        .header("retry-after")
+                        .and_then(|v| v.parse::<u64>().ok())
+                        .map(|s| Duration::from_secs(s).min(Duration::from_millis(MAX_BACKOFF_MS)))
+                        .unwrap_or(backoff);
+                    std::thread::sleep(wait.min(deadline.saturating_duration_since(Instant::now())));
+                    backoff = (backoff * 2).min(Duration::from_millis(MAX_BACKOFF_MS));
+                }
+                Ok(_) | Err(_) => {
+                    t.errors += 1;
+                    break;
+                }
+            }
+        }
+    }
+    t
+}
+
+/// Spin up the in-process target: a tiny INT4-packed synthetic model
+/// behind the HTTP front door on `127.0.0.1:0`.
+fn start_local(args: &cli::Args, seq_len: usize, vocab: usize)
+               -> Result<(HttpServer, Arc<InferenceServer>, String)> {
+    let j = json::parse(&format!(
+        r#"{{"config": {{"name": "load_gen", "n_layers": 1, "d_model": 16,
+            "n_heads": 2, "d_ffn": 32, "vocab": {vocab}, "seq_len": {seq_len},
+            "batch": 3, "block_sizes": [1, 8]}}}}"#,
+    ))?;
+    let cfg = ModelConfig::from_meta(&j)?;
+    let mut ws = synthetic_weights(&cfg, 21);
+    for site in cfg.linear_sites() {
+        let w = ws.get(&site.name).clone();
+        let codec = WeightCodec::fit(Format::Int4, &w);
+        let q = codec.quantize_mat(&w);
+        let packed = QuantMat::from_codec(&q, &codec)?;
+        ws.set(&site.name, q);
+        ws.set_packed(&site.name, packed);
+    }
+    let graph = ForwardGraph::Merged { r3_block: 8, format: Format::Int4 };
+    let mut opts = ServeOptions::new(
+        Duration::from_millis(1),
+        flag_u64(args, "workers", 1).max(1) as usize,
+    );
+    let queue_cap = flag_u64(args, "queue-cap", 8) as usize;
+    if queue_cap > 0 {
+        opts = opts.with_queue_cap(queue_cap);
+    }
+    let server = Arc::new(InferenceServer::start_native(&cfg, &ws, &graph, opts)?);
+    let http = HttpServer::start(Arc::clone(&server), "127.0.0.1:0",
+                                 HttpOptions::default())?;
+    let addr = http.local_addr().to_string();
+    Ok((http, server, addr))
+}
+
+/// A `--flag N` that warns on garbage instead of silently using the
+/// default (the repo-wide warned-knob pattern).
+fn flag_u64(args: &cli::Args, name: &str, default: u64) -> u64 {
+    match args.get(name) {
+        None => default,
+        Some(raw) => match raw.parse::<u64>() {
+            Ok(v) => v,
+            Err(_) => {
+                perq::log_warn!(
+                    "--{name} {raw:?} is not a number — using default {default}"
+                );
+                default
+            }
+        },
+    }
+}

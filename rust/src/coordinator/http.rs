@@ -1,0 +1,740 @@
+//! The network front door: a dependency-free HTTP/1.1 server over
+//! `std::net::TcpListener` exposing an [`InferenceServer`] to real
+//! clients.
+//!
+//! Endpoints:
+//!
+//! | endpoint            | method | body / response                           |
+//! |---------------------|--------|-------------------------------------------|
+//! | `/v1/score`         | POST   | `{"tokens":[...]}` → `{"nll",...}`        |
+//! | `/v1/generate`      | POST   | `{"prompt":[...],"max_new_tokens":N}` → NDJSON token chunks (or one JSON object with `"stream":false`) |
+//! | `/healthz`          | GET    | liveness — 200 while the process runs     |
+//! | `/readyz`           | GET    | readiness — 503 the instant drain begins  |
+//! | `/metrics`          | GET    | Prometheus text (server + engine registries) |
+//! | `/traces`           | GET    | recent per-request traces as JSON         |
+//!
+//! The robustness layer is the point, not the parsing. Admission is
+//! bounded end to end: over `--max-conns` concurrent connections get an
+//! immediate 503 + `Retry-After`; reads and writes carry socket timeouts
+//! so a slowloris costs one 408, never a wedged worker thread; request
+//! bodies are capped (413). `ServeError` maps exactly onto status codes
+//! ([`status_for`]) so the PR 7 completion contract
+//! (`submitted == served + rejected + deadline_exceeded + failed`) is
+//! observable from the client side. A `Perq-Deadline-Ms` header becomes a
+//! [`SubmitOpts`] deadline; a client that disconnects mid-stream flips the
+//! request's cancel flag and the worker frees the decode slot at its next
+//! sweep. SIGTERM triggers graceful drain: `/readyz` goes 503 immediately,
+//! new work is refused, in-flight requests get `--drain-timeout-ms` to
+//! finish before the server aborts them.
+//!
+//! Connection-level failures are deterministic under test via the
+//! `PERQ_NET_FAULT` harness in [`crate::coordinator::net::fault`].
+
+use crate::coordinator::net::{self, Conn, HttpRequest, ReadOutcome};
+use crate::coordinator::server::{
+    GenerateResponse, InferenceServer, ServeError, ServeResult, ServerStats, SubmitOpts,
+};
+use crate::obs::metrics::{Counter, Gauge, Registry};
+use crate::util::json::{self, Json};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+/// Connection-level policy for the front door.
+#[derive(Clone, Copy, Debug)]
+pub struct HttpOptions {
+    /// concurrent-connection cap; the accept loop answers 503 +
+    /// `Retry-After` beyond it without spawning a handler
+    pub max_conns: usize,
+    /// per-connection socket read timeout (slowloris bound → 408)
+    pub read_timeout: Duration,
+    /// per-connection socket write timeout
+    pub write_timeout: Duration,
+    /// request-body cap in bytes (413 beyond)
+    pub max_body: usize,
+    /// how long in-flight requests get to finish once drain begins
+    pub drain_timeout: Duration,
+}
+
+impl Default for HttpOptions {
+    fn default() -> HttpOptions {
+        HttpOptions {
+            max_conns: 64,
+            read_timeout: Duration::from_secs(5),
+            write_timeout: Duration::from_secs(5),
+            max_body: 1 << 20,
+            drain_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// The exact `ServeError` → HTTP status mapping. Exhaustive on purpose:
+/// adding a `ServeError` variant without deciding its client-visible
+/// status fails to compile.
+pub fn status_for(err: ServeError) -> u16 {
+    match err {
+        ServeError::QueueFull => 429,
+        ServeError::Shed => 429,
+        ServeError::DeadlineExceeded => 504,
+        ServeError::WorkerFailed => 500,
+        ServeError::ShuttingDown => 503,
+        ServeError::Cancelled => 499,
+    }
+}
+
+/// Front-door counters, registered in the *server's* registry so one
+/// `/metrics` scrape (and the `--metrics-out` dump) sees request
+/// accounting and connection accounting side by side.
+struct HttpMetrics {
+    registry: Arc<Registry>,
+    conns: Arc<Counter>,
+    conns_rejected: Arc<Counter>,
+    active: Arc<Gauge>,
+    requests: Arc<Counter>,
+    bad_requests: Arc<Counter>,
+    disconnects: Arc<Counter>,
+}
+
+impl HttpMetrics {
+    fn new(registry: Arc<Registry>) -> HttpMetrics {
+        let conns = registry.counter("perq_http_connections_total",
+                                     "TCP connections accepted");
+        let conns_rejected = registry.counter(
+            "perq_http_connections_rejected_total",
+            "connections answered 503 at accept (over --max-conns)");
+        let active = registry.gauge("perq_http_active_connections",
+                                    "connections currently being handled");
+        let requests = registry.counter("perq_http_requests_total",
+                                        "HTTP requests parsed off the wire");
+        let bad_requests = registry.counter(
+            "perq_http_bad_requests_total",
+            "requests refused before reaching the server (4xx/5xx parse class)");
+        let disconnects = registry.counter(
+            "perq_http_client_disconnects_total",
+            "clients that vanished mid-response (write failed)");
+        HttpMetrics { registry, conns, conns_rejected, active, requests,
+                      bad_requests, disconnects }
+    }
+
+    /// Per-status response counter, created on first use.
+    fn count_status(&self, status: u16) {
+        self.registry
+            .counter(&format!("perq_http_status_{status}_total"),
+                     "HTTP responses by status code")
+            .inc();
+    }
+}
+
+/// State shared by the accept loop and every connection handler.
+struct Shared {
+    server: Arc<InferenceServer>,
+    stats: Arc<ServerStats>,
+    opts: HttpOptions,
+    /// drain begun: `/readyz` → 503, POSTs → 503, responses close
+    draining: AtomicBool,
+    /// accept loop must exit
+    stopped: AtomicBool,
+    active_conns: AtomicUsize,
+    handlers: Mutex<Vec<JoinHandle<()>>>,
+    m: HttpMetrics,
+}
+
+/// A running HTTP front door. Dropping it (or calling [`shutdown`])
+/// drains gracefully: in-flight work gets [`HttpOptions::drain_timeout`]
+/// to finish, then the engine aborts the rest so the process never hangs.
+///
+/// [`shutdown`]: HttpServer::shutdown
+pub struct HttpServer {
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    local: SocketAddr,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `127.0.0.1:8080`; port 0 picks a free port) and
+    /// start accepting. The inference server keeps running until the
+    /// front door drains.
+    pub fn start(server: Arc<InferenceServer>, addr: &str,
+                 opts: HttpOptions) -> Result<HttpServer> {
+        net::fault::load_env_once();
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding http listener on {addr}"))?;
+        let local = listener.local_addr().context("listener local_addr")?;
+        // nonblocking so the accept loop can notice `stopped` promptly;
+        // accepted sockets do NOT inherit this and go back to blocking
+        // reads bounded by the socket timeouts.
+        listener.set_nonblocking(true).context("set_nonblocking")?;
+        let stats = server.shared_stats();
+        let m = HttpMetrics::new(server.registry());
+        let shared = Arc::new(Shared {
+            server,
+            stats,
+            opts,
+            draining: AtomicBool::new(false),
+            stopped: AtomicBool::new(false),
+            active_conns: AtomicUsize::new(0),
+            handlers: Mutex::new(Vec::new()),
+            m,
+        });
+        let accept_shared = Arc::clone(&shared);
+        let accept = thread::Builder::new()
+            .name("perq-http-accept".into())
+            .spawn(move || accept_loop(&listener, &accept_shared))
+            .context("spawning accept thread")?;
+        Ok(HttpServer { shared, accept: Some(accept), local })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Begin graceful drain *without blocking*: `/readyz` flips to 503 and
+    /// new POSTs are refused immediately; the engine stops admitting and
+    /// finishes what it holds. Idempotent.
+    pub fn begin_drain(&self) {
+        if !self.shared.draining.swap(true, Ordering::SeqCst) {
+            self.shared.server.begin_shutdown();
+        }
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.shared.draining.load(Ordering::SeqCst)
+    }
+
+    /// The server-side stats this front door reports through.
+    pub fn stats(&self) -> Arc<ServerStats> {
+        Arc::clone(&self.shared.stats)
+    }
+
+    /// Drain and stop: [`begin_drain`], wait up to
+    /// [`HttpOptions::drain_timeout`] for in-flight connections, abort
+    /// whatever is still running, then join the accept and handler
+    /// threads.
+    ///
+    /// [`begin_drain`]: HttpServer::begin_drain
+    pub fn shutdown(mut self) {
+        self.drain_impl();
+    }
+
+    fn drain_impl(&mut self) {
+        self.begin_drain();
+        let deadline = Instant::now() + self.shared.opts.drain_timeout;
+        while self.shared.active_conns.load(Ordering::SeqCst) > 0
+            && Instant::now() < deadline
+        {
+            thread::sleep(Duration::from_millis(5));
+        }
+        if self.shared.active_conns.load(Ordering::SeqCst) > 0 {
+            // drain timeout: fail the stragglers (their handlers observe
+            // ShuttingDown and answer 503) rather than hang the process
+            self.shared.server.abort_in_flight();
+        }
+        self.shared.stopped.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let handlers = std::mem::take(&mut *self.shared.handlers.lock().unwrap());
+        for h in handlers {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        if self.accept.is_some() {
+            self.drain_impl();
+        }
+    }
+}
+
+fn accept_loop(listener: &TcpListener, shared: &Arc<Shared>) {
+    loop {
+        if shared.stopped.load(Ordering::SeqCst) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let id = net::fault::next_conn_id();
+                shared.m.conns.inc();
+                if net::fault::accept_close(id) {
+                    // injected: the client vanished between accept and read
+                    drop(stream);
+                    continue;
+                }
+                if shared.active_conns.load(Ordering::SeqCst) >= shared.opts.max_conns {
+                    reject_over_limit(shared, stream);
+                    continue;
+                }
+                shared.active_conns.fetch_add(1, Ordering::SeqCst);
+                shared.m.active.add(1);
+                let conn = match Conn::new(stream, id, shared.opts.read_timeout,
+                                           shared.opts.write_timeout) {
+                    Ok(c) => c,
+                    Err(_) => {
+                        shared.active_conns.fetch_sub(1, Ordering::SeqCst);
+                        shared.m.active.add(-1);
+                        continue;
+                    }
+                };
+                let handler_shared = Arc::clone(shared);
+                let spawned = thread::Builder::new()
+                    .name(format!("perq-http-{id}"))
+                    .spawn(move || {
+                        handle_conn(&handler_shared, conn);
+                        handler_shared.active_conns.fetch_sub(1, Ordering::SeqCst);
+                        handler_shared.m.active.add(-1);
+                    });
+                match spawned {
+                    Ok(h) => reap_and_track(shared, h),
+                    Err(_) => {
+                        shared.active_conns.fetch_sub(1, Ordering::SeqCst);
+                        shared.m.active.add(-1);
+                    }
+                }
+            }
+            // nonblocking listener: nothing pending — nap and re-check
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+/// Best-effort 503 + `Retry-After` for a connection over `--max-conns`,
+/// written straight on the raw stream (no handler thread is spent on it).
+fn reject_over_limit(shared: &Arc<Shared>, stream: std::net::TcpStream) {
+    use std::io::Write;
+    shared.m.conns_rejected.inc();
+    shared.m.count_status(503);
+    let body = error_body("over_capacity", "connection limit reached");
+    let bytes = net::response_bytes(503, "application/json",
+                                    &[("Retry-After", "1")], &body, true);
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(250)));
+    let mut stream = stream;
+    let _ = stream.write_all(&bytes);
+}
+
+/// Join any finished handler threads, then track the new one.
+fn reap_and_track(shared: &Arc<Shared>, h: JoinHandle<()>) {
+    let mut handlers = shared.handlers.lock().unwrap();
+    let mut i = 0;
+    while i < handlers.len() {
+        if handlers[i].is_finished() {
+            let _ = handlers.swap_remove(i).join();
+        } else {
+            i += 1;
+        }
+    }
+    handlers.push(h);
+}
+
+/// `{"error":...,"message":...}` with proper JSON escaping.
+fn error_body(error: &str, message: &str) -> Vec<u8> {
+    let mut obj = BTreeMap::new();
+    obj.insert("error".to_string(), Json::Str(error.to_string()));
+    obj.insert("message".to_string(), Json::Str(message.to_string()));
+    json::dump(&Json::Obj(obj)).into_bytes()
+}
+
+/// `Retry-After` rides on every back-pressure status.
+fn extra_for(status: u16) -> &'static [(&'static str, &'static str)] {
+    match status {
+        429 | 503 => &[("Retry-After", "1")],
+        405 => &[],
+        _ => &[],
+    }
+}
+
+/// Write a fixed response, counting the status and a vanished client.
+/// Returns whether the connection may keep serving requests.
+fn respond(shared: &Arc<Shared>, conn: &mut Conn, status: u16,
+           content_type: &str, extra: &[(&str, &str)], body: &[u8],
+           close: bool) -> bool {
+    shared.m.count_status(status);
+    match conn.write_response(status, content_type, extra, body, close) {
+        Ok(()) => !close,
+        Err(_) => {
+            shared.m.disconnects.inc();
+            false
+        }
+    }
+}
+
+fn respond_error(shared: &Arc<Shared>, conn: &mut Conn, status: u16,
+                 error: &str, message: &str, close: bool) -> bool {
+    let body = error_body(error, message);
+    respond(shared, conn, status, "application/json", extra_for(status), &body, close)
+}
+
+/// Serve one connection: keep-alive request loop until the client closes,
+/// a parse error closes it, or drain begins.
+fn handle_conn(shared: &Arc<Shared>, mut conn: Conn) {
+    loop {
+        match conn.read_request(shared.opts.max_body) {
+            ReadOutcome::Closed => break,
+            ReadOutcome::Bad { status, reason } => {
+                shared.m.bad_requests.inc();
+                shared.m.count_status(status);
+                let body = error_body("bad_request", reason);
+                let _ = conn.write_response(status, "application/json",
+                                            extra_for(status), &body, true);
+                break;
+            }
+            ReadOutcome::Request(req) => {
+                shared.m.requests.inc();
+                // during drain every response closes, so handler threads
+                // quiesce as soon as their current request resolves
+                let close = req.wants_close()
+                    || shared.draining.load(Ordering::SeqCst);
+                if !route(shared, &mut conn, &req, close) {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Dispatch one request. Returns whether the connection stays open.
+fn route(shared: &Arc<Shared>, conn: &mut Conn, req: &HttpRequest,
+         close: bool) -> bool {
+    let path = req.path();
+    match (req.method.as_str(), path) {
+        ("GET", "/healthz") => {
+            respond(shared, conn, 200, "application/json", &[],
+                    b"{\"ok\":true}", close)
+        }
+        ("GET", "/readyz") => {
+            if shared.draining.load(Ordering::SeqCst) {
+                respond(shared, conn, 503, "application/json",
+                        extra_for(503), b"{\"ready\":false,\"draining\":true}",
+                        close)
+            } else {
+                respond(shared, conn, 200, "application/json", &[],
+                        b"{\"ready\":true}", close)
+            }
+        }
+        ("GET", "/metrics") => {
+            let body = shared.stats.render_prometheus_full();
+            respond(shared, conn, 200, "text/plain; version=0.0.4", &[],
+                    body.as_bytes(), close)
+        }
+        ("GET", "/traces") => {
+            let traces: Vec<Json> = shared
+                .server
+                .recent_traces()
+                .iter()
+                .map(|t| t.to_json())
+                .collect();
+            let body = json::dump(&Json::Arr(traces));
+            respond(shared, conn, 200, "application/json", &[],
+                    body.as_bytes(), close)
+        }
+        ("POST", "/v1/score") => handle_score(shared, conn, req, close),
+        ("POST", "/v1/generate") => handle_generate(shared, conn, req, close),
+        (_, "/healthz" | "/readyz" | "/metrics" | "/traces") => {
+            respond(shared, conn, 405, "application/json",
+                    &[("Allow", "GET")], &error_body("method_not_allowed",
+                                                     "use GET"), close)
+        }
+        (_, "/v1/score" | "/v1/generate") => {
+            respond(shared, conn, 405, "application/json",
+                    &[("Allow", "POST")], &error_body("method_not_allowed",
+                                                      "use POST"), close)
+        }
+        _ => {
+            respond(shared, conn, 404, "application/json", &[],
+                    &error_body("not_found", "unknown endpoint"), close)
+        }
+    }
+}
+
+/// Build [`SubmitOpts`] from the `Perq-Deadline-Ms` / `Perq-Priority`
+/// headers. A header that is present but unparsable is a client bug —
+/// refuse it rather than silently serving without the deadline the
+/// client thinks it set.
+fn opts_from_headers(req: &HttpRequest) -> std::result::Result<SubmitOpts, String> {
+    let mut opts = SubmitOpts::default();
+    if let Some(v) = req.header("perq-deadline-ms") {
+        let ms: u64 = v
+            .parse()
+            .map_err(|_| format!("bad Perq-Deadline-Ms {v:?} (want milliseconds)"))?;
+        opts.deadline = Some(Instant::now() + Duration::from_millis(ms));
+    }
+    if let Some(v) = req.header("perq-priority") {
+        opts.priority = v
+            .parse()
+            .map_err(|_| format!("bad Perq-Priority {v:?} (want 0-255)"))?;
+    }
+    Ok(opts)
+}
+
+/// Pull an i32 token array out of a parsed JSON body field.
+fn tokens_field(body: &Json, key: &str) -> std::result::Result<Vec<i32>, String> {
+    let arr = body
+        .get(key)
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| format!("body must carry a {key:?} array of token ids"))?;
+    arr.iter()
+        .map(|v| {
+            v.as_f64()
+                .map(|n| n as i32)
+                .ok_or_else(|| format!("{key:?} must contain only numbers"))
+        })
+        .collect()
+}
+
+/// During drain new work is refused up front with the same 503 the
+/// engine would answer, so clients see one consistent signal.
+fn refuse_if_draining(shared: &Arc<Shared>, conn: &mut Conn, close: bool) -> Option<bool> {
+    if shared.draining.load(Ordering::SeqCst) {
+        return Some(respond_error(shared, conn, 503, "shutting_down",
+                                  "server is draining", close));
+    }
+    None
+}
+
+fn handle_score(shared: &Arc<Shared>, conn: &mut Conn, req: &HttpRequest,
+                close: bool) -> bool {
+    if let Some(keep) = refuse_if_draining(shared, conn, close) {
+        return keep;
+    }
+    let parsed = match std::str::from_utf8(&req.body)
+        .map_err(|_| "body is not UTF-8".to_string())
+        .and_then(|s| json::parse(s).map_err(|e| e.to_string()))
+    {
+        Ok(j) => j,
+        Err(e) => return respond_error(shared, conn, 400, "bad_request", &e, close),
+    };
+    let tokens = match tokens_field(&parsed, "tokens") {
+        Ok(t) => t,
+        Err(e) => return respond_error(shared, conn, 400, "bad_request", &e, close),
+    };
+    let opts = match opts_from_headers(req) {
+        Ok(o) => o,
+        Err(e) => return respond_error(shared, conn, 400, "bad_request", &e, close),
+    };
+    let rx = match shared.server.submit_with(tokens, opts) {
+        Ok(rx) => rx,
+        // submit-side validation (wrong window length, vocab range) — a
+        // client error, not a server failure
+        Err(e) => {
+            return respond_error(shared, conn, 400, "bad_request",
+                                 &format!("{e:#}"), close)
+        }
+    };
+    match recv_result(&rx) {
+        Ok(resp) => {
+            let mut obj = BTreeMap::new();
+            // nll goes through the shortest-round-trip f64 path, so the
+            // client-decoded value is bit-identical to the engine's
+            obj.insert("nll".to_string(), Json::Num(resp.nll));
+            obj.insert("latency_ms".to_string(),
+                       Json::Num(resp.latency.as_secs_f64() * 1e3));
+            obj.insert("batch_occupancy".to_string(),
+                       Json::Num(resp.batch_occupancy as f64));
+            let body = json::dump(&Json::Obj(obj));
+            respond(shared, conn, 200, "application/json", &[],
+                    body.as_bytes(), close)
+        }
+        Err(err) => {
+            let status = status_for(err);
+            respond_error(shared, conn, status, err.as_str(),
+                          &err.to_string(), close)
+        }
+    }
+}
+
+/// Wait for the engine's verdict; a dropped response channel can only
+/// mean the server tore down around the request.
+fn recv_result<T>(rx: &Receiver<ServeResult<T>>) -> ServeResult<T> {
+    match rx.recv() {
+        Ok(r) => r,
+        Err(_) => Err(ServeError::ShuttingDown),
+    }
+}
+
+fn handle_generate(shared: &Arc<Shared>, conn: &mut Conn, req: &HttpRequest,
+                   close: bool) -> bool {
+    if let Some(keep) = refuse_if_draining(shared, conn, close) {
+        return keep;
+    }
+    let parsed = match std::str::from_utf8(&req.body)
+        .map_err(|_| "body is not UTF-8".to_string())
+        .and_then(|s| json::parse(s).map_err(|e| e.to_string()))
+    {
+        Ok(j) => j,
+        Err(e) => return respond_error(shared, conn, 400, "bad_request", &e, close),
+    };
+    let prompt = match tokens_field(&parsed, "prompt") {
+        Ok(t) => t,
+        Err(e) => return respond_error(shared, conn, 400, "bad_request", &e, close),
+    };
+    let max_new = parsed
+        .get("max_new_tokens")
+        .and_then(|v| v.as_usize())
+        .unwrap_or(16);
+    let stream = !matches!(parsed.get("stream"), Some(Json::Bool(false)));
+    let opts = match opts_from_headers(req) {
+        Ok(o) => o,
+        Err(e) => return respond_error(shared, conn, 400, "bad_request", &e, close),
+    };
+
+    if !stream {
+        let rx = match shared.server.submit_generate_with(prompt, max_new, opts) {
+            Ok(rx) => rx,
+            Err(e) => {
+                return respond_error(shared, conn, 400, "bad_request",
+                                     &format!("{e:#}"), close)
+            }
+        };
+        return match recv_result(&rx) {
+            Ok(resp) => {
+                let body = json::dump(&generate_json(&resp));
+                respond(shared, conn, 200, "application/json", &[],
+                        body.as_bytes(), close)
+            }
+            Err(err) => {
+                let status = status_for(err);
+                respond_error(shared, conn, status, err.as_str(),
+                              &err.to_string(), close)
+            }
+        };
+    }
+
+    // streaming: one NDJSON chunk per sampled token, then a final summary
+    // object. The head and the first token go out in a single write so
+    // even a mid-response drop delivers a well-formed stream prefix.
+    let (token_tx, token_rx) = std::sync::mpsc::channel::<i32>();
+    let cancel = Arc::new(AtomicBool::new(false));
+    let rx = match shared.server.submit_generate_stream(
+        prompt, max_new, opts, Some(token_tx), Some(Arc::clone(&cancel))) {
+        Ok(rx) => rx,
+        Err(e) => {
+            return respond_error(shared, conn, 400, "bad_request",
+                                 &format!("{e:#}"), close)
+        }
+    };
+    let first = match token_rx.recv() {
+        Ok(tok) => tok,
+        // resolved before the first token: the terminal error (or a
+        // response that never streamed) goes out as a plain response
+        Err(_) => {
+            return match recv_result(&rx) {
+                Ok(resp) => {
+                    let body = json::dump(&generate_json(&resp));
+                    respond(shared, conn, 200, "application/json", &[],
+                            body.as_bytes(), close)
+                }
+                Err(err) => {
+                    let status = status_for(err);
+                    respond_error(shared, conn, status, err.as_str(),
+                                  &err.to_string(), close)
+                }
+            };
+        }
+    };
+    shared.m.count_status(200);
+    if conn
+        .write_chunked_head(200, "application/x-ndjson", &[],
+                            token_line(first).as_bytes(), close)
+        .is_err()
+    {
+        return client_vanished(shared, &cancel);
+    }
+    loop {
+        match token_rx.recv() {
+            Ok(tok) => {
+                if conn.write_chunk(token_line(tok).as_bytes()).is_err() {
+                    return client_vanished(shared, &cancel);
+                }
+            }
+            // the worker dropped its sender: generation resolved
+            Err(_) => break,
+        }
+    }
+    let last = match recv_result(&rx) {
+        Ok(resp) => {
+            let mut j = generate_json(&resp);
+            if let Json::Obj(ref mut o) = j {
+                o.insert("done".to_string(), Json::Bool(true));
+            }
+            json::dump(&j) + "\n"
+        }
+        Err(err) => {
+            let mut o = BTreeMap::new();
+            o.insert("error".to_string(), Json::Str(err.as_str().to_string()));
+            o.insert("message".to_string(), Json::Str(err.to_string()));
+            o.insert("status".to_string(), Json::Num(f64::from(status_for(err))));
+            json::dump(&Json::Obj(o)) + "\n"
+        }
+    };
+    if conn.finish_chunks(last.as_bytes()).is_err() {
+        return client_vanished(shared, &cancel);
+    }
+    !close
+}
+
+/// The client disconnected mid-stream: flip the request's cancel flag so
+/// the worker frees the decode slot at its next sweep, and close.
+fn client_vanished(shared: &Arc<Shared>, cancel: &Arc<AtomicBool>) -> bool {
+    cancel.store(true, Ordering::SeqCst);
+    shared.m.disconnects.inc();
+    false
+}
+
+fn token_line(tok: i32) -> String {
+    format!("{{\"token\":{tok}}}\n")
+}
+
+fn generate_json(resp: &GenerateResponse) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("tokens".to_string(),
+               Json::Arr(resp.tokens.iter().map(|&t| Json::Num(f64::from(t))).collect()));
+    obj.insert("prefill_ms".to_string(),
+               Json::Num(resp.prefill_latency.as_secs_f64() * 1e3));
+    obj.insert("decode_ms".to_string(),
+               Json::Num(resp.decode_latency.as_secs_f64() * 1e3));
+    obj.insert("latency_ms".to_string(),
+               Json::Num(resp.latency.as_secs_f64() * 1e3));
+    Json::Obj(obj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Exhaustive by construction: `status_for` has no wildcard arm, so a
+    /// new `ServeError` variant breaks the build until it gets a status;
+    /// this test pins the mapping itself.
+    #[test]
+    fn serve_error_status_mapping_is_exact() {
+        assert_eq!(status_for(ServeError::QueueFull), 429);
+        assert_eq!(status_for(ServeError::Shed), 429);
+        assert_eq!(status_for(ServeError::DeadlineExceeded), 504);
+        assert_eq!(status_for(ServeError::WorkerFailed), 500);
+        assert_eq!(status_for(ServeError::ShuttingDown), 503);
+        assert_eq!(status_for(ServeError::Cancelled), 499);
+    }
+
+    #[test]
+    fn error_body_escapes() {
+        let b = String::from_utf8(error_body("bad_request", "a \"quoted\" msg")).unwrap();
+        assert_eq!(b, "{\"error\":\"bad_request\",\"message\":\"a \\\"quoted\\\" msg\"}");
+    }
+
+    #[test]
+    fn backpressure_statuses_carry_retry_after() {
+        assert_eq!(extra_for(429), &[("Retry-After", "1")]);
+        assert_eq!(extra_for(503), &[("Retry-After", "1")]);
+        assert!(extra_for(200).is_empty());
+        assert!(extra_for(404).is_empty());
+    }
+}

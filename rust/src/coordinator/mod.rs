@@ -9,4 +9,6 @@ pub mod spec;
 
 pub use pipeline::{Pipeline, PipelineReport};
 pub use spec::PipelineSpec;
+pub mod http;
+pub mod net;
 pub mod server;

@@ -1,0 +1,790 @@
+//! HTTP/1.1 wire plumbing for the network front door — no dependencies
+//! beyond `std::net`.
+//!
+//! This module owns everything connection-shaped so `coordinator::http`
+//! can stay about *serving policy* (routing, admission, drain):
+//!
+//!   * [`Conn`] — a buffered `TcpStream` wrapper with read/write timeouts,
+//!     keep-alive/pipelining leftovers, and the [`fault`] hooks. Reading a
+//!     request yields a [`ReadOutcome`]: a parsed [`HttpRequest`], a clean
+//!     close at a request boundary, or a protocol/resource violation with
+//!     the exact status to answer before closing (400/405-class parse
+//!     errors, 408 slowloris timeout, 411 missing length, 413 oversized
+//!     body, 431 oversized head, 505 bad version);
+//!   * response writers — fixed-length ([`Conn::write_response`]) and
+//!     chunked streaming ([`Conn::write_chunked_head`] /
+//!     [`Conn::write_chunk`] / [`Conn::finish_chunks`]); a fixed response
+//!     is a **single** socket write, so the `drop_mid_response` fault has
+//!     deterministic first-write-delivered semantics;
+//!   * [`fault`] — the `PERQ_NET_FAULT` deterministic connection-fault
+//!     harness, the network twin of the engine-step `PERQ_FAULT` module
+//!     (`backend::native::fault`);
+//!   * [`client`] — a minimal blocking HTTP/1.1 client (one request per
+//!     connection) shared by the integration tests and the load generator;
+//!   * [`install_shutdown_signals`] / [`shutdown_signaled`] — an
+//!     async-signal-safe SIGTERM/SIGINT latch for `perq serve --http`.
+
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// Cap on the request line + headers, before the body starts (431 beyond).
+pub const MAX_HEAD_BYTES: usize = 8 * 1024;
+/// Cap on the header count (431 beyond) — no header-bomb allocations.
+pub const MAX_HEADERS: usize = 100;
+
+/// Deterministic fault injection for the connection path — the harness
+/// behind `PERQ_NET_FAULT` that rust/tests/http_front.rs drives so
+/// connection-level failures are testable without flaky sockets.
+///
+/// Spec grammar (comma-separated clauses, unknown clauses are warned and
+/// ignored):
+///   * `accept_close:N`       — close the N-th accepted connection
+///                              immediately (client vanished after accept)
+///   * `stall_read:N:MS`      — the N-th connection's reads sleep MS ms
+///                              and then time out (slowloris)
+///   * `drop_mid_response:N`  — on the N-th connection, every write after
+///                              the first fails with `BrokenPipe` (client
+///                              disconnected mid-response)
+///
+/// Connections are counted process-wide from the moment the plan is armed
+/// ([`arm`] resets the counter), which keeps injection deterministic for
+/// single-listener tests. When disarmed — the normal state — every hook
+/// is a single relaxed atomic load.
+pub mod fault {
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::sync::{Mutex, Once};
+
+    /// One armed injection plan (see the module docs for the grammar).
+    #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+    pub struct NetFaultPlan {
+        /// close exactly this (1-based) accepted connection
+        pub accept_close: Option<u64>,
+        /// (conn, ms): this connection's reads sleep `ms` then time out
+        pub stall_read: Option<(u64, u64)>,
+        /// on this connection, writes after the first return `BrokenPipe`
+        pub drop_mid_response: Option<u64>,
+    }
+
+    impl NetFaultPlan {
+        pub fn is_empty(&self) -> bool {
+            *self == NetFaultPlan::default()
+        }
+    }
+
+    static ACTIVE: AtomicBool = AtomicBool::new(false);
+    static CONN: AtomicU64 = AtomicU64::new(0);
+    static PLAN: Mutex<NetFaultPlan> = Mutex::new(NetFaultPlan {
+        accept_close: None,
+        stall_read: None,
+        drop_mid_response: None,
+    });
+    static ENV_ONCE: Once = Once::new();
+
+    /// Parse a `PERQ_NET_FAULT` spec. Returns the plan plus every clause
+    /// that failed to parse (callers log those — a typo must not silently
+    /// disable an intended fault).
+    pub fn parse(spec: &str) -> (NetFaultPlan, Vec<String>) {
+        let mut plan = NetFaultPlan::default();
+        let mut rejected = Vec::new();
+        for clause in spec.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            let mut parts = clause.split(':');
+            let parsed = match parts.next() {
+                Some("accept_close") => {
+                    match (parts.next().and_then(|n| n.parse::<u64>().ok()), parts.next()) {
+                        (Some(n), None) if n >= 1 => {
+                            plan.accept_close = Some(n);
+                            true
+                        }
+                        _ => false,
+                    }
+                }
+                Some("stall_read") => {
+                    let conn = parts.next().and_then(|n| n.parse::<u64>().ok());
+                    let ms = parts.next().and_then(|n| n.parse::<u64>().ok());
+                    match (conn, ms, parts.next()) {
+                        (Some(conn), Some(ms), None) if conn >= 1 => {
+                            plan.stall_read = Some((conn, ms));
+                            true
+                        }
+                        _ => false,
+                    }
+                }
+                Some("drop_mid_response") => {
+                    match (parts.next().and_then(|n| n.parse::<u64>().ok()), parts.next()) {
+                        (Some(n), None) if n >= 1 => {
+                            plan.drop_mid_response = Some(n);
+                            true
+                        }
+                        _ => false,
+                    }
+                }
+                _ => false,
+            };
+            if !parsed {
+                rejected.push(clause.to_string());
+            }
+        }
+        (plan, rejected)
+    }
+
+    /// Arm `plan`, resetting the connection counter. Process-global: tests
+    /// that arm faults must serialize against each other.
+    pub fn arm(plan: NetFaultPlan) {
+        *PLAN.lock().unwrap() = plan;
+        CONN.store(0, Ordering::SeqCst);
+        ACTIVE.store(!plan.is_empty(), Ordering::SeqCst);
+    }
+
+    /// Disarm injection (every hook returns to one relaxed load).
+    pub fn disarm() {
+        ACTIVE.store(false, Ordering::SeqCst);
+        *PLAN.lock().unwrap() = NetFaultPlan::default();
+    }
+
+    /// Arm from `PERQ_NET_FAULT` once per process (the HTTP front end
+    /// calls this at start; explicit [`arm`] in tests takes precedence
+    /// afterwards).
+    pub fn load_env_once() {
+        ENV_ONCE.call_once(|| {
+            if let Ok(spec) = std::env::var("PERQ_NET_FAULT") {
+                let (plan, rejected) = parse(&spec);
+                for clause in rejected {
+                    crate::log_warn!(
+                        "PERQ_NET_FAULT: ignoring unparsable clause {clause:?} \
+                         (grammar: accept_close:N, stall_read:N:MS, drop_mid_response:N)"
+                    );
+                }
+                if !plan.is_empty() {
+                    crate::log_warn!("PERQ_NET_FAULT armed: {plan:?}");
+                    arm(plan);
+                }
+            }
+        });
+    }
+
+    /// Stamp the next accepted connection (1-based since the last [`arm`]).
+    pub fn next_conn_id() -> u64 {
+        CONN.fetch_add(1, Ordering::SeqCst) + 1
+    }
+
+    /// Should the accept loop drop connection `conn` on the floor?
+    #[inline]
+    pub fn accept_close(conn: u64) -> bool {
+        if !ACTIVE.load(Ordering::Relaxed) {
+            return false;
+        }
+        PLAN.lock().unwrap().accept_close == Some(conn)
+    }
+
+    /// Milliseconds connection `conn`'s reads stall before timing out.
+    #[inline]
+    pub fn stall_read(conn: u64) -> Option<u64> {
+        if !ACTIVE.load(Ordering::Relaxed) {
+            return None;
+        }
+        match PLAN.lock().unwrap().stall_read {
+            Some((c, ms)) if c == conn => Some(ms),
+            _ => None,
+        }
+    }
+
+    /// Do writes after the first on connection `conn` break?
+    #[inline]
+    pub fn drop_mid_response(conn: u64) -> bool {
+        if !ACTIVE.load(Ordering::Relaxed) {
+            return false;
+        }
+        PLAN.lock().unwrap().drop_mid_response == Some(conn)
+    }
+}
+
+/// One parsed HTTP/1.1 request. Header names are lowercased at parse time
+/// (HTTP header names are case-insensitive); values keep their bytes.
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    /// the raw request target (path + optional query string)
+    pub target: String,
+    /// `HTTP/1.0` or `HTTP/1.1` (anything else never parses — 505)
+    pub version: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// Case-insensitive header lookup (names are stored lowercased).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(n, _)| *n == name).map(|(_, v)| v.as_str())
+    }
+
+    /// The request path with any query string stripped.
+    pub fn path(&self) -> &str {
+        self.target.split('?').next().unwrap_or("")
+    }
+
+    /// Does the client ask for the connection to close after the response?
+    pub fn wants_close(&self) -> bool {
+        self.version == "HTTP/1.0"
+            || self
+                .header("connection")
+                .map_or(false, |v| v.eq_ignore_ascii_case("close"))
+    }
+}
+
+/// What reading one request off a connection produced.
+pub enum ReadOutcome {
+    /// a complete, well-framed request
+    Request(HttpRequest),
+    /// clean EOF at a request boundary (keep-alive end) — close silently
+    Closed,
+    /// protocol violation or resource-cap hit: answer `status` (with
+    /// `reason` as the body) and close the connection
+    Bad { status: u16, reason: &'static str },
+}
+
+/// A buffered server-side connection: socket timeouts applied, leftover
+/// bytes preserved across keep-alive requests, [`fault`] hooks consulted
+/// on every read and write.
+pub struct Conn {
+    stream: TcpStream,
+    /// process-wide accept ordinal (see [`fault::next_conn_id`])
+    pub id: u64,
+    /// bytes read but not yet consumed (pipelined/next requests)
+    buf: Vec<u8>,
+    /// completed socket writes — the `drop_mid_response` fault breaks
+    /// every write after the first
+    writes: u64,
+}
+
+impl Conn {
+    /// Wrap an accepted stream: disable Nagle (token chunks must flush per
+    /// step, not per segment) and bound every read/write.
+    pub fn new(stream: TcpStream, id: u64, read_timeout: Duration,
+               write_timeout: Duration) -> io::Result<Conn> {
+        let _ = stream.set_nodelay(true);
+        stream.set_read_timeout(Some(read_timeout.max(Duration::from_millis(1))))?;
+        stream.set_write_timeout(Some(write_timeout.max(Duration::from_millis(1))))?;
+        Ok(Conn { stream, id, buf: Vec::new(), writes: 0 })
+    }
+
+    /// Pull more bytes off the socket into the leftover buffer. `Ok(0)`
+    /// is EOF. The `stall_read` fault turns this into a slowloris read:
+    /// sleep, then surface the timeout the real socket would.
+    fn fill(&mut self) -> io::Result<usize> {
+        if let Some(ms) = fault::stall_read(self.id) {
+            std::thread::sleep(Duration::from_millis(ms));
+            return Err(io::Error::new(io::ErrorKind::TimedOut,
+                                      "PERQ_NET_FAULT: injected read stall"));
+        }
+        let mut chunk = [0u8; 4096];
+        let n = self.stream.read(&mut chunk)?;
+        self.buf.extend_from_slice(&chunk[..n]);
+        Ok(n)
+    }
+
+    /// Read one request, honoring the head/header/body caps. `max_body`
+    /// bounds the declared `Content-Length` (413 beyond).
+    pub fn read_request(&mut self, max_body: usize) -> ReadOutcome {
+        // -- head: read until the blank line, within MAX_HEAD_BYTES -------
+        let head_end = loop {
+            if let Some(pos) = find_subslice(&self.buf, b"\r\n\r\n") {
+                break pos;
+            }
+            if self.buf.len() > MAX_HEAD_BYTES {
+                return ReadOutcome::Bad { status: 431, reason: "request head too large" };
+            }
+            match self.fill() {
+                Ok(0) if self.buf.is_empty() => return ReadOutcome::Closed,
+                Ok(0) => {
+                    return ReadOutcome::Bad { status: 400, reason: "truncated request" }
+                }
+                Ok(_) => {}
+                Err(e) => return read_err(e),
+            }
+        };
+        if head_end > MAX_HEAD_BYTES {
+            return ReadOutcome::Bad { status: 431, reason: "request head too large" };
+        }
+        let head = match std::str::from_utf8(&self.buf[..head_end]) {
+            Ok(s) => s.to_string(),
+            Err(_) => {
+                return ReadOutcome::Bad { status: 400, reason: "request head is not UTF-8" }
+            }
+        };
+        let body_start = head_end + 4;
+
+        // -- request line + headers ---------------------------------------
+        let mut lines = head.split("\r\n");
+        let request_line = lines.next().unwrap_or("");
+        let parts: Vec<&str> = request_line.split(' ').collect();
+        if parts.len() != 3 || parts[0].is_empty() || parts[1].is_empty() {
+            return ReadOutcome::Bad { status: 400, reason: "malformed request line" };
+        }
+        let (method, target, version) = (parts[0], parts[1], parts[2]);
+        if version != "HTTP/1.1" && version != "HTTP/1.0" {
+            return ReadOutcome::Bad { status: 505, reason: "unsupported HTTP version" };
+        }
+        let mut headers: Vec<(String, String)> = Vec::new();
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            if headers.len() >= MAX_HEADERS {
+                return ReadOutcome::Bad { status: 431, reason: "too many headers" };
+            }
+            let Some(colon) = line.find(':') else {
+                return ReadOutcome::Bad { status: 400, reason: "malformed header line" };
+            };
+            let name = line[..colon].trim().to_ascii_lowercase();
+            if name.is_empty() {
+                return ReadOutcome::Bad { status: 400, reason: "malformed header line" };
+            }
+            headers.push((name, line[colon + 1..].trim().to_string()));
+        }
+
+        // -- body framing ---------------------------------------------------
+        let te = headers.iter().any(|(n, _)| n == "transfer-encoding");
+        if te {
+            return ReadOutcome::Bad {
+                status: 501,
+                reason: "chunked request bodies are not supported",
+            };
+        }
+        let content_length = match headers.iter().find(|(n, _)| n == "content-length") {
+            Some((_, v)) => match v.parse::<u64>() {
+                Ok(n) => Some(n as usize),
+                Err(_) => {
+                    return ReadOutcome::Bad { status: 400, reason: "bad Content-Length" }
+                }
+            },
+            None => None,
+        };
+        let body_len = match (method, content_length) {
+            // requests that carry payloads must declare their framing
+            ("POST" | "PUT" | "PATCH", None) => {
+                return ReadOutcome::Bad { status: 411, reason: "missing Content-Length" }
+            }
+            (_, Some(n)) if n > max_body => {
+                return ReadOutcome::Bad { status: 413, reason: "request body too large" }
+            }
+            (_, Some(n)) => n,
+            (_, None) => 0,
+        };
+        let body_end = body_start + body_len;
+        while self.buf.len() < body_end {
+            match self.fill() {
+                Ok(0) => {
+                    return ReadOutcome::Bad { status: 400, reason: "truncated request body" }
+                }
+                Ok(_) => {}
+                Err(e) => return read_err(e),
+            }
+        }
+        let body = self.buf[body_start..body_end].to_vec();
+        self.buf.drain(..body_end);
+        ReadOutcome::Request(HttpRequest {
+            method: method.to_string(),
+            target: target.to_string(),
+            version: version.to_string(),
+            headers,
+            body,
+        })
+    }
+
+    /// One socket write, with the `drop_mid_response` fault applied: on an
+    /// armed connection, every write after the first breaks like a vanished
+    /// client's RST would — deterministically.
+    pub fn write_all(&mut self, bytes: &[u8]) -> io::Result<()> {
+        if self.writes >= 1 && fault::drop_mid_response(self.id) {
+            return Err(io::Error::new(io::ErrorKind::BrokenPipe,
+                                      "PERQ_NET_FAULT: injected mid-response disconnect"));
+        }
+        self.stream.write_all(bytes)?;
+        self.writes += 1;
+        Ok(())
+    }
+
+    /// Write a complete fixed-length response as ONE socket write.
+    pub fn write_response(&mut self, status: u16, content_type: &str,
+                          extra: &[(&str, &str)], body: &[u8],
+                          close: bool) -> io::Result<()> {
+        let bytes = response_bytes(status, content_type, extra, body, close);
+        self.write_all(&bytes)
+    }
+
+    /// Start a chunked (streaming) response: status line, headers, and the
+    /// first chunk in one write, so even a `drop_mid_response` client sees
+    /// the stream begin.
+    pub fn write_chunked_head(&mut self, status: u16, content_type: &str,
+                              extra: &[(&str, &str)], first_chunk: &[u8],
+                              close: bool) -> io::Result<()> {
+        let mut head = format!("HTTP/1.1 {} {}\r\n", status, status_reason(status));
+        head.push_str(&format!("Content-Type: {content_type}\r\n"));
+        head.push_str("Transfer-Encoding: chunked\r\n");
+        for (k, v) in extra {
+            head.push_str(&format!("{k}: {v}\r\n"));
+        }
+        if close {
+            head.push_str("Connection: close\r\n");
+        }
+        head.push_str("\r\n");
+        let mut bytes = head.into_bytes();
+        encode_chunk(&mut bytes, first_chunk);
+        self.write_all(&bytes)
+    }
+
+    /// Stream one more chunk (skipped for empty data — a zero-length chunk
+    /// would terminate the stream).
+    pub fn write_chunk(&mut self, data: &[u8]) -> io::Result<()> {
+        if data.is_empty() {
+            return Ok(());
+        }
+        let mut bytes = Vec::with_capacity(data.len() + 16);
+        encode_chunk(&mut bytes, data);
+        self.write_all(&bytes)
+    }
+
+    /// Terminate a chunked response (optionally with a final data chunk).
+    pub fn finish_chunks(&mut self, last: &[u8]) -> io::Result<()> {
+        let mut bytes = Vec::with_capacity(last.len() + 24);
+        encode_chunk(&mut bytes, last);
+        bytes.extend_from_slice(b"0\r\n\r\n");
+        self.write_all(&bytes)
+    }
+}
+
+/// Map a read error to the status it must answer: timeouts are the
+/// slowloris 408, anything else is a generic 400 before closing.
+fn read_err(e: io::Error) -> ReadOutcome {
+    match e.kind() {
+        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut => {
+            ReadOutcome::Bad { status: 408, reason: "read timeout" }
+        }
+        _ => ReadOutcome::Bad { status: 400, reason: "connection error" },
+    }
+}
+
+/// Append one chunked-transfer-encoded chunk (no-op for empty data).
+fn encode_chunk(out: &mut Vec<u8>, data: &[u8]) {
+    if data.is_empty() {
+        return;
+    }
+    out.extend_from_slice(format!("{:x}\r\n", data.len()).as_bytes());
+    out.extend_from_slice(data);
+    out.extend_from_slice(b"\r\n");
+}
+
+/// Reason phrase for every status the front door can answer.
+pub fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        499 => "Client Closed Request",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        505 => "HTTP Version Not Supported",
+        _ => "Unknown",
+    }
+}
+
+/// Serialize a complete fixed-length response.
+pub fn response_bytes(status: u16, content_type: &str, extra: &[(&str, &str)],
+                      body: &[u8], close: bool) -> Vec<u8> {
+    let mut head = format!("HTTP/1.1 {} {}\r\n", status, status_reason(status));
+    head.push_str(&format!("Content-Type: {content_type}\r\n"));
+    head.push_str(&format!("Content-Length: {}\r\n", body.len()));
+    for (k, v) in extra {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    if close {
+        head.push_str("Connection: close\r\n");
+    }
+    head.push_str("\r\n");
+    let mut bytes = head.into_bytes();
+    bytes.extend_from_slice(body);
+    bytes
+}
+
+/// Minimal blocking HTTP/1.1 client — one request per connection
+/// (`Connection: close`), fixed-length and chunked responses decoded.
+/// Shared by rust/tests/http_front.rs and examples/load_gen.rs; not a
+/// general-purpose client.
+pub mod client {
+    use super::find_subslice;
+    use std::io::{Read, Write};
+    use std::net::TcpStream;
+    use std::time::Duration;
+
+    /// One decoded response: status, lowercased header names, full body
+    /// (chunked transfer encoding already stripped).
+    #[derive(Debug)]
+    pub struct Response {
+        pub status: u16,
+        pub headers: Vec<(String, String)>,
+        pub body: Vec<u8>,
+    }
+
+    impl Response {
+        pub fn header(&self, name: &str) -> Option<&str> {
+            let name = name.to_ascii_lowercase();
+            self.headers.iter().find(|(n, _)| *n == name).map(|(_, v)| v.as_str())
+        }
+
+        pub fn body_str(&self) -> String {
+            String::from_utf8_lossy(&self.body).into_owned()
+        }
+    }
+
+    fn bad(msg: &str) -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string())
+    }
+
+    /// Fire one request and decode the response. The server closes after
+    /// responding (we send `Connection: close`), so the read loop runs to
+    /// EOF; `timeout` bounds every socket read/write.
+    pub fn request(addr: &str, method: &str, path: &str,
+                   headers: &[(&str, &str)], body: &[u8],
+                   timeout: Duration) -> std::io::Result<Response> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(timeout.max(Duration::from_millis(1))))?;
+        stream.set_write_timeout(Some(timeout.max(Duration::from_millis(1))))?;
+        let mut stream = stream;
+        let mut req = format!("{method} {path} HTTP/1.1\r\n");
+        req.push_str("Host: perq\r\n");
+        req.push_str("Connection: close\r\n");
+        for (k, v) in headers {
+            req.push_str(&format!("{k}: {v}\r\n"));
+        }
+        if !body.is_empty() || method == "POST" || method == "PUT" {
+            req.push_str(&format!("Content-Length: {}\r\n", body.len()));
+        }
+        req.push_str("\r\n");
+        stream.write_all(req.as_bytes())?;
+        stream.write_all(body)?;
+        let mut raw = Vec::new();
+        let mut chunk = [0u8; 4096];
+        loop {
+            match stream.read(&mut chunk) {
+                Ok(0) => break,
+                Ok(n) => raw.extend_from_slice(&chunk[..n]),
+                Err(e) => return Err(e),
+            }
+        }
+        parse_response(&raw)
+    }
+
+    /// Decode a raw response byte stream (head + framed body).
+    pub fn parse_response(raw: &[u8]) -> std::io::Result<Response> {
+        let head_end = find_subslice(raw, b"\r\n\r\n")
+            .ok_or_else(|| bad("response head never completed"))?;
+        let head = std::str::from_utf8(&raw[..head_end])
+            .map_err(|_| bad("response head is not UTF-8"))?;
+        let mut lines = head.split("\r\n");
+        let status_line = lines.next().unwrap_or("");
+        let mut parts = status_line.split(' ');
+        let _version = parts.next().unwrap_or("");
+        let status: u16 = parts
+            .next()
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| bad("malformed status line"))?;
+        let mut headers = Vec::new();
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            let Some(colon) = line.find(':') else {
+                return Err(bad("malformed response header"));
+            };
+            headers.push((
+                line[..colon].trim().to_ascii_lowercase(),
+                line[colon + 1..].trim().to_string(),
+            ));
+        }
+        let rest = &raw[head_end + 4..];
+        let chunked = headers
+            .iter()
+            .any(|(n, v)| n == "transfer-encoding" && v.eq_ignore_ascii_case("chunked"));
+        let body = if chunked {
+            decode_chunked(rest)?
+        } else {
+            match headers.iter().find(|(n, _)| n == "content-length") {
+                Some((_, v)) => {
+                    let n: usize =
+                        v.parse().map_err(|_| bad("bad response Content-Length"))?;
+                    if rest.len() < n {
+                        return Err(bad("truncated response body"));
+                    }
+                    rest[..n].to_vec()
+                }
+                None => rest.to_vec(),
+            }
+        };
+        Ok(Response { status, headers, body })
+    }
+
+    /// Strip chunked transfer encoding. Errors on truncation — a stream a
+    /// fault (or a real disconnect) cut short is detectable, not silent.
+    pub fn decode_chunked(mut rest: &[u8]) -> std::io::Result<Vec<u8>> {
+        let mut body = Vec::new();
+        loop {
+            let line_end =
+                find_subslice(rest, b"\r\n").ok_or_else(|| bad("truncated chunk size"))?;
+            let size_str = std::str::from_utf8(&rest[..line_end])
+                .map_err(|_| bad("chunk size is not UTF-8"))?;
+            // chunk extensions (";...") are legal — ignore them
+            let size_str = size_str.split(';').next().unwrap_or("").trim();
+            let size = usize::from_str_radix(size_str, 16)
+                .map_err(|_| bad("bad chunk size"))?;
+            rest = &rest[line_end + 2..];
+            if size == 0 {
+                return Ok(body);
+            }
+            if rest.len() < size + 2 {
+                return Err(bad("truncated chunk data"));
+            }
+            body.extend_from_slice(&rest[..size]);
+            rest = &rest[size + 2..];
+        }
+    }
+}
+
+/// First offset of `needle` in `hay`, if any.
+pub(crate) fn find_subslice(hay: &[u8], needle: &[u8]) -> Option<usize> {
+    if needle.is_empty() || hay.len() < needle.len() {
+        return None;
+    }
+    hay.windows(needle.len()).position(|w| w == needle)
+}
+
+// -- shutdown signals -----------------------------------------------------
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Latched by the SIGTERM/SIGINT handler — polled by `perq serve --http`.
+static SIGNALED: AtomicBool = AtomicBool::new(false);
+
+/// Has a shutdown signal arrived since [`install_shutdown_signals`]?
+pub fn shutdown_signaled() -> bool {
+    SIGNALED.load(Ordering::Relaxed)
+}
+
+/// Test hook: latch the same flag a real SIGTERM would.
+pub fn simulate_shutdown_signal() {
+    SIGNALED.store(true, Ordering::SeqCst);
+}
+
+/// Install SIGTERM + SIGINT handlers that latch [`shutdown_signaled`].
+/// The handler body is one atomic store — async-signal-safe — and `std`
+/// already links libc, so `signal(2)` is declared here directly instead
+/// of pulling in a crate.
+#[cfg(unix)]
+pub fn install_shutdown_signals() {
+    extern "C" fn on_signal(_sig: i32) {
+        SIGNALED.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGTERM, on_signal as usize);
+        signal(SIGINT, on_signal as usize);
+    }
+}
+
+/// Non-unix builds poll the latch only (set via CLI backstops or tests).
+#[cfg(not(unix))]
+pub fn install_shutdown_signals() {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_spec_grammar() {
+        let (plan, rejected) = fault::parse("accept_close:2,stall_read:1:50,drop_mid_response:3");
+        assert_eq!(plan.accept_close, Some(2));
+        assert_eq!(plan.stall_read, Some((1, 50)));
+        assert_eq!(plan.drop_mid_response, Some(3));
+        assert!(rejected.is_empty());
+        // junk clauses are reported, never silently dropped
+        let (plan, rejected) = fault::parse("accept_close:0,stall_read:1,typo:4,stall_read:2:5:9");
+        assert!(plan.is_empty(), "{plan:?}");
+        assert_eq!(rejected.len(), 4);
+        // empty/whitespace specs are fine
+        let (plan, rejected) = fault::parse("  ");
+        assert!(plan.is_empty() && rejected.is_empty());
+    }
+
+    #[test]
+    fn response_bytes_shape() {
+        let b = response_bytes(429, "application/json", &[("Retry-After", "1")],
+                               b"{\"error\":\"queue_full\"}", true);
+        let s = String::from_utf8(b).unwrap();
+        assert!(s.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{s}");
+        assert!(s.contains("Content-Length: 22\r\n"), "{s}");
+        assert!(s.contains("Retry-After: 1\r\n"), "{s}");
+        assert!(s.contains("Connection: close\r\n"), "{s}");
+        assert!(s.ends_with("\r\n\r\n{\"error\":\"queue_full\"}"), "{s}");
+    }
+
+    #[test]
+    fn chunk_roundtrip() {
+        let mut wire = Vec::new();
+        encode_chunk(&mut wire, b"{\"token\":3}\n");
+        encode_chunk(&mut wire, b"");
+        encode_chunk(&mut wire, b"{\"done\":true}\n");
+        wire.extend_from_slice(b"0\r\n\r\n");
+        let body = client::decode_chunked(&wire).unwrap();
+        assert_eq!(body, b"{\"token\":3}\n{\"done\":true}\n");
+        // truncation is an error, not a silent prefix
+        assert!(client::decode_chunked(&wire[..wire.len() - 5]).is_err());
+        assert!(client::decode_chunked(b"zz\r\n").is_err());
+    }
+
+    #[test]
+    fn client_parses_fixed_and_chunked_responses() {
+        let raw = response_bytes(200, "application/json", &[], b"{\"nll\":1.5}", false);
+        let r = client::parse_response(&raw).unwrap();
+        assert_eq!(r.status, 200);
+        assert_eq!(r.header("content-type"), Some("application/json"));
+        assert_eq!(r.body, b"{\"nll\":1.5}");
+        let mut raw = b"HTTP/1.1 200 OK\r\nTransfer-Encoding: chunked\r\n\r\n".to_vec();
+        encode_chunk(&mut raw, b"abc");
+        raw.extend_from_slice(b"0\r\n\r\n");
+        let r = client::parse_response(&raw).unwrap();
+        assert_eq!(r.body, b"abc");
+        assert!(client::parse_response(b"junk").is_err());
+    }
+
+    #[test]
+    fn status_reasons_are_stable() {
+        for (code, reason) in [(200, "OK"), (408, "Request Timeout"),
+                               (413, "Payload Too Large"), (429, "Too Many Requests"),
+                               (499, "Client Closed Request"), (503, "Service Unavailable"),
+                               (504, "Gateway Timeout")] {
+            assert_eq!(status_reason(code), reason);
+        }
+    }
+
+    #[test]
+    fn find_subslice_edges() {
+        assert_eq!(find_subslice(b"abcd", b"cd"), Some(2));
+        assert_eq!(find_subslice(b"abcd", b"x"), None);
+        assert_eq!(find_subslice(b"ab", b"abcd"), None);
+        assert_eq!(find_subslice(b"abcd", b""), None);
+    }
+}

@@ -123,6 +123,9 @@ pub enum ServeError {
     WorkerFailed,
     /// the server drained before this request could run
     ShuttingDown,
+    /// the client abandoned the request (e.g. disconnected mid-stream);
+    /// the slot is freed at the worker's next sweep
+    Cancelled,
 }
 
 impl ServeError {
@@ -134,6 +137,7 @@ impl ServeError {
             ServeError::DeadlineExceeded => "deadline_exceeded",
             ServeError::WorkerFailed => "worker_failed",
             ServeError::ShuttingDown => "shutting_down",
+            ServeError::Cancelled => "cancelled",
         }
     }
 }
@@ -146,6 +150,7 @@ impl std::fmt::Display for ServeError {
             ServeError::DeadlineExceeded => "request deadline exceeded",
             ServeError::WorkerFailed => "request lost to a worker failure",
             ServeError::ShuttingDown => "request dropped: server shutting down",
+            ServeError::Cancelled => "request cancelled: client disconnected",
         };
         f.write_str(what)
     }
@@ -264,6 +269,14 @@ pub struct GenerateRequest {
     pub priority: u8,
     /// absolute deadline, resolved at submit time
     pub deadline: Option<Instant>,
+    /// per-token streaming sink: the worker sends each sampled token the
+    /// moment it exists (first token after prefill, then one per decode
+    /// step). Best-effort — a dropped receiver never fails the request.
+    stream: Option<Sender<i32>>,
+    /// cooperative cancellation (client disconnected): checked at the
+    /// batch-forming sweep and between decode steps, where deadlines are
+    /// checked, so a cancelled request frees its slot within one step
+    cancel: Option<Arc<AtomicBool>>,
     respond: Sender<ServeResult<GenerateResponse>>,
 }
 
@@ -301,6 +314,18 @@ impl Request {
 
     fn is_expired(&self, now: Instant) -> bool {
         self.deadline().map_or(false, |d| now >= d)
+    }
+
+    /// Cancelled by the client while still queued (generate-only: score
+    /// responses are a single write, so a vanished scorer is undetectable
+    /// until then and simply gets its send dropped).
+    fn is_cancelled(&self) -> bool {
+        match self {
+            Request::Score(_) => false,
+            Request::Generate(r) => {
+                r.cancel.as_ref().map_or(false, |c| c.load(Ordering::Relaxed))
+            }
+        }
     }
 }
 
@@ -399,6 +424,9 @@ pub struct ServerStats {
     pub rejected: Arc<Counter>,
     /// queued requests evicted for higher-priority arrivals (⊂ rejected)
     pub shed: Arc<Counter>,
+    /// requests abandoned by their client, e.g. a mid-stream disconnect
+    /// (⊂ rejected — the completion contract is unchanged)
+    pub cancelled: Arc<Counter>,
     /// requests expired before completion
     pub deadline_exceeded: Arc<Counter>,
     /// replica poisonings (panic → session quarantined → respawn)
@@ -454,6 +482,10 @@ impl Default for ServerStats {
             shed: registry.counter(
                 "perq_server_shed_total",
                 "queued requests shed for higher-priority arrivals",
+            ),
+            cancelled: registry.counter(
+                "perq_server_cancelled_total",
+                "requests cancelled by client disconnect (subset of rejected)",
             ),
             deadline_exceeded: registry.counter(
                 "perq_server_deadline_exceeded_total",
@@ -516,6 +548,8 @@ pub struct StatsSnapshot {
     pub rejected: u64,
     /// subset of `rejected`: evicted for higher-priority arrivals
     pub shed: u64,
+    /// subset of `rejected`: abandoned by the client (disconnects)
+    pub cancelled: u64,
     /// expired before completion
     pub deadline_exceeded: u64,
     /// lost to worker failures (terminal, retries exhausted)
@@ -563,11 +597,41 @@ impl ServerStats {
             submitted: self.submitted.get(),
             rejected: self.rejected.get(),
             shed: self.shed.get(),
+            cancelled: self.cancelled.get(),
             deadline_exceeded: self.deadline_exceeded.get(),
             failed: self.failures.get(),
             worker_failures: self.worker_failures.get(),
             retries: self.retries.get(),
         }
+    }
+
+    /// Prometheus text exposition for everything this process serves:
+    /// this server's registry followed by the process-wide engine
+    /// registry (the name sets are disjoint). This is the ONE render
+    /// path behind `GET /metrics`, the periodic `--metrics-out` writer,
+    /// and the exit-time flush guard, so scrape consumers can never see
+    /// divergent formats.
+    pub fn render_prometheus_full(&self) -> String {
+        let mut text = self.registry.render_prometheus();
+        text.push_str(&crate::obs::metrics::global().render_prometheus());
+        text
+    }
+
+    /// The JSON twin of [`render_prometheus_full`]: the legacy snapshot
+    /// fields flat at the top level (bit-compatible with the
+    /// pre-registry shape), plus the full server registry, the
+    /// process-wide engine registry, and the recent request traces.
+    ///
+    /// [`render_prometheus_full`]: ServerStats::render_prometheus_full
+    pub fn snapshot_json_full(&self) -> Json {
+        let mut o = match self.snapshot().to_json() {
+            Json::Obj(m) => m,
+            _ => BTreeMap::new(),
+        };
+        o.insert("registry".to_string(), self.registry.snapshot_json());
+        o.insert("engine".to_string(), crate::obs::metrics::global().snapshot_json());
+        o.insert("traces".to_string(), self.traces.to_json());
+        Json::Obj(o)
     }
 }
 
@@ -600,6 +664,7 @@ impl StatsSnapshot {
         o.insert("submitted".to_string(), Json::Num(self.submitted as f64));
         o.insert("rejected".to_string(), Json::Num(self.rejected as f64));
         o.insert("shed".to_string(), Json::Num(self.shed as f64));
+        o.insert("cancelled".to_string(), Json::Num(self.cancelled as f64));
         o.insert("deadline_exceeded".to_string(), Json::Num(self.deadline_exceeded as f64));
         o.insert("failed".to_string(), Json::Num(self.failed as f64));
         o.insert("worker_failures".to_string(), Json::Num(self.worker_failures as f64));
@@ -848,6 +913,21 @@ impl InferenceServer {
     pub fn submit_generate_with(&self, prompt: Vec<i32>, max_new_tokens: usize,
                                 opts: SubmitOpts)
                                 -> Result<Receiver<ServeResult<GenerateResponse>>> {
+        self.submit_generate_stream(prompt, max_new_tokens, opts, None, None)
+    }
+
+    /// Submit a generation request with per-token streaming and/or
+    /// cooperative cancellation — the network front door's entry point.
+    ///
+    /// Each sampled token is sent into `stream` the moment it exists (the
+    /// first right after prompt prefill, then one per decode step); the
+    /// final [`GenerateResponse`] still arrives on the returned receiver.
+    /// Setting `cancel` resolves the request `Err(Cancelled)` and frees
+    /// its slot at the worker's next sweep — the disconnect path.
+    pub fn submit_generate_stream(&self, prompt: Vec<i32>, max_new_tokens: usize,
+                                  opts: SubmitOpts, stream: Option<Sender<i32>>,
+                                  cancel: Option<Arc<AtomicBool>>)
+                                  -> Result<Receiver<ServeResult<GenerateResponse>>> {
         ensure!(
             self.supports_generate,
             "this server's backend cannot decode incrementally (fixed-shape AOT \
@@ -871,6 +951,8 @@ impl InferenceServer {
             trace_id: self.stats.traces.next_id(),
             priority: opts.priority,
             deadline: self.effective_deadline(opts),
+            stream,
+            cancel,
             respond: tx,
         }))?;
         Ok(rx)
@@ -984,6 +1066,27 @@ impl InferenceServer {
         if let Ok(mut q) = lock.lock() {
             q.shutdown = true;
         }
+        cv.notify_all();
+    }
+
+    /// Begin graceful drain through a shared handle (`&self`, unlike
+    /// [`shutdown`]): admission stops (new submits fail), replicas finish
+    /// queued + in-flight work and then exit. The network front door
+    /// calls this the moment drain begins; the replicas are joined later
+    /// when the last owner drops. Idempotent.
+    ///
+    /// [`shutdown`]: InferenceServer::shutdown
+    pub fn begin_shutdown(&self) {
+        self.signal_shutdown();
+    }
+
+    /// Drain-timeout escalation through a shared handle: abandon whatever
+    /// is still queued or mid-step (the abort flag doubles as every
+    /// backend's step interrupt) so a drain can never hang on a stuck
+    /// request. Still-unserved requests resolve `Err(ShuttingDown)`.
+    pub fn abort_in_flight(&self) {
+        self.abort.store(true, Ordering::Relaxed);
+        let (_, cv) = &*self.queue;
         cv.notify_all();
     }
 
@@ -1125,6 +1228,10 @@ fn count_failure(stats: &ServerStats, err: ServeError) {
         }
         ServeError::DeadlineExceeded => stats.deadline_exceeded.inc(),
         ServeError::WorkerFailed => stats.failures.inc(),
+        ServeError::Cancelled => {
+            stats.cancelled.inc();
+            stats.rejected.inc();
+        }
     }
 }
 
@@ -1326,9 +1433,9 @@ fn run_replica(mut backend: Box<dyn ExecBackend>, ctx: &WorkerCtx,
             return ReplicaExit::Clean;
         }
         let n_active = gen_slots.iter().filter(|s| s.is_some()).count();
-        // requests whose deadline expired while queued, resolved after
-        // the lock drops
-        let mut expired: Vec<Request> = Vec::new();
+        // requests that died while queued (deadline expired, or the
+        // client abandoned them), resolved after the lock drops
+        let mut swept: Vec<(Request, ServeError)> = Vec::new();
         // -- pull work: block only when fully idle ------------------------
         let (score_reqs, gen_reqs): (Vec<ScoreRequest>, Vec<GenerateRequest>) = {
             let (lock, cv) = &*ctx.queue;
@@ -1375,8 +1482,14 @@ fn run_replica(mut backend: Box<dyn ExecBackend>, ctx: &WorkerCtx,
             let mut gens = Vec::new();
             let now = Instant::now();
             loop {
+                if q.pending.front().map_or(false, |r| r.is_cancelled()) {
+                    swept.push((q.pending.pop_front().expect("front checked above"),
+                                ServeError::Cancelled));
+                    continue;
+                }
                 if q.pending.front().map_or(false, |r| r.is_expired(now)) {
-                    expired.push(q.pending.pop_front().expect("front checked above"));
+                    swept.push((q.pending.pop_front().expect("front checked above"),
+                                ServeError::DeadlineExceeded));
                     continue;
                 }
                 let fits = match q.pending.front() {
@@ -1395,8 +1508,8 @@ fn run_replica(mut backend: Box<dyn ExecBackend>, ctx: &WorkerCtx,
             ctx.stats.queue_depth.set(q.pending.len() as i64);
             (scores, gens)
         };
-        for req in expired {
-            resolve_unserved(&ctx.stats, req, ServeError::DeadlineExceeded);
+        for (req, err) in swept {
+            resolve_unserved(&ctx.stats, req, err);
         }
         // admission stamp for everything pulled this round (trace span:
         // enqueue → admit)
@@ -1493,6 +1606,11 @@ fn run_replica(mut backend: Box<dyn ExecBackend>, ctx: &WorkerCtx,
                     let first = argmax(&logits[(req.prompt.len() - 1) * v..req.prompt.len() * v]);
                     let prefilled = Instant::now();
                     ctx.stats.prefill_lat.record(prefilled - req.submitted);
+                    if let Some(tx) = &req.stream {
+                        // best-effort: a vanished stream consumer shows up
+                        // as a cancel, never as a serving error
+                        let _ = tx.send(first);
+                    }
                     let active =
                         ActiveGen { req, generated: vec![first], admitted, prefilled };
                     if active.generated.len() >= active.req.max_new_tokens {
@@ -1530,17 +1648,25 @@ fn run_replica(mut backend: Box<dyn ExecBackend>, ctx: &WorkerCtx,
         if n_active == 0 {
             continue;
         }
-        // deadline sweep between decode steps: expired generations free
-        // their slots instead of burning further decode work
+        // cancel + deadline sweep between decode steps: a request whose
+        // client vanished or whose deadline passed frees its slot instead
+        // of burning further decode work
         let now = Instant::now();
         for slot in 0..b {
-            let hit = gen_slots[slot]
-                .as_ref()
-                .and_then(|a| a.req.deadline)
-                .map_or(false, |d| now >= d);
-            if hit {
+            let verdict = gen_slots[slot].as_ref().and_then(|a| {
+                let cancelled =
+                    a.req.cancel.as_ref().map_or(false, |c| c.load(Ordering::Relaxed));
+                if cancelled {
+                    Some(ServeError::Cancelled)
+                } else if a.req.deadline.map_or(false, |d| now >= d) {
+                    Some(ServeError::DeadlineExceeded)
+                } else {
+                    None
+                }
+            });
+            if let Some(err) = verdict {
                 let active = gen_slots[slot].take().expect("checked above");
-                fail_active(&ctx.stats, active, ServeError::DeadlineExceeded);
+                fail_active(&ctx.stats, active, err);
                 last_tokens[slot] = -1;
                 let _ = backend.reset_slot(sid, slot);
             }
@@ -1565,6 +1691,9 @@ fn run_replica(mut backend: Box<dyn ExecBackend>, ctx: &WorkerCtx,
                     let done = {
                         let active = gen_slots[slot].as_mut().expect("checked above");
                         active.generated.push(tok);
+                        if let Some(tx) = &active.req.stream {
+                            let _ = tx.send(tok);
+                        }
                         active.generated.len() >= active.req.max_new_tokens
                     };
                     if done {
@@ -1738,6 +1867,7 @@ mod tests {
         assert_eq!(snap.submitted, 0);
         assert_eq!(snap.rejected, 0);
         assert_eq!(snap.shed, 0);
+        assert_eq!(snap.cancelled, 0);
         assert_eq!(snap.deadline_exceeded, 0);
         assert_eq!(snap.failed, 0);
         assert_eq!(snap.worker_failures, 0);
@@ -1778,19 +1908,43 @@ mod tests {
             assert!(legacy.get(key).is_some(), "legacy snapshot lost key {key}");
         }
         // plus the additive failure-model keys
-        for key in ["submitted", "rejected", "shed", "deadline_exceeded", "failed",
-                    "worker_failures", "retries"] {
+        for key in ["submitted", "rejected", "shed", "cancelled", "deadline_exceeded",
+                    "failed", "worker_failures", "retries"] {
             assert!(legacy.get(key).is_some(), "snapshot missing failure key {key}");
+        }
+    }
+
+    #[test]
+    fn full_renders_are_single_sourced() {
+        // `/metrics`, the periodic --metrics-out dump, and the exit flush
+        // all call these two methods — pin their shape here once
+        let s = ServerStats::default();
+        s.served.add(2);
+        s.cancelled.inc();
+        let marker = crate::obs::metrics::global()
+            .counter("perq_render_test_marker_total", "render-path test marker");
+        marker.inc();
+        let prom = s.render_prometheus_full();
+        assert!(prom.contains("perq_requests_served_total 2"), "{prom}");
+        assert!(prom.contains("perq_server_cancelled_total 1"), "{prom}");
+        // the process-wide engine registry rides along in one exposition
+        assert!(prom.contains("perq_render_test_marker_total"), "{prom}");
+        let j = s.snapshot_json_full();
+        assert_eq!(j.get("served").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(j.get("cancelled").and_then(|v| v.as_usize()), Some(1));
+        for key in ["registry", "engine", "traces"] {
+            assert!(j.get(key).is_some(), "snapshot_json_full missing {key}");
         }
     }
 
     #[test]
     fn serve_error_kinds_are_stable() {
         let all = [ServeError::QueueFull, ServeError::Shed, ServeError::DeadlineExceeded,
-                   ServeError::WorkerFailed, ServeError::ShuttingDown];
+                   ServeError::WorkerFailed, ServeError::ShuttingDown,
+                   ServeError::Cancelled];
         let kinds: Vec<&str> = all.iter().map(|e| e.as_str()).collect();
         assert_eq!(kinds, vec!["queue_full", "shed", "deadline_exceeded", "worker_failed",
-                               "shutting_down"]);
+                               "shutting_down", "cancelled"]);
         // Display is human-readable and distinct per kind
         let shown: std::collections::BTreeSet<String> =
             all.iter().map(|e| e.to_string()).collect();

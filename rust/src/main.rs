@@ -13,6 +13,12 @@
 //!   models     list model bundles and exported .perq artifacts
 //!   inspect    summarize one .perq artifact + its telemetry sidecar
 //!
+//! Network front door: `perq serve --artifact m.perq --http ADDR` serves
+//! over real sockets (POST /v1/score, streaming POST /v1/generate, GET
+//! /healthz /readyz /metrics /traces) until SIGTERM/SIGINT triggers a
+//! graceful drain. `PERQ_NET_FAULT=accept_close:N,...` injects
+//! deterministic connection faults for testing.
+//!
 //! Observability: `perq serve --metrics-out FILE` dumps the server's
 //! metrics registry periodically and at shutdown — Prometheus text
 //! exposition to FILE, a JSON snapshot (legacy ServerStats shape +
@@ -48,7 +54,7 @@ use perq::prelude::*;
 use perq::stats;
 use perq::util::bench::{fmt_count, fmt_ppl, print_table, TrajectoryRow};
 use perq::util::cli;
-use perq::util::json::{self, Json};
+use perq::util::json;
 
 fn main() {
     // `-n N` is the conventional short form for `--max-new N` (the tiny
@@ -114,6 +120,18 @@ fn print_help() {
          \x20            [--metrics-out FILE] (periodic + final registry dump:\n\
          \x20            Prometheus text → FILE, JSON snapshot → FILE.json;\n\
          \x20            writes are atomic temp-file + rename)\n\
+         \x20            [--http ADDR] (HTTP/1.1 front door on ADDR, e.g.\n\
+         \x20            127.0.0.1:8080 — POST /v1/score, streaming POST\n\
+         \x20            /v1/generate, GET /healthz /readyz /metrics /traces;\n\
+         \x20            serves until SIGTERM/SIGINT, then drains gracefully)\n\
+         \x20            [--max-conns N] (connection cap, over-limit → 503 +\n\
+         \x20            Retry-After; default 64)  [--read-timeout-ms MS |\n\
+         \x20            --write-timeout-ms MS] (per-connection socket caps,\n\
+         \x20            default 5000)  [--max-body-bytes N] (request-body cap,\n\
+         \x20            default 1 MiB)  [--max-secs S] (exit after S seconds —\n\
+         \x20            smoke runs)  PERQ_NET_FAULT=accept_close:N,\n\
+         \x20            stall_read:N:MS,drop_mid_response:N (deterministic\n\
+         \x20            connection-fault injection)\n\
          \x20 generate   --artifact m.perq [--prompt-tokens 1,2,3] [--max-new N | -n N]\n\
          \x20            (stateful prefill+decode generation: quantized KV cache,\n\
          \x20            PERQ_KV={{int8,f32}}; appends BENCH_decode.json)\n\
@@ -142,7 +160,7 @@ fn print_help() {
 }
 
 fn spec_from_args(args: &cli::Args) -> Result<PipelineSpec> {
-    let block = args.get_usize("block", 32);
+    let block = flag_usize(args, "block", 32);
     let format = Format::parse(&args.get_or("format", "int4"))
         .ok_or_else(|| anyhow!("bad --format"))?;
     let mut spec = if let Some(preset) = args.get("preset") {
@@ -167,8 +185,8 @@ fn spec_from_args(args: &cli::Args) -> Result<PipelineSpec> {
     if args.has_flag("zeroshot") {
         spec.run_zeroshot = true;
     }
-    spec.eval_tokens = args.get_usize("eval-tokens", spec.eval_tokens);
-    spec.calib_seqs = args.get_usize("calib-seqs", spec.calib_seqs);
+    spec.eval_tokens = flag_usize(args, "eval-tokens", spec.eval_tokens);
+    spec.calib_seqs = flag_usize(args, "calib-seqs", spec.calib_seqs);
     if let Some(src) = args.get("source") {
         let s = Source::parse(src).ok_or_else(|| anyhow!("bad --source"))?;
         // --source selects the corpus for the whole run: calibration AND
@@ -257,8 +275,8 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
     let artifact = args.get("artifact").ok_or_else(|| {
         anyhow!("serve needs --artifact model.perq (create one with `perq export`)")
     })?;
-    let n_requests = args.get_usize("requests", 32).max(1);
-    let workers = args.get_usize("workers", 1).max(1);
+    let n_requests = flag_usize(args, "requests", 32).max(1);
+    let workers = flag_usize(args, "workers", 1).max(1);
     // --max-wait-ms > PERQ_MAX_WAIT_MS > default
     let max_wait =
         perq::coordinator::server::resolve_max_wait(flag_u64(args, "max-wait-ms"));
@@ -318,6 +336,72 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
         })
     });
 
+    // --http ADDR: real network front door — serve requests off the wire
+    // until SIGTERM/SIGINT (or --max-secs, for smoke runs) instead of
+    // self-generating traffic
+    if let Some(addr) = args.get("http") {
+        let mut hopts = perq::coordinator::http::HttpOptions::default();
+        if let Some(n) = flag_u64(args, "max-conns") {
+            hopts.max_conns = (n as usize).max(1);
+        }
+        if let Some(ms) = flag_u64(args, "read-timeout-ms") {
+            hopts.read_timeout = Duration::from_millis(ms.max(1));
+        }
+        if let Some(ms) = flag_u64(args, "write-timeout-ms") {
+            hopts.write_timeout = Duration::from_millis(ms.max(1));
+        }
+        if let Some(n) = flag_u64(args, "max-body-bytes") {
+            hopts.max_body = (n as usize).max(1);
+        }
+        hopts.drain_timeout = opts.drain_timeout;
+        let shared = server.shared_stats();
+        let http =
+            perq::coordinator::http::HttpServer::start(Arc::new(server), addr, hopts)?;
+        perq::coordinator::net::install_shutdown_signals();
+        println!(
+            "http: listening on {} — POST /v1/score /v1/generate, GET /healthz \
+             /readyz /metrics /traces (SIGTERM/SIGINT drains and exits)",
+            http.local_addr()
+        );
+        let max_secs = flag_u64(args, "max-secs");
+        let started = Instant::now();
+        while !perq::coordinator::net::shutdown_signaled() {
+            if max_secs.map_or(false, |s| started.elapsed() >= Duration::from_secs(s)) {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        println!("http: draining ({} ms budget)", hopts.drain_timeout.as_millis());
+        http.shutdown();
+        metrics_stop.store(true, Ordering::Relaxed);
+        if let Some(h) = metrics_writer {
+            let _ = h.join();
+        }
+        let snap = shared.snapshot();
+        println!(
+            "outcomes: {} submitted = {} served + {} rejected ({} shed, {} cancelled) \
+             + {} deadline-exceeded + {} failed | {} worker failure(s), {} retries",
+            snap.submitted,
+            snap.served,
+            snap.rejected,
+            snap.shed,
+            snap.cancelled,
+            snap.deadline_exceeded,
+            snap.failed,
+            snap.worker_failures,
+            snap.retries,
+        );
+        if let Some(path) = &metrics_out {
+            write_metrics_files(path, &shared)?;
+            println!(
+                "metrics: {} (Prometheus text) + {} (JSON snapshot)",
+                path.display(),
+                metrics_json_path(path).display(),
+            );
+        }
+        return Ok(());
+    }
+
     // deterministic request stream over the held-out split
     let t = dm.cfg.seq_len;
     let toks = token_stream(Source::Wiki, Split::Test, (n_requests + 2) * t);
@@ -350,7 +434,7 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
     // clock so the throughput line and the JSON record stay coherent
     let score_wall = t2.elapsed().as_secs_f64();
     // a slice of generation traffic so the decode-phase stats are live
-    let n_gen = args.get_usize("gen-requests", 4);
+    let n_gen = flag_usize(args, "gen-requests", 4);
     if n_gen > 0 && t >= 4 {
         let plen = (t / 2).clamp(1, 8);
         let max_new = (t - plen).min(8).max(1);
@@ -500,6 +584,24 @@ fn flag_u64(args: &cli::Args, name: &str) -> Option<u64> {
     }
 }
 
+/// [`flag_u64`] with a default — the warned replacement for the silent
+/// `get_usize` coercion (a mistyped `--requests` or `--block` must say so
+/// instead of quietly running with the default).
+fn flag_usize(args: &cli::Args, name: &str, default: usize) -> usize {
+    match args.get(name) {
+        None => default,
+        Some(raw) => match raw.parse::<usize>() {
+            Ok(v) => v,
+            Err(_) => {
+                perq::log_warn!(
+                    "--{name} {raw:?} is not a number — using default {default}"
+                );
+                default
+            }
+        },
+    }
+}
+
 /// Drop guard for `--metrics-out`: writes one final registry dump when the
 /// serve command exits by any path, including a panic unwinding through
 /// `cmd_serve`, so the on-disk snapshot always reflects the end of the run.
@@ -541,17 +643,11 @@ fn write_atomic(path: &Path, contents: &str) -> Result<()> {
 /// (bit-compatible with the pre-registry shape), plus the full registry,
 /// the engine registry, and the recent request traces.
 fn write_metrics_files(prom: &Path, stats: &ServerStats) -> Result<()> {
-    let mut text = stats.registry.render_prometheus();
-    text.push_str(&perq::obs::metrics::global().render_prometheus());
-    write_atomic(prom, &text)?;
-    let mut o = match stats.snapshot().to_json() {
-        Json::Obj(m) => m,
-        _ => std::collections::BTreeMap::new(),
-    };
-    o.insert("registry".to_string(), stats.registry.snapshot_json());
-    o.insert("engine".to_string(), perq::obs::metrics::global().snapshot_json());
-    o.insert("traces".to_string(), stats.traces.to_json());
-    write_atomic(&metrics_json_path(prom), &json::dump(&Json::Obj(o)))?;
+    // single-sourced with `GET /metrics`: both halves come from the same
+    // ServerStats render methods, so the dump and the scrape endpoint can
+    // never drift apart
+    write_atomic(prom, &stats.render_prometheus_full())?;
+    write_atomic(&metrics_json_path(prom), &json::dump(&stats.snapshot_json_full()))?;
     Ok(())
 }
 
@@ -566,7 +662,7 @@ fn cmd_generate(args: &cli::Args) -> Result<()> {
     })?;
     let dm = DeployedModel::load(Path::new(artifact))?;
     let t = dm.cfg.seq_len;
-    let max_new = args.get_usize("max-new", 16).max(1);
+    let max_new = flag_usize(args, "max-new", 16).max(1);
     let prompt: Vec<i32> = match args.get("prompt-tokens") {
         Some(s) => s
             .split(',')
@@ -654,7 +750,7 @@ fn cmd_baseline(args: &cli::Args) -> Result<()> {
     let ctx = RepoContext::discover()?;
     let engine = engine_from_args(args, &ctx)?;
     let bundle = ModelBundle::load_with_engine(&ctx, &engine, &model)?;
-    let n = args.get_usize("eval-tokens", 8192);
+    let n = flag_usize(args, "eval-tokens", 8192);
     let z = args.has_flag("zeroshot").then_some(2048);
     let (eval, zres) = baseline_eval(&bundle, &engine, n, z)?;
     println!("{model} BF16-analog baseline: ppl {:.3} over {} predictions",
@@ -719,7 +815,7 @@ fn cmd_opcounts() -> Result<()> {
 
 fn cmd_stats(args: &cli::Args) -> Result<()> {
     let model = args.get_or("model", "llama_tiny");
-    let block = args.get_usize("block", 32);
+    let block = flag_usize(args, "block", 32);
     let ctx = RepoContext::discover()?;
     let engine = engine_from_args(args, &ctx)?;
     let bundle = ModelBundle::load_with_engine(&ctx, &engine, &model)?;

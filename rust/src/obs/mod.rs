@@ -12,6 +12,13 @@
 //!     max|x| and kurtosis, per-site quantization MSE).
 //!   * [`log`] — `PERQ_LOG`-leveled stderr logging behind the crate-root
 //!     `log_error!`/`log_warn!`/`log_info!`/`log_debug!` macros.
+//!
+//! Every consumer-facing surface renders through one pair of methods —
+//! `ServerStats::render_prometheus_full` (server registry + process-wide
+//! engine registry in one exposition) and its JSON twin
+//! `snapshot_json_full`. `GET /metrics`, the periodic `--metrics-out`
+//! writer, and the exit-time flush guard all call those two, so scrape
+//! and dump output can never drift apart.
 
 pub mod log;
 pub mod metrics;

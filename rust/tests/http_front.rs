@@ -1,0 +1,541 @@
+//! Network front door: HTTP/1.1 robustness over real sockets (ISSUE 8).
+//!
+//! Everything here runs against `127.0.0.1:0` listeners with deterministic
+//! fault injection — no sleeps-and-hope: every asserted state change is
+//! either synchronous (a response on the wire) or polled against a bounded
+//! deadline with the counter that proves it.
+//!
+//! Both injection registries (`coordinator::net::fault` for connection
+//! faults, `backend::native::fault` for engine faults) and the accept
+//! ordinal are process-global, so every test serializes on one mutex and
+//! disarms via drop guards.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::{Duration, Instant};
+
+use perq::backend::native::fault as engine_fault;
+use perq::backend::ForwardGraph;
+use perq::coordinator::http::{HttpOptions, HttpServer};
+use perq::coordinator::net::{client, fault as net_fault};
+use perq::coordinator::server::{InferenceServer, ServeOptions, StatsSnapshot};
+use perq::model::bundle::synthetic_weights;
+use perq::model::config::ModelConfig;
+use perq::model::weights::WeightSet;
+use perq::quant::{Format, WeightCodec};
+use perq::tensor::QuantMat;
+use perq::util::json;
+
+fn serial() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+/// Disarms both fault registries on drop — including on unwind out of a
+/// failing assertion.
+struct Disarm;
+impl Drop for Disarm {
+    fn drop(&mut self) {
+        net_fault::disarm();
+        engine_fault::disarm();
+    }
+}
+
+fn serving_cfg() -> ModelConfig {
+    let j = json::parse(
+        r#"{"config": {"name": "http_front", "n_layers": 1, "d_model": 16,
+            "n_heads": 2, "d_ffn": 32, "vocab": 8, "seq_len": 12,
+            "batch": 3, "block_sizes": [1, 8]}}"#,
+    )
+    .unwrap();
+    ModelConfig::from_meta(&j).unwrap()
+}
+
+fn quantize_and_pack(cfg: &ModelConfig, ws: &WeightSet, format: Format) -> WeightSet {
+    let mut out = ws.clone();
+    for site in cfg.linear_sites() {
+        let w = out.get(&site.name).clone();
+        let codec = WeightCodec::fit(format, &w);
+        let q = codec.quantize_mat(&w);
+        let packed = QuantMat::from_codec(&q, &codec).unwrap();
+        out.set(&site.name, q);
+        out.set_packed(&site.name, packed);
+    }
+    out
+}
+
+/// Spin up a tiny quantized model behind the front door on a free port.
+/// Returns the front door, a direct handle to the engine (for API-vs-wire
+/// comparisons), and the dialable address.
+fn start_http(opts: ServeOptions, hopts: HttpOptions)
+              -> (HttpServer, Arc<InferenceServer>, String) {
+    let cfg = serving_cfg();
+    let ws = quantize_and_pack(&cfg, &synthetic_weights(&cfg, 21), Format::Int4);
+    let graph = ForwardGraph::Merged { r3_block: 8, format: Format::Int4 };
+    let server = Arc::new(InferenceServer::start_native(&cfg, &ws, &graph, opts).unwrap());
+    let http = HttpServer::start(Arc::clone(&server), "127.0.0.1:0", hopts).unwrap();
+    let addr = http.local_addr().to_string();
+    (http, server, addr)
+}
+
+fn window(s: usize) -> Vec<i32> {
+    let cfg = serving_cfg();
+    (0..cfg.seq_len + 1).map(|i| ((3 * s + i) % cfg.vocab) as i32).collect()
+}
+
+fn score_body(tokens: &[i32]) -> Vec<u8> {
+    format!("{{\"tokens\":{tokens:?}}}").into_bytes()
+}
+
+const CLIENT_TIMEOUT: Duration = Duration::from_secs(15);
+
+fn get(addr: &str, path: &str) -> client::Response {
+    client::request(addr, "GET", path, &[], b"", CLIENT_TIMEOUT).unwrap()
+}
+
+fn post(addr: &str, path: &str, headers: &[(&str, &str)], body: &[u8])
+        -> client::Response {
+    client::request(addr, "POST", path, headers, body, CLIENT_TIMEOUT).unwrap()
+}
+
+/// Poll `pred` against fresh snapshots until it holds or `timeout` passes
+/// (the bounded replacement for sleeping and hoping).
+fn wait_for(http: &HttpServer, timeout: Duration,
+            pred: impl Fn(&StatsSnapshot) -> bool) -> StatsSnapshot {
+    let stats = http.stats();
+    let t0 = Instant::now();
+    loop {
+        let snap = stats.snapshot();
+        if pred(&snap) {
+            return snap;
+        }
+        assert!(
+            t0.elapsed() < timeout,
+            "condition not reached within {timeout:?}; last snapshot: \
+             submitted={} served={} rejected={} cancelled={} \
+             deadline_exceeded={} failed={}",
+            snap.submitted, snap.served, snap.rejected, snap.cancelled,
+            snap.deadline_exceeded, snap.failed,
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// submitted == served + rejected + deadline_exceeded + failed, exactly —
+/// the completion contract must stay client-observable through the wire.
+fn assert_accounting(snap: &StatsSnapshot) {
+    assert_eq!(
+        snap.submitted,
+        snap.served + snap.rejected + snap.deadline_exceeded + snap.failed,
+        "completion contract violated: {} submitted vs {} served + {} rejected \
+         + {} deadline-exceeded + {} failed",
+        snap.submitted, snap.served, snap.rejected, snap.deadline_exceeded,
+        snap.failed,
+    );
+    assert!(snap.shed <= snap.rejected, "shed must be a subset of rejected");
+    assert!(snap.cancelled <= snap.rejected, "cancelled must be a subset of rejected");
+}
+
+/// Fire raw bytes at the listener and return everything it answers (the
+/// malformed-corpus path: no client-side framing assumptions at all).
+fn raw_exchange(addr: &str, bytes: &[u8], half_close: bool) -> Vec<u8> {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(CLIENT_TIMEOUT)).unwrap();
+    stream.set_write_timeout(Some(CLIENT_TIMEOUT)).unwrap();
+    stream.write_all(bytes).unwrap();
+    if half_close {
+        stream.shutdown(Shutdown::Write).unwrap();
+    }
+    let mut raw = Vec::new();
+    let mut chunk = [0u8; 4096];
+    loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => raw.extend_from_slice(&chunk[..n]),
+            Err(_) => break,
+        }
+    }
+    raw
+}
+
+fn raw_status(addr: &str, bytes: &[u8], half_close: bool) -> u16 {
+    let raw = raw_exchange(addr, bytes, half_close);
+    client::parse_response(&raw)
+        .unwrap_or_else(|e| panic!("unparsable response to {bytes:?}: {e}"))
+        .status
+}
+
+// ---------------------------------------------------------------------
+// Malformed-request corpus: every protocol violation answers its exact
+// 4xx/5xx and never panics a handler or wedges the listener.
+// ---------------------------------------------------------------------
+
+#[test]
+fn malformed_requests_get_exact_statuses_not_panics() {
+    let _s = serial();
+    let _g = Disarm;
+    // short read timeout: corpus entries that leave the connection in
+    // keep-alive (405/404) end in a quick 408 instead of a 5 s idle wait
+    let (http, _server, addr) = start_http(
+        ServeOptions::new(Duration::from_millis(1), 1),
+        HttpOptions { read_timeout: Duration::from_millis(300), ..HttpOptions::default() },
+    );
+
+    let corpus: &[(&[u8], bool, u16)] = &[
+        // missing HTTP version in the request line
+        (b"GET /healthz\r\n\r\n", false, 400),
+        // request line truncated by a half-close
+        (b"GET /hea", true, 400),
+        // unparsable Content-Length
+        (b"POST /v1/score HTTP/1.1\r\nContent-Length: abc\r\n\r\n", false, 400),
+        // declared body beyond the cap
+        (b"POST /v1/score HTTP/1.1\r\nContent-Length: 99999999\r\n\r\n", false, 413),
+        // POST without any framing
+        (b"POST /v1/score HTTP/1.1\r\n\r\n", false, 411),
+        // unsupported protocol version
+        (b"GET /healthz HTTP/2.0\r\n\r\n", false, 505),
+        // chunked request bodies are not implemented
+        (b"POST /v1/score HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n", false, 501),
+        // known path, wrong method
+        (b"DELETE /healthz HTTP/1.1\r\n\r\n", false, 405),
+        // unknown path
+        (b"GET /nope HTTP/1.1\r\n\r\n", false, 404),
+        // header line without a colon
+        (b"GET /healthz HTTP/1.1\r\nno-colon-here\r\n\r\n", false, 400),
+        // body cut short by a half-close
+        (b"POST /v1/score HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc", true, 400),
+        // body present but not JSON
+        (b"POST /v1/score HTTP/1.1\r\nContent-Length: 9\r\n\r\nnot json!", false, 400),
+    ];
+    for &(bytes, half_close, want) in corpus {
+        assert_eq!(
+            raw_status(&addr, bytes, half_close),
+            want,
+            "request {:?}",
+            String::from_utf8_lossy(bytes)
+        );
+    }
+
+    // the 405 names the allowed method
+    let raw = raw_exchange(&addr, b"DELETE /healthz HTTP/1.1\r\n\r\n", false);
+    let resp = client::parse_response(&raw).unwrap();
+    assert_eq!(resp.header("allow"), Some("GET"));
+
+    // pipelined junk: the valid first request is served, the junk behind
+    // it answers 400 and closes — the good response is never corrupted
+    let raw = raw_exchange(&addr, b"GET /healthz HTTP/1.1\r\n\r\nJUNK\r\n\r\n", false);
+    let text = String::from_utf8_lossy(&raw);
+    let ok = text.find("HTTP/1.1 200 OK").expect("first response must be 200");
+    let bad = text.find("HTTP/1.1 400 Bad Request").expect("junk must answer 400");
+    assert!(ok < bad, "responses must come back in request order");
+
+    // after all that abuse the listener still serves
+    assert_eq!(get(&addr, "/healthz").status, 200);
+    let snap = http.stats().snapshot();
+    assert_eq!(snap.submitted, 0, "no malformed request may reach the engine");
+    http.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Wire fidelity: scores over a real socket are bit-identical to the
+// in-process API (the f64 JSON path is shortest-round-trip).
+// ---------------------------------------------------------------------
+
+#[test]
+fn scored_nll_over_the_socket_is_bit_identical() {
+    let _s = serial();
+    let _g = Disarm;
+    let (http, server, addr) = start_http(
+        ServeOptions::new(Duration::from_millis(1), 1),
+        HttpOptions::default(),
+    );
+    for s in 0..3usize {
+        let direct = server
+            .submit(window(s))
+            .unwrap()
+            .recv()
+            .unwrap()
+            .expect("direct scoring must succeed")
+            .nll;
+        let resp = post(&addr, "/v1/score", &[], &score_body(&window(s)));
+        assert_eq!(resp.status, 200, "body: {}", resp.body_str());
+        let parsed = json::parse(&resp.body_str()).unwrap();
+        let wire = parsed.get("nll").and_then(|v| v.as_f64()).unwrap();
+        assert_eq!(
+            wire.to_bits(),
+            direct.to_bits(),
+            "window {s}: wire NLL {wire} must be bit-identical to direct {direct}"
+        );
+    }
+    let snap = http.stats().snapshot();
+    assert_eq!(snap.served, 6);
+    assert_accounting(&snap);
+    http.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Streaming generation: NDJSON chunks are well-framed end to end.
+// ---------------------------------------------------------------------
+
+#[test]
+fn streamed_generation_is_well_framed() {
+    let _s = serial();
+    let _g = Disarm;
+    let (http, _server, addr) = start_http(
+        ServeOptions::new(Duration::from_millis(1), 1),
+        HttpOptions::default(),
+    );
+    let resp = post(&addr, "/v1/generate", &[],
+                    br#"{"prompt": [1, 4, 2], "max_new_tokens": 6}"#);
+    assert_eq!(resp.status, 200, "body: {}", resp.body_str());
+    assert_eq!(resp.header("transfer-encoding"), Some("chunked"));
+    let body = resp.body_str();
+    let lines: Vec<&str> = body.lines().filter(|l| !l.is_empty()).collect();
+    let last = json::parse(lines.last().unwrap()).unwrap();
+    assert!(matches!(last.get("done"), Some(perq::util::json::Json::Bool(true))),
+            "final line must carry done:true, got {body:?}");
+    let tokens = last.get("tokens").and_then(|v| v.as_arr()).unwrap();
+    assert_eq!(tokens.len(), 6);
+    // one {"token":N} line per generated token, in order, before the summary
+    let streamed: Vec<f64> = lines[..lines.len() - 1]
+        .iter()
+        .map(|l| {
+            json::parse(l).unwrap().get("token").and_then(|v| v.as_f64()).unwrap()
+        })
+        .collect();
+    let summarized: Vec<f64> =
+        tokens.iter().map(|v| v.as_f64().unwrap()).collect();
+    assert_eq!(streamed, summarized, "streamed tokens must match the summary");
+    let snap = http.stats().snapshot();
+    assert_eq!(snap.served, 1);
+    assert_accounting(&snap);
+    http.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Deadline header → exact 504 and the matching counter.
+// ---------------------------------------------------------------------
+
+#[test]
+fn deadline_header_maps_to_504() {
+    let _s = serial();
+    let _g = Disarm;
+    let (http, _server, addr) = start_http(
+        ServeOptions::new(Duration::from_millis(1), 1),
+        HttpOptions::default(),
+    );
+    let resp = post(&addr, "/v1/score", &[("Perq-Deadline-Ms", "0")],
+                    &score_body(&window(0)));
+    assert_eq!(resp.status, 504);
+    assert!(resp.body_str().contains("deadline_exceeded"), "{}", resp.body_str());
+    // an unparsable deadline is a client bug, refused up front
+    let resp = post(&addr, "/v1/score", &[("Perq-Deadline-Ms", "soon")],
+                    &score_body(&window(0)));
+    assert_eq!(resp.status, 400);
+    let snap = http.stats().snapshot();
+    assert_eq!(snap.deadline_exceeded, 1);
+    assert_eq!(snap.submitted, 1, "the refused request never reached the engine");
+    assert_accounting(&snap);
+    http.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Oversubscription: client-observed statuses reconcile exactly with the
+// server's completion-contract counters.
+// ---------------------------------------------------------------------
+
+#[test]
+fn oversubscription_statuses_reconcile_with_counters() {
+    let _s = serial();
+    let _g = Disarm;
+    // one replica crawling through every engine step, a queue capped at 2,
+    // and 4x-cap oversubscription on the wire
+    engine_fault::arm(engine_fault::FaultPlan {
+        slow_step: Some((1, 120)),
+        ..engine_fault::FaultPlan::default()
+    });
+    let (http, _server, addr) = start_http(
+        ServeOptions::new(Duration::from_millis(1), 1).with_queue_cap(2),
+        HttpOptions::default(),
+    );
+    let clients = 12usize; // 4x the queue cap, plus in-flight slack
+    let mut handles = Vec::new();
+    for s in 0..clients {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            post(&addr, "/v1/score", &[], &score_body(&window(s))).status
+        }));
+    }
+    let mut ok = 0u64;
+    let mut too_many = 0u64;
+    for h in handles {
+        match h.join().unwrap() {
+            200 => ok += 1,
+            429 => too_many += 1,
+            other => panic!("unexpected status under oversubscription: {other}"),
+        }
+    }
+    assert_eq!(ok + too_many, clients as u64);
+    assert!(too_many > 0, "a 4x-cap burst must see back-pressure");
+    let snap = http.stats().snapshot();
+    assert_eq!(snap.submitted, clients as u64);
+    assert_eq!(snap.served, ok, "200s must equal the served counter exactly");
+    assert_eq!(snap.rejected, too_many, "429s must equal rejected exactly");
+    assert_eq!(snap.failed, 0);
+    assert_eq!(snap.deadline_exceeded, 0);
+    assert_accounting(&snap);
+
+    // the same counters are what /metrics exposes
+    let metrics = get(&addr, "/metrics").body_str();
+    assert!(metrics.contains(&format!("perq_requests_served_total {ok}\n")), "{metrics}");
+    assert!(
+        metrics.contains(&format!("perq_server_rejected_total {too_many}\n")),
+        "{metrics}"
+    );
+    assert!(metrics.contains("perq_http_connections_total"), "{metrics}");
+    http.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Connection-fault plans: every PERQ_NET_FAULT clause has a deterministic,
+// client-visible effect and the server survives all of them.
+// ---------------------------------------------------------------------
+
+#[test]
+fn accept_close_fault_drops_one_connection_then_recovers() {
+    let _s = serial();
+    let _g = Disarm;
+    let (http, _server, addr) = start_http(
+        ServeOptions::new(Duration::from_millis(1), 1),
+        HttpOptions::default(),
+    );
+    net_fault::arm(net_fault::NetFaultPlan {
+        accept_close: Some(1),
+        ..net_fault::NetFaultPlan::default()
+    });
+    // the first accepted connection is dropped on the floor: no response
+    let err = client::request(&addr, "GET", "/healthz", &[], b"", CLIENT_TIMEOUT);
+    assert!(err.is_err(), "a dropped connection must surface as a client error");
+    // the very next connection is served normally
+    assert_eq!(get(&addr, "/healthz").status, 200);
+    http.shutdown();
+}
+
+#[test]
+fn stall_read_fault_times_out_as_408() {
+    let _s = serial();
+    let _g = Disarm;
+    let (http, _server, addr) = start_http(
+        ServeOptions::new(Duration::from_millis(1), 1),
+        HttpOptions::default(),
+    );
+    net_fault::arm(net_fault::NetFaultPlan {
+        stall_read: Some((1, 30)),
+        ..net_fault::NetFaultPlan::default()
+    });
+    let resp = get(&addr, "/healthz");
+    assert_eq!(resp.status, 408, "a stalled read is the slowloris 408");
+    assert_eq!(get(&addr, "/healthz").status, 200);
+    http.shutdown();
+}
+
+#[test]
+fn mid_stream_disconnect_cancels_and_frees_the_slot() {
+    let _s = serial();
+    let _g = Disarm;
+    // slow decode steps give the disconnect time to land mid-generation
+    engine_fault::arm(engine_fault::FaultPlan {
+        slow_step: Some((2, 100)),
+        ..engine_fault::FaultPlan::default()
+    });
+    let (http, _server, addr) = start_http(
+        ServeOptions::new(Duration::from_millis(1), 1),
+        HttpOptions::default(),
+    );
+    net_fault::arm(net_fault::NetFaultPlan {
+        drop_mid_response: Some(1),
+        ..net_fault::NetFaultPlan::default()
+    });
+    // the streaming response breaks after its first write; the client sees
+    // a truncated chunked stream (an error, not a silent short body)
+    let r = client::request(&addr, "POST", "/v1/generate", &[],
+                            br#"{"prompt": [1, 4, 2], "max_new_tokens": 8}"#,
+                            CLIENT_TIMEOUT);
+    assert!(r.is_err(), "a mid-stream drop must not decode as a complete stream");
+    // the worker notices the flipped cancel flag at its next sweep and
+    // resolves the request Cancelled — observable, bounded, no sleeps
+    let snap = wait_for(&http, Duration::from_secs(10), |s| s.cancelled == 1);
+    assert_eq!(snap.served, 0);
+    assert!(snap.cancelled <= snap.rejected);
+
+    // the slot is actually free again: with faults gone, the next
+    // generation on the same single replica completes
+    net_fault::disarm();
+    engine_fault::disarm();
+    let resp = post(&addr, "/v1/generate", &[],
+                    br#"{"prompt": [1, 4, 2], "max_new_tokens": 4, "stream": false}"#);
+    assert_eq!(resp.status, 200, "body: {}", resp.body_str());
+    let snap = http.stats().snapshot();
+    assert_eq!(snap.served, 1);
+    assert_eq!(snap.cancelled, 1);
+    assert_accounting(&snap);
+    http.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Graceful drain: /readyz flips before the last in-flight request
+// finishes, new work is refused with 503 + Retry-After, in-flight work
+// completes, and the accounting still balances.
+// ---------------------------------------------------------------------
+
+#[test]
+fn drain_flips_readyz_while_inflight_work_completes() {
+    let _s = serial();
+    let _g = Disarm;
+    // ~9 slow engine steps make the in-flight generation outlast every probe
+    engine_fault::arm(engine_fault::FaultPlan {
+        slow_step: Some((1, 150)),
+        ..engine_fault::FaultPlan::default()
+    });
+    let (http, _server, addr) = start_http(
+        ServeOptions::new(Duration::from_millis(1), 1),
+        HttpOptions { drain_timeout: Duration::from_secs(30), ..HttpOptions::default() },
+    );
+    assert_eq!(get(&addr, "/readyz").status, 200);
+    let inflight = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            post(&addr, "/v1/generate", &[],
+                 br#"{"prompt": [1, 4, 2], "max_new_tokens": 8, "stream": false}"#)
+        })
+    };
+    // admitted, not yet resolved
+    let snap = wait_for(&http, Duration::from_secs(10), |s| s.submitted == 1);
+    assert_eq!(snap.served, 0, "the generation must still be in flight");
+
+    http.begin_drain();
+    // probes keep working; readiness and admission flip immediately
+    assert_eq!(get(&addr, "/healthz").status, 200);
+    let ready = get(&addr, "/readyz");
+    assert_eq!(ready.status, 503, "readyz must flip before in-flight work ends");
+    let refused = post(&addr, "/v1/score", &[], &score_body(&window(0)));
+    assert_eq!(refused.status, 503);
+    assert_eq!(refused.header("retry-after"), Some("1"));
+    assert!(refused.body_str().contains("shutting_down"), "{}", refused.body_str());
+
+    // the in-flight generation still completes inside the drain budget
+    let resp = inflight.join().unwrap();
+    assert_eq!(resp.status, 200, "drain must not cut off admitted work");
+    let stats = http.stats();
+    http.shutdown();
+    // the listener is really gone (shutdown joined the accept thread)
+    let gone = client::request(&addr, "GET", "/healthz", &[], b"",
+                               Duration::from_millis(500));
+    assert!(gone.is_err(), "the listener must be closed after shutdown");
+    let snap = stats.snapshot();
+    assert_eq!(snap.served, 1);
+    assert_accounting(&snap);
+}
