@@ -307,72 +307,14 @@ impl Conn {
         if head_end > MAX_HEAD_BYTES {
             return ReadOutcome::Bad { status: 431, reason: "request head too large" };
         }
-        let head = match std::str::from_utf8(&self.buf[..head_end]) {
-            Ok(s) => s.to_string(),
-            Err(_) => {
-                return ReadOutcome::Bad { status: 400, reason: "request head is not UTF-8" }
-            }
-        };
         let body_start = head_end + 4;
-
-        // -- request line + headers ---------------------------------------
-        let mut lines = head.split("\r\n");
-        let request_line = lines.next().unwrap_or("");
-        let parts: Vec<&str> = request_line.split(' ').collect();
-        if parts.len() != 3 || parts[0].is_empty() || parts[1].is_empty() {
-            return ReadOutcome::Bad { status: 400, reason: "malformed request line" };
-        }
-        let (method, target, version) = (parts[0], parts[1], parts[2]);
-        if version != "HTTP/1.1" && version != "HTTP/1.0" {
-            return ReadOutcome::Bad { status: 505, reason: "unsupported HTTP version" };
-        }
-        let mut headers: Vec<(String, String)> = Vec::new();
-        for line in lines {
-            if line.is_empty() {
-                continue;
-            }
-            if headers.len() >= MAX_HEADERS {
-                return ReadOutcome::Bad { status: 431, reason: "too many headers" };
-            }
-            let Some(colon) = line.find(':') else {
-                return ReadOutcome::Bad { status: 400, reason: "malformed header line" };
-            };
-            let name = line[..colon].trim().to_ascii_lowercase();
-            if name.is_empty() {
-                return ReadOutcome::Bad { status: 400, reason: "malformed header line" };
-            }
-            headers.push((name, line[colon + 1..].trim().to_string()));
-        }
-
-        // -- body framing ---------------------------------------------------
-        let te = headers.iter().any(|(n, _)| n == "transfer-encoding");
-        if te {
-            return ReadOutcome::Bad {
-                status: 501,
-                reason: "chunked request bodies are not supported",
-            };
-        }
-        let content_length = match headers.iter().find(|(n, _)| n == "content-length") {
-            Some((_, v)) => match v.parse::<u64>() {
-                Ok(n) => Some(n as usize),
-                Err(_) => {
-                    return ReadOutcome::Bad { status: 400, reason: "bad Content-Length" }
-                }
-            },
-            None => None,
+        let head = match parse_request_head(&self.buf[..head_end], max_body) {
+            Ok(h) => h,
+            Err((status, reason)) => return ReadOutcome::Bad { status, reason },
         };
-        let body_len = match (method, content_length) {
-            // requests that carry payloads must declare their framing
-            ("POST" | "PUT" | "PATCH", None) => {
-                return ReadOutcome::Bad { status: 411, reason: "missing Content-Length" }
-            }
-            (_, Some(n)) if n > max_body => {
-                return ReadOutcome::Bad { status: 413, reason: "request body too large" }
-            }
-            (_, Some(n)) => n,
-            (_, None) => 0,
-        };
-        let body_end = body_start + body_len;
+
+        // -- body fill ------------------------------------------------------
+        let body_end = body_start + head.body_len;
         while self.buf.len() < body_end {
             match self.fill() {
                 Ok(0) => {
@@ -385,10 +327,10 @@ impl Conn {
         let body = self.buf[body_start..body_end].to_vec();
         self.buf.drain(..body_end);
         ReadOutcome::Request(HttpRequest {
-            method: method.to_string(),
-            target: target.to_string(),
-            version: version.to_string(),
-            headers,
+            method: head.method,
+            target: head.target,
+            version: head.version,
+            headers: head.headers,
             body,
         })
     }
@@ -453,6 +395,94 @@ impl Conn {
         bytes.extend_from_slice(b"0\r\n\r\n");
         self.write_all(&bytes)
     }
+}
+
+/// A parsed request head: the request line, headers (names lowercased),
+/// and the declared body length, already validated against the caller's
+/// body cap.
+pub struct RequestHead {
+    pub method: String,
+    pub target: String,
+    pub version: String,
+    pub headers: Vec<(String, String)>,
+    pub body_len: usize,
+}
+
+/// Parse the bytes of one request head — everything before the blank
+/// line, exclusive of the `\r\n\r\n` itself — into a [`RequestHead`], or
+/// the `(status, reason)` to answer before closing.
+///
+/// Pure (no socket, no state): this is the function the byte-mutation
+/// fuzzer in rust/verify/http.rs hammers with arbitrary inputs, so every
+/// rejection must come back as `Err`, never a panic. [`Conn::read_request`]
+/// layers the socket framing (head accumulation, 431 cap, body fill) on
+/// top.
+pub fn parse_request_head(
+    head: &[u8],
+    max_body: usize,
+) -> Result<RequestHead, (u16, &'static str)> {
+    let head = match std::str::from_utf8(head) {
+        Ok(s) => s,
+        Err(_) => return Err((400, "request head is not UTF-8")),
+    };
+
+    // -- request line -----------------------------------------------------
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let parts: Vec<&str> = request_line.split(' ').collect();
+    if parts.len() != 3 || parts[0].is_empty() || parts[1].is_empty() {
+        return Err((400, "malformed request line"));
+    }
+    let (method, target, version) = (parts[0], parts[1], parts[2]);
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Err((505, "unsupported HTTP version"));
+    }
+
+    // -- headers ------------------------------------------------------------
+    let mut headers: Vec<(String, String)> = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err((431, "too many headers"));
+        }
+        let Some(colon) = line.find(':') else {
+            return Err((400, "malformed header line"));
+        };
+        let name = line[..colon].trim().to_ascii_lowercase();
+        if name.is_empty() {
+            return Err((400, "malformed header line"));
+        }
+        headers.push((name, line[colon + 1..].trim().to_string()));
+    }
+
+    // -- body framing -------------------------------------------------------
+    let te = headers.iter().any(|(n, _)| n == "transfer-encoding");
+    if te {
+        return Err((501, "chunked request bodies are not supported"));
+    }
+    let content_length = match headers.iter().find(|(n, _)| n == "content-length") {
+        Some((_, v)) => match v.parse::<u64>() {
+            Ok(n) => Some(n as usize),
+            Err(_) => return Err((400, "bad Content-Length")),
+        },
+        None => None,
+    };
+    let body_len = match (method, content_length) {
+        // requests that carry payloads must declare their framing
+        ("POST" | "PUT" | "PATCH", None) => return Err((411, "missing Content-Length")),
+        (_, Some(n)) if n > max_body => return Err((413, "request body too large")),
+        (_, Some(n)) => n,
+        (_, None) => 0,
+    };
+    Ok(RequestHead {
+        method: method.to_string(),
+        target: target.to_string(),
+        version: version.to_string(),
+        headers,
+        body_len,
+    })
 }
 
 /// Map a read error to the status it must answer: timeouts are the
@@ -699,6 +729,11 @@ pub fn install_shutdown_signals() {
     }
     const SIGINT: i32 = 2;
     const SIGTERM: i32 = 15;
+    // SAFETY: `signal(2)` is only unsafe through its handler contract, and
+    // `on_signal` honors it: an `extern "C" fn(i32)` (the exact type
+    // `signal` expects, passed as its address) whose body is a single
+    // atomic store — async-signal-safe, no allocation, no locks, no Rust
+    // unwinding across the FFI boundary.
     unsafe {
         signal(SIGTERM, on_signal as usize);
         signal(SIGINT, on_signal as usize);

@@ -64,6 +64,43 @@ const HEAD_LEN: usize = 20;
 /// Fixed trailer: footer length + footer crc + magic.
 const TRAILER_LEN: usize = 16;
 
+/// Pure, overflow-checked extent arithmetic for the container framing.
+/// Offsets and lengths come from the (attacker-controllable) head,
+/// trailer, and section table, so every bound computation must be total:
+/// each function here returns `None` instead of wrapping, and the Kani
+/// harness in rust/verify/artifact.rs proves them panic- and
+/// overflow-free for *all* `usize` inputs.
+pub mod extent {
+    use super::{HEAD_LEN, TRAILER_LEN};
+
+    /// Minimum file length able to hold a header of `hlen` bytes plus the
+    /// fixed framing: `HEAD_LEN + hlen + TRAILER_LEN`, checked.
+    pub fn min_file_len(hlen: usize) -> Option<usize> {
+        HEAD_LEN.checked_add(hlen)?.checked_add(TRAILER_LEN)
+    }
+
+    /// Start offset of a footer of `flen` bytes in a file of `n` bytes
+    /// whose header is `hlen` bytes: `Some(n - TRAILER_LEN - flen)` iff
+    /// the footer + trailer fit in the file *and* start at or after the
+    /// end of the header region. Replaces the unchecked
+    /// `flen + TRAILER_LEN <= n && n - TRAILER_LEN - flen >= HEAD_LEN + hlen`.
+    pub fn footer_start(n: usize, hlen: usize, flen: usize) -> Option<usize> {
+        let head_end = HEAD_LEN.checked_add(hlen)?;
+        let tail = flen.checked_add(TRAILER_LEN)?;
+        let fstart = n.checked_sub(tail)?;
+        if fstart >= head_end {
+            Some(fstart)
+        } else {
+            None
+        }
+    }
+
+    /// One-past-the-end byte of a section payload, checked.
+    pub fn section_end(offset: usize, len: usize) -> Option<usize> {
+        offset.checked_add(len)
+    }
+}
+
 // ---------------------------------------------------------------- crc32
 
 fn crc32_table() -> &'static [u32; 256] {
@@ -376,9 +413,9 @@ impl ArtifactReader {
             "artifact truncated ({} bytes — smaller than the fixed framing)",
             data.len()
         );
-        let (version, hlen) = read_head(&data)?;
+        let (version, hlen) = parse_head(&data)?;
         ensure!(
-            HEAD_LEN + hlen + TRAILER_LEN <= data.len(),
+            extent::min_file_len(hlen).is_some_and(|min| min <= data.len()),
             "artifact truncated inside the header"
         );
         let hbytes = &data[HEAD_LEN..HEAD_LEN + hlen];
@@ -400,12 +437,10 @@ impl ArtifactReader {
         );
         let flen = u32_at(&data, n - TRAILER_LEN) as usize;
         let fcrc = u32_at(&data, n - TRAILER_LEN + 4);
-        ensure!(
-            flen + TRAILER_LEN <= n && n - TRAILER_LEN - flen >= HEAD_LEN + hlen,
-            "artifact truncated before the section table"
-        );
-        let fstart = n - TRAILER_LEN - flen;
-        let fbytes = &data[fstart..fstart + flen];
+        let fstart = extent::footer_start(n, hlen, flen)
+            .ok_or_else(|| anyhow!("artifact truncated before the section table"))?;
+        // fstart + flen == n - TRAILER_LEN by construction of footer_start
+        let fbytes = &data[fstart..n - TRAILER_LEN];
         ensure!(
             crc32(fbytes) == fcrc,
             "section-table checksum mismatch — corrupted artifact"
@@ -420,9 +455,7 @@ impl ArtifactReader {
         for (i, s) in sections.iter().enumerate() {
             // offsets/lens come from the (attacker-controllable) section
             // table, so the bound check must not itself overflow
-            let end = s
-                .offset
-                .checked_add(s.len)
+            let end = extent::section_end(s.offset, s.len)
                 .ok_or_else(|| anyhow!("section {} extent overflows", s.name))?;
             ensure!(
                 s.offset >= HEAD_LEN + hlen && end <= fstart,
@@ -451,9 +484,13 @@ impl ArtifactReader {
         self.by_name.get(name).map(|&i| &self.sections[i])
     }
 
-    /// Borrow a section's (already CRC-verified) payload bytes.
+    /// Borrow a section's (already CRC-verified) payload bytes. Descs
+    /// handed out by this reader were extent-checked in `from_bytes`; a
+    /// caller-forged desc fails the checked extent or the slice bounds
+    /// check (a clean panic, never a wrapped index).
     pub fn bytes(&self, s: &SectionDesc) -> &[u8] {
-        &self.data[s.offset..s.offset + s.len]
+        let end = extent::section_end(s.offset, s.len).expect("section extent overflows");
+        &self.data[s.offset..end]
     }
 
     pub fn f32s(&self, s: &SectionDesc) -> Result<Vec<f32>> {
@@ -487,8 +524,10 @@ pub fn le_i32s(b: &[u8]) -> Result<Vec<i32>> {
 
 /// Validate the fixed head (magic + version) and return
 /// `(version, header_len)`. Shared by the full reader and the cheap
-/// header-only path.
-fn read_head(head: &[u8]) -> Result<(u32, usize)> {
+/// header-only path. Public so the verification harness
+/// (rust/verify/artifact.rs) can prove it total — it never panics or
+/// reads out of bounds for *any* input slice.
+pub fn parse_head(head: &[u8]) -> Result<(u32, usize)> {
     ensure!(head.len() >= HEAD_LEN, "artifact shorter than the fixed head");
     ensure!(
         &head[0..8] == MAGIC,
@@ -516,12 +555,12 @@ pub fn read_section_table(path: &Path) -> Result<(u32, Vec<SectionDesc>)> {
     let mut head = [0u8; HEAD_LEN];
     f.read_exact(&mut head)
         .with_context(|| format!("reading artifact head of {path:?}"))?;
-    let (version, hlen) = read_head(&head)?;
+    let (version, hlen) = parse_head(&head)?;
     let n = f
         .seek(SeekFrom::End(0))
         .with_context(|| format!("sizing artifact {path:?}"))? as usize;
     ensure!(
-        n >= HEAD_LEN + hlen + TRAILER_LEN,
+        extent::min_file_len(hlen).is_some_and(|min| n >= min),
         "artifact {path:?} truncated ({n} bytes)"
     );
     let mut trailer = [0u8; TRAILER_LEN];
@@ -535,9 +574,11 @@ pub fn read_section_table(path: &Path) -> Result<(u32, Vec<SectionDesc>)> {
     let flen = u32_at(&trailer, 0) as usize;
     let fcrc = u32_at(&trailer, 4);
     ensure!(
-        flen + TRAILER_LEN <= n && n - TRAILER_LEN - flen >= HEAD_LEN + hlen,
+        extent::footer_start(n, hlen, flen).is_some(),
         "artifact {path:?} truncated before the section table"
     );
+    // flen <= u32::MAX and fits in the file (checked above), so the
+    // seek offset cannot overflow i64
     f.seek(SeekFrom::End(-((TRAILER_LEN + flen) as i64)))?;
     let mut fbytes = vec![0u8; flen];
     f.read_exact(&mut fbytes)
@@ -561,7 +602,7 @@ pub fn read_header(path: &Path) -> Result<(u32, Json)> {
     let mut head = [0u8; HEAD_LEN];
     f.read_exact(&mut head)
         .with_context(|| format!("reading artifact head of {path:?}"))?;
-    let (version, hlen) = read_head(&head)?;
+    let (version, hlen) = parse_head(&head)?;
     let hcrc = u32_at(&head, 16);
     let mut hbytes = vec![0u8; hlen];
     f.read_exact(&mut hbytes)
@@ -679,5 +720,66 @@ mod tests {
         // the canonical IEEE test vector
         assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
         assert_eq!(crc32(b""), 0);
+    }
+
+    /// Rebuild `sample()` with its footer JSON replaced, recomputing the
+    /// trailer (flen + fcrc + magic) so only the forged fields can fail
+    /// validation — this exercises the extent checks, not the CRCs.
+    fn with_forged_footer(edit: impl Fn(&mut SectionDesc)) -> Vec<u8> {
+        let good = sample();
+        let r = ArtifactReader::from_bytes(good.clone()).unwrap();
+        let mut secs = r.sections().to_vec();
+        for s in &mut secs {
+            edit(s);
+        }
+        let n = good.len();
+        let old_flen = u32_at(&good, n - TRAILER_LEN) as usize;
+        let fstart = n - TRAILER_LEN - old_flen;
+        let mut forged = good[..fstart].to_vec();
+        let fjson = json::dump(&sections_to_json(&secs));
+        forged.extend_from_slice(fjson.as_bytes());
+        forged.extend_from_slice(&(fjson.len() as u32).to_le_bytes());
+        forged.extend_from_slice(&crc32(fjson.as_bytes()).to_le_bytes());
+        forged.extend_from_slice(MAGIC);
+        forged
+    }
+
+    #[test]
+    fn rejects_maximal_section_extents() {
+        // JSON numbers travel as f64, so use exactly-representable
+        // near-maximal values: 2^63 survives the round-trip bit-exactly.
+        const HUGE: usize = 1usize << 63;
+        // offset + len wraps usize without checked_add
+        let b = with_forged_footer(|s| {
+            s.offset = HUGE;
+            s.len = HUGE;
+        });
+        let err = ArtifactReader::from_bytes(b).unwrap_err().to_string();
+        assert!(err.contains("extent overflows"), "{err}");
+        // huge offset alone: no wrap, but far outside the payload area
+        let b = with_forged_footer(|s| s.offset = HUGE);
+        let err = ArtifactReader::from_bytes(b).unwrap_err().to_string();
+        assert!(err.contains("outside the payload area"), "{err}");
+        // huge len alone: end lands past the footer
+        let b = with_forged_footer(|s| s.len = HUGE);
+        let err = ArtifactReader::from_bytes(b).unwrap_err().to_string();
+        assert!(err.contains("outside the payload area"), "{err}");
+    }
+
+    #[test]
+    fn extent_arithmetic_rejects_wraparound() {
+        // the pure helpers the reader is built on — the Kani harness
+        // proves these total; this pins the boundary behavior in tier-1
+        assert_eq!(extent::min_file_len(0), Some(HEAD_LEN + TRAILER_LEN));
+        assert_eq!(extent::min_file_len(usize::MAX), None);
+        assert_eq!(extent::section_end(usize::MAX, 1), None);
+        assert_eq!(extent::section_end(7, 9), Some(16));
+        // footer exactly filling the payload area is accepted…
+        assert_eq!(extent::footer_start(100, 10, 100 - TRAILER_LEN - HEAD_LEN - 10), Some(30));
+        // …one byte more is not, and wraparound inputs are rejected
+        assert_eq!(extent::footer_start(100, 10, 100 - TRAILER_LEN - HEAD_LEN - 9), None);
+        assert_eq!(extent::footer_start(100, usize::MAX, 4), None);
+        assert_eq!(extent::footer_start(100, 4, usize::MAX), None);
+        assert_eq!(extent::footer_start(10, 0, 0), None); // file smaller than framing
     }
 }

@@ -78,14 +78,17 @@ impl QuantMat {
         let payload = if bits == 4 {
             let stride = (n + 1) / 2;
             let mut p = vec![0u8; k * stride];
+            // row staging buffer so the nibble layout lives in exactly one
+            // place: simd::scalar::pack_row4, the proved inverse of the
+            // kernel-side unpack_row4 (rust/verify/kernels.rs)
+            let mut codes = vec![0i16; n];
             for i in 0..k {
                 for j in 0..n {
                     let q = (w.at(i, j) / scales[j]).round().clamp(qmin, qmax) as i32;
                     colsum[j] += q;
-                    let nib = (q + 8) as u8;
-                    let byte = &mut p[i * stride + j / 2];
-                    *byte |= if j % 2 == 0 { nib } else { nib << 4 };
+                    codes[j] = q as i16;
                 }
+                simd::scalar::pack_row4(&codes, n, &mut p[i * stride..(i + 1) * stride]);
             }
             p
         } else {

@@ -3,6 +3,9 @@
 //! Every function here is `unsafe` with `#[target_feature(enable =
 //! "avx2")]`; the dispatcher in `simd::mod` only routes here after
 //! `is_x86_feature_detected!("avx2")` succeeded, so the calls are sound.
+//! The crate denies `unsafe_op_in_unsafe_fn`, so each body wraps its
+//! intrinsic/pointer work in an explicit block whose `// SAFETY:` comment
+//! states the bounds argument the loop relies on.
 //!
 //! Bit-exactness notes (the contract the property suite enforces):
 //! * integer lanes (`mullo`/`add` over i16/i32) are exact, so any blocking
@@ -25,88 +28,111 @@ use std::arch::x86_64::*;
 #[target_feature(enable = "avx2")]
 pub(super) unsafe fn axpy_f32(a: f32, x: &[f32], y: &mut [f32]) {
     let n = y.len();
-    let av = _mm256_set1_ps(a);
-    let mut i = 0;
-    while i + 8 <= n {
-        let xv = _mm256_loadu_ps(x.as_ptr().add(i));
-        let yv = _mm256_loadu_ps(y.as_ptr().add(i));
-        _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_add_ps(yv, _mm256_mul_ps(av, xv)));
-        i += 8;
-    }
-    while i < n {
-        y[i] += a * x[i];
-        i += 1;
+    // SAFETY: AVX2 is guaranteed by the caller (dispatch checks feature
+    // detection); the caller guarantees x.len() >= y.len() (the simd::
+    // wrapper debug-asserts equality), and every load/store touches only
+    // lanes i..i+8 under the `i + 8 <= n` guard.
+    unsafe {
+        let av = _mm256_set1_ps(a);
+        let mut i = 0;
+        while i + 8 <= n {
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            let yv = _mm256_loadu_ps(y.as_ptr().add(i));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_add_ps(yv, _mm256_mul_ps(av, xv)));
+            i += 8;
+        }
+        while i < n {
+            y[i] += a * x[i];
+            i += 1;
+        }
     }
 }
 
 #[target_feature(enable = "avx2")]
 pub(super) unsafe fn add_assign_f32(y: &mut [f32], x: &[f32]) {
     let n = y.len();
-    let mut i = 0;
-    while i + 8 <= n {
-        let xv = _mm256_loadu_ps(x.as_ptr().add(i));
-        let yv = _mm256_loadu_ps(y.as_ptr().add(i));
-        _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_add_ps(yv, xv));
-        i += 8;
-    }
-    while i < n {
-        y[i] += x[i];
-        i += 1;
+    // SAFETY: AVX2 guaranteed by the caller; x.len() >= y.len() guaranteed
+    // by the caller, and lanes i..i+8 stay under the `i + 8 <= n` guard.
+    unsafe {
+        let mut i = 0;
+        while i + 8 <= n {
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            let yv = _mm256_loadu_ps(y.as_ptr().add(i));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_add_ps(yv, xv));
+            i += 8;
+        }
+        while i < n {
+            y[i] += x[i];
+            i += 1;
+        }
     }
 }
 
 #[target_feature(enable = "avx2")]
 pub(super) unsafe fn scale_inplace(x: &mut [f32], s: f32) {
     let n = x.len();
-    let sv = _mm256_set1_ps(s);
-    let mut i = 0;
-    while i + 8 <= n {
-        let v = _mm256_loadu_ps(x.as_ptr().add(i));
-        _mm256_storeu_ps(x.as_mut_ptr().add(i), _mm256_mul_ps(v, sv));
-        i += 8;
-    }
-    while i < n {
-        x[i] *= s;
-        i += 1;
+    // SAFETY: AVX2 guaranteed by the caller; in-place over x only, lanes
+    // i..i+8 stay under the `i + 8 <= n` guard with n = x.len().
+    unsafe {
+        let sv = _mm256_set1_ps(s);
+        let mut i = 0;
+        while i + 8 <= n {
+            let v = _mm256_loadu_ps(x.as_ptr().add(i));
+            _mm256_storeu_ps(x.as_mut_ptr().add(i), _mm256_mul_ps(v, sv));
+            i += 8;
+        }
+        while i < n {
+            x[i] *= s;
+            i += 1;
+        }
     }
 }
 
 #[target_feature(enable = "avx2")]
 pub(super) unsafe fn mul_scale_store(x: &[f32], inv: f32, scale: &[f32], out: &mut [f32]) {
     let n = out.len();
-    let iv = _mm256_set1_ps(inv);
-    let mut i = 0;
-    while i + 8 <= n {
-        let xv = _mm256_loadu_ps(x.as_ptr().add(i));
-        let sv = _mm256_loadu_ps(scale.as_ptr().add(i));
-        // (x * inv) * scale — the scalar association
-        let r = _mm256_mul_ps(_mm256_mul_ps(xv, iv), sv);
-        _mm256_storeu_ps(out.as_mut_ptr().add(i), r);
-        i += 8;
-    }
-    while i < n {
-        out[i] = x[i] * inv * scale[i];
-        i += 1;
+    // SAFETY: AVX2 guaranteed by the caller; the caller guarantees
+    // x.len() == scale.len() == out.len() (wrapper debug-asserts), and
+    // lanes i..i+8 stay under the `i + 8 <= n` guard.
+    unsafe {
+        let iv = _mm256_set1_ps(inv);
+        let mut i = 0;
+        while i + 8 <= n {
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            let sv = _mm256_loadu_ps(scale.as_ptr().add(i));
+            // (x * inv) * scale — the scalar association
+            let r = _mm256_mul_ps(_mm256_mul_ps(xv, iv), sv);
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), r);
+            i += 8;
+        }
+        while i < n {
+            out[i] = x[i] * inv * scale[i];
+            i += 1;
+        }
     }
 }
 
 #[target_feature(enable = "avx2")]
 pub(super) unsafe fn butterfly(a: &mut [f32], b: &mut [f32]) {
     let n = a.len();
-    let mut i = 0;
-    while i + 8 <= n {
-        let av = _mm256_loadu_ps(a.as_ptr().add(i));
-        let bv = _mm256_loadu_ps(b.as_ptr().add(i));
-        _mm256_storeu_ps(a.as_mut_ptr().add(i), _mm256_add_ps(av, bv));
-        _mm256_storeu_ps(b.as_mut_ptr().add(i), _mm256_sub_ps(av, bv));
-        i += 8;
-    }
-    while i < n {
-        let x = a[i];
-        let y = b[i];
-        a[i] = x + y;
-        b[i] = x - y;
-        i += 1;
+    // SAFETY: AVX2 guaranteed by the caller; a.len() == b.len() guaranteed
+    // by the caller (wrapper debug-asserts), lanes under `i + 8 <= n`.
+    unsafe {
+        let mut i = 0;
+        while i + 8 <= n {
+            let av = _mm256_loadu_ps(a.as_ptr().add(i));
+            let bv = _mm256_loadu_ps(b.as_ptr().add(i));
+            _mm256_storeu_ps(a.as_mut_ptr().add(i), _mm256_add_ps(av, bv));
+            _mm256_storeu_ps(b.as_mut_ptr().add(i), _mm256_sub_ps(av, bv));
+            i += 8;
+        }
+        while i < n {
+            let x = a[i];
+            let y = b[i];
+            a[i] = x + y;
+            b[i] = x - y;
+            i += 1;
+        }
     }
 }
 
@@ -114,100 +140,131 @@ pub(super) unsafe fn butterfly(a: &mut [f32], b: &mut [f32]) {
 // f32 reductions / transcendental
 // ---------------------------------------------------------------------
 
+#[allow(unused_unsafe)] // value-only intrinsics: the block is needed only on toolchains where they are `unsafe fn`
 #[inline]
 #[target_feature(enable = "avx2")]
 unsafe fn hsum(v: __m256) -> f32 {
-    let lo = _mm256_castps256_ps128(v);
-    let hi = _mm256_extractf128_ps::<1>(v);
-    let s = _mm_add_ps(lo, hi);
-    let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
-    let s = _mm_add_ss(s, _mm_shuffle_ps::<0x55>(s, s));
-    _mm_cvtss_f32(s)
+    // SAFETY: register-only lane shuffles/adds — no memory access; AVX2 is
+    // guaranteed by the (feature-matched) caller.
+    unsafe {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps::<1>(v);
+        let s = _mm_add_ps(lo, hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps::<0x55>(s, s));
+        _mm_cvtss_f32(s)
+    }
 }
 
+#[allow(unused_unsafe)] // value-only intrinsics: the block is needed only on toolchains where they are `unsafe fn`
 #[inline]
 #[target_feature(enable = "avx2")]
 unsafe fn hmin(v: __m256) -> f32 {
-    let lo = _mm256_castps256_ps128(v);
-    let hi = _mm256_extractf128_ps::<1>(v);
-    let m = _mm_min_ps(lo, hi);
-    let m = _mm_min_ps(m, _mm_movehl_ps(m, m));
-    let m = _mm_min_ss(m, _mm_shuffle_ps::<0x55>(m, m));
-    _mm_cvtss_f32(m)
+    // SAFETY: register-only lane shuffles/mins — no memory access; AVX2 is
+    // guaranteed by the (feature-matched) caller.
+    unsafe {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps::<1>(v);
+        let m = _mm_min_ps(lo, hi);
+        let m = _mm_min_ps(m, _mm_movehl_ps(m, m));
+        let m = _mm_min_ss(m, _mm_shuffle_ps::<0x55>(m, m));
+        _mm_cvtss_f32(m)
+    }
 }
 
+#[allow(unused_unsafe)] // value-only intrinsics: the block is needed only on toolchains where they are `unsafe fn`
 #[inline]
 #[target_feature(enable = "avx2")]
 unsafe fn hmax(v: __m256) -> f32 {
-    let lo = _mm256_castps256_ps128(v);
-    let hi = _mm256_extractf128_ps::<1>(v);
-    let m = _mm_max_ps(lo, hi);
-    let m = _mm_max_ps(m, _mm_movehl_ps(m, m));
-    let m = _mm_max_ss(m, _mm_shuffle_ps::<0x55>(m, m));
-    _mm_cvtss_f32(m)
+    // SAFETY: register-only lane shuffles/maxes — no memory access; AVX2
+    // is guaranteed by the (feature-matched) caller.
+    unsafe {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps::<1>(v);
+        let m = _mm_max_ps(lo, hi);
+        let m = _mm_max_ps(m, _mm_movehl_ps(m, m));
+        let m = _mm_max_ss(m, _mm_shuffle_ps::<0x55>(m, m));
+        _mm_cvtss_f32(m)
+    }
 }
 
 #[target_feature(enable = "avx2")]
 pub(super) unsafe fn sum_squares(x: &[f32]) -> f32 {
     let n = x.len();
-    let mut acc = _mm256_setzero_ps();
-    let mut i = 0;
-    while i + 8 <= n {
-        let v = _mm256_loadu_ps(x.as_ptr().add(i));
-        acc = _mm256_add_ps(acc, _mm256_mul_ps(v, v));
-        i += 8;
+    // SAFETY: AVX2 guaranteed by the caller; read-only loads of lanes
+    // i..i+8 under the `i + 8 <= n` guard with n = x.len().
+    unsafe {
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 8 <= n {
+            let v = _mm256_loadu_ps(x.as_ptr().add(i));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(v, v));
+            i += 8;
+        }
+        let mut ss = hsum(acc);
+        while i < n {
+            ss += x[i] * x[i];
+            i += 1;
+        }
+        ss
     }
-    let mut ss = hsum(acc);
-    while i < n {
-        ss += x[i] * x[i];
-        i += 1;
-    }
-    ss
 }
 
 /// Vector e^x: range-reduced degree-6 polynomial, ≈2 ulp of libm `expf`.
+#[allow(unused_unsafe)] // value-only intrinsics: the block is needed only on toolchains where they are `unsafe fn`
 #[inline]
 #[target_feature(enable = "avx2")]
 unsafe fn exp_ps(x: __m256) -> __m256 {
-    let x = _mm256_min_ps(x, _mm256_set1_ps(88.0));
-    let x = _mm256_max_ps(x, _mm256_set1_ps(-87.0));
-    const NEAREST: i32 = _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC;
-    let n = _mm256_round_ps::<NEAREST>(_mm256_mul_ps(x, _mm256_set1_ps(1.442_695_f32)));
-    // r = x - n·ln2, split into hi/lo for accuracy
-    let r = _mm256_sub_ps(x, _mm256_mul_ps(n, _mm256_set1_ps(0.693_359_375_f32)));
-    let r = _mm256_sub_ps(r, _mm256_mul_ps(n, _mm256_set1_ps(-2.121_944_4e-4_f32)));
-    let mut p = _mm256_set1_ps(1.0 / 720.0);
-    p = _mm256_add_ps(_mm256_mul_ps(p, r), _mm256_set1_ps(1.0 / 120.0));
-    p = _mm256_add_ps(_mm256_mul_ps(p, r), _mm256_set1_ps(1.0 / 24.0));
-    p = _mm256_add_ps(_mm256_mul_ps(p, r), _mm256_set1_ps(1.0 / 6.0));
-    p = _mm256_add_ps(_mm256_mul_ps(p, r), _mm256_set1_ps(0.5));
-    p = _mm256_add_ps(_mm256_mul_ps(p, r), _mm256_set1_ps(1.0));
-    p = _mm256_add_ps(_mm256_mul_ps(p, r), _mm256_set1_ps(1.0));
-    // scale by 2^n through the exponent field (n ∈ [-126, 127] after clamp)
-    let e = _mm256_cvtps_epi32(n);
-    let pow2 =
-        _mm256_castsi256_ps(_mm256_slli_epi32::<23>(_mm256_add_epi32(e, _mm256_set1_epi32(127))));
-    _mm256_mul_ps(p, pow2)
+    // SAFETY: register-only arithmetic — no memory access; AVX2 is
+    // guaranteed by the (feature-matched) caller.
+    unsafe {
+        let x = _mm256_min_ps(x, _mm256_set1_ps(88.0));
+        let x = _mm256_max_ps(x, _mm256_set1_ps(-87.0));
+        const NEAREST: i32 = _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC;
+        let n = _mm256_round_ps::<NEAREST>(_mm256_mul_ps(x, _mm256_set1_ps(1.442_695_f32)));
+        // r = x - n·ln2, split into hi/lo for accuracy
+        let r = _mm256_sub_ps(x, _mm256_mul_ps(n, _mm256_set1_ps(0.693_359_375_f32)));
+        let r = _mm256_sub_ps(r, _mm256_mul_ps(n, _mm256_set1_ps(-2.121_944_4e-4_f32)));
+        let mut p = _mm256_set1_ps(1.0 / 720.0);
+        p = _mm256_add_ps(_mm256_mul_ps(p, r), _mm256_set1_ps(1.0 / 120.0));
+        p = _mm256_add_ps(_mm256_mul_ps(p, r), _mm256_set1_ps(1.0 / 24.0));
+        p = _mm256_add_ps(_mm256_mul_ps(p, r), _mm256_set1_ps(1.0 / 6.0));
+        p = _mm256_add_ps(_mm256_mul_ps(p, r), _mm256_set1_ps(0.5));
+        p = _mm256_add_ps(_mm256_mul_ps(p, r), _mm256_set1_ps(1.0));
+        p = _mm256_add_ps(_mm256_mul_ps(p, r), _mm256_set1_ps(1.0));
+        // scale by 2^n through the exponent field (n ∈ [-126, 127] after clamp)
+        let e = _mm256_cvtps_epi32(n);
+        let pow2 = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(_mm256_add_epi32(
+            e,
+            _mm256_set1_epi32(127),
+        )));
+        _mm256_mul_ps(p, pow2)
+    }
 }
 
 #[target_feature(enable = "avx2")]
 pub(super) unsafe fn swish_mul(g: &mut [f32], u: &[f32]) {
     let n = g.len();
-    let one = _mm256_set1_ps(1.0);
-    let zero = _mm256_setzero_ps();
-    let mut i = 0;
-    while i + 8 <= n {
-        let x = _mm256_loadu_ps(g.as_ptr().add(i));
-        let uv = _mm256_loadu_ps(u.as_ptr().add(i));
-        let e = exp_ps(_mm256_sub_ps(zero, x));
-        let sw = _mm256_div_ps(x, _mm256_add_ps(one, e));
-        _mm256_storeu_ps(g.as_mut_ptr().add(i), _mm256_mul_ps(sw, uv));
-        i += 8;
-    }
-    while i < n {
-        let x = g[i];
-        g[i] = x / (1.0 + (-x).exp()) * u[i];
-        i += 1;
+    // SAFETY: AVX2 guaranteed by the caller; u.len() >= g.len() guaranteed
+    // by the caller (wrapper debug-asserts equality), lanes i..i+8 stay
+    // under the `i + 8 <= n` guard.
+    unsafe {
+        let one = _mm256_set1_ps(1.0);
+        let zero = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 8 <= n {
+            let x = _mm256_loadu_ps(g.as_ptr().add(i));
+            let uv = _mm256_loadu_ps(u.as_ptr().add(i));
+            let e = exp_ps(_mm256_sub_ps(zero, x));
+            let sw = _mm256_div_ps(x, _mm256_add_ps(one, e));
+            _mm256_storeu_ps(g.as_mut_ptr().add(i), _mm256_mul_ps(sw, uv));
+            i += 8;
+        }
+        while i < n {
+            let x = g[i];
+            g[i] = x / (1.0 + (-x).exp()) * u[i];
+            i += 1;
+        }
     }
 }
 
@@ -218,95 +275,115 @@ pub(super) unsafe fn swish_mul(g: &mut [f32], u: &[f32]) {
 #[target_feature(enable = "avx2")]
 pub(super) unsafe fn row_minmax(x: &[f32]) -> (f32, f32) {
     let n = x.len();
-    let (mut mn, mut mx) = (f32::INFINITY, f32::NEG_INFINITY);
-    let mut i = 0;
-    if n >= 8 {
-        let first = _mm256_loadu_ps(x.as_ptr());
-        let mut vmn = first;
-        let mut vmx = first;
-        i = 8;
-        while i + 8 <= n {
-            let v = _mm256_loadu_ps(x.as_ptr().add(i));
-            vmn = _mm256_min_ps(vmn, v);
-            vmx = _mm256_max_ps(vmx, v);
-            i += 8;
+    // SAFETY: AVX2 guaranteed by the caller; the first load requires
+    // n >= 8 (guarded), subsequent loads stay under `i + 8 <= n`.
+    unsafe {
+        let (mut mn, mut mx) = (f32::INFINITY, f32::NEG_INFINITY);
+        let mut i = 0;
+        if n >= 8 {
+            let first = _mm256_loadu_ps(x.as_ptr());
+            let mut vmn = first;
+            let mut vmx = first;
+            i = 8;
+            while i + 8 <= n {
+                let v = _mm256_loadu_ps(x.as_ptr().add(i));
+                vmn = _mm256_min_ps(vmn, v);
+                vmx = _mm256_max_ps(vmx, v);
+                i += 8;
+            }
+            mn = hmin(vmn);
+            mx = hmax(vmx);
         }
-        mn = hmin(vmn);
-        mx = hmax(vmx);
+        while i < n {
+            mn = mn.min(x[i]);
+            mx = mx.max(x[i]);
+            i += 1;
+        }
+        (mn, mx)
     }
-    while i < n {
-        mn = mn.min(x[i]);
-        mx = mx.max(x[i]);
-        i += 1;
-    }
-    (mn, mx)
 }
 
 /// `f32::round` (half away from zero), exactly: truncate, then bump by
 /// ±1 when the exact fraction |t - trunc(t)| reaches 0.5. The fraction is
 /// exact for |t| < 2^24; above that every f32 is an integer and the bump
-/// mask is false.
+/// mask is false. The scalar twin (`simd::scalar::round_half_away`) is
+/// proved ≡ `f32::round` in rust/verify/kernels.rs.
+#[allow(unused_unsafe)] // value-only intrinsics: the block is needed only on toolchains where they are `unsafe fn`
 #[inline]
 #[target_feature(enable = "avx2")]
 unsafe fn round_half_away(t: __m256) -> __m256 {
-    const TRUNC: i32 = _MM_FROUND_TO_ZERO | _MM_FROUND_NO_EXC;
-    let r = _mm256_round_ps::<TRUNC>(t);
-    let d = _mm256_sub_ps(t, r);
-    let neg0 = _mm256_set1_ps(-0.0);
-    let ad = _mm256_andnot_ps(neg0, d); // |d|
-    let m = _mm256_cmp_ps::<_CMP_GE_OQ>(ad, _mm256_set1_ps(0.5));
-    let one = _mm256_or_ps(_mm256_and_ps(t, neg0), _mm256_set1_ps(1.0)); // copysign(1, t)
-    _mm256_add_ps(r, _mm256_and_ps(m, one))
+    // SAFETY: register-only arithmetic — no memory access; AVX2 is
+    // guaranteed by the (feature-matched) caller.
+    unsafe {
+        const TRUNC: i32 = _MM_FROUND_TO_ZERO | _MM_FROUND_NO_EXC;
+        let r = _mm256_round_ps::<TRUNC>(t);
+        let d = _mm256_sub_ps(t, r);
+        let neg0 = _mm256_set1_ps(-0.0);
+        let ad = _mm256_andnot_ps(neg0, d); // |d|
+        let m = _mm256_cmp_ps::<_CMP_GE_OQ>(ad, _mm256_set1_ps(0.5));
+        let one = _mm256_or_ps(_mm256_and_ps(t, neg0), _mm256_set1_ps(1.0)); // copysign(1, t)
+        _mm256_add_ps(r, _mm256_and_ps(m, one))
+    }
 }
 
 #[target_feature(enable = "avx2")]
 pub(super) unsafe fn emit_codes(x: &[f32], s: f32, z: f32, levels: f32, codes: &mut [u8]) {
     let n = x.len();
-    let sv = _mm256_set1_ps(s);
-    let zv = _mm256_set1_ps(z);
-    let lv = _mm256_set1_ps(levels);
-    let zero = _mm256_setzero_ps();
-    let mut i = 0;
-    while i + 8 <= n {
-        let v = _mm256_loadu_ps(x.as_ptr().add(i));
-        let q = _mm256_sub_ps(round_half_away(_mm256_div_ps(v, sv)), zv);
-        let q = _mm256_max_ps(_mm256_min_ps(q, lv), zero);
-        let qi = _mm256_cvttps_epi32(q); // integral by construction
-        let lo = _mm256_castsi256_si128(qi);
-        let hi = _mm256_extracti128_si256::<1>(qi);
-        let p16 = _mm_packs_epi32(lo, hi);
-        let p8 = _mm_packus_epi16(p16, p16);
-        _mm_storel_epi64(codes.as_mut_ptr().add(i) as *mut __m128i, p8);
-        i += 8;
-    }
-    while i < n {
-        let q = ((x[i] / s).round() - z).clamp(0.0, levels);
-        codes[i] = q as u8;
-        i += 1;
+    // SAFETY: AVX2 guaranteed by the caller; codes.len() >= x.len()
+    // guaranteed by the caller (wrapper debug-asserts equality). Loads
+    // read lanes i..i+8 of x, the packed store writes bytes i..i+8 of
+    // codes — both under the `i + 8 <= n` guard.
+    unsafe {
+        let sv = _mm256_set1_ps(s);
+        let zv = _mm256_set1_ps(z);
+        let lv = _mm256_set1_ps(levels);
+        let zero = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 8 <= n {
+            let v = _mm256_loadu_ps(x.as_ptr().add(i));
+            let q = _mm256_sub_ps(round_half_away(_mm256_div_ps(v, sv)), zv);
+            let q = _mm256_max_ps(_mm256_min_ps(q, lv), zero);
+            let qi = _mm256_cvttps_epi32(q); // integral by construction
+            let lo = _mm256_castsi256_si128(qi);
+            let hi = _mm256_extracti128_si256::<1>(qi);
+            let p16 = _mm_packs_epi32(lo, hi);
+            let p8 = _mm_packus_epi16(p16, p16);
+            _mm_storel_epi64(codes.as_mut_ptr().add(i) as *mut __m128i, p8);
+            i += 8;
+        }
+        while i < n {
+            let q = ((x[i] / s).round() - z).clamp(0.0, levels);
+            codes[i] = q as u8;
+            i += 1;
+        }
     }
 }
 
 #[target_feature(enable = "avx2")]
 pub(super) unsafe fn fake_quant_int(x: &mut [f32], s: f32, z: f32, levels: f32) {
     let n = x.len();
-    let sv = _mm256_set1_ps(s);
-    let zv = _mm256_set1_ps(z);
-    let lv = _mm256_set1_ps(levels);
-    let zero = _mm256_setzero_ps();
-    let mut i = 0;
-    while i + 8 <= n {
-        let v = _mm256_loadu_ps(x.as_ptr().add(i));
-        let q = _mm256_sub_ps(round_half_away(_mm256_div_ps(v, sv)), zv);
-        let q = _mm256_max_ps(_mm256_min_ps(q, lv), zero);
-        // s * (q + z) — the scalar association
-        let r = _mm256_mul_ps(sv, _mm256_add_ps(q, zv));
-        _mm256_storeu_ps(x.as_mut_ptr().add(i), r);
-        i += 8;
-    }
-    while i < n {
-        let q = ((x[i] / s).round() - z).clamp(0.0, levels);
-        x[i] = s * (q + z);
-        i += 1;
+    // SAFETY: AVX2 guaranteed by the caller; in-place over x only, lanes
+    // i..i+8 stay under the `i + 8 <= n` guard.
+    unsafe {
+        let sv = _mm256_set1_ps(s);
+        let zv = _mm256_set1_ps(z);
+        let lv = _mm256_set1_ps(levels);
+        let zero = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 8 <= n {
+            let v = _mm256_loadu_ps(x.as_ptr().add(i));
+            let q = _mm256_sub_ps(round_half_away(_mm256_div_ps(v, sv)), zv);
+            let q = _mm256_max_ps(_mm256_min_ps(q, lv), zero);
+            // s * (q + z) — the scalar association
+            let r = _mm256_mul_ps(sv, _mm256_add_ps(q, zv));
+            _mm256_storeu_ps(x.as_mut_ptr().add(i), r);
+            i += 8;
+        }
+        while i < n {
+            let q = ((x[i] / s).round() - z).clamp(0.0, levels);
+            x[i] = s * (q + z);
+            i += 1;
+        }
     }
 }
 
@@ -317,163 +394,198 @@ pub(super) unsafe fn fake_quant_int(x: &mut [f32], s: f32, z: f32, levels: f32) 
 #[target_feature(enable = "avx2")]
 pub(super) unsafe fn axpy_i16(u: i16, w: &[i16], acc: &mut [i16]) {
     let n = w.len();
-    let uv = _mm256_set1_epi16(u);
-    let mut j = 0;
-    while j + 16 <= n {
-        let wv = _mm256_loadu_si256(w.as_ptr().add(j) as *const __m256i);
-        let av = _mm256_loadu_si256(acc.as_ptr().add(j) as *const __m256i);
-        let r = _mm256_add_epi16(av, _mm256_mullo_epi16(uv, wv));
-        _mm256_storeu_si256(acc.as_mut_ptr().add(j) as *mut __m256i, r);
-        j += 16;
-    }
-    while j < n {
-        acc[j] += u * w[j];
-        j += 1;
+    // SAFETY: AVX2 guaranteed by the caller; acc.len() >= w.len()
+    // guaranteed by the caller (wrapper debug-asserts equality), 16-lane
+    // loads/stores stay under the `j + 16 <= n` guard.
+    unsafe {
+        let uv = _mm256_set1_epi16(u);
+        let mut j = 0;
+        while j + 16 <= n {
+            let wv = _mm256_loadu_si256(w.as_ptr().add(j) as *const __m256i);
+            let av = _mm256_loadu_si256(acc.as_ptr().add(j) as *const __m256i);
+            let r = _mm256_add_epi16(av, _mm256_mullo_epi16(uv, wv));
+            _mm256_storeu_si256(acc.as_mut_ptr().add(j) as *mut __m256i, r);
+            j += 16;
+        }
+        while j < n {
+            acc[j] += u * w[j];
+            j += 1;
+        }
     }
 }
 
 #[target_feature(enable = "avx2")]
 pub(super) unsafe fn axpy2_i16(u0: i16, u1: i16, w: &[i16], acc0: &mut [i16], acc1: &mut [i16]) {
     let n = w.len();
-    let uv0 = _mm256_set1_epi16(u0);
-    let uv1 = _mm256_set1_epi16(u1);
-    let mut j = 0;
-    // 2×16-lane unroll: one weight load feeds both activation rows
-    while j + 32 <= n {
-        let wa = _mm256_loadu_si256(w.as_ptr().add(j) as *const __m256i);
-        let wb = _mm256_loadu_si256(w.as_ptr().add(j + 16) as *const __m256i);
-        let a0a = _mm256_loadu_si256(acc0.as_ptr().add(j) as *const __m256i);
-        let a0b = _mm256_loadu_si256(acc0.as_ptr().add(j + 16) as *const __m256i);
-        let a1a = _mm256_loadu_si256(acc1.as_ptr().add(j) as *const __m256i);
-        let a1b = _mm256_loadu_si256(acc1.as_ptr().add(j + 16) as *const __m256i);
-        _mm256_storeu_si256(
-            acc0.as_mut_ptr().add(j) as *mut __m256i,
-            _mm256_add_epi16(a0a, _mm256_mullo_epi16(uv0, wa)),
-        );
-        _mm256_storeu_si256(
-            acc0.as_mut_ptr().add(j + 16) as *mut __m256i,
-            _mm256_add_epi16(a0b, _mm256_mullo_epi16(uv0, wb)),
-        );
-        _mm256_storeu_si256(
-            acc1.as_mut_ptr().add(j) as *mut __m256i,
-            _mm256_add_epi16(a1a, _mm256_mullo_epi16(uv1, wa)),
-        );
-        _mm256_storeu_si256(
-            acc1.as_mut_ptr().add(j + 16) as *mut __m256i,
-            _mm256_add_epi16(a1b, _mm256_mullo_epi16(uv1, wb)),
-        );
-        j += 32;
-    }
-    while j + 16 <= n {
-        let wv = _mm256_loadu_si256(w.as_ptr().add(j) as *const __m256i);
-        let a0 = _mm256_loadu_si256(acc0.as_ptr().add(j) as *const __m256i);
-        let a1 = _mm256_loadu_si256(acc1.as_ptr().add(j) as *const __m256i);
-        _mm256_storeu_si256(
-            acc0.as_mut_ptr().add(j) as *mut __m256i,
-            _mm256_add_epi16(a0, _mm256_mullo_epi16(uv0, wv)),
-        );
-        _mm256_storeu_si256(
-            acc1.as_mut_ptr().add(j) as *mut __m256i,
-            _mm256_add_epi16(a1, _mm256_mullo_epi16(uv1, wv)),
-        );
-        j += 16;
-    }
-    while j < n {
-        let wv = w[j];
-        acc0[j] += u0 * wv;
-        acc1[j] += u1 * wv;
-        j += 1;
+    // SAFETY: AVX2 guaranteed by the caller; acc0/acc1 lengths >= w.len()
+    // guaranteed by the caller (wrapper debug-asserts equality). The
+    // unrolled loop touches lanes j..j+32 under `j + 32 <= n`, the tail
+    // vector loop j..j+16 under `j + 16 <= n`.
+    unsafe {
+        let uv0 = _mm256_set1_epi16(u0);
+        let uv1 = _mm256_set1_epi16(u1);
+        let mut j = 0;
+        // 2×16-lane unroll: one weight load feeds both activation rows
+        while j + 32 <= n {
+            let wa = _mm256_loadu_si256(w.as_ptr().add(j) as *const __m256i);
+            let wb = _mm256_loadu_si256(w.as_ptr().add(j + 16) as *const __m256i);
+            let a0a = _mm256_loadu_si256(acc0.as_ptr().add(j) as *const __m256i);
+            let a0b = _mm256_loadu_si256(acc0.as_ptr().add(j + 16) as *const __m256i);
+            let a1a = _mm256_loadu_si256(acc1.as_ptr().add(j) as *const __m256i);
+            let a1b = _mm256_loadu_si256(acc1.as_ptr().add(j + 16) as *const __m256i);
+            _mm256_storeu_si256(
+                acc0.as_mut_ptr().add(j) as *mut __m256i,
+                _mm256_add_epi16(a0a, _mm256_mullo_epi16(uv0, wa)),
+            );
+            _mm256_storeu_si256(
+                acc0.as_mut_ptr().add(j + 16) as *mut __m256i,
+                _mm256_add_epi16(a0b, _mm256_mullo_epi16(uv0, wb)),
+            );
+            _mm256_storeu_si256(
+                acc1.as_mut_ptr().add(j) as *mut __m256i,
+                _mm256_add_epi16(a1a, _mm256_mullo_epi16(uv1, wa)),
+            );
+            _mm256_storeu_si256(
+                acc1.as_mut_ptr().add(j + 16) as *mut __m256i,
+                _mm256_add_epi16(a1b, _mm256_mullo_epi16(uv1, wb)),
+            );
+            j += 32;
+        }
+        while j + 16 <= n {
+            let wv = _mm256_loadu_si256(w.as_ptr().add(j) as *const __m256i);
+            let a0 = _mm256_loadu_si256(acc0.as_ptr().add(j) as *const __m256i);
+            let a1 = _mm256_loadu_si256(acc1.as_ptr().add(j) as *const __m256i);
+            _mm256_storeu_si256(
+                acc0.as_mut_ptr().add(j) as *mut __m256i,
+                _mm256_add_epi16(a0, _mm256_mullo_epi16(uv0, wv)),
+            );
+            _mm256_storeu_si256(
+                acc1.as_mut_ptr().add(j) as *mut __m256i,
+                _mm256_add_epi16(a1, _mm256_mullo_epi16(uv1, wv)),
+            );
+            j += 16;
+        }
+        while j < n {
+            let wv = w[j];
+            acc0[j] += u0 * wv;
+            acc1[j] += u1 * wv;
+            j += 1;
+        }
     }
 }
 
 #[target_feature(enable = "avx2")]
 pub(super) unsafe fn axpy_i32_i16w(u: i32, w: &[i16], acc: &mut [i32]) {
     let n = w.len();
-    let uv = _mm256_set1_epi32(u);
-    let mut j = 0;
-    while j + 8 <= n {
-        let wv = _mm256_cvtepi16_epi32(_mm_loadu_si128(w.as_ptr().add(j) as *const __m128i));
-        let av = _mm256_loadu_si256(acc.as_ptr().add(j) as *const __m256i);
-        let r = _mm256_add_epi32(av, _mm256_mullo_epi32(uv, wv));
-        _mm256_storeu_si256(acc.as_mut_ptr().add(j) as *mut __m256i, r);
-        j += 8;
-    }
-    while j < n {
-        acc[j] += u * w[j] as i32;
-        j += 1;
+    // SAFETY: AVX2 guaranteed by the caller; acc.len() >= w.len()
+    // guaranteed by the caller (wrapper debug-asserts equality). The
+    // 128-bit weight load reads 8 i16s j..j+8 and the i32 load/store
+    // touches lanes j..j+8 — both under the `j + 8 <= n` guard.
+    unsafe {
+        let uv = _mm256_set1_epi32(u);
+        let mut j = 0;
+        while j + 8 <= n {
+            let wv = _mm256_cvtepi16_epi32(_mm_loadu_si128(w.as_ptr().add(j) as *const __m128i));
+            let av = _mm256_loadu_si256(acc.as_ptr().add(j) as *const __m256i);
+            let r = _mm256_add_epi32(av, _mm256_mullo_epi32(uv, wv));
+            _mm256_storeu_si256(acc.as_mut_ptr().add(j) as *mut __m256i, r);
+            j += 8;
+        }
+        while j < n {
+            acc[j] += u * w[j] as i32;
+            j += 1;
+        }
     }
 }
 
 #[target_feature(enable = "avx2")]
 pub(super) unsafe fn axpy_i32_i8w(u: i32, w: &[i8], acc: &mut [i32]) {
     let n = w.len();
-    let uv = _mm256_set1_epi32(u);
-    let mut j = 0;
-    while j + 8 <= n {
-        let wv = _mm256_cvtepi8_epi32(_mm_loadl_epi64(w.as_ptr().add(j) as *const __m128i));
-        let av = _mm256_loadu_si256(acc.as_ptr().add(j) as *const __m256i);
-        let r = _mm256_add_epi32(av, _mm256_mullo_epi32(uv, wv));
-        _mm256_storeu_si256(acc.as_mut_ptr().add(j) as *mut __m256i, r);
-        j += 8;
-    }
-    while j < n {
-        acc[j] += u * w[j] as i32;
-        j += 1;
+    // SAFETY: AVX2 guaranteed by the caller; acc.len() >= w.len()
+    // guaranteed by the caller (wrapper debug-asserts equality). The
+    // 64-bit weight load reads 8 i8s j..j+8 and the i32 load/store
+    // touches lanes j..j+8 — both under the `j + 8 <= n` guard.
+    unsafe {
+        let uv = _mm256_set1_epi32(u);
+        let mut j = 0;
+        while j + 8 <= n {
+            let wv = _mm256_cvtepi8_epi32(_mm_loadl_epi64(w.as_ptr().add(j) as *const __m128i));
+            let av = _mm256_loadu_si256(acc.as_ptr().add(j) as *const __m256i);
+            let r = _mm256_add_epi32(av, _mm256_mullo_epi32(uv, wv));
+            _mm256_storeu_si256(acc.as_mut_ptr().add(j) as *mut __m256i, r);
+            j += 8;
+        }
+        while j < n {
+            acc[j] += u * w[j] as i32;
+            j += 1;
+        }
     }
 }
 
 #[target_feature(enable = "avx2")]
 pub(super) unsafe fn widen_reset_i16(acc16: &mut [i16], acc32: &mut [i32]) {
     let n = acc16.len();
-    let mut j = 0;
-    while j + 16 <= n {
-        let a16 = _mm256_loadu_si256(acc16.as_ptr().add(j) as *const __m256i);
-        let lo = _mm256_cvtepi16_epi32(_mm256_castsi256_si128(a16));
-        let hi = _mm256_cvtepi16_epi32(_mm256_extracti128_si256::<1>(a16));
-        let b0 = _mm256_loadu_si256(acc32.as_ptr().add(j) as *const __m256i);
-        let b1 = _mm256_loadu_si256(acc32.as_ptr().add(j + 8) as *const __m256i);
-        _mm256_storeu_si256(acc32.as_mut_ptr().add(j) as *mut __m256i, _mm256_add_epi32(b0, lo));
-        _mm256_storeu_si256(
-            acc32.as_mut_ptr().add(j + 8) as *mut __m256i,
-            _mm256_add_epi32(b1, hi),
-        );
-        _mm256_storeu_si256(acc16.as_mut_ptr().add(j) as *mut __m256i, _mm256_setzero_si256());
-        j += 16;
-    }
-    while j < n {
-        acc32[j] += acc16[j] as i32;
-        acc16[j] = 0;
-        j += 1;
+    // SAFETY: AVX2 guaranteed by the caller; acc32.len() >= acc16.len()
+    // guaranteed by the caller (wrapper debug-asserts equality). Each
+    // iteration reads/writes 16 i16 lanes and 16 i32 lanes at j..j+16,
+    // under the `j + 16 <= n` guard.
+    unsafe {
+        let mut j = 0;
+        while j + 16 <= n {
+            let a16 = _mm256_loadu_si256(acc16.as_ptr().add(j) as *const __m256i);
+            let lo = _mm256_cvtepi16_epi32(_mm256_castsi256_si128(a16));
+            let hi = _mm256_cvtepi16_epi32(_mm256_extracti128_si256::<1>(a16));
+            let b0 = _mm256_loadu_si256(acc32.as_ptr().add(j) as *const __m256i);
+            let b1 = _mm256_loadu_si256(acc32.as_ptr().add(j + 8) as *const __m256i);
+            _mm256_storeu_si256(acc32.as_mut_ptr().add(j) as *mut __m256i, _mm256_add_epi32(b0, lo));
+            _mm256_storeu_si256(
+                acc32.as_mut_ptr().add(j + 8) as *mut __m256i,
+                _mm256_add_epi32(b1, hi),
+            );
+            _mm256_storeu_si256(acc16.as_mut_ptr().add(j) as *mut __m256i, _mm256_setzero_si256());
+            j += 16;
+        }
+        while j < n {
+            acc32[j] += acc16[j] as i32;
+            acc16[j] = 0;
+            j += 1;
+        }
     }
 }
 
 #[target_feature(enable = "avx2")]
 pub(super) unsafe fn unpack_row4(prow: &[u8], n: usize, wbuf: &mut [i16]) {
     let pairs = n / 2;
-    let lomask = _mm_set1_epi8(0x0F);
-    let eight = _mm256_set1_epi16(8);
-    let mut b = 0;
-    // 16 packed bytes → 32 interleaved i16 codes per iteration
-    while b + 16 <= pairs {
-        let byt = _mm_loadu_si128(prow.as_ptr().add(b) as *const __m128i);
-        let lo = _mm_and_si128(byt, lomask);
-        let hi = _mm_and_si128(_mm_srli_epi16::<4>(byt), lomask);
-        let il = _mm_unpacklo_epi8(lo, hi);
-        let ih = _mm_unpackhi_epi8(lo, hi);
-        let wl = _mm256_sub_epi16(_mm256_cvtepu8_epi16(il), eight);
-        let wh = _mm256_sub_epi16(_mm256_cvtepu8_epi16(ih), eight);
-        _mm256_storeu_si256(wbuf.as_mut_ptr().add(2 * b) as *mut __m256i, wl);
-        _mm256_storeu_si256(wbuf.as_mut_ptr().add(2 * b + 16) as *mut __m256i, wh);
-        b += 16;
-    }
-    while b < pairs {
-        let byte = prow[b];
-        wbuf[2 * b] = (byte & 0x0F) as i16 - 8;
-        wbuf[2 * b + 1] = (byte >> 4) as i16 - 8;
-        b += 1;
-    }
-    if n % 2 == 1 {
-        wbuf[n - 1] = (prow[n / 2] & 0x0F) as i16 - 8;
+    // SAFETY: AVX2 guaranteed by the caller; the caller guarantees
+    // prow.len() >= ceil(n/2) and wbuf.len() >= n (wrapper debug-asserts).
+    // The vector loop reads bytes b..b+16 (b + 16 <= pairs <= prow.len())
+    // and writes i16s 2b..2b+32 (2b + 32 <= 2*pairs <= n <= wbuf.len()).
+    unsafe {
+        let lomask = _mm_set1_epi8(0x0F);
+        let eight = _mm256_set1_epi16(8);
+        let mut b = 0;
+        // 16 packed bytes → 32 interleaved i16 codes per iteration
+        while b + 16 <= pairs {
+            let byt = _mm_loadu_si128(prow.as_ptr().add(b) as *const __m128i);
+            let lo = _mm_and_si128(byt, lomask);
+            let hi = _mm_and_si128(_mm_srli_epi16::<4>(byt), lomask);
+            let il = _mm_unpacklo_epi8(lo, hi);
+            let ih = _mm_unpackhi_epi8(lo, hi);
+            let wl = _mm256_sub_epi16(_mm256_cvtepu8_epi16(il), eight);
+            let wh = _mm256_sub_epi16(_mm256_cvtepu8_epi16(ih), eight);
+            _mm256_storeu_si256(wbuf.as_mut_ptr().add(2 * b) as *mut __m256i, wl);
+            _mm256_storeu_si256(wbuf.as_mut_ptr().add(2 * b + 16) as *mut __m256i, wh);
+            b += 16;
+        }
+        while b < pairs {
+            let byte = prow[b];
+            wbuf[2 * b] = (byte & 0x0F) as i16 - 8;
+            wbuf[2 * b + 1] = (byte >> 4) as i16 - 8;
+            b += 1;
+        }
+        if n % 2 == 1 {
+            wbuf[n - 1] = (prow[n / 2] & 0x0F) as i16 - 8;
+        }
     }
 }
 
@@ -487,22 +599,28 @@ pub(super) unsafe fn dequant_store(
     out: &mut [f32],
 ) {
     let n = out.len();
-    let sxv = _mm256_set1_ps(sx);
-    let zv = _mm256_set1_ps(z);
-    let mut j = 0;
-    while j + 8 <= n {
-        let af = _mm256_cvtepi32_ps(_mm256_loadu_si256(acc.as_ptr().add(j) as *const __m256i));
-        let cf = _mm256_cvtepi32_ps(_mm256_loadu_si256(colsum.as_ptr().add(j) as *const __m256i));
-        let wv = _mm256_loadu_ps(ws.as_ptr().add(j));
-        // sx * ws[j] * (acc + z * colsum) — the scalar association
-        let t = _mm256_add_ps(af, _mm256_mul_ps(zv, cf));
-        let r = _mm256_mul_ps(_mm256_mul_ps(sxv, wv), t);
-        _mm256_storeu_ps(out.as_mut_ptr().add(j), r);
-        j += 8;
-    }
-    while j < n {
-        out[j] = sx * ws[j] * (acc[j] as f32 + z * colsum[j] as f32);
-        j += 1;
+    // SAFETY: AVX2 guaranteed by the caller; ws/colsum/acc lengths equal
+    // out.len() guaranteed by the caller (wrapper debug-asserts), lanes
+    // j..j+8 stay under the `j + 8 <= n` guard.
+    unsafe {
+        let sxv = _mm256_set1_ps(sx);
+        let zv = _mm256_set1_ps(z);
+        let mut j = 0;
+        while j + 8 <= n {
+            let af = _mm256_cvtepi32_ps(_mm256_loadu_si256(acc.as_ptr().add(j) as *const __m256i));
+            let cf =
+                _mm256_cvtepi32_ps(_mm256_loadu_si256(colsum.as_ptr().add(j) as *const __m256i));
+            let wv = _mm256_loadu_ps(ws.as_ptr().add(j));
+            // sx * ws[j] * (acc + z * colsum) — the scalar association
+            let t = _mm256_add_ps(af, _mm256_mul_ps(zv, cf));
+            let r = _mm256_mul_ps(_mm256_mul_ps(sxv, wv), t);
+            _mm256_storeu_ps(out.as_mut_ptr().add(j), r);
+            j += 8;
+        }
+        while j < n {
+            out[j] = sx * ws[j] * (acc[j] as f32 + z * colsum[j] as f32);
+            j += 1;
+        }
     }
 }
 
@@ -513,19 +631,24 @@ pub(super) unsafe fn dequant_store(
 /// Stages h=1,2,4 of the butterfly tree inside one 8-lane register.
 /// Additions are commutative and `a - b ≡ a + (-b)` in IEEE 754, so the
 /// permute-and-signed-add form is bit-identical to the scalar loop.
+#[allow(unused_unsafe)] // value-only intrinsics: the block is needed only on toolchains where they are `unsafe fn`
 #[inline]
 #[target_feature(enable = "avx2")]
 unsafe fn fwht8_lanes(v: __m256) -> __m256 {
-    const S: i32 = i32::MIN; // the f32 sign bit
-    let m1 = _mm256_castsi256_ps(_mm256_set_epi32(S, 0, S, 0, S, 0, S, 0));
-    let m2 = _mm256_castsi256_ps(_mm256_set_epi32(S, S, 0, 0, S, S, 0, 0));
-    let m3 = _mm256_castsi256_ps(_mm256_set_epi32(S, S, S, S, 0, 0, 0, 0));
-    // h=1: swap adjacent lanes, negate odd lanes of the original
-    let v = _mm256_add_ps(_mm256_permute_ps::<0xB1>(v), _mm256_xor_ps(v, m1));
-    // h=2: swap lane pairs, negate lanes 2,3 (mod 4)
-    let v = _mm256_add_ps(_mm256_permute_ps::<0x4E>(v), _mm256_xor_ps(v, m2));
-    // h=4: swap 128-bit halves, negate the upper half
-    _mm256_add_ps(_mm256_permute2f128_ps::<0x01>(v, v), _mm256_xor_ps(v, m3))
+    // SAFETY: register-only permutes/adds/xors — no memory access; AVX2
+    // is guaranteed by the (feature-matched) caller.
+    unsafe {
+        const S: i32 = i32::MIN; // the f32 sign bit
+        let m1 = _mm256_castsi256_ps(_mm256_set_epi32(S, 0, S, 0, S, 0, S, 0));
+        let m2 = _mm256_castsi256_ps(_mm256_set_epi32(S, S, 0, 0, S, S, 0, 0));
+        let m3 = _mm256_castsi256_ps(_mm256_set_epi32(S, S, S, S, 0, 0, 0, 0));
+        // h=1: swap adjacent lanes, negate odd lanes of the original
+        let v = _mm256_add_ps(_mm256_permute_ps::<0xB1>(v), _mm256_xor_ps(v, m1));
+        // h=2: swap lane pairs, negate lanes 2,3 (mod 4)
+        let v = _mm256_add_ps(_mm256_permute_ps::<0x4E>(v), _mm256_xor_ps(v, m2));
+        // h=4: swap 128-bit halves, negate the upper half
+        _mm256_add_ps(_mm256_permute2f128_ps::<0x01>(v, v), _mm256_xor_ps(v, m3))
+    }
 }
 
 /// In-place unnormalized-then-scaled FWHT over a power-of-2 slice with
@@ -534,37 +657,45 @@ unsafe fn fwht8_lanes(v: __m256) -> __m256 {
 pub(super) unsafe fn fwht_pow2(x: &mut [f32], scale: f32) {
     let n = x.len();
     debug_assert!(n >= 8 && n.is_power_of_two());
-    let p = x.as_mut_ptr();
-    // stages h = 1, 2, 4 run inside each aligned 8-lane chunk
-    let mut i = 0;
-    while i < n {
-        let v = _mm256_loadu_ps(p.add(i));
-        _mm256_storeu_ps(p.add(i), fwht8_lanes(v));
-        i += 8;
-    }
-    // stages h = 8, 16, … are contiguous vector butterflies
-    let mut h = 8;
-    while h < n {
-        let mut base = 0;
-        while base < n {
-            let mut j = 0;
-            while j < h {
-                let a = _mm256_loadu_ps(p.add(base + j));
-                let b = _mm256_loadu_ps(p.add(base + h + j));
-                _mm256_storeu_ps(p.add(base + j), _mm256_add_ps(a, b));
-                _mm256_storeu_ps(p.add(base + h + j), _mm256_sub_ps(a, b));
-                j += 8;
-            }
-            base += 2 * h;
-        }
-        h *= 2;
-    }
-    if scale != 1.0 {
-        let sv = _mm256_set1_ps(scale);
+    // SAFETY: AVX2 guaranteed by the caller; the caller guarantees n is a
+    // power of two >= 8 (simd::fwht_pow2 checks before dispatching). All
+    // accesses are 8-lane loads/stores at offsets that stay < n: the
+    // intra-register pass walks i in steps of 8; the butterfly stages use
+    // base + j and base + h + j with j < h, base + 2h <= n and h >= 8, so
+    // base + h + j + 8 <= base + 2h <= n.
+    unsafe {
+        let p = x.as_mut_ptr();
+        // stages h = 1, 2, 4 run inside each aligned 8-lane chunk
         let mut i = 0;
         while i < n {
-            _mm256_storeu_ps(p.add(i), _mm256_mul_ps(_mm256_loadu_ps(p.add(i)), sv));
+            let v = _mm256_loadu_ps(p.add(i));
+            _mm256_storeu_ps(p.add(i), fwht8_lanes(v));
             i += 8;
+        }
+        // stages h = 8, 16, … are contiguous vector butterflies
+        let mut h = 8;
+        while h < n {
+            let mut base = 0;
+            while base < n {
+                let mut j = 0;
+                while j < h {
+                    let a = _mm256_loadu_ps(p.add(base + j));
+                    let b = _mm256_loadu_ps(p.add(base + h + j));
+                    _mm256_storeu_ps(p.add(base + j), _mm256_add_ps(a, b));
+                    _mm256_storeu_ps(p.add(base + h + j), _mm256_sub_ps(a, b));
+                    j += 8;
+                }
+                base += 2 * h;
+            }
+            h *= 2;
+        }
+        if scale != 1.0 {
+            let sv = _mm256_set1_ps(scale);
+            let mut i = 0;
+            while i < n {
+                _mm256_storeu_ps(p.add(i), _mm256_mul_ps(_mm256_loadu_ps(p.add(i)), sv));
+                i += 8;
+            }
         }
     }
 }

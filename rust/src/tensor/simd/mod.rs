@@ -331,14 +331,16 @@ pub fn fwht_pow2(x: &mut [f32], scale: f32) -> bool {
     }
     match active() {
         #[cfg(target_arch = "x86_64")]
-        // SAFETY: Avx2 is only active on AVX2-capable hosts.
         SimdLevel::Avx2 => {
+            // SAFETY: Avx2 is only active on AVX2-capable hosts; n is a
+            // power of two >= 8 (checked above).
             unsafe { avx2::fwht_pow2(x, scale) };
             true
         }
         #[cfg(target_arch = "aarch64")]
-        // SAFETY: Neon is only active on NEON-capable hosts.
         SimdLevel::Neon => {
+            // SAFETY: Neon is only active on NEON-capable hosts; n is a
+            // power of two >= 8 (checked above).
             unsafe { neon::fwht_pow2(x, scale) };
             true
         }
@@ -357,17 +359,19 @@ pub fn fwht_blocks(x: &mut [f32], b: usize, scale: f32) -> bool {
     debug_assert!(x.len() % b == 0);
     match active() {
         #[cfg(target_arch = "x86_64")]
-        // SAFETY: Avx2 is only active on AVX2-capable hosts.
         SimdLevel::Avx2 => {
             for blk in x.chunks_exact_mut(b) {
+                // SAFETY: Avx2 is only active on AVX2-capable hosts; each
+                // block is exactly b elements, a power of two >= 8.
                 unsafe { avx2::fwht_pow2(blk, scale) };
             }
             true
         }
         #[cfg(target_arch = "aarch64")]
-        // SAFETY: Neon is only active on NEON-capable hosts.
         SimdLevel::Neon => {
             for blk in x.chunks_exact_mut(b) {
+                // SAFETY: Neon is only active on NEON-capable hosts; each
+                // block is exactly b elements, a power of two >= 8.
                 unsafe { neon::fwht_pow2(blk, scale) };
             }
             true

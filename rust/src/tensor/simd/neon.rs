@@ -3,6 +3,12 @@
 //! lanes are exact, f32 elementwise ops keep the scalar expression order
 //! (no FMA contraction), `vrndaq_f32` *is* round-half-away-from-zero, and
 //! only `sum_squares`/`exp_ps` are tolerance-class.
+//!
+//! The crate denies `unsafe_op_in_unsafe_fn`, so each body wraps its
+//! intrinsic/pointer work in an explicit block whose `// SAFETY:` comment
+//! states the bounds argument the loop relies on. The dispatcher in
+//! `simd::mod` only routes here on aarch64 (NEON is baseline), so the ISA
+//! precondition always holds.
 
 #![allow(clippy::missing_safety_doc)]
 
@@ -17,85 +23,106 @@ const SIGN: u32 = 0x8000_0000;
 #[target_feature(enable = "neon")]
 pub(super) unsafe fn axpy_f32(a: f32, x: &[f32], y: &mut [f32]) {
     let n = y.len();
-    let av = vdupq_n_f32(a);
-    let mut i = 0;
-    while i + 4 <= n {
-        let xv = vld1q_f32(x.as_ptr().add(i));
-        let yv = vld1q_f32(y.as_ptr().add(i));
-        vst1q_f32(y.as_mut_ptr().add(i), vaddq_f32(yv, vmulq_f32(av, xv)));
-        i += 4;
-    }
-    while i < n {
-        y[i] += a * x[i];
-        i += 1;
+    // SAFETY: NEON is baseline on aarch64; the caller guarantees
+    // x.len() >= y.len() (the simd:: wrapper debug-asserts equality), and
+    // every load/store touches only lanes i..i+4 under `i + 4 <= n`.
+    unsafe {
+        let av = vdupq_n_f32(a);
+        let mut i = 0;
+        while i + 4 <= n {
+            let xv = vld1q_f32(x.as_ptr().add(i));
+            let yv = vld1q_f32(y.as_ptr().add(i));
+            vst1q_f32(y.as_mut_ptr().add(i), vaddq_f32(yv, vmulq_f32(av, xv)));
+            i += 4;
+        }
+        while i < n {
+            y[i] += a * x[i];
+            i += 1;
+        }
     }
 }
 
 #[target_feature(enable = "neon")]
 pub(super) unsafe fn add_assign_f32(y: &mut [f32], x: &[f32]) {
     let n = y.len();
-    let mut i = 0;
-    while i + 4 <= n {
-        let xv = vld1q_f32(x.as_ptr().add(i));
-        let yv = vld1q_f32(y.as_ptr().add(i));
-        vst1q_f32(y.as_mut_ptr().add(i), vaddq_f32(yv, xv));
-        i += 4;
-    }
-    while i < n {
-        y[i] += x[i];
-        i += 1;
+    // SAFETY: x.len() >= y.len() guaranteed by the caller; lanes i..i+4
+    // stay under the `i + 4 <= n` guard.
+    unsafe {
+        let mut i = 0;
+        while i + 4 <= n {
+            let xv = vld1q_f32(x.as_ptr().add(i));
+            let yv = vld1q_f32(y.as_ptr().add(i));
+            vst1q_f32(y.as_mut_ptr().add(i), vaddq_f32(yv, xv));
+            i += 4;
+        }
+        while i < n {
+            y[i] += x[i];
+            i += 1;
+        }
     }
 }
 
 #[target_feature(enable = "neon")]
 pub(super) unsafe fn scale_inplace(x: &mut [f32], s: f32) {
     let n = x.len();
-    let sv = vdupq_n_f32(s);
-    let mut i = 0;
-    while i + 4 <= n {
-        vst1q_f32(x.as_mut_ptr().add(i), vmulq_f32(vld1q_f32(x.as_ptr().add(i)), sv));
-        i += 4;
-    }
-    while i < n {
-        x[i] *= s;
-        i += 1;
+    // SAFETY: in-place over x only; lanes i..i+4 stay under the
+    // `i + 4 <= n` guard with n = x.len().
+    unsafe {
+        let sv = vdupq_n_f32(s);
+        let mut i = 0;
+        while i + 4 <= n {
+            vst1q_f32(x.as_mut_ptr().add(i), vmulq_f32(vld1q_f32(x.as_ptr().add(i)), sv));
+            i += 4;
+        }
+        while i < n {
+            x[i] *= s;
+            i += 1;
+        }
     }
 }
 
 #[target_feature(enable = "neon")]
 pub(super) unsafe fn mul_scale_store(x: &[f32], inv: f32, scale: &[f32], out: &mut [f32]) {
     let n = out.len();
-    let iv = vdupq_n_f32(inv);
-    let mut i = 0;
-    while i + 4 <= n {
-        let xv = vld1q_f32(x.as_ptr().add(i));
-        let sv = vld1q_f32(scale.as_ptr().add(i));
-        vst1q_f32(out.as_mut_ptr().add(i), vmulq_f32(vmulq_f32(xv, iv), sv));
-        i += 4;
-    }
-    while i < n {
-        out[i] = x[i] * inv * scale[i];
-        i += 1;
+    // SAFETY: the caller guarantees x.len() == scale.len() == out.len()
+    // (wrapper debug-asserts); lanes i..i+4 stay under `i + 4 <= n`.
+    unsafe {
+        let iv = vdupq_n_f32(inv);
+        let mut i = 0;
+        while i + 4 <= n {
+            let xv = vld1q_f32(x.as_ptr().add(i));
+            let sv = vld1q_f32(scale.as_ptr().add(i));
+            vst1q_f32(out.as_mut_ptr().add(i), vmulq_f32(vmulq_f32(xv, iv), sv));
+            i += 4;
+        }
+        while i < n {
+            out[i] = x[i] * inv * scale[i];
+            i += 1;
+        }
     }
 }
 
 #[target_feature(enable = "neon")]
 pub(super) unsafe fn butterfly(a: &mut [f32], b: &mut [f32]) {
     let n = a.len();
-    let mut i = 0;
-    while i + 4 <= n {
-        let av = vld1q_f32(a.as_ptr().add(i));
-        let bv = vld1q_f32(b.as_ptr().add(i));
-        vst1q_f32(a.as_mut_ptr().add(i), vaddq_f32(av, bv));
-        vst1q_f32(b.as_mut_ptr().add(i), vsubq_f32(av, bv));
-        i += 4;
-    }
-    while i < n {
-        let x = a[i];
-        let y = b[i];
-        a[i] = x + y;
-        b[i] = x - y;
-        i += 1;
+    // SAFETY: a.len() == b.len() guaranteed by the caller (wrapper
+    // debug-asserts); lanes i..i+4 stay under the `i + 4 <= n` guard.
+    unsafe {
+        let mut i = 0;
+        while i + 4 <= n {
+            let av = vld1q_f32(a.as_ptr().add(i));
+            let bv = vld1q_f32(b.as_ptr().add(i));
+            vst1q_f32(a.as_mut_ptr().add(i), vaddq_f32(av, bv));
+            vst1q_f32(b.as_mut_ptr().add(i), vsubq_f32(av, bv));
+            i += 4;
+        }
+        while i < n {
+            let x = a[i];
+            let y = b[i];
+            a[i] = x + y;
+            b[i] = x - y;
+            i += 1;
+        }
     }
 }
 
@@ -106,59 +133,71 @@ pub(super) unsafe fn butterfly(a: &mut [f32], b: &mut [f32]) {
 #[target_feature(enable = "neon")]
 pub(super) unsafe fn sum_squares(x: &[f32]) -> f32 {
     let n = x.len();
-    let mut acc = vdupq_n_f32(0.0);
-    let mut i = 0;
-    while i + 4 <= n {
-        let v = vld1q_f32(x.as_ptr().add(i));
-        acc = vaddq_f32(acc, vmulq_f32(v, v));
-        i += 4;
+    // SAFETY: read-only loads of lanes i..i+4 under the `i + 4 <= n`
+    // guard with n = x.len().
+    unsafe {
+        let mut acc = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i + 4 <= n {
+            let v = vld1q_f32(x.as_ptr().add(i));
+            acc = vaddq_f32(acc, vmulq_f32(v, v));
+            i += 4;
+        }
+        let mut ss = vaddvq_f32(acc);
+        while i < n {
+            ss += x[i] * x[i];
+            i += 1;
+        }
+        ss
     }
-    let mut ss = vaddvq_f32(acc);
-    while i < n {
-        ss += x[i] * x[i];
-        i += 1;
-    }
-    ss
 }
 
 /// Vector e^x — same range-reduced degree-6 polynomial as the AVX2 arm.
+#[allow(unused_unsafe)] // value-only intrinsics: the block is needed only on toolchains where they are `unsafe fn`
 #[inline]
 #[target_feature(enable = "neon")]
 unsafe fn exp_ps(x: float32x4_t) -> float32x4_t {
-    let x = vminq_f32(x, vdupq_n_f32(88.0));
-    let x = vmaxq_f32(x, vdupq_n_f32(-87.0));
-    let n = vrndnq_f32(vmulq_f32(x, vdupq_n_f32(1.442_695_f32)));
-    let r = vsubq_f32(x, vmulq_f32(n, vdupq_n_f32(0.693_359_375_f32)));
-    let r = vsubq_f32(r, vmulq_f32(n, vdupq_n_f32(-2.121_944_4e-4_f32)));
-    let mut p = vdupq_n_f32(1.0 / 720.0);
-    p = vaddq_f32(vmulq_f32(p, r), vdupq_n_f32(1.0 / 120.0));
-    p = vaddq_f32(vmulq_f32(p, r), vdupq_n_f32(1.0 / 24.0));
-    p = vaddq_f32(vmulq_f32(p, r), vdupq_n_f32(1.0 / 6.0));
-    p = vaddq_f32(vmulq_f32(p, r), vdupq_n_f32(0.5));
-    p = vaddq_f32(vmulq_f32(p, r), vdupq_n_f32(1.0));
-    p = vaddq_f32(vmulq_f32(p, r), vdupq_n_f32(1.0));
-    let e = vcvtq_s32_f32(n); // n is integral
-    let pow2 = vreinterpretq_f32_s32(vshlq_n_s32::<23>(vaddq_s32(e, vdupq_n_s32(127))));
-    vmulq_f32(p, pow2)
+    // SAFETY: register-only arithmetic — no memory access.
+    unsafe {
+        let x = vminq_f32(x, vdupq_n_f32(88.0));
+        let x = vmaxq_f32(x, vdupq_n_f32(-87.0));
+        let n = vrndnq_f32(vmulq_f32(x, vdupq_n_f32(1.442_695_f32)));
+        let r = vsubq_f32(x, vmulq_f32(n, vdupq_n_f32(0.693_359_375_f32)));
+        let r = vsubq_f32(r, vmulq_f32(n, vdupq_n_f32(-2.121_944_4e-4_f32)));
+        let mut p = vdupq_n_f32(1.0 / 720.0);
+        p = vaddq_f32(vmulq_f32(p, r), vdupq_n_f32(1.0 / 120.0));
+        p = vaddq_f32(vmulq_f32(p, r), vdupq_n_f32(1.0 / 24.0));
+        p = vaddq_f32(vmulq_f32(p, r), vdupq_n_f32(1.0 / 6.0));
+        p = vaddq_f32(vmulq_f32(p, r), vdupq_n_f32(0.5));
+        p = vaddq_f32(vmulq_f32(p, r), vdupq_n_f32(1.0));
+        p = vaddq_f32(vmulq_f32(p, r), vdupq_n_f32(1.0));
+        let e = vcvtq_s32_f32(n); // n is integral
+        let pow2 = vreinterpretq_f32_s32(vshlq_n_s32::<23>(vaddq_s32(e, vdupq_n_s32(127))));
+        vmulq_f32(p, pow2)
+    }
 }
 
 #[target_feature(enable = "neon")]
 pub(super) unsafe fn swish_mul(g: &mut [f32], u: &[f32]) {
     let n = g.len();
-    let one = vdupq_n_f32(1.0);
-    let mut i = 0;
-    while i + 4 <= n {
-        let x = vld1q_f32(g.as_ptr().add(i));
-        let uv = vld1q_f32(u.as_ptr().add(i));
-        let e = exp_ps(vnegq_f32(x));
-        let sw = vdivq_f32(x, vaddq_f32(one, e));
-        vst1q_f32(g.as_mut_ptr().add(i), vmulq_f32(sw, uv));
-        i += 4;
-    }
-    while i < n {
-        let x = g[i];
-        g[i] = x / (1.0 + (-x).exp()) * u[i];
-        i += 1;
+    // SAFETY: u.len() >= g.len() guaranteed by the caller (wrapper
+    // debug-asserts equality); lanes i..i+4 stay under `i + 4 <= n`.
+    unsafe {
+        let one = vdupq_n_f32(1.0);
+        let mut i = 0;
+        while i + 4 <= n {
+            let x = vld1q_f32(g.as_ptr().add(i));
+            let uv = vld1q_f32(u.as_ptr().add(i));
+            let e = exp_ps(vnegq_f32(x));
+            let sw = vdivq_f32(x, vaddq_f32(one, e));
+            vst1q_f32(g.as_mut_ptr().add(i), vmulq_f32(sw, uv));
+            i += 4;
+        }
+        while i < n {
+            let x = g[i];
+            g[i] = x / (1.0 + (-x).exp()) * u[i];
+            i += 1;
+        }
     }
 }
 
@@ -169,32 +208,37 @@ pub(super) unsafe fn swish_mul(g: &mut [f32], u: &[f32]) {
 #[target_feature(enable = "neon")]
 pub(super) unsafe fn row_minmax(x: &[f32]) -> (f32, f32) {
     let n = x.len();
-    let (mut mn, mut mx) = (f32::INFINITY, f32::NEG_INFINITY);
-    let mut i = 0;
-    if n >= 4 {
-        let first = vld1q_f32(x.as_ptr());
-        let mut vmn = first;
-        let mut vmx = first;
-        i = 4;
-        while i + 4 <= n {
-            let v = vld1q_f32(x.as_ptr().add(i));
-            vmn = vminq_f32(vmn, v);
-            vmx = vmaxq_f32(vmx, v);
-            i += 4;
+    // SAFETY: the first load requires n >= 4 (guarded); subsequent loads
+    // stay under the `i + 4 <= n` guard.
+    unsafe {
+        let (mut mn, mut mx) = (f32::INFINITY, f32::NEG_INFINITY);
+        let mut i = 0;
+        if n >= 4 {
+            let first = vld1q_f32(x.as_ptr());
+            let mut vmn = first;
+            let mut vmx = first;
+            i = 4;
+            while i + 4 <= n {
+                let v = vld1q_f32(x.as_ptr().add(i));
+                vmn = vminq_f32(vmn, v);
+                vmx = vmaxq_f32(vmx, v);
+                i += 4;
+            }
+            mn = vminvq_f32(vmn);
+            mx = vmaxvq_f32(vmx);
         }
-        mn = vminvq_f32(vmn);
-        mx = vmaxvq_f32(vmx);
+        while i < n {
+            mn = mn.min(x[i]);
+            mx = mx.max(x[i]);
+            i += 1;
+        }
+        (mn, mx)
     }
-    while i < n {
-        mn = mn.min(x[i]);
-        mx = mx.max(x[i]);
-        i += 1;
-    }
-    (mn, mx)
 }
 
 /// Quantize one 4-lane vector to clamped codes (`vrndaq_f32` is FRINTA —
 /// round half away from zero, exactly `f32::round`).
+#[allow(unused_unsafe)] // value-only intrinsics: the block is needed only on toolchains where they are `unsafe fn`
 #[inline]
 #[target_feature(enable = "neon")]
 unsafe fn quant_lanes(
@@ -203,49 +247,61 @@ unsafe fn quant_lanes(
     zv: float32x4_t,
     lv: float32x4_t,
 ) -> float32x4_t {
-    let q = vsubq_f32(vrndaq_f32(vdivq_f32(v, sv)), zv);
-    vmaxq_f32(vminq_f32(q, lv), vdupq_n_f32(0.0))
+    // SAFETY: register-only arithmetic — no memory access.
+    unsafe {
+        let q = vsubq_f32(vrndaq_f32(vdivq_f32(v, sv)), zv);
+        vmaxq_f32(vminq_f32(q, lv), vdupq_n_f32(0.0))
+    }
 }
 
 #[target_feature(enable = "neon")]
 pub(super) unsafe fn emit_codes(x: &[f32], s: f32, z: f32, levels: f32, codes: &mut [u8]) {
     let n = x.len();
-    let sv = vdupq_n_f32(s);
-    let zv = vdupq_n_f32(z);
-    let lv = vdupq_n_f32(levels);
-    let mut i = 0;
-    while i + 8 <= n {
-        let qa = quant_lanes(vld1q_f32(x.as_ptr().add(i)), sv, zv, lv);
-        let qb = quant_lanes(vld1q_f32(x.as_ptr().add(i + 4)), sv, zv, lv);
-        let na = vqmovn_s32(vcvtq_s32_f32(qa));
-        let nb = vqmovn_s32(vcvtq_s32_f32(qb));
-        let packed = vqmovun_s16(vcombine_s16(na, nb));
-        vst1_u8(codes.as_mut_ptr().add(i), packed);
-        i += 8;
-    }
-    while i < n {
-        let q = ((x[i] / s).round() - z).clamp(0.0, levels);
-        codes[i] = q as u8;
-        i += 1;
+    // SAFETY: codes.len() >= x.len() guaranteed by the caller (wrapper
+    // debug-asserts equality). Each iteration loads lanes i..i+8 of x and
+    // stores bytes i..i+8 of codes, both under the `i + 8 <= n` guard.
+    unsafe {
+        let sv = vdupq_n_f32(s);
+        let zv = vdupq_n_f32(z);
+        let lv = vdupq_n_f32(levels);
+        let mut i = 0;
+        while i + 8 <= n {
+            let qa = quant_lanes(vld1q_f32(x.as_ptr().add(i)), sv, zv, lv);
+            let qb = quant_lanes(vld1q_f32(x.as_ptr().add(i + 4)), sv, zv, lv);
+            let na = vqmovn_s32(vcvtq_s32_f32(qa));
+            let nb = vqmovn_s32(vcvtq_s32_f32(qb));
+            let packed = vqmovun_s16(vcombine_s16(na, nb));
+            vst1_u8(codes.as_mut_ptr().add(i), packed);
+            i += 8;
+        }
+        while i < n {
+            let q = ((x[i] / s).round() - z).clamp(0.0, levels);
+            codes[i] = q as u8;
+            i += 1;
+        }
     }
 }
 
 #[target_feature(enable = "neon")]
 pub(super) unsafe fn fake_quant_int(x: &mut [f32], s: f32, z: f32, levels: f32) {
     let n = x.len();
-    let sv = vdupq_n_f32(s);
-    let zv = vdupq_n_f32(z);
-    let lv = vdupq_n_f32(levels);
-    let mut i = 0;
-    while i + 4 <= n {
-        let q = quant_lanes(vld1q_f32(x.as_ptr().add(i)), sv, zv, lv);
-        vst1q_f32(x.as_mut_ptr().add(i), vmulq_f32(sv, vaddq_f32(q, zv)));
-        i += 4;
-    }
-    while i < n {
-        let q = ((x[i] / s).round() - z).clamp(0.0, levels);
-        x[i] = s * (q + z);
-        i += 1;
+    // SAFETY: in-place over x only; lanes i..i+4 stay under the
+    // `i + 4 <= n` guard.
+    unsafe {
+        let sv = vdupq_n_f32(s);
+        let zv = vdupq_n_f32(z);
+        let lv = vdupq_n_f32(levels);
+        let mut i = 0;
+        while i + 4 <= n {
+            let q = quant_lanes(vld1q_f32(x.as_ptr().add(i)), sv, zv, lv);
+            vst1q_f32(x.as_mut_ptr().add(i), vmulq_f32(sv, vaddq_f32(q, zv)));
+            i += 4;
+        }
+        while i < n {
+            let q = ((x[i] / s).round() - z).clamp(0.0, levels);
+            x[i] = s * (q + z);
+            i += 1;
+        }
     }
 }
 
@@ -256,134 +312,163 @@ pub(super) unsafe fn fake_quant_int(x: &mut [f32], s: f32, z: f32, levels: f32) 
 #[target_feature(enable = "neon")]
 pub(super) unsafe fn axpy_i16(u: i16, w: &[i16], acc: &mut [i16]) {
     let n = w.len();
-    let uv = vdupq_n_s16(u);
-    let mut j = 0;
-    while j + 8 <= n {
-        let wv = vld1q_s16(w.as_ptr().add(j));
-        let av = vld1q_s16(acc.as_ptr().add(j));
-        vst1q_s16(acc.as_mut_ptr().add(j), vmlaq_s16(av, uv, wv));
-        j += 8;
-    }
-    while j < n {
-        acc[j] += u * w[j];
-        j += 1;
+    // SAFETY: acc.len() >= w.len() guaranteed by the caller (wrapper
+    // debug-asserts equality); 8-lane loads/stores stay under `j + 8 <= n`.
+    unsafe {
+        let uv = vdupq_n_s16(u);
+        let mut j = 0;
+        while j + 8 <= n {
+            let wv = vld1q_s16(w.as_ptr().add(j));
+            let av = vld1q_s16(acc.as_ptr().add(j));
+            vst1q_s16(acc.as_mut_ptr().add(j), vmlaq_s16(av, uv, wv));
+            j += 8;
+        }
+        while j < n {
+            acc[j] += u * w[j];
+            j += 1;
+        }
     }
 }
 
 #[target_feature(enable = "neon")]
 pub(super) unsafe fn axpy2_i16(u0: i16, u1: i16, w: &[i16], acc0: &mut [i16], acc1: &mut [i16]) {
     let n = w.len();
-    let uv0 = vdupq_n_s16(u0);
-    let uv1 = vdupq_n_s16(u1);
-    let mut j = 0;
-    while j + 8 <= n {
-        let wv = vld1q_s16(w.as_ptr().add(j));
-        let a0 = vld1q_s16(acc0.as_ptr().add(j));
-        let a1 = vld1q_s16(acc1.as_ptr().add(j));
-        vst1q_s16(acc0.as_mut_ptr().add(j), vmlaq_s16(a0, uv0, wv));
-        vst1q_s16(acc1.as_mut_ptr().add(j), vmlaq_s16(a1, uv1, wv));
-        j += 8;
-    }
-    while j < n {
-        let wv = w[j];
-        acc0[j] += u0 * wv;
-        acc1[j] += u1 * wv;
-        j += 1;
+    // SAFETY: acc0/acc1 lengths >= w.len() guaranteed by the caller
+    // (wrapper debug-asserts equality); 8-lane accesses under `j + 8 <= n`.
+    unsafe {
+        let uv0 = vdupq_n_s16(u0);
+        let uv1 = vdupq_n_s16(u1);
+        let mut j = 0;
+        while j + 8 <= n {
+            let wv = vld1q_s16(w.as_ptr().add(j));
+            let a0 = vld1q_s16(acc0.as_ptr().add(j));
+            let a1 = vld1q_s16(acc1.as_ptr().add(j));
+            vst1q_s16(acc0.as_mut_ptr().add(j), vmlaq_s16(a0, uv0, wv));
+            vst1q_s16(acc1.as_mut_ptr().add(j), vmlaq_s16(a1, uv1, wv));
+            j += 8;
+        }
+        while j < n {
+            let wv = w[j];
+            acc0[j] += u0 * wv;
+            acc1[j] += u1 * wv;
+            j += 1;
+        }
     }
 }
 
 #[target_feature(enable = "neon")]
 pub(super) unsafe fn axpy_i32_i16w(u: i32, w: &[i16], acc: &mut [i32]) {
     let n = w.len();
-    let uv = vdupq_n_s32(u);
-    let mut j = 0;
-    while j + 8 <= n {
-        let wv = vld1q_s16(w.as_ptr().add(j));
-        let lo = vmovl_s16(vget_low_s16(wv));
-        let hi = vmovl_s16(vget_high_s16(wv));
-        let a0 = vld1q_s32(acc.as_ptr().add(j));
-        let a1 = vld1q_s32(acc.as_ptr().add(j + 4));
-        vst1q_s32(acc.as_mut_ptr().add(j), vmlaq_s32(a0, uv, lo));
-        vst1q_s32(acc.as_mut_ptr().add(j + 4), vmlaq_s32(a1, uv, hi));
-        j += 8;
-    }
-    while j < n {
-        acc[j] += u * w[j] as i32;
-        j += 1;
+    // SAFETY: acc.len() >= w.len() guaranteed by the caller (wrapper
+    // debug-asserts equality). Each iteration reads 8 i16s at j..j+8 and
+    // touches i32 lanes j..j+8 (two 4-lane halves) under `j + 8 <= n`.
+    unsafe {
+        let uv = vdupq_n_s32(u);
+        let mut j = 0;
+        while j + 8 <= n {
+            let wv = vld1q_s16(w.as_ptr().add(j));
+            let lo = vmovl_s16(vget_low_s16(wv));
+            let hi = vmovl_s16(vget_high_s16(wv));
+            let a0 = vld1q_s32(acc.as_ptr().add(j));
+            let a1 = vld1q_s32(acc.as_ptr().add(j + 4));
+            vst1q_s32(acc.as_mut_ptr().add(j), vmlaq_s32(a0, uv, lo));
+            vst1q_s32(acc.as_mut_ptr().add(j + 4), vmlaq_s32(a1, uv, hi));
+            j += 8;
+        }
+        while j < n {
+            acc[j] += u * w[j] as i32;
+            j += 1;
+        }
     }
 }
 
 #[target_feature(enable = "neon")]
 pub(super) unsafe fn axpy_i32_i8w(u: i32, w: &[i8], acc: &mut [i32]) {
     let n = w.len();
-    let uv = vdupq_n_s32(u);
-    let mut j = 0;
-    while j + 8 <= n {
-        let wv = vmovl_s8(vld1_s8(w.as_ptr().add(j)));
-        let lo = vmovl_s16(vget_low_s16(wv));
-        let hi = vmovl_s16(vget_high_s16(wv));
-        let a0 = vld1q_s32(acc.as_ptr().add(j));
-        let a1 = vld1q_s32(acc.as_ptr().add(j + 4));
-        vst1q_s32(acc.as_mut_ptr().add(j), vmlaq_s32(a0, uv, lo));
-        vst1q_s32(acc.as_mut_ptr().add(j + 4), vmlaq_s32(a1, uv, hi));
-        j += 8;
-    }
-    while j < n {
-        acc[j] += u * w[j] as i32;
-        j += 1;
+    // SAFETY: acc.len() >= w.len() guaranteed by the caller (wrapper
+    // debug-asserts equality). The 64-bit weight load reads 8 i8s j..j+8
+    // and the i32 accesses touch lanes j..j+8 under `j + 8 <= n`.
+    unsafe {
+        let uv = vdupq_n_s32(u);
+        let mut j = 0;
+        while j + 8 <= n {
+            let wv = vmovl_s8(vld1_s8(w.as_ptr().add(j)));
+            let lo = vmovl_s16(vget_low_s16(wv));
+            let hi = vmovl_s16(vget_high_s16(wv));
+            let a0 = vld1q_s32(acc.as_ptr().add(j));
+            let a1 = vld1q_s32(acc.as_ptr().add(j + 4));
+            vst1q_s32(acc.as_mut_ptr().add(j), vmlaq_s32(a0, uv, lo));
+            vst1q_s32(acc.as_mut_ptr().add(j + 4), vmlaq_s32(a1, uv, hi));
+            j += 8;
+        }
+        while j < n {
+            acc[j] += u * w[j] as i32;
+            j += 1;
+        }
     }
 }
 
 #[target_feature(enable = "neon")]
 pub(super) unsafe fn widen_reset_i16(acc16: &mut [i16], acc32: &mut [i32]) {
     let n = acc16.len();
-    let zero16 = vdupq_n_s16(0);
-    let mut j = 0;
-    while j + 8 <= n {
-        let a16 = vld1q_s16(acc16.as_ptr().add(j));
-        let lo = vmovl_s16(vget_low_s16(a16));
-        let hi = vmovl_s16(vget_high_s16(a16));
-        let b0 = vld1q_s32(acc32.as_ptr().add(j));
-        let b1 = vld1q_s32(acc32.as_ptr().add(j + 4));
-        vst1q_s32(acc32.as_mut_ptr().add(j), vaddq_s32(b0, lo));
-        vst1q_s32(acc32.as_mut_ptr().add(j + 4), vaddq_s32(b1, hi));
-        vst1q_s16(acc16.as_mut_ptr().add(j), zero16);
-        j += 8;
-    }
-    while j < n {
-        acc32[j] += acc16[j] as i32;
-        acc16[j] = 0;
-        j += 1;
+    // SAFETY: acc32.len() >= acc16.len() guaranteed by the caller (wrapper
+    // debug-asserts equality). Each iteration reads/writes 8 i16 lanes and
+    // 8 i32 lanes at j..j+8, under the `j + 8 <= n` guard.
+    unsafe {
+        let zero16 = vdupq_n_s16(0);
+        let mut j = 0;
+        while j + 8 <= n {
+            let a16 = vld1q_s16(acc16.as_ptr().add(j));
+            let lo = vmovl_s16(vget_low_s16(a16));
+            let hi = vmovl_s16(vget_high_s16(a16));
+            let b0 = vld1q_s32(acc32.as_ptr().add(j));
+            let b1 = vld1q_s32(acc32.as_ptr().add(j + 4));
+            vst1q_s32(acc32.as_mut_ptr().add(j), vaddq_s32(b0, lo));
+            vst1q_s32(acc32.as_mut_ptr().add(j + 4), vaddq_s32(b1, hi));
+            vst1q_s16(acc16.as_mut_ptr().add(j), zero16);
+            j += 8;
+        }
+        while j < n {
+            acc32[j] += acc16[j] as i32;
+            acc16[j] = 0;
+            j += 1;
+        }
     }
 }
 
 #[target_feature(enable = "neon")]
 pub(super) unsafe fn unpack_row4(prow: &[u8], n: usize, wbuf: &mut [i16]) {
     let pairs = n / 2;
-    let lomask = vdup_n_u8(0x0F);
-    let eight = vdupq_n_s16(8);
-    let mut b = 0;
-    // 8 packed bytes → 16 interleaved i16 codes per iteration
-    while b + 8 <= pairs {
-        let byt = vld1_u8(prow.as_ptr().add(b));
-        let lo = vand_u8(byt, lomask);
-        let hi = vshr_n_u8::<4>(byt);
-        let il = vzip1_u8(lo, hi);
-        let ih = vzip2_u8(lo, hi);
-        let wl = vsubq_s16(vreinterpretq_s16_u16(vmovl_u8(il)), eight);
-        let wh = vsubq_s16(vreinterpretq_s16_u16(vmovl_u8(ih)), eight);
-        vst1q_s16(wbuf.as_mut_ptr().add(2 * b), wl);
-        vst1q_s16(wbuf.as_mut_ptr().add(2 * b + 8), wh);
-        b += 8;
-    }
-    while b < pairs {
-        let byte = prow[b];
-        wbuf[2 * b] = (byte & 0x0F) as i16 - 8;
-        wbuf[2 * b + 1] = (byte >> 4) as i16 - 8;
-        b += 1;
-    }
-    if n % 2 == 1 {
-        wbuf[n - 1] = (prow[n / 2] & 0x0F) as i16 - 8;
+    // SAFETY: the caller guarantees prow.len() >= ceil(n/2) and
+    // wbuf.len() >= n (wrapper debug-asserts). The vector loop reads bytes
+    // b..b+8 (b + 8 <= pairs <= prow.len()) and writes i16s 2b..2b+16
+    // (2b + 16 <= 2*pairs <= n <= wbuf.len()).
+    unsafe {
+        let lomask = vdup_n_u8(0x0F);
+        let eight = vdupq_n_s16(8);
+        let mut b = 0;
+        // 8 packed bytes → 16 interleaved i16 codes per iteration
+        while b + 8 <= pairs {
+            let byt = vld1_u8(prow.as_ptr().add(b));
+            let lo = vand_u8(byt, lomask);
+            let hi = vshr_n_u8::<4>(byt);
+            let il = vzip1_u8(lo, hi);
+            let ih = vzip2_u8(lo, hi);
+            let wl = vsubq_s16(vreinterpretq_s16_u16(vmovl_u8(il)), eight);
+            let wh = vsubq_s16(vreinterpretq_s16_u16(vmovl_u8(ih)), eight);
+            vst1q_s16(wbuf.as_mut_ptr().add(2 * b), wl);
+            vst1q_s16(wbuf.as_mut_ptr().add(2 * b + 8), wh);
+            b += 8;
+        }
+        while b < pairs {
+            let byte = prow[b];
+            wbuf[2 * b] = (byte & 0x0F) as i16 - 8;
+            wbuf[2 * b + 1] = (byte >> 4) as i16 - 8;
+            b += 1;
+        }
+        if n % 2 == 1 {
+            wbuf[n - 1] = (prow[n / 2] & 0x0F) as i16 - 8;
+        }
     }
 }
 
@@ -397,20 +482,24 @@ pub(super) unsafe fn dequant_store(
     out: &mut [f32],
 ) {
     let n = out.len();
-    let sxv = vdupq_n_f32(sx);
-    let zv = vdupq_n_f32(z);
-    let mut j = 0;
-    while j + 4 <= n {
-        let af = vcvtq_f32_s32(vld1q_s32(acc.as_ptr().add(j)));
-        let cf = vcvtq_f32_s32(vld1q_s32(colsum.as_ptr().add(j)));
-        let wv = vld1q_f32(ws.as_ptr().add(j));
-        let t = vaddq_f32(af, vmulq_f32(zv, cf));
-        vst1q_f32(out.as_mut_ptr().add(j), vmulq_f32(vmulq_f32(sxv, wv), t));
-        j += 4;
-    }
-    while j < n {
-        out[j] = sx * ws[j] * (acc[j] as f32 + z * colsum[j] as f32);
-        j += 1;
+    // SAFETY: ws/colsum/acc lengths equal out.len() guaranteed by the
+    // caller (wrapper debug-asserts); lanes j..j+4 under `j + 4 <= n`.
+    unsafe {
+        let sxv = vdupq_n_f32(sx);
+        let zv = vdupq_n_f32(z);
+        let mut j = 0;
+        while j + 4 <= n {
+            let af = vcvtq_f32_s32(vld1q_s32(acc.as_ptr().add(j)));
+            let cf = vcvtq_f32_s32(vld1q_s32(colsum.as_ptr().add(j)));
+            let wv = vld1q_f32(ws.as_ptr().add(j));
+            let t = vaddq_f32(af, vmulq_f32(zv, cf));
+            vst1q_f32(out.as_mut_ptr().add(j), vmulq_f32(vmulq_f32(sxv, wv), t));
+            j += 4;
+        }
+        while j < n {
+            out[j] = sx * ws[j] * (acc[j] as f32 + z * colsum[j] as f32);
+            j += 1;
+        }
     }
 }
 
@@ -419,10 +508,12 @@ pub(super) unsafe fn dequant_store(
 // ---------------------------------------------------------------------
 
 /// Sign-flip lanes of `v` where `mask` has the sign bit set.
+#[allow(unused_unsafe)] // value-only intrinsics: the block is needed only on toolchains where they are `unsafe fn`
 #[inline]
 #[target_feature(enable = "neon")]
 unsafe fn flip(v: float32x4_t, mask: uint32x4_t) -> float32x4_t {
-    vreinterpretq_f32_u32(veorq_u32(vreinterpretq_u32_f32(v), mask))
+    // SAFETY: register-only bitwise xor — no memory access.
+    unsafe { vreinterpretq_f32_u32(veorq_u32(vreinterpretq_u32_f32(v), mask)) }
 }
 
 /// Stages h=1,2 of the butterfly tree inside one 4-lane register — same
@@ -433,12 +524,16 @@ unsafe fn flip(v: float32x4_t, mask: uint32x4_t) -> float32x4_t {
 unsafe fn fwht4_lanes(v: float32x4_t) -> float32x4_t {
     let m1: [u32; 4] = [0, SIGN, 0, SIGN];
     let m2: [u32; 4] = [0, 0, SIGN, SIGN];
-    let m1 = vld1q_u32(m1.as_ptr());
-    let m2 = vld1q_u32(m2.as_ptr());
-    // h=1: swap adjacent lanes, negate odd lanes of the original
-    let v = vaddq_f32(vrev64q_f32(v), flip(v, m1));
-    // h=2: rotate halves, negate the upper half
-    vaddq_f32(vextq_f32::<2>(v, v), flip(v, m2))
+    // SAFETY: the two vld1q_u32 loads read exactly 4 u32s from the local
+    // 4-element stack arrays above; everything else is register-only.
+    unsafe {
+        let m1 = vld1q_u32(m1.as_ptr());
+        let m2 = vld1q_u32(m2.as_ptr());
+        // h=1: swap adjacent lanes, negate odd lanes of the original
+        let v = vaddq_f32(vrev64q_f32(v), flip(v, m1));
+        // h=2: rotate halves, negate the upper half
+        vaddq_f32(vextq_f32::<2>(v, v), flip(v, m2))
+    }
 }
 
 /// In-place unnormalized-then-scaled FWHT over a power-of-2 slice with
@@ -447,35 +542,42 @@ unsafe fn fwht4_lanes(v: float32x4_t) -> float32x4_t {
 pub(super) unsafe fn fwht_pow2(x: &mut [f32], scale: f32) {
     let n = x.len();
     debug_assert!(n >= 8 && n.is_power_of_two());
-    let p = x.as_mut_ptr();
-    let mut i = 0;
-    while i < n {
-        let v = vld1q_f32(p.add(i));
-        vst1q_f32(p.add(i), fwht4_lanes(v));
-        i += 4;
-    }
-    let mut h = 4;
-    while h < n {
-        let mut base = 0;
-        while base < n {
-            let mut j = 0;
-            while j < h {
-                let a = vld1q_f32(p.add(base + j));
-                let b = vld1q_f32(p.add(base + h + j));
-                vst1q_f32(p.add(base + j), vaddq_f32(a, b));
-                vst1q_f32(p.add(base + h + j), vsubq_f32(a, b));
-                j += 4;
-            }
-            base += 2 * h;
-        }
-        h *= 2;
-    }
-    if scale != 1.0 {
-        let sv = vdupq_n_f32(scale);
+    // SAFETY: the caller guarantees n is a power of two >= 8
+    // (simd::fwht_pow2 checks before dispatching). All accesses are 4-lane
+    // loads/stores at offsets < n: the intra-register pass walks i in
+    // steps of 4; the butterfly stages use base + j and base + h + j with
+    // j < h, base + 2h <= n and h >= 4, so base + h + j + 4 <= base + 2h <= n.
+    unsafe {
+        let p = x.as_mut_ptr();
         let mut i = 0;
         while i < n {
-            vst1q_f32(p.add(i), vmulq_f32(vld1q_f32(p.add(i)), sv));
+            let v = vld1q_f32(p.add(i));
+            vst1q_f32(p.add(i), fwht4_lanes(v));
             i += 4;
+        }
+        let mut h = 4;
+        while h < n {
+            let mut base = 0;
+            while base < n {
+                let mut j = 0;
+                while j < h {
+                    let a = vld1q_f32(p.add(base + j));
+                    let b = vld1q_f32(p.add(base + h + j));
+                    vst1q_f32(p.add(base + j), vaddq_f32(a, b));
+                    vst1q_f32(p.add(base + h + j), vsubq_f32(a, b));
+                    j += 4;
+                }
+                base += 2 * h;
+            }
+            h *= 2;
+        }
+        if scale != 1.0 {
+            let sv = vdupq_n_f32(scale);
+            let mut i = 0;
+            while i < n {
+                vst1q_f32(p.add(i), vmulq_f32(vld1q_f32(p.add(i)), sv));
+                i += 4;
+            }
         }
     }
 }

@@ -70,10 +70,32 @@ pub fn row_minmax(x: &[f32]) -> (f32, f32) {
     (mn, mx)
 }
 
+/// `f32::round` (round half away from zero), written as the bounded,
+/// branch-explicit form the Kani harness proves equivalent
+/// (rust/verify/kernels.rs): truncate, then bump by ±1 when the *exact*
+/// fraction reaches 0.5.
+///
+/// Why the fraction is exact: for |x| < 1 it is x itself; for
+/// 1 ≤ |x| < 2^24 Sterbenz's lemma applies (`t ≤ |x| ≤ 2t` with
+/// `t = |x|.trunc()`), so `x - t` has no rounding error; for |x| ≥ 2^24
+/// every f32 is already an integer and the fraction is 0. NaN propagates
+/// (both comparisons are false), ±∞ and ±0 return themselves — exactly
+/// `f32::round`'s contract. This is the scalar twin of the vector
+/// `round_half_away` in `simd::avx2`.
+pub fn round_half_away(x: f32) -> f32 {
+    let t = x.trunc();
+    let frac = x - t;
+    if frac.abs() >= 0.5 {
+        t + 1.0f32.copysign(x)
+    } else {
+        t
+    }
+}
+
 /// `codes[i] = clamp(round(x[i]/s) - z, 0, levels) as u8`.
 pub fn emit_codes(x: &[f32], s: f32, z: f32, levels: f32, codes: &mut [u8]) {
     for (c, &v) in codes.iter_mut().zip(x.iter()) {
-        let q = ((v / s).round() - z).clamp(0.0, levels);
+        let q = (round_half_away(v / s) - z).clamp(0.0, levels);
         *c = q as u8;
     }
 }
@@ -81,7 +103,7 @@ pub fn emit_codes(x: &[f32], s: f32, z: f32, levels: f32, codes: &mut [u8]) {
 /// `x[i] = s * (clamp(round(x[i]/s) - z, 0, levels) + z)`.
 pub fn fake_quant_int(x: &mut [f32], s: f32, z: f32, levels: f32) {
     for v in x.iter_mut() {
-        let q = ((*v / s).round() - z).clamp(0.0, levels);
+        let q = (round_half_away(*v / s) - z).clamp(0.0, levels);
         *v = s * (q + z);
     }
 }
@@ -121,6 +143,27 @@ pub fn widen_reset_i16(acc16: &mut [i16], acc32: &mut [i32]) {
     for (a32, a16) in acc32.iter_mut().zip(acc16.iter_mut()) {
         *a32 += *a16 as i32;
         *a16 = 0;
+    }
+}
+
+/// Pack `n` i16 codes in [-8, 7] into a nibble row (offset-binary, +8;
+/// even index → low nibble) — the exact inverse of [`unpack_row4`], used
+/// by `QuantMat::pack_int` and proved round-trip-lossless for every code
+/// value in rust/verify/kernels.rs. An odd tail leaves the final high
+/// nibble zero, matching what [`unpack_row4`] ignores.
+pub fn pack_row4(codes: &[i16], n: usize, prow: &mut [u8]) {
+    debug_assert!(codes.len() >= n);
+    debug_assert!(prow.len() >= n.div_ceil(2));
+    for jj in 0..n / 2 {
+        let lo = (codes[2 * jj] + 8) as u8;
+        let hi = (codes[2 * jj + 1] + 8) as u8;
+        debug_assert!(lo < 16 && hi < 16, "code outside the int4 range");
+        prow[jj] = lo | (hi << 4);
+    }
+    if n % 2 == 1 {
+        let lo = (codes[n - 1] + 8) as u8;
+        debug_assert!(lo < 16, "code outside the int4 range");
+        prow[n / 2] = lo;
     }
 }
 

@@ -46,18 +46,34 @@ pub fn parallel_map<T: Send>(n: usize, workers: usize, f: impl Fn(usize) -> T + 
 // Persistent worker pool
 // ---------------------------------------------------------------------
 
-/// One submitted batch of indexed tasks. `f` is the caller's closure with
-/// its lifetime transmuted to `'static`; this is sound because the
-/// submitter blocks in [`WorkerPool::run`] until `done == total`, and
-/// workers only call it for indices they claimed before that point.
+/// One submitted batch of indexed tasks. `f` is a raw pointer to the
+/// caller's closure (no faked `'static` lifetime); the barrier in
+/// [`WorkerPool::run`] is what keeps every dereference inside the
+/// closure's real lifetime — see the SAFETY comments on the `Send`/`Sync`
+/// impls and at the dereference site in [`run_tasks`].
 struct Batch {
-    f: &'static (dyn Fn(usize) + Sync),
+    f: *const (dyn Fn(usize) + Sync),
     next: AtomicUsize,
     total: usize,
     panicked: AtomicBool,
     done: Mutex<usize>,
     done_cv: Condvar,
 }
+
+// SAFETY: `Batch` is shared across threads only through the `Arc` that
+// `WorkerPool::run` publishes in the slot. The raw `f` pointer is valid
+// for the whole sharing window: `run` borrows the closure from its caller
+// and does not return until `done == total`, and a worker only
+// dereferences `f` for an index it claimed *before* contributing the
+// increment that lets `done` reach `total` (the `done` mutex orders the
+// claim/deref before the submitter's wake-up). A worker that arrives after
+// the batch completed sees `next >= total` and never touches `f`. All
+// other fields are atomics or lock-protected.
+unsafe impl Send for Batch {}
+// SAFETY: see the `Send` impl above — the same barrier argument covers
+// shared (`&Batch`) access; `f` itself is `dyn Fn + Sync`, so calling it
+// concurrently from several workers is sound.
+unsafe impl Sync for Batch {}
 
 struct Slot {
     epoch: u64,
@@ -143,12 +159,12 @@ impl WorkerPool {
                 return;
             }
         };
-        // SAFETY: erase the closure lifetime to 'static. Sound because
-        // this frame outlives every call — we block on `done == total`
-        // below before returning, and no worker touches `f` afterwards.
-        let f_static: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
+        // Store the closure as a raw pointer (a safe cast — the unsafe
+        // dereference lives in `run_tasks`, guarded by the `done == total`
+        // barrier below: this frame cannot return, and so `f` cannot die,
+        // while any worker still holds an index to run).
         let batch = Arc::new(Batch {
-            f: f_static,
+            f: f as *const (dyn Fn(usize) + Sync),
             next: AtomicUsize::new(0),
             total,
             panicked: AtomicBool::new(false),
@@ -230,9 +246,12 @@ fn run_tasks(batch: &Batch) {
         if i >= batch.total {
             break;
         }
-        // the submitter blocks until `done == total`, so the transmuted
-        // closure is alive for every claimed index
-        let f = batch.f;
+        // SAFETY: `i < total` here, so the submitter is still blocked on
+        // the `done == total` barrier in `WorkerPool::run` — our matching
+        // `done` increment happens only after this call returns — which
+        // keeps the caller's frame (and the closure it borrows) alive for
+        // the whole dereference.
+        let f = unsafe { &*batch.f };
         let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i)));
         if r.is_err() {
             batch.panicked.store(true, Ordering::SeqCst);
@@ -258,7 +277,15 @@ pub fn global() -> &'static WorkerPool {
 /// disjointness.
 #[derive(Clone, Copy)]
 pub struct SendPtr<T>(pub *mut T);
+// SAFETY: SendPtr is a plain address; sending it to another thread moves
+// no data. The construction sites (mat.rs / qmat.rs row fan-out) promise
+// that concurrent tasks write through it only at disjoint offsets, and the
+// pool's completion barrier sequences all writes before the submitter
+// reads the buffer again.
 unsafe impl<T> Send for SendPtr<T> {}
+// SAFETY: `&SendPtr` only yields copies of the address (`get`); the
+// disjoint-offsets contract above is what makes the resulting concurrent
+// writes sound.
 unsafe impl<T> Sync for SendPtr<T> {}
 
 impl<T> SendPtr<T> {
@@ -551,6 +578,32 @@ mod tests {
         });
         assert_eq!(n.load(Ordering::Relaxed), 10);
         drop(pool); // joins; a hang here fails the test via timeout
+    }
+
+    #[test]
+    fn worker_pool_send_ptr_disjoint_writes() {
+        // Miri regression target for the Batch raw-pointer design and the
+        // SendPtr contract: concurrent tasks write disjoint rows of one
+        // buffer through a shared base pointer, the barrier in `run`
+        // sequences the writes before the submitter reads them back, and
+        // the borrowed closure state (`out`, `rows`) must never be
+        // touched after `run` returns. Any dangling `f` dereference or
+        // overlapping write is UB that `cargo miri test` flags here.
+        const ROWS: usize = 16;
+        const COLS: usize = 8;
+        let pool = WorkerPool::new(4);
+        let mut out = vec![0u32; ROWS * COLS];
+        let base = SendPtr(out.as_mut_ptr());
+        pool.run(ROWS, &|r| {
+            // SAFETY: task r exclusively owns rows r*COLS..(r+1)*COLS of
+            // `out`, which outlives `run` (the submitter blocks in `run`
+            // until every task finished).
+            let row = unsafe { std::slice::from_raw_parts_mut(base.get().add(r * COLS), COLS) };
+            for (c, v) in row.iter_mut().enumerate() {
+                *v = (r * COLS + c) as u32;
+            }
+        });
+        assert_eq!(out, (0..(ROWS * COLS) as u32).collect::<Vec<_>>());
     }
 
     #[test]

@@ -53,24 +53,34 @@ fn bump() {
     let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
 }
 
+// SAFETY: pure pass-through to the System allocator; the counter bump
+// cannot allocate (Cell in a thread-local, accessed via try_with).
 unsafe impl GlobalAlloc for CountingAlloc {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         bump();
-        System.alloc(layout)
+        // SAFETY: forwarded verbatim — the caller upholds GlobalAlloc's
+        // layout contract.
+        unsafe { System.alloc(layout) }
     }
 
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         bump();
-        System.alloc_zeroed(layout)
+        // SAFETY: forwarded verbatim — the caller upholds GlobalAlloc's
+        // layout contract.
+        unsafe { System.alloc_zeroed(layout) }
     }
 
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         bump();
-        System.realloc(ptr, layout, new_size)
+        // SAFETY: forwarded verbatim — ptr/layout come from this
+        // allocator's own alloc, per the caller's contract.
+        unsafe { System.realloc(ptr, layout, new_size) }
     }
 
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
+        // SAFETY: forwarded verbatim — ptr/layout come from this
+        // allocator's own alloc, per the caller's contract.
+        unsafe { System.dealloc(ptr, layout) }
     }
 }
 

@@ -1,0 +1,228 @@
+//! Proof harnesses + fuzz twins for the `.perq` artifact reader
+//! (ISSUE 9).
+//!
+//! Threat model: the artifact file is attacker-controllable bytes — every
+//! length, offset and CRC in it is hostile input. The reader's contract
+//! is *total rejection*: malformed input returns `Err`, never a panic,
+//! wraparound or out-of-bounds read.
+//!
+//! Under `cfg(kani)` (`cargo kani --tests`):
+//!
+//! * `parse_head` is total — returns without panicking for **every**
+//!   input slice up to 64 bytes (covers both the short-input and the
+//!   full fixed-head paths; the function only ever indexes the first 20
+//!   bytes, so 64 saturates its behaviors).
+//! * The `extent` helpers are total for **all** `usize` inputs, and
+//!   `footer_start`'s post-condition holds whenever it accepts: the
+//!   footer lies inside the file and past the header
+//!   (`min_file_len(hlen) ≤ n` and `fstart + flen ≤ n`).
+//!
+//! Under `cfg(not(kani))` (`cargo test`): a deterministic byte-mutation /
+//! truncation / splice fuzzer, ≥ 10k cases seeded from a real
+//! `ArtifactWriter`-produced `.perq`, driving `ArtifactReader::from_bytes`
+//! plus the file-based `read_header` / `read_section_table` paths. The
+//! fuzzer asserts "no panic" by construction (propcheck's catch_unwind
+//! reports the failing seed for replay).
+
+#[cfg(kani)]
+mod proofs {
+    use perq::deploy::artifact::{extent, parse_head};
+
+    /// (e) `parse_head` never panics or reads out of bounds, for every
+    /// input slice of every length ≤ 64. The `Result` content is not
+    /// constrained here — only totality.
+    #[kani::proof]
+    fn parse_head_is_total() {
+        const CAP: usize = 64;
+        let buf: [u8; CAP] = kani::any();
+        let n: usize = kani::any();
+        kani::assume(n <= CAP);
+        let _ = parse_head(&buf[..n]);
+    }
+
+    /// Accepted heads are faithful: magic matched, version in range, and
+    /// the returned header length is exactly the little-endian u32 at
+    /// offset 12.
+    #[kani::proof]
+    fn parse_head_accepts_only_valid_heads() {
+        const CAP: usize = 24;
+        let buf: [u8; CAP] = kani::any();
+        if let Ok((version, hlen)) = parse_head(&buf) {
+            assert_eq!(&buf[0..8], b"PERQARTF");
+            assert!(version >= 1);
+            let want = u32::from_le_bytes([buf[12], buf[13], buf[14], buf[15]]) as usize;
+            assert_eq!(hlen, want);
+        }
+    }
+
+    /// The extent helpers are total (no panic, no wraparound) for every
+    /// `usize` input, and `footer_start` only accepts geometries where
+    /// the footer really fits: past the header, inside the file.
+    #[kani::proof]
+    fn extent_helpers_are_total_and_sound() {
+        let n: usize = kani::any();
+        let hlen: usize = kani::any();
+        let flen: usize = kani::any();
+        let off: usize = kani::any();
+        let len: usize = kani::any();
+
+        if let Some(min) = extent::min_file_len(hlen) {
+            assert!(min >= hlen, "framing only adds bytes");
+        }
+        if let Some(end) = extent::section_end(off, len) {
+            assert!(end >= off && end - off == len);
+        }
+        if let Some(fstart) = extent::footer_start(n, hlen, flen) {
+            // the file is big enough for head + header + trailer…
+            assert!(extent::min_file_len(hlen).is_some_and(|min| min <= n));
+            // …and the footer slice [fstart, fstart + flen) is in bounds
+            let fend = fstart.checked_add(flen);
+            assert!(fend.is_some_and(|e| e <= n));
+        }
+    }
+}
+
+#[cfg(not(kani))]
+mod fuzz {
+    use perq::data::rng::Rng;
+    use perq::deploy::artifact::{
+        parse_head, read_header, read_section_table, ArtifactReader, ArtifactWriter,
+    };
+    use perq::util::json;
+    use perq::util::propcheck::{check, Gen};
+    use std::path::PathBuf;
+
+    /// A real artifact, built by the writer the deploy pipeline uses:
+    /// three sections (f32 / u32 / packed-int payloads) behind a JSON
+    /// header — the same shape `DeployedModel` emits, small enough that
+    /// 10k mutated copies stay fast.
+    fn seed_artifact() -> Vec<u8> {
+        let header = json::parse(r#"{"model": "verify", "d": 6}"#).unwrap();
+        let mut buf = Vec::new();
+        {
+            let mut w = ArtifactWriter::new(&mut buf, &header).unwrap();
+            w.begin_section("a", "f32", &[2, 3], 0).unwrap();
+            w.write_f32s(&[1.0, -2.5, 3.0, 0.0, 7.0, -0.125]).unwrap();
+            w.end_section().unwrap();
+            w.begin_section("b", "u32", &[3], 0).unwrap();
+            w.write_u32s(&[5, 0, 9]).unwrap();
+            w.end_section().unwrap();
+            w.begin_section("c", "qmat", &[4, 2], 4).unwrap();
+            w.write_bytes(&[0xAB, 0xCD, 0x01]).unwrap();
+            w.pad_section(4).unwrap();
+            w.write_i32s(&[-7, 7]).unwrap();
+            w.end_section().unwrap();
+            w.finish().unwrap();
+        }
+        buf
+    }
+
+    /// One mutation of the seed: flip bytes, truncate, extend with
+    /// garbage, splice a random window, or zero a range — the classic
+    /// structure-aware-enough menu for a framed binary format.
+    fn mutate(g: &mut Gen, seed: &[u8]) -> Vec<u8> {
+        let mut data = seed.to_vec();
+        match g.usize_in(0, 5) {
+            // byte flips (1..=8 of them, anywhere: head, payload, CRCs)
+            0 => {
+                for _ in 0..g.usize_in(1, 8) {
+                    let at = g.usize_in(0, data.len() - 1);
+                    data[at] ^= 1 << g.usize_in(0, 7);
+                }
+            }
+            // truncation at an arbitrary point (including 0 and len-1)
+            1 => {
+                let keep = g.usize_in(0, data.len() - 1);
+                data.truncate(keep);
+            }
+            // extension with random garbage (breaks trailer discovery)
+            2 => {
+                for _ in 0..g.usize_in(1, 64) {
+                    data.push(g.usize_in(0, 255) as u8);
+                }
+            }
+            // splice: overwrite a window with random bytes
+            3 => {
+                let at = g.usize_in(0, data.len() - 1);
+                let end = (at + g.usize_in(1, 32)).min(data.len());
+                for b in &mut data[at..end] {
+                    *b = g.usize_in(0, 255) as u8;
+                }
+            }
+            // zero a window (fakes truncated-then-padded files)
+            4 => {
+                let at = g.usize_in(0, data.len() - 1);
+                let end = (at + g.usize_in(1, 32)).min(data.len());
+                for b in &mut data[at..end] {
+                    *b = 0;
+                }
+            }
+            // forge the declared lengths: header-len or footer-len u32s
+            _ => {
+                let v = (g.usize_in(0, u32::MAX as usize) as u32).to_le_bytes();
+                if g.bool() {
+                    data[12..16].copy_from_slice(&v);
+                } else {
+                    let n = data.len();
+                    data[n - 16..n - 12].copy_from_slice(&v);
+                }
+            }
+        }
+        data
+    }
+
+    /// ≥ 10k mutated / truncated copies of a real artifact through
+    /// `from_bytes`: every outcome must be `Ok` or `Err`, never a panic
+    /// (propcheck's catch_unwind turns a panic into a seeded failure).
+    #[test]
+    fn from_bytes_never_panics_on_mutated_artifacts() {
+        let seed = seed_artifact();
+        check(10_000, |g| {
+            let data = mutate(g, &seed);
+            let _ = ArtifactReader::from_bytes(data);
+        });
+    }
+
+    /// The file-based cheap paths (`read_header`, `read_section_table`)
+    /// reject the same mutated inputs without panicking. Fewer cases —
+    /// each touches the filesystem — but the parse logic under test is
+    /// shared with `from_bytes`, which the 10k-case fuzzer above covers.
+    #[test]
+    fn file_readers_never_panic_on_mutated_artifacts() {
+        let seed = seed_artifact();
+        let path: PathBuf = std::env::temp_dir()
+            .join(format!("perq-verify-artifact-{}.perq", std::process::id()));
+        check(500, |g| {
+            let data = mutate(g, &seed);
+            std::fs::write(&path, &data).unwrap();
+            let _ = read_header(&path);
+            let _ = read_section_table(&path);
+        });
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// Twin of `parse_head_is_total`: 10k random buffers of every length
+    /// 0..=64, plus near-miss heads (right magic, hostile tail).
+    #[test]
+    fn parse_head_never_panics_on_arbitrary_heads() {
+        let mut rng = Rng::new(0xA27F_0001);
+        for i in 0..10_000u64 {
+            let n = (i % 65) as usize;
+            let mut buf: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+            if i % 3 == 0 && n >= 8 {
+                buf[..8].copy_from_slice(b"PERQARTF");
+            }
+            let _ = parse_head(&buf);
+        }
+    }
+
+    /// The unmutated seed still round-trips — guards the fuzzer itself
+    /// against a broken fixture silently turning every case into an
+    /// early `Err`.
+    #[test]
+    fn seed_artifact_is_valid() {
+        let r = ArtifactReader::from_bytes(seed_artifact()).unwrap();
+        assert_eq!(r.sections().len(), 3);
+        assert_eq!(r.header.get("model").and_then(|v| v.as_str()), Some("verify"));
+    }
+}

@@ -1,0 +1,345 @@
+//! Proof harnesses + property-test twins for the scalar kernel cores
+//! (ISSUE 9).
+//!
+//! Every harness here exists twice:
+//!
+//! * under `cfg(kani)` as a bounded model-checking proof (`cargo kani
+//!   --tests` discharges it with CBMC — *all* values in the stated
+//!   bounds, not samples), and
+//! * under `cfg(not(kani))` as a plain `#[test]` twin that `cargo test`
+//!   runs on every CI push: exhaustive where the domain is small enough,
+//!   otherwise ≥ 10k deterministic seeded cases.
+//!
+//! What is proved (bounds chosen so CBMC terminates in minutes):
+//!
+//! * **INT4×INT4 accumulation never overflows.** Activation codes are
+//!   offset-binary in [0, 15] and weight codes two's-complement in
+//!   [-8, 7], so one product lies in [-120, 105] and a k-chunk of
+//!   length ≤ 256 keeps the i16 accumulator in [-30720, 26880] ⊂ i16.
+//!   Proved *inductively*: the step invariant is checked on the real
+//!   `axpy_i16` for a symbolic mid-chunk state, which covers every chunk
+//!   length ≤ 256 without unwinding 256 symbolic multiplies. The same
+//!   style covers `widen_reset_i16` for ≤ 65536 chunks (k ≤ 16.7M).
+//! * **Nibble packing round-trips.** `unpack_row4 ∘ pack_row4` is the
+//!   identity for every code vector in [-8, 7]^n, both parities of n.
+//! * **`round_half_away` ≡ `f32::round`** bit-for-bit for *every* f32,
+//!   including ±0, ±∞, NaN and the 2^23 integer boundary.
+//! * **FWHT butterfly invariants.** On small-integer inputs (exact in
+//!   f32) the unnormalized transform satisfies `y[0] = Σx`, Parseval
+//!   (`Σy² = n·Σx²`) and the involution `H(Hx) = n·x`. The Kani proof
+//!   uses n = 4 — below the SIMD cutover, so the proof target is the
+//!   pure fixed-size butterfly with no runtime dispatch inside the
+//!   model; the `#[test]` twin sweeps b ∈ {2,…,32} through the real
+//!   dispatched `fwht`/`block_fwht_normalized` entry points.
+
+/// One INT4×INT4 product: codes [0,15] × [-8,7] ⊆ [-120, 105].
+const PROD_MIN: i32 = -120;
+const PROD_MAX: i32 = 105;
+
+// ---------------------------------------------------------------------
+// Kani proofs
+// ---------------------------------------------------------------------
+
+#[cfg(kani)]
+mod proofs {
+    use super::{PROD_MAX, PROD_MIN};
+    use perq::tensor::simd::scalar;
+
+    /// (a) Inductive step: if the i16 accumulator holds a partial sum of
+    /// j ≤ 255 in-range products, adding one more via the *real*
+    /// `axpy_i16` neither overflows (Kani checks the `+=`/`*` for
+    /// wraparound) nor leaves the j+1 envelope. By induction from
+    /// acc = 0 this proves no overflow for every k-chunk length ≤ 256.
+    #[kani::proof]
+    fn axpy_i16_chunk_invariant_holds() {
+        const LANES: usize = 2;
+        let j: i32 = kani::any();
+        kani::assume((0..256).contains(&j));
+        let mut acc = [0i16; LANES];
+        let mut w = [0i16; LANES];
+        for lane in 0..LANES {
+            let a: i32 = kani::any();
+            kani::assume(a >= PROD_MIN * j && a <= PROD_MAX * j);
+            acc[lane] = a as i16;
+            let wv: i16 = kani::any();
+            kani::assume((-8..=7).contains(&wv));
+            w[lane] = wv;
+        }
+        let u: i16 = kani::any();
+        kani::assume((0..=15).contains(&u));
+        scalar::axpy_i16(u, &w, &mut acc);
+        for lane in 0..LANES {
+            let a = acc[lane] as i32;
+            assert!(a >= PROD_MIN * (j + 1) && a <= PROD_MAX * (j + 1));
+        }
+    }
+
+    /// (a, i32 path) Widening a full chunk into the i32 accumulator is
+    /// overflow-free for ≤ 65536 chunks (30720 · 65537 < 2^31), i.e.
+    /// k ≤ 16.7M — far beyond any model dimension.
+    #[kani::proof]
+    fn widen_reset_i16_accumulates_without_overflow() {
+        let c: i64 = kani::any();
+        kani::assume((0..=65536).contains(&c));
+        let a32: i64 = kani::any();
+        kani::assume(a32 >= 256 * PROD_MIN as i64 * c && a32 <= 256 * PROD_MAX as i64 * c);
+        let a16: i32 = kani::any();
+        kani::assume(a16 >= 256 * PROD_MIN && a16 <= 256 * PROD_MAX);
+        let mut acc32 = [a32 as i32];
+        let mut acc16 = [a16 as i16];
+        scalar::widen_reset_i16(&mut acc16, &mut acc32);
+        assert_eq!(acc16[0], 0, "i16 accumulator must reset");
+        let got = acc32[0] as i64;
+        assert!(got >= 256 * PROD_MIN as i64 * (c + 1));
+        assert!(got <= 256 * PROD_MAX as i64 * (c + 1));
+    }
+
+    /// (b) `unpack_row4 ∘ pack_row4` is the identity for every code
+    /// vector in [-8, 7]^n and both parities of n (odd tails exercise
+    /// the half-filled final byte).
+    #[kani::proof]
+    #[kani::unwind(8)]
+    fn pack_unpack_row4_round_trips() {
+        const N_MAX: usize = 5;
+        let n: usize = kani::any();
+        kani::assume(n >= 1 && n <= N_MAX);
+        let mut codes = [0i16; N_MAX];
+        for c in codes.iter_mut() {
+            let v: i16 = kani::any();
+            kani::assume((-8..=7).contains(&v));
+            *c = v;
+        }
+        let mut prow = [0u8; N_MAX.div_ceil(2)];
+        scalar::pack_row4(&codes[..n], n, &mut prow);
+        let mut back = [0i16; N_MAX];
+        scalar::unpack_row4(&prow, n, &mut back);
+        for j in 0..n {
+            assert_eq!(back[j], codes[j]);
+        }
+    }
+
+    /// (c) `round_half_away` is bit-identical to `f32::round` for every
+    /// f32 — all 2^32 bit patterns, including ±0 (sign preserved), ±∞
+    /// and every NaN payload.
+    #[kani::proof]
+    fn round_half_away_matches_f32_round() {
+        let x: f32 = kani::any();
+        let got = scalar::round_half_away(x);
+        let want = x.round();
+        assert!(
+            got.to_bits() == want.to_bits() || (got.is_nan() && want.is_nan()),
+            "round_half_away must equal f32::round bit-for-bit"
+        );
+    }
+
+    /// (d) FWHT butterfly invariants on the 4-point kernel with exact
+    /// small-integer inputs: DC term is the plain sum, Parseval holds
+    /// exactly, and applying H twice scales by n. n = 4 keeps the model
+    /// below the SIMD dispatch cutover (≥ 8), so the proof covers the
+    /// pure butterfly; dispatch-level bit-equality is a separate
+    /// `#[test]` in hadamard::fwht.
+    #[kani::proof]
+    #[kani::unwind(8)]
+    fn fwht4_butterfly_invariants() {
+        const N: usize = 4;
+        let mut x = [0.0f32; N];
+        let mut sum = 0i32;
+        let mut sumsq = 0i32;
+        for v in x.iter_mut() {
+            let c: i8 = kani::any();
+            kani::assume((-8..=8).contains(&c));
+            *v = c as f32;
+            sum += c as i32;
+            sumsq += (c as i32) * (c as i32);
+        }
+        let x0 = x;
+        perq::hadamard::fwht::fwht(&mut x);
+        assert_eq!(x[0], sum as f32, "DC term is the sum");
+        let parseval: f32 = x.iter().map(|v| v * v).sum();
+        assert_eq!(parseval, (N as i32 * sumsq) as f32, "Parseval, exact");
+        perq::hadamard::fwht::fwht(&mut x);
+        for (a, b) in x.iter().zip(x0.iter()) {
+            assert_eq!(*a, N as f32 * b, "H(Hx) = n·x");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Property-test twins (plain `cargo test`)
+// ---------------------------------------------------------------------
+
+#[cfg(not(kani))]
+mod props {
+    use super::{PROD_MAX, PROD_MIN};
+    use perq::data::rng::Rng;
+    use perq::hadamard::fwht::{block_fwht_normalized, fwht};
+    use perq::tensor::simd::scalar;
+    use perq::util::propcheck::check;
+
+    /// Twin of `axpy_i16_chunk_invariant_holds`, run end-to-end: 10k
+    /// random full-length chunks (k = 256) of in-range codes, i16 result
+    /// checked against an i32 reference accumulation.
+    #[test]
+    fn axpy_i16_chunk_never_overflows() {
+        check(10_000, |g| {
+            let k = g.usize_in(1, 256);
+            let lanes = g.usize_in(1, 8);
+            let mut acc = vec![0i16; lanes];
+            let mut reference = vec![0i32; lanes];
+            for _ in 0..k {
+                let u = g.usize_in(0, 15) as i16;
+                let w: Vec<i16> =
+                    (0..lanes).map(|_| g.usize_in(0, 15) as i16 - 8).collect();
+                scalar::axpy_i16(u, &w, &mut acc);
+                for (r, &wv) in reference.iter_mut().zip(w.iter()) {
+                    *r += u as i32 * wv as i32;
+                }
+            }
+            for (a, r) in acc.iter().zip(reference.iter()) {
+                assert_eq!(*a as i32, *r, "i16 accumulation diverged (overflow)");
+                assert!(*r >= PROD_MIN * k as i32 && *r <= PROD_MAX * k as i32);
+            }
+        });
+    }
+
+    /// The analytic worst case really is in range: 256 products of
+    /// 15 × (-8) and 15 × 7 land exactly on the proof envelope.
+    #[test]
+    fn axpy_i16_worst_case_is_envelope_exact() {
+        let mut lo = [0i16; 1];
+        let mut hi = [0i16; 1];
+        for _ in 0..256 {
+            scalar::axpy_i16(15, &[-8], &mut lo);
+            scalar::axpy_i16(15, &[7], &mut hi);
+        }
+        assert_eq!(lo[0] as i32, 256 * PROD_MIN);
+        assert_eq!(hi[0] as i32, 256 * PROD_MAX);
+        // and widening both extremes into a fresh i32 accumulator is exact
+        let mut acc32 = [0i32; 2];
+        let mut acc16 = [lo[0], hi[0]];
+        scalar::widen_reset_i16(&mut acc16, &mut acc32);
+        assert_eq!(acc16, [0, 0]);
+        assert_eq!(acc32, [256 * PROD_MIN, 256 * PROD_MAX]);
+    }
+
+    /// Twin of `pack_unpack_row4_round_trips`: exhaustive over every
+    /// (lo, hi) nibble pair, then 10k random rows of mixed length/parity.
+    #[test]
+    fn pack_unpack_row4_round_trips_exhaustive_pairs() {
+        for lo in -8i16..=7 {
+            for hi in -8i16..=7 {
+                let codes = [lo, hi];
+                let mut prow = [0u8; 1];
+                scalar::pack_row4(&codes, 2, &mut prow);
+                let mut back = [0i16; 2];
+                scalar::unpack_row4(&prow, 2, &mut back);
+                assert_eq!(back, codes);
+                // odd tail: the same low code alone
+                let mut prow1 = [0u8; 1];
+                scalar::pack_row4(&codes[..1], 1, &mut prow1);
+                let mut back1 = [0i16; 1];
+                scalar::unpack_row4(&prow1, 1, &mut back1);
+                assert_eq!(back1[0], lo);
+                assert!(prow1[0] < 16, "odd tail leaves the high nibble zero");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_unpack_row4_round_trips_random_rows() {
+        check(10_000, |g| {
+            let n = g.usize_in(1, 64);
+            let codes: Vec<i16> = (0..n).map(|_| g.usize_in(0, 15) as i16 - 8).collect();
+            let mut prow = vec![0u8; n.div_ceil(2)];
+            scalar::pack_row4(&codes, n, &mut prow);
+            let mut back = vec![0i16; n];
+            scalar::unpack_row4(&prow, n, &mut back);
+            assert_eq!(back, codes);
+        });
+    }
+
+    /// Twin of `round_half_away_matches_f32_round`: the edge cases the
+    /// Kani proof covers symbolically, then 100k uniformly random bit
+    /// patterns (NaNs, subnormals and infinities included by
+    /// construction) checked bit-for-bit.
+    #[test]
+    fn round_half_away_matches_f32_round() {
+        let edges = [
+            0.0f32,
+            -0.0,
+            0.5,
+            -0.5,
+            0.49999997,
+            1.5,
+            -1.5,
+            2.5,
+            -2.5,
+            8388607.5, // largest x.5 below 2^23
+            -8388607.5,
+            8388608.0, // 2^23: every f32 ≥ this is an integer
+            16777216.0,
+            f32::MIN_POSITIVE,
+            f32::MAX,
+            f32::MIN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+        ];
+        let mut rng = Rng::new(0x5EED_F32);
+        let randoms = (0..100_000).map(|_| f32::from_bits(rng.next_u64() as u32));
+        for x in edges.into_iter().chain(randoms) {
+            let got = scalar::round_half_away(x);
+            let want = x.round();
+            assert!(
+                got.to_bits() == want.to_bits() || (got.is_nan() && want.is_nan()),
+                "mismatch at {x:?} (bits {:#010x}): got {got:?}, want {want:?}",
+                x.to_bits()
+            );
+        }
+    }
+
+    /// Twin of `fwht4_butterfly_invariants`, swept over every block size
+    /// the rotation pipeline uses (b ∈ {2,…,32}) through the *real*
+    /// dispatched entry points, with exact small-integer inputs so the
+    /// invariants hold with `==`, not a tolerance.
+    #[test]
+    fn fwht_invariants_exact_for_all_pow2_blocks() {
+        check(2_500, |g| {
+            for b in [2usize, 4, 8, 16, 32] {
+                let x0: Vec<f32> =
+                    (0..b).map(|_| (g.usize_in(0, 16) as i32 - 8) as f32).collect();
+                let sum: f32 = x0.iter().sum();
+                let sumsq: f32 = x0.iter().map(|v| v * v).sum();
+                let mut x = x0.clone();
+                fwht(&mut x);
+                assert_eq!(x[0], sum, "DC term, b={b}");
+                let parseval: f32 = x.iter().map(|v| v * v).sum();
+                assert_eq!(parseval, b as f32 * sumsq, "Parseval, b={b}");
+                fwht(&mut x);
+                for (a, v) in x.iter().zip(x0.iter()) {
+                    assert_eq!(*a, b as f32 * v, "involution, b={b}");
+                }
+            }
+        });
+    }
+
+    /// The normalized block transform preserves row L2 norm within float
+    /// tolerance for every block size, including across the SIMD cutover.
+    #[test]
+    fn block_fwht_preserves_l2() {
+        check(2_500, |g| {
+            for b in [2usize, 4, 8, 16, 32] {
+                let d = b * g.usize_in(1, 4);
+                let x0 = g.vec_normal(d, 1.0);
+                let n0: f32 = x0.iter().map(|v| v * v).sum();
+                let mut x = x0;
+                block_fwht_normalized(&mut x, b);
+                let n1: f32 = x.iter().map(|v| v * v).sum();
+                assert!(
+                    (n0 - n1).abs() <= 1e-4 * n0.max(1.0),
+                    "L2 drift at b={b}: {n0} -> {n1}"
+                );
+            }
+        });
+    }
+}
