@@ -86,6 +86,14 @@ fn main() -> anyhow::Result<()> {
         println!("\nSKIP decode bench: {e:#}");
     }
 
+    // paged KV cache (ISSUE 10): page-table indirection overhead on a
+    // uniform stream, prefix-sharing footprint, and preemption under an
+    // oversubscribed page pool; appends BENCH_decode.json rows that the
+    // CI prefix-heavy smoke leg validates.
+    if let Err(e) = bench_paged_kv() {
+        println!("\nSKIP paged-kv bench: {e:#}");
+    }
+
     // SIMD kernel layer: forced-scalar vs runtime-dispatched, per kernel;
     // appends BENCH_simd.json (ISSUE 3 acceptance: INT4 qgemm ≥ 2×).
     // Setup failures skip (bench convention), but a PERQ_SIMD_GATE
@@ -470,6 +478,226 @@ fn bench_decode() -> anyhow::Result<()> {
                 println!("  (could not write {traj:?}: {e})");
             }
         }
+    }
+    println!("  trajectory: {}", traj.display());
+    Ok(())
+}
+
+/// Paged-KV benchmarks (ISSUE 10), three measurements on one tiny
+/// serving-shaped model:
+///
+/// 1. **uniform** — the same steady decode stream through a dense and a
+///    paged session (dense-equivalent pool, so the only difference is the
+///    page-table indirection). Acceptance: paged within 10% of dense.
+/// 2. **prefix footprint** — 16 prompts sharing one 20-token system
+///    prompt through the radix trie: live KV bytes vs a dense cache at
+///    equal batch. Acceptance: ≥ 2× reduction.
+/// 3. **oversubscribed serving** — the same prefix-heavy stream through
+///    the scheduler with a page pool ~4× smaller than peak demand, so
+///    decode MUST preempt; every request still completes and the
+///    completion accounting balances.
+///
+/// Appends `paged_uniform` and `prefix_heavy` rows to BENCH_decode.json —
+/// the CI smoke leg validates the `prefix_heavy` fields.
+fn bench_paged_kv() -> anyhow::Result<()> {
+    use perq::backend::greedy_argmax;
+    use perq::backend::ForwardGraph;
+    use perq::coordinator::server::{BackendFactory, InferenceServer, ServeOptions};
+    use perq::model::bundle::synthetic_weights;
+    use perq::model::config::ModelConfig;
+    use perq::tensor::{KvMode, PagedConfig};
+    use perq::util::json;
+
+    let root = match RepoContext::discover() {
+        Ok(c) => c.root,
+        Err(_) => std::env::current_dir()?,
+    };
+    let traj = root.join("BENCH_decode.json");
+
+    // serving-shaped and small: 4 decode slots, 32-position window
+    let j = json::parse(
+        r#"{"config": {"name": "paged", "n_layers": 2, "d_model": 32,
+            "n_heads": 2, "d_ffn": 96, "vocab": 16, "seq_len": 32,
+            "batch": 4, "block_sizes": [1, 16]}}"#,
+    )?;
+    let cfg = ModelConfig::from_meta(&j)?;
+    let mut ws = synthetic_weights(&cfg, 0x9A6E);
+    for site in cfg.linear_sites() {
+        let w = ws.get(&site.name).clone();
+        let codec = WeightCodec::fit(Format::Int4, &w);
+        let q = codec.quantize_mat(&w);
+        let packed = QuantMat::from_codec(&q, &codec)
+            .ok_or_else(|| anyhow::anyhow!("int codec must pack"))?;
+        ws.set(&site.name, q);
+        ws.set_packed(&site.name, packed);
+    }
+    let graph = ForwardGraph::Merged { r3_block: 16, format: Format::Int4 };
+    let (b, t, v) = (cfg.batch, cfg.seq_len, cfg.vocab);
+    let page = 4usize;
+    println!("\n=== paged KV cache (batch {b}, seq_len {t}, page {page}) ===");
+
+    // -- 1. uniform stream: page-table indirection overhead --------------
+    let run_uniform = |be: &mut NativeBackend| -> anyhow::Result<f64> {
+        let plen = 4usize;
+        let sid = be.begin_with_mode(b, KvMode::Int8)?;
+        let prompts: Vec<i32> = (0..b * plen).map(|i| (i % v) as i32).collect();
+        let logits = be.prefill_slots(sid, &(0..b).collect::<Vec<_>>(), &prompts)?;
+        let mut last: Vec<i32> = (0..b)
+            .map(|s| greedy_argmax(&logits[((s + 1) * plen - 1) * v..(s + 1) * plen * v]))
+            .collect();
+        let mut out = Vec::new();
+        let warm = 3usize;
+        let steps = t - plen - warm - 1;
+        for _ in 0..warm {
+            be.decode_step_into(sid, &last, &mut out)?;
+            for s in 0..b {
+                last[s] = greedy_argmax(&out[s * v..(s + 1) * v]);
+            }
+        }
+        let t0 = std::time::Instant::now();
+        for _ in 0..steps {
+            be.decode_step_into(sid, &last, &mut out)?;
+            for s in 0..b {
+                last[s] = greedy_argmax(&out[s * v..(s + 1) * v]);
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        be.end(sid)?;
+        Ok((b * steps) as f64 / wall.max(1e-9))
+    };
+    let mut dense = NativeBackend::new(cfg.clone(), ws.clone(), graph.clone())?;
+    let mut paged = NativeBackend::new(cfg.clone(), ws.clone(), graph.clone())?;
+    paged.set_kv_paging(PagedConfig { page, pages: 0 });
+    let _ = run_uniform(&mut dense)?; // warm the arenas + worker pools
+    let dense_tok_s = run_uniform(&mut dense)?;
+    let _ = run_uniform(&mut paged)?;
+    let paged_tok_s = run_uniform(&mut paged)?;
+    let ratio = paged_tok_s / dense_tok_s.max(1e-9);
+    println!(
+        "  uniform decode: dense {dense_tok_s:.0} tok/s  paged {paged_tok_s:.0} tok/s \
+         ({ratio:.2}x of dense, target ≥ 0.90x)"
+    );
+    let row = TrajectoryRow::new("decode")
+        .str_field("format", "int4")
+        .str_field("mode", "paged_uniform")
+        .num_field("page", page as f64)
+        .num_field("dense_tok_per_s", dense_tok_s)
+        .num_field("paged_tok_per_s", paged_tok_s)
+        .num_field("ratio", ratio);
+    if let Err(e) = row.append_to(&traj) {
+        println!("  (could not write {traj:?}: {e})");
+    }
+
+    // -- 2. prefix-sharing footprint -------------------------------------
+    // 16 prompts = one shared 20-token system prompt + 2 unique tokens;
+    // the trie stores the system prompt's pages once and every slot's
+    // page table points at them
+    let n_req = 16usize;
+    let sys_len = 20usize;
+    let sys: Vec<i32> = (0..sys_len).map(|i| ((i * 5 + 1) % v) as i32).collect();
+    let prompt_of = |i: usize| -> Vec<i32> {
+        let mut p = sys.clone();
+        p.push((i % v) as i32);
+        p.push(((i * 3 + 1) % v) as i32);
+        p
+    };
+    let mut be = NativeBackend::new(cfg.clone(), ws.clone(), graph.clone())?;
+    be.set_kv_paging(PagedConfig { page, pages: 0 });
+    let sid = be.begin_with_mode(n_req, KvMode::Int8)?;
+    let pool = n_req * ((t + page - 1) / page); // dense-equivalent pool
+    let (mut hit, mut prompt_tokens) = (0usize, 0usize);
+    for slot in 0..n_req {
+        let p = prompt_of(slot);
+        let (_, matched) = be.prefill_prefixed(sid, slot, &p)?;
+        hit += matched;
+        prompt_tokens += p.len();
+    }
+    // two decode steps so every slot also carries private generated rows
+    let mut out = Vec::new();
+    let toks: Vec<i32> = (0..n_req).map(|i| (i % v) as i32).collect();
+    be.decode_step_into(sid, &toks, &mut out)?;
+    be.decode_step_into(sid, &toks, &mut out)?;
+    let free = be.kv_free_pages(sid).expect("paged session reports its free list");
+    let pages_in_use = pool - free;
+    be.end(sid)?;
+    let prefix_hit_rate = hit as f64 / prompt_tokens as f64;
+    // live KV bytes at equal batch (int8 rows: d code bytes + f32
+    // scale/zero per row, ×2 for K and V, per layer)
+    let bytes_per_pos = 2 * cfg.n_layers * (cfg.d_model + 8);
+    let live_len = sys_len + 2 + 2; // prompt + two generated, per request
+    let kv_bytes_dense = (n_req * live_len * bytes_per_pos) as f64;
+    let kv_bytes_paged = (pages_in_use * page * bytes_per_pos) as f64;
+    let reduction = kv_bytes_dense / kv_bytes_paged.max(1.0);
+
+    // -- 3. oversubscribed serving: preempt, resume, still complete ------
+    // peak demand is b slots × ceil(26/page) = 28 pages; an 8-page pool
+    // (~3.5× oversubscribed) forces decode-time preemption while one
+    // request (7 pages) still fits — the liveness floor
+    let max_new = 4usize;
+    let pages_per_req = (sys_len + 2 + max_new + page - 1) / page;
+    let pool_pages = 8usize;
+    let (cfg2, ws2, graph2) = (cfg.clone(), ws.clone(), graph.clone());
+    let factory: BackendFactory = Box::new(move || {
+        let mut be = NativeBackend::new(cfg2.clone(), ws2.clone(), graph2.clone())?;
+        be.set_kv_paging(PagedConfig { page: 4, pages: 8 });
+        Ok(Box::new(be) as Box<dyn ExecBackend>)
+    });
+    let opts = ServeOptions::new(std::time::Duration::from_millis(1), 1);
+    let server = InferenceServer::start_backend(factory, &cfg, opts)?;
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..n_req)
+        .map(|i| server.submit_generate(prompt_of(i), max_new))
+        .collect::<anyhow::Result<_>>()?;
+    for rx in rxs {
+        rx.recv()?
+            .map_err(|e| anyhow::anyhow!("prefix-heavy request failed: {e}"))?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = server.snapshot();
+    server.shutdown();
+    anyhow::ensure!(
+        snap.submitted == snap.served + snap.rejected + snap.deadline_exceeded + snap.failed,
+        "completion contract broke under preemption: {} submitted vs {} + {} + {} + {}",
+        snap.submitted,
+        snap.served,
+        snap.rejected,
+        snap.deadline_exceeded,
+        snap.failed,
+    );
+    println!(
+        "  prefix-heavy ({n_req} reqs, shared {sys_len}-token system prompt): hit rate \
+         {prefix_hit_rate:.2}, kv {:.1} KiB vs dense {:.1} KiB ({reduction:.2}x smaller, \
+         target ≥ 2x)",
+        kv_bytes_paged / 1024.0,
+        kv_bytes_dense / 1024.0,
+    );
+    println!(
+        "  oversubscribed pool ({pool_pages} pages vs {} demanded): {} served, \
+         {} preemption(s), {:.2}s wall",
+        b * pages_per_req,
+        snap.served,
+        snap.preemptions,
+        wall,
+    );
+    let row = TrajectoryRow::new("decode")
+        .str_field("format", "int4")
+        .str_field("mode", "prefix_heavy")
+        .num_field("requests", n_req as f64)
+        .num_field("page", page as f64)
+        .num_field("pool_pages", pool_pages as f64)
+        .num_field("prefix_hit_rate", prefix_hit_rate)
+        .num_field("kv_bytes_paged", kv_bytes_paged)
+        .num_field("kv_bytes_dense", kv_bytes_dense)
+        .num_field("kv_reduction", reduction)
+        .num_field("preemptions", snap.preemptions as f64)
+        .num_field("submitted", snap.submitted as f64)
+        .num_field("served", snap.served as f64)
+        .num_field("rejected", snap.rejected as f64)
+        .num_field("deadline_exceeded", snap.deadline_exceeded as f64)
+        .num_field("failed", snap.failed as f64)
+        .num_field("wall_s", wall);
+    if let Err(e) = row.append_to(&traj) {
+        println!("  (could not write {traj:?}: {e})");
     }
     println!("  trajectory: {}", traj.display());
     Ok(())

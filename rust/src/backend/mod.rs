@@ -33,7 +33,7 @@ use crate::model::config::ModelConfig;
 use crate::model::weights::WeightSet;
 use crate::quant::Format;
 use crate::runtime::RepoContext;
-use crate::tensor::Mat;
+use crate::tensor::{KvSwap, Mat};
 
 pub use native::NativeBackend;
 
@@ -205,6 +205,38 @@ pub trait ExecBackend {
         let mut out = Vec::new();
         self.decode_step_into(sid, last_tokens, &mut out)?;
         Ok(out)
+    }
+
+    /// Prefix-aware generation prefill for one slot: serve the longest
+    /// cached prefix of `prompt` from the shared KV prefix cache, run the
+    /// forward pass only over the remaining suffix, and register the
+    /// prompt for future sharers. Returns `(suffix_logits, matched)` where
+    /// `matched` is the position count served from the cache (always <
+    /// `prompt.len()`, so the last prompt position is computed and its
+    /// logits are the tail row of `suffix_logits`). The default has no
+    /// prefix cache: a plain prefill with `matched == 0`.
+    fn prefill_prefixed(&mut self, sid: SessionId, slot: usize, prompt: &[i32])
+                        -> Result<(Vec<f32>, usize)> {
+        Ok((self.prefill_slots(sid, &[slot], prompt)?, 0))
+    }
+
+    /// Pages immediately allocatable in the session's KV page pool, or
+    /// `None` when the backend's cache is dense (no paging).
+    fn kv_free_pages(&self, _sid: SessionId) -> Option<usize> {
+        None
+    }
+
+    /// Spill one slot's KV state for scheduler-driven preemption, leaving
+    /// the slot empty. `Ok(None)` = this backend cannot spill (dense
+    /// cache) — the scheduler falls back to failing the request.
+    fn swap_out_slot(&mut self, _sid: SessionId, _slot: usize) -> Result<Option<KvSwap>> {
+        Ok(None)
+    }
+
+    /// Restore a spilled slot bit-identically. Fails with `OutOfPages` in
+    /// the error chain when the pool cannot hold the pages yet.
+    fn swap_in_slot(&mut self, _sid: SessionId, _slot: usize, _swap: &KvSwap) -> Result<()> {
+        bail!("this backend does not support KV swap-in")
     }
 
     /// The stateless full-window contract, re-expressed as

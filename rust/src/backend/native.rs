@@ -58,9 +58,9 @@ use crate::calib::capture::Captures;
 use crate::hadamard::BlockRotator;
 use crate::model::config::ModelConfig;
 use crate::model::weights::WeightSet;
-use crate::obs::metrics::Counter;
+use crate::obs::metrics::{Counter, Gauge};
 use crate::quant::{act, Format};
-use crate::tensor::{qmat, simd, KvCache, KvMode, Mat, QuantActs, QuantMat};
+use crate::tensor::{qmat, simd, KvCache, KvMode, KvSwap, Mat, PagedConfig, QuantActs, QuantMat};
 use crate::util::pool::BufPool;
 
 /// Engine-level counters in the process-wide metrics registry, resolved
@@ -70,6 +70,10 @@ struct EngineObs {
     decode_steps: Arc<Counter>,
     decode_rows: Arc<Counter>,
     prefill_tokens: Arc<Counter>,
+    kv_pages_in_use: Arc<Gauge>,
+    kv_pages_total: Arc<Gauge>,
+    kv_prefix_hits: Arc<Counter>,
+    kv_cow_copies: Arc<Counter>,
 }
 
 impl EngineObs {
@@ -88,6 +92,38 @@ impl EngineObs {
                 "perq_native_prefill_tokens_total",
                 "prompt tokens prefilled through native sessions",
             ),
+            kv_pages_in_use: reg.gauge(
+                "perq_kv_pages_in_use",
+                "KV pages off the free list (live slots + prefix cache)",
+            ),
+            kv_pages_total: reg.gauge(
+                "perq_kv_pages_total",
+                "KV page pool size of the most recent paged session",
+            ),
+            kv_prefix_hits: reg.counter(
+                "perq_kv_prefix_hits_total",
+                "prompt tokens served from the shared KV prefix cache",
+            ),
+            kv_cow_copies: reg.counter(
+                "perq_kv_cow_copies_total",
+                "private page copies triggered by writes into shared KV pages",
+            ),
+        }
+    }
+
+    /// Drain a cache's local event counters and refresh the page gauges —
+    /// relaxed atomic ops on pre-resolved handles, zero-alloc safe.
+    fn sync_kv(&self, kv: &mut KvCache) {
+        let st = kv.take_stats();
+        if st.prefix_hit_tokens > 0 {
+            self.kv_prefix_hits.add(st.prefix_hit_tokens);
+        }
+        if st.cow_copies > 0 {
+            self.kv_cow_copies.add(st.cow_copies);
+        }
+        if let Some((used, total)) = kv.page_usage() {
+            self.kv_pages_in_use.set(used as i64);
+            self.kv_pages_total.set(total as i64);
         }
     }
 }
@@ -142,6 +178,11 @@ pub struct NativeBackend {
     qa: QuantActs,
     /// KV storage mode for sessions opened via `begin` (`PERQ_KV`)
     kv_mode: KvMode,
+    /// KV paging layout for sessions opened via `begin`/`begin_with_mode`
+    /// (`PERQ_KV_PAGE`/`PERQ_KV_PAGES`; dense by default). Scoring and
+    /// capture sessions always stay dense — exact stateless numerics
+    /// never route through the page pool or the prefix trie.
+    paged: PagedConfig,
     names: Vec<LayerNames>,
     sessions: Vec<Option<Session>>,
     /// persistent F32-mode session backing the stateless `score` contract
@@ -420,6 +461,7 @@ impl NativeBackend {
             packed,
             qa,
             kv_mode: KvMode::from_env(),
+            paged: PagedConfig::from_env(),
             names,
             sessions: Vec::new(),
             score_sid: None,
@@ -450,12 +492,31 @@ impl NativeBackend {
         self.kv_mode
     }
 
+    /// KV paging layout of sessions opened via `begin`/`begin_with_mode`.
+    pub fn kv_paging(&self) -> PagedConfig {
+        self.paged
+    }
+
+    /// Override the KV paging layout for sessions opened *after* this call
+    /// (live sessions keep their layout). Tests and benches use this to
+    /// run dense and paged sessions on one backend without env races.
+    pub fn set_kv_paging(&mut self, pcfg: PagedConfig) {
+        self.paged = pcfg;
+    }
+
     /// Open a session with an explicit KV mode (tests and the stateless
     /// `score` path pin `F32`; `begin` uses the `PERQ_KV` default).
     pub fn begin_with_mode(&mut self, batch: usize, mode: KvMode) -> Result<SessionId> {
+        self.begin_session(batch, mode, self.paged)
+    }
+
+    fn begin_session(&mut self, batch: usize, mode: KvMode, pcfg: PagedConfig)
+                     -> Result<SessionId> {
         ensure!(batch >= 1, "a session needs at least one slot");
         let sess = Session {
-            kv: KvCache::new(mode, self.cfg.n_layers, batch, self.cfg.seq_len, self.cfg.d_model),
+            kv: KvCache::new_paged(
+                mode, self.cfg.n_layers, batch, self.cfg.seq_len, self.cfg.d_model, pcfg,
+            ),
         };
         match self.sessions.iter().position(|s| s.is_none()) {
             Some(i) => {
@@ -506,7 +567,7 @@ impl NativeBackend {
                         self.sessions[old as usize] = None;
                     }
                 }
-                let sid = self.begin_with_mode(n_seqs, KvMode::F32)?;
+                let sid = self.begin_session(n_seqs, KvMode::F32, PagedConfig::dense())?;
                 self.capture_sid = Some((sid, n_seqs));
                 sid
             }
@@ -536,7 +597,11 @@ impl NativeBackend {
         ensure!(!slots.is_empty() && tokens.len() == slots.len() * n_new,
                 "token count {} must equal slots*n_new = {}", tokens.len(),
                 slots.len() * n_new);
-        // validate slots: in range, distinct, with capacity for n_new
+        // validate slots (in range, distinct) and reserve cache room:
+        // `prepare_append` checks logical capacity and, when paged, maps
+        // fresh pages / CoWs a shared tail page — all failures (including
+        // a typed OutOfPages) happen here, before any row is written, so
+        // the step is retryable after the scheduler preempts a slot
         self.slot_seen.iter_mut().for_each(|s| *s = false);
         if self.slot_seen.len() < sess.kv.slots {
             self.slot_seen.resize(sess.kv.slots, false);
@@ -545,11 +610,7 @@ impl NativeBackend {
             ensure!(slot < sess.kv.slots, "slot {slot} out of range ({} slots)", sess.kv.slots);
             ensure!(!self.slot_seen[slot], "slot {slot} listed twice");
             self.slot_seen[slot] = true;
-            ensure!(
-                sess.kv.remaining(slot) >= n_new,
-                "slot {slot} holds {} of {} positions — no room for {n_new} more",
-                sess.kv.len(slot), sess.kv.cap
-            );
+            sess.kv.prepare_append(slot, n_new)?;
         }
         let nt = slots.len() * n_new;
 
@@ -708,6 +769,9 @@ impl NativeBackend {
         for &slot in slots {
             sess.kv.advance(slot, n_new)?;
         }
+        // drain prefix/CoW event counters + refresh the page gauges
+        // (relaxed atomics on pre-resolved handles — zero-alloc)
+        self.obs.sync_kv(&mut sess.kv);
 
         // final norm + unembed (full precision, as in the L2 graph)
         rmsnorm_rows(&x, &self.ws.get("nf").data, &mut h);
@@ -752,9 +816,10 @@ impl ExecBackend for NativeBackend {
     }
 
     /// Scoring sessions are pinned to the exact f32 cache regardless of
-    /// `PERQ_KV`, so served NLLs match `score`/eval bit-for-bit.
+    /// `PERQ_KV` — and to the dense layout regardless of paging — so
+    /// served NLLs match `score`/eval bit-for-bit.
     fn begin_scoring(&mut self, batch: usize) -> Result<SessionId> {
-        self.begin_with_mode(batch, KvMode::F32)
+        self.begin_session(batch, KvMode::F32, PagedConfig::dense())
     }
 
     fn set_step_interrupt(&mut self, interrupt: Option<Arc<AtomicBool>>) {
@@ -842,7 +907,72 @@ impl ExecBackend for NativeBackend {
             .ok_or_else(|| anyhow!("unknown session {sid}"))?;
         ensure!(slot < sess.kv.slots, "slot {slot} out of range");
         sess.kv.reset_slot(slot);
+        self.obs.sync_kv(&mut sess.kv);
         Ok(())
+    }
+
+    /// Prefix-aware generation prefill: serve the longest cached prefix of
+    /// `prompt` from the shared page trie, run the forward pass over the
+    /// remaining suffix only, and register the prompt for future sharers.
+    fn prefill_prefixed(&mut self, sid: SessionId, slot: usize, prompt: &[i32])
+                        -> Result<(Vec<f32>, usize)> {
+        ensure!(!prompt.is_empty(), "prefill needs at least one token");
+        let mut sess = self.take_session(sid)?;
+        if slot >= sess.kv.slots {
+            let n = sess.kv.slots;
+            self.sessions[sid as usize] = Some(sess);
+            bail!("slot {slot} out of range ({n} slots)");
+        }
+        // attach caps at prompt.len()-1, so the suffix is never empty and
+        // the caller always gets freshly computed last-position logits
+        let matched = sess.kv.attach_prefix(slot, prompt);
+        let suffix = &prompt[matched..];
+        let result = self.run_rows(&mut sess, &[slot], suffix.len(), suffix, None);
+        match &result {
+            Ok(_) => sess.kv.register_prefix(slot, prompt),
+            // failed before any write (e.g. OutOfPages): release the
+            // attached shared pages so refcounts don't leak, leaving the
+            // slot empty for a clean retry
+            Err(_) if matched > 0 => sess.kv.reset_slot(slot),
+            Err(_) => {}
+        }
+        self.obs.sync_kv(&mut sess.kv);
+        self.sessions[sid as usize] = Some(sess);
+        if result.is_ok() {
+            self.obs.prefill_tokens.add(suffix.len() as u64);
+        }
+        result.map(|m| (m.data, matched))
+    }
+
+    fn kv_free_pages(&self, sid: SessionId) -> Option<usize> {
+        self.session_ref(sid).ok().and_then(|s| s.kv.free_pages())
+    }
+
+    fn swap_out_slot(&mut self, sid: SessionId, slot: usize) -> Result<Option<KvSwap>> {
+        let sess = self
+            .sessions
+            .get_mut(sid as usize)
+            .and_then(|s| s.as_mut())
+            .ok_or_else(|| anyhow!("unknown session {sid}"))?;
+        ensure!(slot < sess.kv.slots, "slot {slot} out of range");
+        if !sess.kv.is_paged() {
+            return Ok(None);
+        }
+        let swap = sess.kv.swap_out(slot);
+        self.obs.sync_kv(&mut sess.kv);
+        Ok(Some(swap))
+    }
+
+    fn swap_in_slot(&mut self, sid: SessionId, slot: usize, swap: &KvSwap) -> Result<()> {
+        let sess = self
+            .sessions
+            .get_mut(sid as usize)
+            .and_then(|s| s.as_mut())
+            .ok_or_else(|| anyhow!("unknown session {sid}"))?;
+        ensure!(slot < sess.kv.slots, "slot {slot} out of range");
+        let result = sess.kv.swap_in(slot, swap);
+        self.obs.sync_kv(&mut sess.kv);
+        result
     }
 
     fn end(&mut self, sid: SessionId) -> Result<()> {
@@ -873,7 +1003,7 @@ impl ExecBackend for NativeBackend {
         let sid = match self.score_sid {
             Some(sid) => sid,
             None => {
-                let sid = self.begin_with_mode(b, KvMode::F32)?;
+                let sid = self.begin_session(b, KvMode::F32, PagedConfig::dense())?;
                 self.score_sid = Some(sid);
                 sid
             }
@@ -1186,6 +1316,64 @@ mod tests {
         let (plan, bad) = fault::parse("panic_step:0");
         assert!(plan.is_empty());
         assert_eq!(bad.len(), 1);
+    }
+
+    #[test]
+    fn prefix_prefill_shares_pages_bit_identically() {
+        let cfg = tiny_cfg();
+        let ws = tiny_ws(&cfg, 11);
+        let mut be = NativeBackend::new(cfg.clone(), ws, ForwardGraph::Fp).unwrap();
+        be.set_kv_paging(PagedConfig { page: 2, pages: 0 });
+        let sid = be.begin_with_mode(2, KvMode::F32).unwrap();
+        let prompt: Vec<i32> = vec![1, 2, 3, 4, 5, 6];
+        let (full, m0) = be.prefill_prefixed(sid, 0, &prompt).unwrap();
+        assert_eq!(m0, 0, "empty trie: nothing cached yet");
+        assert_eq!(full.len(), prompt.len() * cfg.vocab);
+        let (suffix, m1) = be.prefill_prefixed(sid, 1, &prompt).unwrap();
+        assert_eq!(m1, prompt.len() - 1, "identical prompt shares all but the last token");
+        assert_eq!(suffix.len(), (prompt.len() - m1) * cfg.vocab);
+        // last-position logits agree bitwise with the full prefill (f32
+        // cache + shared rows → identical attention inputs)
+        let a = &full[(prompt.len() - 1) * cfg.vocab..];
+        let b = &suffix[(prompt.len() - m1 - 1) * cfg.vocab..];
+        assert_eq!(a, b, "shared-prefix last-position logits must be bit-identical");
+        // one decode step: both slots hold identical state, rows match
+        let step = be.decode_step(sid, &[3, 3]).unwrap();
+        assert_eq!(
+            &step[..cfg.vocab],
+            &step[cfg.vocab..2 * cfg.vocab],
+            "divergence after CoW must still start from identical state"
+        );
+        be.end(sid).unwrap();
+    }
+
+    #[test]
+    fn swap_out_and_in_preserves_decode_state() {
+        let cfg = tiny_cfg();
+        let ws = tiny_ws(&cfg, 12);
+        let mut be = NativeBackend::new(cfg.clone(), ws, ForwardGraph::Fp).unwrap();
+        be.set_kv_paging(PagedConfig { page: 2, pages: 0 });
+        let sid = be.begin_with_mode(2, KvMode::F32).unwrap();
+        be.prefill_slots(sid, &[0], &[1, 2, 3, 4]).unwrap();
+        let reference = be.decode_step(sid, &[5, -1]).unwrap();
+        // rebuild the same state, preempt it, restore it, decode again
+        be.reset_slot(sid, 0).unwrap();
+        be.prefill_slots(sid, &[0], &[1, 2, 3, 4]).unwrap();
+        let swap = be.swap_out_slot(sid, 0).unwrap().expect("paged session can spill");
+        assert_eq!(swap.len(), 4);
+        assert_eq!(be.slot_len(sid, 0).unwrap(), 0);
+        be.swap_in_slot(sid, 0, &swap).unwrap();
+        assert_eq!(be.slot_len(sid, 0).unwrap(), 4);
+        let restored = be.decode_step(sid, &[5, -1]).unwrap();
+        assert_eq!(reference, restored, "preempt→resume must be bit-identical");
+        // dense sessions report themselves unspillable
+        be.set_kv_paging(PagedConfig::dense());
+        let dense = be.begin_with_mode(1, KvMode::F32).unwrap();
+        be.prefill_slots(dense, &[0], &[1, 2]).unwrap();
+        assert!(be.swap_out_slot(dense, 0).unwrap().is_none());
+        assert!(be.kv_free_pages(dense).is_none());
+        be.end(dense).unwrap();
+        be.end(sid).unwrap();
     }
 
     #[test]

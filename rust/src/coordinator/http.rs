@@ -80,6 +80,9 @@ pub fn status_for(err: ServeError) -> u16 {
     match err {
         ServeError::QueueFull => 429,
         ServeError::Shed => 429,
+        // unlike the back-pressure 429s this is not retryable: the
+        // request's token span can never fit the KV page pool
+        ServeError::Rejected => 400,
         ServeError::DeadlineExceeded => 504,
         ServeError::WorkerFailed => 500,
         ServeError::ShuttingDown => 503,
@@ -718,6 +721,7 @@ mod tests {
     fn serve_error_status_mapping_is_exact() {
         assert_eq!(status_for(ServeError::QueueFull), 429);
         assert_eq!(status_for(ServeError::Shed), 429);
+        assert_eq!(status_for(ServeError::Rejected), 400);
         assert_eq!(status_for(ServeError::DeadlineExceeded), 504);
         assert_eq!(status_for(ServeError::WorkerFailed), 500);
         assert_eq!(status_for(ServeError::ShuttingDown), 503);

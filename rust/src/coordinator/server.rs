@@ -38,9 +38,10 @@
 //! mirrored in the trace ring + metric counters:
 //!
 //!   * `Ok(response)` — completed (`perq_requests_served_total`);
-//!   * `Err(QueueFull | Shed | ShuttingDown)` — rejected by admission
-//!     control (`perq_server_rejected_total`; sheds also count in
-//!     `perq_server_shed_total`);
+//!   * `Err(QueueFull | Shed | Rejected | ShuttingDown)` — rejected by
+//!     admission control (`perq_server_rejected_total`; sheds also count
+//!     in `perq_server_shed_total`; `Rejected` means the request's token
+//!     span exceeds the KV page pool and could never be served);
 //!   * `Err(DeadlineExceeded)` — expired at batch-forming time or between
 //!     decode steps (`perq_server_deadline_exceeded_total`);
 //!   * `Err(WorkerFailed)` — lost to a backend error or replica panic
@@ -56,6 +57,16 @@
 //! default deadline, and caps the graceful drain (`drain_timeout`) —
 //! after which in-flight steps are aborted through each backend's
 //! cooperative step interrupt.
+//!
+//! When the backend's KV cache is paged (`PERQ_KV_PAGE`) and the page
+//! pool oversubscribes, decode steps can fail with a typed
+//! [`OutOfPages`] — always *before* any cache write. The scheduler then
+//! preempts the lowest-priority active generation: its cache rows are
+//! swapped out to host memory (`perq_kv_preemptions_total`), the step
+//! re-runs bit-identically for the survivors, and the preempted request
+//! resumes — restored page-for-page — before any new work is admitted.
+//! A preempted-and-resumed request still completes exactly once, so the
+//! completion contract above is unchanged.
 //!
 //! The batch-forming wait is configurable: `--max-wait-ms` on the CLIs,
 //! `PERQ_MAX_WAIT_MS` in the environment, else [`DEFAULT_MAX_WAIT_MS`]
@@ -74,6 +85,7 @@ use crate::backend::{ExecBackend, SessionId};
 use crate::model::config::ModelConfig;
 use crate::obs::metrics::{Counter, Gauge, Hist, Registry};
 use crate::obs::trace::{RequestTrace, Tracer};
+use crate::tensor::{KvSwap, OutOfPages, PagedConfig};
 use crate::util::json::Json;
 
 pub use crate::backend::ExtraInput;
@@ -117,6 +129,10 @@ pub enum ServeError {
     QueueFull,
     /// evicted from the queue by a higher-priority arrival
     Shed,
+    /// rejected at submit: the request can never be served on this
+    /// configuration — its token span exceeds the KV page pool, so
+    /// admitting it would only waste work before an inevitable failure
+    Rejected,
     /// expired before completion (batch-forming or between decode steps)
     DeadlineExceeded,
     /// lost to a backend error or replica panic (retries exhausted)
@@ -134,6 +150,7 @@ impl ServeError {
         match self {
             ServeError::QueueFull => "queue_full",
             ServeError::Shed => "shed",
+            ServeError::Rejected => "rejected",
             ServeError::DeadlineExceeded => "deadline_exceeded",
             ServeError::WorkerFailed => "worker_failed",
             ServeError::ShuttingDown => "shutting_down",
@@ -147,6 +164,7 @@ impl std::fmt::Display for ServeError {
         let what = match self {
             ServeError::QueueFull => "request rejected: intake queue full",
             ServeError::Shed => "request shed for a higher-priority arrival",
+            ServeError::Rejected => "request rejected: token span exceeds the KV cache capacity",
             ServeError::DeadlineExceeded => "request deadline exceeded",
             ServeError::WorkerFailed => "request lost to a worker failure",
             ServeError::ShuttingDown => "request dropped: server shutting down",
@@ -433,6 +451,9 @@ pub struct ServerStats {
     pub worker_failures: Arc<Counter>,
     /// score requests requeued after a worker failure
     pub retries: Arc<Counter>,
+    /// decoding requests swapped out of their slot to relieve KV page
+    /// pressure (each later resumes and still completes exactly once)
+    pub preemptions: Arc<Counter>,
     /// requests waiting for admission (sampled at queue transitions)
     pub queue_depth: Arc<Gauge>,
     /// end-to-end request latency histogram
@@ -499,6 +520,10 @@ impl Default for ServerStats {
                 "perq_server_retries_total",
                 "score requests requeued after a worker failure",
             ),
+            preemptions: registry.counter(
+                "perq_kv_preemptions_total",
+                "decoding requests swapped out to relieve KV page pressure",
+            ),
             queue_depth: registry.gauge("perq_queue_depth", "requests waiting for admission"),
             latency: registry
                 .hist("perq_request_latency_seconds", "end-to-end request latency"),
@@ -558,6 +583,19 @@ pub struct StatsSnapshot {
     pub worker_failures: u64,
     /// score-request retries after worker failures
     pub retries: u64,
+    /// decode preemptions (slot swapped out under KV page pressure; a
+    /// preempted-and-resumed request still counts once in `served`)
+    pub preemptions: u64,
+    /// prompt tokens served from the shared KV prefix cache
+    /// (process-wide engine counter — additive across servers)
+    pub kv_prefix_hits: u64,
+    /// private page copies triggered by writes into shared KV pages
+    /// (process-wide engine counter)
+    pub kv_cow_copies: u64,
+    /// KV pages currently off the free list (process-wide engine gauge)
+    pub kv_pages_in_use: i64,
+    /// KV page pool size of the most recent paged session (engine gauge)
+    pub kv_pages_total: i64,
 }
 
 impl ServerStats {
@@ -567,6 +605,10 @@ impl ServerStats {
         let batches = self.batches.get();
         let decode_s = self.decode_ns.get() as f64 / 1e9;
         let decode_tokens = self.decode_tokens.get();
+        // KV paging counters live in the process-wide engine registry
+        // (they are engine-session state, not per-server state); the
+        // snapshot reads the same handles the backends write through
+        let g = crate::obs::metrics::global();
         StatsSnapshot {
             served: self.served.get(),
             generated: self.generated.get(),
@@ -602,6 +644,23 @@ impl ServerStats {
             failed: self.failures.get(),
             worker_failures: self.worker_failures.get(),
             retries: self.retries.get(),
+            preemptions: self.preemptions.get(),
+            kv_prefix_hits: g
+                .counter("perq_kv_prefix_hits_total",
+                         "prompt tokens served from the shared KV prefix cache")
+                .get(),
+            kv_cow_copies: g
+                .counter("perq_kv_cow_copies_total",
+                         "private page copies triggered by writes into shared KV pages")
+                .get(),
+            kv_pages_in_use: g
+                .gauge("perq_kv_pages_in_use",
+                       "KV pages off the free list (live slots + prefix cache)")
+                .get(),
+            kv_pages_total: g
+                .gauge("perq_kv_pages_total",
+                       "KV page pool size of the most recent paged session")
+                .get(),
         }
     }
 
@@ -669,6 +728,11 @@ impl StatsSnapshot {
         o.insert("failed".to_string(), Json::Num(self.failed as f64));
         o.insert("worker_failures".to_string(), Json::Num(self.worker_failures as f64));
         o.insert("retries".to_string(), Json::Num(self.retries as f64));
+        o.insert("preemptions".to_string(), Json::Num(self.preemptions as f64));
+        o.insert("kv_prefix_hits".to_string(), Json::Num(self.kv_prefix_hits as f64));
+        o.insert("kv_cow_copies".to_string(), Json::Num(self.kv_cow_copies as f64));
+        o.insert("kv_pages_in_use".to_string(), Json::Num(self.kv_pages_in_use as f64));
+        o.insert("kv_pages_total".to_string(), Json::Num(self.kv_pages_total as f64));
         Json::Obj(o)
     }
 }
@@ -686,6 +750,11 @@ pub struct InferenceServer {
     /// false when the backend cannot decode incrementally (pjrt AOT
     /// graphs) — generation requests are rejected at submit time
     supports_generate: bool,
+    /// the most positions one request can ever hold: `seq_len`, further
+    /// capped by the KV page pool when paging is on with an explicit
+    /// pool size. A request over this bound resolves `Err(Rejected)` at
+    /// submit — it could only ever fail after burning prefill work.
+    kv_request_cap: usize,
     opts: ServeOptions,
 }
 
@@ -749,6 +818,14 @@ impl InferenceServer {
             }
         }
         drop(ready_tx);
+        // replicas read the same env-resolved paging config the backends
+        // do, so the submit-time bound matches what sessions can hold
+        let pcfg = PagedConfig::from_env();
+        let kv_request_cap = if pcfg.is_paged() && pcfg.pages > 0 {
+            cfg.seq_len.min(pcfg.pages * pcfg.page)
+        } else {
+            cfg.seq_len
+        };
         let mut server = InferenceServer {
             queue,
             stats,
@@ -758,6 +835,7 @@ impl InferenceServer {
             abort,
             cfg: cfg.clone(),
             supports_generate: true,
+            kv_request_cap,
             opts,
         };
         // every replica must come up; a single failure shuts the rest down
@@ -944,7 +1022,7 @@ impl InferenceServer {
         );
         self.check_tokens(&prompt)?;
         let (tx, rx) = channel();
-        self.push(Request::Generate(GenerateRequest {
+        let req = GenerateRequest {
             prompt,
             max_new_tokens,
             submitted: Instant::now(),
@@ -954,7 +1032,18 @@ impl InferenceServer {
             stream,
             cancel,
             respond: tx,
-        }))?;
+        };
+        // within seq_len but beyond the KV page pool: no replica could
+        // ever hold this request, so it resolves through the channel as
+        // a typed terminal rejection (HTTP 400, counted in `rejected` so
+        // the completion contract still balances) instead of queueing up
+        // work that must fail
+        if req.prompt.len() + max_new_tokens > self.kv_request_cap {
+            self.stats.submitted.inc();
+            resolve_unserved(&self.stats, Request::Generate(req), ServeError::Rejected);
+            return Ok(rx);
+        }
+        self.push(Request::Generate(req))?;
         Ok(rx)
     }
 
@@ -1180,6 +1269,29 @@ struct ActiveGen {
     prefilled: Instant,
 }
 
+/// A generation swapped out of its slot under KV page pressure: the raw
+/// cache rows ride in host memory until pages free up, then `swap_in`
+/// restores them bit-identically and decode resumes where it stopped.
+struct PreemptedGen {
+    active: ActiveGen,
+    swap: KvSwap,
+    /// the token to feed the next decode step after resume
+    last_token: i32,
+}
+
+/// Preemption victim: the lowest-priority active generation; the most
+/// recently admitted breaks ties (it has the least sunk decode work).
+fn pick_victim(gen_slots: &[Option<ActiveGen>]) -> Option<usize> {
+    (0..gen_slots.len())
+        .filter(|&s| gen_slots[s].is_some())
+        .min_by_key(|&s| {
+            let a = gen_slots[s].as_ref().expect("filtered above");
+            // min_by_key keeps the FIRST minimum, so invert the admit
+            // order: later admission must compare smaller
+            (a.req.priority, std::cmp::Reverse(a.admitted))
+        })
+}
+
 use crate::backend::greedy_argmax as argmax;
 
 /// Mean next-token NLL of one scored window from its prefill logits.
@@ -1221,7 +1333,9 @@ fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
 /// submitted; shed is a sub-count of rejected).
 fn count_failure(stats: &ServerStats, err: ServeError) {
     match err {
-        ServeError::QueueFull | ServeError::ShuttingDown => stats.rejected.inc(),
+        ServeError::QueueFull | ServeError::Rejected | ServeError::ShuttingDown => {
+            stats.rejected.inc()
+        }
         ServeError::Shed => {
             stats.shed.inc();
             stats.rejected.inc();
@@ -1421,6 +1535,10 @@ fn run_replica(mut backend: Box<dyn ExecBackend>, ctx: &WorkerCtx,
     let mut gen_slots: Vec<Option<ActiveGen>> = (0..b).map(|_| None).collect();
     let mut last_tokens: Vec<i32> = vec![-1; b];
     let mut logits_buf: Vec<f32> = Vec::new();
+    // generations swapped out of their slots under KV page pressure,
+    // oldest first — resumed (swap_in, bit-identical) before new work is
+    // admitted so a preempted request can never be starved by arrivals
+    let mut preempted: VecDeque<PreemptedGen> = VecDeque::new();
 
     loop {
         // drain-timeout escalation: abandon in-flight generations and exit
@@ -1430,7 +1548,40 @@ fn run_replica(mut backend: Box<dyn ExecBackend>, ctx: &WorkerCtx,
                     fail_active(&ctx.stats, active, ServeError::ShuttingDown);
                 }
             }
+            for p in preempted.drain(..) {
+                fail_active(&ctx.stats, p.active, ServeError::ShuttingDown);
+            }
             return ReplicaExit::Clean;
+        }
+        // -- resume pass: swapped-out generations re-enter first ----------
+        while let Some(p) = preempted.pop_front() {
+            let Some(slot) = (0..b).find(|&s| gen_slots[s].is_none()) else {
+                preempted.push_front(p);
+                break;
+            };
+            match guard(|| backend.swap_in_slot(sid, slot, &p.swap)) {
+                Ok(Ok(())) => {
+                    last_tokens[slot] = p.last_token;
+                    gen_slots[slot] = Some(p.active);
+                }
+                Ok(Err(e)) if e.downcast_ref::<OutOfPages>().is_some() => {
+                    // pages still pinned — try again next iteration, after
+                    // decode progress (completions) frees some
+                    preempted.push_front(p);
+                    break;
+                }
+                Ok(Err(e)) => {
+                    crate::log_error!("server: resuming preempted request failed: {e:#}");
+                    let _ = backend.reset_slot(sid, slot);
+                    fail_active(&ctx.stats, p.active, ServeError::WorkerFailed);
+                }
+                Err(panic_msg) => {
+                    crate::log_error!("server: swap-in panicked: {panic_msg}");
+                    fail_active(&ctx.stats, p.active, ServeError::WorkerFailed);
+                    poison_cleanup(ctx, &mut gen_slots, &mut preempted, Vec::new());
+                    return ReplicaExit::Poisoned;
+                }
+            }
         }
         let n_active = gen_slots.iter().filter(|s| s.is_some()).count();
         // requests that died while queued (deadline expired, or the
@@ -1441,7 +1592,7 @@ fn run_replica(mut backend: Box<dyn ExecBackend>, ctx: &WorkerCtx,
             let (lock, cv) = &*ctx.queue;
             let mut q = lock.lock().unwrap();
             let mut draining = q.shutdown || !ctx.running.load(Ordering::Relaxed);
-            if n_active == 0 && !draining {
+            if n_active == 0 && preempted.is_empty() && !draining {
                 while q.pending.is_empty()
                     && !q.shutdown
                     && ctx.running.load(Ordering::Relaxed)
@@ -1469,7 +1620,7 @@ fn run_replica(mut backend: Box<dyn ExecBackend>, ctx: &WorkerCtx,
                     draining = q.shutdown || !ctx.running.load(Ordering::Relaxed);
                 }
             }
-            if draining && q.pending.is_empty() && n_active == 0 {
+            if draining && q.pending.is_empty() && n_active == 0 && preempted.is_empty() {
                 return ReplicaExit::Clean;
             }
             // FIFO admission: scores fill the scoring session (up to b),
@@ -1477,7 +1628,9 @@ fn run_replica(mut backend: Box<dyn ExecBackend>, ctx: &WorkerCtx,
             // first request that doesn't fit so nothing is overtaken.
             // Dead-on-arrival requests (deadline already behind us) are
             // pulled out without consuming admission capacity.
-            let free_gen = b - n_active;
+            // slots held back for swapped-out generations: new arrivals
+            // must not occupy every slot a preempted request needs back
+            let free_gen = (b - n_active).saturating_sub(preempted.len());
             let mut scores = Vec::new();
             let mut gens = Vec::new();
             let now = Instant::now();
@@ -1573,7 +1726,7 @@ fn run_replica(mut backend: Box<dyn ExecBackend>, ctx: &WorkerCtx,
                 Err(panic_msg) => {
                     crate::log_error!("server: score prefill panicked: {panic_msg}");
                     retry_or_fail_scores(ctx, score_reqs);
-                    poison_cleanup(ctx, &mut gen_slots, Vec::new());
+                    poison_cleanup(ctx, &mut gen_slots, &mut preempted, Vec::new());
                     return ReplicaExit::Poisoned;
                 }
             }
@@ -1596,14 +1749,20 @@ fn run_replica(mut backend: Box<dyn ExecBackend>, ctx: &WorkerCtx,
                 break;
             };
             let t_exec = Instant::now();
-            let result = guard(|| backend.prefill_slots(sid, &[slot], &req.prompt));
+            // prefix-aware prefill: tokens shared with an earlier prompt
+            // come out of the KV prefix cache; only the suffix is computed
+            let result = guard(|| backend.prefill_prefixed(sid, slot, &req.prompt));
             let exec_ns = t_exec.elapsed().as_nanos() as u64;
-            // a prompt prefill is its own engine step, running 1 request
-            record_step(&ctx.stats, mine, exec_ns, true, req.prompt.len() as u64, 1);
             match result {
-                Ok(Ok(logits)) => {
-                    // greedy first token from the last prompt position
-                    let first = argmax(&logits[(req.prompt.len() - 1) * v..req.prompt.len() * v]);
+                Ok(Ok((logits, matched))) => {
+                    // a prompt prefill is its own engine step, running 1
+                    // request over the un-shared suffix
+                    let suffix = req.prompt.len() - matched;
+                    record_step(&ctx.stats, mine, exec_ns, true, suffix as u64, 1);
+                    // greedy first token from the last prompt position —
+                    // always the last row of the suffix logits (matched is
+                    // capped below the full prompt length)
+                    let first = argmax(&logits[(suffix - 1) * v..suffix * v]);
                     let prefilled = Instant::now();
                     ctx.stats.prefill_lat.record(prefilled - req.submitted);
                     if let Some(tx) = &req.stream {
@@ -1622,8 +1781,38 @@ fn run_replica(mut backend: Box<dyn ExecBackend>, ctx: &WorkerCtx,
                     }
                 }
                 Ok(Err(e)) => {
-                    crate::log_error!("server: prompt prefill failed: {e:#}");
+                    record_step(&ctx.stats, mine, exec_ns, true, req.prompt.len() as u64, 1);
                     let _ = backend.reset_slot(sid, slot);
+                    if e.downcast_ref::<OutOfPages>().is_some()
+                        && !ctx.abort.load(Ordering::Relaxed)
+                    {
+                        // the page pool can't hold this prompt *right
+                        // now*. The typed error fires before any cache
+                        // write, so the request is untouched: with work
+                        // in flight, completions will free pages —
+                        // requeue this admission round at the front and
+                        // retry. With nothing running it can never fit.
+                        let n_live = gen_slots.iter().filter(|s| s.is_some()).count();
+                        if n_live > 0 || !preempted.is_empty() {
+                            crate::log_warn!(
+                                "server: KV pages exhausted at prefill — requeueing \
+                                 request {} until decode work completes",
+                                req.trace_id
+                            );
+                            let rest: Vec<GenerateRequest> =
+                                std::iter::once(req).chain(gen_iter).collect();
+                            let (lock, cv) = &*ctx.queue;
+                            if let Ok(mut q) = lock.lock() {
+                                for r in rest.into_iter().rev() {
+                                    q.pending.push_front(Request::Generate(r));
+                                }
+                                ctx.stats.queue_depth.set(q.pending.len() as i64);
+                            }
+                            cv.notify_one();
+                            break;
+                        }
+                    }
+                    crate::log_error!("server: prompt prefill failed: {e:#}");
                     let err = if ctx.abort.load(Ordering::Relaxed) {
                         ServeError::ShuttingDown
                     } else {
@@ -1632,12 +1821,13 @@ fn run_replica(mut backend: Box<dyn ExecBackend>, ctx: &WorkerCtx,
                     fail_gen_prefill(&ctx.stats, req, admitted, exec_ns, err);
                 }
                 Err(panic_msg) => {
+                    record_step(&ctx.stats, mine, exec_ns, true, req.prompt.len() as u64, 1);
                     crate::log_error!("server: prompt prefill panicked: {panic_msg}");
                     fail_gen_prefill(&ctx.stats, req, admitted, exec_ns,
                                      ServeError::WorkerFailed);
                     // the rest of this admission round never touched the
                     // backend — requeue it untouched (not a retry)
-                    poison_cleanup(ctx, &mut gen_slots, gen_iter.collect());
+                    poison_cleanup(ctx, &mut gen_slots, &mut preempted, gen_iter.collect());
                     return ReplicaExit::Poisoned;
                 }
             }
@@ -1671,61 +1861,130 @@ fn run_replica(mut backend: Box<dyn ExecBackend>, ctx: &WorkerCtx,
                 let _ = backend.reset_slot(sid, slot);
             }
         }
-        let n_active = gen_slots.iter().filter(|s| s.is_some()).count();
-        if n_active == 0 {
-            continue;
-        }
-        let t_exec = Instant::now();
-        let result = guard(|| backend.decode_step_into(sid, &last_tokens, &mut logits_buf));
-        let exec_ns = t_exec.elapsed().as_nanos() as u64;
-        record_step(&ctx.stats, mine, exec_ns, false, n_active as u64, n_active as u64);
-        match result {
-            Ok(Ok(())) => {
-                // tokens count only for steps that actually produced them
-                ctx.stats.decode_tokens.add(n_active as u64);
-                for slot in 0..b {
-                    if gen_slots[slot].is_none() {
-                        continue;
-                    }
-                    let tok = argmax(&logits_buf[slot * v..(slot + 1) * v]);
-                    let done = {
-                        let active = gen_slots[slot].as_mut().expect("checked above");
-                        active.generated.push(tok);
-                        if let Some(tx) = &active.req.stream {
-                            let _ = tx.send(tok);
-                        }
-                        active.generated.len() >= active.req.max_new_tokens
-                    };
-                    if done {
-                        let finished = gen_slots[slot].take().expect("checked above");
-                        finish_generation(&ctx.stats, mine, finished);
-                        last_tokens[slot] = -1;
-                        let _ = backend.reset_slot(sid, slot);
-                    } else {
-                        last_tokens[slot] = tok;
-                    }
-                }
-            }
-            Ok(Err(e)) => {
-                // an abort-interrupted step is shutdown, not a failure
-                let err = if ctx.abort.load(Ordering::Relaxed) {
-                    ServeError::ShuttingDown
+        // the same sweep over swapped-out requests: an expired or
+        // abandoned preemptee must not wait for a free slot to resolve
+        let mut i = 0;
+        while i < preempted.len() {
+            let a = &preempted[i].active;
+            let cancelled =
+                a.req.cancel.as_ref().map_or(false, |c| c.load(Ordering::Relaxed));
+            let expired = a.req.deadline.map_or(false, |d| now >= d);
+            if cancelled || expired {
+                let p = preempted.remove(i).expect("index bounded above");
+                let err = if cancelled {
+                    ServeError::Cancelled
                 } else {
-                    ServeError::WorkerFailed
+                    ServeError::DeadlineExceeded
                 };
-                crate::log_error!("server: decode step failed: {e:#}");
-                for slot in 0..b {
-                    if let Some(active) = gen_slots[slot].take() {
-                        fail_active(&ctx.stats, active, err);
-                        last_tokens[slot] = -1;
-                        let _ = backend.reset_slot(sid, slot);
+                fail_active(&ctx.stats, p.active, err);
+            } else {
+                i += 1;
+            }
+        }
+        // -- the decode step, with page-pressure preemption: an
+        // OutOfPages step fails *before any cache write*, so after
+        // swapping the lowest-priority generation out to host memory the
+        // same step re-runs bit-identically for the survivors
+        'decode: loop {
+            let n_active = gen_slots.iter().filter(|s| s.is_some()).count();
+            if n_active == 0 {
+                break 'decode;
+            }
+            let t_exec = Instant::now();
+            let result =
+                guard(|| backend.decode_step_into(sid, &last_tokens, &mut logits_buf));
+            let exec_ns = t_exec.elapsed().as_nanos() as u64;
+            record_step(&ctx.stats, mine, exec_ns, false, n_active as u64, n_active as u64);
+            match result {
+                Ok(Ok(())) => {
+                    // tokens count only for steps that actually produced them
+                    ctx.stats.decode_tokens.add(n_active as u64);
+                    for slot in 0..b {
+                        if gen_slots[slot].is_none() {
+                            continue;
+                        }
+                        let tok = argmax(&logits_buf[slot * v..(slot + 1) * v]);
+                        let done = {
+                            let active = gen_slots[slot].as_mut().expect("checked above");
+                            active.generated.push(tok);
+                            if let Some(tx) = &active.req.stream {
+                                let _ = tx.send(tok);
+                            }
+                            active.generated.len() >= active.req.max_new_tokens
+                        };
+                        if done {
+                            let finished = gen_slots[slot].take().expect("checked above");
+                            finish_generation(&ctx.stats, mine, finished);
+                            last_tokens[slot] = -1;
+                            let _ = backend.reset_slot(sid, slot);
+                        } else {
+                            last_tokens[slot] = tok;
+                        }
+                    }
+                    break 'decode;
+                }
+                Ok(Err(e))
+                    if e.downcast_ref::<OutOfPages>().is_some()
+                        && n_active > 1
+                        && !ctx.abort.load(Ordering::Relaxed) =>
+                {
+                    let victim = pick_victim(&gen_slots).expect("n_active > 1");
+                    match guard(|| backend.swap_out_slot(sid, victim)) {
+                        Ok(Ok(Some(swap))) => {
+                            let active = gen_slots[victim].take().expect("picked above");
+                            crate::log_warn!(
+                                "server: KV pages exhausted — preempting request {} \
+                                 ({} cached positions swapped out)",
+                                active.req.trace_id,
+                                swap.len()
+                            );
+                            preempted.push_back(PreemptedGen {
+                                active,
+                                swap,
+                                last_token: last_tokens[victim],
+                            });
+                            last_tokens[victim] = -1;
+                            ctx.stats.preemptions.inc();
+                        }
+                        Ok(Ok(None)) | Ok(Err(_)) => {
+                            // a backend that cannot swap this slot out
+                            // cannot relieve the pressure either — fail
+                            // the victim and retry with the survivors
+                            if let Some(active) = gen_slots[victim].take() {
+                                fail_active(&ctx.stats, active, ServeError::WorkerFailed);
+                            }
+                            last_tokens[victim] = -1;
+                            let _ = backend.reset_slot(sid, victim);
+                        }
+                        Err(panic_msg) => {
+                            crate::log_error!("server: swap-out panicked: {panic_msg}");
+                            poison_cleanup(ctx, &mut gen_slots, &mut preempted, Vec::new());
+                            return ReplicaExit::Poisoned;
+                        }
                     }
                 }
-            }
-            Err(panic_msg) => {
-                crate::log_error!("server: decode step panicked: {panic_msg}");
-                poison_cleanup(ctx, &mut gen_slots, Vec::new());
-                return ReplicaExit::Poisoned;
+                Ok(Err(e)) => {
+                    // an abort-interrupted step is shutdown, not a failure
+                    let err = if ctx.abort.load(Ordering::Relaxed) {
+                        ServeError::ShuttingDown
+                    } else {
+                        ServeError::WorkerFailed
+                    };
+                    crate::log_error!("server: decode step failed: {e:#}");
+                    for slot in 0..b {
+                        if let Some(active) = gen_slots[slot].take() {
+                            fail_active(&ctx.stats, active, err);
+                            last_tokens[slot] = -1;
+                            let _ = backend.reset_slot(sid, slot);
+                        }
+                    }
+                    break 'decode;
+                }
+                Err(panic_msg) => {
+                    crate::log_error!("server: decode step panicked: {panic_msg}");
+                    poison_cleanup(ctx, &mut gen_slots, &mut preempted, Vec::new());
+                    return ReplicaExit::Poisoned;
+                }
             }
         }
     }
@@ -1766,15 +2025,20 @@ fn retry_or_fail_scores(ctx: &WorkerCtx, reqs: Vec<ScoreRequest>) {
     }
 }
 
-/// A replica just poisoned itself: fail every in-flight generation with
-/// `WorkerFailed` and put never-attempted generation admissions back at
-/// the queue front (they are untouched work, not retries).
+/// A replica just poisoned itself: fail every in-flight generation —
+/// slot-resident or swapped out — with `WorkerFailed` and put
+/// never-attempted generation admissions back at the queue front (they
+/// are untouched work, not retries).
 fn poison_cleanup(ctx: &WorkerCtx, gen_slots: &mut [Option<ActiveGen>],
+                  preempted: &mut VecDeque<PreemptedGen>,
                   untouched: Vec<GenerateRequest>) {
     for slot in gen_slots.iter_mut() {
         if let Some(active) = slot.take() {
             fail_active(&ctx.stats, active, ServeError::WorkerFailed);
         }
+    }
+    for p in preempted.drain(..) {
+        fail_active(&ctx.stats, p.active, ServeError::WorkerFailed);
     }
     if !untouched.is_empty() {
         let (lock, cv) = &*ctx.queue;
@@ -1872,6 +2136,7 @@ mod tests {
         assert_eq!(snap.failed, 0);
         assert_eq!(snap.worker_failures, 0);
         assert_eq!(snap.retries, 0);
+        assert_eq!(snap.preemptions, 0);
         assert!(s.traces.recent_traces().is_empty());
     }
 
@@ -1912,6 +2177,13 @@ mod tests {
                     "failed", "worker_failures", "retries"] {
             assert!(legacy.get(key).is_some(), "snapshot missing failure key {key}");
         }
+        // plus the additive KV-paging keys
+        for key in ["preemptions", "kv_prefix_hits", "kv_cow_copies", "kv_pages_in_use",
+                    "kv_pages_total"] {
+            assert!(legacy.get(key).is_some(), "snapshot missing kv key {key}");
+        }
+        let prom = s.registry.render_prometheus();
+        assert!(prom.contains("perq_kv_preemptions_total 0"), "{prom}");
     }
 
     #[test]
@@ -1939,12 +2211,12 @@ mod tests {
 
     #[test]
     fn serve_error_kinds_are_stable() {
-        let all = [ServeError::QueueFull, ServeError::Shed, ServeError::DeadlineExceeded,
-                   ServeError::WorkerFailed, ServeError::ShuttingDown,
-                   ServeError::Cancelled];
+        let all = [ServeError::QueueFull, ServeError::Shed, ServeError::Rejected,
+                   ServeError::DeadlineExceeded, ServeError::WorkerFailed,
+                   ServeError::ShuttingDown, ServeError::Cancelled];
         let kinds: Vec<&str> = all.iter().map(|e| e.as_str()).collect();
-        assert_eq!(kinds, vec!["queue_full", "shed", "deadline_exceeded", "worker_failed",
-                               "shutting_down", "cancelled"]);
+        assert_eq!(kinds, vec!["queue_full", "shed", "rejected", "deadline_exceeded",
+                               "worker_failed", "shutting_down", "cancelled"]);
         // Display is human-readable and distinct per kind
         let shown: std::collections::BTreeSet<String> =
             all.iter().map(|e| e.to_string()).collect();

@@ -132,6 +132,13 @@ fn print_help() {
          \x20            smoke runs)  PERQ_NET_FAULT=accept_close:N,\n\
          \x20            stall_read:N:MS,drop_mid_response:N (deterministic\n\
          \x20            connection-fault injection)\n\
+         \x20            [--kv-page P] (paged KV cache: P positions per page;\n\
+         \x20            identical prompt prefixes share pages copy-on-write)\n\
+         \x20            [--kv-pages N] (page-pool size per replica; smaller\n\
+         \x20            than the batch needs = oversubscription — requests\n\
+         \x20            that can never fit are rejected at submit, decode\n\
+         \x20            overflow preempts + resumes the lowest-priority slot;\n\
+         \x20            env twins PERQ_KV_PAGE / PERQ_KV_PAGES)\n\
          \x20 generate   --artifact m.perq [--prompt-tokens 1,2,3] [--max-new N | -n N]\n\
          \x20            (stateful prefill+decode generation: quantized KV cache,\n\
          \x20            PERQ_KV={{int8,f32}}; appends BENCH_decode.json)\n\
@@ -292,6 +299,17 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
     if let Some(ms) = flag_u64(args, "drain-timeout-ms") {
         opts = opts.with_drain_timeout(Duration::from_millis(ms));
     }
+    // --kv-page/--kv-pages: paged KV cache with prefix sharing and
+    // preemption. The flags are the CLI face of PERQ_KV_PAGE /
+    // PERQ_KV_PAGES — setting the env here (before any backend exists)
+    // routes them through the same PagedConfig::from_env() the server
+    // uses for its admission cap, so flag and env can never disagree.
+    if let Some(p) = flag_u64(args, "kv-page") {
+        std::env::set_var("PERQ_KV_PAGE", p.to_string());
+    }
+    if let Some(n) = flag_u64(args, "kv-pages") {
+        std::env::set_var("PERQ_KV_PAGES", n.to_string());
+    }
 
     // quantize-once / serve-many: everything below is artifact load +
     // server bring-up — the offline pipeline never runs here
@@ -391,6 +409,7 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
             snap.worker_failures,
             snap.retries,
         );
+        print_kv_line(&snap);
         if let Some(path) = &metrics_out {
             write_metrics_files(path, &shared)?;
             println!(
@@ -495,6 +514,7 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
         snap.worker_failures,
         snap.retries,
     );
+    print_kv_line(&snap);
     if !unserved.is_empty() {
         let parts: Vec<String> =
             unserved.iter().map(|(k, n)| format!("{n} {k}")).collect();
@@ -562,12 +582,36 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
         ("failed", snap.failed as f64),
         ("worker_failures", snap.worker_failures as f64),
         ("retries", snap.retries as f64),
+        ("preemptions", snap.preemptions as f64),
+        ("kv_prefix_hits", snap.kv_prefix_hits as f64),
+        ("kv_cow_copies", snap.kv_cow_copies as f64),
+        ("kv_pages_in_use", snap.kv_pages_in_use as f64),
+        ("kv_pages_total", snap.kv_pages_total as f64),
     ] {
         row = row.num_field(k, v);
     }
     row.append_to(Path::new(&bench_path))?;
     println!("appended {bench_path}");
     Ok(())
+}
+
+/// Paged-KV accounting line, printed beside the completion contract so an
+/// oversubscribed run shows its paging story (pool usage, prefix sharing,
+/// copy-on-write splits, preemptions) on stdout alone. Dense runs with no
+/// paging activity stay silent — there is nothing to report.
+fn print_kv_line(snap: &perq::coordinator::server::StatsSnapshot) {
+    if snap.kv_pages_total == 0 && snap.preemptions == 0 && snap.kv_prefix_hits == 0 {
+        return;
+    }
+    println!(
+        "kv: {} page(s) in use of {} | {} prefix-hit token(s), {} cow copy(ies), \
+         {} preemption(s)",
+        snap.kv_pages_in_use,
+        snap.kv_pages_total,
+        snap.kv_prefix_hits,
+        snap.kv_cow_copies,
+        snap.preemptions,
+    );
 }
 
 /// Parse an optional numeric flag, warning (instead of silently ignoring)

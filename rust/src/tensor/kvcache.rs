@@ -1,4 +1,5 @@
-//! Per-layer K/V caches for stateful (prefill/decode) execution.
+//! Per-layer K/V caches for stateful (prefill/decode) execution — dense or
+//! **paged**, with radix-trie prefix sharing.
 //!
 //! The paper's serving argument (App A) is a *decode-time* argument: the
 //! online R̃3 rotation is paid per generated token, so the workload that
@@ -11,12 +12,43 @@
 //! cache costs 1 byte/value instead of 4 — the dominant per-session memory
 //! at serving batch sizes.
 //!
-//! Layout: one [`KvStore`] per layer for K and one for V, each a flat
-//! `slots × cap × d` arena indexed `(slot, pos, channel)`. All buffers are
-//! allocated once at session creation (`KvCache::new`) and written in
-//! place, so steady-state decode performs **zero heap allocation**; reads
-//! dequantize a slot's prefix into caller-provided scratch (the backend
-//! recycles that scratch through its `BufPool`).
+//! ## Layout
+//!
+//! One [`KvStore`] per layer for K and one for V. Dense (the default,
+//! `PERQ_KV_PAGE` unset/0): each arena is a flat `slots × cap × d` buffer
+//! indexed `(slot, pos, channel)` — bit-for-bit the pre-paging cache.
+//!
+//! Paged ([`PagedConfig`], `PERQ_KV_PAGE` > 0): the arenas become a pool
+//! of fixed-size **pages** (`page` positions each):
+//!
+//! * every slot owns a **page table** (`Vec<u32>` of page ids with
+//!   capacity preallocated to `ceil(cap/page)`); logical position `p`
+//!   lives at physical row `table[p/page]·page + p%page`. One page id
+//!   indexes every per-layer K and V arena at the same offset
+//!   (vLLM-style), so there is a single table per slot, not one per layer.
+//! * pages come from a preallocated **free list**; steady-state decode
+//!   stays zero-heap-allocation — one free-list pop every `page` tokens,
+//!   nothing else.
+//! * a **trie prefix cache** keyed on token prefixes lets identical prompt
+//!   prefixes share pages copy-on-write with refcounts: [`KvCache::attach_prefix`]
+//!   maps a new slot onto already-cached pages, and the first write into a
+//!   shared partial page triggers a private copy of only that split page.
+//!   Unreferenced trie leaves are evicted on demand when the pool runs dry.
+//! * [`KvCache::swap_out`]/[`KvCache::swap_in`] spill a slot's raw rows to
+//!   a [`KvSwap`] buffer and restore them bit-identically — the
+//!   scheduler-driven preemption path in `coordinator::server`.
+//!
+//! ## Numerics contract
+//!
+//! Paged reads are **bit-identical** to the dense cache: the same
+//! `int_asym_emit_into` rows are written and the same per-row dequant is
+//! read back — only the addressing changes. Prefix-shared rows are exactly
+//! the rows the donor prompt wrote, and attention is per-row independent,
+//! so every existing ≤1e-4 / bit-exact parity bound holds unchanged
+//! (rust/tests/decode_parity.rs). The int8 dequant inner loop runs through
+//! the dispatched `tensor::simd::dequant_codes` primitive, which is in the
+//! bit-identical class (u8→f32 conversion is exact; one mul + one add per
+//! element in scalar expression order).
 //!
 //! Modes ([`KvMode`], `PERQ_KV={int8,f32}` escape hatch):
 //! * `Int8` (default) — packed u8 codes + per-row (scale, zero); reads
@@ -26,9 +58,12 @@
 //!   bit-identical to the stateless full-precision forward (the parity
 //!   baseline, and the mode `ExecBackend::score` runs in).
 
+use std::fmt;
+
 use anyhow::{ensure, Result};
 
 use crate::quant::act;
+use crate::tensor::simd;
 
 /// How cached K/V rows are stored. Parsed from `PERQ_KV` (default int8).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -40,7 +75,7 @@ pub enum KvMode {
 }
 
 impl KvMode {
-    pub fn name(&self) -> &'static str {
+    pub fn name(self) -> &'static str {
         match self {
             KvMode::Int8 => "int8",
             KvMode::F32 => "f32",
@@ -55,8 +90,7 @@ impl KvMode {
         }
     }
 
-    /// `PERQ_KV` override, else the int8 default (the paper's low-bit
-    /// decode story).
+    /// `PERQ_KV` with the int8 default (unset or unparsable → Int8).
     pub fn from_env() -> KvMode {
         std::env::var("PERQ_KV")
             .ok()
@@ -65,27 +99,84 @@ impl KvMode {
     }
 }
 
-/// One `slots × cap × d` arena of cached rows (one per layer per K/V).
+/// Paged-arena knobs. `page == 0` keeps the dense `slots × cap` layout
+/// (bit-for-bit today's behavior); `page > 0` carves the arenas into a
+/// pool of `pages` fixed-size pages.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PagedConfig {
+    /// Positions per page; 0 disables paging.
+    pub page: usize,
+    /// Pool size in pages per session; 0 = dense-equivalent
+    /// (`slots × ceil(cap/page)` — paging with no oversubscription).
+    pub pages: usize,
+}
+
+impl PagedConfig {
+    /// The dense layout (paging off).
+    pub fn dense() -> PagedConfig {
+        PagedConfig { page: 0, pages: 0 }
+    }
+
+    pub fn is_paged(&self) -> bool {
+        self.page > 0
+    }
+
+    /// `PERQ_KV_PAGE` (positions per page, 0/unset = dense) and
+    /// `PERQ_KV_PAGES` (pool pages per session, 0/unset = dense-equivalent;
+    /// also settable as `perq serve --kv-pages N`).
+    pub fn from_env() -> PagedConfig {
+        let parse = |k: &str| {
+            std::env::var(k)
+                .ok()
+                .and_then(|v| v.trim().parse::<usize>().ok())
+                .unwrap_or(0)
+        };
+        PagedConfig { page: parse("PERQ_KV_PAGE"), pages: parse("PERQ_KV_PAGES") }
+    }
+}
+
+/// Typed allocation failure: the page pool is exhausted and the prefix
+/// cache holds no evictable (unreferenced) pages. The serving scheduler
+/// downcasts to this to trigger preemption instead of failing the step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OutOfPages;
+
+impl fmt::Display for OutOfPages {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "KV page pool exhausted (all pages pinned by live slots or the prefix cache)")
+    }
+}
+
+impl std::error::Error for OutOfPages {}
+
+/// Local (per-cache) event counters, drained by the engine into the
+/// process-wide obs registry ([`KvCache::take_stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KvStats {
+    /// Prompt tokens served from the shared prefix cache.
+    pub prefix_hit_tokens: u64,
+    /// Private page copies triggered by writes into shared pages.
+    pub cow_copies: u64,
+}
+
+/// One storage arena (one layer's K or one layer's V).
 enum KvStore {
-    /// u8 codes + per-(slot,pos) scale/zero, dequant `s · (code + z)`
     Int8 { codes: Vec<u8>, scales: Vec<f32>, zeros: Vec<f32> },
     F32(Vec<f32>),
 }
 
 impl KvStore {
-    fn new(mode: KvMode, slots: usize, cap: usize, d: usize) -> KvStore {
-        let n = slots * cap * d;
+    fn new(mode: KvMode, rows: usize, d: usize) -> KvStore {
         match mode {
             KvMode::Int8 => KvStore::Int8 {
-                codes: vec![0u8; n],
-                scales: vec![0.0; slots * cap],
-                zeros: vec![0.0; slots * cap],
+                codes: vec![0u8; rows * d],
+                scales: vec![0.0; rows],
+                zeros: vec![0.0; rows],
             },
-            KvMode::F32 => KvStore::F32(vec![0.0; n]),
+            KvMode::F32 => KvStore::F32(vec![0.0; rows * d]),
         }
     }
 
-    /// Bytes resident in this store's buffers.
     fn bytes(&self) -> usize {
         match self {
             KvStore::Int8 { codes, scales, zeros } => {
@@ -95,12 +186,13 @@ impl KvStore {
         }
     }
 
-    #[inline]
+    /// Quantize-on-write one row at physical row index `row_idx`.
     fn write(&mut self, row_idx: usize, d: usize, row: &[f32]) {
         debug_assert_eq!(row.len(), d);
         match self {
             KvStore::Int8 { codes, scales, zeros } => {
-                let (s, z) = act::int_asym_emit_into(row, 8, &mut codes[row_idx * d..(row_idx + 1) * d]);
+                let (s, z) =
+                    act::int_asym_emit_into(row, 8, &mut codes[row_idx * d..(row_idx + 1) * d]);
                 scales[row_idx] = s;
                 zeros[row_idx] = z;
             }
@@ -110,57 +202,412 @@ impl KvStore {
         }
     }
 
-    /// Dequantize rows `row0 .. row0 + n` into `out` (n·d f32s).
-    #[inline]
+    /// Dequantize-on-read `n` physically-contiguous rows starting at
+    /// `row0` into `out` (`n * d` floats).
     fn gather(&self, row0: usize, n: usize, d: usize, out: &mut [f32]) {
-        debug_assert_eq!(out.len(), n * d);
+        debug_assert!(out.len() >= n * d);
         match self {
             KvStore::Int8 { codes, scales, zeros } => {
                 for r in 0..n {
                     let (s, z) = (scales[row0 + r], zeros[row0 + r]);
                     let src = &codes[(row0 + r) * d..(row0 + r + 1) * d];
                     let dst = &mut out[r * d..(r + 1) * d];
-                    for c in 0..d {
-                        dst[c] = s * (src[c] as f32 + z);
-                    }
+                    // fused dequant through the dispatched SIMD layer —
+                    // bit-identical class (u8→f32 is exact; one mul + one
+                    // add per element in scalar expression order)
+                    simd::dequant_codes(s, z, src, dst);
                 }
             }
             KvStore::F32(data) => {
-                out.copy_from_slice(&data[row0 * d..(row0 + n) * d]);
+                out[..n * d].copy_from_slice(&data[row0 * d..(row0 + n) * d]);
             }
+        }
+    }
+
+    /// Copy one whole page within the arena (the CoW split copy) —
+    /// `copy_within` on the owned buffers, no heap allocation.
+    fn copy_page(&mut self, src_page: usize, dst_page: usize, page: usize, d: usize) {
+        match self {
+            KvStore::Int8 { codes, scales, zeros } => {
+                codes.copy_within(
+                    src_page * page * d..(src_page + 1) * page * d,
+                    dst_page * page * d,
+                );
+                scales.copy_within(src_page * page..(src_page + 1) * page, dst_page * page);
+                zeros.copy_within(src_page * page..(src_page + 1) * page, dst_page * page);
+            }
+            KvStore::F32(data) => {
+                data.copy_within(
+                    src_page * page * d..(src_page + 1) * page * d,
+                    dst_page * page * d,
+                );
+            }
+        }
+    }
+
+    /// Raw-copy `n` rows starting at physical `src_row0` into swap rows
+    /// starting at `dst_row0` — the stored representation, not a dequant,
+    /// so restore is bit-identical.
+    fn export_rows(
+        &self,
+        src_row0: usize,
+        dst_row0: usize,
+        n: usize,
+        d: usize,
+        out: &mut SwapStore,
+    ) {
+        match (self, out) {
+            (
+                KvStore::Int8 { codes, scales, zeros },
+                SwapStore::Int8 { codes: oc, scales: os, zeros: oz },
+            ) => {
+                oc[dst_row0 * d..(dst_row0 + n) * d]
+                    .copy_from_slice(&codes[src_row0 * d..(src_row0 + n) * d]);
+                os[dst_row0..dst_row0 + n].copy_from_slice(&scales[src_row0..src_row0 + n]);
+                oz[dst_row0..dst_row0 + n].copy_from_slice(&zeros[src_row0..src_row0 + n]);
+            }
+            (KvStore::F32(data), SwapStore::F32(o)) => {
+                o[dst_row0 * d..(dst_row0 + n) * d]
+                    .copy_from_slice(&data[src_row0 * d..(src_row0 + n) * d]);
+            }
+            _ => unreachable!("swap buffers are built for this cache's mode"),
+        }
+    }
+
+    /// Inverse of [`KvStore::export_rows`].
+    fn import_rows(
+        &mut self,
+        dst_row0: usize,
+        src: &SwapStore,
+        src_row0: usize,
+        n: usize,
+        d: usize,
+    ) {
+        match (self, src) {
+            (
+                KvStore::Int8 { codes, scales, zeros },
+                SwapStore::Int8 { codes: sc, scales: ss, zeros: sz },
+            ) => {
+                codes[dst_row0 * d..(dst_row0 + n) * d]
+                    .copy_from_slice(&sc[src_row0 * d..(src_row0 + n) * d]);
+                scales[dst_row0..dst_row0 + n].copy_from_slice(&ss[src_row0..src_row0 + n]);
+                zeros[dst_row0..dst_row0 + n].copy_from_slice(&sz[src_row0..src_row0 + n]);
+            }
+            (KvStore::F32(data), SwapStore::F32(s)) => {
+                data[dst_row0 * d..(dst_row0 + n) * d]
+                    .copy_from_slice(&s[src_row0 * d..(src_row0 + n) * d]);
+            }
+            _ => unreachable!("swap buffers are built for this cache's mode"),
         }
     }
 }
 
-/// The full per-session attention state: `n_layers` K stores + V stores
-/// over `slots` independent sequences of up to `cap` positions each.
-/// Slot lengths advance via [`KvCache::advance`] and reset independently
-/// ([`KvCache::reset_slot`]) — the substrate of continuous batching, where
-/// requests join and leave a live batch at step granularity.
+/// One spilled arena: a slot's rows in their stored representation.
+enum SwapStore {
+    Int8 { codes: Vec<u8>, scales: Vec<f32>, zeros: Vec<f32> },
+    F32(Vec<f32>),
+}
+
+impl SwapStore {
+    fn new(mode: KvMode, len: usize, d: usize) -> SwapStore {
+        match mode {
+            KvMode::Int8 => SwapStore::Int8 {
+                codes: vec![0u8; len * d],
+                scales: vec![0.0; len],
+                zeros: vec![0.0; len],
+            },
+            KvMode::F32 => SwapStore::F32(vec![0.0; len * d]),
+        }
+    }
+
+    fn bytes(&self) -> usize {
+        match self {
+            SwapStore::Int8 { codes, scales, zeros } => {
+                codes.len() + 4 * (scales.len() + zeros.len())
+            }
+            SwapStore::F32(data) => 4 * data.len(),
+        }
+    }
+}
+
+/// A preempted slot's spilled KV state ([`KvCache::swap_out`]), restored
+/// bit-identically by [`KvCache::swap_in`]. Per-layer K and V rows in
+/// their stored representation.
+pub struct KvSwap {
+    len: usize,
+    k: Vec<SwapStore>,
+    v: Vec<SwapStore>,
+}
+
+impl KvSwap {
+    /// Cached positions held by the spilled slot.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Spill-buffer footprint in bytes.
+    pub fn bytes(&self) -> usize {
+        self.k.iter().chain(self.v.iter()).map(SwapStore::bytes).sum()
+    }
+}
+
+/// One node of the prefix trie: a single page's token run. The root level
+/// and every `children` list branch on the chunk's first token; runs are
+/// page-aligned (only the last node of an inserted prefix may be shorter
+/// than a page).
+struct TrieNode {
+    tokens: Vec<i32>,
+    page: u32,
+    /// `u32::MAX` = root level.
+    parent: u32,
+    children: Vec<u32>,
+}
+
+/// Radix-trie prefix cache over page-sized token chunks. The trie itself
+/// holds one refcount on each node's page; eviction (unreferenced leaves
+/// only) releases pages back to the pool on demand.
+struct Trie {
+    nodes: Vec<Option<TrieNode>>,
+    roots: Vec<u32>,
+    spare: Vec<u32>,
+}
+
+impl Trie {
+    fn new() -> Trie {
+        Trie { nodes: Vec::new(), roots: Vec::new(), spare: Vec::new() }
+    }
+
+    fn level_ids(&self, parent: u32) -> &[u32] {
+        if parent == u32::MAX {
+            &self.roots
+        } else {
+            &self.nodes[parent as usize].as_ref().expect("live parent").children
+        }
+    }
+
+    /// Walk the longest shared prefix of `tokens[..limit]`, pushing each
+    /// shared page id onto `table` and bumping its refcount. A node whose
+    /// run only partially matches still shares its page for the matched
+    /// positions (the slot's first append into it will CoW). Returns the
+    /// matched token count.
+    fn attach(
+        &self,
+        tokens: &[i32],
+        limit: usize,
+        page: usize,
+        table: &mut Vec<u32>,
+        refs: &mut [u32],
+    ) -> usize {
+        let mut matched = 0usize;
+        let mut parent = u32::MAX;
+        loop {
+            let rem = &tokens[matched..limit];
+            if rem.is_empty() {
+                return matched;
+            }
+            let mut descend = None;
+            for &ni in self.level_ids(parent) {
+                let node = self.nodes[ni as usize].as_ref().expect("live child");
+                let common =
+                    node.tokens.iter().zip(rem.iter()).take_while(|(a, b)| a == b).count();
+                if common == 0 {
+                    continue;
+                }
+                table.push(node.page);
+                refs[node.page as usize] += 1;
+                matched += common;
+                // descend only through exactly-matched full pages; a
+                // partial match ends the walk on its split page
+                if common == node.tokens.len() && common == page {
+                    descend = Some(ni);
+                }
+                break;
+            }
+            match descend {
+                Some(ni) => parent = ni,
+                None => return matched,
+            }
+        }
+    }
+
+    /// Record a freshly prefilled prompt's pages. Inserts nodes only along
+    /// fresh branches — when a chunk partially overlaps an existing node,
+    /// the walk stops and the existing structure wins (first-writer-wins
+    /// per branch; the divergent suffix stays private to its slot).
+    fn register(&mut self, tokens: &[i32], page: usize, table: &[u32], refs: &mut [u32]) {
+        let mut off = 0usize;
+        let mut parent = u32::MAX;
+        while off < tokens.len() {
+            let chunk = &tokens[off..(off + page).min(tokens.len())];
+            let mut found = None;
+            let mut overlaps = false;
+            for &ni in self.level_ids(parent) {
+                let node = self.nodes[ni as usize].as_ref().expect("live child");
+                let common =
+                    node.tokens.iter().zip(chunk.iter()).take_while(|(a, b)| a == b).count();
+                if common == 0 {
+                    continue;
+                }
+                overlaps = true;
+                if common == node.tokens.len() && common == chunk.len() && common == page {
+                    found = Some(ni);
+                }
+                break;
+            }
+            match found {
+                Some(ni) => {
+                    parent = ni;
+                    off += page;
+                }
+                None => {
+                    if overlaps {
+                        return; // divergent branch — not re-registered
+                    }
+                    let pid = table[off / page];
+                    let ni = self.insert(TrieNode {
+                        tokens: chunk.to_vec(),
+                        page: pid,
+                        parent,
+                        children: Vec::new(),
+                    });
+                    refs[pid as usize] += 1;
+                    if chunk.len() < page {
+                        return; // partial tail node is always a leaf
+                    }
+                    parent = ni;
+                    off += page;
+                }
+            }
+        }
+    }
+
+    fn insert(&mut self, node: TrieNode) -> u32 {
+        let parent = node.parent;
+        let ni = match self.spare.pop() {
+            Some(i) => {
+                self.nodes[i as usize] = Some(node);
+                i
+            }
+            None => {
+                self.nodes.push(Some(node));
+                (self.nodes.len() - 1) as u32
+            }
+        };
+        if parent == u32::MAX {
+            self.roots.push(ni);
+        } else {
+            self.nodes[parent as usize].as_mut().expect("live parent").children.push(ni);
+        }
+        ni
+    }
+
+    /// Evict one unreferenced leaf (page held only by the trie), returning
+    /// its reclaimed page. `None` when every cached page is still shared.
+    fn evict_one(&mut self, refs: &mut [u32]) -> Option<u32> {
+        let victim = self.nodes.iter().enumerate().find_map(|(i, n)| {
+            n.as_ref().and_then(|node| {
+                (node.children.is_empty() && refs[node.page as usize] == 1).then_some(i as u32)
+            })
+        })?;
+        let node = self.nodes[victim as usize].take().expect("found above");
+        if node.parent == u32::MAX {
+            self.roots.retain(|&r| r != victim);
+        } else {
+            self.nodes[node.parent as usize]
+                .as_mut()
+                .expect("live parent")
+                .children
+                .retain(|&c| c != victim);
+        }
+        self.spare.push(victim);
+        refs[node.page as usize] = 0;
+        Some(node.page)
+    }
+}
+
+/// The paged-layout state: page tables, free list, refcounts, prefix trie.
+struct PageMap {
+    page: usize,
+    pages: usize,
+    tables: Vec<Vec<u32>>,
+    free: Vec<u32>,
+    refs: Vec<u32>,
+    trie: Trie,
+}
+
+/// Pop a free page (evicting an unreferenced prefix-cache leaf if the
+/// free list is dry) and claim it with refcount 1.
+fn alloc_page(pm: &mut PageMap) -> Result<u32, OutOfPages> {
+    let p = match pm.free.pop() {
+        Some(p) => p,
+        None => pm.trie.evict_one(&mut pm.refs).ok_or(OutOfPages)?,
+    };
+    pm.refs[p as usize] = 1;
+    Ok(p)
+}
+
+/// Per-layer K/V cache over `slots` independent attention-state slots,
+/// dense (`slots × cap` rows per arena) or paged (see the module docs).
 pub struct KvCache {
     mode: KvMode,
     pub slots: usize,
-    /// maximum positions per slot (the model's seq_len)
     pub cap: usize,
-    /// row width (d_model)
     pub d: usize,
     k: Vec<KvStore>,
     v: Vec<KvStore>,
     lens: Vec<usize>,
+    paged: Option<PageMap>,
+    stats: KvStats,
 }
 
 impl KvCache {
-    /// Allocate the full arena up front — the only allocation this cache
-    /// ever performs.
+    /// Dense layout — bit-for-bit the pre-paging cache.
     pub fn new(mode: KvMode, n_layers: usize, slots: usize, cap: usize, d: usize) -> KvCache {
+        KvCache::new_paged(mode, n_layers, slots, cap, d, PagedConfig::dense())
+    }
+
+    /// Dense or paged layout per `pcfg` (`PagedConfig::from_env()` reads
+    /// the `PERQ_KV_PAGE`/`PERQ_KV_PAGES` knobs).
+    pub fn new_paged(
+        mode: KvMode,
+        n_layers: usize,
+        slots: usize,
+        cap: usize,
+        d: usize,
+        pcfg: PagedConfig,
+    ) -> KvCache {
+        let paged = if pcfg.is_paged() {
+            let page = pcfg.page.clamp(1, cap.max(1));
+            let per_slot = cap.div_ceil(page);
+            let pages = if pcfg.pages > 0 { pcfg.pages } else { slots * per_slot };
+            Some(PageMap {
+                page,
+                pages,
+                tables: (0..slots).map(|_| Vec::with_capacity(per_slot)).collect(),
+                free: (0..pages as u32).rev().collect(),
+                refs: vec![0; pages],
+                trie: Trie::new(),
+            })
+        } else {
+            None
+        };
+        let rows = paged.as_ref().map_or(slots * cap, |pm| pm.pages * pm.page);
+        let k = (0..n_layers).map(|_| KvStore::new(mode, rows, d)).collect();
+        let v = (0..n_layers).map(|_| KvStore::new(mode, rows, d)).collect();
         KvCache {
             mode,
             slots,
             cap,
             d,
-            k: (0..n_layers).map(|_| KvStore::new(mode, slots, cap, d)).collect(),
-            v: (0..n_layers).map(|_| KvStore::new(mode, slots, cap, d)).collect(),
+            k,
+            v,
             lens: vec![0; slots],
+            paged,
+            stats: KvStats::default(),
         }
     }
 
@@ -168,7 +615,41 @@ impl KvCache {
         self.mode
     }
 
-    /// Current position count of a slot.
+    pub fn is_paged(&self) -> bool {
+        self.paged.is_some()
+    }
+
+    /// Positions per page when paged.
+    pub fn page_size(&self) -> Option<usize> {
+        self.paged.as_ref().map(|pm| pm.page)
+    }
+
+    /// `(pages_in_use, pages_total)` when paged — in-use counts every page
+    /// off the free list, including prefix-cache-pinned ones.
+    pub fn page_usage(&self) -> Option<(usize, usize)> {
+        self.paged.as_ref().map(|pm| (pm.pages - pm.free.len(), pm.pages))
+    }
+
+    /// Pages immediately allocatable without eviction.
+    pub fn free_pages(&self) -> Option<usize> {
+        self.paged.as_ref().map(|pm| pm.free.len())
+    }
+
+    /// The most positions a single slot can ever hold: `cap` dense, also
+    /// capped by the whole pool when paged — the submit-time admission
+    /// bound for `prompt_len + max_new`.
+    pub fn max_request_positions(&self) -> usize {
+        match &self.paged {
+            None => self.cap,
+            Some(pm) => self.cap.min(pm.pages * pm.page),
+        }
+    }
+
+    /// Drain the local event counters (the engine syncs them into obs).
+    pub fn take_stats(&mut self) -> KvStats {
+        std::mem::take(&mut self.stats)
+    }
+
     pub fn len(&self, slot: usize) -> usize {
         self.lens[slot]
     }
@@ -177,155 +658,508 @@ impl KvCache {
         self.lens[slot] == 0
     }
 
-    /// Free positions left in a slot.
     pub fn remaining(&self, slot: usize) -> usize {
         self.cap - self.lens[slot]
     }
 
-    /// Write the K row of `(slot, pos)` at `layer` (quantizing in int8
-    /// mode). Positions at or past the slot's length are staging writes;
-    /// they become visible via [`KvCache::advance`].
+    /// Physical row of logical position `pos` in `slot`.
     #[inline]
+    fn phys(&self, slot: usize, pos: usize) -> usize {
+        match &self.paged {
+            None => slot * self.cap + pos,
+            Some(pm) => {
+                let pi = pos / pm.page;
+                debug_assert!(pi < pm.tables[slot].len(), "position {pos} has no mapped page");
+                pm.tables[slot][pi] as usize * pm.page + pos % pm.page
+            }
+        }
+    }
+
+    /// Make room for `n_new` appended positions: checks logical capacity,
+    /// CoWs a shared partial tail page, and maps fresh pages from the free
+    /// list (evicting unreferenced prefix-cache leaves under pressure).
+    /// Fails with [`OutOfPages`] in the error chain when the pool is truly
+    /// dry — before any row is written, so the step can be retried after
+    /// the scheduler preempts a slot. Steady-state cost: one free-list pop
+    /// every `page` tokens; zero heap allocation.
+    pub fn prepare_append(&mut self, slot: usize, n_new: usize) -> Result<()> {
+        ensure!(
+            self.lens[slot] + n_new <= self.cap,
+            "slot {slot} holds {} of {} positions — no room for {n_new} more",
+            self.lens[slot],
+            self.cap
+        );
+        let Some(pm) = self.paged.as_mut() else { return Ok(()) };
+        if n_new == 0 {
+            return Ok(());
+        }
+        let len = self.lens[slot];
+        // copy-on-write: the partial tail page is about to be written; if
+        // it is shared (prefix cache or a sibling slot), this slot gets a
+        // private copy of just that split page
+        if len % pm.page != 0 {
+            let pi = len / pm.page;
+            let old = pm.tables[slot][pi];
+            if pm.refs[old as usize] > 1 {
+                let fresh = alloc_page(pm).map_err(anyhow::Error::new)?;
+                for store in self.k.iter_mut().chain(self.v.iter_mut()) {
+                    store.copy_page(old as usize, fresh as usize, pm.page, self.d);
+                }
+                pm.refs[old as usize] -= 1;
+                pm.tables[slot][pi] = fresh;
+                self.stats.cow_copies += 1;
+            }
+        }
+        let total_pages = (len + n_new).div_ceil(pm.page);
+        while pm.tables[slot].len() < total_pages {
+            let fresh = alloc_page(pm).map_err(anyhow::Error::new)?;
+            pm.tables[slot].push(fresh);
+        }
+        Ok(())
+    }
+
+    /// Map `slot` (must be empty) onto the longest cached prefix of
+    /// `tokens`, sharing pages with bumped refcounts. At most
+    /// `tokens.len() - 1` positions attach, so the caller always prefills
+    /// at least one row and gets last-position logits. Returns the number
+    /// of positions served from the cache. Dense caches never match.
+    pub fn attach_prefix(&mut self, slot: usize, tokens: &[i32]) -> usize {
+        let Some(pm) = self.paged.as_mut() else { return 0 };
+        if self.lens[slot] != 0 || tokens.len() < 2 {
+            return 0;
+        }
+        debug_assert!(pm.tables[slot].is_empty());
+        let limit = (tokens.len() - 1).min(self.cap);
+        let matched = pm.trie.attach(tokens, limit, pm.page, &mut pm.tables[slot], &mut pm.refs);
+        self.lens[slot] = matched;
+        self.stats.prefix_hit_tokens += matched as u64;
+        matched
+    }
+
+    /// Record a freshly prefilled prompt in the prefix cache so later
+    /// identical prefixes share its pages. No-op on dense caches.
+    pub fn register_prefix(&mut self, slot: usize, tokens: &[i32]) {
+        let Some(pm) = self.paged.as_mut() else { return };
+        let n = tokens.len().min(self.lens[slot]);
+        if n == 0 {
+            return;
+        }
+        pm.trie.register(&tokens[..n], pm.page, &pm.tables[slot], &mut pm.refs);
+    }
+
+    /// Evict every currently-unreferenced prefix-cache page back to the
+    /// free list; returns the number of pages reclaimed.
+    pub fn evict_prefix_cache(&mut self) -> usize {
+        let Some(pm) = self.paged.as_mut() else { return 0 };
+        let mut n = 0;
+        while let Some(p) = pm.trie.evict_one(&mut pm.refs) {
+            pm.free.push(p);
+            n += 1;
+        }
+        n
+    }
+
+    /// Spill `slot`'s rows (stored representation — restore is
+    /// bit-identical) and release its pages. The slot is left empty.
+    pub fn swap_out(&mut self, slot: usize) -> KvSwap {
+        let len = self.lens[slot];
+        let k = self.k.iter().map(|s| self.export_store(s, slot, len)).collect();
+        let v = self.v.iter().map(|s| self.export_store(s, slot, len)).collect();
+        self.reset_slot(slot);
+        KvSwap { len, k, v }
+    }
+
+    fn export_store(&self, store: &KvStore, slot: usize, len: usize) -> SwapStore {
+        let mut out = SwapStore::new(self.mode, len, self.d);
+        match &self.paged {
+            None => store.export_rows(slot * self.cap, 0, len, self.d, &mut out),
+            Some(pm) => {
+                let mut off = 0;
+                while off < len {
+                    let take = pm.page.min(len - off);
+                    let phys0 = pm.tables[slot][off / pm.page] as usize * pm.page;
+                    store.export_rows(phys0, off, take, self.d, &mut out);
+                    off += take;
+                }
+            }
+        }
+        out
+    }
+
+    /// Restore a spilled slot: allocate pages for `swap.len()` positions
+    /// (failing with [`OutOfPages`] in the chain when the pool cannot hold
+    /// them yet) and copy the rows back bit-identically.
+    pub fn swap_in(&mut self, slot: usize, swap: &KvSwap) -> Result<()> {
+        ensure!(self.lens[slot] == 0, "swap_in requires an empty slot {slot}");
+        ensure!(
+            swap.k.len() == self.k.len() && swap.v.len() == self.v.len(),
+            "swap layer count mismatch"
+        );
+        self.prepare_append(slot, swap.len)?;
+        let mut off = 0;
+        while off < swap.len {
+            let (phys0, take) = match &self.paged {
+                None => (slot * self.cap + off, swap.len - off),
+                Some(pm) => (
+                    pm.tables[slot][off / pm.page] as usize * pm.page,
+                    pm.page.min(swap.len - off),
+                ),
+            };
+            for (store, sw) in self.k.iter_mut().zip(&swap.k) {
+                store.import_rows(phys0, sw, off, take, self.d);
+            }
+            for (store, sw) in self.v.iter_mut().zip(&swap.v) {
+                store.import_rows(phys0, sw, off, take, self.d);
+            }
+            off += take;
+        }
+        self.lens[slot] = swap.len;
+        Ok(())
+    }
+
+    /// Write the K row for (`layer`, `slot`, position `pos`). Paged caches
+    /// require `prepare_append` to have mapped the position's page.
     pub fn write_k(&mut self, layer: usize, slot: usize, pos: usize, row: &[f32]) {
-        debug_assert!(pos < self.cap, "position {pos} past cache capacity {}", self.cap);
-        self.k[layer].write(slot * self.cap + pos, self.d, row);
+        debug_assert!(pos < self.cap);
+        let r = self.phys(slot, pos);
+        self.k[layer].write(r, self.d, row);
     }
 
-    /// Write the V row of `(slot, pos)` at `layer`.
-    #[inline]
     pub fn write_v(&mut self, layer: usize, slot: usize, pos: usize, row: &[f32]) {
-        debug_assert!(pos < self.cap, "position {pos} past cache capacity {}", self.cap);
-        self.v[layer].write(slot * self.cap + pos, self.d, row);
+        debug_assert!(pos < self.cap);
+        let r = self.phys(slot, pos);
+        self.v[layer].write(r, self.d, row);
     }
 
-    /// Dequantize the first `n` K rows of `slot` at `layer` into `out`.
+    /// Dequantize the first `n` cached positions of (`layer`, `slot`) into
+    /// `out` (`n * d` floats) — page-chunked when paged, one contiguous
+    /// copy when dense; identical rows either way.
     pub fn gather_k(&self, layer: usize, slot: usize, n: usize, out: &mut [f32]) {
-        self.k[layer].gather(slot * self.cap, n, self.d, out);
+        self.gather_store(&self.k[layer], slot, n, out);
     }
 
-    /// Dequantize the first `n` V rows of `slot` at `layer` into `out`.
     pub fn gather_v(&self, layer: usize, slot: usize, n: usize, out: &mut [f32]) {
-        self.v[layer].gather(slot * self.cap, n, self.d, out);
+        self.gather_store(&self.v[layer], slot, n, out);
     }
 
-    /// Commit `n` freshly written positions to a slot (after every layer
-    /// has written them).
+    fn gather_store(&self, store: &KvStore, slot: usize, n: usize, out: &mut [f32]) {
+        debug_assert!(out.len() >= n * self.d);
+        match &self.paged {
+            None => store.gather(slot * self.cap, n, self.d, out),
+            Some(pm) => {
+                let mut off = 0;
+                while off < n {
+                    let take = pm.page.min(n - off);
+                    let phys0 = pm.tables[slot][off / pm.page] as usize * pm.page;
+                    store.gather(
+                        phys0,
+                        take,
+                        self.d,
+                        &mut out[off * self.d..(off + take) * self.d],
+                    );
+                    off += take;
+                }
+            }
+        }
+    }
+
+    /// Commit `n` freshly written positions to `slot`.
     pub fn advance(&mut self, slot: usize, n: usize) -> Result<()> {
         ensure!(
             self.lens[slot] + n <= self.cap,
-            "slot {slot} overflows cache capacity {} ({} + {n})",
-            self.cap,
-            self.lens[slot]
+            "slot {slot} overflow: {} + {n} > {}",
+            self.lens[slot],
+            self.cap
         );
         self.lens[slot] += n;
         Ok(())
     }
 
-    /// Release a slot for reuse (continuous batching: a request left the
-    /// batch). O(1): codes are overwritten in place by the next occupant.
+    /// Release a slot: O(1) dense; paged, every table page drops one ref
+    /// and unreferenced pages return to the free list (prefix-cache pages
+    /// stay resident for future hits).
     pub fn reset_slot(&mut self, slot: usize) {
         self.lens[slot] = 0;
+        if let Some(pm) = self.paged.as_mut() {
+            for pid in pm.tables[slot].drain(..) {
+                let r = &mut pm.refs[pid as usize];
+                *r -= 1;
+                if *r == 0 {
+                    pm.free.push(pid);
+                }
+            }
+        }
     }
 
-    /// Reset every slot (the persistent scoring session reuses its cache
-    /// across `score` calls).
     pub fn reset_all(&mut self) {
-        self.lens.iter_mut().for_each(|l| *l = 0);
+        for slot in 0..self.slots {
+            self.reset_slot(slot);
+        }
     }
 
-    /// Bytes resident in the cache arenas — the number the int8 mode
-    /// exists to shrink.
+    /// Resident bytes across all arenas — the paged pool is sized by
+    /// `pages × page`, so an oversubscribed pool is proportionally smaller
+    /// than the dense `slots × cap` arena.
     pub fn bytes(&self) -> usize {
-        self.k.iter().chain(self.v.iter()).map(|s| s.bytes()).sum::<usize>()
-            + 8 * self.lens.len()
+        let stores: usize = self.k.iter().chain(self.v.iter()).map(KvStore::bytes).sum();
+        stores + 8 * self.lens.len()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::quant::act;
 
     fn rand_row(n: usize, seed: u64, scale: f32) -> Vec<f32> {
         let mut rng = crate::data::rng::Rng::new(seed);
-        (0..n).map(|_| rng.next_normal() as f32 * scale).collect()
+        (0..n).map(|_| (rng.next_f32() - 0.5) * scale).collect()
     }
 
     #[test]
     fn mode_parse_and_env_default() {
         assert_eq!(KvMode::parse("int8"), Some(KvMode::Int8));
-        assert_eq!(KvMode::parse("F32"), Some(KvMode::F32));
-        assert_eq!(KvMode::parse("fp32"), Some(KvMode::F32));
-        assert_eq!(KvMode::parse("nope"), None);
+        assert_eq!(KvMode::parse("I8"), Some(KvMode::Int8));
+        assert_eq!(KvMode::parse("f32"), Some(KvMode::F32));
+        assert_eq!(KvMode::parse("FP32"), Some(KvMode::F32));
+        assert_eq!(KvMode::parse("bogus"), None);
         assert_eq!(KvMode::Int8.name(), "int8");
+        assert_eq!(KvMode::F32.name(), "f32");
     }
 
     #[test]
     fn f32_mode_round_trips_exactly() {
-        let (layers, slots, cap, d) = (2, 3, 8, 16);
+        let (layers, slots, cap, d) = (2, 2, 6, 8);
         let mut kv = KvCache::new(KvMode::F32, layers, slots, cap, d);
-        let rows: Vec<Vec<f32>> = (0..4).map(|i| rand_row(d, 100 + i, 2.0)).collect();
-        for (p, row) in rows.iter().enumerate() {
-            kv.write_k(1, 2, p, row);
-            kv.write_v(1, 2, p, row);
+        let rows: Vec<Vec<f32>> = (0..4).map(|i| rand_row(d, 40 + i as u64, 3.0)).collect();
+        for (pos, row) in rows.iter().enumerate() {
+            kv.write_k(1, 1, pos, row);
+            kv.write_v(1, 1, pos, row);
         }
-        kv.advance(2, 4).unwrap();
-        assert_eq!(kv.len(2), 4);
-        assert_eq!(kv.len(0), 0);
-        let mut out = vec![0.0f32; 4 * d];
-        kv.gather_k(1, 2, 4, &mut out);
-        let want: Vec<f32> = rows.concat();
-        assert_eq!(out, want, "f32 mode must be an exact copy");
-        kv.gather_v(1, 2, 4, &mut out);
-        assert_eq!(out, want);
+        kv.advance(1, rows.len()).unwrap();
+        let mut out = vec![0.0; rows.len() * d];
+        kv.gather_k(1, 1, rows.len(), &mut out);
+        for (pos, row) in rows.iter().enumerate() {
+            assert_eq!(&out[pos * d..(pos + 1) * d], &row[..], "f32 cache must be exact");
+        }
     }
 
     #[test]
     fn int8_mode_matches_fake_quant_bitwise() {
-        // the cache's read value must equal the Eq. 4 int8 fake-quant of
-        // the written row, bit for bit — the same identity the packed
-        // GEMM rests on
-        let (layers, slots, cap, d) = (1, 2, 4, 32);
+        let (layers, slots, cap, d) = (1, 1, 4, 16);
         let mut kv = KvCache::new(KvMode::Int8, layers, slots, cap, d);
-        for p in 0..3 {
-            let row = rand_row(d, 7 + p as u64, 1.5);
-            kv.write_k(0, 1, p, &row);
-            kv.advance(1, 1).unwrap();
+        for pos in 0..3 {
+            let row = rand_row(d, 7 + pos as u64, 4.0);
+            kv.write_k(0, 0, pos, &row);
+            kv.write_v(0, 0, pos, &row);
             let mut fake = row.clone();
             act::int_asym_row(&mut fake, 8);
-            let mut out = vec![0.0f32; (p + 1) * d];
-            kv.gather_k(0, 1, p + 1, &mut out);
-            assert_eq!(&out[p * d..], fake.as_slice(), "pos {p}");
+            let mut out = vec![0.0; (pos + 1) * d];
+            kv.advance(0, 1).unwrap();
+            kv.gather_k(0, 0, pos + 1, &mut out);
+            assert_eq!(
+                &out[pos * d..(pos + 1) * d],
+                &fake[..],
+                "int8 cache row must match the reference fake-quant bitwise"
+            );
         }
     }
 
     #[test]
     fn slots_are_independent_and_resettable() {
-        let d = 8;
-        let mut kv = KvCache::new(KvMode::Int8, 1, 2, 4, d);
-        let a = rand_row(d, 1, 1.0);
-        let b = rand_row(d, 2, 1.0);
+        let (layers, slots, cap, d) = (1, 3, 4, 8);
+        let mut kv = KvCache::new(KvMode::Int8, layers, slots, cap, d);
+        let a = rand_row(d, 1, 2.0);
+        let b = rand_row(d, 2, 2.0);
         kv.write_k(0, 0, 0, &a);
-        kv.write_k(0, 1, 0, &b);
         kv.advance(0, 1).unwrap();
-        kv.advance(1, 1).unwrap();
-        let (mut oa, mut ob) = (vec![0.0; d], vec![0.0; d]);
+        kv.write_k(0, 2, 0, &b);
+        kv.advance(2, 1).unwrap();
+        assert_eq!(kv.len(0), 1);
+        assert_eq!(kv.len(1), 0);
+        assert_eq!(kv.len(2), 1);
+        let mut oa = vec![0.0; d];
+        let mut ob = vec![0.0; d];
         kv.gather_k(0, 0, 1, &mut oa);
-        kv.gather_k(0, 1, 1, &mut ob);
-        assert_ne!(oa, ob, "slots must not alias");
+        kv.gather_k(0, 2, 1, &mut ob);
+        assert_ne!(oa, ob, "distinct rows must stay distinct across slots");
         kv.reset_slot(0);
         assert_eq!(kv.len(0), 0);
-        assert_eq!(kv.len(1), 1, "resetting one slot must not touch others");
-        assert_eq!(kv.remaining(0), 4);
-        // overflow is an error, not a wrap
-        assert!(kv.advance(1, 4).is_err());
+        assert_eq!(kv.len(2), 1, "resetting one slot must not touch others");
+        assert_eq!(kv.remaining(0), cap);
+        assert!(kv.advance(0, cap + 1).is_err(), "overflow must error");
     }
 
     #[test]
     fn int8_arena_is_quarter_sized() {
-        let f = KvCache::new(KvMode::F32, 2, 4, 16, 64);
-        let q = KvCache::new(KvMode::Int8, 2, 4, 16, 64);
-        // codes are 1 byte/value vs 4; per-row metadata is amortized by d
-        assert!(q.bytes() * 3 < f.bytes(), "int8 {} vs f32 {}", q.bytes(), f.bytes());
+        let q = KvCache::new(KvMode::Int8, 2, 2, 8, 64);
+        let f = KvCache::new(KvMode::F32, 2, 2, 8, 64);
+        assert!(
+            q.bytes() * 3 < f.bytes(),
+            "int8 arenas must be ~4× smaller ({} vs {})",
+            q.bytes(),
+            f.bytes()
+        );
+    }
+
+    // -- paged layout ----------------------------------------------------
+
+    fn paged(
+        mode: KvMode,
+        slots: usize,
+        cap: usize,
+        d: usize,
+        page: usize,
+        pages: usize,
+    ) -> KvCache {
+        KvCache::new_paged(mode, 1, slots, cap, d, PagedConfig { page, pages })
+    }
+
+    #[test]
+    fn paged_config_dense_default() {
+        assert!(!PagedConfig::dense().is_paged());
+        assert!(PagedConfig { page: 4, pages: 0 }.is_paged());
+    }
+
+    #[test]
+    fn paged_rows_match_dense_bitwise() {
+        for mode in [KvMode::Int8, KvMode::F32] {
+            let (cap, d, page) = (12, 16, 4);
+            let mut dense = KvCache::new(mode, 1, 2, cap, d);
+            let mut pg = paged(mode, 2, cap, d, page, 0);
+            for pos in 0..10 {
+                let row = rand_row(d, 100 + pos as u64, 3.0);
+                for kv in [&mut dense, &mut pg] {
+                    kv.prepare_append(1, 1).unwrap();
+                    kv.write_k(0, 1, pos, &row);
+                    kv.write_v(0, 1, pos, &row);
+                    kv.advance(1, 1).unwrap();
+                }
+            }
+            let mut a = vec![0.0; 10 * d];
+            let mut b = vec![0.0; 10 * d];
+            dense.gather_k(0, 1, 10, &mut a);
+            pg.gather_k(0, 1, 10, &mut b);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{mode:?}: paged read must be bit-identical");
+            }
+            // the dense-equivalent pool is the same arena volume; data
+            // reads identical through completely different addressing
+        }
+    }
+
+    #[test]
+    fn page_pool_accounting_and_exhaustion() {
+        let mut kv = paged(KvMode::Int8, 2, 16, 8, 4, 3); // 3-page pool
+        assert_eq!(kv.page_usage(), Some((0, 3)));
+        assert_eq!(kv.max_request_positions(), 12, "pool caps a single request");
+        kv.prepare_append(0, 9).unwrap(); // 3 pages
+        assert_eq!(kv.page_usage(), Some((3, 3)));
+        assert_eq!(kv.free_pages(), Some(0));
+        let err = kv.prepare_append(1, 1).unwrap_err();
+        assert!(err.downcast_ref::<OutOfPages>().is_some(), "typed exhaustion: {err}");
+        kv.advance(0, 9).unwrap();
+        kv.reset_slot(0);
+        assert_eq!(kv.page_usage(), Some((0, 3)), "reset returns pages to the pool");
+        kv.prepare_append(1, 1).unwrap();
+        assert_eq!(kv.page_usage(), Some((1, 3)));
+    }
+
+    #[test]
+    fn prefix_attach_shares_pages_and_cow_splits() {
+        let d = 8;
+        let mut kv = paged(KvMode::F32, 2, 16, d, 4, 8);
+        // slot 0 prefills a 6-token prompt and registers it
+        let prompt: Vec<i32> = vec![5, 6, 7, 8, 9, 10];
+        kv.prepare_append(0, prompt.len()).unwrap();
+        let rows: Vec<Vec<f32>> =
+            (0..prompt.len()).map(|i| rand_row(d, 60 + i as u64, 2.0)).collect();
+        for (pos, row) in rows.iter().enumerate() {
+            kv.write_k(0, 0, pos, row);
+            kv.write_v(0, 0, pos, row);
+        }
+        kv.advance(0, prompt.len()).unwrap();
+        kv.register_prefix(0, &prompt);
+        let used_before = kv.page_usage().unwrap().0;
+        // slot 1 submits the same prompt: all but the last token attach
+        let matched = kv.attach_prefix(1, &prompt);
+        assert_eq!(matched, prompt.len() - 1);
+        assert_eq!(kv.len(1), matched);
+        assert_eq!(
+            kv.page_usage().unwrap().0,
+            used_before,
+            "attach shares pages, allocating none"
+        );
+        // shared rows read back exactly what slot 0 wrote
+        let mut out = vec![0.0; matched * d];
+        kv.gather_k(0, 1, matched, &mut out);
+        for (pos, row) in rows[..matched].iter().enumerate() {
+            assert_eq!(&out[pos * d..(pos + 1) * d], &row[..]);
+        }
+        // appending into the shared split page forces a private copy
+        let stats0 = kv.take_stats();
+        assert_eq!(stats0.prefix_hit_tokens, matched as u64);
+        kv.prepare_append(1, 1).unwrap();
+        let stats1 = kv.take_stats();
+        assert_eq!(stats1.cow_copies, 1, "divergence copies exactly the split page");
+        // the divergent write is private: slot 0's row is untouched
+        let newrow = rand_row(d, 99, 2.0);
+        kv.write_k(0, 1, matched, &newrow);
+        kv.advance(1, 1).unwrap();
+        let mut a = vec![0.0; prompt.len() * d];
+        kv.gather_k(0, 0, prompt.len(), &mut a);
+        assert_eq!(&a[matched * d..], &rows[matched][..], "CoW must not clobber the donor");
+    }
+
+    #[test]
+    fn trie_eviction_reclaims_unreferenced_pages() {
+        let d = 8;
+        let mut kv = paged(KvMode::Int8, 1, 16, d, 4, 4);
+        let prompt: Vec<i32> = (0..8).collect();
+        kv.prepare_append(0, prompt.len()).unwrap();
+        for pos in 0..prompt.len() {
+            let row = rand_row(d, pos as u64, 1.0);
+            kv.write_k(0, 0, pos, &row);
+            kv.write_v(0, 0, pos, &row);
+        }
+        kv.advance(0, prompt.len()).unwrap();
+        kv.register_prefix(0, &prompt);
+        kv.reset_slot(0);
+        // the trie pins both prompt pages: 2 in use, 2 free
+        assert_eq!(kv.page_usage(), Some((2, 4)));
+        // a 4-page demand must evict the cache rather than fail
+        kv.prepare_append(0, 16).unwrap();
+        assert_eq!(kv.page_usage(), Some((4, 4)));
+        kv.reset_slot(0);
+        assert_eq!(kv.evict_prefix_cache(), 0, "eviction already consumed the cache");
+    }
+
+    #[test]
+    fn swap_round_trip_is_bit_identical() {
+        for mode in [KvMode::Int8, KvMode::F32] {
+            let d = 8;
+            let mut kv = paged(mode, 2, 16, d, 4, 8);
+            kv.prepare_append(0, 6).unwrap();
+            for pos in 0..6 {
+                let row = rand_row(d, 300 + pos as u64, 2.0);
+                kv.write_k(0, 0, pos, &row);
+                kv.write_v(0, 0, pos, &row);
+            }
+            kv.advance(0, 6).unwrap();
+            let mut before = vec![0.0; 6 * d];
+            kv.gather_v(0, 0, 6, &mut before);
+            let swap = kv.swap_out(0);
+            assert_eq!(swap.len(), 6);
+            assert!(!swap.is_empty());
+            assert!(swap.bytes() > 0);
+            assert_eq!(kv.len(0), 0);
+            assert_eq!(kv.page_usage(), Some((0, 8)), "swap-out releases all pages");
+            kv.swap_in(0, &swap).unwrap();
+            assert_eq!(kv.len(0), 6);
+            let mut after = vec![0.0; 6 * d];
+            kv.gather_v(0, 0, 6, &mut after);
+            for (x, y) in before.iter().zip(&after) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{mode:?}: restore must be bit-identical");
+            }
+        }
     }
 }

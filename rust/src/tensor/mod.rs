@@ -11,6 +11,6 @@ pub mod npy;
 pub mod qmat;
 pub mod simd;
 
-pub use kvcache::{KvCache, KvMode};
+pub use kvcache::{KvCache, KvMode, KvStats, KvSwap, OutOfPages, PagedConfig};
 pub use mat::Mat;
 pub use qmat::{qgemm_into, QuantActs, QuantMat};

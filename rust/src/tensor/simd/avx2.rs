@@ -624,6 +624,32 @@ pub(super) unsafe fn dequant_store(
     }
 }
 
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn dequant_codes(s: f32, z: f32, codes: &[u8], out: &mut [f32]) {
+    let n = out.len();
+    // SAFETY: AVX2 guaranteed by the caller; codes.len() equals out.len()
+    // (wrapper debug-asserts). The 8-byte load at j and the 8-lane store
+    // at j stay in bounds under the `j + 8 <= n` guard.
+    unsafe {
+        let sv = _mm256_set1_ps(s);
+        let zv = _mm256_set1_ps(z);
+        let mut j = 0;
+        while j + 8 <= n {
+            let byt = _mm_loadl_epi64(codes.as_ptr().add(j) as *const __m128i);
+            let cf = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(byt));
+            // s * (code + z) — explicit mul-then-add, bit-identical to
+            // the scalar expression (no FMA contraction)
+            let r = _mm256_mul_ps(sv, _mm256_add_ps(cf, zv));
+            _mm256_storeu_ps(out.as_mut_ptr().add(j), r);
+            j += 8;
+        }
+        while j < n {
+            out[j] = s * (codes[j] as f32 + z);
+            j += 1;
+        }
+    }
+}
+
 // ---------------------------------------------------------------------
 // FWHT
 // ---------------------------------------------------------------------

@@ -315,6 +315,15 @@ pub fn dequant_store(sx: f32, z: f32, ws: &[f32], colsum: &[i32], acc: &[i32], o
     dispatch!(dequant_store(sx, z, ws, colsum, acc, out))
 }
 
+/// Fused KV-cache row dequant: `out[j] = s * (codes[j] as f32 + z)`.
+/// Bit-identical class: u8→f32 conversion is exact and every lane is one
+/// mul + one add in scalar expression order (no FMA contraction).
+#[inline]
+pub fn dequant_codes(s: f32, z: f32, codes: &[u8], out: &mut [f32]) {
+    debug_assert_eq!(codes.len(), out.len());
+    dispatch!(dequant_codes(s, z, codes, out))
+}
+
 // ---------------------------------------------------------------------
 // FWHT (bit-identical class — same butterfly DAG)
 // ---------------------------------------------------------------------

@@ -503,6 +503,34 @@ pub(super) unsafe fn dequant_store(
     }
 }
 
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn dequant_codes(s: f32, z: f32, codes: &[u8], out: &mut [f32]) {
+    let n = out.len();
+    // SAFETY: codes.len() equals out.len() (wrapper debug-asserts). The
+    // 8-byte load at j and the two 4-lane stores at j and j+4 stay in
+    // bounds under the `j + 8 <= n` guard.
+    unsafe {
+        let sv = vdupq_n_f32(s);
+        let zv = vdupq_n_f32(z);
+        let mut j = 0;
+        while j + 8 <= n {
+            let byt = vld1_u8(codes.as_ptr().add(j));
+            let wide = vmovl_u8(byt);
+            let lo = vcvtq_f32_u32(vmovl_u16(vget_low_u16(wide)));
+            let hi = vcvtq_f32_u32(vmovl_u16(vget_high_u16(wide)));
+            // s * (code + z) — explicit mul-then-add, bit-identical to
+            // the scalar expression (no FMA contraction)
+            vst1q_f32(out.as_mut_ptr().add(j), vmulq_f32(sv, vaddq_f32(lo, zv)));
+            vst1q_f32(out.as_mut_ptr().add(j + 4), vmulq_f32(sv, vaddq_f32(hi, zv)));
+            j += 8;
+        }
+        while j < n {
+            out[j] = s * (codes[j] as f32 + z);
+            j += 1;
+        }
+    }
+}
+
 // ---------------------------------------------------------------------
 // FWHT
 // ---------------------------------------------------------------------

@@ -185,3 +185,10 @@ pub fn dequant_store(sx: f32, z: f32, ws: &[f32], colsum: &[i32], acc: &[i32], o
         out[j] = sx * ws[j] * (acc[j] as f32 + z * colsum[j] as f32);
     }
 }
+
+/// Fused KV-cache row dequant: `out[j] = s * (codes[j] as f32 + z)`.
+pub fn dequant_codes(s: f32, z: f32, codes: &[u8], out: &mut [f32]) {
+    for j in 0..out.len() {
+        out[j] = s * (codes[j] as f32 + z);
+    }
+}

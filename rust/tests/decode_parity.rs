@@ -20,14 +20,16 @@ use std::cell::Cell;
 use std::time::Duration;
 
 use perq::backend::{ExecBackend, ForwardGraph, NativeBackend};
-use perq::coordinator::server::{InferenceServer, ServeError, ServeOptions, SubmitOpts};
+use perq::coordinator::server::{
+    BackendFactory, InferenceServer, ServeError, ServeOptions, SubmitOpts,
+};
 use perq::model::bundle::synthetic_weights;
 use perq::model::config::ModelConfig;
 use perq::model::transform;
 use perq::model::weights::WeightSet;
 use perq::permute::{CalibStats, PermKind};
 use perq::quant::{Format, WeightCodec};
-use perq::tensor::{KvMode, QuantMat};
+use perq::tensor::{KvMode, PagedConfig, QuantMat};
 use perq::util::json;
 use perq::util::propcheck::{check, Gen};
 
@@ -296,6 +298,187 @@ fn int8_kv_cache_actually_quantizes() {
 }
 
 // ---------------------------------------------------------------------
+// Paged KV ≡ dense KV: only the addressing changes, never the numbers
+// ---------------------------------------------------------------------
+
+/// Run one prefill+decode trajectory and return all logits rows.
+fn run_trajectory(be: &mut NativeBackend, mode: KvMode, prompt: &[i32], cont: &[i32])
+                  -> Vec<f32> {
+    let sid = be.begin_with_mode(1, mode).unwrap();
+    let mut out = be.prefill_slots(sid, &[0], prompt).unwrap();
+    for &tok in cont {
+        out.extend(be.decode_step(sid, &[tok]).unwrap());
+    }
+    be.end(sid).unwrap();
+    out
+}
+
+/// Paged and dense sessions over the same backend weights must agree:
+/// bit-identically for the f32 cache (gather copies rows verbatim either
+/// way) and within the int8 budget (identical quantized rows, identical
+/// per-row dequant — chunked page gathers split at row boundaries only).
+fn assert_paged_matches_dense(cfg: &ModelConfig, ws: &WeightSet, graph: &ForwardGraph,
+                              tokens: &[i32], mode: KvMode, page: usize, label: &str) {
+    let split = tokens.len() / 2;
+    let (prompt, cont) = tokens.split_at(split);
+    let mut dense = NativeBackend::new(cfg.clone(), ws.clone(), graph.clone()).unwrap();
+    let mut paged = NativeBackend::new(cfg.clone(), ws.clone(), graph.clone()).unwrap();
+    paged.set_kv_paging(PagedConfig { page, pages: 0 });
+    let want = run_trajectory(&mut dense, mode, prompt, cont);
+    let got = run_trajectory(&mut paged, mode, prompt, cont);
+    check_rows(&want, &got, mode, label);
+    if mode == KvMode::F32 {
+        // the f32 contract is strict bit-identity across the WHOLE
+        // trajectory, not just closeness — check_rows already enforces
+        // to_bits equality, this re-states the invariant for readers
+        assert_eq!(want.len(), got.len());
+    }
+}
+
+#[test]
+fn prop_paged_kv_matches_dense_across_blocks() {
+    check(2, |g| {
+        let cfg = parity_cfg();
+        let mut ws = synthetic_weights(&cfg, g.seed ^ 0xA6ED);
+        let with_perm = g.bool();
+        for block in BLOCKS {
+            if with_perm {
+                apply_massdiff(g, &cfg, &mut ws, block);
+            }
+            let wsq = quantize_and_pack(&cfg, &ws, Format::Int4);
+            let graph = ForwardGraph::Merged { r3_block: block, format: Format::Int4 };
+            let tokens = random_tokens(g, cfg.seq_len, cfg.vocab);
+            // page 5 does not divide seq_len 12: exercises the ragged
+            // final page; page 1 maximizes boundary crossings
+            let page = [1usize, 4, 5][g.usize_in(0, 2)];
+            for mode in [KvMode::F32, KvMode::Int8] {
+                assert_paged_matches_dense(
+                    &cfg, &wsq, &graph, &tokens, mode, page,
+                    &format!("paged b={block} perm={with_perm} page={page} kv={}", mode.name()),
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prefix_sharing_divergence_matches_independent_sessions() {
+    // Two prompts share every position through the page trie, then
+    // diverge mid-decode. The second slot's first private write lands in
+    // a page still referenced by the trie, forcing a copy-on-write split
+    // — after which both slots must behave exactly like two independent
+    // dense sessions that never shared anything.
+    let cfg = parity_cfg();
+    let v = cfg.vocab;
+    let ws = quantize_and_pack(&cfg, &synthetic_weights(&cfg, 91), Format::Int4);
+    let graph = ForwardGraph::Merged { r3_block: 8, format: Format::Int4 };
+    let prompt: Vec<i32> = vec![1, 5, 2, 7, 3];
+    let cont_a: Vec<i32> = vec![4, 0, 6, 2];
+    let cont_b: Vec<i32> = vec![2, 6, 1, 5];
+    for mode in [KvMode::F32, KvMode::Int8] {
+        // reference: two fully independent dense sessions
+        let mut dense = NativeBackend::new(cfg.clone(), ws.clone(), graph.clone()).unwrap();
+        let da = run_trajectory(&mut dense, mode, &prompt, &cont_a);
+        let db = run_trajectory(&mut dense, mode, &prompt, &cont_b);
+
+        let mut paged = NativeBackend::new(cfg.clone(), ws.clone(), graph.clone()).unwrap();
+        paged.set_kv_paging(PagedConfig { page: 2, pages: 0 });
+        let sid = paged.begin_with_mode(2, mode).unwrap();
+        let (la, m0) = paged.prefill_prefixed(sid, 0, &prompt).unwrap();
+        assert_eq!(m0, 0, "first prompt sees an empty prefix cache");
+        let (lb, m1) = paged.prefill_prefixed(sid, 1, &prompt).unwrap();
+        assert_eq!(
+            m1,
+            prompt.len() - 1,
+            "identical prompt must share everything but the last position"
+        );
+        // slot 0 computed every prompt row; slot 1 only the final one —
+        // and that row was computed READING the shared pages, so it must
+        // match the dense session's final prompt row
+        check_rows(&da[..prompt.len() * v], &la, mode, "slot0 prefill");
+        check_rows(
+            &da[(prompt.len() - 1) * v..prompt.len() * v],
+            &lb,
+            mode,
+            "slot1 shared-prefix suffix row",
+        );
+        // decode both slots in one batch with divergent continuations
+        let mut pa = Vec::new();
+        let mut pb = Vec::new();
+        for (ta, tb) in cont_a.iter().zip(&cont_b) {
+            let step = paged.decode_step(sid, &[*ta, *tb]).unwrap();
+            assert_eq!(step.len(), 2 * v);
+            pa.extend_from_slice(&step[..v]);
+            pb.extend_from_slice(&step[v..]);
+        }
+        paged.end(sid).unwrap();
+        check_rows(&da[prompt.len() * v..], &pa, mode, "slot0 post-divergence decode");
+        check_rows(&db[prompt.len() * v..], &pb, mode, "slot1 post-divergence decode");
+    }
+}
+
+#[test]
+fn preempt_and_resume_decode_is_bit_identical() {
+    // Swap a slot's pages out to host memory mid-decode, trash the slot,
+    // swap back in, and keep decoding: the continuation must be
+    // bit-identical (f32) / within budget (int8) to never having been
+    // preempted — the property the scheduler's preemption path relies on.
+    let cfg = parity_cfg();
+    let v = cfg.vocab;
+    let ws = quantize_and_pack(&cfg, &synthetic_weights(&cfg, 47), Format::Int4);
+    let graph = ForwardGraph::Merged { r3_block: 16, format: Format::Int4 };
+    let prompt: Vec<i32> = vec![2, 9, 4, 1, 11];
+    let cont: Vec<i32> = vec![6, 3, 0, 8, 5];
+    for mode in [KvMode::F32, KvMode::Int8] {
+        let mut be = NativeBackend::new(cfg.clone(), ws.clone(), graph.clone()).unwrap();
+        be.set_kv_paging(PagedConfig { page: 2, pages: 0 });
+        let uninterrupted = run_trajectory(&mut be, mode, &prompt, &cont);
+
+        let sid = be.begin_with_mode(1, mode).unwrap();
+        let mut got = be.prefill_slots(sid, &[0], &prompt).unwrap();
+        for (i, &tok) in cont.iter().enumerate() {
+            if i == 2 {
+                // preempt: pages to host memory, slot wiped, pages freed
+                let swap = be
+                    .swap_out_slot(sid, 0)
+                    .unwrap()
+                    .expect("paged sessions must produce a swap image");
+                assert!(swap.len() > 0, "swap image must carry the slot's positions");
+                // the freed pages may be reused by anyone in between
+                be.prefill_slots(sid, &[0], &[7, 7, 7]).unwrap();
+                be.reset_slot(sid, 0).unwrap();
+                // resume: restore the exact pre-preemption cache state
+                be.swap_in_slot(sid, 0, &swap).unwrap();
+            }
+            got.extend(be.decode_step(sid, &[tok]).unwrap());
+        }
+        be.end(sid).unwrap();
+        check_rows(
+            &uninterrupted,
+            &got,
+            mode,
+            &format!("preempt/resume kv={}", mode.name()),
+        );
+        // f32 resume is exact, so the generated tokens cannot change
+        if mode == KvMode::F32 {
+            for (i, (w, g)) in uninterrupted.chunks(v).zip(got.chunks(v)).enumerate() {
+                assert_eq!(argmax_row(w), argmax_row(g), "greedy token diverged at row {i}");
+            }
+        }
+    }
+}
+
+fn argmax_row(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in row.iter().enumerate() {
+        if x > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+// ---------------------------------------------------------------------
 // Continuous-batching determinism
 // ---------------------------------------------------------------------
 
@@ -462,6 +645,84 @@ fn continuous_batching_generation_deterministic() {
     assert_eq!(base, gen_all(3, false), "replica count must not change tokens");
 }
 
+#[test]
+fn preemption_under_page_pressure_preserves_generations() {
+    // A page pool far too small for the batch: 3 decode slots, each
+    // growing to ceil(11/2) = 6 pages, against an 8-page pool. Concurrent
+    // decoding MUST overflow the pool, so the scheduler preempts (swap
+    // out + requeue) and later resumes. Every request still completes,
+    // with tokens identical to an uncontended dense server, and the
+    // completion accounting counts each preempted-and-resumed request
+    // exactly once.
+    let cfg = serving_cfg();
+    let ws = quantize_and_pack(&cfg, &synthetic_weights(&cfg, 23), Format::Int4);
+    let graph = ForwardGraph::Merged { r3_block: 8, format: Format::Int4 };
+    let prompts: Vec<Vec<i32>> = vec![
+        vec![1, 4, 2],
+        vec![7, 0, 3],
+        vec![3, 6, 5],
+        vec![2, 6, 1],
+        vec![5, 1, 4],
+        vec![0, 2, 7],
+    ];
+    let max_new = 8; // 3 prompt + 8 new = 11 <= seq_len 12
+
+    // uncontended dense baseline
+    let baseline: Vec<Vec<i32>> = {
+        let opts = ServeOptions::new(Duration::from_millis(1), 1);
+        let server = InferenceServer::start_native(&cfg, &ws, &graph, opts).unwrap();
+        let rxs: Vec<_> = prompts
+            .iter()
+            .map(|p| server.submit_generate(p.clone(), max_new).unwrap())
+            .collect();
+        let out = rxs
+            .into_iter()
+            .map(|rx| rx.recv().unwrap().unwrap().tokens)
+            .collect();
+        server.shutdown();
+        out
+    };
+
+    // paged server: a single request needs at most 6 of the 8 pages, so
+    // one slot always makes progress (liveness), but two or three
+    // full-length peers cannot coexist (preemption pressure)
+    let (cfg2, ws2, graph2) = (cfg.clone(), ws.clone(), graph.clone());
+    let factory: BackendFactory = Box::new(move || {
+        let mut be = NativeBackend::new(cfg2.clone(), ws2.clone(), graph2.clone())?;
+        be.set_kv_paging(PagedConfig { page: 2, pages: 8 });
+        Ok(Box::new(be) as Box<dyn ExecBackend>)
+    });
+    let opts = ServeOptions::new(Duration::from_millis(1), 1);
+    let server = InferenceServer::start_backend(factory, &cfg, opts).unwrap();
+    let rxs: Vec<_> = prompts
+        .iter()
+        .map(|p| server.submit_generate(p.clone(), max_new).unwrap())
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap().unwrap_or_else(|e| {
+            panic!("request {i} must survive page pressure, got {e:?}")
+        });
+        assert_eq!(
+            resp.tokens, baseline[i],
+            "request {i}: preemption/resume changed the generated tokens"
+        );
+    }
+    let snap = server.snapshot();
+    server.shutdown();
+    assert_eq!(snap.submitted, prompts.len() as u64);
+    assert_eq!(snap.served, prompts.len() as u64);
+    assert_eq!(snap.failed, 0);
+    assert_eq!(
+        snap.submitted,
+        snap.served + snap.rejected + snap.deadline_exceeded + snap.failed,
+        "completion contract must balance under preemption"
+    );
+    assert!(
+        snap.preemptions >= 1,
+        "an 8-page pool under 3 growing slots must preempt at least once"
+    );
+}
+
 // ---------------------------------------------------------------------
 // Steady-state decode performs zero heap allocation
 // ---------------------------------------------------------------------
@@ -502,5 +763,40 @@ fn steady_state_decode_is_allocation_free() {
     let probe = vec![0u8; 1024];
     assert!(thread_allocs() > before, "allocation counter must be active");
     drop(probe);
+    be.end(sid).unwrap();
+}
+
+#[test]
+fn paged_steady_state_decode_is_allocation_free() {
+    // Same discipline with paging on: page-table growth draws from the
+    // preallocated free list and pushes into with_capacity tables, so
+    // decode stays allocation-free even while CROSSING page boundaries
+    // (page=2, so every other step appends a fresh page).
+    let j = json::parse(
+        r#"{"config": {"name": "palloc", "n_layers": 2, "d_model": 16,
+            "n_heads": 2, "d_ffn": 32, "vocab": 8, "seq_len": 16,
+            "batch": 2, "block_sizes": [1, 8]}}"#,
+    )
+    .unwrap();
+    let cfg = ModelConfig::from_meta(&j).unwrap();
+    let ws = quantize_and_pack(&cfg, &synthetic_weights(&cfg, 55), Format::Int4);
+    let graph = ForwardGraph::Merged { r3_block: 8, format: Format::Int4 };
+    let mut be = NativeBackend::new(cfg, ws, graph).unwrap();
+    be.set_kv_paging(PagedConfig { page: 2, pages: 0 });
+    let sid = be.begin_with_mode(2, KvMode::Int8).unwrap();
+    be.prefill_slots(sid, &[0, 1], &[1, 2, 3, 4]).unwrap();
+    let mut out = Vec::new();
+    for i in 0..4 {
+        be.decode_step_into(sid, &[(i % 8) as i32, ((i + 3) % 8) as i32], &mut out).unwrap();
+    }
+    let before = thread_allocs();
+    for i in 0..5 {
+        be.decode_step_into(sid, &[((i + 1) % 8) as i32, (i % 8) as i32], &mut out).unwrap();
+    }
+    let grew = thread_allocs() - before;
+    assert_eq!(
+        grew, 0,
+        "paged steady-state decode must not allocate (saw {grew} allocations in 5 steps)"
+    );
     be.end(sid).unwrap();
 }

@@ -209,6 +209,29 @@ fn emit_codes_and_params_bit_identical() {
 }
 
 #[test]
+fn kv_dequant_codes_bit_identical() {
+    // the paged KV gather path: out[j] = s * (codes[j] + z). u8→f32 is
+    // exact and every lane is one mul + one add in scalar order, so the
+    // dispatched arms must match scalar bit-for-bit — this is what makes
+    // paged int8 KV reads identical to dense ones regardless of host ISA
+    for n in [1usize, 7, 8, 15, 16, 64, 129] {
+        let codes: Vec<u8> = (0..n).map(|i| ((i * 37 + 11) % 256) as u8).collect();
+        for (s, z) in [(0.037f32, -128.0f32), (1.5e-3, -7.25), (2.0, 0.0)] {
+            let run = |level| {
+                with_level(level, || {
+                    let mut out = vec![0.0f32; n];
+                    simd::dequant_codes(s, z, &codes, &mut out);
+                    out
+                })
+            };
+            let a = run(Some(SimdLevel::Scalar));
+            let b = run(None);
+            assert_bits_eq(&a, &b, &format!("dequant_codes n={n} s={s} z={z}"));
+        }
+    }
+}
+
+#[test]
 fn fake_quant_row_bit_identical() {
     for bits in [4u32, 8] {
         for n in [13usize, 96, 257] {
